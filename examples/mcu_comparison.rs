@@ -1,0 +1,71 @@
+//! Cross-MCU deployment study (§IV-B flavor): for one dataset stand-in,
+//! report per-sample training latency, energy, and the memory plan across
+//! the three Tab. II devices and the three DNN configurations — including
+//! which deployments do not fit (the paper's red dashed lines).
+
+use tinytrain::data::spec_by_name;
+use tinytrain::device;
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::harness::{self, Knobs};
+use tinytrain::memplan;
+use tinytrain::util::bench::fmt_duration;
+
+fn main() {
+    let spec = spec_by_name("cwru").expect("dataset registry");
+    let knobs = Knobs::from_env();
+
+    println!("== {} stand-in across MCUs (MbedNet transfer learning) ==\n", spec.name);
+
+    // memory at the paper's native shape
+    println!("{:<10} {:>12} {:>12} {:>10}  fits", "config", "feat RAM", "w+g RAM", "Flash");
+    for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+        let mem = harness::tl_memory(&spec, cfg);
+        let fits: Vec<String> = device::all_devices()
+            .iter()
+            .map(|d| {
+                format!("{}:{}", d.name, if d.fits(mem.total_ram(), mem.flash) { "y" } else { "N" })
+            })
+            .collect();
+        println!(
+            "{:<10} {:>11}B {:>11}B {:>9}B  {}",
+            cfg.name(),
+            mem.feature_ram,
+            mem.weight_ram,
+            mem.flash,
+            fits.join(" ")
+        );
+    }
+
+    // latency + energy per training sample (reduced-shape execution for op
+    // counts, device cost model for the pricing)
+    println!("\n{:<11} {:<10} {:>13} {:>13} {:>12}", "device", "config", "fwd/sample", "bwd/sample", "energy");
+    let src = tinytrain::data::Domain::new(&spec, spec.reduced_shape, 3);
+    let def = harness::mbednet_for(&spec, &spec.reduced_shape);
+    let (fp, _) = harness::pretrain(&def, &src, 1, &knobs, 4);
+    for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+        let mut scen = harness::tl_scenario(&spec, cfg, &fp, &src, &knobs, 5);
+        for dev in device::all_devices() {
+            let (f, b) = harness::step_costs(&mut scen.model, &scen.train, &dev, 1.0);
+            println!(
+                "{:<11} {:<10} {:>13} {:>13} {:>9.2} mJ",
+                dev.name,
+                cfg.name(),
+                fmt_duration(f.seconds),
+                fmt_duration(b.seconds),
+                (f.joules + b.joules) * 1e3
+            );
+        }
+    }
+
+    // the in-place property: training keeps inference available — compare
+    // inference-only RAM vs training RAM for the uint8 config
+    let def_full = models::mbednet(&spec.paper_shape, spec.classes);
+    let inf = memplan::plan(&def_full, DnnConfig::Uint8, false);
+    let tr = memplan::plan(&def_full, DnnConfig::Uint8, true);
+    println!(
+        "\ntraining RAM overhead vs inference-only: {} B -> {} B ({:.2}x)",
+        inf.total_ram(),
+        tr.total_ram(),
+        tr.total_ram() as f32 / inf.total_ram() as f32
+    );
+}

@@ -1,0 +1,78 @@
+"""AOT lowering: JAX train-step graphs -> HLO *text* artifacts + JSON
+manifests for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+XLA 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md). Lowered with ``return_tuple=True``; the
+Rust side unwraps the tuple per the manifest.
+
+Run once via ``make artifacts``; never on the training path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(args, out_tree):
+    def one(sds):
+        return {"dtype": str(sds.dtype), "shape": list(sds.shape)}
+
+    return {
+        "inputs": [one(a) for a in args],
+        "outputs": [one(o) for o in out_tree],
+    }
+
+
+ARTIFACTS = {
+    "qmatmul_demo": (model.qmatmul_demo, model.qmatmul_demo_args),
+    "mnist_cnn_uint8_train": (model.fqt_train_step, model.fqt_example_args),
+    "mnist_cnn_float32_train": (model.float_train_step, model.float_example_args),
+}
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (fn, args_fn) in ARTIFACTS.items():
+        args = args_fn()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        out_shapes = jax.eval_shape(fn, *args)
+        if not isinstance(out_shapes, tuple):
+            out_shapes = (out_shapes,)
+        manifest = spec_json(args, out_shapes)
+        manifest["name"] = name
+        manifest["hlo_sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"wrote {name}: {len(text)} chars, "
+              f"{len(manifest['inputs'])} inputs -> {len(manifest['outputs'])} outputs")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = p.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

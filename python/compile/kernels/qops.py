@@ -1,0 +1,217 @@
+"""L1 — Pallas kernels for fully quantized training.
+
+The paper's central observation (§III-A) is that the forward pass (Eq. 3),
+the error backprop (Eq. 1/4) and the weight gradient (Eq. 2) are all the
+*same* operation — a quantized matmul with transposed operands. We therefore
+express the FQT hot-spot as two Pallas kernels:
+
+  * ``qmatmul``      — u8×u8 → i32 accumulate → requantize → u8 (Eqs. 3/4),
+  * ``qmatmul_acc``  — u8×u8 → i32 accumulate, no requantization (Eq. 2:
+                       weight gradients stay in float space for the SGD
+                       step, so the i32 accumulator is returned directly).
+
+Convolutions are lowered onto these kernels via im2col (`conv_as_matmul`
+below), which is also the TPU adaptation story (DESIGN.md
+§Hardware-Adaptation): the quantized conv becomes a blocked matmul that
+the MXU would execute, with BlockSpec tiles sized for VMEM.
+
+Numerics contract (bit-exact with `rust/src/kernels/`): i32 accumulation,
+requantization ``clamp(round_half_away(acc * mult) + z_out, lo, 255)`` with
+``lo = z_out`` when the folded ReLU is active. ``interpret=True`` throughout
+(the CPU PJRT plugin cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes for the M/N grid. K is kept whole per block (the reduction
+# fits VMEM for every layer in the evaluation; see DESIGN.md §Perf for the
+# footprint table).
+BLOCK_M = 32
+BLOCK_N = 128
+
+
+def round_half_away(x):
+    """Round half away from zero (matches Rust ``f32::round``).
+
+    ``jnp.round`` rounds half to even, which would diverge from the MCU
+    kernels on exact .5 boundaries.
+    """
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def _qmatmul_kernel(a_ref, b_ref, za_ref, zb_ref, mult_ref, zo_ref, o_ref, *, relu):
+    """One (BLOCK_M, BLOCK_N) output tile of the requantizing matmul."""
+    a = a_ref[...].astype(jnp.int32) - za_ref[0]
+    b = b_ref[...].astype(jnp.int32) - zb_ref[0]
+    acc = jax.lax.dot_general(
+        a,
+        b,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    v = round_half_away(acc.astype(jnp.float32) * mult_ref[0]).astype(jnp.int32) + zo_ref[0]
+    lo = jnp.where(relu, jnp.maximum(zo_ref[0], 0), 0)
+    o_ref[...] = jnp.clip(v, lo, 255).astype(jnp.uint8)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qmatmul(a_q, b_q, za, zb, mult, zo, relu=False):
+    """Quantized matmul with requantization: Eqs. 3/4.
+
+    a_q: u8[M, K], b_q: u8[K, N]; za/zb/zo zero points (i32 scalars),
+    mult = s_a*s_b/s_out (f32 scalar). Returns u8[M, N].
+
+    Padding note: rows/cols are padded *with the zero points* so padded
+    positions contribute exactly zero to the accumulator.
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    za_a = jnp.asarray([za], jnp.int32)
+    zb_a = jnp.asarray([zb], jnp.int32)
+    mult_a = jnp.asarray([mult], jnp.float32)
+    zo_a = jnp.asarray([zo], jnp.int32)
+
+    ap = _pad_to(a_q + jnp.uint8(0), BLOCK_M, 0)
+    bp = _pad_to(b_q + jnp.uint8(0), BLOCK_N, 1)
+    # pad K positions with the zero points (zero contribution)
+    if ap.shape[0] != m:
+        ap = ap.at[m:, :].set(jnp.asarray(za, jnp.uint8))
+    if bp.shape[1] != n:
+        bp = bp.at[:, n:].set(jnp.asarray(zb, jnp.uint8))
+    mp, np_ = ap.shape[0], bp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, relu=relu),
+        grid=(mp // BLOCK_M, np_ // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.uint8),
+        interpret=True,
+    )(ap, bp, za_a, zb_a, mult_a, zo_a)
+    return out[:m, :n]
+
+
+def _qmatmul_acc_kernel(a_ref, b_ref, za_ref, zb_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32) - za_ref[0]
+    b = b_ref[...].astype(jnp.int32) - zb_ref[0]
+    o_ref[...] = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def qmatmul_acc(a_q, b_q, za, zb):
+    """Quantized matmul returning the raw i32 accumulator (Eq. 2 —
+    gradients are not requantized; the caller scales by ``s_a·s_b``)."""
+    m, k = a_q.shape
+    _, n = b_q.shape
+    za_a = jnp.asarray([za], jnp.int32)
+    zb_a = jnp.asarray([zb], jnp.int32)
+    ap = _pad_to(a_q + jnp.uint8(0), BLOCK_M, 0)
+    bp = _pad_to(b_q + jnp.uint8(0), BLOCK_N, 1)
+    if ap.shape[0] != m:
+        ap = ap.at[m:, :].set(jnp.asarray(za, jnp.uint8))
+    if bp.shape[1] != n:
+        bp = bp.at[:, n:].set(jnp.asarray(zb, jnp.uint8))
+    mp, np_ = ap.shape[0], bp.shape[1]
+    out = pl.pallas_call(
+        _qmatmul_acc_kernel,
+        grid=(mp // BLOCK_M, np_ // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(ap, bp, za_a, zb_a)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# conv <-> matmul plumbing (build-time jnp; lowers into the same HLO)
+# --------------------------------------------------------------------------
+
+
+def im2col(x, kh, kw, stride, pad_h, pad_w, pad_value):
+    """[C,H,W] -> [C·kh·kw, Oh·Ow] patch matrix, padding with `pad_value`
+    (the input zero point, so padded taps contribute zero)."""
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad_h, pad_h), (pad_w, pad_w)), constant_values=pad_value)
+    oh = (h + 2 * pad_h - kh) // stride + 1
+    ow = (w + 2 * pad_w - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            sl = xp[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            cols.append(sl.reshape(c, oh * ow))
+    # order: [C, kh*kw, Oh*Ow] -> [C*kh*kw, Oh*Ow] with C-major layout to
+    # match the Rust weight layout [Cout, Cin, Kh, Kw]
+    return jnp.stack(cols, axis=1).reshape(c * kh * kw, oh * ow), (oh, ow)
+
+
+def col2im(cols, c, h, w, kh, kw, stride, pad_h, pad_w):
+    """Adjoint of im2col: scatter-add [C·kh·kw, Oh·Ow] back to [C,H,W]."""
+    oh = (h + 2 * pad_h - kh) // stride + 1
+    ow = (w + 2 * pad_w - kw) // stride + 1
+    xp = jnp.zeros((c, h + 2 * pad_h, w + 2 * pad_w), cols.dtype)
+    cols = cols.reshape(c, kh * kw, oh, ow)
+    i = 0
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = cols[:, i]
+            xp = xp.at[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride].add(patch)
+            i += 1
+    return xp[:, pad_h : pad_h + h, pad_w : pad_w + w]
+
+
+def qconv2d(x_q, w_q, bias_i32, zx, zw, mult, zo, stride, pad, relu):
+    """Quantized conv via im2col + the Pallas qmatmul.
+
+    x_q u8[C,H,W], w_q u8[Cout, C*kh*kw] (pre-flattened), bias i32[Cout]
+    at scale s_x*s_w. Bias is folded into the accumulator by pre-biasing
+    the product: we add round(bias*mult) post-requant would lose precision,
+    so instead bias is added via the accumulator path: qmatmul_acc + manual
+    requant would duplicate the kernel; we use the identity
+    (acc + bias) requant == requant kernel with bias folded into `a`? No —
+    we simply compute acc with qmatmul_acc, add bias, and requantize in jnp
+    (same formula as the kernel; bit-identical because the math is the
+    same sequence of f32 ops).
+    """
+    c, h, w = x_q.shape
+    cout = w_q.shape[0]
+    kh = kw = 3 if w_q.shape[1] == c * 9 else 1
+    cols, (oh, ow) = im2col(x_q, kh, kw, stride, pad, pad, jnp.uint8(zx) if isinstance(zx, int) else zx.astype(jnp.uint8))
+    acc = qmatmul_acc(w_q, cols, zw, zx) + bias_i32[:, None]
+    v = round_half_away(acc.astype(jnp.float32) * mult).astype(jnp.int32) + zo
+    lo = jnp.where(relu, jnp.maximum(zo, 0), 0)
+    y = jnp.clip(v, lo, 255).astype(jnp.uint8)
+    return y.reshape(cout, oh, ow)
+
+
+def requantize(acc_i32, mult, zo, relu=False):
+    """jnp requantization with the shared rounding rule."""
+    v = round_half_away(acc_i32.astype(jnp.float32) * mult).astype(jnp.int32) + zo
+    lo = jnp.where(relu, jnp.maximum(zo, 0), 0)
+    return jnp.clip(v, lo, 255).astype(jnp.uint8)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas FQT kernels — the correctness reference
+pytest checks the kernels against (and, transitively, the Rust native
+kernels via the PJRT cross-validation test)."""
+
+import jax.numpy as jnp
+
+
+def round_half_away(x):
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def qmatmul_ref(a_q, b_q, za, zb, mult, zo, relu=False):
+    """Reference requantizing matmul (Eqs. 3/4), plain jnp."""
+    acc = (a_q.astype(jnp.int32) - za) @ (b_q.astype(jnp.int32) - zb)
+    v = round_half_away(acc.astype(jnp.float32) * mult).astype(jnp.int32) + zo
+    lo = max(zo, 0) if relu else 0
+    return jnp.clip(v, lo, 255).astype(jnp.uint8)
+
+
+def qmatmul_acc_ref(a_q, b_q, za, zb):
+    """Reference accumulator-only matmul (Eq. 2)."""
+    return (a_q.astype(jnp.int32) - za) @ (b_q.astype(jnp.int32) - zb)
+
+
+def quantize_ref(x, scale, zp):
+    """uint8 affine quantization with the shared rounding rule."""
+    return jnp.clip(round_half_away(x / scale).astype(jnp.int32) + zp, 0, 255).astype(jnp.uint8)
+
+
+def dequantize_ref(q, scale, zp):
+    return (q.astype(jnp.int32) - zp).astype(jnp.float32) * scale

@@ -1,0 +1,274 @@
+"""L2 — JAX train-step graphs, calling the L1 Pallas kernels.
+
+Two AOT-compiled train steps for the §IV-D full-training network
+(2 conv + maxpool + 2 linear; identical geometry to
+`rust/src/graph/models.rs::mnist_cnn` at 1×28×28 / 10 classes):
+
+  * ``fqt_train_step``   — the fully quantized (uint8) configuration:
+    quantized forward (Pallas qmatmul via im2col), float softmax-CE head,
+    quantized backward per Eqs. 1–4, float weight gradients (Eq. 2, not
+    requantized). Quantization parameters are *runtime inputs* (packed in
+    one f32 vector) so the Rust coordinator can adapt weight/activation/
+    error ranges between steps (Eqs. 5–7) without recompiling.
+  * ``float_train_step`` — the float32 reference configuration via
+    ``jax.grad``.
+
+Both are lowered once by ``aot.py`` to HLO text; the Rust runtime executes
+them via PJRT. Python never runs at training time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import qops
+
+# ---- architecture constants (must match rust/src/graph/models.rs) --------
+IN_SHAPE = (1, 28, 28)
+N_CLASSES = 10
+C1, C2, FC1 = 16, 32, 64
+# conv1: 1x28x28 -> 16x14x14; conv2 -> 32x7x7; pool -> 32x3x3; flat 288
+FLAT = C2 * 3 * 3
+
+# ---- qparams vector layout (f32[26]) --------------------------------------
+# [0]  s_in   [1]  z_in
+# [2]  s_w1   [3]  z_w1   [4]  s_a1   [5]  z_a1
+# [6]  s_w2   [7]  z_w2   [8]  s_a2   [9]  z_a2
+# [10] s_w4   [11] z_w4   [12] s_a4   [13] z_a4
+# [14] s_w5   [15] z_w5   [16] s_a5   [17] z_a5   (logits)
+# [18] s_e5   [19] z_e5   (error at logits)
+# [20] s_e4   [21] z_e4   (error at fc1 output)
+# [22] s_e2   [23] z_e2   (error at conv2 output / pool)
+# [24] s_e1   [25] z_e1   (error at conv1 output)
+QP_LEN = 26
+
+
+def _zi(qp, i):
+    return qp[i].astype(jnp.int32)
+
+
+def fqt_train_step(x_q, onehot, w1, b1, w2, b2, w4, b4, w5, b5, qp):
+    """One fully quantized training-sample pass.
+
+    Inputs: x_q u8[1,28,28]; onehot f32[10]; conv weights pre-flattened
+    u8[Cout, Cin·9]; linear weights u8[Out, In]; biases f32; qp f32[26].
+
+    Returns (loss, logits, gw1, gb1, gw2, gb2, gw4, gb4, gw5, gb5,
+    err_minmax f32[4,2], sat f32[4]).
+    """
+    s_in, z_in = qp[0], _zi(qp, 1)
+
+    # ---------------- forward (Eq. 3) ----------------
+    # conv1
+    m1 = qp[0] * qp[2] / qp[4]
+    bi1 = qops.round_half_away(b1 / (qp[0] * qp[2])).astype(jnp.int32)
+    cols0, (oh1, ow1) = qops.im2col(x_q, 3, 3, 2, 1, 1, z_in.astype(jnp.uint8))
+    acc1 = qops.qmatmul_acc(w1, cols0, _zi(qp, 3), z_in) + bi1[:, None]
+    a1 = qops.requantize(acc1, m1, _zi(qp, 5), relu=True)  # [16, 196]
+    a1_img = a1.reshape(C1, oh1, ow1)
+
+    # conv2
+    m2 = qp[4] * qp[6] / qp[8]
+    bi2 = qops.round_half_away(b2 / (qp[4] * qp[6])).astype(jnp.int32)
+    cols1, (oh2, ow2) = qops.im2col(a1_img, 3, 3, 2, 1, 1, qp[5].astype(jnp.uint8))
+    acc2 = qops.qmatmul_acc(w2, cols1, _zi(qp, 7), _zi(qp, 5)) + bi2[:, None]
+    a2 = qops.requantize(acc2, m2, _zi(qp, 9), relu=True).reshape(C2, oh2, ow2)
+
+    # maxpool 2 (crop 7->6, first-occurrence argmax like the Rust kernel)
+    a2c = a2[:, :6, :6].reshape(C2, 3, 2, 3, 2).transpose(0, 1, 3, 2, 4).reshape(C2, 9, 4)
+    am = jnp.argmax(a2c, axis=-1)  # first max wins
+    a3 = jnp.take_along_axis(a2c, am[..., None], axis=-1)[..., 0]  # [32, 9]
+    a3_flat = a3.reshape(FLAT)  # qp of a2
+
+    # fc1
+    m4 = qp[8] * qp[10] / qp[12]
+    bi4 = qops.round_half_away(b4 / (qp[8] * qp[10])).astype(jnp.int32)
+    acc4 = qops.qmatmul_acc(w4, a3_flat[:, None], _zi(qp, 11), _zi(qp, 9))[:, 0] + bi4
+    a4 = qops.requantize(acc4, m4, _zi(qp, 13), relu=True)  # [64]
+
+    # fc2 (logits, no relu)
+    m5 = qp[12] * qp[14] / qp[16]
+    bi5 = qops.round_half_away(b5 / (qp[12] * qp[14])).astype(jnp.int32)
+    acc5 = qops.qmatmul_acc(w5, a4[:, None], _zi(qp, 15), _zi(qp, 13))[:, 0] + bi5
+    a5 = qops.requantize(acc5, m5, _zi(qp, 17), relu=False)  # [10]
+
+    logits = (a5.astype(jnp.int32) - _zi(qp, 17)).astype(jnp.float32) * qp[16]
+
+    # ---------------- loss + head error ----------------
+    lmax = jnp.max(logits)
+    lse = lmax + jnp.log(jnp.sum(jnp.exp(logits - lmax)))
+    loss = lse - jnp.sum(logits * onehot)
+    probs = jnp.exp(logits - lse)
+    e5_f = probs - onehot
+    e5 = qops.requantize(
+        qops.round_half_away(e5_f / qp[18]).astype(jnp.int32), 1.0, _zi(qp, 19), relu=False
+    )
+    # (requantize with mult=1 just clamps round(e/s)+z, matching Rust
+    # QTensor::quantize_with)
+
+    # ---------------- backward (Eqs. 1, 2, 4) ----------------
+    # fc2: gw5 = (e5 - z)(a4 - z)^T, float (Eq. 2, no requant)
+    de5 = e5.astype(jnp.int32) - _zi(qp, 19)
+    gw5 = (de5[:, None] * (a4.astype(jnp.int32) - _zi(qp, 13))[None, :]).astype(jnp.float32) * (
+        qp[18] * qp[12]
+    )
+    gb5 = de5.astype(jnp.float32) * qp[18]
+    # e4 = W5^T e5, requantized at (s_e4, z_e4)
+    acc_e4 = qops.qmatmul_acc(w5.T, e5[:, None], _zi(qp, 15), _zi(qp, 19))[:, 0]
+    e4_f_lo = jnp.min(acc_e4).astype(jnp.float32) * (qp[14] * qp[18])
+    e4_f_hi = jnp.max(acc_e4).astype(jnp.float32) * (qp[14] * qp[18])
+    me4 = qp[14] * qp[18] / qp[20]
+    e4 = qops.requantize(acc_e4, me4, _zi(qp, 21), relu=False)
+    # relu mask at fc1 output
+    e4 = jnp.where(a4 > _zi(qp, 13).astype(jnp.uint8), e4, _zi(qp, 21).astype(jnp.uint8))
+
+    # fc1: gw4, gb4; e3 = W4^T e4
+    de4 = e4.astype(jnp.int32) - _zi(qp, 21)
+    gw4 = (de4[:, None] * (a3_flat.astype(jnp.int32) - _zi(qp, 9))[None, :]).astype(
+        jnp.float32
+    ) * (qp[20] * qp[8])
+    gb4 = de4.astype(jnp.float32) * qp[20]
+    acc_e3 = qops.qmatmul_acc(w4.T, e4[:, None], _zi(qp, 11), _zi(qp, 21))[:, 0]
+    e3_lo = jnp.min(acc_e3).astype(jnp.float32) * (qp[10] * qp[20])
+    e3_hi = jnp.max(acc_e3).astype(jnp.float32) * (qp[10] * qp[20])
+    me3 = qp[10] * qp[20] / qp[22]
+    e3 = qops.requantize(acc_e3, me3, _zi(qp, 23), relu=False)  # [288], qp e2
+
+    # maxpool backward: route to argmax positions, z_e2 elsewhere
+    e3_win = e3.reshape(C2, 9)
+    e2c = jnp.full((C2, 9, 4), _zi(qp, 23), jnp.uint8)
+    e2c = jnp.put_along_axis(e2c, am[..., None], e3_win[..., None], axis=-1, inplace=False)
+    e2_crop = e2c.reshape(C2, 3, 3, 2, 2).transpose(0, 1, 3, 2, 4).reshape(C2, 6, 6)
+    e2 = jnp.full((C2, 7, 7), _zi(qp, 23), jnp.uint8)
+    e2 = e2.at[:, :6, :6].set(e2_crop)
+    # relu mask at conv2 output
+    e2 = jnp.where(a2 > _zi(qp, 9).astype(jnp.uint8), e2, _zi(qp, 23).astype(jnp.uint8))
+    e2_mat = e2.reshape(C2, oh2 * ow2)
+
+    # conv2: gw2 = (e2 - z)(cols1 - z)^T * s_e2*s_a1; e1 via col2im(W2^T e2)
+    de2 = e2_mat.astype(jnp.int32) - _zi(qp, 23)
+    gw2 = (
+        qops.qmatmul_acc(e2_mat, cols1.T, _zi(qp, 23), _zi(qp, 5)).astype(jnp.float32)
+        * (qp[22] * qp[4])
+    )
+    gb2 = jnp.sum(de2, axis=1).astype(jnp.float32) * qp[22]
+    cols_e1 = qops.qmatmul_acc(w2.T, e2_mat, _zi(qp, 7), _zi(qp, 23))  # [144, 49] i32
+    acc_e1 = qops.col2im(cols_e1, C1, 14, 14, 3, 3, 2, 1, 1)  # i32 [16,14,14]
+    e1_lo = jnp.min(acc_e1).astype(jnp.float32) * (qp[6] * qp[22])
+    e1_hi = jnp.max(acc_e1).astype(jnp.float32) * (qp[6] * qp[22])
+    me1 = qp[6] * qp[22] / qp[24]
+    e1 = qops.requantize(acc_e1, me1, _zi(qp, 25), relu=False)
+    e1 = jnp.where(a1_img > _zi(qp, 5).astype(jnp.uint8), e1, _zi(qp, 25).astype(jnp.uint8))
+    e1_mat = e1.reshape(C1, oh1 * ow1)
+
+    # conv1 weight grads
+    de1 = e1_mat.astype(jnp.int32) - _zi(qp, 25)
+    gw1 = (
+        qops.qmatmul_acc(e1_mat, cols0.T, _zi(qp, 25), z_in).astype(jnp.float32)
+        * (qp[24] * qp[0])
+    )
+    gb1 = jnp.sum(de1, axis=1).astype(jnp.float32) * qp[24]
+
+    # telemetry for the Rust-side observers
+    err_minmax = jnp.stack(
+        [
+            jnp.stack([jnp.min(e5_f), jnp.max(e5_f)]),
+            jnp.stack([e4_f_lo, e4_f_hi]),
+            jnp.stack([e3_lo, e3_hi]),
+            jnp.stack([e1_lo, e1_hi]),
+        ]
+    )
+    sat = jnp.stack(
+        [
+            jnp.mean((a1 == 255).astype(jnp.float32)),
+            jnp.mean((a2 == 255).astype(jnp.float32)),
+            jnp.mean((a4 == 255).astype(jnp.float32)),
+            jnp.mean(((a5 == 255) | (a5 == 0)).astype(jnp.float32)),
+        ]
+    )
+
+    return (loss, logits, gw1, gb1, gw2, gb2, gw4, gb4, gw5, gb5, err_minmax, sat)
+
+
+# --------------------------------------------------------------------------
+# float32 reference configuration
+# --------------------------------------------------------------------------
+
+
+def _float_forward(params, x):
+    w1, b1, w2, b2, w4, b4, w5, b5 = params
+    cols0, (oh1, ow1) = qops.im2col(x, 3, 3, 2, 1, 1, jnp.float32(0.0))
+    a1 = jnp.maximum(w1 @ cols0 + b1[:, None], 0.0).reshape(C1, oh1, ow1)
+    cols1, (oh2, ow2) = qops.im2col(a1, 3, 3, 2, 1, 1, jnp.float32(0.0))
+    a2 = jnp.maximum(w2 @ cols1 + b2[:, None], 0.0).reshape(C2, oh2, ow2)
+    a2c = a2[:, :6, :6].reshape(C2, 3, 2, 3, 2).transpose(0, 1, 3, 2, 4).reshape(C2, 9, 4)
+    a3 = jnp.max(a2c, axis=-1).reshape(FLAT)
+    a4 = jnp.maximum(w4 @ a3 + b4, 0.0)
+    return w5 @ a4 + b5
+
+
+def float_train_step(x, onehot, w1, b1, w2, b2, w4, b4, w5, b5):
+    """Float32 train step (reference configuration) via jax.grad."""
+    params = (w1, b1, w2, b2, w4, b4, w5, b5)
+
+    def loss_fn(p):
+        logits = _float_forward(p, x)
+        lmax = jnp.max(logits)
+        lse = lmax + jnp.log(jnp.sum(jnp.exp(logits - lmax)))
+        return lse - jnp.sum(logits * onehot), logits
+
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    return (loss, logits) + tuple(grads)
+
+
+def fqt_example_args():
+    """Example (shape, dtype) pytree used for lowering the FQT step."""
+    u8 = jnp.uint8
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds(IN_SHAPE, u8),
+        sds((N_CLASSES,), f32),
+        sds((C1, 9), u8),
+        sds((C1,), f32),
+        sds((C2, C1 * 9), u8),
+        sds((C2,), f32),
+        sds((FC1, FLAT), u8),
+        sds((FC1,), f32),
+        sds((N_CLASSES, FC1), u8),
+        sds((N_CLASSES,), f32),
+        sds((QP_LEN,), f32),
+    )
+
+
+def float_example_args():
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds(IN_SHAPE, f32),
+        sds((N_CLASSES,), f32),
+        sds((C1, 9), f32),
+        sds((C1,), f32),
+        sds((C2, C1 * 9), f32),
+        sds((C2,), f32),
+        sds((FC1, FLAT), f32),
+        sds((FC1,), f32),
+        sds((N_CLASSES, FC1), f32),
+        sds((N_CLASSES,), f32),
+    )
+
+
+def qmatmul_demo(a_q, b_q, qp):
+    """Tiny artifact for the Rust<->Pallas bit-exactness cross-check:
+    qmatmul with runtime qparams (qp = [za, zb, mult, zo])."""
+    za = qp[0].astype(jnp.int32)
+    zb = qp[1].astype(jnp.int32)
+    zo = qp[3].astype(jnp.int32)
+    y = qops.qmatmul(a_q, b_q, za, zb, qp[2], zo, relu=False)
+    acc = qops.qmatmul_acc(a_q, b_q, za, zb)
+    return (y, acc)
+
+
+def qmatmul_demo_args(m=16, k=32, n=8):
+    u8 = jnp.uint8
+    sds = jax.ShapeDtypeStruct
+    return (sds((m, k), u8), sds((k, n), u8), sds((4,), jnp.float32))

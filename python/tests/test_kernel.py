@@ -1,0 +1,111 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and quantization parameters; equality must be
+exact (integer arithmetic + a shared deterministic rounding rule)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_u8(rng, shape):
+    return jnp.asarray(rng.integers(0, 256, size=shape, dtype=np.uint8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 64),
+    n=st.integers(1, 160),
+    za=st.integers(0, 255),
+    zb=st.integers(0, 255),
+    zo=st.integers(0, 255),
+    mult=st.floats(1e-4, 0.5, allow_nan=False),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_qmatmul_matches_ref(m, k, n, za, zb, zo, mult, relu, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_u8(rng, (m, k))
+    b = rand_u8(rng, (k, n))
+    got = qops.qmatmul(a, b, za, zb, mult, zo, relu=relu)
+    want = ref.qmatmul_ref(a, b, za, zb, mult, zo, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    n=st.integers(1, 140),
+    za=st.integers(0, 255),
+    zb=st.integers(0, 255),
+    seed=st.integers(0, 2**31),
+)
+def test_qmatmul_acc_matches_ref(m, k, n, za, zb, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_u8(rng, (m, k))
+    b = rand_u8(rng, (k, n))
+    got = qops.qmatmul_acc(a, b, za, zb)
+    want = ref.qmatmul_acc_ref(a, b, za, zb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_round_half_away_matches_rust_round():
+    xs = jnp.asarray([0.5, 1.5, 2.5, -0.5, -1.5, -2.5, 0.49, -0.49])
+    got = qops.round_half_away(xs)
+    # Rust f32::round: half away from zero
+    want = jnp.asarray([1.0, 2.0, 3.0, -1.0, -2.0, -3.0, 0.0, -0.0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_relu_clamps_at_zero_point():
+    rng = np.random.default_rng(0)
+    a = rand_u8(rng, (8, 16))
+    b = rand_u8(rng, (16, 8))
+    y = qops.qmatmul(a, b, 128, 128, 0.001, 100, relu=True)
+    assert int(np.asarray(y).min()) >= 100
+
+
+def test_im2col_col2im_adjoint():
+    # <im2col(x), y> == <x, col2im(y)> — the defining adjoint property that
+    # makes the conv backward correct.
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(3, 9, 9)).astype(np.float32))
+    cols, (oh, ow) = qops.im2col(x, 3, 3, 2, 1, 1, jnp.float32(0))
+    y = jnp.asarray(rng.normal(size=cols.shape).astype(np.float32))
+    lhs = float(jnp.sum(cols * y))
+    back = qops.col2im(y, 3, 9, 9, 3, 3, 2, 1, 1)
+    rhs = float(jnp.sum(x * back))
+    assert abs(lhs - rhs) < 1e-3 * max(1.0, abs(lhs))
+
+
+def test_im2col_pads_with_zero_point():
+    x = jnp.full((1, 4, 4), 7, jnp.uint8)
+    cols, _ = qops.im2col(x, 3, 3, 1, 1, 1, jnp.uint8(9))
+    vals = set(np.asarray(cols).ravel().tolist())
+    assert vals == {7, 9}
+
+
+def test_qmatmul_shapes_not_multiple_of_block():
+    # deliberately awkward shapes straddling the BLOCK_M/BLOCK_N tiles
+    rng = np.random.default_rng(2)
+    a = rand_u8(rng, (33, 7))
+    b = rand_u8(rng, (7, 129))
+    got = qops.qmatmul(a, b, 1, 2, 0.01, 3)
+    want = ref.qmatmul_ref(a, b, 1, 2, 0.01, 3)
+    assert got.shape == (33, 129)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_dequantize_ref_roundtrip():
+    x = jnp.asarray(np.linspace(-2, 2, 101, dtype=np.float32))
+    q = ref.quantize_ref(x, 4.0 / 255.0, 128)
+    back = ref.dequantize_ref(q, 4.0 / 255.0, 128)
+    assert float(jnp.max(jnp.abs(back - x))) <= 0.5 * 4.0 / 255.0 + 1e-6

@@ -1,0 +1,188 @@
+"""L2 correctness: the quantized train-step graph vs the float reference.
+
+Checks shapes, gradient signs/correlation between the FQT and float paths,
+and that a few steps of FQT descent reduce the loss — the Python-side
+mirror of the Rust integration tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_state(seed=0):
+    rng = np.random.default_rng(seed)
+    f32 = np.float32
+
+    def he(shape, fan_in):
+        return rng.normal(0, np.sqrt(2.0 / fan_in), size=shape).astype(f32)
+
+    w1 = he((model.C1, 9), 9)
+    w2 = he((model.C2, model.C1 * 9), model.C1 * 9)
+    w4 = he((model.FC1, model.FLAT), model.FLAT)
+    w5 = he((model.N_CLASSES, model.FC1), model.FC1)
+    b = [np.zeros(s, f32) for s in (model.C1, model.C2, model.FC1, model.N_CLASSES)]
+    return (w1, b[0], w2, b[1], w4, b[2], w5, b[3])
+
+
+def quantize_state(ws, qp_act):
+    """PTQ-style quantization of the float state; returns quantized weights
+    plus the packed qparams vector."""
+    w1, b1, w2, b2, w4, b4, w5, b5 = ws
+    qp = np.zeros(model.QP_LEN, np.float32)
+
+    def qparams(x):
+        lo, hi = min(float(x.min()), 0.0), max(float(x.max()), 0.0)
+        s = max(hi - lo, 1e-8) / 255.0
+        z = int(round(-lo / s))
+        return s, z
+
+    qp[0], qp[1] = qp_act["in"]
+    out_w = []
+    for i, w in enumerate((w1, w2, w4, w5)):
+        s, z = qparams(w)
+        qp[2 + 4 * i], qp[3 + 4 * i] = s, z
+        out_w.append(np.asarray(ref.quantize_ref(jnp.asarray(w), s, z)))
+    qp[4], qp[5] = qp_act["a1"]
+    qp[8], qp[9] = qp_act["a2"]
+    qp[12], qp[13] = qp_act["a4"]
+    qp[16], qp[17] = qp_act["a5"]
+    # error ranges: head error in [-1, 1]; deeper errors start wider
+    for base, (s, z) in zip((18, 20, 22, 24), [(2.0 / 255, 128)] * 4):
+        qp[base], qp[base + 1] = s, z
+    return out_w, jnp.asarray(qp)
+
+
+def default_act_qp():
+    return {
+        "in": (4.0 / 255, 128),
+        "a1": (4.0 / 255, 0),
+        "a2": (6.0 / 255, 0),
+        "a4": (6.0 / 255, 0),
+        "a5": (8.0 / 255, 128),
+    }
+
+
+def sample(seed, label):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 0.5, size=model.IN_SHAPE).astype(np.float32) + 0.3 * label
+    onehot = np.zeros(model.N_CLASSES, np.float32)
+    onehot[label] = 1.0
+    return x, jnp.asarray(onehot)
+
+
+def test_float_step_shapes_and_grad_check():
+    ws = make_state(1)
+    x, onehot = sample(2, 3)
+    out = model.float_train_step(jnp.asarray(x), onehot, *[jnp.asarray(w) for w in ws])
+    loss, logits = out[0], out[1]
+    grads = out[2:]
+    assert logits.shape == (model.N_CLASSES,)
+    assert float(loss) > 0
+    shapes = [w.shape for w in ws]
+    assert [g.shape for g in grads] == shapes
+    # numeric gradient spot-check on w5
+    eps = 1e-3
+    i, j = 3, 10
+    wp = [w.copy() for w in ws]
+    wp[6][i, j] += eps
+    wm = [w.copy() for w in ws]
+    wm[6][i, j] -= eps
+    lp = model.float_train_step(jnp.asarray(x), onehot, *[jnp.asarray(w) for w in wp])[0]
+    lm = model.float_train_step(jnp.asarray(x), onehot, *[jnp.asarray(w) for w in wm])[0]
+    num = (float(lp) - float(lm)) / (2 * eps)
+    ana = float(grads[6][i, j])
+    assert abs(num - ana) < 1e-2, (num, ana)
+
+
+def test_fqt_step_shapes():
+    ws = make_state(3)
+    qw, qp = quantize_state(ws, default_act_qp())
+    x, onehot = sample(4, 1)
+    xq = ref.quantize_ref(jnp.asarray(x), float(qp[0]), int(qp[1]))
+    out = model.fqt_train_step(
+        xq, onehot,
+        jnp.asarray(qw[0]), jnp.asarray(ws[1]),
+        jnp.asarray(qw[1]), jnp.asarray(ws[3]),
+        jnp.asarray(qw[2]), jnp.asarray(ws[5]),
+        jnp.asarray(qw[3]), jnp.asarray(ws[7]),
+        qp,
+    )
+    loss, logits, gw1, gb1, gw2, gb2, gw4, gb4, gw5, gb5, mm, sat = out
+    assert logits.shape == (10,)
+    assert gw1.shape == (model.C1, 9)
+    assert gw2.shape == (model.C2, model.C1 * 9)
+    assert gw4.shape == (model.FC1, model.FLAT)
+    assert gw5.shape == (model.N_CLASSES, model.FC1)
+    assert mm.shape == (4, 2)
+    assert sat.shape == (4,)
+    assert float(loss) > 0
+    # head error minmax brackets zero
+    assert float(mm[0, 0]) <= 0.0 <= float(mm[0, 1])
+
+
+def test_fqt_head_gradient_correlates_with_float():
+    """The quantized head gradient must point the same way as the float
+    gradient (it is the same outer product up to quantization noise)."""
+    ws = make_state(5)
+    qw, qp = quantize_state(ws, default_act_qp())
+    x, onehot = sample(6, 7)
+    xq = ref.quantize_ref(jnp.asarray(x), float(qp[0]), int(qp[1]))
+    fq = model.fqt_train_step(
+        xq, onehot,
+        jnp.asarray(qw[0]), jnp.asarray(ws[1]),
+        jnp.asarray(qw[1]), jnp.asarray(ws[3]),
+        jnp.asarray(qw[2]), jnp.asarray(ws[5]),
+        jnp.asarray(qw[3]), jnp.asarray(ws[7]),
+        qp,
+    )
+    # float gradients on the dequantized weights (same operating point)
+    dws = [np.asarray(ref.dequantize_ref(jnp.asarray(qw[i]), float(qp[2 + 4 * i]), int(qp[3 + 4 * i]))) for i in range(4)]
+    fl = model.float_train_step(
+        jnp.asarray(x), onehot,
+        jnp.asarray(dws[0]), jnp.asarray(ws[1]),
+        jnp.asarray(dws[1]), jnp.asarray(ws[3]),
+        jnp.asarray(dws[2]), jnp.asarray(ws[5]),
+        jnp.asarray(dws[3]), jnp.asarray(ws[7]),
+    )
+    g_q = np.asarray(fq[8]).ravel()  # gw5
+    g_f = np.asarray(fl[8]).ravel()
+    denom = np.linalg.norm(g_q) * np.linalg.norm(g_f)
+    assert denom > 0
+    corr = float(g_q @ g_f / denom)
+    assert corr > 0.7, corr
+
+
+def test_fqt_descent_reduces_loss():
+    """A few SGD steps on the quantized gradients must reduce the loss —
+    end-to-end sanity of the backward graph."""
+    ws = [w.copy() for w in make_state(7)]
+    act = default_act_qp()
+    x, onehot = sample(8, 2)
+    lr = 0.05
+    losses = []
+    for _ in range(6):
+        qw, qp = quantize_state(ws, act)
+        xq = ref.quantize_ref(jnp.asarray(x), float(qp[0]), int(qp[1]))
+        out = model.fqt_train_step(
+            xq, onehot,
+            jnp.asarray(qw[0]), jnp.asarray(ws[1]),
+            jnp.asarray(qw[1]), jnp.asarray(ws[3]),
+            jnp.asarray(qw[2]), jnp.asarray(ws[5]),
+            jnp.asarray(qw[3]), jnp.asarray(ws[7]),
+            qp,
+        )
+        losses.append(float(out[0]))
+        grads = out[2:10]
+        # float-space descent on dequantized weights (Eq. 5), requantized
+        # on the next loop iteration by quantize_state (Eqs. 6-7)
+        for i, wi in enumerate((0, 2, 4, 6)):
+            dw = np.asarray(ref.dequantize_ref(jnp.asarray(qw[i]), float(qp[2 + 4 * i]), int(qp[3 + 4 * i])))
+            ws[wi] = (dw - lr * np.asarray(grads[2 * i])).astype(np.float32)
+            ws[wi + 1] = (ws[wi + 1] - lr * np.asarray(grads[2 * i + 1])).astype(np.float32)
+    assert losses[-1] < losses[0], losses

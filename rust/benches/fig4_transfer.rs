@@ -1,0 +1,108 @@
+//! Fig. 4 — on-device transfer learning: (a) accuracy per dataset ×
+//! {uint8, mixed, float32} + source baseline; (b) per-sample fwd/bwd
+//! latency on the IMXRT1062; (c)/(d) RAM and Flash per deployment with
+//! the Tab. II constraint check. Scaled by TT_EPOCHS/TT_RUNS/TT_TRAIN_PC.
+
+use tinytrain::data::{transfer_specs, Domain};
+use tinytrain::device;
+use tinytrain::graph::DnnConfig;
+use tinytrain::harness::{self, Knobs};
+use tinytrain::util::bench::{fmt_duration, ResultSink, Table};
+use tinytrain::util::json::Json;
+
+fn main() {
+    let knobs = Knobs::from_env();
+    println!("Fig. 4 reproduction — knobs: {knobs:?} (paper: 20 epochs, 5 runs, full datasets)");
+    let dev = device::imxrt1062();
+    let mut acc_tab = Table::new(
+        "Fig. 4a — transfer-learning accuracy (mean±std over runs)",
+        &["dataset", "baseline", "uint8", "mixed", "float32"],
+    );
+    let mut lat_tab = Table::new(
+        "Fig. 4b — latency per training sample, IMXRT1062 (fwd + bwd)",
+        &["dataset", "config", "fwd", "bwd", "total"],
+    );
+    let mut mem_tab = Table::new(
+        "Fig. 4c/4d — memory at paper shapes (uint8/mixed/float32)",
+        &["dataset", "config", "feature RAM", "weights+grads RAM", "Flash", "fits"],
+    );
+    let mut sink = ResultSink::new("fig4_transfer");
+
+    for spec in transfer_specs() {
+        let src = Domain::new(&spec, spec.reduced_shape, 100);
+        let def = harness::mbednet_for(&spec, &spec.reduced_shape);
+        let (fp, baseline) = harness::pretrain(&def, &src, knobs.epochs, &knobs, 101);
+
+        let mut row = vec![spec.name.to_string(), format!("{baseline:.3}")];
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let mut accs = Vec::new();
+            for run in 0..knobs.runs {
+                let mut scen =
+                    harness::tl_scenario(&spec, cfg, &fp, &src, &knobs, 200 + run as u64);
+                let rep = harness::run_tl(&mut scen, 1.0, &knobs, 300 + run as u64);
+                accs.push(rep.final_test_acc());
+                if run == 0 {
+                    let (f, b) = harness::step_costs(&mut scen.model, &scen.train, &dev, 1.0);
+                    lat_tab.row(&[
+                        spec.name.into(),
+                        cfg.name().into(),
+                        fmt_duration(f.seconds),
+                        fmt_duration(b.seconds),
+                        fmt_duration(f.seconds + b.seconds),
+                    ]);
+                    sink.push(Json::obj(vec![
+                        ("fig", Json::str("4b")),
+                        ("dataset", Json::str(spec.name)),
+                        ("config", Json::str(cfg.name())),
+                        ("fwd_s", Json::Num(f.seconds)),
+                        ("bwd_s", Json::Num(b.seconds)),
+                    ]));
+                }
+            }
+            let (m, s) = harness::mean_std(&accs);
+            row.push(format!("{m:.3}±{s:.3}"));
+            sink.push(Json::obj(vec![
+                ("fig", Json::str("4a")),
+                ("dataset", Json::str(spec.name)),
+                ("config", Json::str(cfg.name())),
+                ("baseline", Json::Num(baseline as f64)),
+                ("acc_mean", Json::Num(m as f64)),
+                ("acc_std", Json::Num(s as f64)),
+            ]));
+
+            let mem = harness::tl_memory(&spec, cfg);
+            let fits: Vec<String> = device::all_devices()
+                .iter()
+                .map(|d| {
+                    format!(
+                        "{}:{}",
+                        &d.name[..3],
+                        if d.fits(mem.total_ram(), mem.flash) { "y" } else { "N" }
+                    )
+                })
+                .collect();
+            mem_tab.row(&[
+                spec.name.into(),
+                cfg.name().into(),
+                format!("{} B", mem.feature_ram),
+                format!("{} B", mem.weight_ram),
+                format!("{} B", mem.flash),
+                fits.join(" "),
+            ]);
+            sink.push(Json::obj(vec![
+                ("fig", Json::str("4cd")),
+                ("dataset", Json::str(spec.name)),
+                ("config", Json::str(cfg.name())),
+                ("feature_ram", Json::Num(mem.feature_ram as f64)),
+                ("weight_ram", Json::Num(mem.weight_ram as f64)),
+                ("flash", Json::Num(mem.flash as f64)),
+            ]));
+        }
+        acc_tab.row(&row);
+    }
+    acc_tab.print();
+    lat_tab.print();
+    mem_tab.print();
+    let p = sink.flush().expect("write results");
+    println!("\nresults -> {}", p.display());
+}

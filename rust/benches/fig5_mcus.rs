@@ -1,0 +1,59 @@
+//! Fig. 5 — transfer learning across MCUs: per-sample latency (a) and
+//! energy (b) for cwru and daliac on all three Tab. II devices, all three
+//! configurations; rows are marked when the deployment does not fit the
+//! device (the paper could only deploy a subset).
+
+use tinytrain::data::{spec_by_name, Domain};
+use tinytrain::device;
+use tinytrain::graph::DnnConfig;
+use tinytrain::harness::{self, Knobs};
+use tinytrain::util::bench::{fmt_duration, ResultSink, Table};
+use tinytrain::util::json::Json;
+
+fn main() {
+    let knobs = Knobs::from_env();
+    println!("Fig. 5 reproduction — knobs: {knobs:?}");
+    let mut tab = Table::new(
+        "Fig. 5 — latency and energy per training sample across MCUs",
+        &["dataset", "device", "config", "latency", "energy", "fits"],
+    );
+    let mut sink = ResultSink::new("fig5_mcus");
+
+    for name in ["cwru", "daliac"] {
+        let spec = spec_by_name(name).unwrap();
+        let src = Domain::new(&spec, spec.reduced_shape, 50);
+        let def = harness::mbednet_for(&spec, &spec.reduced_shape);
+        let (fp, _) = harness::pretrain(&def, &src, 1.max(knobs.epochs / 2), &knobs, 51);
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let mut scen = harness::tl_scenario(&spec, cfg, &fp, &src, &knobs, 52);
+            let mem = harness::tl_memory(&spec, cfg);
+            for dev in device::all_devices() {
+                let (f, b) = harness::step_costs(&mut scen.model, &scen.train, &dev, 1.0);
+                let total = f.seconds + b.seconds;
+                let energy = f.joules + b.joules;
+                let fits = dev.fits(mem.total_ram(), mem.flash);
+                tab.row(&[
+                    name.into(),
+                    dev.name.into(),
+                    cfg.name().into(),
+                    fmt_duration(total),
+                    format!("{:.3} mJ", energy * 1e3),
+                    if fits { "yes".into() } else { "NO (paper: not deployable)".into() },
+                ]);
+                sink.push(Json::obj(vec![
+                    ("dataset", Json::str(name)),
+                    ("device", Json::str(dev.name)),
+                    ("config", Json::str(cfg.name())),
+                    ("latency_s", Json::Num(total)),
+                    ("energy_j", Json::Num(energy)),
+                    ("fits", Json::Bool(fits)),
+                ]));
+            }
+        }
+    }
+    tab.print();
+    println!("\nexpected shape: IMXRT fastest; nrf52840 beats RP2040 despite the lower");
+    println!("clock (SIMD+FPU, Fig. 5a); energy/sample: IMXRT best, nrf52840 worst (Fig. 5b).");
+    let p = sink.flush().expect("write results");
+    println!("results -> {}", p.display());
+}

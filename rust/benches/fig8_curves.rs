@@ -1,0 +1,71 @@
+//! Fig. 8 — loss and accuracy curves across gradient update rates
+//! (flowers stand-in, mixed configuration): convergence *speed* must be
+//! preserved under sparse updates — lower λ_min saves compute without
+//! slowing the loss curve.
+
+use tinytrain::data::{spec_by_name, Domain};
+use tinytrain::graph::DnnConfig;
+use tinytrain::harness::{self, Knobs};
+use tinytrain::util::bench::{ResultSink, Table};
+use tinytrain::util::json::Json;
+
+fn main() {
+    let mut knobs = Knobs::from_env();
+    knobs.epochs = knobs.epochs.max(8); // curves need some length
+    println!("Fig. 8 reproduction — knobs: {knobs:?}");
+    let mut spec = spec_by_name("flowers").unwrap();
+    spec.reduced_shape = [3, 24, 24];
+
+    let src = Domain::new(&spec, spec.reduced_shape, 90);
+    let def = harness::mbednet_for(&spec, &spec.reduced_shape);
+    let (fp, _) = harness::pretrain(&def, &src, knobs.epochs, &knobs, 91);
+
+    let mut tab = Table::new(
+        "Fig. 8 — per-epoch train loss / test accuracy (flowers, mixed)",
+        &["epoch", "loss λ=1.0", "loss λ=0.5", "loss λ=0.1", "acc λ=1.0", "acc λ=0.5", "acc λ=0.1"],
+    );
+    let mut sink = ResultSink::new("fig8_curves");
+    let mut curves = Vec::new();
+    for &lambda in &[1.0f32, 0.5, 0.1] {
+        let mut scen = harness::tl_scenario(&spec, DnnConfig::Mixed, &fp, &src, &knobs, 92);
+        let rep = harness::run_tl(&mut scen, lambda, &knobs, 93);
+        for (i, e) in rep.epochs.iter().enumerate() {
+            sink.push(Json::obj(vec![
+                ("lambda_min", Json::Num(lambda as f64)),
+                ("epoch", Json::Num(i as f64)),
+                ("train_loss", Json::Num(e.train_loss as f64)),
+                ("test_acc", Json::Num(e.test_acc as f64)),
+            ]));
+        }
+        curves.push(rep);
+    }
+    for ep in 0..knobs.epochs {
+        tab.row(&[
+            format!("{ep}"),
+            format!("{:.3}", curves[0].epochs[ep].train_loss),
+            format!("{:.3}", curves[1].epochs[ep].train_loss),
+            format!("{:.3}", curves[2].epochs[ep].train_loss),
+            format!("{:.3}", curves[0].epochs[ep].test_acc),
+            format!("{:.3}", curves[1].epochs[ep].test_acc),
+            format!("{:.3}", curves[2].epochs[ep].test_acc),
+        ]);
+    }
+    tab.print();
+
+    // convergence-speed check: epochs to reach 90% of the dense loss drop
+    let drop_epoch = |rep: &tinytrain::train::loop_::TrainReport| -> usize {
+        let first = rep.epochs[0].train_loss;
+        let last = rep.epochs.last().unwrap().train_loss;
+        let target = first - 0.9 * (first - last);
+        rep.epochs.iter().position(|e| e.train_loss <= target).unwrap_or(rep.epochs.len())
+    };
+    println!(
+        "\nepochs to 90% of final loss drop: λ=1.0: {}, λ=0.5: {}, λ=0.1: {}",
+        drop_epoch(&curves[0]),
+        drop_epoch(&curves[1]),
+        drop_epoch(&curves[2])
+    );
+    println!("expected shape: all three curves converge at a similar rate (paper Fig. 8).");
+    let p = sink.flush().expect("write results");
+    println!("results -> {}", p.display());
+}

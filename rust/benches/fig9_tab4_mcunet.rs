@@ -1,0 +1,176 @@
+//! Tab. IV + Fig. 9 — MCUNet comparison.
+//!
+//! Tab. IV: retrain the last two blocks of the MCUNet-5FPS stand-in on
+//! the eight TL datasets under four optimizers: fp32 SGD-M, naive int8
+//! SGD-M, SGD+M+QAS (Lin et al.), and ours (FQT + standardized gradients
+//! + dynamic range adaptation). Expected shape: ours ≈ QAS ≈ fp32 ≫
+//! naive int8.
+//!
+//! Fig. 9: memory + per-sample latency of MbedNet vs MCUNet on cifar10 at
+//! paper shapes on the IMXRT1062 (paper: MbedNet −34.8 % memory, −49.0 %
+//! latency).
+
+use tinytrain::data::{mcunet_specs, spec_by_name, Domain};
+use tinytrain::device;
+use tinytrain::graph::exec::{calibrate, NativeModel};
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::harness::{self, Knobs};
+use tinytrain::memplan;
+use tinytrain::train::loop_::{self, Sparsity};
+use tinytrain::train::optim::{NaiveQSgdM, QasSgdM, SgdM};
+use tinytrain::train::Optimizer;
+use tinytrain::util::bench::{fmt_duration, ResultSink, Table};
+use tinytrain::util::json::Json;
+use tinytrain::util::prng::Pcg32;
+
+fn mcunet_scenario(
+    spec: &tinytrain::data::DatasetSpec,
+    cfg: DnnConfig,
+    fp: &tinytrain::graph::exec::FloatParams,
+    src: &Domain,
+    knobs: &Knobs,
+    seed: u64,
+) -> harness::TlScenario {
+    let mut rng = Pcg32::new(seed, 0x99);
+    let def = models::mcunet5fps(&spec.reduced_shape, spec.classes);
+    let tgt = src.shifted(seed ^ 0x5555);
+    let (train, test) = tgt.splits(knobs.train_pc, knobs.test_pc, &mut rng);
+    let calib = calibrate(&def, fp, &train.xs[..train.len().min(4)]);
+    let mut model = NativeModel::build(def, cfg, fp, &calib);
+    model.reset_trainable(&mut rng);
+    harness::TlScenario { model, train, test }
+}
+
+fn run_with(scen: &mut harness::TlScenario, opt: &mut dyn Optimizer, knobs: &Knobs, seed: u64) -> f32 {
+    let mut rng = Pcg32::new(seed, 0xAB);
+    let rep = loop_::train(
+        &mut scen.model,
+        opt,
+        &scen.train,
+        &scen.test,
+        knobs.epochs,
+        &mut Sparsity::Dense,
+        &mut rng,
+    );
+    rep.final_test_acc()
+}
+
+fn main() {
+    let knobs = Knobs::from_env();
+    println!("Tab. IV + Fig. 9 reproduction — knobs: {knobs:?} (paper: 50 epochs, lr 1e-3, b 48)");
+    let mut tab = Table::new(
+        "Tab. IV — optimizer comparison, MCUNet-5FPS stand-in (last two blocks)",
+        &["optimizer", "precision", "cars", "cf10", "cf100", "cub", "flowers", "food", "pets", "vww", "avg"],
+    );
+    let mut sink = ResultSink::new("fig9_tab4_mcunet");
+
+    // pretrain once per dataset (float), share across optimizer rows
+    let mut pretrained = Vec::new();
+    for spec in mcunet_specs() {
+        let src = Domain::new(&spec, spec.reduced_shape, 500);
+        let def = models::mcunet5fps(&spec.reduced_shape, spec.classes);
+        let (fp, _) = harness::pretrain(&def, &src, knobs.epochs, &knobs, 501);
+        pretrained.push((spec, src, fp));
+    }
+
+    type OptRow = (&'static str, &'static str, DnnConfig, u8);
+    let rows: [OptRow; 4] = [
+        ("SGD-M", "fp32", DnnConfig::Float32, 0),
+        ("SGD-M (naive)", "int8", DnnConfig::Uint8, 1),
+        ("SGD+M+QAS", "int8", DnnConfig::Uint8, 2),
+        ("ours (FQT)", "uint8", DnnConfig::Uint8, 3),
+    ];
+    for (name, prec, cfg, kind) in rows {
+        let mut cells = vec![name.to_string(), prec.to_string()];
+        let mut accs = Vec::new();
+        for (spec, src, fp) in &pretrained {
+            let mut scen = mcunet_scenario(spec, cfg, fp, src, &knobs, 600);
+            let acc = match kind {
+                0 => {
+                    let mut opt = SgdM::new(&scen.model, harness::LR, harness::BATCH);
+                    run_with(&mut scen, &mut opt, &knobs, 601)
+                }
+                1 => {
+                    let mut opt = NaiveQSgdM::new(&scen.model, harness::LR, harness::BATCH);
+                    run_with(&mut scen, &mut opt, &knobs, 601)
+                }
+                2 => {
+                    let mut opt = QasSgdM::new(&scen.model, harness::LR, harness::BATCH);
+                    run_with(&mut scen, &mut opt, &knobs, 601)
+                }
+                _ => {
+                    let rep = harness::run_tl(&mut scen, 1.0, &knobs, 601);
+                    rep.final_test_acc()
+                }
+            };
+            accs.push(acc);
+            cells.push(format!("{:.1}", acc * 100.0));
+            sink.push(Json::obj(vec![
+                ("table", Json::str("IV")),
+                ("optimizer", Json::str(name)),
+                ("dataset", Json::str(spec.name)),
+                ("acc", Json::Num(acc as f64)),
+            ]));
+        }
+        let (m, _) = harness::mean_std(&accs);
+        cells.push(format!("{:.1}", m * 100.0));
+        tab.row(&cells);
+    }
+    tab.print();
+    println!("paper Tab. IV avgs: fp32 SGD-M 73.3, int8 SGD-M 64.9, SGD+M+QAS 73.5, ours 73.7");
+
+    // ---- Fig. 9: MbedNet vs MCUNet on cifar10, paper shapes ----
+    let dev = device::imxrt1062();
+    let spec10 = spec_by_name("cf10").unwrap();
+    let mut f9 = Table::new(
+        "Fig. 9 — MbedNet vs MCUNet (cifar10, IMXRT1062, paper shapes)",
+        &["model", "RAM (train)", "Flash", "fwd/sample", "bwd/sample", "total"],
+    );
+    let mut totals = Vec::new();
+    for (mname, def) in [
+        ("mbednet", models::mbednet(&[3, 32, 32], 10)),
+        ("mcunet5fps", models::mcunet5fps(&spec10.paper_shape, 10)),
+    ] {
+        let mem = memplan::plan(&def, DnnConfig::Uint8, true);
+        // analytic op pricing at paper shape (fwd); bwd ≈ 2x tail MACs
+        let fwd_ops = harness::analytic_fwd_ops(&def, DnnConfig::Uint8);
+        let tail_macs: u64 = def
+            .fwd_macs_per_layer()
+            .iter()
+            .zip(&def.layers)
+            .filter(|(_, l)| l.trainable)
+            .map(|(m, _)| *m)
+            .sum();
+        let mut bwd_ops = tinytrain::kernels::OpCounter::new();
+        bwd_ops.int_macs = 2 * tail_macs;
+        bwd_ops.bytes = fwd_ops.bytes / 2;
+        let f = dev.cost(&fwd_ops);
+        let b = dev.cost(&bwd_ops);
+        totals.push((mem.total_ram() + mem.flash, f.seconds + b.seconds));
+        f9.row(&[
+            mname.into(),
+            format!("{} B", mem.total_ram()),
+            format!("{} B", mem.flash),
+            fmt_duration(f.seconds),
+            fmt_duration(b.seconds),
+            fmt_duration(f.seconds + b.seconds),
+        ]);
+        sink.push(Json::obj(vec![
+            ("fig", Json::str("9")),
+            ("model", Json::str(mname)),
+            ("ram", Json::Num(mem.total_ram() as f64)),
+            ("flash", Json::Num(mem.flash as f64)),
+            ("fwd_s", Json::Num(f.seconds)),
+            ("bwd_s", Json::Num(b.seconds)),
+        ]));
+    }
+    f9.print();
+    let mem_save = 100.0 * (1.0 - totals[0].0 as f64 / totals[1].0 as f64);
+    let lat_save = 100.0 * (1.0 - totals[0].1 / totals[1].1);
+    println!(
+        "\nMbedNet vs MCUNet: {:.1}% less memory, {:.1}% lower latency (paper: 34.8% / 49.0%)",
+        mem_save, lat_save
+    );
+    let p = sink.flush().expect("write results");
+    println!("results -> {}", p.display());
+}

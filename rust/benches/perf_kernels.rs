@@ -1,0 +1,123 @@
+//! §Perf microbenchmarks — wall-clock throughput of the native kernels
+//! (the simulated-MCU hot path) and the PJRT-executed artifact. Used by
+//! the performance pass; before/after numbers live in EXPERIMENTS.md §Perf.
+
+use tinytrain::kernels::{qconv, qlinear, ConvGeom, OpCounter};
+use tinytrain::quant::{QParams, QTensor};
+use tinytrain::tensor::TensorF32;
+use tinytrain::util::bench::{env_usize, fmt_duration, time_it, ResultSink, Table};
+use tinytrain::util::json::Json;
+use tinytrain::util::prng::Pcg32;
+
+fn rand_q(rng: &mut Pcg32, shape: &[usize]) -> QTensor {
+    let mut t = TensorF32::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    QTensor::quantize(&t)
+}
+
+fn main() {
+    let reps = env_usize("TT_PERF_REPS", 10);
+    let mut rng = Pcg32::seeded(1);
+    let mut tab = Table::new(
+        "§Perf — native kernel throughput",
+        &["kernel", "shape", "time", "GMAC/s"],
+    );
+    let mut sink = ResultSink::new("perf_kernels");
+
+    // conv fwd: the mbednet stem-like layer (dominates TL forward cost)
+    let g = ConvGeom { cin: 16, cout: 32, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+    let x = rand_q(&mut rng, &[16, 32, 32]);
+    let w = rand_q(&mut rng, &[32, 16, 3, 3]);
+    let bias = vec![0i32; 32];
+    let oqp = QParams::from_min_max(0.0, 4.0);
+    let macs = g.fwd_macs(32, 32) as f64;
+    let (t, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(qconv::qconv2d_fwd(&x, &w, &bias, &g, oqp, true, &mut ops));
+    });
+    tab.row(&["qconv2d_fwd".into(), "16x32x32 -> 32, k3".into(), fmt_duration(t), format!("{:.2}", macs / t / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("qconv2d_fwd")),
+        ("seconds", Json::Num(t)),
+        ("gmacs", Json::Num(macs / t / 1e9)),
+    ]));
+
+    // pointwise conv (1x1) — the mbednet/mcunet majority op
+    let gp = ConvGeom { cin: 64, cout: 128, kh: 1, kw: 1, stride: 1, pad_h: 0, pad_w: 0, depthwise: false };
+    let xp = rand_q(&mut rng, &[64, 16, 16]);
+    let wp = rand_q(&mut rng, &[128, 64, 1, 1]);
+    let biasp = vec![0i32; 128];
+    let macsp = gp.fwd_macs(16, 16) as f64;
+    let (tp, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(qconv::qconv2d_fwd(&xp, &wp, &biasp, &gp, oqp, true, &mut ops));
+    });
+    tab.row(&["qconv2d_fwd 1x1".into(), "64x16x16 -> 128".into(), fmt_duration(tp), format!("{:.2}", macsp / tp / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("qconv2d_fwd_1x1")),
+        ("seconds", Json::Num(tp)),
+        ("gmacs", Json::Num(macsp / tp / 1e9)),
+    ]));
+
+    // conv bwd input + weight (the training additions)
+    let e = rand_q(&mut rng, &[32, 32, 32]);
+    let (tb, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(qconv::qconv2d_bwd_input(&e, &w, &g, 32, 32, oqp, None, &mut ops));
+    });
+    tab.row(&["qconv2d_bwd_input".into(), "32x32x32".into(), fmt_duration(tb), format!("{:.2}", macs / tb / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("qconv2d_bwd_input")),
+        ("seconds", Json::Num(tb)),
+        ("gmacs", Json::Num(macs / tb / 1e9)),
+    ]));
+
+    let (tw, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(qconv::qconv2d_bwd_weight(&e, &x, &g, None, &mut ops));
+    });
+    tab.row(&["qconv2d_bwd_weight".into(), "32x32x32".into(), fmt_duration(tw), format!("{:.2}", macs / tw / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("qconv2d_bwd_weight")),
+        ("seconds", Json::Num(tw)),
+        ("gmacs", Json::Num(macs / tw / 1e9)),
+    ]));
+
+    // linear fwd (head-sized)
+    let xl = rand_q(&mut rng, &[512]);
+    let wl = rand_q(&mut rng, &[256, 512]);
+    let biasl = vec![0i32; 256];
+    let macsl = (512 * 256) as f64;
+    let (tl, _) = time_it(2, reps * 4, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(qlinear::qlinear_fwd(&xl, &wl, &biasl, oqp, false, &mut ops));
+    });
+    tab.row(&["qlinear_fwd".into(), "512 -> 256".into(), fmt_duration(tl), format!("{:.2}", macsl / tl / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("qlinear_fwd")),
+        ("seconds", Json::Num(tl)),
+        ("gmacs", Json::Num(macsl / tl / 1e9)),
+    ]));
+
+    tab.print();
+
+    // PJRT artifact step latency, if artifacts exist
+    let dir = tinytrain::runtime::artifacts_dir();
+    if dir.join("mnist_cnn_uint8_train.hlo.txt").exists() {
+        let mut trainer =
+            tinytrain::runtime::xla_trainer::load_fqt_trainer(&dir, (-2.0, 4.0), 0.01, 8, 1)
+                .expect("load artifact");
+        let mut x = TensorF32::zeros(&[1, 28, 28]);
+        rng.fill_normal(x.data_mut(), 0.5);
+        let (ta, _) = time_it(3, reps, || {
+            std::hint::black_box(trainer.train_step(&x, 3).unwrap());
+        });
+        println!("\nPJRT fused train step (fwd+bwd, mnist_cnn uint8): {}", fmt_duration(ta));
+        sink.push(Json::obj(vec![
+            ("kernel", Json::str("pjrt_train_step")),
+            ("seconds", Json::Num(ta)),
+        ]));
+    }
+    let p = sink.flush().expect("write results");
+    println!("results -> {}", p.display());
+}

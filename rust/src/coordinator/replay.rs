@@ -1,0 +1,112 @@
+//! Bounded replay buffer with reservoir sampling.
+//!
+//! On-device training needs labeled data retained in RAM (§I-A, third
+//! memory aspect). Capacity is fixed; once full, reservoir sampling keeps
+//! an unbiased subset of everything seen so far, which protects the
+//! training distribution when the stream is long.
+
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+pub struct ReplayBuffer {
+    cap: usize,
+    seen: u64,
+    items: Vec<(TensorF32, usize)>,
+    rng: Pcg32,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize, seed: u64) -> ReplayBuffer {
+        ReplayBuffer { cap: cap.max(1), seen: 0, items: Vec::new(), rng: Pcg32::new(seed, 0xEB) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Admit a sample (reservoir policy once full).
+    pub fn push(&mut self, x: TensorF32, y: usize) {
+        self.seen += 1;
+        if self.items.len() < self.cap {
+            self.items.push((x, y));
+        } else {
+            // replace a random slot with probability cap/seen
+            let j = self.rng.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.items[j as usize] = (x, y);
+            }
+        }
+    }
+
+    /// Draw a uniformly random retained sample.
+    pub fn draw(&mut self, rng: &mut Pcg32) -> Option<(TensorF32, usize)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let i = rng.below(self.items.len() as u32) as usize;
+        Some(self.items[i].clone())
+    }
+
+    /// Bytes of sample storage currently held.
+    pub fn bytes(&self) -> usize {
+        self.items.iter().map(|(x, _)| x.len() * 4 + 8).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(v: f32) -> TensorF32 {
+        TensorF32::from_vec(&[2], vec![v, v])
+    }
+
+    #[test]
+    fn fills_to_capacity_then_stays_bounded() {
+        let mut rb = ReplayBuffer::new(8, 1);
+        for i in 0..100 {
+            rb.push(sample(i as f32), i % 3);
+        }
+        assert_eq!(rb.len(), 8);
+        assert_eq!(rb.seen(), 100);
+    }
+
+    #[test]
+    fn reservoir_keeps_late_samples_sometimes() {
+        let mut rb = ReplayBuffer::new(16, 2);
+        for i in 0..400 {
+            rb.push(sample(i as f32), 0);
+        }
+        // with 400 seen and cap 16, expect at least one retained sample
+        // from the last half (probability of none is astronomically small)
+        let late = rb.items.iter().filter(|(x, _)| x.data()[0] >= 200.0).count();
+        assert!(late > 0);
+    }
+
+    #[test]
+    fn draw_none_when_empty_some_after_push() {
+        let mut rb = ReplayBuffer::new(4, 3);
+        let mut rng = Pcg32::seeded(9);
+        assert!(rb.draw(&mut rng).is_none());
+        rb.push(sample(1.0), 7);
+        let (x, y) = rb.draw(&mut rng).unwrap();
+        assert_eq!(y, 7);
+        assert_eq!(x.data()[0], 1.0);
+    }
+
+    #[test]
+    fn bytes_accounts_storage() {
+        let mut rb = ReplayBuffer::new(4, 4);
+        rb.push(sample(1.0), 0);
+        rb.push(sample(2.0), 1);
+        assert_eq!(rb.bytes(), 2 * (2 * 4 + 8));
+    }
+}

@@ -1,0 +1,125 @@
+//! Deterministic sample streams for the coordinator, including the
+//! mid-stream domain-shift scenario (the paper's motivating use case:
+//! "adapt ... alongside a changing input domain", §I).
+
+use crate::data::Domain;
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+/// One arrival: a labeled sample and the gap until the next arrival.
+pub struct Arrival {
+    pub x: TensorF32,
+    pub y: usize,
+    pub gap_s: f64,
+}
+
+/// A finite stream of labeled samples drawn from one or two domains.
+pub struct SampleStream<'a> {
+    domains: Vec<&'a Domain>,
+    /// Arrival index at which the stream switches to the next domain.
+    switch_at: usize,
+    remaining: usize,
+    emitted: usize,
+    mean_gap_s: f64,
+    rng: Pcg32,
+}
+
+impl<'a> SampleStream<'a> {
+    /// Single-domain stream of `n` samples with mean inter-arrival gap.
+    pub fn new(domain: &'a Domain, n: usize, mean_gap_s: f64, seed: u64) -> SampleStream<'a> {
+        SampleStream {
+            domains: vec![domain],
+            switch_at: usize::MAX,
+            remaining: n,
+            emitted: 0,
+            mean_gap_s,
+            rng: Pcg32::new(seed, 0x57),
+        }
+    }
+
+    /// Stream that switches from `first` to `second` after `switch_at`
+    /// arrivals (domain-shift scenario).
+    pub fn with_shift(
+        first: &'a Domain,
+        second: &'a Domain,
+        n: usize,
+        switch_at: usize,
+        mean_gap_s: f64,
+        seed: u64,
+    ) -> SampleStream<'a> {
+        SampleStream {
+            domains: vec![first, second],
+            switch_at,
+            remaining: n,
+            emitted: 0,
+            mean_gap_s,
+            rng: Pcg32::new(seed, 0x57),
+        }
+    }
+
+    pub fn next_sample(&mut self) -> Option<Arrival> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let dom = if self.emitted >= self.switch_at && self.domains.len() > 1 {
+            self.domains[1]
+        } else {
+            self.domains[0]
+        };
+        self.emitted += 1;
+        let y = self.rng.below(dom.spec.classes as u32) as usize;
+        let x = dom.sample(y, &mut self.rng);
+        // jittered inter-arrival gap: uniform in [0.5, 1.5] × mean
+        let gap_s = self.mean_gap_s * self.rng.uniform(0.5, 1.5) as f64;
+        Some(Arrival { x, y, gap_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec_by_name;
+
+    #[test]
+    fn stream_emits_exactly_n() {
+        let spec = spec_by_name("cifar10").unwrap();
+        let dom = Domain::new(&spec, [3, 8, 8], 1);
+        let mut s = SampleStream::new(&dom, 25, 0.1, 2);
+        let mut count = 0;
+        while let Some(a) = s.next_sample() {
+            assert!(a.y < 10);
+            assert!(a.gap_s >= 0.05 && a.gap_s <= 0.15);
+            count += 1;
+        }
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn shift_switches_domain() {
+        let spec = spec_by_name("cifar10").unwrap();
+        let d1 = Domain::new(&spec, [3, 8, 8], 1);
+        let d2 = d1.shifted(99);
+        let mut s = SampleStream::with_shift(&d1, &d2, 10, 5, 0.1, 3);
+        // consume all; just verifies the switch does not panic and labels
+        // remain valid (distributional checks live in data::tests)
+        let mut n = 0;
+        while let Some(a) = s.next_sample() {
+            assert!(a.y < 10);
+            n += 1;
+        }
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = spec_by_name("cwru").unwrap();
+        let dom = Domain::new(&spec, [1, 1, 64], 4);
+        let mut a = SampleStream::new(&dom, 5, 0.1, 7);
+        let mut b = SampleStream::new(&dom, 5, 0.1, 7);
+        while let (Some(x), Some(y)) = (a.next_sample(), b.next_sample()) {
+            assert_eq!(x.y, y.y);
+            assert_eq!(x.x.data(), y.x.data());
+        }
+    }
+}

@@ -1,0 +1,934 @@
+//! Native model executor: the MCU-faithful forward and backward passes.
+//!
+//! This is the Rust port of what the paper's C framework runs on-device.
+//! A [`NativeModel`] owns the deployed state exactly as the MCU would hold
+//! it: quantized weight tensors (uint8 + per-tensor params) for quantized
+//! layers, float weights for float layers, fixed activation quantization
+//! parameters from PTQ calibration, and online min/max observers for the
+//! backpropagated error tensors (see `quant::observer`).
+//!
+//! The forward pass doubles as inference (the paper's in-place property:
+//! the same representation serves both, §III-A); the backward pass
+//! implements Eqs. 1–4 with optional per-structure masks from the dynamic
+//! sparse update controller (§III-B).
+
+use crate::graph::{DnnConfig, LayerDef, LayerKind, ModelDef, Precision};
+use crate::kernels::{fconv, flinear, pool, qconv, qlinear, softmax, OpCounter};
+use crate::quant::observer::MinMaxObserver;
+use crate::quant::{quantize_bias, QParams, QTensor};
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+/// An activation value flowing through the graph — quantized or float
+/// depending on the layer precision (mixed configurations cross the
+/// boundary exactly once, after the last conv).
+#[derive(Clone, Debug)]
+pub enum Act {
+    Q(QTensor),
+    F(TensorF32),
+}
+
+impl Act {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Act::Q(t) => t.shape(),
+            Act::F(t) => t.shape(),
+        }
+    }
+
+    pub fn to_float(&self) -> TensorF32 {
+        match self {
+            Act::Q(t) => t.dequantize(),
+            Act::F(t) => t.clone(),
+        }
+    }
+
+    fn reshaped(&self, shape: &[usize]) -> Act {
+        match self {
+            Act::Q(t) => Act::Q(QTensor { values: t.values.reshape(shape), qp: t.qp }),
+            Act::F(t) => Act::F(t.reshape(shape)),
+        }
+    }
+
+    /// Bytes this activation occupies in the on-device arena.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Act::Q(t) => t.len(),
+            Act::F(t) => t.len() * 4,
+        }
+    }
+}
+
+/// Deployed per-layer parameters. The float bias master is kept for both
+/// flavors: quantized kernels consume it re-quantized to i32 at the current
+/// input/weight scales (cheap, `Cout` values), and the bias SGD step runs
+/// in float either way.
+#[derive(Clone, Debug)]
+pub enum LayerParams {
+    Q { w: QTensor, bias: Vec<f32> },
+    F { w: TensorF32, bias: Vec<f32> },
+    None,
+}
+
+impl LayerParams {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            LayerParams::Q { w, bias } => w.len() + bias.len() * 4,
+            LayerParams::F { w, bias } => (w.len() + bias.len()) * 4,
+            LayerParams::None => 0,
+        }
+    }
+}
+
+/// Float master weights used before deployment (pretraining on the source
+/// domain and PTQ calibration both run on these).
+#[derive(Clone, Debug)]
+pub struct FloatParams {
+    /// `(weights, bias)` for weighted layers; `None` for pools etc.
+    pub layers: Vec<Option<(TensorF32, Vec<f32>)>>,
+}
+
+impl FloatParams {
+    /// He-initialized random parameters.
+    pub fn init(def: &ModelDef, rng: &mut Pcg32) -> FloatParams {
+        let layers = def
+            .layers
+            .iter()
+            .map(|l| init_layer(l, rng))
+            .collect();
+        FloatParams { layers }
+    }
+}
+
+fn init_layer(l: &LayerDef, rng: &mut Pcg32) -> Option<(TensorF32, Vec<f32>)> {
+    match &l.kind {
+        LayerKind::Conv { geom, .. } => {
+            let cf = if geom.depthwise { 1 } else { geom.cin };
+            let fan_in = (cf * geom.kh * geom.kw) as f32;
+            let std = (2.0 / fan_in).sqrt();
+            let mut w = TensorF32::zeros(&[geom.cout, cf, geom.kh, geom.kw]);
+            rng.fill_normal(w.data_mut(), std);
+            Some((w, vec![0.0; geom.cout]))
+        }
+        LayerKind::Linear { n_in, n_out, .. } => {
+            let std = (2.0 / *n_in as f32).sqrt();
+            let mut w = TensorF32::zeros(&[*n_out, *n_in]);
+            rng.fill_normal(w.data_mut(), std);
+            Some((w, vec![0.0; *n_out]))
+        }
+        _ => None,
+    }
+}
+
+/// PTQ calibration result: input range plus per-layer activation ranges.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub input_qp: QParams,
+    pub act_qp: Vec<QParams>,
+}
+
+/// Run `samples` through the float model and record every layer's output
+/// range (post-training quantization calibration).
+pub fn calibrate(def: &ModelDef, fp: &FloatParams, samples: &[TensorF32]) -> Calibration {
+    let mut in_obs = MinMaxObserver::calibration();
+    let mut obs: Vec<MinMaxObserver> =
+        def.layers.iter().map(|_| MinMaxObserver::calibration()).collect();
+    let mut ops = OpCounter::new();
+    for x in samples {
+        in_obs.observe(x.data());
+        let mut cur = x.clone();
+        for (i, l) in def.layers.iter().enumerate() {
+            cur = float_layer_fwd(l, &cur, fp.layers[i].as_ref(), &mut ops).0;
+            obs[i].observe(cur.data());
+        }
+    }
+    Calibration {
+        input_qp: in_obs.qparams(),
+        act_qp: obs.iter().map(|o| o.qparams()).collect(),
+    }
+}
+
+fn float_layer_fwd(
+    l: &LayerDef,
+    x: &TensorF32,
+    p: Option<&(TensorF32, Vec<f32>)>,
+    ops: &mut OpCounter,
+) -> (TensorF32, Option<Vec<u32>>) {
+    match &l.kind {
+        LayerKind::Conv { geom, relu } => {
+            let (w, b) = p.expect("conv params");
+            (fconv::fconv2d_fwd(x, w, b, geom, *relu, ops), None)
+        }
+        LayerKind::Linear { relu, .. } => {
+            let (w, b) = p.expect("linear params");
+            (flinear::flinear_fwd(x, w, b, *relu, ops), None)
+        }
+        LayerKind::MaxPool { k } => {
+            let o = pool::fmaxpool_fwd(x, *k, ops);
+            (o.y, Some(o.argmax))
+        }
+        LayerKind::GlobalAvgPool => (pool::fgap_fwd(x, ops), None),
+        LayerKind::Flatten => (x.reshape(&[x.len()]), None),
+    }
+}
+
+/// Saved forward-pass state needed by backprop (the data dependencies of
+/// Fig. 1: layer inputs, post-activation outputs, pool argmaxes).
+pub struct FwdTrace {
+    pub input: Act,
+    pub acts: Vec<Act>,
+    pub argmax: Vec<Option<Vec<u32>>>,
+    pub logits: Vec<f32>,
+}
+
+/// Per-layer gradient output of one backward pass.
+pub struct LayerGrads {
+    pub gw: TensorF32,
+    pub gb: TensorF32,
+    /// (kept structures, total structures) under the sparse mask.
+    pub kept: (usize, usize),
+}
+
+/// Result of one backward pass.
+pub struct BwdResult {
+    /// Aligned with `def.layers`; `Some` only for trainable layers.
+    pub grads: Vec<Option<LayerGrads>>,
+}
+
+/// Mask provider interface implemented by the dynamic sparse update
+/// controller (`train::sparse`). `None` = update everything.
+pub trait MaskProvider {
+    fn mask(&mut self, layer: usize, structure_norms: &[f32]) -> Option<Vec<bool>>;
+}
+
+/// The always-dense provider (λ_min = λ_max = 1).
+pub struct DenseUpdates;
+
+impl MaskProvider for DenseUpdates {
+    fn mask(&mut self, _layer: usize, _norms: &[f32]) -> Option<Vec<bool>> {
+        None
+    }
+}
+
+/// A deployed model: the exact state the MCU holds in RAM/Flash.
+pub struct NativeModel {
+    pub def: ModelDef,
+    pub cfg: DnnConfig,
+    pub prec: Vec<Precision>,
+    pub params: Vec<LayerParams>,
+    pub input_qp: QParams,
+    pub act_qp: Vec<QParams>,
+    pub err_obs: Vec<MinMaxObserver>,
+}
+
+impl NativeModel {
+    /// Deploy: quantize float master weights per the configuration, using
+    /// PTQ calibration ranges for activations.
+    pub fn build(def: ModelDef, cfg: DnnConfig, fp: &FloatParams, calib: &Calibration) -> Self {
+        let prec = def.precisions(cfg);
+        let params = def
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| match (&fp.layers[i], prec[i]) {
+                (Some((w, b)), Precision::Uint8) if l.has_weights() => {
+                    LayerParams::Q { w: QTensor::quantize(w), bias: b.clone() }
+                }
+                (Some((w, b)), _) if l.has_weights() => {
+                    LayerParams::F { w: w.clone(), bias: b.clone() }
+                }
+                _ => LayerParams::None,
+            })
+            .collect();
+        let err_obs = def.layers.iter().map(|_| MinMaxObserver::online()).collect();
+        NativeModel {
+            prec,
+            params,
+            input_qp: calib.input_qp,
+            act_qp: calib.act_qp.clone(),
+            err_obs,
+            def,
+            cfg,
+        }
+    }
+
+    /// Re-randomize the trainable layers (§IV-A: "we set the last five
+    /// layers of each DNN to random values, thereby resetting its
+    /// classification capabilities").
+    pub fn reset_trainable(&mut self, rng: &mut Pcg32) {
+        for i in 0..self.def.layers.len() {
+            if !self.def.layers[i].trainable {
+                continue;
+            }
+            if let Some((w, b)) = init_layer(&self.def.layers[i], rng) {
+                self.params[i] = match self.prec[i] {
+                    Precision::Uint8 => LayerParams::Q { w: QTensor::quantize(&w), bias: b },
+                    Precision::Float32 => LayerParams::F { w, bias: b },
+                };
+            }
+        }
+    }
+
+    /// Extract float masters (only valid for `Float32` models; used to pull
+    /// pretrained weights out for deployment under other configs).
+    pub fn to_float_params(&self) -> FloatParams {
+        let layers = self
+            .params
+            .iter()
+            .map(|p| match p {
+                LayerParams::F { w, bias } => Some((w.clone(), bias.clone())),
+                LayerParams::Q { w, bias } => Some((w.dequantize(), bias.clone())),
+                LayerParams::None => None,
+            })
+            .collect();
+        FloatParams { layers }
+    }
+
+    /// Quantization parameters of the input to layer `i`.
+    fn in_qp(&self, i: usize) -> QParams {
+        if i == 0 {
+            self.input_qp
+        } else {
+            // pools/flatten pass qparams through
+            let mut j = i;
+            while j > 0 {
+                j -= 1;
+                match self.def.layers[j].kind {
+                    LayerKind::Conv { .. } | LayerKind::Linear { .. } | LayerKind::GlobalAvgPool => {
+                        return self.act_qp[j]
+                    }
+                    _ => {}
+                }
+            }
+            self.input_qp
+        }
+    }
+
+    /// Forward pass for one sample. Works for plain inference too (drop the
+    /// trace): the paper's zero-downtime property — training shares the
+    /// inference representation byte-for-byte.
+    pub fn forward(&self, x: &TensorF32, ops: &mut OpCounter) -> FwdTrace {
+        let n = self.def.layers.len();
+        let mut acts: Vec<Act> = Vec::with_capacity(n);
+        let mut argmax: Vec<Option<Vec<u32>>> = vec![None; n];
+
+        let input = match self.prec[0] {
+            Precision::Uint8 => Act::Q(QTensor::quantize_with(x, self.input_qp)),
+            Precision::Float32 => Act::F(x.clone()),
+        };
+
+        let mut cur = input.clone();
+        for (i, l) in self.def.layers.iter().enumerate() {
+            // coerce the running activation into this layer's precision
+            cur = match (self.prec[i], cur) {
+                (Precision::Uint8, Act::F(t)) => {
+                    Act::Q(QTensor::quantize_with(&t, self.in_qp(i)))
+                }
+                (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
+                (_, c) => c,
+            };
+            cur = match (&l.kind, &cur) {
+                (LayerKind::Conv { geom, relu }, Act::Q(xq)) => {
+                    let (w, bias) = match &self.params[i] {
+                        LayerParams::Q { w, bias } => (w, bias),
+                        _ => panic!("layer {i} expected quantized params"),
+                    };
+                    let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                    Act::Q(qconv::qconv2d_fwd(xq, w, &bq, geom, self.act_qp[i], *relu, ops))
+                }
+                (LayerKind::Conv { geom, relu }, Act::F(xf)) => {
+                    let (w, bias) = match &self.params[i] {
+                        LayerParams::F { w, bias } => (w, bias),
+                        _ => panic!("layer {i} expected float params"),
+                    };
+                    Act::F(fconv::fconv2d_fwd(xf, w, bias, geom, *relu, ops))
+                }
+                (LayerKind::Linear { relu, .. }, Act::Q(xq)) => {
+                    let (w, bias) = match &self.params[i] {
+                        LayerParams::Q { w, bias } => (w, bias),
+                        _ => panic!("layer {i} expected quantized params"),
+                    };
+                    let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                    Act::Q(qlinear::qlinear_fwd(xq, w, &bq, self.act_qp[i], *relu, ops))
+                }
+                (LayerKind::Linear { relu, .. }, Act::F(xf)) => {
+                    let (w, bias) = match &self.params[i] {
+                        LayerParams::F { w, bias } => (w, bias),
+                        _ => panic!("layer {i} expected float params"),
+                    };
+                    Act::F(flinear::flinear_fwd(xf, w, bias, *relu, ops))
+                }
+                (LayerKind::MaxPool { k }, Act::Q(xq)) => {
+                    let o = pool::qmaxpool_fwd(xq, *k, ops);
+                    argmax[i] = Some(o.argmax);
+                    Act::Q(o.y)
+                }
+                (LayerKind::MaxPool { k }, Act::F(xf)) => {
+                    let o = pool::fmaxpool_fwd(xf, *k, ops);
+                    argmax[i] = Some(o.argmax);
+                    Act::F(o.y)
+                }
+                (LayerKind::GlobalAvgPool, Act::Q(xq)) => {
+                    Act::Q(pool::qgap_fwd(xq, self.act_qp[i], ops))
+                }
+                (LayerKind::GlobalAvgPool, Act::F(xf)) => Act::F(pool::fgap_fwd(xf, ops)),
+                (LayerKind::Flatten, a) => {
+                    let flat: usize = a.shape().iter().product();
+                    a.reshaped(&[flat])
+                }
+            };
+            acts.push(cur.clone());
+        }
+
+        let logits = acts.last().unwrap().to_float().into_vec();
+        FwdTrace { input, acts, argmax, logits }
+    }
+
+    /// Training-path forward: run the regular forward pass, then let the
+    /// activation ranges of *trainable* quantized layers follow the drifting
+    /// activation distribution. Training moves weight distributions (which
+    /// Eqs. 5–7 track), which in turn moves the activations they produce;
+    /// with ranges frozen at PTQ calibration the logits saturate and
+    /// training stalls — the failure mode the paper attributes to "the
+    /// quantization of tensors in the last layers" (§IV-A). The adaptation
+    /// rule mirrors Eqs. 6–7: when >1 % of a trainable layer's output
+    /// saturates the uint8 range, widen its range 25 % (upper end only for
+    /// folded-ReLU layers, whose lower bound is pinned at the zero point).
+    pub fn forward_adapt(&mut self, x: &TensorF32, ops: &mut OpCounter) -> FwdTrace {
+        let trace = self.forward(x, ops);
+        for (i, l) in self.def.layers.iter().enumerate() {
+            if !l.trainable || self.prec[i] != Precision::Uint8 {
+                continue;
+            }
+            let relu = matches!(
+                l.kind,
+                LayerKind::Conv { relu: true, .. } | LayerKind::Linear { relu: true, .. }
+            );
+            if let Act::Q(t) = &trace.acts[i] {
+                let n = t.len().max(1);
+                let sat_hi = t.values.data().iter().filter(|&&v| v == 255).count();
+                let sat_lo = if relu {
+                    0
+                } else {
+                    t.values.data().iter().filter(|&&v| v == 0).count()
+                };
+                ops.int_ops += n as u64;
+                if (sat_hi + sat_lo) * 100 > n {
+                    let qp = self.act_qp[i];
+                    let lo = (0 - qp.zero_point) as f32 * qp.scale;
+                    let hi = (255 - qp.zero_point) as f32 * qp.scale;
+                    let (nlo, nhi) = if relu {
+                        (lo, hi * 1.25)
+                    } else {
+                        let span = hi - lo;
+                        (lo - 0.25 * span, hi + 0.25 * span)
+                    };
+                    self.act_qp[i] = QParams::from_min_max(nlo, nhi);
+                }
+            }
+        }
+        trace
+    }
+
+    /// One full training-sample pass: forward (with activation-range
+    /// adaptation), loss, backward. Returns the loss, the predicted class
+    /// and the per-layer gradients.
+    pub fn train_sample(
+        &mut self,
+        x: &TensorF32,
+        label: usize,
+        masks: &mut dyn MaskProvider,
+        ops: &mut OpCounter,
+    ) -> (f32, usize, BwdResult) {
+        let trace = self.forward_adapt(x, ops);
+        let (loss, probs, err_f) = softmax::softmax_ce(&trace.logits, label, ops);
+        let pred = softmax::predict(&probs);
+        let bwd = self.backward(&trace, err_f, masks, ops);
+        (loss, pred, bwd)
+    }
+
+    /// Backward pass from a float head error (`softmax − onehot`). Walks
+    /// layers in reverse down to the earliest trainable layer; error
+    /// tensors are quantized per layer precision; ReLU masking uses the
+    /// saved forward outputs; pool routing uses the saved argmaxes.
+    pub fn backward(
+        &mut self,
+        trace: &FwdTrace,
+        head_err: TensorF32,
+        masks: &mut dyn MaskProvider,
+        ops: &mut OpCounter,
+    ) -> BwdResult {
+        let n = self.def.layers.len();
+        let stop = self.def.first_trainable().unwrap_or(n);
+        let mut grads: Vec<Option<LayerGrads>> = (0..n).map(|_| None).collect();
+
+        // Error w.r.t. the output of layer `i`, in layer i's precision.
+        let mut err: Act = match self.prec[n - 1] {
+            Precision::Float32 => Act::F(head_err),
+            Precision::Uint8 => {
+                let obs = &mut self.err_obs[n - 1];
+                obs.observe(head_err.data());
+                Act::Q(QTensor::quantize_with(&head_err, obs.qparams()))
+            }
+        };
+
+        for i in (stop..n).rev() {
+            let l = self.def.layers[i].clone();
+            // Coerce error into this layer's precision (mixed boundary).
+            err = match (self.prec[i], err) {
+                (Precision::Uint8, Act::F(t)) => {
+                    let obs = &mut self.err_obs[i];
+                    obs.observe(t.data());
+                    Act::Q(QTensor::quantize_with(&t, obs.qparams()))
+                }
+                (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
+                (_, e) => e,
+            };
+
+            let layer_in: Act = if i == 0 { trace.input.clone() } else { trace.acts[i - 1].clone() };
+            // Input act coerced to this layer's precision (as in forward).
+            let layer_in = match (self.prec[i], layer_in) {
+                (Precision::Uint8, Act::F(t)) => Act::Q(QTensor::quantize_with(&t, self.in_qp(i))),
+                (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
+                (_, a) => a,
+            };
+
+            match (&l.kind, &mut err) {
+                (LayerKind::Conv { geom, relu }, e) => {
+                    let keep = if l.trainable {
+                        let norms = structure_norms(e);
+                        masks.mask(i, &norms)
+                    } else {
+                        None
+                    };
+                    match e {
+                        Act::Q(eq) => {
+                            if *relu {
+                                if let Act::Q(y) = &trace.acts[i] {
+                                    qconv::relu_bwd_mask_q(eq, y, ops);
+                                }
+                            }
+                            let (w, _) = match &self.params[i] {
+                                LayerParams::Q { w, bias } => (w, bias),
+                                _ => unreachable!(),
+                            };
+                            let xq = match &layer_in {
+                                Act::Q(x) => x,
+                                _ => unreachable!(),
+                            };
+                            if l.trainable {
+                                let (gw, gb) =
+                                    qconv::qconv2d_bwd_weight(eq, xq, geom, keep.as_deref(), ops);
+                                let total = geom.cout;
+                                let kept =
+                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
+                                        .unwrap_or(total);
+                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                            }
+                            if i > stop {
+                                let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
+                                let prev_obs = &mut self.err_obs[i - 1];
+                                let out_qp = propagate_qp(prev_obs, eq, ops);
+                                err = Act::Q(qconv::qconv2d_bwd_input(
+                                    eq, w, geom, h, w_in, out_qp, keep.as_deref(), ops,
+                                ));
+                                observe_saturation(&mut self.err_obs[i - 1], &err);
+                            }
+                        }
+                        Act::F(ef) => {
+                            if *relu {
+                                if let Act::F(y) = &trace.acts[i] {
+                                    fconv::relu_bwd_mask_f(ef, y, ops);
+                                }
+                            }
+                            let (w, _) = match &self.params[i] {
+                                LayerParams::F { w, bias } => (w, bias),
+                                _ => unreachable!(),
+                            };
+                            let xf = match &layer_in {
+                                Act::F(x) => x,
+                                _ => unreachable!(),
+                            };
+                            if l.trainable {
+                                let (gw, gb) =
+                                    fconv::fconv2d_bwd_weight(ef, xf, geom, keep.as_deref(), ops);
+                                let total = geom.cout;
+                                let kept =
+                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
+                                        .unwrap_or(total);
+                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                            }
+                            if i > stop {
+                                let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
+                                err = Act::F(fconv::fconv2d_bwd_input(
+                                    ef, w, geom, h, w_in, keep.as_deref(), ops,
+                                ));
+                            }
+                        }
+                    }
+                }
+                (LayerKind::Linear { .. }, e) => {
+                    let relu = matches!(l.kind, LayerKind::Linear { relu: true, .. });
+                    let keep = if l.trainable {
+                        let norms = structure_norms(e);
+                        masks.mask(i, &norms)
+                    } else {
+                        None
+                    };
+                    match e {
+                        Act::Q(eq) => {
+                            if relu {
+                                if let Act::Q(y) = &trace.acts[i] {
+                                    qconv::relu_bwd_mask_q(eq, y, ops);
+                                }
+                            }
+                            let (w, _) = match &self.params[i] {
+                                LayerParams::Q { w, bias } => (w, bias),
+                                _ => unreachable!(),
+                            };
+                            let xq = match &layer_in {
+                                Act::Q(x) => x,
+                                _ => unreachable!(),
+                            };
+                            if l.trainable {
+                                let (gw, gb) =
+                                    qlinear::qlinear_bwd_weight(eq, xq, keep.as_deref(), ops);
+                                let total = eq.len();
+                                let kept =
+                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
+                                        .unwrap_or(total);
+                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                            }
+                            if i > stop {
+                                let prev_obs = &mut self.err_obs[i - 1];
+                                let out_qp = propagate_qp(prev_obs, eq, ops);
+                                err = Act::Q(qlinear::qlinear_bwd_input(
+                                    eq, w, out_qp, keep.as_deref(), ops,
+                                ));
+                                observe_saturation(&mut self.err_obs[i - 1], &err);
+                            }
+                        }
+                        Act::F(ef) => {
+                            if relu {
+                                if let Act::F(y) = &trace.acts[i] {
+                                    fconv::relu_bwd_mask_f(ef, y, ops);
+                                }
+                            }
+                            let (w, _) = match &self.params[i] {
+                                LayerParams::F { w, bias } => (w, bias),
+                                _ => unreachable!(),
+                            };
+                            let xf = match &layer_in {
+                                Act::F(x) => x,
+                                _ => unreachable!(),
+                            };
+                            if l.trainable {
+                                let (gw, gb) =
+                                    flinear::flinear_bwd_weight(ef, xf, keep.as_deref(), ops);
+                                let total = ef.len();
+                                let kept =
+                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
+                                        .unwrap_or(total);
+                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                            }
+                            if i > stop {
+                                err = Act::F(flinear::flinear_bwd_input(
+                                    ef, w, keep.as_deref(), ops,
+                                ));
+                            }
+                        }
+                    }
+                }
+                (LayerKind::MaxPool { .. }, e) => {
+                    if i > stop {
+                        let am = trace.argmax[i].as_ref().expect("pool argmax");
+                        err = match e {
+                            Act::Q(eq) => {
+                                Act::Q(pool::qmaxpool_bwd(eq, am, &layer_in.shape().to_vec(), ops))
+                            }
+                            Act::F(ef) => {
+                                Act::F(pool::fmaxpool_bwd(ef, am, &layer_in.shape().to_vec(), ops))
+                            }
+                        };
+                    }
+                }
+                (LayerKind::GlobalAvgPool, e) => {
+                    if i > stop {
+                        err = match e {
+                            Act::Q(eq) => {
+                                let prev_obs = &mut self.err_obs[i - 1];
+                                let out_qp = propagate_qp(prev_obs, eq, ops);
+                                Act::Q(pool::qgap_bwd(eq, &layer_in.shape().to_vec(), out_qp, ops))
+                            }
+                            Act::F(ef) => {
+                                Act::F(pool::fgap_bwd(ef, &layer_in.shape().to_vec(), ops))
+                            }
+                        };
+                    }
+                }
+                (LayerKind::Flatten, e) => {
+                    if i > stop {
+                        err = e.reshaped(&layer_in.shape().to_vec());
+                    }
+                }
+            }
+        }
+
+        BwdResult { grads }
+    }
+
+    /// Plain inference: predicted class for one sample.
+    pub fn predict(&self, x: &TensorF32, ops: &mut OpCounter) -> usize {
+        let t = self.forward(x, ops);
+        softmax::predict(&t.logits)
+    }
+
+    /// Test-set accuracy.
+    pub fn evaluate(&self, xs: &[TensorF32], ys: &[usize]) -> f32 {
+        let mut ops = OpCounter::new();
+        let correct = xs
+            .iter()
+            .zip(ys)
+            .filter(|(x, &y)| self.predict(x, &mut ops) == y)
+            .count();
+        correct as f32 / xs.len().max(1) as f32
+    }
+}
+
+/// L1 norm of the error per structure (outer dimension: out-channels for
+/// conv, rows for linear) — the §III-B ranking heuristic, computed on the
+/// dequantized magnitudes.
+pub fn structure_norms(e: &Act) -> Vec<f32> {
+    match e {
+        Act::Q(t) => {
+            let z = t.qp.zero_point;
+            let s = t.qp.scale;
+            (0..t.values.outer_dim())
+                .map(|c| {
+                    t.values.outer(c).iter().map(|&q| ((q as i32 - z).abs() as f32) * s).sum()
+                })
+                .collect()
+        }
+        Act::F(t) => (0..t.outer_dim()).map(|c| crate::util::stats::l1(t.outer(c))).collect(),
+    }
+}
+
+/// Error-observer update when the float-space error is not directly
+/// available (fully quantized path): use the incoming error's dequantized
+/// range as the proposal for the next layer's range; the saturation check
+/// afterwards widens it if the requantized result clips.
+fn propagate_qp(obs: &mut MinMaxObserver, incoming: &QTensor, _ops: &mut OpCounter) -> QParams {
+    if !obs.has_observed() {
+        // bootstrap from the incoming error's range
+        let lo = (0 - incoming.qp.zero_point) as f32 * incoming.qp.scale;
+        let hi = (255 - incoming.qp.zero_point) as f32 * incoming.qp.scale;
+        obs.observe_range(lo, hi);
+    }
+    obs.qparams()
+}
+
+/// Post-hoc range widening: if a noticeable fraction of the requantized
+/// error saturates the uint8 range, widen the observer so subsequent
+/// samples get more headroom (online analogue of Eqs. 6–7 for errors).
+fn observe_saturation(obs: &mut MinMaxObserver, e: &Act) {
+    if let Act::Q(t) = e {
+        let n = t.len().max(1);
+        let sat = t.values.data().iter().filter(|&&v| v == 0 || v == 255).count();
+        let (lo, hi) = match obs.range() {
+            Some(r) => r,
+            None => return,
+        };
+        if sat * 200 > n {
+            // >0.5% saturated: widen by 25%
+            obs.observe_range(lo * 1.25, hi * 1.25);
+        } else {
+            // follow the actual occupied range so scales can also shrink
+            let deq = t.dequantize();
+            let (dlo, dhi) = crate::util::stats::min_max(deq.data());
+            obs.observe_range(dlo, dhi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn toy_data(rng: &mut Pcg32, n: usize, shape: &[usize], classes: usize) -> (Vec<TensorF32>, Vec<usize>) {
+        // Two-class-separable synthetic data: class k biases channel mean.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let y = i % classes;
+            let mut x = TensorF32::zeros(shape);
+            rng.fill_normal(x.data_mut(), 0.5);
+            for v in x.data_mut().iter_mut() {
+                *v += y as f32 * 0.8;
+            }
+            xs.push(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    fn deployed(cfg: DnnConfig, seed: u64) -> (NativeModel, Vec<TensorF32>, Vec<usize>) {
+        let mut rng = Pcg32::seeded(seed);
+        let def = models::mnist_cnn(&[1, 12, 12], 3);
+        let fp = FloatParams::init(&def, &mut rng);
+        let (xs, ys) = toy_data(&mut rng, 12, &[1, 12, 12], 3);
+        let calib = calibrate(&def, &fp, &xs[..4]);
+        (NativeModel::build(def, cfg, &fp, &calib), xs, ys)
+    }
+
+    #[test]
+    fn forward_shapes_all_configs() {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let (m, xs, _) = deployed(cfg, 61);
+            let mut ops = OpCounter::new();
+            let t = m.forward(&xs[0], &mut ops);
+            assert_eq!(t.logits.len(), 3, "{cfg:?}");
+            assert_eq!(t.acts.len(), m.def.layers.len());
+            assert!(ops.total_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn quantized_forward_tracks_float_forward() {
+        let (mq, xs, _) = deployed(DnnConfig::Uint8, 62);
+        let (mf, _, _) = deployed(DnnConfig::Float32, 62);
+        let mut ops = OpCounter::new();
+        // identical float masters (same seed) -> logits should correlate
+        let lq = mq.forward(&xs[0], &mut ops).logits;
+        let lf = mf.forward(&xs[0], &mut ops).logits;
+        // rank agreement on the toy problem is enough (quantization noise)
+        let aq = crate::util::stats::argmax(&lq);
+        let af = crate::util::stats::argmax(&lf);
+        assert_eq!(aq, af, "lq={lq:?} lf={lf:?}");
+    }
+
+    #[test]
+    fn uint8_uses_integer_macs_float_uses_float_macs() {
+        let (mq, xs, _) = deployed(DnnConfig::Uint8, 63);
+        let mut ops = OpCounter::new();
+        mq.forward(&xs[0], &mut ops);
+        assert!(ops.int_macs > 0);
+        assert_eq!(ops.float_macs, 0);
+
+        let (mf, _, _) = deployed(DnnConfig::Float32, 63);
+        let mut ops2 = OpCounter::new();
+        mf.forward(&xs[0], &mut ops2);
+        assert!(ops2.float_macs > 0);
+        assert_eq!(ops2.int_macs, 0);
+    }
+
+    #[test]
+    fn mixed_config_crosses_boundary_once() {
+        let (m, xs, _) = deployed(DnnConfig::Mixed, 64);
+        let mut ops = OpCounter::new();
+        let t = m.forward(&xs[0], &mut ops);
+        // feature extractor quantized, head float
+        assert!(matches!(t.acts[0], Act::Q(_)));
+        assert!(matches!(t.acts.last().unwrap(), Act::F(_)));
+        assert!(ops.int_macs > 0 && ops.float_macs > 0);
+    }
+
+    #[test]
+    fn backward_produces_grads_for_trainable_layers_only() {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let (mut m, xs, ys) = deployed(cfg, 65);
+            let mut ops = OpCounter::new();
+            let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
+            for (i, l) in m.def.layers.iter().enumerate() {
+                assert_eq!(bwd.grads[i].is_some(), l.trainable, "layer {i} {cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_shapes_match_weights() {
+        let (mut m, xs, ys) = deployed(DnnConfig::Uint8, 66);
+        let mut ops = OpCounter::new();
+        let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
+        for (i, g) in bwd.grads.iter().enumerate() {
+            if let Some(g) = g {
+                match &m.params[i] {
+                    LayerParams::Q { w, bias } => {
+                        assert_eq!(g.gw.shape(), w.shape());
+                        assert_eq!(g.gb.len(), bias.len());
+                    }
+                    LayerParams::F { w, bias } => {
+                        assert_eq!(g.gw.shape(), w.shape());
+                        assert_eq!(g.gb.len(), bias.len());
+                    }
+                    LayerParams::None => panic!("grads on weightless layer"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_mode_stops_backprop_early() {
+        let mut rng = Pcg32::seeded(67);
+        let mut def = models::mnist_cnn(&[1, 12, 12], 3);
+        def.set_trainable_tail(2); // only the two linear layers
+        let fp = FloatParams::init(&def, &mut rng);
+        let (xs, ys) = toy_data(&mut rng, 6, &[1, 12, 12], 3);
+        let calib = calibrate(&def, &fp, &xs[..2]);
+        let mut m = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
+
+        let mut ops_full = OpCounter::new();
+        let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops_full);
+        assert!(bwd.grads[0].is_none());
+        assert!(bwd.grads[4].is_some() && bwd.grads[5].is_some());
+
+        // transfer-learning bwd must be cheaper than fwd (Fig. 4b property)
+        let mut ops_fwd = OpCounter::new();
+        m.forward(&xs[0], &mut ops_fwd);
+        let bwd_macs = ops_full.total_macs().saturating_sub(ops_fwd.total_macs());
+        assert!(
+            bwd_macs < ops_fwd.total_macs(),
+            "bwd={} fwd={}",
+            bwd_macs,
+            ops_fwd.total_macs()
+        );
+    }
+
+    #[test]
+    fn structure_norms_match_dequantized_l1() {
+        let t = TensorF32::from_vec(&[2, 2], vec![1.0, -1.0, 0.5, 0.25]);
+        let nf = structure_norms(&Act::F(t.clone()));
+        assert!((nf[0] - 2.0).abs() < 1e-6);
+        assert!((nf[1] - 0.75).abs() < 1e-6);
+        let q = QTensor::quantize(&t);
+        let nq = structure_norms(&Act::Q(q));
+        assert!((nq[0] - 2.0).abs() < 0.1);
+        assert!((nq[1] - 0.75).abs() < 0.1);
+    }
+
+    /// A few FQT steps on the toy problem must reduce the loss — the
+    /// integration smoke test of the whole fwd/bwd stack (full training is
+    /// exercised by `train::` and the benches).
+    #[test]
+    fn quantized_training_reduces_loss_smoke() {
+        use crate::train::Optimizer;
+        let (mut m, xs, ys) = deployed(DnnConfig::Uint8, 68);
+        let mut opt = crate::train::fqt::FqtSgd::new(&m, 0.01, 4);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        let mut ops = OpCounter::new();
+        for epoch in 0..12 {
+            let mut tot = 0.0;
+            for (x, &y) in xs.iter().zip(ys.iter()) {
+                let (loss, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
+                opt.accumulate(&mut m, &bwd, &mut ops);
+                tot += loss;
+            }
+            if epoch == 0 {
+                first = tot;
+            }
+            last = tot;
+        }
+        assert!(last < first * 0.9, "loss did not drop: first={first} last={last}");
+    }
+}

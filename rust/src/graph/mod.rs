@@ -1,0 +1,425 @@
+//! Model graphs: layer definitions, shape / parameter / MAC inference, and
+//! the builders for the three architectures of the evaluation:
+//!
+//!  * [`models::mnist_cnn`] — the full-on-device-training network of §IV-D
+//!    (2 conv + maxpool + 2 linear, ReLU and folded BatchNorm throughout);
+//!  * [`models::mbednet`] — the paper's MobileNetV3-derived *MbedNet*
+//!    (§IV-A), a depthwise-separable stack scaled for MCU budgets, with
+//!    compact final layers (the property Fig. 4b/9 hinges on);
+//!  * [`models::mcunet5fps`] — an MCUNet-5FPS stand-in matched to the
+//!    paper's reported ~23 M MACs / 0.48 M params with *large* final
+//!    blocks (Tab. IV / Fig. 9 comparator).
+//!
+//! BatchNorm is folded into the preceding conv/linear at deployment (the
+//! paper's monolithic QConv block, Fig. 2b), so it never appears as a graph
+//! node.
+
+pub mod exec;
+pub mod models;
+
+use crate::kernels::ConvGeom;
+
+/// One layer of a sequential model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// Folded conv (+bias +optional ReLU). Quantized or float depending on
+    /// the DNN configuration.
+    Conv { geom: ConvGeom, relu: bool },
+    /// Fully connected (+bias +optional ReLU).
+    Linear { n_in: usize, n_out: usize, relu: bool },
+    /// Square max pool, window == stride == `k`.
+    MaxPool { k: usize },
+    /// Global average pool `[C,H,W] -> [C]`.
+    GlobalAvgPool,
+    /// `[C,H,W] -> [C·H·W]`.
+    Flatten,
+}
+
+/// A named layer plus its training attributes.
+#[derive(Clone, Debug)]
+pub struct LayerDef {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Whether this layer's weights are updated on-device. Non-trainable
+    /// weights live in Flash; trainable ones in RAM (§IV-A).
+    pub trainable: bool,
+}
+
+impl LayerDef {
+    pub fn has_weights(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Linear { .. })
+    }
+}
+
+/// Per-layer precision under a DNN configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Uint8,
+    Float32,
+}
+
+/// The three DNN configurations of the evaluation (§IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DnnConfig {
+    /// Fully quantized (FQT).
+    Uint8,
+    /// Quantized feature extractor, float classification head.
+    Mixed,
+    /// Full float reference.
+    Float32,
+}
+
+impl DnnConfig {
+    pub fn parse(s: &str) -> Option<DnnConfig> {
+        match s {
+            "uint8" => Some(DnnConfig::Uint8),
+            "mixed" => Some(DnnConfig::Mixed),
+            "float32" | "float" => Some(DnnConfig::Float32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DnnConfig::Uint8 => "uint8",
+            DnnConfig::Mixed => "mixed",
+            DnnConfig::Float32 => "float32",
+        }
+    }
+}
+
+/// A sequential model definition.
+#[derive(Clone, Debug)]
+pub struct ModelDef {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub layers: Vec<LayerDef>,
+}
+
+impl ModelDef {
+    /// Output shape of every layer (index i = output of layer i).
+    pub fn shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes = Vec::with_capacity(self.layers.len());
+        let mut cur = self.input_shape.clone();
+        for l in &self.layers {
+            cur = match &l.kind {
+                LayerKind::Conv { geom, .. } => {
+                    assert_eq!(cur.len(), 3, "conv input must be [C,H,W] ({})", l.name);
+                    assert_eq!(cur[0], geom.cin, "channel mismatch at {}", l.name);
+                    let (oh, ow) = geom.out_hw(cur[1], cur[2]);
+                    vec![geom.cout, oh, ow]
+                }
+                LayerKind::Linear { n_in, n_out, .. } => {
+                    let flat: usize = cur.iter().product();
+                    assert_eq!(flat, *n_in, "linear input mismatch at {}", l.name);
+                    vec![*n_out]
+                }
+                LayerKind::MaxPool { k } => {
+                    let kh = (*k).min(cur[1]).max(1);
+                    let kw = (*k).min(cur[2]).max(1);
+                    vec![cur[0], cur[1] / kh, cur[2] / kw]
+                }
+                LayerKind::GlobalAvgPool => vec![cur[0]],
+                LayerKind::Flatten => vec![cur.iter().product()],
+            };
+            shapes.push(cur.clone());
+        }
+        shapes
+    }
+
+    /// Input shape of layer `i`.
+    pub fn in_shape(&self, i: usize) -> Vec<usize> {
+        if i == 0 {
+            self.input_shape.clone()
+        } else {
+            self.shapes()[i - 1].clone()
+        }
+    }
+
+    /// Weight + bias parameter count per layer.
+    pub fn params_per_layer(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .map(|l| match &l.kind {
+                LayerKind::Conv { geom, .. } => geom.weights() + geom.cout,
+                LayerKind::Linear { n_in, n_out, .. } => n_in * n_out + n_out,
+                _ => 0,
+            })
+            .collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params_per_layer().iter().sum()
+    }
+
+    /// Forward MACs per layer for one sample.
+    pub fn fwd_macs_per_layer(&self) -> Vec<u64> {
+        let mut macs = Vec::with_capacity(self.layers.len());
+        let mut cur = self.input_shape.clone();
+        for l in &self.layers {
+            let m = match &l.kind {
+                LayerKind::Conv { geom, .. } => geom.fwd_macs(cur[1], cur[2]),
+                LayerKind::Linear { n_in, n_out, .. } => (*n_in * *n_out) as u64,
+                _ => 0,
+            };
+            macs.push(m);
+            cur = match &l.kind {
+                LayerKind::Conv { geom, .. } => {
+                    let (oh, ow) = geom.out_hw(cur[1], cur[2]);
+                    vec![geom.cout, oh, ow]
+                }
+                LayerKind::Linear { n_out, .. } => vec![*n_out],
+                LayerKind::MaxPool { k } => {
+                    let kh = (*k).min(cur[1]).max(1);
+                    let kw = (*k).min(cur[2]).max(1);
+                    vec![cur[0], cur[1] / kh, cur[2] / kw]
+                }
+                LayerKind::GlobalAvgPool => vec![cur[0]],
+                LayerKind::Flatten => vec![cur.iter().product()],
+            };
+        }
+        macs
+    }
+
+    pub fn total_fwd_macs(&self) -> u64 {
+        self.fwd_macs_per_layer().iter().sum()
+    }
+
+    /// Index of the earliest trainable layer (BP stops there).
+    pub fn first_trainable(&self) -> Option<usize> {
+        self.layers.iter().position(|l| l.trainable)
+    }
+
+    /// Mark only the last `n` weighted layers trainable (transfer learning,
+    /// §IV-A "we set the last five layers to random values").
+    pub fn set_trainable_tail(&mut self, n: usize) {
+        let mut remaining = n;
+        for l in self.layers.iter_mut().rev() {
+            if l.has_weights() {
+                l.trainable = remaining > 0;
+                if remaining > 0 {
+                    remaining -= 1;
+                }
+            } else {
+                l.trainable = false;
+            }
+        }
+    }
+
+    /// Mark every weighted layer trainable (full on-device training, §IV-D).
+    pub fn set_all_trainable(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.trainable = l.has_weights();
+        }
+    }
+
+    /// Per-layer precision under a configuration: `Mixed` keeps the
+    /// classification head (the trailing Linear layers) in float.
+    pub fn precisions(&self, cfg: DnnConfig) -> Vec<Precision> {
+        match cfg {
+            DnnConfig::Uint8 => vec![Precision::Uint8; self.layers.len()],
+            DnnConfig::Float32 => vec![Precision::Float32; self.layers.len()],
+            DnnConfig::Mixed => {
+                // Head = the contiguous trailing run of Linear/Flatten/GAP
+                // layers; the feature extractor (everything through the last
+                // conv/pool over spatial maps) stays quantized.
+                let mut prec = vec![Precision::Uint8; self.layers.len()];
+                let last_conv = self
+                    .layers
+                    .iter()
+                    .rposition(|l| matches!(l.kind, LayerKind::Conv { .. }))
+                    .map(|i| i as isize)
+                    .unwrap_or(-1);
+                for (i, p) in prec.iter_mut().enumerate() {
+                    if (i as isize) > last_conv {
+                        *p = Precision::Float32;
+                    }
+                }
+                prec
+            }
+        }
+    }
+
+    /// Count of weighted layers.
+    pub fn weighted_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.has_weights()).count()
+    }
+}
+
+/// Helper for building sequential models.
+pub struct ModelBuilder {
+    def: ModelDef,
+    cur: Vec<usize>,
+    n: usize,
+}
+
+impl ModelBuilder {
+    pub fn new(name: &str, input_shape: &[usize], num_classes: usize) -> Self {
+        ModelBuilder {
+            def: ModelDef {
+                name: name.to_string(),
+                input_shape: input_shape.to_vec(),
+                num_classes,
+                layers: Vec::new(),
+            },
+            cur: input_shape.to_vec(),
+            n: 0,
+        }
+    }
+
+    fn push(&mut self, kind: LayerKind, tag: &str) -> &mut Self {
+        let name = format!("{}{}_{}", tag, self.n, self.def.name);
+        self.n += 1;
+        self.cur = match &kind {
+            LayerKind::Conv { geom, .. } => {
+                let (oh, ow) = geom.out_hw(self.cur[1], self.cur[2]);
+                vec![geom.cout, oh, ow]
+            }
+            LayerKind::Linear { n_out, .. } => vec![*n_out],
+            LayerKind::MaxPool { k } => {
+                let kh = (*k).min(self.cur[1]).max(1);
+                let kw = (*k).min(self.cur[2]).max(1);
+                vec![self.cur[0], self.cur[1] / kh, self.cur[2] / kw]
+            }
+            LayerKind::GlobalAvgPool => vec![self.cur[0]],
+            LayerKind::Flatten => vec![self.cur.iter().product()],
+        };
+        self.def.layers.push(LayerDef { name, kind, trainable: false });
+        self
+    }
+
+    pub fn conv(&mut self, cout: usize, k: usize, stride: usize, relu: bool) -> &mut Self {
+        let geom = ConvGeom {
+            cin: self.cur[0],
+            cout,
+            kh: if self.cur[1] == 1 { 1 } else { k },
+            kw: k,
+            stride,
+            pad_h: if self.cur[1] == 1 { 0 } else { k / 2 },
+            pad_w: k / 2,
+            depthwise: false,
+        };
+        self.push(LayerKind::Conv { geom, relu }, "conv")
+    }
+
+    pub fn dwconv(&mut self, k: usize, stride: usize, relu: bool) -> &mut Self {
+        let c = self.cur[0];
+        let geom = ConvGeom {
+            cin: c,
+            cout: c,
+            kh: if self.cur[1] == 1 { 1 } else { k },
+            kw: k,
+            stride,
+            pad_h: if self.cur[1] == 1 { 0 } else { k / 2 },
+            pad_w: k / 2,
+            depthwise: true,
+        };
+        self.push(LayerKind::Conv { geom, relu }, "dwconv")
+    }
+
+    pub fn pwconv(&mut self, cout: usize, relu: bool) -> &mut Self {
+        let geom = ConvGeom {
+            cin: self.cur[0],
+            cout,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad_h: 0, pad_w: 0,
+            depthwise: false,
+        };
+        self.push(LayerKind::Conv { geom, relu }, "pwconv")
+    }
+
+    pub fn maxpool(&mut self, k: usize) -> &mut Self {
+        self.push(LayerKind::MaxPool { k }, "pool")
+    }
+
+    pub fn gap(&mut self) -> &mut Self {
+        self.push(LayerKind::GlobalAvgPool, "gap")
+    }
+
+    pub fn flatten(&mut self) -> &mut Self {
+        self.push(LayerKind::Flatten, "flat")
+    }
+
+    pub fn linear(&mut self, n_out: usize, relu: bool) -> &mut Self {
+        let n_in: usize = self.cur.iter().product();
+        assert_eq!(self.cur.len(), 1, "call flatten()/gap() before linear()");
+        self.push(LayerKind::Linear { n_in, n_out, relu }, "fc")
+    }
+
+    pub fn build(&self) -> ModelDef {
+        self.def.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelDef {
+        let mut b = ModelBuilder::new("tiny", &[1, 8, 8], 4);
+        b.conv(4, 3, 2, true).maxpool(2).flatten().linear(4, false);
+        b.build()
+    }
+
+    #[test]
+    fn shape_inference_chain() {
+        let m = tiny();
+        let shapes = m.shapes();
+        assert_eq!(shapes[0], vec![4, 4, 4]);
+        assert_eq!(shapes[1], vec![4, 2, 2]);
+        assert_eq!(shapes[2], vec![16]);
+        assert_eq!(shapes[3], vec![4]);
+    }
+
+    #[test]
+    fn params_and_macs() {
+        let m = tiny();
+        let p = m.params_per_layer();
+        assert_eq!(p[0], 4 * 1 * 9 + 4);
+        assert_eq!(p[3], 16 * 4 + 4);
+        let macs = m.fwd_macs_per_layer();
+        assert_eq!(macs[0], (4 * 4 * 4 * 9) as u64);
+        assert_eq!(macs[3], 64);
+    }
+
+    #[test]
+    fn trainable_tail_marks_weighted_layers_only() {
+        let mut m = tiny();
+        m.set_trainable_tail(1);
+        assert!(!m.layers[0].trainable);
+        assert!(m.layers[3].trainable);
+        assert_eq!(m.first_trainable(), Some(3));
+        m.set_all_trainable();
+        assert!(m.layers[0].trainable);
+        assert!(!m.layers[1].trainable); // pool has no weights
+    }
+
+    #[test]
+    fn mixed_precision_splits_at_last_conv() {
+        let m = tiny();
+        let prec = m.precisions(DnnConfig::Mixed);
+        assert_eq!(prec[0], Precision::Uint8);
+        assert_eq!(prec[1], Precision::Float32); // pool after last conv
+        assert_eq!(prec[3], Precision::Float32);
+        assert!(m.precisions(DnnConfig::Uint8).iter().all(|&p| p == Precision::Uint8));
+        assert!(m.precisions(DnnConfig::Float32).iter().all(|&p| p == Precision::Float32));
+    }
+
+    #[test]
+    fn time_series_input_uses_1d_kernels() {
+        let mut b = ModelBuilder::new("ts", &[1, 1, 64], 3);
+        b.conv(8, 3, 2, true);
+        let m = b.build();
+        match &m.layers[0].kind {
+            LayerKind::Conv { geom, .. } => {
+                assert_eq!(geom.kh, 1);
+                assert_eq!(geom.kw, 3);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(m.shapes()[0], vec![8, 1, 32]);
+    }
+}

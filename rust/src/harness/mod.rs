@@ -1,0 +1,245 @@
+//! Experiment harness shared by the benches: the full evaluation pipelines
+//! of §IV (pretrain → PTQ → deploy → on-device retrain), with environment
+//! knobs so recorded runs can trade fidelity for wall-clock:
+//!
+//!   TT_EPOCHS    on-device training epochs        (default 5; paper: 20/50)
+//!   TT_RUNS      independent repetitions          (default 2; paper: 5)
+//!   TT_TRAIN_PC  train samples per class          (default 3)
+//!   TT_TEST_PC   test samples per class           (default 2)
+//!
+//! Accuracy runs use each dataset's *reduced* shape; memory/latency/energy
+//! come from the memory planner and device cost model at the *paper*
+//! shape (DESIGN.md §3).
+
+use crate::data::{DatasetSpec, Domain};
+use crate::device::{Cost, DeviceModel};
+use crate::graph::exec::{calibrate, FloatParams, NativeModel};
+use crate::graph::{models, DnnConfig, ModelDef};
+use crate::kernels::OpCounter;
+use crate::memplan::{self, MemoryReport};
+use crate::train::fqt::FqtSgd;
+use crate::train::loop_::{self, Sparsity, Split, TrainReport};
+use crate::train::sparse::DynamicSparse;
+use crate::util::bench::env_usize;
+use crate::util::prng::Pcg32;
+
+/// Scaling knobs from the environment.
+#[derive(Clone, Copy, Debug)]
+pub struct Knobs {
+    pub epochs: usize,
+    pub runs: usize,
+    pub train_pc: usize,
+    pub test_pc: usize,
+}
+
+impl Knobs {
+    pub fn from_env() -> Knobs {
+        Knobs {
+            epochs: env_usize("TT_EPOCHS", 5),
+            runs: env_usize("TT_RUNS", 2),
+            train_pc: env_usize("TT_TRAIN_PC", 3),
+            test_pc: env_usize("TT_TEST_PC", 2),
+        }
+    }
+}
+
+/// Paper hyperparameters (§IV-A): lr 0.001, batch 48. The reduced-scale
+/// simulations use a slightly larger lr to compensate for the much smaller
+/// sample budget; batch is scaled to the tiny split.
+pub const LR: f32 = 0.01;
+pub const BATCH: usize = 8;
+
+/// A deployed transfer-learning scenario: pretrained on the source domain,
+/// deployed (PTQ), classification tail reset, target-domain splits ready.
+pub struct TlScenario {
+    pub model: NativeModel,
+    pub train: Split,
+    pub test: Split,
+}
+
+/// Builder for the per-dataset model: MbedNet with the dataset's class
+/// count and (reduced) input shape, tail of 5 trainable layers.
+pub fn mbednet_for(spec: &DatasetSpec, shape: &[usize; 3]) -> ModelDef {
+    models::mbednet(shape, spec.classes)
+}
+
+/// Pretrain a float model on the source domain. Returns the trained float
+/// parameters (the "GPU baseline" stage of §IV-A, run in-harness).
+pub fn pretrain(
+    def: &ModelDef,
+    src: &Domain,
+    epochs: usize,
+    knobs: &Knobs,
+    seed: u64,
+) -> (FloatParams, f32) {
+    let mut rng = Pcg32::new(seed, 0x11);
+    let mut all_trainable = def.clone();
+    all_trainable.set_all_trainable();
+    let fp = FloatParams::init(&all_trainable, &mut rng);
+    let (tr, te) = src.splits(knobs.train_pc, knobs.test_pc, &mut rng);
+    let calib = calibrate(&all_trainable, &fp, &tr.xs[..tr.len().min(4)]);
+    let mut m = NativeModel::build(all_trainable, DnnConfig::Float32, &fp, &calib);
+    let mut opt = FqtSgd::new(&m, LR, BATCH);
+    let rep = loop_::train(&mut m, &mut opt, &tr, &te, epochs, &mut Sparsity::Dense, &mut rng);
+    (m.to_float_params(), rep.final_test_acc())
+}
+
+/// Build the full TL scenario for one (dataset, config) pair.
+pub fn tl_scenario(
+    spec: &DatasetSpec,
+    cfg: DnnConfig,
+    fp: &FloatParams,
+    src: &Domain,
+    knobs: &Knobs,
+    seed: u64,
+) -> TlScenario {
+    let mut rng = Pcg32::new(seed, 0x22);
+    let shape = spec.reduced_shape;
+    let def = mbednet_for(spec, &shape);
+    let tgt = src.shifted(seed ^ 0x7777);
+    let (train, test) = tgt.splits(knobs.train_pc, knobs.test_pc, &mut rng);
+    // PTQ calibration on target-domain samples (what the device would see)
+    let calib = calibrate(&def, fp, &train.xs[..train.len().min(4)]);
+    let mut model = NativeModel::build(def, cfg, fp, &calib);
+    // §IV-A: reset the last five layers to random values
+    model.reset_trainable(&mut rng);
+    TlScenario { model, train, test }
+}
+
+/// Run one on-device TL training. `lambda_min = 1.0` means dense updates.
+pub fn run_tl(scen: &mut TlScenario, lambda_min: f32, knobs: &Knobs, seed: u64) -> TrainReport {
+    let mut rng = Pcg32::new(seed, 0x33);
+    let mut opt = FqtSgd::new(&scen.model, LR, BATCH);
+    let mut sparsity = if lambda_min >= 1.0 {
+        Sparsity::Dense
+    } else {
+        Sparsity::Dynamic(DynamicSparse::new(lambda_min, 1.0))
+    };
+    loop_::train(
+        &mut scen.model,
+        &mut opt,
+        &scen.train,
+        &scen.test,
+        knobs.epochs,
+        &mut sparsity,
+        &mut rng,
+    )
+}
+
+/// Full on-device training from a (poorly) pretrained state (§IV-D: the
+/// MNIST-pretrained net fully retrained on each MNIST-family stand-in).
+pub fn run_full_training(
+    spec: &DatasetSpec,
+    cfg: DnnConfig,
+    knobs: &Knobs,
+    seed: u64,
+) -> (TrainReport, NativeModel) {
+    let mut rng = Pcg32::new(seed, 0x44);
+    let shape = spec.reduced_shape;
+    let def = models::mnist_cnn(&shape, spec.classes);
+    let dom = Domain::new(spec, shape, seed ^ 0x1234);
+    let (tr, te) = dom.splits(knobs.train_pc * 2, knobs.test_pc * 2, &mut rng);
+    let fp = FloatParams::init(&def, &mut rng);
+    let calib = calibrate(&def, &fp, &tr.xs[..tr.len().min(4)]);
+    let mut m = NativeModel::build(def, cfg, &fp, &calib);
+    let mut opt = FqtSgd::new(&m, LR, BATCH);
+    let rep = loop_::train(&mut m, &mut opt, &tr, &te, knobs.epochs, &mut Sparsity::Dense, &mut rng);
+    (rep, m)
+}
+
+/// Per-sample fwd/bwd cost of the current model on a device, via the op
+/// counters (the "1000 consecutive training steps" instrumentation).
+pub fn step_costs(
+    model: &mut NativeModel,
+    split: &Split,
+    device: &DeviceModel,
+    lambda_min: f32,
+) -> (Cost, Cost) {
+    let mut sparsity = if lambda_min >= 1.0 {
+        Sparsity::Dense
+    } else {
+        // Fig. 6d measures the steady-state (late-training) regime where
+        // the loss has converged well below its maximum and the update
+        // rate sits at λ_min — seed the controller accordingly.
+        let mut ctl = DynamicSparse::new(lambda_min, 1.0);
+        ctl.seed_max_loss(1e6);
+        Sparsity::Dynamic(ctl)
+    };
+    let (fwd, bwd) = loop_::measure_step_ops(model, split, 8, &mut sparsity);
+    (device.cost(&fwd), device.cost(&bwd))
+}
+
+/// Memory report at the paper's native shape for a TL deployment.
+pub fn tl_memory(spec: &DatasetSpec, cfg: DnnConfig) -> MemoryReport {
+    let def = mbednet_for(spec, &spec.paper_shape);
+    memplan::plan(&def, cfg, true)
+}
+
+/// Mean and std over per-run values.
+pub fn mean_std(vals: &[f32]) -> (f32, f32) {
+    (crate::util::stats::mean(vals), crate::util::stats::std(vals))
+}
+
+/// Aggregate op counters over a model+split at paper scale without running
+/// samples: analytic per-layer MACs (used where paper-shape execution would
+/// be too slow — latency is MAC-driven in the cost model anyway).
+pub fn analytic_fwd_ops(def: &ModelDef, cfg: DnnConfig) -> OpCounter {
+    let macs = def.total_fwd_macs();
+    let mut ops = OpCounter::new();
+    match cfg {
+        DnnConfig::Float32 => ops.float_macs = macs,
+        _ => ops.int_macs = macs,
+    }
+    let act_bytes: usize = def.shapes().iter().map(|s| s.iter().product::<usize>()).sum();
+    ops.bytes = (def.total_params() + act_bytes) as u64;
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec_by_name;
+
+    #[test]
+    fn tl_pipeline_end_to_end_smoke() {
+        let knobs = Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1 };
+        let spec = spec_by_name("cwru").unwrap();
+        let shape = [1usize, 1, 128]; // shrunk further for the unit test
+        let mut small = spec.clone();
+        small.reduced_shape = shape;
+        let src = Domain::new(&small, shape, 1);
+        let def = mbednet_for(&small, &shape);
+        let (fp, _) = pretrain(&def, &src, 2, &knobs, 2);
+        let mut scen = tl_scenario(&small, DnnConfig::Uint8, &fp, &src, &knobs, 3);
+        let rep = run_tl(&mut scen, 1.0, &knobs, 4);
+        assert_eq!(rep.epochs.len(), 2);
+        assert!(rep.samples_seen > 0);
+        // reset tail means grads flowed; memory report exists at paper shape
+        let mem = tl_memory(&small, DnnConfig::Uint8);
+        assert!(mem.total_ram() > 0 && mem.flash > 0);
+    }
+
+    #[test]
+    fn sparse_tl_cheaper_than_dense() {
+        let knobs = Knobs { epochs: 1, runs: 1, train_pc: 2, test_pc: 1 };
+        let mut spec = spec_by_name("cifar10").unwrap();
+        spec.reduced_shape = [3, 16, 16];
+        let src = Domain::new(&spec, spec.reduced_shape, 5);
+        let def = mbednet_for(&spec, &spec.reduced_shape);
+        let (fp, _) = pretrain(&def, &src, 1, &knobs, 6);
+        let mut dense = tl_scenario(&spec, DnnConfig::Uint8, &fp, &src, &knobs, 7);
+        let mut sparse = tl_scenario(&spec, DnnConfig::Uint8, &fp, &src, &knobs, 7);
+        let d = run_tl(&mut dense, 1.0, &knobs, 8);
+        let s = run_tl(&mut sparse, 0.1, &knobs, 8);
+        assert!(s.bwd_ops.total_macs() < d.bwd_ops.total_macs());
+    }
+
+    #[test]
+    fn analytic_ops_match_config_domain() {
+        let def = models::mbednet(&[3, 32, 32], 10);
+        let q = analytic_fwd_ops(&def, DnnConfig::Uint8);
+        let f = analytic_fwd_ops(&def, DnnConfig::Float32);
+        assert!(q.int_macs > 0 && q.float_macs == 0);
+        assert_eq!(f.float_macs, q.int_macs);
+    }
+}

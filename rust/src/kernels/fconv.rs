@@ -1,0 +1,282 @@
+//! Float32 twin of the quantized conv kernels, used by the `float32` DNN
+//! configuration and by the float part of the `mixed` configuration
+//! (classification head in float, §IV). Identical geometry and masking
+//! semantics as `qconv`; arithmetic is f32 and counted as `float_macs` so
+//! the device model prices it with the per-MCU float CPI (soft-float on the
+//! Cortex-M0+, FPU on M4/M7).
+
+use crate::kernels::{ConvGeom, OpCounter};
+use crate::tensor::{idx3, idx4, TensorF32};
+
+/// Forward: `y = relu?(conv(x, w) + b)` in f32.
+pub fn fconv2d_fwd(
+    x: &TensorF32,
+    w: &TensorF32,
+    bias: &[f32],
+    geom: &ConvGeom,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    let cf = if geom.depthwise { 1 } else { geom.cin };
+    let mut out = TensorF32::zeros(&[geom.cout, oh, ow]);
+    let od = out.data_mut();
+    for co in 0..geom.cout {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = bias[co];
+                for c in 0..cf {
+                    let ci = if geom.depthwise { co } else { c };
+                    for ky in 0..geom.kh {
+                        let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..geom.kw {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            acc += x.data()[idx3(ci, iy as usize, ix as usize, h, wd)]
+                                * w.data()[idx4(co, c, ky, kx, cf, geom.kh, geom.kw)];
+                        }
+                    }
+                }
+                od[idx3(co, oy, ox, oh, ow)] = if relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+    ops.float_macs += geom.fwd_macs(h, wd);
+    ops.bytes += ((x.len() + w.len() + geom.cout * oh * ow) * 4) as u64;
+    out
+}
+
+/// Error backprop (float): transposed conv, with optional channel mask.
+pub fn fconv2d_bwd_input(
+    e: &TensorF32,
+    w: &TensorF32,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let cf = if geom.depthwise { 1 } else { geom.cin };
+    let mut out = TensorF32::zeros(&[geom.cin, in_h, in_w]);
+    let od = out.data_mut();
+    let mut kept = 0u64;
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        kept += 1;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let ev = e.data()[idx3(co, oy, ox, oh, ow)];
+                if ev == 0.0 {
+                    continue;
+                }
+                for c in 0..cf {
+                    let ci = if geom.depthwise { co } else { c };
+                    for ky in 0..geom.kh {
+                        let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                        if iy < 0 || iy >= in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..geom.kw {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= in_w as isize {
+                                continue;
+                            }
+                            od[idx3(ci, iy as usize, ix as usize, in_h, in_w)] +=
+                                ev * w.data()[idx4(co, c, ky, kx, cf, geom.kh, geom.kw)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ops.float_macs += kept * (oh * ow * cf * geom.kh * geom.kw) as u64;
+    ops.bytes += ((e.len() + w.len() + geom.cin * in_h * in_w) * 4) as u64;
+    out
+}
+
+/// Weight + bias gradient (float), optional channel mask.
+pub fn fconv2d_bwd_weight(
+    e: &TensorF32,
+    x: &TensorF32,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let cf = if geom.depthwise { 1 } else { geom.cin };
+    let mut gw = TensorF32::zeros(&[geom.cout, cf, geom.kh, geom.kw]);
+    let mut gb = TensorF32::zeros(&[geom.cout]);
+    let mut kept = 0u64;
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        kept += 1;
+        let mut bacc = 0f32;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let ev = e.data()[idx3(co, oy, ox, oh, ow)];
+                bacc += ev;
+                if ev == 0.0 {
+                    continue;
+                }
+                for c in 0..cf {
+                    let ci = if geom.depthwise { co } else { c };
+                    for ky in 0..geom.kh {
+                        let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..geom.kw {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            gw.data_mut()[idx4(co, c, ky, kx, cf, geom.kh, geom.kw)] += ev
+                                * x.data()[idx3(ci, iy as usize, ix as usize, h, wd)];
+                        }
+                    }
+                }
+            }
+        }
+        gb.data_mut()[co] = bacc;
+    }
+    ops.float_macs += kept * (oh * ow * cf * geom.kh * geom.kw) as u64;
+    ops.bytes += ((e.len() + x.len() + gw.len()) * 4) as u64;
+    (gw, gb)
+}
+
+/// ReLU backward in float: zero the error where the forward output was 0.
+pub fn relu_bwd_mask_f(e: &mut TensorF32, y_fwd: &TensorF32, ops: &mut OpCounter) {
+    assert_eq!(e.shape(), y_fwd.shape());
+    for (ev, &yv) in e.data_mut().iter_mut().zip(y_fwd.data().iter()) {
+        if yv <= 0.0 {
+            *ev = 0.0;
+        }
+    }
+    ops.float_ops += e.len() as u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    /// Finite-difference check: the analytic weight gradient of a scalar
+    /// loss `L = Σ y` must match numeric differentiation.
+    #[test]
+    fn weight_grad_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(31);
+        let g = ConvGeom { cin: 2, cout: 2, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let (h, w) = (5, 5);
+        let mut x = TensorF32::zeros(&[g.cin, h, w]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut wt = TensorF32::zeros(&[g.cout, g.cin, g.kh, g.kw]);
+        rng.fill_normal(wt.data_mut(), 0.3);
+        let b = vec![0.0; g.cout];
+        let mut ops = OpCounter::new();
+
+        // L = sum(y), no relu -> dL/dy = 1 everywhere
+        let (oh, ow) = g.out_hw(h, w);
+        let e = TensorF32::full(&[g.cout, oh, ow], 1.0);
+        let (gw, gb) = fconv2d_bwd_weight(&e, &x, &g, None, &mut ops);
+
+        let loss = |wt: &TensorF32| -> f32 {
+            let mut o = OpCounter::new();
+            fconv2d_fwd(&x, wt, &b, &g, false, &mut o).data().iter().sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 7, 17, 35] {
+            let mut wp = wt.clone();
+            wp.data_mut()[idx] += eps;
+            let mut wm = wt.clone();
+            wm.data_mut()[idx] -= eps;
+            let num = (loss(&wp) - loss(&wm)) / (2.0 * eps);
+            assert!((num - gw.data()[idx]).abs() < 1e-2, "{num} vs {}", gw.data()[idx]);
+        }
+        assert!((gb.data()[0] - (oh * ow) as f32).abs() < 1e-4);
+    }
+
+    /// Input gradient via finite differences.
+    #[test]
+    fn input_grad_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(32);
+        let g = ConvGeom { cin: 2, cout: 3, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1, depthwise: false };
+        let (h, w) = (6, 6);
+        let mut x = TensorF32::zeros(&[g.cin, h, w]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut wt = TensorF32::zeros(&[g.cout, g.cin, g.kh, g.kw]);
+        rng.fill_normal(wt.data_mut(), 0.3);
+        let b = vec![0.0; g.cout];
+        let (oh, ow) = g.out_hw(h, w);
+        let e = TensorF32::full(&[g.cout, oh, ow], 1.0);
+        let mut ops = OpCounter::new();
+        let gx = fconv2d_bwd_input(&e, &wt, &g, h, w, None, &mut ops);
+
+        let loss = |x: &TensorF32| -> f32 {
+            let mut o = OpCounter::new();
+            fconv2d_fwd(x, &wt, &b, &g, false, &mut o).data().iter().sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 11, 30, 71] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let num = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            assert!((num - gx.data()[idx]).abs() < 1e-2, "{num} vs {}", gx.data()[idx]);
+        }
+    }
+
+    #[test]
+    fn depthwise_grads_match_fd() {
+        let mut rng = Pcg32::seeded(33);
+        let g = ConvGeom { cin: 3, cout: 3, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: true };
+        let (h, w) = (4, 4);
+        let mut x = TensorF32::zeros(&[g.cin, h, w]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut wt = TensorF32::zeros(&[g.cout, 1, g.kh, g.kw]);
+        rng.fill_normal(wt.data_mut(), 0.3);
+        let b = vec![0.0; g.cout];
+        let (oh, ow) = g.out_hw(h, w);
+        let e = TensorF32::full(&[g.cout, oh, ow], 1.0);
+        let mut ops = OpCounter::new();
+        let (gw, _) = fconv2d_bwd_weight(&e, &x, &g, None, &mut ops);
+        let loss = |wt: &TensorF32| -> f32 {
+            let mut o = OpCounter::new();
+            fconv2d_fwd(&x, wt, &b, &g, false, &mut o).data().iter().sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 10, 26] {
+            let mut wp = wt.clone();
+            wp.data_mut()[idx] += eps;
+            let mut wm = wt.clone();
+            wm.data_mut()[idx] -= eps;
+            let num = (loss(&wp) - loss(&wm)) / (2.0 * eps);
+            assert!((num - gw.data()[idx]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn relu_mask_f_zeroes() {
+        let y = TensorF32::from_vec(&[4], vec![0.0, 1.0, -2.0, 3.0]);
+        let mut e = TensorF32::from_vec(&[4], vec![5.0, 5.0, 5.0, 5.0]);
+        let mut ops = OpCounter::new();
+        relu_bwd_mask_f(&mut e, &y, &mut ops);
+        assert_eq!(e.data(), &[0.0, 5.0, 0.0, 5.0]);
+    }
+}

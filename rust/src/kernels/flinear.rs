@@ -1,0 +1,163 @@
+//! Float32 twin of the quantized linear kernels (`float32` configuration
+//! and the float classification head of the `mixed` configuration).
+
+use crate::kernels::OpCounter;
+use crate::tensor::TensorF32;
+
+/// Forward: `y = relu?(W·x + b)` in f32.
+pub fn flinear_fwd(
+    x: &TensorF32,
+    w: &TensorF32,
+    bias: &[f32],
+    relu: bool,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    let n_in = x.len();
+    let n_out = w.shape()[0];
+    assert_eq!(w.shape()[1], n_in);
+    let mut out = TensorF32::zeros(&[n_out]);
+    for o in 0..n_out {
+        let row = w.outer(o);
+        let mut acc = bias[o];
+        for (xv, wv) in x.data().iter().zip(row.iter()) {
+            acc += xv * wv;
+        }
+        out.data_mut()[o] = if relu { acc.max(0.0) } else { acc };
+    }
+    ops.float_macs += (n_in * n_out) as u64;
+    ops.bytes += ((n_in + n_in * n_out + n_out) * 4) as u64;
+    out
+}
+
+/// Error backprop `e_in = Wᵀ·e_out`, optional row mask.
+pub fn flinear_bwd_input(
+    e: &TensorF32,
+    w: &TensorF32,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    let n_out = e.len();
+    let n_in = w.shape()[1];
+    let mut out = TensorF32::zeros(&[n_in]);
+    let mut kept = 0u64;
+    for o in 0..n_out {
+        if let Some(k) = keep {
+            if !k[o] {
+                continue;
+            }
+        }
+        kept += 1;
+        let ev = e.data()[o];
+        if ev == 0.0 {
+            continue;
+        }
+        let row = w.outer(o);
+        for (acc, wv) in out.data_mut().iter_mut().zip(row.iter()) {
+            *acc += ev * wv;
+        }
+    }
+    ops.float_macs += kept * n_in as u64;
+    ops.bytes += ((n_out + n_out * n_in + n_in) * 4) as u64;
+    out
+}
+
+/// Weight + bias gradient `∇W = e·xᵀ`, optional row mask.
+pub fn flinear_bwd_weight(
+    e: &TensorF32,
+    x: &TensorF32,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    let n_out = e.len();
+    let n_in = x.len();
+    let mut gw = TensorF32::zeros(&[n_out, n_in]);
+    let mut gb = TensorF32::zeros(&[n_out]);
+    let mut kept = 0u64;
+    for o in 0..n_out {
+        if let Some(k) = keep {
+            if !k[o] {
+                continue;
+            }
+        }
+        kept += 1;
+        let ev = e.data()[o];
+        gb.data_mut()[o] = ev;
+        if ev == 0.0 {
+            continue;
+        }
+        let row = gw.outer_mut(o);
+        for (gv, xv) in row.iter_mut().zip(x.data().iter()) {
+            *gv = ev * xv;
+        }
+    }
+    ops.float_macs += kept * n_in as u64;
+    ops.bytes += ((n_out + n_in + n_out * n_in) * 4) as u64;
+    (gw, gb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn fwd_bwd_consistency_via_fd() {
+        let mut rng = Pcg32::seeded(41);
+        let (n_in, n_out) = (12, 5);
+        let mut x = TensorF32::zeros(&[n_in]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut w = TensorF32::zeros(&[n_out, n_in]);
+        rng.fill_normal(w.data_mut(), 0.3);
+        let b = vec![0.0; n_out];
+
+        let e = TensorF32::full(&[n_out], 1.0);
+        let mut ops = OpCounter::new();
+        let (gw, gb) = flinear_bwd_weight(&e, &x, None, &mut ops);
+        let gx = flinear_bwd_input(&e, &w, None, &mut ops);
+
+        let loss = |w: &TensorF32, x: &TensorF32| -> f32 {
+            let mut o = OpCounter::new();
+            flinear_fwd(x, w, &b, false, &mut o).data().iter().sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 13, 42] {
+            let mut wp = w.clone();
+            wp.data_mut()[idx] += eps;
+            let mut wm = w.clone();
+            wm.data_mut()[idx] -= eps;
+            let num = (loss(&wp, &x) - loss(&wm, &x)) / (2.0 * eps);
+            assert!((num - gw.data()[idx]).abs() < 1e-2);
+        }
+        for idx in [0usize, 6, 11] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let num = (loss(&w, &xp) - loss(&w, &xm)) / (2.0 * eps);
+            assert!((num - gx.data()[idx]).abs() < 1e-2);
+        }
+        assert!(gb.data().iter().all(|&g| (g - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn relu_clamps_forward() {
+        let x = TensorF32::from_vec(&[2], vec![1.0, 1.0]);
+        let w = TensorF32::from_vec(&[2, 2], vec![-1.0, -1.0, 1.0, 1.0]);
+        let mut ops = OpCounter::new();
+        let y = flinear_fwd(&x, &w, &[0.0, 0.0], true, &mut ops);
+        assert_eq!(y.data(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn mask_skips_rows() {
+        let x = TensorF32::from_vec(&[2], vec![1.0, 2.0]);
+        let e = TensorF32::from_vec(&[2], vec![3.0, 4.0]);
+        let keep = vec![false, true];
+        let mut ops = OpCounter::new();
+        let (gw, gb) = flinear_bwd_weight(&e, &x, Some(&keep), &mut ops);
+        assert_eq!(gw.outer(0), &[0.0, 0.0]);
+        assert_eq!(gw.outer(1), &[4.0, 8.0]);
+        assert_eq!(gb.data(), &[0.0, 4.0]);
+        assert_eq!(ops.float_macs, 2);
+    }
+}

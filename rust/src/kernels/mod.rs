@@ -1,0 +1,128 @@
+//! Native (MCU-faithful) compute kernels.
+//!
+//! These are Rust ports of what the paper's C framework executes on the
+//! Cortex-M: integer-only quantized conv / linear forward passes and their
+//! two backward derivatives (Eq. 1 error backprop, Eq. 2 weight gradients),
+//! plus pooling and the softmax cross-entropy head. Float twins exist for
+//! the `float32` and `mixed` DNN configurations.
+//!
+//! Every kernel accounts its arithmetic into an [`OpCounter`]; the device
+//! model (`crate::device`) converts op counts into per-MCU cycles and energy
+//! (that is how the hardware study of Figs. 4b/5/6d/7b is simulated — see
+//! DESIGN.md §3).
+//!
+//! Numerics contract: the integer paths here are **bit-exact** with the
+//! Pallas kernels in `python/compile/kernels/` (same round-half-away-from-
+//! zero, same i32 accumulation), verified end-to-end through PJRT in
+//! `rust/tests/xla_cross_validation.rs`.
+
+pub mod fconv;
+pub mod flinear;
+pub mod pool;
+pub mod qconv;
+pub mod qlinear;
+pub mod softmax;
+
+/// Arithmetic accounting for the device cost model. A "MAC" is one
+/// multiply-accumulate; `int_ops`/`float_ops` count non-MAC elementwise work
+/// (requantization, masking, pooling compares).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCounter {
+    pub int_macs: u64,
+    pub float_macs: u64,
+    pub int_ops: u64,
+    pub float_ops: u64,
+    /// Bytes moved through the activation arena (load + store), an input to
+    /// the memory-bound part of the cost model.
+    pub bytes: u64,
+}
+
+impl OpCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, other: &OpCounter) {
+        self.int_macs += other.int_macs;
+        self.float_macs += other.float_macs;
+        self.int_ops += other.int_ops;
+        self.float_ops += other.float_ops;
+        self.bytes += other.bytes;
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.int_macs + self.float_macs
+    }
+}
+
+/// Geometry of a 2-D convolution (shared by fwd and both bwd kernels).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvGeom {
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+    /// Depthwise convolution: `cout == cin`, one filter per channel.
+    pub depthwise: bool,
+}
+
+impl ConvGeom {
+    /// Output spatial size for an input of `(h, w)`.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        let oh = (h + 2 * self.pad_h - self.kh) / self.stride + 1;
+        let ow = (w + 2 * self.pad_w - self.kw) / self.stride + 1;
+        (oh, ow)
+    }
+
+    /// MACs of one forward pass over an `(h, w)` input.
+    pub fn fwd_macs(&self, h: usize, w: usize) -> u64 {
+        let (oh, ow) = self.out_hw(h, w);
+        let per_out = if self.depthwise {
+            self.kh * self.kw
+        } else {
+            self.cin * self.kh * self.kw
+        };
+        (self.cout * oh * ow * per_out) as u64
+    }
+
+    /// Number of weight parameters.
+    pub fn weights(&self) -> usize {
+        if self.depthwise {
+            self.cout * self.kh * self.kw
+        } else {
+            self.cout * self.cin * self.kh * self.kw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geom_shapes() {
+        let g = ConvGeom { cin: 3, cout: 8, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1, depthwise: false };
+        assert_eq!(g.out_hw(32, 32), (16, 16));
+        assert_eq!(g.weights(), 8 * 3 * 9);
+        assert_eq!(g.fwd_macs(32, 32), (8 * 16 * 16 * 27) as u64);
+    }
+
+    #[test]
+    fn depthwise_geom() {
+        let g = ConvGeom { cin: 8, cout: 8, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: true };
+        assert_eq!(g.weights(), 8 * 9);
+        assert_eq!(g.fwd_macs(10, 10), (8 * 10 * 10 * 9) as u64);
+    }
+
+    #[test]
+    fn op_counter_accumulates() {
+        let mut a = OpCounter { int_macs: 1, float_macs: 2, int_ops: 3, float_ops: 4, bytes: 5 };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.int_macs, 2);
+        assert_eq!(a.total_macs(), 6);
+    }
+}

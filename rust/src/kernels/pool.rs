@@ -1,0 +1,273 @@
+//! Pooling kernels: max pooling (with argmax capture for the backward
+//! routing) and global average pooling, in both quantized and float flavors.
+//!
+//! Max pooling commutes with the monotone affine quantization map, so the
+//! quantized forward operates directly on the uint8 codes and the output
+//! reuses the input's quantization parameters — no requantization needed.
+//! Ties pick the *first* maximum (row-major scan order); the Pallas kernels
+//! implement the same first-occurrence rule so backward routing is
+//! bit-identical across backends.
+
+use crate::kernels::OpCounter;
+use crate::quant::{requantize, QParams, QTensor};
+use crate::tensor::{idx3, TensorF32, TensorU8};
+
+/// Result of a max-pool forward: the pooled tensor plus, for every output
+/// position, the flat input index that won (needed by the backward pass).
+pub struct MaxPoolOut<T> {
+    pub y: T,
+    pub argmax: Vec<u32>,
+}
+
+/// Quantized max pool with square window/stride `k`.
+pub fn qmaxpool_fwd(x: &QTensor, k: usize, ops: &mut OpCounter) -> MaxPoolOut<QTensor> {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    // window clamped to the input extent so 1-high (time-series) maps pool
+    // along the remaining dimension instead of collapsing to zero size
+    let (kh, kw) = (k.min(h), k.min(w));
+    let (oh, ow) = (h / kh, w / kw);
+    let xd = x.values.data();
+    let mut y = TensorU8::zeros(&[c, oh, ow]);
+    let mut argmax = vec![0u32; c * oh * ow];
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = 0u8;
+                let mut best_i = 0u32;
+                let mut first = true;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let i = idx3(ci, oy * kh + ky, ox * kw + kx, h, w);
+                        if first || xd[i] > best {
+                            best = xd[i];
+                            best_i = i as u32;
+                            first = false;
+                        }
+                    }
+                }
+                let o = idx3(ci, oy, ox, oh, ow);
+                y.data_mut()[o] = best;
+                argmax[o] = best_i;
+            }
+        }
+    }
+    ops.int_ops += (c * oh * ow * kh * kw) as u64;
+    ops.bytes += (x.len() + c * oh * ow) as u64;
+    MaxPoolOut { y: QTensor { values: y, qp: x.qp }, argmax }
+}
+
+/// Quantized max pool backward: route each output error to the winning
+/// input position; everything else gets the error zero point. The error
+/// keeps its quantization parameters.
+pub fn qmaxpool_bwd(
+    e: &QTensor,
+    argmax: &[u32],
+    in_shape: &[usize],
+    ops: &mut OpCounter,
+) -> QTensor {
+    let mut out = QTensor::zeros(in_shape, e.qp);
+    let od = out.values.data_mut();
+    for (o, &src) in e.values.data().iter().zip(argmax.iter()) {
+        od[src as usize] = *o;
+    }
+    ops.int_ops += e.len() as u64;
+    ops.bytes += (e.len() + out.len()) as u64;
+    out
+}
+
+/// Float max pool.
+pub fn fmaxpool_fwd(x: &TensorF32, k: usize, ops: &mut OpCounter) -> MaxPoolOut<TensorF32> {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (kh, kw) = (k.min(h), k.min(w));
+    let (oh, ow) = (h / kh, w / kw);
+    let xd = x.data();
+    let mut y = TensorF32::zeros(&[c, oh, ow]);
+    let mut argmax = vec![0u32; c * oh * ow];
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = f32::NEG_INFINITY;
+                let mut best_i = 0u32;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let i = idx3(ci, oy * kh + ky, ox * kw + kx, h, w);
+                        if xd[i] > best {
+                            best = xd[i];
+                            best_i = i as u32;
+                        }
+                    }
+                }
+                let o = idx3(ci, oy, ox, oh, ow);
+                y.data_mut()[o] = best;
+                argmax[o] = best_i;
+            }
+        }
+    }
+    ops.float_ops += (c * oh * ow * kh * kw) as u64;
+    ops.bytes += ((x.len() + c * oh * ow) * 4) as u64;
+    MaxPoolOut { y, argmax }
+}
+
+/// Float max pool backward.
+pub fn fmaxpool_bwd(
+    e: &TensorF32,
+    argmax: &[u32],
+    in_shape: &[usize],
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    let mut out = TensorF32::zeros(in_shape);
+    for (ev, &src) in e.data().iter().zip(argmax.iter()) {
+        out.data_mut()[src as usize] = *ev;
+    }
+    ops.float_ops += e.len() as u64;
+    out
+}
+
+/// Quantized global average pool `[C,H,W] -> [C]`. The i32 channel sum is
+/// requantized with multiplier `s_x / (H·W · s_out)`.
+pub fn qgap_fwd(x: &QTensor, out_qp: QParams, ops: &mut OpCounter) -> QTensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let n = (h * w) as f32;
+    let mult = x.qp.scale / (n * out_qp.scale);
+    let mut y = QTensor::zeros(&[c], out_qp);
+    for ci in 0..c {
+        let mut acc = 0i32;
+        for &v in x.values.outer(ci) {
+            acc += v as i32 - x.qp.zero_point;
+        }
+        y.values.data_mut()[ci] = requantize(acc, mult, out_qp.zero_point, false);
+    }
+    ops.int_ops += x.len() as u64;
+    ops.bytes += (x.len() + c) as u64;
+    y
+}
+
+/// Quantized GAP backward: each input position receives `e/HW`; requantized
+/// with multiplier `s_e / (H·W · s_out)`.
+pub fn qgap_bwd(e: &QTensor, in_shape: &[usize], out_qp: QParams, ops: &mut OpCounter) -> QTensor {
+    let (c, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+    let n = (h * w) as f32;
+    let mult = e.qp.scale / (n * out_qp.scale);
+    let mut out = QTensor::zeros(in_shape, out_qp);
+    for ci in 0..c {
+        let ev = e.values.data()[ci] as i32 - e.qp.zero_point;
+        let q = requantize(ev, mult, out_qp.zero_point, false);
+        for o in out.values.outer_mut(ci) {
+            *o = q;
+        }
+    }
+    ops.int_ops += (c * h * w) as u64;
+    out
+}
+
+/// Float GAP forward.
+pub fn fgap_fwd(x: &TensorF32, ops: &mut OpCounter) -> TensorF32 {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let n = (h * w) as f32;
+    let mut y = TensorF32::zeros(&[c]);
+    for ci in 0..c {
+        y.data_mut()[ci] = x.outer(ci).iter().sum::<f32>() / n;
+    }
+    ops.float_ops += x.len() as u64;
+    y
+}
+
+/// Float GAP backward.
+pub fn fgap_bwd(e: &TensorF32, in_shape: &[usize], ops: &mut OpCounter) -> TensorF32 {
+    let (c, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+    let n = (h * w) as f32;
+    let mut out = TensorF32::zeros(in_shape);
+    for ci in 0..c {
+        let v = e.data()[ci] / n;
+        for o in out.data_mut()[ci * h * w..(ci + 1) * h * w].iter_mut() {
+            *o = v;
+        }
+    }
+    ops.float_ops += (c * h * w) as u64;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QParams;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn qmaxpool_commutes_with_dequant() {
+        let mut rng = Pcg32::seeded(51);
+        let mut xf = TensorF32::zeros(&[2, 4, 4]);
+        rng.fill_normal(xf.data_mut(), 1.0);
+        let xq = QTensor::quantize(&xf);
+        let mut ops = OpCounter::new();
+        let pooled = qmaxpool_fwd(&xq, 2, &mut ops);
+        // pooling then dequantizing == dequantizing then pooling
+        let deq = pooled.y.dequantize();
+        let fx = xq.dequantize();
+        let fp = fmaxpool_fwd(&fx, 2, &mut ops);
+        assert_eq!(deq.data(), fp.y.data());
+        assert_eq!(pooled.y.qp, xq.qp);
+    }
+
+    #[test]
+    fn maxpool_bwd_routes_to_argmax() {
+        let x = QTensor {
+            values: TensorU8::from_vec(&[1, 2, 2], vec![10, 20, 30, 40]),
+            qp: QParams::unit(),
+        };
+        let mut ops = OpCounter::new();
+        let p = qmaxpool_fwd(&x, 2, &mut ops);
+        assert_eq!(p.y.values.data(), &[40]);
+        assert_eq!(p.argmax, vec![3]);
+        let e = QTensor {
+            values: TensorU8::from_vec(&[1, 1, 1], vec![200]),
+            qp: QParams { scale: 0.1, zero_point: 128 },
+        };
+        let back = qmaxpool_bwd(&e, &p.argmax, &[1, 2, 2], &mut ops);
+        assert_eq!(back.values.data(), &[128, 128, 128, 200]);
+    }
+
+    #[test]
+    fn maxpool_tie_picks_first() {
+        let x = QTensor {
+            values: TensorU8::from_vec(&[1, 2, 2], vec![7, 7, 7, 7]),
+            qp: QParams::unit(),
+        };
+        let mut ops = OpCounter::new();
+        let p = qmaxpool_fwd(&x, 2, &mut ops);
+        assert_eq!(p.argmax, vec![0]);
+    }
+
+    #[test]
+    fn gap_fwd_bwd_roundtrip() {
+        let mut rng = Pcg32::seeded(52);
+        let mut xf = TensorF32::zeros(&[3, 4, 4]);
+        rng.fill_normal(xf.data_mut(), 1.0);
+        let xq = QTensor::quantize(&xf);
+        let out_qp = QParams::from_min_max(-1.0, 1.0);
+        let mut ops = OpCounter::new();
+        let y = qgap_fwd(&xq, out_qp, &mut ops);
+        // compare against float mean of dequantized input
+        let fx = xq.dequantize();
+        let fy = fgap_fwd(&fx, &mut ops);
+        for (a, b) in y.dequantize().data().iter().zip(fy.data().iter()) {
+            assert!((a - b).abs() < 2.0 * out_qp.scale, "{a} vs {b}");
+        }
+        // bwd distributes uniformly
+        let in_qp = QParams::from_min_max(-0.5, 0.5);
+        let back = qgap_bwd(&y, &[3, 4, 4], in_qp, &mut ops);
+        for ci in 0..3 {
+            let vals = back.values.outer(ci);
+            assert!(vals.iter().all(|&v| v == vals[0]));
+        }
+    }
+
+    #[test]
+    fn fgap_bwd_uniform_scaling() {
+        let e = TensorF32::from_vec(&[2], vec![4.0, 8.0]);
+        let mut ops = OpCounter::new();
+        let b = fgap_bwd(&e, &[2, 2, 2], &mut ops);
+        assert!(b.outer(0).iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        assert!(b.outer(1).iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,671 @@
+//! Quantized 2-D convolution: forward (Eq. 3), error backprop (Eq. 1 / Eq. 4)
+//! and weight gradient (Eq. 2).
+//!
+//! Layouts: input `[Cin, H, W]`, weights `[Cout, Cin, Kh, Kw]` (depthwise:
+//! `[C, 1, Kh, Kw]`), output `[Cout, Oh, Ow]`. All quantized tensors are
+//! uint8 with per-tensor affine parameters; accumulation is i32 (exact — the
+//! worst case `255·255·Cin·Kh·Kw` stays far below 2³¹ for every model here).
+//!
+//! Zero padding pads with the input zero point, so padded positions
+//! contribute `(z_x − z_x)(w − z_w) = 0` and are simply skipped.
+//!
+//! Sparse gradient updates (§III-B): both backward kernels accept an
+//! optional `keep` mask over **output channels** (the conv "structures" of
+//! the paper). Masked-out channels are skipped entirely — their gradient is
+//! not computed and they contribute nothing to the backpropagated error —
+//! which is exactly the computational-tree pruning the paper describes.
+
+use crate::kernels::{ConvGeom, OpCounter};
+use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
+use crate::tensor::{idx3, idx4, TensorF32};
+
+/// Forward pass of the folded QConv block (conv + bias + optional ReLU).
+///
+/// `bias` is i32 at scale `s_x·s_w` (see [`crate::quant::quantize_bias`]).
+/// Returns the quantized output at `out_qp`.
+pub fn qconv2d_fwd(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+
+    let zx = x.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale);
+    let xd = x.values.data();
+    let wdat = w.values.data();
+
+    let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
+    let od = out.values.data_mut();
+
+    // Fast path for pointwise (1×1, stride 1, no pad) convolutions — the
+    // dominant op of the MobileNet-style stacks (§Perf): a plain matmul
+    // with the spatial dim innermost so the compiler can vectorize the
+    // per-position MAC over a contiguous row.
+    if geom.kh == 1
+        && geom.kw == 1
+        && geom.stride == 1
+        && geom.pad_h == 0
+        && geom.pad_w == 0
+        && !geom.depthwise
+    {
+        let hw = h * wd;
+        let mut acc = vec![0i32; hw];
+        for co in 0..geom.cout {
+            acc.fill(bias[co]);
+            for ci in 0..geom.cin {
+                let wv = wdat[co * geom.cin + ci] as i32 - zw;
+                if wv == 0 {
+                    continue;
+                }
+                let row = &xd[ci * hw..(ci + 1) * hw];
+                for (a, &xv) in acc.iter_mut().zip(row.iter()) {
+                    *a += wv * (xv as i32 - zx);
+                }
+            }
+            let orow = &mut od[co * hw..(co + 1) * hw];
+            for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                *o = requantize(a, mult, out_qp.zero_point, relu);
+            }
+        }
+        ops.int_macs += geom.fwd_macs(h, wd);
+        ops.int_ops += (geom.cout * oh * ow) as u64;
+        ops.bytes += (x.len() + w.len() + geom.cout * oh * ow) as u64;
+        return out;
+    }
+
+    let cin_per_filter = if geom.depthwise { 1 } else { geom.cin };
+    for co in 0..geom.cout {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc: i32 = bias[co];
+                for cf in 0..cin_per_filter {
+                    let ci = if geom.depthwise { co } else { cf };
+                    for ky in 0..geom.kh {
+                        let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..geom.kw {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            let xv = xd[idx3(ci, iy as usize, ix as usize, h, wd)] as i32 - zx;
+                            let wv = wdat
+                                [idx4(co, cf, ky, kx, cin_per_filter, geom.kh, geom.kw)]
+                                as i32
+                                - zw;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                od[idx3(co, oy, ox, oh, ow)] = requantize(acc, mult, out_qp.zero_point, relu);
+            }
+        }
+    }
+
+    ops.int_macs += geom.fwd_macs(h, wd);
+    ops.int_ops += (geom.cout * oh * ow) as u64; // requantization
+    ops.bytes += (x.len() + w.len() + geom.cout * oh * ow) as u64;
+    out
+}
+
+/// Error backprop through the conv (Eq. 1, quantized per Eq. 4): given the
+/// error `e` w.r.t. this layer's output (already ReLU-masked by the caller,
+/// see [`relu_bwd_mask_q`]), produce the quantized error w.r.t. its input.
+///
+/// `keep`: optional per-output-channel mask from the sparse-update
+/// controller; `None` means all channels participate.
+pub fn qconv2d_bwd_input(
+    e: &QTensor,
+    w: &QTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale);
+    let ed = e.values.data();
+    let wdat = w.values.data();
+
+    let cin_per_filter = if geom.depthwise { 1 } else { geom.cin };
+    // Accumulate in i32 over the full input map (transposed-conv scatter
+    // expressed as a gather per input position).
+    let mut acc = vec![0i32; geom.cin * in_h * in_w];
+    let mut kept_channels = 0u64;
+
+    // Pointwise fast path (see qconv2d_fwd): per (co, ci) the weight tap is
+    // constant, so the position loop is a vectorizable AXPY.
+    if geom.kh == 1
+        && geom.kw == 1
+        && geom.stride == 1
+        && geom.pad_h == 0
+        && geom.pad_w == 0
+        && !geom.depthwise
+    {
+        let hw = in_h * in_w;
+        for co in 0..geom.cout {
+            if let Some(k) = keep {
+                if !k[co] {
+                    continue;
+                }
+            }
+            kept_channels += 1;
+            let erow = &ed[co * hw..(co + 1) * hw];
+            for ci in 0..geom.cin {
+                let wv = wdat[co * geom.cin + ci] as i32 - zw;
+                if wv == 0 {
+                    continue;
+                }
+                let arow = &mut acc[ci * hw..(ci + 1) * hw];
+                for (a, &evq) in arow.iter_mut().zip(erow.iter()) {
+                    *a += wv * (evq as i32 - ze);
+                }
+            }
+        }
+        let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, false);
+        }
+        ops.int_macs += kept_channels * (hw * geom.cin) as u64;
+        ops.int_ops += (geom.cin * hw) as u64;
+        ops.bytes += (e.len() + w.len() + geom.cin * hw) as u64;
+        return out;
+    }
+
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        kept_channels += 1;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let ev = ed[idx3(co, oy, ox, oh, ow)] as i32 - ze;
+                if ev == 0 {
+                    continue; // exact zero error contributes nothing
+                }
+                for cf in 0..cin_per_filter {
+                    let ci = if geom.depthwise { co } else { cf };
+                    for ky in 0..geom.kh {
+                        let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                        if iy < 0 || iy >= in_h as isize {
+                            continue;
+                        }
+                        for kx in 0..geom.kw {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= in_w as isize {
+                                continue;
+                            }
+                            let wv = wdat
+                                [idx4(co, cf, ky, kx, cin_per_filter, geom.kh, geom.kw)]
+                                as i32
+                                - zw;
+                            acc[idx3(ci, iy as usize, ix as usize, in_h, in_w)] += ev * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    let od = out.values.data_mut();
+    for (o, &a) in od.iter_mut().zip(acc.iter()) {
+        *o = requantize(a, mult, out_qp.zero_point, false);
+    }
+
+    let per_co = (oh * ow * cin_per_filter * geom.kh * geom.kw) as u64;
+    ops.int_macs += kept_channels * per_co;
+    ops.int_ops += (geom.cin * in_h * in_w) as u64;
+    ops.bytes += (e.len() + w.len() + geom.cin * in_h * in_w) as u64;
+    out
+}
+
+/// Weight gradient (Eq. 2) in float: `∇W = (s_e · s_x) · Σ (e−z_e)(x−z_x)`.
+/// Per the paper, the gradient is *not* requantized — the SGD step (Eq. 5)
+/// consumes it in float space. Returns `(grad_w [Cout,Cf,Kh,Kw], grad_b
+/// [Cout])`.
+pub fn qconv2d_bwd_weight(
+    e: &QTensor,
+    x: &QTensor,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zx = x.qp.zero_point;
+    let s = e.qp.scale * x.qp.scale;
+    let ed = e.values.data();
+    let xd = x.values.data();
+
+    let cin_per_filter = if geom.depthwise { 1 } else { geom.cin };
+    let mut gw = TensorF32::zeros(&[geom.cout, cin_per_filter, geom.kh, geom.kw]);
+    let mut gb = TensorF32::zeros(&[geom.cout]);
+    let gwd = gw.data_mut();
+    let gbd = gb.data_mut();
+
+    let mut kept_channels = 0u64;
+
+    // Pointwise fast path: ∇W[co][ci] is a single dot product over the
+    // spatial positions — i32-exact, vectorizable.
+    if geom.kh == 1
+        && geom.kw == 1
+        && geom.stride == 1
+        && geom.pad_h == 0
+        && geom.pad_w == 0
+        && !geom.depthwise
+    {
+        let hw = oh * ow;
+        for co in 0..geom.cout {
+            if let Some(k) = keep {
+                if !k[co] {
+                    continue;
+                }
+            }
+            kept_channels += 1;
+            let erow = &ed[co * hw..(co + 1) * hw];
+            let mut bias_acc: i32 = 0;
+            for &evq in erow {
+                bias_acc += evq as i32 - ze;
+            }
+            gbd[co] = bias_acc as f32 * e.qp.scale;
+            for ci in 0..geom.cin {
+                let xrow = &xd[ci * hw..(ci + 1) * hw];
+                let mut acc: i32 = 0;
+                for (&evq, &xvq) in erow.iter().zip(xrow.iter()) {
+                    acc += (evq as i32 - ze) * (xvq as i32 - zx);
+                }
+                gwd[co * geom.cin + ci] = acc as f32 * s;
+            }
+        }
+        ops.int_macs += kept_channels * (hw * geom.cin) as u64;
+        ops.float_ops += gw.len() as u64;
+        ops.bytes += (e.len() + x.len() + gw.len() * 4) as u64;
+        return (gw, gb);
+    }
+
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        kept_channels += 1;
+        let mut bias_acc: i32 = 0;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let ev = ed[idx3(co, oy, ox, oh, ow)] as i32 - ze;
+                bias_acc += ev;
+                if ev == 0 {
+                    continue;
+                }
+                for cf in 0..cin_per_filter {
+                    let ci = if geom.depthwise { co } else { cf };
+                    for ky in 0..geom.kh {
+                        let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..geom.kw {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            let xv = xd[idx3(ci, iy as usize, ix as usize, h, wd)] as i32 - zx;
+                            gwd[idx4(co, cf, ky, kx, cin_per_filter, geom.kh, geom.kw)] +=
+                                (ev * xv) as f32;
+                        }
+                    }
+                }
+            }
+        }
+        gbd[co] = bias_acc as f32 * e.qp.scale;
+    }
+    // Scale i32-accumulated weight grads to float once at the end.
+    for g in gwd.iter_mut() {
+        *g *= s;
+    }
+
+    let per_co = (oh * ow * cin_per_filter * geom.kh * geom.kw) as u64;
+    ops.int_macs += kept_channels * per_co;
+    ops.float_ops += gw.len() as u64;
+    ops.bytes += (e.len() + x.len() + gw.len() * 4) as u64;
+    (gw, gb)
+}
+
+/// ReLU backward for quantized error tensors: where the forward output sat
+/// at its zero point (pre-activation ≤ 0), the gradient is zero — replace
+/// the error with its own zero point.
+pub fn relu_bwd_mask_q(e: &mut QTensor, y_fwd: &QTensor, ops: &mut OpCounter) {
+    assert_eq!(e.shape(), y_fwd.shape());
+    let zy = y_fwd.qp.qzero();
+    let zev = e.qp.qzero();
+    let yd = y_fwd.values.data();
+    for (ev, &yv) in e.values.data_mut().iter_mut().zip(yd.iter()) {
+        if yv <= zy {
+            *ev = zev;
+        }
+    }
+    ops.int_ops += e.len() as u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QParams;
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::{shrink_dim, Prop};
+
+    /// Float reference conv used as the oracle for the quantized kernel.
+    fn ref_conv_f32(
+        x: &TensorF32,
+        w: &TensorF32,
+        b: &[f32],
+        g: &ConvGeom,
+        relu: bool,
+    ) -> TensorF32 {
+        let (h, wd) = (x.shape()[1], x.shape()[2]);
+        let (oh, ow) = g.out_hw(h, wd);
+        let cf = if g.depthwise { 1 } else { g.cin };
+        let mut out = TensorF32::zeros(&[g.cout, oh, ow]);
+        for co in 0..g.cout {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = b[co];
+                    for c in 0..cf {
+                        let ci = if g.depthwise { co } else { c };
+                        for ky in 0..g.kh {
+                            let iy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..g.kw {
+                                let ix = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += x.data()[idx3(ci, iy as usize, ix as usize, h, wd)]
+                                    * w.data()[idx4(co, c, ky, kx, cf, g.kh, g.kw)];
+                            }
+                        }
+                    }
+                    out.data_mut()[idx3(co, oy, ox, oh, ow)] = if relu { acc.max(0.0) } else { acc };
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_setup(
+        rng: &mut Pcg32,
+        g: &ConvGeom,
+        h: usize,
+        w: usize,
+    ) -> (TensorF32, TensorF32, Vec<f32>) {
+        let mut x = TensorF32::zeros(&[g.cin, h, w]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let cf = if g.depthwise { 1 } else { g.cin };
+        let mut wt = TensorF32::zeros(&[g.cout, cf, g.kh, g.kw]);
+        rng.fill_normal(wt.data_mut(), 0.3);
+        let b: Vec<f32> = (0..g.cout).map(|_| rng.normal() * 0.1).collect();
+        (x, wt, b)
+    }
+
+    /// The quantized forward must approximate the float forward to within a
+    /// few output quantization steps (error budget: input/weight rounding
+    /// amplified by the reduction, plus one output rounding).
+    #[test]
+    fn fwd_tracks_float_reference() {
+        let mut rng = Pcg32::seeded(1);
+        let g = ConvGeom { cin: 3, cout: 4, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let (x, wt, b) = rand_setup(&mut rng, &g, 8, 8);
+        let yref = ref_conv_f32(&x, &wt, &b, &g, true);
+
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&wt);
+        let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+        let oqp = QParams::observe(yref.data());
+        let mut ops = OpCounter::new();
+        let yq = qconv2d_fwd(&xq, &wq, &bq, &g, oqp, true, &mut ops);
+        let y = yq.dequantize();
+
+        let mut max_err = 0.0f32;
+        for (a, r) in y.data().iter().zip(yref.data()) {
+            max_err = max_err.max((a - r).abs());
+        }
+        // tolerance: ~couple of quantization steps across the reduction
+        let tol = 3.0 * oqp.scale + 0.05;
+        assert!(max_err < tol, "max_err={max_err} tol={tol}");
+        assert_eq!(ops.int_macs, g.fwd_macs(8, 8));
+    }
+
+    #[test]
+    fn depthwise_fwd_tracks_reference() {
+        let mut rng = Pcg32::seeded(2);
+        let g = ConvGeom { cin: 4, cout: 4, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1, depthwise: true };
+        let (x, wt, b) = rand_setup(&mut rng, &g, 9, 9);
+        let yref = ref_conv_f32(&x, &wt, &b, &g, false);
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&wt);
+        let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+        let oqp = QParams::observe(yref.data());
+        let mut ops = OpCounter::new();
+        let y = qconv2d_fwd(&xq, &wq, &bq, &g, oqp, false, &mut ops).dequantize();
+        for (a, r) in y.data().iter().zip(yref.data()) {
+            assert!((a - r).abs() < 3.0 * oqp.scale + 0.05);
+        }
+    }
+
+    /// bwd_input must match the float transposed conv on dequantized data.
+    #[test]
+    fn bwd_input_tracks_float_reference() {
+        let mut rng = Pcg32::seeded(3);
+        let g = ConvGeom { cin: 3, cout: 5, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let (h, w) = (6, 6);
+        let (oh, ow) = g.out_hw(h, w);
+        let mut e = TensorF32::zeros(&[g.cout, oh, ow]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let mut wt = TensorF32::zeros(&[g.cout, g.cin, g.kh, g.kw]);
+        rng.fill_normal(wt.data_mut(), 0.3);
+
+        // float reference: full scatter
+        let mut eref = TensorF32::zeros(&[g.cin, h, w]);
+        for co in 0..g.cout {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let ev = e.data()[idx3(co, oy, ox, oh, ow)];
+                    for ci in 0..g.cin {
+                        for ky in 0..g.kh {
+                            let iy = (oy * g.stride + ky) as isize - g.pad_h as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..g.kw {
+                                let ix = (ox * g.stride + kx) as isize - g.pad_w as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                eref.data_mut()[idx3(ci, iy as usize, ix as usize, h, w)] +=
+                                    ev * wt.data()[idx4(co, ci, ky, kx, g.cin, g.kh, g.kw)];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let eq = QTensor::quantize(&e);
+        let wq = QTensor::quantize(&wt);
+        let oqp = QParams::observe(eref.data());
+        let mut ops = OpCounter::new();
+        let got = qconv2d_bwd_input(&eq, &wq, &g, h, w, oqp, None, &mut ops).dequantize();
+        for (a, r) in got.data().iter().zip(eref.data()) {
+            assert!((a - r).abs() < 4.0 * oqp.scale + 0.1, "{a} vs {r}");
+        }
+    }
+
+    /// bwd_weight must match e ⊛ x computed in float.
+    #[test]
+    fn bwd_weight_tracks_float_reference() {
+        let mut rng = Pcg32::seeded(4);
+        let g = ConvGeom { cin: 2, cout: 3, kh: 3, kw: 3, stride: 1, pad_h: 0, pad_w: 0, depthwise: false };
+        let (h, w) = (6, 6);
+        let (oh, ow) = g.out_hw(h, w);
+        let mut x = TensorF32::zeros(&[g.cin, h, w]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut e = TensorF32::zeros(&[g.cout, oh, ow]);
+        rng.fill_normal(e.data_mut(), 1.0);
+
+        let mut gref = TensorF32::zeros(&[g.cout, g.cin, g.kh, g.kw]);
+        for co in 0..g.cout {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let ev = e.data()[idx3(co, oy, ox, oh, ow)];
+                    for ci in 0..g.cin {
+                        for ky in 0..g.kh {
+                            for kx in 0..g.kw {
+                                let xv = x.data()[idx3(ci, oy + ky, ox + kx, h, w)];
+                                gref.data_mut()[idx4(co, ci, ky, kx, g.cin, g.kh, g.kw)] +=
+                                    ev * xv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let eq = QTensor::quantize(&e);
+        let xq = QTensor::quantize(&x);
+        let mut ops = OpCounter::new();
+        let (gw, gb) = qconv2d_bwd_weight(&eq, &xq, &g, None, &mut ops);
+        // grad error budget ~ quant steps of e and x times reduction size
+        let red = (oh * ow) as f32;
+        let tol = red * (eq.qp.scale * xq.qp.scale) * 3.0 + red.sqrt() * 0.1;
+        for (a, r) in gw.data().iter().zip(gref.data()) {
+            assert!((a - r).abs() < tol, "{a} vs {r} tol={tol}");
+        }
+        // bias grad = sum of error per out channel
+        for co in 0..g.cout {
+            let want: f32 = (0..oh * ow).map(|i| e.data()[co * oh * ow + i]).sum();
+            assert!((gb.data()[co] - want).abs() < red * eq.qp.scale);
+        }
+    }
+
+    /// Masked-out channels must produce exactly zero gradient and exactly
+    /// zero contribution to the backpropagated error.
+    #[test]
+    fn sparse_mask_skips_channels_exactly() {
+        let mut rng = Pcg32::seeded(5);
+        let g = ConvGeom { cin: 3, cout: 6, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let (h, w) = (5, 5);
+        let (oh, ow) = g.out_hw(h, w);
+        let mut e = TensorF32::zeros(&[g.cout, oh, ow]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let mut x = TensorF32::zeros(&[g.cin, h, w]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut wt = TensorF32::zeros(&[g.cout, g.cin, g.kh, g.kw]);
+        rng.fill_normal(wt.data_mut(), 0.3);
+
+        let eq = QTensor::quantize(&e);
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&wt);
+        let keep = vec![true, false, true, false, false, true];
+
+        let mut ops = OpCounter::new();
+        let (gw, gb) = qconv2d_bwd_weight(&eq, &xq, &g, Some(&keep), &mut ops);
+        for co in 0..g.cout {
+            let z = gw.outer(co).iter().all(|&v| v == 0.0);
+            assert_eq!(z, !keep[co], "channel {co}");
+            if !keep[co] {
+                assert_eq!(gb.data()[co], 0.0);
+            }
+        }
+
+        // bwd_input with mask == bwd_input where masked channels' error is
+        // replaced by the error zero point (exact-zero contribution).
+        let oqp = QParams::from_min_max(-1.0, 1.0);
+        let mut ops2 = OpCounter::new();
+        let masked = qconv2d_bwd_input(&eq, &wq, &g, h, w, oqp, Some(&keep), &mut ops2);
+        let mut ez = eq.clone();
+        for co in 0..g.cout {
+            if !keep[co] {
+                let z = ez.qp.qzero();
+                for v in ez.values.outer_mut(co) {
+                    *v = z;
+                }
+            }
+        }
+        let mut ops3 = OpCounter::new();
+        let zeroed = qconv2d_bwd_input(&ez, &wq, &g, h, w, oqp, None, &mut ops3);
+        assert_eq!(masked.values.data(), zeroed.values.data());
+        // and the mask must reduce counted MACs proportionally
+        assert_eq!(ops2.int_macs, ops3.int_macs / 6 * 3);
+    }
+
+    #[test]
+    fn relu_mask_zeroes_inactive_positions() {
+        let y = QTensor {
+            values: crate::tensor::TensorU8::from_vec(&[1, 2, 2], vec![5, 10, 5, 200]),
+            qp: QParams { scale: 0.1, zero_point: 5 },
+        };
+        let mut e = QTensor {
+            values: crate::tensor::TensorU8::from_vec(&[1, 2, 2], vec![77, 88, 99, 111]),
+            qp: QParams { scale: 0.2, zero_point: 100 },
+        };
+        let mut ops = OpCounter::new();
+        relu_bwd_mask_q(&mut e, &y, &mut ops);
+        assert_eq!(e.values.data(), &[100, 88, 100, 111]);
+    }
+
+    /// Property: forward output always within the uint8 range and exactly at
+    /// z_out where ReLU clips.
+    #[test]
+    fn prop_fwd_relu_floor_is_zero_point() {
+        Prop::new(24).check(
+            |r: &mut Pcg32| {
+                let cin = 1 + r.below(3) as usize;
+                let cout = 1 + r.below(4) as usize;
+                let h = 3 + r.below(5) as usize;
+                (cin, cout, h, r.next_u64())
+            },
+            |&(cin, cout, h, s)| {
+                shrink_dim(h, 3).into_iter().map(|h2| (cin, cout, h2, s)).collect()
+            },
+            |&(cin, cout, h, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let g = ConvGeom { cin, cout, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+                let (x, wt, b) = rand_setup(&mut rng, &g, h, h);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&wt);
+                let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+                let oqp = QParams::from_min_max(-1.0, 3.0);
+                let mut ops = OpCounter::new();
+                let y = qconv2d_fwd(&xq, &wq, &bq, &g, oqp, true, &mut ops);
+                for &v in y.values.data() {
+                    if (v as i32) < oqp.zero_point {
+                        return Err(format!("value {v} below zero point {}", oqp.zero_point));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

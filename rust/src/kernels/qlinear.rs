@@ -1,0 +1,280 @@
+//! Quantized fully connected layer: forward (Eq. 3 with `·` = matvec),
+//! error backprop `E_{n-1} = Wᵀ·E_n` (Eq. 1/4) and weight gradient
+//! `∇W = E_n · X_nᵀ` (Eq. 2).
+//!
+//! Layouts: input `[In]`, weights `[Out, In]`, output `[Out]` — per-sample
+//! vectors (the paper's minibatching accumulates gradients over successive
+//! samples instead of adding a batch dimension, §III-A).
+//!
+//! The sparse-update "structures" of a linear layer are its output rows
+//! (paper §III-B: rows/columns); `keep` masks whole rows.
+
+use crate::kernels::OpCounter;
+use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
+use crate::tensor::TensorF32;
+
+/// Forward: `y = relu?(W·x + b)` fully quantized.
+pub fn qlinear_fwd(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let n_in = x.len();
+    let n_out = w.shape()[0];
+    assert_eq!(w.shape()[1], n_in, "weight/input dims mismatch");
+    assert_eq!(bias.len(), n_out);
+
+    let zx = x.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale);
+    let xd = x.values.data();
+    let wd = w.values.data();
+
+    let mut out = QTensor::zeros(&[n_out], out_qp);
+    let od = out.values.data_mut();
+    for o in 0..n_out {
+        let row = &wd[o * n_in..(o + 1) * n_in];
+        let mut acc: i32 = bias[o];
+        for (xv, wv) in xd.iter().zip(row.iter()) {
+            acc += (*xv as i32 - zx) * (*wv as i32 - zw);
+        }
+        od[o] = requantize(acc, mult, out_qp.zero_point, relu);
+    }
+
+    ops.int_macs += (n_out * n_in) as u64;
+    ops.int_ops += n_out as u64;
+    ops.bytes += (n_in + n_out * n_in + n_out) as u64;
+    out
+}
+
+/// Error backprop: `e_in = Wᵀ · e_out`, quantized (Eq. 4). `keep` masks
+/// output rows (sparse updates).
+pub fn qlinear_bwd_input(
+    e: &QTensor,
+    w: &QTensor,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let n_out = e.len();
+    let n_in = w.shape()[1];
+    assert_eq!(w.shape()[0], n_out);
+
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale);
+    let ed = e.values.data();
+    let wd = w.values.data();
+
+    let mut acc = vec![0i32; n_in];
+    let mut kept = 0u64;
+    for o in 0..n_out {
+        if let Some(k) = keep {
+            if !k[o] {
+                continue;
+            }
+        }
+        kept += 1;
+        let ev = ed[o] as i32 - ze;
+        if ev == 0 {
+            continue;
+        }
+        let row = &wd[o * n_in..(o + 1) * n_in];
+        for (a, wv) in acc.iter_mut().zip(row.iter()) {
+            *a += ev * (*wv as i32 - zw);
+        }
+    }
+
+    let mut out = QTensor::zeros(&[n_in], out_qp);
+    for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+        *o = requantize(a, mult, out_qp.zero_point, false);
+    }
+
+    ops.int_macs += kept * n_in as u64;
+    ops.int_ops += n_in as u64;
+    ops.bytes += (n_out + n_out * n_in + n_in) as u64;
+    out
+}
+
+/// Weight gradient in float: `∇W[o][i] = s_e·s_x · (e[o]−z_e)(x[i]−z_x)`,
+/// bias gradient `∇b[o] = s_e · (e[o]−z_e)`. Not requantized (Eq. 5 runs in
+/// float). `keep` masks output rows.
+pub fn qlinear_bwd_weight(
+    e: &QTensor,
+    x: &QTensor,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    let n_out = e.len();
+    let n_in = x.len();
+    let ze = e.qp.zero_point;
+    let zx = x.qp.zero_point;
+    let s = e.qp.scale * x.qp.scale;
+    let ed = e.values.data();
+    let xd = x.values.data();
+
+    let mut gw = TensorF32::zeros(&[n_out, n_in]);
+    let mut gb = TensorF32::zeros(&[n_out]);
+    let mut kept = 0u64;
+    for o in 0..n_out {
+        if let Some(k) = keep {
+            if !k[o] {
+                continue;
+            }
+        }
+        kept += 1;
+        let ev = ed[o] as i32 - ze;
+        gb.data_mut()[o] = ev as f32 * e.qp.scale;
+        if ev == 0 {
+            continue;
+        }
+        let row = gw.outer_mut(o);
+        for (gv, xv) in row.iter_mut().zip(xd.iter()) {
+            *gv = (ev * (*xv as i32 - zx)) as f32 * s;
+        }
+    }
+
+    ops.int_macs += kept * n_in as u64;
+    ops.float_ops += kept * n_in as u64;
+    ops.bytes += (n_out + n_in + n_out * n_in * 4) as u64;
+    (gw, gb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::{shrink_dim, Prop};
+
+    fn rand_case(rng: &mut Pcg32, n_in: usize, n_out: usize) -> (TensorF32, TensorF32, Vec<f32>) {
+        let mut x = TensorF32::zeros(&[n_in]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut w = TensorF32::zeros(&[n_out, n_in]);
+        rng.fill_normal(w.data_mut(), 0.3);
+        let b: Vec<f32> = (0..n_out).map(|_| rng.normal() * 0.1).collect();
+        (x, w, b)
+    }
+
+    #[test]
+    fn fwd_tracks_float_matvec() {
+        let mut rng = Pcg32::seeded(21);
+        let (n_in, n_out) = (32, 10);
+        let (x, w, b) = rand_case(&mut rng, n_in, n_out);
+        let mut yref = vec![0f32; n_out];
+        for o in 0..n_out {
+            yref[o] = b[o] + (0..n_in).map(|i| w.data()[o * n_in + i] * x.data()[i]).sum::<f32>();
+        }
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&w);
+        let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+        let oqp = QParams::observe(&yref);
+        let mut ops = OpCounter::new();
+        let y = qlinear_fwd(&xq, &wq, &bq, oqp, false, &mut ops).dequantize();
+        for (a, r) in y.data().iter().zip(yref.iter()) {
+            assert!((a - r).abs() < 3.0 * oqp.scale + 0.05, "{a} vs {r}");
+        }
+        assert_eq!(ops.int_macs, (n_in * n_out) as u64);
+    }
+
+    #[test]
+    fn bwd_input_tracks_float_wt_e() {
+        let mut rng = Pcg32::seeded(22);
+        let (n_in, n_out) = (24, 12);
+        let (_, w, _) = rand_case(&mut rng, n_in, n_out);
+        let mut e = TensorF32::zeros(&[n_out]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let mut eref = vec![0f32; n_in];
+        for i in 0..n_in {
+            eref[i] = (0..n_out).map(|o| w.data()[o * n_in + i] * e.data()[o]).sum();
+        }
+        let eq = QTensor::quantize(&e);
+        let wq = QTensor::quantize(&w);
+        let oqp = QParams::observe(&eref);
+        let mut ops = OpCounter::new();
+        let got = qlinear_bwd_input(&eq, &wq, oqp, None, &mut ops).dequantize();
+        for (a, r) in got.data().iter().zip(eref.iter()) {
+            assert!((a - r).abs() < 4.0 * oqp.scale + 0.1, "{a} vs {r}");
+        }
+    }
+
+    #[test]
+    fn bwd_weight_is_outer_product() {
+        let mut rng = Pcg32::seeded(23);
+        let (n_in, n_out) = (16, 8);
+        let mut x = TensorF32::zeros(&[n_in]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut e = TensorF32::zeros(&[n_out]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let eq = QTensor::quantize(&e);
+        let xq = QTensor::quantize(&x);
+        let mut ops = OpCounter::new();
+        let (gw, gb) = qlinear_bwd_weight(&eq, &xq, None, &mut ops);
+        for o in 0..n_out {
+            for i in 0..n_in {
+                let want = e.data()[o] * x.data()[i];
+                let got = gw.data()[o * n_in + i];
+                assert!((got - want).abs() < 0.1, "{got} vs {want}");
+            }
+            assert!((gb.data()[o] - e.data()[o]).abs() < eq.qp.scale);
+        }
+    }
+
+    #[test]
+    fn sparse_mask_rows_skipped_exactly() {
+        let mut rng = Pcg32::seeded(24);
+        let (n_in, n_out) = (10, 6);
+        let mut x = TensorF32::zeros(&[n_in]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut e = TensorF32::zeros(&[n_out]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let eq = QTensor::quantize(&e);
+        let xq = QTensor::quantize(&x);
+        let keep = vec![true, false, false, true, false, true];
+        let mut ops = OpCounter::new();
+        let (gw, gb) = qlinear_bwd_weight(&eq, &xq, Some(&keep), &mut ops);
+        for o in 0..n_out {
+            let all_zero = gw.outer(o).iter().all(|&v| v == 0.0) && gb.data()[o] == 0.0;
+            assert_eq!(all_zero, !keep[o]);
+        }
+        assert_eq!(ops.int_macs, 3 * n_in as u64);
+    }
+
+    #[test]
+    fn prop_fwd_output_in_quant_range() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| (1 + r.below(64) as usize, 1 + r.below(32) as usize, r.next_u64()),
+            |&(i, o, s)| {
+                let mut v = Vec::new();
+                for i2 in shrink_dim(i, 1) {
+                    v.push((i2, o, s));
+                }
+                for o2 in shrink_dim(o, 1) {
+                    v.push((i, o2, s));
+                }
+                v
+            },
+            |&(n_in, n_out, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let (x, w, b) = rand_case(&mut rng, n_in, n_out);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&w);
+                let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+                let oqp = QParams::from_min_max(-2.0, 2.0);
+                let mut ops = OpCounter::new();
+                let y = qlinear_fwd(&xq, &wq, &bq, oqp, true, &mut ops);
+                if y.len() != n_out {
+                    return Err("bad output length".into());
+                }
+                for &v in y.values.data() {
+                    if (v as i32) < oqp.zero_point {
+                        return Err(format!("relu floor violated: {v}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

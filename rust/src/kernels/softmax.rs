@@ -1,0 +1,119 @@
+//! Softmax cross-entropy head.
+//!
+//! The loss and the initial error `E_N = softmax(logits) − onehot(label)`
+//! are always computed in float (a K-element vector — negligible cost even
+//! on the Cortex-M0+). For the fully quantized configuration the logits
+//! arrive as a dequantized uint8 tensor and the initial error is immediately
+//! requantized with the head error observer's parameters; for the mixed /
+//! float configurations it stays in float.
+
+use crate::kernels::OpCounter;
+use crate::quant::{QParams, QTensor};
+use crate::tensor::TensorF32;
+
+/// Numerically stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Cross-entropy loss and the initial backward error, in float.
+/// Returns `(loss, probs, error)` with `error = probs − onehot(label)`.
+pub fn softmax_ce(logits: &[f32], label: usize, ops: &mut OpCounter) -> (f32, Vec<f32>, TensorF32) {
+    assert!(label < logits.len(), "label out of range");
+    let probs = softmax(logits);
+    let loss = -(probs[label].max(1e-12)).ln();
+    let mut err = probs.clone();
+    err[label] -= 1.0;
+    ops.float_ops += 4 * logits.len() as u64;
+    (loss, probs, TensorF32::from_vec(&[logits.len()], err))
+}
+
+/// Quantized head entry point: dequantize logits, compute loss/error in
+/// float, requantize the error at `err_qp` (the head error observer's
+/// current parameters). Returns `(loss, probs, quantized error, float
+/// error)` — the float error is what the observer should be fed.
+pub fn softmax_ce_q(
+    logits: &QTensor,
+    label: usize,
+    err_qp: QParams,
+    ops: &mut OpCounter,
+) -> (f32, Vec<f32>, QTensor, TensorF32) {
+    let lf = logits.dequantize();
+    let (loss, probs, err_f) = softmax_ce(lf.data(), label, ops);
+    let err_q = QTensor::quantize_with(&err_f, err_qp);
+    ops.int_ops += err_f.len() as u64;
+    (loss, probs, err_q, err_f)
+}
+
+/// Top-1 prediction from logits.
+pub fn predict(logits: &[f32]) -> usize {
+    crate::util::stats::argmax(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let p = softmax(&[1000.0, 1000.0, 1000.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn ce_loss_decreases_with_confidence() {
+        let mut ops = OpCounter::new();
+        let (l_bad, _, _) = softmax_ce(&[0.0, 0.0], 0, &mut ops);
+        let (l_good, _, _) = softmax_ce(&[5.0, 0.0], 0, &mut ops);
+        assert!(l_good < l_bad);
+        assert!((l_bad - (2f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn error_is_probs_minus_onehot() {
+        let mut ops = OpCounter::new();
+        let (_, probs, err) = softmax_ce(&[1.0, 2.0, 3.0], 1, &mut ops);
+        assert!((err.data()[0] - probs[0]).abs() < 1e-6);
+        assert!((err.data()[1] - (probs[1] - 1.0)).abs() < 1e-6);
+        // errors sum to zero
+        assert!(err.data().iter().sum::<f32>().abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_matches_finite_difference_of_loss() {
+        let logits = [0.3f32, -0.7, 1.1, 0.2];
+        let label = 2;
+        let mut ops = OpCounter::new();
+        let (_, _, err) = softmax_ce(&logits, label, &mut ops);
+        let eps = 1e-3;
+        for i in 0..logits.len() {
+            let mut lp = logits;
+            lp[i] += eps;
+            let mut lm = logits;
+            lm[i] -= eps;
+            let (l1, _, _) = softmax_ce(&lp, label, &mut ops);
+            let (l2, _, _) = softmax_ce(&lm, label, &mut ops);
+            let num = (l1 - l2) / (2.0 * eps);
+            assert!((num - err.data()[i]).abs() < 1e-3, "{num} vs {}", err.data()[i]);
+        }
+    }
+
+    #[test]
+    fn quantized_head_roundtrip() {
+        let logits_f = TensorF32::from_vec(&[3], vec![0.5, -0.2, 1.5]);
+        let lq = QTensor::quantize(&logits_f);
+        let err_qp = QParams::from_min_max(-1.0, 1.0);
+        let mut ops = OpCounter::new();
+        let (loss, probs, err_q, err_f) = softmax_ce_q(&lq, 2, err_qp, &mut ops);
+        assert!(loss > 0.0);
+        assert_eq!(predict(&probs.iter().map(|&p| p).collect::<Vec<_>>()), 2);
+        // quantized error tracks the float error
+        for (q, f) in err_q.dequantize().data().iter().zip(err_f.data()) {
+            assert!((q - f).abs() <= 0.5 * err_qp.scale + 1e-6);
+        }
+    }
+}

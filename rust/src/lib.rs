@@ -1,0 +1,30 @@
+//! # tinytrain
+//!
+//! Reproduction of *"On-Device Training of Fully Quantized Deep Neural
+//! Networks on Cortex-M Microcontrollers"* (Deutel et al., IEEE TCAD 2024)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//!  * **L3 (this crate)** — the on-device training framework: fully
+//!    quantized training (FQT, §III-A), dynamic sparse gradient updates
+//!    (§III-B), the training coordinator, memory planner, MCU device
+//!    models, and synthetic dataset substrates.
+//!  * **L2/L1 (`python/compile/`)** — JAX train-step graphs calling Pallas
+//!    FQT kernels, AOT-lowered once to HLO text artifacts.
+//!  * **runtime** — loads the artifacts via the PJRT C API (`xla` crate)
+//!    and executes them from Rust; Python is never on the training path.
+//!
+//! See DESIGN.md for the system inventory and the experiment index, and
+//! EXPERIMENTS.md for reproduced numbers.
+
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod graph;
+pub mod harness;
+pub mod kernels;
+pub mod memplan;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,227 @@
+//! `tinytrain` CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   train     full on-device training (native or XLA backend)
+//!   transfer  on-device transfer learning on a dataset stand-in
+//!   plan      memory plan for a (model, dataset, config) deployment
+//!   devices   print the Tab. II device inventory
+//!   stream    run the streaming coordinator scenario (domain shift)
+
+use tinytrain::coordinator::{stream::SampleStream, Coordinator, CoordinatorConfig};
+use tinytrain::data::{spec_by_name, Domain};
+use tinytrain::device;
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::harness::{self, Knobs};
+use tinytrain::memplan;
+use tinytrain::train::fqt::FqtSgd;
+use tinytrain::train::loop_::Sparsity;
+use tinytrain::util::argparse::Args;
+use tinytrain::util::bench::fmt_duration;
+
+const HELP: &str = "tinytrain — on-device FQT training (Deutel et al., TCAD'24 reproduction)
+
+USAGE: tinytrain <command> [--options]
+
+COMMANDS:
+  train     --dataset <name> --config <uint8|mixed|float32> [--epochs N]
+            [--backend native|xla] [--seed N]
+  transfer  --dataset <name> --config <..> [--lambda-min F] [--epochs N]
+  plan      --dataset <name> --config <..> [--model mbednet|mnist_cnn|mcunet5fps]
+  devices
+  stream    --dataset <name> [--samples N] [--rate HZ] [--device <name>]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{HELP}");
+        return;
+    };
+    let args = Args::parse(&argv[1..], &["help"]).unwrap();
+    let code = match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "transfer" => cmd_transfer(&args),
+        "plan" => cmd_plan(&args),
+        "devices" => cmd_devices(),
+        "stream" => cmd_stream(&args),
+        _ => {
+            print!("{HELP}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn config(args: &Args) -> DnnConfig {
+    DnnConfig::parse(&args.get_or("config", "uint8")).unwrap_or(DnnConfig::Uint8)
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let name = args.get_or("dataset", "emnist-digits");
+    let Some(spec) = spec_by_name(&name) else {
+        eprintln!("unknown dataset {name}");
+        return 1;
+    };
+    let cfg = config(args);
+    let seed = args.u64_or("seed", 1);
+    let mut knobs = Knobs::from_env();
+    knobs.epochs = args.usize_or("epochs", knobs.epochs);
+
+    if args.get_or("backend", "native") == "xla" {
+        // AOT HLO path (mnist-family shapes only — see python/compile)
+        let dir = tinytrain::runtime::artifacts_dir();
+        let mut t = match tinytrain::runtime::xla_trainer::load_fqt_trainer(
+            &dir,
+            (-2.0, 4.0),
+            harness::LR,
+            harness::BATCH,
+            seed,
+        ) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        };
+        let dom = Domain::new(&spec, [1, 28, 28], seed);
+        let mut rng = tinytrain::util::prng::Pcg32::seeded(seed);
+        let (tr, te) = dom.splits(knobs.train_pc * 2, knobs.test_pc * 2, &mut rng);
+        for ep in 0..knobs.epochs {
+            let mut tot = 0.0;
+            for (x, &y) in tr.xs.iter().zip(&tr.ys) {
+                tot += t.train_step(x, y).unwrap().0;
+            }
+            t.finish();
+            let acc = t.evaluate(&te.xs, &te.ys).unwrap();
+            println!("epoch {ep}: loss={:.4} test_acc={acc:.3}", tot / tr.len() as f32);
+        }
+        return 0;
+    }
+
+    let (rep, _) = harness::run_full_training(&spec, cfg, &knobs, seed);
+    for (i, e) in rep.epochs.iter().enumerate() {
+        println!(
+            "epoch {i}: loss={:.4} train_acc={:.3} test_acc={:.3}",
+            e.train_loss, e.train_acc, e.test_acc
+        );
+    }
+    0
+}
+
+fn cmd_transfer(args: &Args) -> i32 {
+    let name = args.get_or("dataset", "cifar10");
+    let Some(spec) = spec_by_name(&name) else {
+        eprintln!("unknown dataset {name}");
+        return 1;
+    };
+    let cfg = config(args);
+    let lambda = args.f32_or("lambda-min", 1.0);
+    let seed = args.u64_or("seed", 1);
+    let mut knobs = Knobs::from_env();
+    knobs.epochs = args.usize_or("epochs", knobs.epochs);
+
+    let src = Domain::new(&spec, spec.reduced_shape, seed);
+    let def = harness::mbednet_for(&spec, &spec.reduced_shape);
+    println!("pretraining on source domain…");
+    let (fp, base) = harness::pretrain(&def, &src, knobs.epochs, &knobs, seed ^ 1);
+    println!("source baseline accuracy: {base:.3}");
+    let mut scen = harness::tl_scenario(&spec, cfg, &fp, &src, &knobs, seed ^ 2);
+    let rep = harness::run_tl(&mut scen, lambda, &knobs, seed ^ 3);
+    for (i, e) in rep.epochs.iter().enumerate() {
+        println!("epoch {i}: loss={:.4} test_acc={:.3}", e.train_loss, e.test_acc);
+    }
+    println!("kept gradient structures: {:.1}%", rep.kept_fraction * 100.0);
+    0
+}
+
+fn cmd_plan(args: &Args) -> i32 {
+    let name = args.get_or("dataset", "cifar10");
+    let Some(spec) = spec_by_name(&name) else {
+        eprintln!("unknown dataset {name}");
+        return 1;
+    };
+    let cfg = config(args);
+    let model_name = args.get_or("model", "mbednet");
+    let Some(def) = models::by_name(&model_name, &spec.paper_shape, spec.classes) else {
+        eprintln!("unknown model {model_name}");
+        return 1;
+    };
+    let train_plan = memplan::plan(&def, cfg, true);
+    let infer_plan = memplan::plan(&def, cfg, false);
+    println!("{model_name} on {name} ({cfg:?}), paper shape {:?}:", spec.paper_shape);
+    println!("  feature RAM (training):  {:>8} B", train_plan.feature_ram);
+    println!("  weights+grads RAM:       {:>8} B", train_plan.weight_ram);
+    println!("  total RAM (training):    {:>8} B", train_plan.total_ram());
+    println!("  total RAM (inference):   {:>8} B", infer_plan.total_ram());
+    println!("  Flash:                   {:>8} B", train_plan.flash);
+    for d in device::all_devices() {
+        let ok = d.fits(train_plan.total_ram(), train_plan.flash);
+        println!("  fits {:<10} {}", d.name, if ok { "yes" } else { "NO" });
+    }
+    0
+}
+
+fn cmd_devices() -> i32 {
+    println!(
+        "{:<11} {:<11} {:>9} {:>10} {:>10} {:>8} {:>5} {:>5}",
+        "name", "core", "clock", "idle (mA)", "flash", "ram", "fpu", "simd"
+    );
+    for d in device::all_devices() {
+        println!(
+            "{:<11} {:<11} {:>6} MHz {:>10.2} {:>9}K {:>7}K {:>5} {:>5}",
+            d.name,
+            d.core,
+            (d.clock_hz / 1e6) as u64,
+            d.idle_a * 1e3,
+            d.flash_bytes / 1024,
+            d.ram_bytes / 1024,
+            d.has_fpu,
+            d.has_dsp_simd
+        );
+    }
+    0
+}
+
+fn cmd_stream(args: &Args) -> i32 {
+    let name = args.get_or("dataset", "cifar10");
+    let Some(mut spec) = spec_by_name(&name) else {
+        eprintln!("unknown dataset {name}");
+        return 1;
+    };
+    // shrink spatial dims so the stream demo stays interactive
+    spec.reduced_shape = [
+        spec.reduced_shape[0],
+        spec.reduced_shape[1].min(16),
+        spec.reduced_shape[2].min(16).max(8),
+    ];
+    let samples = args.usize_or("samples", 200);
+    let rate = args.f32_or("rate", 10.0) as f64;
+    let dev = device::by_name(&args.get_or("device", "imxrt1062")).unwrap_or(device::imxrt1062());
+    let seed = args.u64_or("seed", 1);
+
+    let mut rng = tinytrain::util::prng::Pcg32::seeded(seed);
+    let shape = spec.reduced_shape;
+    let dom = Domain::new(&spec, shape, seed);
+    let def = models::mnist_cnn(&shape, spec.classes);
+    let fp = tinytrain::graph::exec::FloatParams::init(&def, &mut rng);
+    let (cal, _) = dom.splits(1, 0, &mut rng);
+    let calib = tinytrain::graph::exec::calibrate(&def, &fp, &cal.xs);
+    let model = tinytrain::graph::exec::NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
+    let mut opt = FqtSgd::new(&model, harness::LR, harness::BATCH);
+    let mut coord =
+        Coordinator::new(model, dev, &mut opt, Sparsity::Dense, CoordinatorConfig::default(), seed);
+    let shifted = dom.shifted(seed ^ 42);
+    let mut stream =
+        SampleStream::with_shift(&dom, &shifted, samples, samples / 2, 1.0 / rate, seed);
+    let t = coord.run(&mut stream);
+    println!("arrivals: {}  train steps: {}", t.arrivals, t.train_steps);
+    println!("online accuracy: {:.3}", t.online_accuracy());
+    println!(
+        "utilization: {:.1}%  busy {}  elapsed {}",
+        t.utilization() * 100.0,
+        fmt_duration(t.busy_s),
+        fmt_duration(t.elapsed_s)
+    );
+    println!("energy: {:.3} J", t.energy_j);
+    0
+}

@@ -1,0 +1,334 @@
+//! Memory planner — the deployment-framework component behind Figs. 4c/4d
+//! and the memory half of Fig. 9.
+//!
+//! The paper's framework needs three memory segments (§IV-A):
+//!
+//!  1. **feature RAM** — an arena holding activations/errors. For plain
+//!     inference consecutive tensors can reuse heap aggressively; training
+//!     extends lifetimes (Fig. 1's data dependencies: a trainable layer's
+//!     *input* must survive until its backward step, ReLU outputs are
+//!     needed for masking, pool argmaxes for routing), so reuse
+//!     opportunities shrink — exactly the effect the paper describes.
+//!  2. **weight RAM** — trainable weights (they are written at runtime so
+//!     they cannot stay in Flash) plus gradient-accumulation buffers and
+//!     optimizer statistics.
+//!  3. **Flash** — frozen weights and the runtime image.
+//!
+//! The planner performs a lifetime analysis over the fwd+bwd schedule and a
+//! greedy best-fit arena allocation (size-descending first fit — the
+//! standard offline dynamic-storage-allocation heuristic used by MCU
+//! inference libraries [2], [3]).
+
+use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
+
+/// Fixed Flash overhead of the runtime image (scheduler, kernels, CLI).
+pub const RUNTIME_FLASH_BYTES: usize = 48 * 1024;
+
+/// One tensor to place in the arena.
+#[derive(Clone, Debug)]
+pub struct ArenaItem {
+    pub name: String,
+    pub bytes: usize,
+    /// First timestep (inclusive) the tensor is live.
+    pub birth: usize,
+    /// Last timestep (inclusive).
+    pub death: usize,
+}
+
+/// Result of arena placement.
+#[derive(Clone, Debug)]
+pub struct ArenaPlan {
+    pub items: Vec<(ArenaItem, usize)>, // (item, offset)
+    pub total_bytes: usize,
+}
+
+/// Greedy best-fit placement: size-descending, first offset where the item
+/// fits without overlapping any already-placed, lifetime-overlapping item.
+pub fn allocate_arena(mut items: Vec<ArenaItem>) -> ArenaPlan {
+    items.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.birth.cmp(&b.birth)));
+    let mut placed: Vec<(ArenaItem, usize)> = Vec::with_capacity(items.len());
+    let mut total = 0usize;
+    for it in items {
+        // collect intervals of already-placed, time-overlapping items
+        let mut blocked: Vec<(usize, usize)> = placed
+            .iter()
+            .filter(|(p, _)| !(p.death < it.birth || p.birth > it.death))
+            .map(|(p, off)| (*off, *off + p.bytes))
+            .collect();
+        blocked.sort_unstable();
+        // first gap large enough
+        let mut offset = 0usize;
+        for (lo, hi) in blocked {
+            if offset + it.bytes <= lo {
+                break;
+            }
+            offset = offset.max(hi);
+        }
+        total = total.max(offset + it.bytes);
+        placed.push((it, offset));
+    }
+    ArenaPlan { items: placed, total_bytes: total }
+}
+
+/// The three-segment memory report (Figs. 4c/4d).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryReport {
+    /// Feature-map arena bytes (activations + error tensors + argmaxes).
+    pub feature_ram: usize,
+    /// Trainable weights + gradient buffers + optimizer state bytes.
+    pub weight_ram: usize,
+    /// Frozen weights + runtime image bytes.
+    pub flash: usize,
+}
+
+impl MemoryReport {
+    pub fn total_ram(&self) -> usize {
+        self.feature_ram + self.weight_ram
+    }
+}
+
+fn act_bytes(shape: &[usize], prec: Precision) -> usize {
+    let n: usize = shape.iter().product();
+    match prec {
+        Precision::Uint8 => n,
+        Precision::Float32 => n * 4,
+    }
+}
+
+/// Plan memory for a deployment. `training=false` gives the inference-only
+/// plan (the baseline the training overhead is measured against).
+pub fn plan(def: &ModelDef, cfg: DnnConfig, training: bool) -> MemoryReport {
+    let n = def.layers.len();
+    let prec = def.precisions(cfg);
+    let shapes = def.shapes();
+    let stop = if training { def.first_trainable().unwrap_or(n) } else { n };
+
+    // --- feature arena -------------------------------------------------
+    // Timeline: fwd steps 0..n, bwd steps for layer i at time 2n-1-i.
+    let bwd_t = |i: usize| 2 * n - 1 - i;
+    let mut items: Vec<ArenaItem> = Vec::new();
+
+    // input tensor: live through fwd step 0; if layer 0 is trainable its
+    // input is needed at layer 0's backward step.
+    let in_prec = prec[0];
+    let input_death = if training && def.layers[0].trainable { bwd_t(0) } else { 0 };
+    items.push(ArenaItem {
+        name: "input".into(),
+        bytes: act_bytes(&def.input_shape, in_prec),
+        birth: 0,
+        death: input_death,
+    });
+
+    for i in 0..n {
+        // activation of layer i: born at fwd step i, consumed at fwd i+1;
+        // training extends it if (a) layer i+1 is trainable (bwd_weight
+        // needs its input), or (b) layer i itself needs its output for the
+        // backward pass (ReLU mask / pool routing) and the error reaches it.
+        let mut death = if i + 1 < n { i + 1 } else { i };
+        if training {
+            if i + 1 < n && def.layers[i + 1].trainable {
+                death = death.max(bwd_t(i + 1));
+            }
+            let err_reaches = i >= stop;
+            let needs_own_output = matches!(
+                def.layers[i].kind,
+                LayerKind::Conv { relu: true, .. } | LayerKind::Linear { relu: true, .. }
+            );
+            if err_reaches && needs_own_output {
+                death = death.max(bwd_t(i));
+            }
+            // final activation feeds the loss at the start of backward
+            if i == n - 1 {
+                death = death.max(bwd_t(n - 1));
+            }
+        }
+        items.push(ArenaItem {
+            name: format!("act{i}"),
+            bytes: act_bytes(&shapes[i], prec[i]),
+            birth: i,
+            death,
+        });
+
+        if training {
+            // pool argmax buffers (u32 per output) live fwd(i)..bwd(i)
+            if matches!(def.layers[i].kind, LayerKind::MaxPool { .. }) && i >= stop {
+                let n_out: usize = shapes[i].iter().product();
+                items.push(ArenaItem {
+                    name: format!("argmax{i}"),
+                    bytes: n_out * 4,
+                    birth: i,
+                    death: bwd_t(i),
+                });
+            }
+            // error tensor w.r.t. output of layer i: born at bwd(i)
+            // (produced by layer i+1's backward or the loss), consumed at
+            // bwd(i) by layer i.
+            if i >= stop {
+                items.push(ArenaItem {
+                    name: format!("err{i}"),
+                    bytes: act_bytes(&shapes[i], prec[i]),
+                    birth: bwd_t(i).saturating_sub(1),
+                    death: bwd_t(i),
+                });
+            }
+        }
+    }
+    let arena = allocate_arena(items);
+
+    // --- weights: RAM for trainable, Flash for frozen -------------------
+    let mut weight_ram = 0usize;
+    let mut flash = RUNTIME_FLASH_BYTES;
+    for (i, l) in def.layers.iter().enumerate() {
+        let (n_w, n_b) = match &l.kind {
+            LayerKind::Conv { geom, .. } => (geom.weights(), geom.cout),
+            LayerKind::Linear { n_in, n_out, .. } => (n_in * n_out, *n_out),
+            _ => continue,
+        };
+        let w_bytes = match prec[i] {
+            Precision::Uint8 => n_w + n_b * 4, // u8 weights + f32 bias
+            Precision::Float32 => (n_w + n_b) * 4,
+        };
+        if training && l.trainable {
+            weight_ram += w_bytes;
+            // gradient accumulation buffers (f32 weight + bias grads) and
+            // per-structure running stats (§III-A)
+            weight_ram += (n_w + n_b) * 4;
+            weight_ram += n_b * 17; // Welford n/mean/m2 + touched flag
+        } else {
+            flash += w_bytes;
+        }
+    }
+
+    MemoryReport { feature_ram: arena.total_bytes, weight_ram, flash }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::Prop;
+
+    #[test]
+    fn arena_reuses_disjoint_lifetimes() {
+        let items = vec![
+            ArenaItem { name: "a".into(), bytes: 100, birth: 0, death: 1 },
+            ArenaItem { name: "b".into(), bytes: 100, birth: 2, death: 3 },
+        ];
+        let plan = allocate_arena(items);
+        assert_eq!(plan.total_bytes, 100, "disjoint tensors must share");
+    }
+
+    #[test]
+    fn arena_never_overlaps_live_tensors() {
+        let items = vec![
+            ArenaItem { name: "a".into(), bytes: 100, birth: 0, death: 2 },
+            ArenaItem { name: "b".into(), bytes: 50, birth: 1, death: 3 },
+            ArenaItem { name: "c".into(), bytes: 70, birth: 2, death: 2 },
+        ];
+        let plan = allocate_arena(items);
+        assert_eq!(plan.total_bytes, 220);
+    }
+
+    #[test]
+    fn prop_arena_no_live_overlap() {
+        Prop::new(64).check(
+            |r: &mut Pcg32| {
+                let n = 2 + r.below(12) as usize;
+                (0..n)
+                    .map(|i| {
+                        let birth = r.below(10) as usize;
+                        ArenaItem {
+                            name: format!("t{i}"),
+                            bytes: 1 + r.below(256) as usize,
+                            birth,
+                            death: birth + r.below(6) as usize,
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |items| {
+                if items.len() > 2 {
+                    vec![items[..items.len() - 1].to_vec()]
+                } else {
+                    vec![]
+                }
+            },
+            |items| {
+                let plan = allocate_arena(items.clone());
+                for (i, (a, ao)) in plan.items.iter().enumerate() {
+                    for (b, bo) in plan.items.iter().skip(i + 1) {
+                        let time_overlap = !(a.death < b.birth || a.birth > b.death);
+                        let mem_overlap = ao < &(bo + b.bytes) && bo < &(ao + a.bytes);
+                        if time_overlap && mem_overlap {
+                            return Err(format!("{} and {} overlap", a.name, b.name));
+                        }
+                    }
+                }
+                if plan.total_bytes > items.iter().map(|i| i.bytes).sum::<usize>() {
+                    return Err("arena larger than sum of tensors".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn training_needs_more_feature_ram_than_inference() {
+        let m = models::mnist_cnn(&[1, 28, 28], 10);
+        let inf = plan(&m, DnnConfig::Uint8, false);
+        let tr = plan(&m, DnnConfig::Uint8, true);
+        assert!(tr.feature_ram > inf.feature_ram, "{} vs {}", tr.feature_ram, inf.feature_ram);
+        assert!(tr.weight_ram > 0 && inf.weight_ram == 0);
+    }
+
+    #[test]
+    fn float_config_needs_more_ram_than_uint8() {
+        let m = models::mnist_cnn(&[1, 28, 28], 10);
+        let q = plan(&m, DnnConfig::Uint8, true);
+        let f = plan(&m, DnnConfig::Float32, true);
+        assert!(f.feature_ram > 2 * q.feature_ram);
+        assert!(f.total_ram() > q.total_ram());
+        // mixed sits in between
+        let mx = plan(&m, DnnConfig::Mixed, true);
+        assert!(mx.total_ram() > q.total_ram() && mx.total_ram() < f.total_ram());
+    }
+
+    #[test]
+    fn transfer_learning_puts_frozen_weights_in_flash() {
+        let mut m = models::mbednet(&[3, 32, 32], 10);
+        m.set_trainable_tail(2);
+        let tl = plan(&m, DnnConfig::Uint8, true);
+        m.set_all_trainable();
+        let full = plan(&m, DnnConfig::Uint8, true);
+        assert!(tl.flash > full.flash, "frozen weights must live in flash");
+        assert!(tl.weight_ram < full.weight_ram);
+    }
+
+    #[test]
+    fn mnist_cnn_uint8_fits_all_tab2_mcus() {
+        // §IV-D deploys the uint8 full-training configuration on all three
+        // MCUs — our stand-in must satisfy the same constraint.
+        let m = models::mnist_cnn(&[1, 28, 28], 10);
+        let rep = plan(&m, DnnConfig::Uint8, true);
+        for d in crate::device::all_devices() {
+            assert!(
+                d.fits(rep.total_ram(), rep.flash),
+                "{}: ram={} flash={}",
+                d.name,
+                rep.total_ram(),
+                rep.flash
+            );
+        }
+    }
+
+    #[test]
+    fn mcunet_heavier_than_mbednet_for_training() {
+        // Fig. 9: MbedNet needs less training memory than MCUNet.
+        let mb = models::mbednet(&[3, 32, 32], 10);
+        let mc = models::mcunet5fps(&[3, 32, 32], 10);
+        let rb = plan(&mb, DnnConfig::Uint8, true);
+        let rc = plan(&mc, DnnConfig::Uint8, true);
+        assert!(rc.total_ram() > rb.total_ram(), "{} vs {}", rc.total_ram(), rb.total_ram());
+    }
+}

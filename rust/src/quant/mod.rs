@@ -1,0 +1,272 @@
+//! Linear (affine) uint8 quantization — the substrate shared by inference
+//! and training (§III-A of the paper).
+//!
+//! Per-tensor scheme: `q = clamp(round(f / s) + z, 0, 255)`, with scale `s`
+//! and zero point `z` derived from the observed float range (Eqs. 6–7). The
+//! *same* scheme is used for weights, activations, and backpropagated error
+//! tensors; weight gradients are the single exception — they stay in float
+//! because the descent step (Eq. 5) runs in float space.
+//!
+//! Rounding is *half away from zero* everywhere (`f32::round`). The Pallas
+//! kernels implement the identical rule (`sign(x) * floor(|x| + 0.5)`) so the
+//! native backend and the AOT HLO artifacts agree bit-exactly on integer
+//! paths (verified by `rust/tests/xla_cross_validation.rs`).
+
+pub mod observer;
+
+use crate::tensor::{TensorF32, TensorU8};
+
+/// Scale / zero-point pair of one quantized tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QParams {
+    /// Identity-ish params used before any observation: maps [0,255] to
+    /// [-1, 1) roughly symmetrically.
+    pub fn unit() -> QParams {
+        QParams { scale: 2.0 / 255.0, zero_point: 128 }
+    }
+
+    /// Derive parameters from an observed float range (paper Eqs. 6–7).
+    /// The range is widened to include zero so the zero point is exactly
+    /// representable (required for zero-padding in conv and ReLU clamping).
+    pub fn from_min_max(fmin: f32, fmax: f32) -> QParams {
+        let fmin = fmin.min(0.0);
+        let fmax = fmax.max(0.0);
+        let span = (fmax - fmin).max(1e-8);
+        let scale = span / 255.0;
+        let zero_point = (-fmin / scale).round().clamp(0.0, 255.0) as i32;
+        QParams { scale, zero_point }
+    }
+
+    /// Derive parameters from the contents of a float tensor.
+    pub fn observe(data: &[f32]) -> QParams {
+        let (lo, hi) = crate::util::stats::min_max(data);
+        QParams::from_min_max(lo, hi)
+    }
+
+    /// Quantize one value.
+    #[inline(always)]
+    pub fn quantize(&self, f: f32) -> u8 {
+        ((f / self.scale).round() as i32 + self.zero_point).clamp(0, 255) as u8
+    }
+
+    /// Dequantize one value.
+    #[inline(always)]
+    pub fn dequantize(&self, q: u8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+
+    /// The quantized representation of float 0 (= the zero point).
+    #[inline(always)]
+    pub fn qzero(&self) -> u8 {
+        self.zero_point.clamp(0, 255) as u8
+    }
+}
+
+/// A quantized tensor: uint8 payload plus its per-tensor parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QTensor {
+    pub values: TensorU8,
+    pub qp: QParams,
+}
+
+impl QTensor {
+    /// Quantize a float tensor with freshly derived parameters.
+    pub fn quantize(t: &TensorF32) -> QTensor {
+        let qp = QParams::observe(t.data());
+        QTensor::quantize_with(t, qp)
+    }
+
+    /// Quantize a float tensor using the provided parameters.
+    pub fn quantize_with(t: &TensorF32, qp: QParams) -> QTensor {
+        let values = TensorU8::from_vec(
+            t.shape(),
+            t.data().iter().map(|&f| qp.quantize(f)).collect(),
+        );
+        QTensor { values, qp }
+    }
+
+    /// Dequantize to float.
+    pub fn dequantize(&self) -> TensorF32 {
+        TensorF32::from_vec(
+            self.values.shape(),
+            self.values.data().iter().map(|&q| self.qp.dequantize(q)).collect(),
+        )
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.values.shape()
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Zero-filled (at the zero point) quantized tensor.
+    pub fn zeros(shape: &[usize], qp: QParams) -> QTensor {
+        QTensor { values: TensorU8::full(shape, qp.qzero()), qp }
+    }
+}
+
+/// Quantize a bias vector to i32 at scale `s_x * s_w` (zero point 0), the
+/// standard convention that lets the bias be added directly to the i32
+/// accumulator of a quantized conv / linear op.
+pub fn quantize_bias(bias: &[f32], s_x: f32, s_w: f32) -> Vec<i32> {
+    let s = s_x * s_w;
+    bias.iter().map(|&b| (b / s).round() as i32).collect()
+}
+
+/// The fixed-point requantization multiplier `s_a * s_b / s_out` used when
+/// the i32 accumulator of a quantized op is mapped back to uint8 (Eq. 4).
+#[inline(always)]
+pub fn requant_multiplier(s_a: f32, s_b: f32, s_out: f32) -> f32 {
+    s_a * s_b / s_out
+}
+
+/// Requantize one i32 accumulator value to uint8 (Eq. 4 inner expression).
+/// `relu` additionally clamps at the output zero point, implementing the
+/// folded ReLU of the paper's monolithic QConv block (Fig. 2b).
+#[inline(always)]
+pub fn requantize(acc: i32, mult: f32, z_out: i32, relu: bool) -> u8 {
+    let v = (acc as f32 * mult).round() as i32 + z_out;
+    let lo = if relu { z_out.clamp(0, 255) } else { 0 };
+    v.clamp(lo, 255) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::{shrink_dim, Prop};
+
+    #[test]
+    fn qparams_cover_range() {
+        let qp = QParams::from_min_max(-2.0, 6.0);
+        assert!((qp.scale - 8.0 / 255.0).abs() < 1e-7);
+        assert_eq!(qp.quantize(-2.0), 0);
+        assert_eq!(qp.quantize(6.0), 255);
+        // zero must be exactly representable
+        assert!((qp.dequantize(qp.qzero())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn range_widened_to_include_zero() {
+        let qp = QParams::from_min_max(2.0, 6.0);
+        assert_eq!(qp.zero_point, 0);
+        let qp2 = QParams::from_min_max(-6.0, -2.0);
+        assert_eq!(qp2.zero_point, 255);
+    }
+
+    #[test]
+    fn degenerate_range_is_safe() {
+        let qp = QParams::from_min_max(0.0, 0.0);
+        assert!(qp.scale > 0.0);
+        let q = qp.quantize(0.0);
+        assert!((qp.dequantize(q)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        Prop::new(128).check(
+            |r: &mut Pcg32| {
+                let lo = r.uniform(-10.0, 0.0);
+                let hi = r.uniform(0.0, 10.0);
+                let x = r.uniform(lo, hi);
+                (lo, hi, x)
+            },
+            |_| vec![],
+            |&(lo, hi, x)| {
+                let qp = QParams::from_min_max(lo, hi);
+                let err = (qp.dequantize(qp.quantize(x)) - x).abs();
+                if err <= 0.5 * qp.scale + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("roundtrip error {err} > s/2 = {}", qp.scale * 0.5))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn qtensor_roundtrip_shape_preserved() {
+        let mut rng = Pcg32::seeded(11);
+        let mut t = TensorF32::zeros(&[3, 4, 4]);
+        rng.fill_normal(t.data_mut(), 1.0);
+        let q = QTensor::quantize(&t);
+        let back = q.dequantize();
+        assert_eq!(back.shape(), t.shape());
+        for (a, b) in back.data().iter().zip(t.data()) {
+            assert!((a - b).abs() <= 0.5 * q.qp.scale + 1e-6);
+        }
+    }
+
+    #[test]
+    fn requantize_matches_scalar_math() {
+        let (sa, sb, so) = (0.02f32, 0.015f32, 0.11f32);
+        let m = requant_multiplier(sa, sb, so);
+        let acc = 1234i32;
+        let expect = ((acc as f32 * m).round() as i32 + 7).clamp(0, 255) as u8;
+        assert_eq!(requantize(acc, m, 7, false), expect);
+    }
+
+    #[test]
+    fn requantize_relu_clamps_at_zero_point() {
+        let m = 0.01;
+        // Negative accumulator maps below the zero point -> clamped to z.
+        assert_eq!(requantize(-5000, m, 100, true), 100);
+        assert_eq!(requantize(-5000, m, 100, false), 50);
+    }
+
+    #[test]
+    fn bias_quantization_roundtrips() {
+        let bias = [0.5f32, -0.25, 0.0];
+        let (sx, sw) = (0.05, 0.01);
+        let qb = quantize_bias(&bias, sx, sw);
+        for (q, b) in qb.iter().zip(bias.iter()) {
+            let back = *q as f32 * sx * sw;
+            assert!((back - b).abs() <= 0.5 * sx * sw + 1e-7);
+        }
+    }
+
+    #[test]
+    fn quantize_saturates_out_of_range() {
+        let qp = QParams::from_min_max(-1.0, 1.0);
+        assert_eq!(qp.quantize(100.0), 255);
+        assert_eq!(qp.quantize(-100.0), 0);
+    }
+
+    #[test]
+    fn prop_qparams_monotone() {
+        // Quantization must be monotone: f1 <= f2 -> q(f1) <= q(f2).
+        Prop::new(96).check(
+            |r: &mut Pcg32| {
+                let a = r.uniform(-5.0, 5.0);
+                let b = r.uniform(-5.0, 5.0);
+                let n = 2 + r.below(30) as usize;
+                (a.min(b), a.max(b), n)
+            },
+            |&(a, b, n)| shrink_dim(n, 2).into_iter().map(|m| (a, b, m)).collect(),
+            |&(lo, hi, n)| {
+                let qp = QParams::from_min_max(lo, hi);
+                let mut prev = qp.quantize(lo - 1.0);
+                for i in 0..n {
+                    let f = lo - 1.0 + (hi - lo + 2.0) * i as f32 / n as f32;
+                    let q = qp.quantize(f);
+                    if q < prev {
+                        return Err(format!("non-monotone at {f}"));
+                    }
+                    prev = q;
+                }
+                Ok(())
+            },
+        );
+    }
+}

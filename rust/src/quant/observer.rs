@@ -1,0 +1,168 @@
+//! Range observers: track the float range of a tensor stream and derive the
+//! quantization parameters for it.
+//!
+//! Two uses on device:
+//!  * **PTQ calibration** (`MinMaxObserver` in `absolute` mode) — run a few
+//!    calibration samples through the float model before deployment and fix
+//!    activation ranges.
+//!  * **Online error-tensor observers** (`ema` mode) — backpropagated error
+//!    tensors (Eq. 4) need scale/zero-point too. Their distribution drifts as
+//!    training converges (Fig. 3: magnitudes shrink), so we follow it with an
+//!    exponential moving average of the per-sample min/max. This is our
+//!    implementation choice for a detail the paper leaves open; it mirrors
+//!    the dynamic weight-range adaptation of Eqs. 6–7.
+
+use crate::quant::QParams;
+use crate::util::stats::Ema;
+
+/// How the observer aggregates successive ranges.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ObserverMode {
+    /// Running absolute min/max over everything ever seen (calibration).
+    Absolute,
+    /// EMA-smoothed min/max (online training observers).
+    Ema { alpha: f32 },
+}
+
+/// Tracks a float value range and yields quantization parameters.
+#[derive(Clone, Debug)]
+pub struct MinMaxObserver {
+    mode: ObserverMode,
+    abs_min: f32,
+    abs_max: f32,
+    ema_min: Ema,
+    ema_max: Ema,
+    observed: bool,
+}
+
+impl MinMaxObserver {
+    pub fn new(mode: ObserverMode) -> Self {
+        let alpha = match mode {
+            ObserverMode::Ema { alpha } => alpha,
+            ObserverMode::Absolute => 1.0,
+        };
+        MinMaxObserver {
+            mode,
+            abs_min: f32::INFINITY,
+            abs_max: f32::NEG_INFINITY,
+            ema_min: Ema::new(alpha),
+            ema_max: Ema::new(alpha),
+            observed: false,
+        }
+    }
+
+    /// Default observer for online error tensors.
+    pub fn online() -> Self {
+        MinMaxObserver::new(ObserverMode::Ema { alpha: 0.1 })
+    }
+
+    /// Default observer for PTQ calibration.
+    pub fn calibration() -> Self {
+        MinMaxObserver::new(ObserverMode::Absolute)
+    }
+
+    /// Feed one tensor's worth of float data.
+    pub fn observe(&mut self, data: &[f32]) {
+        if data.is_empty() {
+            return;
+        }
+        let (lo, hi) = crate::util::stats::min_max(data);
+        self.observe_range(lo, hi);
+    }
+
+    /// Feed a precomputed (min, max) range.
+    pub fn observe_range(&mut self, lo: f32, hi: f32) {
+        self.observed = true;
+        match self.mode {
+            ObserverMode::Absolute => {
+                self.abs_min = self.abs_min.min(lo);
+                self.abs_max = self.abs_max.max(hi);
+            }
+            ObserverMode::Ema { .. } => {
+                self.ema_min.push(lo);
+                self.ema_max.push(hi);
+            }
+        }
+    }
+
+    pub fn has_observed(&self) -> bool {
+        self.observed
+    }
+
+    /// Current range estimate (None before any observation).
+    pub fn range(&self) -> Option<(f32, f32)> {
+        if !self.observed {
+            return None;
+        }
+        Some(match self.mode {
+            ObserverMode::Absolute => (self.abs_min, self.abs_max),
+            ObserverMode::Ema { .. } => (self.ema_min.get(), self.ema_max.get()),
+        })
+    }
+
+    /// Quantization parameters for the current range; `QParams::unit()`
+    /// before any observation (a safe, wide default).
+    pub fn qparams(&self) -> QParams {
+        match self.range() {
+            Some((lo, hi)) => QParams::from_min_max(lo, hi),
+            None => QParams::unit(),
+        }
+    }
+
+    /// Seed the observer from known parameters (restoring deployed state).
+    pub fn seed_from(&mut self, qp: QParams) {
+        let lo = (0 - qp.zero_point) as f32 * qp.scale;
+        let hi = (255 - qp.zero_point) as f32 * qp.scale;
+        self.observe_range(lo, hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absolute_tracks_extremes() {
+        let mut o = MinMaxObserver::calibration();
+        o.observe(&[0.0, 1.0]);
+        o.observe(&[-3.0, 0.5]);
+        o.observe(&[2.0]);
+        assert_eq!(o.range(), Some((-3.0, 2.0)));
+    }
+
+    #[test]
+    fn ema_follows_shrinking_ranges() {
+        let mut o = MinMaxObserver::new(ObserverMode::Ema { alpha: 0.5 });
+        o.observe(&[-8.0, 8.0]);
+        for _ in 0..20 {
+            o.observe(&[-1.0, 1.0]);
+        }
+        let (lo, hi) = o.range().unwrap();
+        assert!(lo > -1.1 && lo < -0.9, "lo={lo}");
+        assert!(hi < 1.1 && hi > 0.9, "hi={hi}");
+    }
+
+    #[test]
+    fn unprimed_returns_unit_params() {
+        let o = MinMaxObserver::online();
+        assert_eq!(o.qparams(), QParams::unit());
+        assert!(o.range().is_none());
+    }
+
+    #[test]
+    fn seed_from_roundtrips_range() {
+        let qp = QParams::from_min_max(-2.0, 2.0);
+        let mut o = MinMaxObserver::online();
+        o.seed_from(qp);
+        let qp2 = o.qparams();
+        assert!((qp.scale - qp2.scale).abs() < 1e-6);
+        assert!((qp.zero_point - qp2.zero_point).abs() <= 1);
+    }
+
+    #[test]
+    fn empty_observation_is_noop() {
+        let mut o = MinMaxObserver::calibration();
+        o.observe(&[]);
+        assert!(!o.has_observed());
+    }
+}

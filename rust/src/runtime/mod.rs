@@ -1,0 +1,193 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust.
+//!
+//! Python runs exactly once (`make artifacts`); afterwards the binary is
+//! self-contained: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → compile → execute. Each artifact ships a JSON manifest describing its
+//! input/output tuple (names/dtypes/shapes) which [`Artifact`] validates
+//! against at load time, so a drifted artifact fails loudly instead of
+//! feeding garbage.
+
+pub mod xla_trainer;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Lazily constructed PJRT CPU client (compilation is cached per artifact).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// Tensor spec from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest of one artifact.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest json")?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)
+                .as_arr()
+                .context("manifest missing array")?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        dtype: t.get("dtype").as_str().context("dtype")?.to_string(),
+                        shape: t
+                            .get("shape")
+                            .as_arr()
+                            .context("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect()
+        };
+        Ok(Manifest {
+            name: v.get("name").as_str().unwrap_or("?").to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// A loaded, compiled artifact.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<dir>/<name>.hlo.txt` + `<dir>/<name>.json` and compile.
+    pub fn load_artifact(&self, dir: &Path, name: &str) -> Result<Artifact> {
+        let hlo: PathBuf = dir.join(format!("{name}.hlo.txt"));
+        let man: PathBuf = dir.join(format!("{name}.json"));
+        if !hlo.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                hlo.display()
+            );
+        }
+        let manifest = Manifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Artifact { manifest, exe })
+    }
+}
+
+impl Artifact {
+    /// Execute with positional inputs; returns the decomposed output tuple.
+    /// Input count and element counts are validated against the manifest.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.manifest.name,
+                self.manifest.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, spec)) in inputs.iter().zip(&self.manifest.inputs).enumerate() {
+            if lit.element_count() != spec.elements() {
+                bail!(
+                    "{}: input {i} has {} elements, manifest says {:?}",
+                    self.manifest.name,
+                    lit.element_count(),
+                    spec.shape
+                );
+            }
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.manifest.name,
+                outs.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Build a u8 literal with the given logical shape. (`u8` has no
+/// `NativeType` impl in the xla crate, so the untyped-bytes path is used.)
+pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        shape,
+        data,
+    )?)
+}
+
+/// Build an f32 literal with the given logical shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Default artifact directory (next to the workspace root).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TT_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_spec_shapes() {
+        let dir = std::env::temp_dir().join("tt_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.json");
+        std::fs::write(
+            &p,
+            r#"{"name":"m","inputs":[{"dtype":"uint8","shape":[2,3]}],"outputs":[{"dtype":"float32","shape":[4]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.inputs[0].shape, vec![2, 3]);
+        assert_eq!(m.inputs[0].elements(), 6);
+        assert_eq!(m.outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent/m.json")).is_err());
+    }
+}

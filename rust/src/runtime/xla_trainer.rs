@@ -1,0 +1,290 @@
+//! FQT training driven through the AOT HLO artifact — the XLA backend.
+//!
+//! [`XlaFqtTrainer`] owns the same on-device state as the native backend
+//! (quantized uint8 weights, float biases, activation/error quantization
+//! parameters) but executes the fused forward+backward train-step graph
+//! via PJRT instead of the native kernels. The optimizer (Eqs. 5–8), the
+//! activation-range adaptation and the error observers all run in Rust —
+//! the artifact is pure compute, everything stateful stays on this side.
+//!
+//! The input/output tuple layout matches `python/compile/model.py`
+//! (`fqt_train_step` / `QP_LEN`); the manifest validates it at load time.
+
+use anyhow::{Context, Result};
+
+use crate::quant::observer::MinMaxObserver;
+use crate::quant::QParams;
+use crate::runtime::{lit_f32, lit_u8, Artifact};
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+/// Architecture constants (must match `python/compile/model.py`).
+pub const IN_SHAPE: [usize; 3] = [1, 28, 28];
+pub const N_CLASSES: usize = 10;
+const LAYER_SHAPES: [(usize, usize); 4] = [(16, 9), (32, 144), (64, 288), (10, 64)];
+const QP_LEN: usize = 26;
+
+struct QLayer {
+    w: Vec<u8>,
+    qp: QParams,
+    bias: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    // gradient accumulation + per-row running stats (Eq. 8)
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    n: Vec<u64>,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl QLayer {
+    fn init(rows: usize, cols: usize, rng: &mut Pcg32) -> QLayer {
+        let std = (2.0 / cols as f32).sqrt();
+        let mut wf = vec![0f32; rows * cols];
+        rng.fill_normal(&mut wf, std);
+        let qp = QParams::observe(&wf);
+        let w = wf.iter().map(|&f| qp.quantize(f)).collect();
+        QLayer {
+            w,
+            qp,
+            bias: vec![0.0; rows],
+            rows,
+            cols,
+            gw: vec![0.0; rows * cols],
+            gb: vec![0.0; rows],
+            n: vec![0; rows],
+            mean: vec![0.0; rows],
+            m2: vec![0.0; rows],
+        }
+    }
+
+    fn accumulate(&mut self, gw: &[f32], gb: &[f32]) {
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let g = gw[r * self.cols + c];
+                self.gw[r * self.cols + c] += g;
+                self.n[r] += 1;
+                let d = g as f64 - self.mean[r];
+                self.mean[r] += d / self.n[r] as f64;
+                self.m2[r] += d * (g as f64 - self.mean[r]);
+            }
+            self.gb[r] += gb[r];
+        }
+    }
+
+    /// Eqs. 5–8: standardized float-space descent + requantization at
+    /// freshly derived parameters.
+    fn step(&mut self, lr: f32, inv_b: f32) {
+        let mut wf: Vec<f32> = self.w.iter().map(|&q| self.qp.dequantize(q)).collect();
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for r in 0..self.rows {
+            let rms = if self.n[r] < 2 {
+                1.0
+            } else {
+                let var = self.m2[r] / self.n[r] as f64;
+                let rms = (var + self.mean[r] * self.mean[r]).sqrt() as f32;
+                if rms > 1e-8 {
+                    rms
+                } else {
+                    1.0
+                }
+            };
+            let mu = self.mean[r] as f32;
+            for c in 0..self.cols {
+                let i = r * self.cols + c;
+                let ghat = ((self.gw[i] * inv_b - mu) / rms).clamp(-10.0, 10.0);
+                wf[i] -= lr * ghat;
+                lo = lo.min(wf[i]);
+                hi = hi.max(wf[i]);
+            }
+            self.bias[r] -= lr * self.gb[r] * inv_b;
+        }
+        self.qp = QParams::from_min_max(lo, hi);
+        for (q, &f) in self.w.iter_mut().zip(wf.iter()) {
+            *q = self.qp.quantize(f);
+        }
+        self.gw.fill(0.0);
+        self.gb.fill(0.0);
+    }
+}
+
+/// The XLA-backed FQT trainer for the §IV-D network.
+pub struct XlaFqtTrainer {
+    art: Artifact,
+    layers: Vec<QLayer>,
+    pub input_qp: QParams,
+    act_qp: [QParams; 4],
+    err_obs: [MinMaxObserver; 4],
+    pub lr: f32,
+    pub batch: usize,
+    count: usize,
+    pub steps: u64,
+}
+
+impl XlaFqtTrainer {
+    /// Fresh random model. `input_range` is the (min, max) of the input
+    /// data distribution (replaces PTQ calibration for the input tensor;
+    /// activation ranges start wide and adapt online from the saturation
+    /// telemetry the artifact returns).
+    pub fn new(art: Artifact, input_range: (f32, f32), lr: f32, batch: usize, seed: u64) -> Result<Self> {
+        anyhow::ensure!(
+            art.manifest.inputs.len() == 11 && art.manifest.outputs.len() == 12,
+            "unexpected artifact interface for {}",
+            art.manifest.name
+        );
+        let mut rng = Pcg32::new(seed, 0xA0);
+        let layers = LAYER_SHAPES.iter().map(|&(r, c)| QLayer::init(r, c, &mut rng)).collect();
+        Ok(XlaFqtTrainer {
+            art,
+            layers,
+            input_qp: QParams::from_min_max(input_range.0, input_range.1),
+            act_qp: [
+                QParams::from_min_max(0.0, 4.0),
+                QParams::from_min_max(0.0, 6.0),
+                QParams::from_min_max(0.0, 6.0),
+                QParams::from_min_max(-6.0, 6.0),
+            ],
+            err_obs: core::array::from_fn(|_| MinMaxObserver::online()),
+            lr,
+            batch: batch.max(1),
+            count: 0,
+            steps: 0,
+        })
+    }
+
+    fn qp_vec(&self) -> Vec<f32> {
+        let mut qp = vec![0f32; QP_LEN];
+        qp[0] = self.input_qp.scale;
+        qp[1] = self.input_qp.zero_point as f32;
+        for (i, l) in self.layers.iter().enumerate() {
+            qp[2 + 4 * i] = l.qp.scale;
+            qp[3 + 4 * i] = l.qp.zero_point as f32;
+            qp[4 + 4 * i] = self.act_qp[i].scale;
+            qp[5 + 4 * i] = self.act_qp[i].zero_point as f32;
+        }
+        for (i, obs) in self.err_obs.iter().enumerate() {
+            let e = obs.qparams();
+            qp[18 + 2 * i] = e.scale;
+            qp[19 + 2 * i] = e.zero_point as f32;
+        }
+        qp
+    }
+
+    fn run(&self, x: &TensorF32, label: usize) -> Result<Vec<xla::Literal>> {
+        let xq: Vec<u8> = x.data().iter().map(|&f| self.input_qp.quantize(f)).collect();
+        let mut onehot = vec![0f32; N_CLASSES];
+        onehot[label.min(N_CLASSES - 1)] = 1.0;
+        let l = &self.layers;
+        let inputs = vec![
+            lit_u8(&IN_SHAPE, &xq)?,
+            lit_f32(&[N_CLASSES], &onehot)?,
+            lit_u8(&[l[0].rows, l[0].cols], &l[0].w)?,
+            lit_f32(&[l[0].rows], &l[0].bias)?,
+            lit_u8(&[l[1].rows, l[1].cols], &l[1].w)?,
+            lit_f32(&[l[1].rows], &l[1].bias)?,
+            lit_u8(&[l[2].rows, l[2].cols], &l[2].w)?,
+            lit_f32(&[l[2].rows], &l[2].bias)?,
+            lit_u8(&[l[3].rows, l[3].cols], &l[3].w)?,
+            lit_f32(&[l[3].rows], &l[3].bias)?,
+            lit_f32(&[QP_LEN], &self.qp_vec())?,
+        ];
+        self.art.execute(&inputs)
+    }
+
+    /// Inference through the artifact (same graph; gradients discarded —
+    /// the in-place property means there is no separate inference model).
+    pub fn predict(&self, x: &TensorF32) -> Result<usize> {
+        let outs = self.run(x, 0)?;
+        let logits = outs[1].to_vec::<f32>()?;
+        Ok(crate::util::stats::argmax(&logits))
+    }
+
+    pub fn evaluate(&self, xs: &[TensorF32], ys: &[usize]) -> Result<f32> {
+        let mut correct = 0;
+        for (x, &y) in xs.iter().zip(ys) {
+            if self.predict(x)? == y {
+                correct += 1;
+            }
+        }
+        Ok(correct as f32 / xs.len().max(1) as f32)
+    }
+
+    /// One training-sample pass: execute the fused fwd+bwd artifact,
+    /// accumulate gradients, update observers and activation ranges from
+    /// the telemetry outputs, and apply the FQT step at batch boundaries.
+    pub fn train_step(&mut self, x: &TensorF32, label: usize) -> Result<(f32, usize)> {
+        let outs = self.run(x, label)?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let logits = outs[1].to_vec::<f32>()?;
+        let pred = crate::util::stats::argmax(&logits);
+
+        // gradients: outputs 2..10 = gw1, gb1, gw2, gb2, gw4, gb4, gw5, gb5
+        for i in 0..4 {
+            let gw = outs[2 + 2 * i].to_vec::<f32>()?;
+            let gb = outs[3 + 2 * i].to_vec::<f32>()?;
+            self.layers[i].accumulate(&gw, &gb);
+        }
+
+        // error observers from float-space min/max (Eqs. 6–7 analogue)
+        let mm = outs[10].to_vec::<f32>()?;
+        for (i, obs) in self.err_obs.iter_mut().enumerate() {
+            obs.observe_range(mm[2 * i], mm[2 * i + 1]);
+        }
+        // activation-range adaptation from saturation telemetry
+        let sat = outs[11].to_vec::<f32>()?;
+        for (i, &s) in sat.iter().enumerate() {
+            if s > 0.01 {
+                let qp = self.act_qp[i];
+                let lo = (0 - qp.zero_point) as f32 * qp.scale;
+                let hi = (255 - qp.zero_point) as f32 * qp.scale;
+                self.act_qp[i] = if i < 3 {
+                    QParams::from_min_max(lo, hi * 1.25) // folded ReLU: upper only
+                } else {
+                    QParams::from_min_max(lo * 1.25, hi * 1.25)
+                };
+            }
+        }
+
+        self.count += 1;
+        self.steps += 1;
+        if self.count >= self.batch {
+            let inv_b = 1.0 / self.count as f32;
+            for l in self.layers.iter_mut() {
+                l.step(self.lr, inv_b);
+            }
+            self.count = 0;
+        }
+        Ok((loss, pred))
+    }
+
+    /// Flush a partial minibatch.
+    pub fn finish(&mut self) {
+        if self.count > 0 {
+            let inv_b = 1.0 / self.count as f32;
+            for l in self.layers.iter_mut() {
+                l.step(self.lr, inv_b);
+            }
+            self.count = 0;
+        }
+    }
+
+    /// Weight quantization parameters of layer `i` (diagnostics).
+    pub fn layer_qp(&self, i: usize) -> QParams {
+        self.layers[i].qp
+    }
+}
+
+/// Convenience: load the uint8 train artifact and build a trainer.
+pub fn load_fqt_trainer(
+    dir: &std::path::Path,
+    input_range: (f32, f32),
+    lr: f32,
+    batch: usize,
+    seed: u64,
+) -> Result<XlaFqtTrainer> {
+    let rt = crate::runtime::Runtime::cpu()?;
+    let art = rt.load_artifact(dir, "mnist_cnn_uint8_train").context("loading FQT artifact")?;
+    XlaFqtTrainer::new(art, input_range, lr, batch, seed)
+}

@@ -1,0 +1,173 @@
+//! Dense row-major tensors.
+//!
+//! The on-device framework works with per-sample tensors (no batch
+//! dimension — the paper accumulates gradients over successive samples
+//! instead of batching activations, §III-A option (b)), so shapes are small:
+//! `[C, H, W]` for feature maps, `[Cout, Cin, Kh, Kw]` for conv weights,
+//! `[Out, In]` for linear weights.
+//!
+//! Three element types are used, mirroring the MCU memory layout:
+//! `u8` (quantized values), `i32` (accumulators / bias), `f32` (gradient
+//! buffers, float-config layers).
+
+/// A dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorU8 = Tensor<u8>;
+pub type TensorI32 = Tensor<i32>;
+pub type TensorF32 = Tensor<f32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Build from existing data; length must match the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical volume.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor<T> {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Number of "structures" along axis 0 (out-channels for conv weights /
+    /// errors, rows for linear weights). Used by the sparse-update ranking.
+    pub fn outer_dim(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+
+    /// Volume of one outer structure (everything but axis 0).
+    pub fn inner_len(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    /// Immutable view of outer structure `i`.
+    pub fn outer(&self, i: usize) -> &[T] {
+        let inner = self.inner_len();
+        &self.data[i * inner..(i + 1) * inner]
+    }
+
+    /// Mutable view of outer structure `i`.
+    pub fn outer_mut(&mut self, i: usize) -> &mut [T] {
+        let inner = self.inner_len();
+        &mut self.data[i * inner..(i + 1) * inner]
+    }
+}
+
+impl Tensor<f32> {
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> TensorF32 {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+}
+
+/// 3-D index helper for `[C, H, W]` tensors.
+#[inline(always)]
+pub fn idx3(c: usize, y: usize, x: usize, h: usize, w: usize) -> usize {
+    (c * h + y) * w + x
+}
+
+/// 4-D index helper for `[Co, Ci, Kh, Kw]` tensors.
+#[inline(always)]
+pub fn idx4(a: usize, b: usize, c: usize, d: usize, db: usize, dc: usize, dd: usize) -> usize {
+    ((a * db + b) * dc + c) * dd + d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = TensorF32::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn from_vec_checks_len() {
+        TensorU8::from_vec(&[2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn outer_views() {
+        let t = TensorF32::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.outer(0), &[1., 2., 3.]);
+        assert_eq!(t.outer(1), &[4., 5., 6.]);
+        assert_eq!(t.outer_dim(), 2);
+        assert_eq!(t.inner_len(), 3);
+    }
+
+    #[test]
+    fn idx_helpers_are_row_major() {
+        assert_eq!(idx3(1, 2, 3, 4, 5), 1 * 20 + 2 * 5 + 3);
+        assert_eq!(idx4(1, 1, 1, 1, 2, 3, 4), 1 * 24 + 1 * 12 + 1 * 4 + 1);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = TensorI32::from_vec(&[4], vec![1, 2, 3, 4]);
+        let r = t.reshape(&[2, 2]);
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.data(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scalar_like_outer() {
+        let t = TensorF32::zeros(&[5]);
+        assert_eq!(t.outer_dim(), 5);
+        assert_eq!(t.inner_len(), 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! On-device training: the FQT optimizer (§III-A), the baseline optimizers
+//! used in the Tab. IV comparison, the dynamic sparse gradient update
+//! controller (§III-B), and the training loop driver.
+
+pub mod fqt;
+pub mod loop_;
+pub mod optim;
+pub mod sparse;
+
+use crate::graph::exec::{BwdResult, NativeModel};
+use crate::kernels::OpCounter;
+
+/// Common optimizer interface: feed one sample's backward result; the
+/// optimizer accumulates gradients (memory-efficient minibatching, §III-A
+/// option (b)) and applies a weight update every `batch` samples.
+pub trait Optimizer {
+    /// Accumulate one sample's gradients; applies the update internally
+    /// when a full minibatch has been gathered.
+    fn accumulate(&mut self, model: &mut NativeModel, bwd: &BwdResult, ops: &mut OpCounter);
+
+    /// Flush a partial minibatch (end of epoch).
+    fn finish(&mut self, model: &mut NativeModel, ops: &mut OpCounter);
+
+    /// Bytes of optimizer state (gradient buffers + running statistics) —
+    /// feeds the RAM accounting of Fig. 4c.
+    fn state_bytes(&self) -> usize;
+}

@@ -1,0 +1,292 @@
+//! Baseline optimizers for the Tab. IV comparison:
+//!
+//!  * [`SgdM`] — float SGD with momentum 0.9 (the fp32 reference row; also
+//!    the float-head optimizer when combined with quantized features).
+//!  * [`NaiveQSgdM`] — momentum SGD applied to dequantized weights and
+//!    requantized at the **original, frozen** quantization parameters, no
+//!    gradient conditioning. This is the "int8 SGD-M" row that degrades
+//!    badly (64.9 % avg in the paper) because small updates vanish under
+//!    the fixed scale and large ones clip.
+//!  * [`QasSgdM`] — SGD+M+QAS (Lin et al., NeurIPS'22): like the naive
+//!    optimizer but with quantization-aware scaling, multiplying each
+//!    layer's weight gradient by `s_w²` to undo the scale distortion that
+//!    quantization imposes on gradient magnitudes (their Eq.: ∇q ≈ ∇w / s²,
+//!    so scaling by s² recovers the float-gradient magnitude), which
+//!    restores fp32-level accuracy without per-element statistics.
+//!
+//! All three share the gradient-accumulation minibatching of the FQT
+//! optimizer so the comparison isolates the *update rule*.
+
+use crate::graph::exec::{BwdResult, LayerParams, NativeModel};
+use crate::kernels::OpCounter;
+use crate::quant::QTensor;
+use crate::tensor::TensorF32;
+use crate::train::Optimizer;
+
+/// Which update rule a [`QOptimizer`] applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Plain momentum SGD (float layers; dequant->requant at frozen params
+    /// for quantized layers).
+    SgdM,
+    /// Momentum SGD with quantization-aware scaling (s_w² gradient scaling)
+    /// on quantized layers.
+    QasSgdM,
+}
+
+/// Shared implementation for the baseline optimizers.
+pub struct QOptimizer {
+    pub lr: f32,
+    pub momentum: f32,
+    pub batch: usize,
+    rule: Rule,
+    count: usize,
+    /// Per-layer gradient accumulators and momentum (velocity) buffers.
+    acc: Vec<Option<(TensorF32, TensorF32)>>,
+    vel: Vec<Option<(TensorF32, TensorF32)>>,
+}
+
+/// Float SGD-M (fp32 row of Tab. IV).
+pub struct SgdM(pub QOptimizer);
+/// Naive quantized SGD-M (int8 SGD-M row of Tab. IV).
+pub struct NaiveQSgdM(pub QOptimizer);
+/// SGD+M+QAS (Lin et al. row of Tab. IV).
+pub struct QasSgdM(pub QOptimizer);
+
+impl QOptimizer {
+    pub fn new(model: &NativeModel, lr: f32, batch: usize, rule: Rule) -> QOptimizer {
+        let mk = |p: &LayerParams, trainable: bool| -> Option<(TensorF32, TensorF32)> {
+            if !trainable {
+                return None;
+            }
+            match p {
+                LayerParams::Q { w, bias } => {
+                    Some((TensorF32::zeros(w.shape()), TensorF32::zeros(&[bias.len()])))
+                }
+                LayerParams::F { w, bias } => {
+                    Some((TensorF32::zeros(w.shape()), TensorF32::zeros(&[bias.len()])))
+                }
+                LayerParams::None => None,
+            }
+        };
+        let acc: Vec<_> = model
+            .params
+            .iter()
+            .zip(&model.def.layers)
+            .map(|(p, l)| mk(p, l.trainable))
+            .collect();
+        let vel = acc.clone();
+        QOptimizer { lr, momentum: 0.9, batch: batch.max(1), rule, count: 0, acc, vel }
+    }
+
+    fn step(&mut self, model: &mut NativeModel, ops: &mut OpCounter) {
+        if self.count == 0 {
+            return;
+        }
+        let inv_b = 1.0 / self.count as f32;
+        for i in 0..self.acc.len() {
+            let Some((ga, gba)) = self.acc[i].as_mut() else { continue };
+            let (gv, gbv) = self.vel[i].as_mut().unwrap();
+            match &mut model.params[i] {
+                LayerParams::Q { w, bias } => {
+                    // dequantize, momentum step (optionally QAS-scaled),
+                    // requantize at the ORIGINAL frozen parameters.
+                    let qp = w.qp;
+                    let gscale = match self.rule {
+                        Rule::QasSgdM => qp.scale * qp.scale,
+                        Rule::SgdM => 1.0,
+                    };
+                    let mut wf = w.dequantize();
+                    for j in 0..wf.len() {
+                        let g = ga.data()[j] * inv_b * gscale;
+                        gv.data_mut()[j] = self.momentum * gv.data()[j] + g;
+                        wf.data_mut()[j] -= self.lr * gv.data()[j];
+                    }
+                    for c in 0..bias.len() {
+                        let g = gba.data()[c] * inv_b;
+                        gbv.data_mut()[c] = self.momentum * gbv.data()[c] + g;
+                        bias[c] -= self.lr * gbv.data_mut()[c];
+                    }
+                    *w = QTensor::quantize_with(&wf, qp);
+                    ops.float_ops += (wf.len() * 4) as u64;
+                    ops.int_ops += wf.len() as u64;
+                }
+                LayerParams::F { w, bias } => {
+                    for j in 0..w.len() {
+                        let g = ga.data()[j] * inv_b;
+                        gv.data_mut()[j] = self.momentum * gv.data()[j] + g;
+                        w.data_mut()[j] -= self.lr * gv.data()[j];
+                    }
+                    for c in 0..bias.len() {
+                        let g = gba.data()[c] * inv_b;
+                        gbv.data_mut()[c] = self.momentum * gbv.data()[c] + g;
+                        bias[c] -= self.lr * gbv.data_mut()[c];
+                    }
+                    ops.float_ops += (w.len() * 4) as u64;
+                }
+                LayerParams::None => {}
+            }
+            ga.data_mut().fill(0.0);
+            gba.data_mut().fill(0.0);
+        }
+        self.count = 0;
+    }
+
+    fn accumulate_impl(&mut self, model: &mut NativeModel, bwd: &BwdResult, ops: &mut OpCounter) {
+        for (i, g) in bwd.grads.iter().enumerate() {
+            if let (Some(g), Some((ga, gba))) = (g, self.acc[i].as_mut()) {
+                for (a, &v) in ga.data_mut().iter_mut().zip(g.gw.data()) {
+                    *a += v;
+                }
+                for (a, &v) in gba.data_mut().iter_mut().zip(g.gb.data()) {
+                    *a += v;
+                }
+                ops.float_ops += g.gw.len() as u64;
+            }
+        }
+        self.count += 1;
+        if self.count >= self.batch {
+            self.step(model, ops);
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.acc
+            .iter()
+            .flatten()
+            .chain(self.vel.iter().flatten())
+            .map(|(a, b)| (a.len() + b.len()) * 4)
+            .sum()
+    }
+}
+
+macro_rules! forward_optimizer {
+    ($t:ty) => {
+        impl Optimizer for $t {
+            fn accumulate(
+                &mut self,
+                model: &mut NativeModel,
+                bwd: &BwdResult,
+                ops: &mut OpCounter,
+            ) {
+                self.0.accumulate_impl(model, bwd, ops)
+            }
+            fn finish(&mut self, model: &mut NativeModel, ops: &mut OpCounter) {
+                self.0.step(model, ops)
+            }
+            fn state_bytes(&self) -> usize {
+                self.0.bytes()
+            }
+        }
+    };
+}
+
+impl SgdM {
+    pub fn new(model: &NativeModel, lr: f32, batch: usize) -> SgdM {
+        SgdM(QOptimizer::new(model, lr, batch, Rule::SgdM))
+    }
+}
+
+impl NaiveQSgdM {
+    pub fn new(model: &NativeModel, lr: f32, batch: usize) -> NaiveQSgdM {
+        NaiveQSgdM(QOptimizer::new(model, lr, batch, Rule::SgdM))
+    }
+}
+
+impl QasSgdM {
+    pub fn new(model: &NativeModel, lr: f32, batch: usize) -> QasSgdM {
+        QasSgdM(QOptimizer::new(model, lr, batch, Rule::QasSgdM))
+    }
+}
+
+forward_optimizer!(SgdM);
+forward_optimizer!(NaiveQSgdM);
+forward_optimizer!(QasSgdM);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::exec::{calibrate, DenseUpdates, FloatParams};
+    use crate::graph::{models, DnnConfig};
+    use crate::util::prng::Pcg32;
+
+    fn setup(cfg: DnnConfig, seed: u64) -> (NativeModel, Vec<TensorF32>, Vec<usize>) {
+        let mut rng = Pcg32::seeded(seed);
+        let def = models::mnist_cnn(&[1, 12, 12], 2);
+        let fp = FloatParams::init(&def, &mut rng);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..16 {
+            let y = i % 2;
+            let mut x = TensorF32::zeros(&[1, 12, 12]);
+            rng.fill_normal(x.data_mut(), 0.4);
+            for v in x.data_mut().iter_mut() {
+                *v += y as f32;
+            }
+            xs.push(x);
+            ys.push(y);
+        }
+        let calib = calibrate(&def, &fp, &xs[..4]);
+        (NativeModel::build(def, cfg, &fp, &calib), xs, ys)
+    }
+
+    fn train(m: &mut NativeModel, opt: &mut dyn Optimizer, xs: &[TensorF32], ys: &[usize], epochs: usize) -> f32 {
+        let mut ops = OpCounter::new();
+        for _ in 0..epochs {
+            for (x, &y) in xs.iter().zip(ys) {
+                let (_, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
+                opt.accumulate(m, &bwd, &mut ops);
+            }
+            opt.finish(m, &mut ops);
+        }
+        m.evaluate(xs, ys)
+    }
+
+    #[test]
+    fn float_sgdm_learns_toy() {
+        let (mut m, xs, ys) = setup(DnnConfig::Float32, 81);
+        let mut opt = SgdM::new(&m, 0.01, 4);
+        let acc = train(&mut m, &mut opt, &xs, &ys, 15);
+        assert!(acc >= 0.85, "acc={acc}");
+    }
+
+    #[test]
+    fn qas_beats_or_matches_naive_on_toy() {
+        // With frozen quantization params, QAS conditions the gradient; on
+        // a toy run both may learn, but QAS must never be much worse.
+        let (mut m1, xs, ys) = setup(DnnConfig::Uint8, 82);
+        let mut naive = NaiveQSgdM::new(&m1, 0.01, 4);
+        let a_naive = train(&mut m1, &mut naive, &xs, &ys, 15);
+        let (mut m2, xs2, ys2) = setup(DnnConfig::Uint8, 82);
+        let mut qas = QasSgdM::new(&m2, 0.01, 4);
+        let a_qas = train(&mut m2, &mut qas, &xs2, &ys2, 15);
+        assert!(a_qas + 0.15 >= a_naive, "qas={a_qas} naive={a_naive}");
+    }
+
+    #[test]
+    fn naive_keeps_quant_params_frozen() {
+        let (mut m, xs, ys) = setup(DnnConfig::Uint8, 83);
+        let head = m.def.layers.len() - 1;
+        let qp0 = match &m.params[head] {
+            LayerParams::Q { w, .. } => w.qp,
+            _ => panic!(),
+        };
+        let mut opt = NaiveQSgdM::new(&m, 0.05, 4);
+        train(&mut m, &mut opt, &xs, &ys, 5);
+        let qp1 = match &m.params[head] {
+            LayerParams::Q { w, .. } => w.qp,
+            _ => panic!(),
+        };
+        assert_eq!(qp0, qp1, "baselines must not adapt quantization params");
+    }
+
+    #[test]
+    fn momentum_state_counted() {
+        let (m, _, _) = setup(DnnConfig::Uint8, 84);
+        let opt = SgdM::new(&m, 0.01, 4);
+        // acc + vel: twice the gradient-buffer footprint
+        assert!(opt.state_bytes() > 0);
+        let fqt = crate::train::fqt::FqtSgd::new(&m, 0.01, 4);
+        assert!(opt.state_bytes() > fqt.state_bytes(), "momentum needs more state than FQT");
+    }
+}

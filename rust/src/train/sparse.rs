@@ -1,0 +1,162 @@
+//! Dynamic sparse gradient updates (§III-B).
+//!
+//! Per training sample and per trainable layer, the controller ranks the
+//! error tensor's *structures* (out-channels of conv layers, rows of linear
+//! layers) by their L1 norm and keeps only the top-k; masked structures are
+//! skipped by both backward kernels (no weight gradient, no contribution to
+//! the backpropagated error).
+//!
+//! k follows Eq. 9:
+//!
+//! ```text
+//! k = ⌊ min(λ_min + |ε|·(λ_max − λ_min), 1) · N ⌋
+//! ```
+//!
+//! with `|ε|` the current sample's loss normalized by the maximum loss
+//! observed over the whole training so far — as the loss converges toward
+//! zero, the update rate converges toward `λ_min` (fewer structures worth
+//! updating late in training, Fig. 3's third observation).
+
+use crate::graph::exec::MaskProvider;
+use crate::util::stats::top_k_indices;
+
+/// The Eq. 9 controller. Create once per training run; call
+/// [`DynamicSparse::begin_sample`] with the sample's loss before the
+/// backward pass (the training loop does this).
+#[derive(Clone, Debug)]
+pub struct DynamicSparse {
+    pub lambda_min: f32,
+    pub lambda_max: f32,
+    max_loss: f32,
+    cur_eps: f32,
+    /// Accounting: structures kept / total across all masked layers.
+    pub kept: u64,
+    pub total: u64,
+}
+
+impl DynamicSparse {
+    pub fn new(lambda_min: f32, lambda_max: f32) -> DynamicSparse {
+        assert!(
+            (0.0..=1.0).contains(&lambda_min) && lambda_min <= lambda_max && lambda_max <= 1.0,
+            "need 0 <= λ_min <= λ_max <= 1"
+        );
+        DynamicSparse { lambda_min, lambda_max, max_loss: 0.0, cur_eps: 1.0, kept: 0, total: 0 }
+    }
+
+    /// Pre-seed the running maximum loss — puts the controller in the
+    /// late-training regime (`|ε| → 0`, rate → λ_min) without replaying a
+    /// training run. Used when measuring the Fig. 6d steady-state speedup.
+    pub fn seed_max_loss(&mut self, max_loss: f32) {
+        self.max_loss = self.max_loss.max(max_loss);
+    }
+
+    /// Register the sample's loss; updates the running maximum and computes
+    /// `|ε| = loss / max_loss ∈ [0, 1]`.
+    pub fn begin_sample(&mut self, loss: f32) {
+        self.max_loss = self.max_loss.max(loss.abs());
+        self.cur_eps = if self.max_loss > 0.0 { (loss.abs() / self.max_loss).clamp(0.0, 1.0) } else { 1.0 };
+    }
+
+    /// The current per-layer update rate `min(λ_min + |ε|(λ_max−λ_min), 1)`.
+    pub fn rate(&self) -> f32 {
+        (self.lambda_min + self.cur_eps * (self.lambda_max - self.lambda_min)).min(1.0)
+    }
+
+    /// Fraction of structures actually kept so far.
+    pub fn kept_fraction(&self) -> f32 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.kept as f32 / self.total as f32
+        }
+    }
+}
+
+impl MaskProvider for DynamicSparse {
+    fn mask(&mut self, _layer: usize, norms: &[f32]) -> Option<Vec<bool>> {
+        let n = norms.len();
+        self.total += n as u64;
+        let k = ((self.rate() * n as f32).floor() as usize).clamp(1, n);
+        if k == n {
+            self.kept += n as u64;
+            return None; // dense — skip the masking overhead entirely
+        }
+        self.kept += k as u64;
+        let mut keep = vec![false; n];
+        for i in top_k_indices(norms, k) {
+            keep[i] = true;
+        }
+        Some(keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_interpolates_with_loss() {
+        let mut c = DynamicSparse::new(0.1, 1.0);
+        c.begin_sample(2.0); // first sample defines max -> eps = 1
+        assert!((c.rate() - 1.0).abs() < 1e-6);
+        c.begin_sample(0.2); // converged to 10% of max
+        assert!((c.rate() - (0.1 + 0.1 * 0.9)).abs() < 1e-6);
+        c.begin_sample(0.0);
+        assert!((c.rate() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_loss_is_monotone() {
+        let mut c = DynamicSparse::new(0.5, 1.0);
+        c.begin_sample(1.0);
+        c.begin_sample(4.0); // new max
+        c.begin_sample(1.0); // eps = 0.25 now
+        assert!((c.rate() - (0.5 + 0.25 * 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mask_keeps_top_k_by_norm() {
+        let mut c = DynamicSparse::new(0.5, 0.5); // fixed 50%
+        c.begin_sample(1.0);
+        let norms = [0.1f32, 5.0, 0.2, 3.0];
+        let m = c.mask(0, &norms).unwrap();
+        assert_eq!(m, vec![false, true, false, true]);
+        assert_eq!(c.kept, 2);
+        assert_eq!(c.total, 4);
+    }
+
+    #[test]
+    fn full_rate_returns_dense_none() {
+        let mut c = DynamicSparse::new(1.0, 1.0);
+        c.begin_sample(1.0);
+        assert!(c.mask(0, &[1.0, 2.0, 3.0]).is_none());
+        assert_eq!(c.kept_fraction(), 1.0);
+    }
+
+    #[test]
+    fn at_least_one_structure_kept() {
+        let mut c = DynamicSparse::new(0.0, 0.0);
+        c.begin_sample(1.0);
+        let m = c.mask(0, &[0.5, 0.9]).unwrap();
+        assert_eq!(m.iter().filter(|&&b| b).count(), 1);
+        assert!(m[1]); // the larger norm survives
+    }
+
+    #[test]
+    #[should_panic(expected = "λ_min")]
+    fn rejects_bad_lambdas() {
+        DynamicSparse::new(0.9, 0.1);
+    }
+
+    #[test]
+    fn kept_fraction_tracks_rate() {
+        let mut c = DynamicSparse::new(0.1, 1.0);
+        c.begin_sample(10.0);
+        c.begin_sample(0.01); // tiny loss -> rate ~ 0.1
+        for _ in 0..50 {
+            let norms: Vec<f32> = (0..20).map(|i| i as f32).collect();
+            let _ = c.mask(0, &norms);
+        }
+        assert!(c.kept_fraction() < 0.2, "kept={}", c.kept_fraction());
+    }
+}

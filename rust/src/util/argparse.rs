@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser (the vendor set does not include `clap`).
+//!
+//! Supports: `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. The binary defines its options declaratively so `--help`
+//! output stays accurate.
+
+use std::collections::BTreeMap;
+
+/// Declarative option description used for `--help`.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw tokens. `flag_names` lists options that take no value.
+    pub fn parse(tokens: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.kv.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    a.flags.push(stripped.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    a.kv.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    // trailing --key with no value: treat as flag
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Render a help string from option specs.
+pub fn render_help(cmd: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\nOptions:\n");
+    for o in opts {
+        let head = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <v>", o.name)
+        };
+        let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("{head:<28}{}{def}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&toks("--epochs 20 --quick --lr=0.001 input.bin"), &["quick"]).unwrap();
+        assert_eq!(a.get("epochs"), Some("20"));
+        assert_eq!(a.f32_or("lr", 0.0), 0.001);
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&toks(""), &[]).unwrap();
+        assert_eq!(a.usize_or("epochs", 7), 7);
+        assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn trailing_key_becomes_flag() {
+        let a = Args::parse(&toks("--verbose"), &[]).unwrap();
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn double_dash_value_not_consumed() {
+        let a = Args::parse(&toks("--a --b 3"), &[]).unwrap();
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("3"));
+    }
+}

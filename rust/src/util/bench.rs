@@ -1,0 +1,145 @@
+//! Bench harness (the vendor set has no `criterion`).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary built on
+//! this module: it runs the workload, prints paper-style tables to stdout,
+//! and writes machine-readable JSON rows under `results/`. Timing helpers
+//! give mean/std over repetitions with a warm-up phase.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Time `f` with `warmup` unmeasured runs and `reps` measured runs.
+/// Returns (mean_seconds, std_seconds).
+pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() as f32);
+    }
+    (stats::mean(&samples) as f64, stats::std(&samples) as f64)
+}
+
+/// A printable results table with fixed-width columns.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Accumulates JSON result rows and writes them to `results/<name>.json`.
+pub struct ResultSink {
+    name: String,
+    rows: Vec<Json>,
+}
+
+impl ResultSink {
+    pub fn new(name: &str) -> Self {
+        ResultSink { name: name.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Write all accumulated rows. Creates `results/` if needed.
+    pub fn flush(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, Json::Arr(self.rows.clone()).to_string())?;
+        Ok(path)
+    }
+}
+
+/// Read a bench-scaling knob from the environment (e.g. TT_EPOCHS, TT_RUNS)
+/// so recorded runs can trade fidelity for wall-clock.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Format seconds as an adaptive human unit.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_positive_mean() {
+        let (mean, _) = time_it(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean >= 0.0);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(0.002).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+}

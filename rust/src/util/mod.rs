@@ -1,0 +1,10 @@
+//! Shared utilities: PRNG, statistics, JSON, CLI parsing, a property-test
+//! driver and the bench harness. All hand-rolled — the offline build
+//! environment only ships the vendored crate set (see DESIGN.md §3).
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;

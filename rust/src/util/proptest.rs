@@ -1,0 +1,110 @@
+//! Minimal property-based testing driver.
+//!
+//! The offline vendor set does not include `proptest`, so we provide a small
+//! equivalent: run a property over many PRNG-generated cases; on failure,
+//! greedily shrink the failing case by halving numeric fields and retrying.
+//! Used by the quant / kernels / sparse / memplan test suites to sweep shapes
+//! and quantization parameters.
+
+use crate::util::prng::Pcg32;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Run `prop` over `cases` generated inputs. `gen` draws a case from the
+    /// PRNG; `prop` returns Err(description) on violation. `shrink` proposes
+    /// smaller candidates for a failing case (may be empty).
+    pub fn check<T: Clone + std::fmt::Debug>(
+        &self,
+        gen: impl Fn(&mut Pcg32) -> T,
+        shrink: impl Fn(&T) -> Vec<T>,
+        prop: impl Fn(&T) -> Result<(), String>,
+    ) {
+        let mut rng = Pcg32::new(self.seed, 77);
+        for case_no in 0..self.cases {
+            let case = gen(&mut rng);
+            if let Err(msg) = prop(&case) {
+                // Greedy shrink: repeatedly take the first shrunk candidate
+                // that still fails, up to a bounded number of rounds.
+                let mut smallest = case.clone();
+                let mut smallest_msg = msg;
+                'outer: for _ in 0..200 {
+                    for cand in shrink(&smallest) {
+                        if let Err(m) = prop(&cand) {
+                            smallest = cand;
+                            smallest_msg = m;
+                            continue 'outer;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property failed (case {case_no}/{}):\n  input: {smallest:?}\n  error: {smallest_msg}",
+                    self.cases
+                );
+            }
+        }
+    }
+}
+
+/// Shrink helper: candidates for a usize dimension (halve toward `min`).
+pub fn shrink_dim(v: usize, min: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if v > min {
+        out.push(min);
+        let half = (v + min) / 2;
+        if half != v && half != min {
+            out.push(half);
+        }
+        if v - 1 != min {
+            out.push(v - 1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        Prop::new(50).check(
+            |r| r.below(1000) as usize,
+            |v| shrink_dim(*v, 0),
+            |v| if *v < 1000 { Ok(()) } else { Err("out of range".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        Prop::new(50).check(
+            |r| 10 + r.below(100) as usize,
+            |v| shrink_dim(*v, 0),
+            |v| if *v < 5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn shrink_dim_monotone() {
+        for &c in &shrink_dim(64, 1) {
+            assert!(c < 64 && c >= 1);
+        }
+        assert!(shrink_dim(1, 1).is_empty());
+    }
+}

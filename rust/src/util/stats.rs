@@ -1,0 +1,191 @@
+//! Small statistics helpers shared by the optimizer (running moments for
+//! gradient standardization, Eq. 8), the observers (EMA min/max), the device
+//! model, and the bench harness (mean/std over repeated runs).
+
+/// Welford running mean/variance — numerically stable, O(1) memory.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (0 while fewer than 2 samples).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Exponential moving average of a scalar, used by min/max observers.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    value: f32,
+    alpha: f32,
+    primed: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f32) -> Self {
+        Ema { value: 0.0, alpha, primed: false }
+    }
+
+    pub fn push(&mut self, x: f32) {
+        if self.primed {
+            self.value += self.alpha * (x - self.value);
+        } else {
+            self.value = x;
+            self.primed = true;
+        }
+    }
+
+    pub fn get(&self) -> f32 {
+        self.value
+    }
+
+    pub fn primed(&self) -> bool {
+        self.primed
+    }
+
+    /// Force a value (used when restoring observer state).
+    pub fn set(&mut self, x: f32) {
+        self.value = x;
+        self.primed = true;
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+}
+
+/// Population standard deviation of a slice.
+pub fn std(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let var = xs.iter().map(|&x| (x as f64 - m) * (x as f64 - m)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() as f32
+}
+
+/// (min, max) over a slice; (0, 0) for empty input.
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    (lo, hi)
+}
+
+/// L1 norm.
+pub fn l1(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x.abs() as f64).sum::<f64>() as f32
+}
+
+/// Index of the maximum value (first occurrence). Panics on empty input.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest values, descending (first occurrence wins ties).
+/// O(n log n); n is the number of *structures* per layer (small).
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(core::cmp::Ordering::Equal).then(a.cmp(&b)));
+    idx.truncate(k.min(xs.len()));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-9);
+        let m = 4.0;
+        let var: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 5.0;
+        assert!((w.variance() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        e.push(0.0);
+        for _ in 0..30 {
+            e.push(10.0);
+        }
+        assert!((e.get() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn top_k_ordering_and_ties() {
+        let xs = [1.0, 5.0, 3.0, 5.0, 2.0];
+        assert_eq!(top_k_indices(&xs, 3), vec![1, 3, 2]);
+        assert_eq!(top_k_indices(&xs, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&xs, 99).len(), 5);
+    }
+
+    #[test]
+    fn min_max_basic() {
+        assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+        assert_eq!(min_max(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn argmax_first_occurrence() {
+        assert_eq!(argmax(&[1.0, 7.0, 7.0, 2.0]), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! Cross-module integration tests: invariants of the full on-device
+//! pipeline (data → deploy → train → plan → price) that no single module's
+//! unit tests can see.
+
+use tinytrain::data::{spec_by_name, transfer_specs, Domain};
+use tinytrain::device;
+use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, NativeModel};
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::harness::{self, Knobs};
+use tinytrain::kernels::OpCounter;
+use tinytrain::memplan;
+use tinytrain::train::fqt::FqtSgd;
+use tinytrain::train::sparse::DynamicSparse;
+use tinytrain::train::Optimizer;
+use tinytrain::util::prng::Pcg32;
+use tinytrain::util::proptest::Prop;
+
+fn knobs() -> Knobs {
+    Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1 }
+}
+
+/// In-place property: a training step must not change the *inference*
+/// representation shape or precision — the same weights serve both.
+#[test]
+fn training_preserves_inference_representation() {
+    let spec = spec_by_name("cifar10").unwrap();
+    let mut rng = Pcg32::seeded(1);
+    let dom = Domain::new(&spec, [3, 12, 12], 1);
+    let (tr, _) = dom.splits(2, 0, &mut rng);
+    let def = models::mnist_cnn(&[3, 12, 12], 10);
+    let fp = FloatParams::init(&def, &mut rng);
+    let calib = calibrate(&def, &fp, &tr.xs[..2]);
+    let mut m = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
+
+    let bytes_before: usize = m.params.iter().map(|p| p.byte_size()).sum();
+    let mut opt = FqtSgd::new(&m, 0.01, 2);
+    let mut ops = OpCounter::new();
+    for (x, &y) in tr.xs.iter().zip(&tr.ys) {
+        let (_, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
+        opt.accumulate(&mut m, &bwd, &mut ops);
+    }
+    opt.finish(&mut m, &mut ops);
+    let bytes_after: usize = m.params.iter().map(|p| p.byte_size()).sum();
+    assert_eq!(bytes_before, bytes_after, "weight memory layout must be stable");
+    // inference still works on the same object
+    let _ = m.predict(&tr.xs[0], &mut ops);
+}
+
+/// The memory planner's training plan must dominate its inference plan for
+/// every dataset × config of the evaluation (Fig. 4c premise).
+#[test]
+fn training_plan_dominates_inference_plan_everywhere() {
+    for spec in transfer_specs() {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let def = harness::mbednet_for(&spec, &spec.paper_shape);
+            let t = memplan::plan(&def, cfg, true);
+            let i = memplan::plan(&def, cfg, false);
+            assert!(
+                t.total_ram() >= i.total_ram(),
+                "{} {:?}: train {} < infer {}",
+                spec.name,
+                cfg,
+                t.total_ram(),
+                i.total_ram()
+            );
+            assert!(t.flash <= i.flash, "trainable weights must leave flash");
+        }
+    }
+}
+
+/// Device pricing is monotone in op counts — more work never costs less,
+/// on any device (property test over random op bundles).
+#[test]
+fn device_cost_is_monotone() {
+    Prop::new(64).check(
+        |r| {
+            (
+                r.below(1_000_000) as u64,
+                r.below(1_000_000) as u64,
+                r.below(100_000) as u64,
+            )
+        },
+        |_| vec![],
+        |&(im, fm, by)| {
+            for d in device::all_devices() {
+                let a = OpCounter { int_macs: im, float_macs: fm, bytes: by, ..Default::default() };
+                let b = OpCounter {
+                    int_macs: im + 1000,
+                    float_macs: fm + 1000,
+                    bytes: by + 1000,
+                    ..Default::default()
+                };
+                if d.cost(&b).seconds < d.cost(&a).seconds {
+                    return Err(format!("{} non-monotone", d.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Sparse updates must never *increase* measured backward cost, and the
+/// steady-state rate must approach λ_min (Eq. 9 limit behaviour).
+#[test]
+fn sparse_bwd_cost_monotone_in_lambda() {
+    let spec = spec_by_name("cifar10").unwrap();
+    let mut small = spec.clone();
+    small.reduced_shape = [3, 16, 16];
+    let k = knobs();
+    let src = Domain::new(&small, small.reduced_shape, 5);
+    let def = harness::mbednet_for(&small, &small.reduced_shape);
+    let (fp, _) = harness::pretrain(&def, &src, 1, &k, 6);
+    let mut scen = harness::tl_scenario(&small, DnnConfig::Uint8, &fp, &src, &k, 7);
+    let dev = device::imxrt1062();
+    let (_, b10) = harness::step_costs(&mut scen.model, &scen.train, &dev, 1.0);
+    let (_, b05) = harness::step_costs(&mut scen.model, &scen.train, &dev, 0.5);
+    let (_, b01) = harness::step_costs(&mut scen.model, &scen.train, &dev, 0.1);
+    assert!(b05.seconds <= b10.seconds * 1.001);
+    assert!(b01.seconds <= b05.seconds * 1.001);
+    assert!(b01.seconds < b10.seconds * 0.8, "λ=0.1 must cut backward cost substantially");
+}
+
+/// Eq. 9 steady state: with max_loss seeded large, the controller's rate
+/// equals λ_min and the kept fraction follows.
+#[test]
+fn eq9_steady_state_rate_is_lambda_min() {
+    let mut ctl = DynamicSparse::new(0.25, 1.0);
+    ctl.seed_max_loss(1e9);
+    ctl.begin_sample(0.01);
+    assert!((ctl.rate() - 0.25).abs() < 1e-4);
+}
+
+/// Determinism: the same seeds must produce the identical training report
+/// (the whole stack is PRNG-driven — any hidden nondeterminism breaks
+/// reproducibility of EXPERIMENTS.md).
+#[test]
+fn end_to_end_determinism() {
+    let run = || {
+        let spec = spec_by_name("cwru").unwrap();
+        let mut small = spec.clone();
+        small.reduced_shape = [1, 1, 64];
+        let k = knobs();
+        let src = Domain::new(&small, small.reduced_shape, 9);
+        let def = harness::mbednet_for(&small, &small.reduced_shape);
+        let (fp, _) = harness::pretrain(&def, &src, 1, &k, 10);
+        let mut scen = harness::tl_scenario(&small, DnnConfig::Uint8, &fp, &src, &k, 11);
+        let rep = harness::run_tl(&mut scen, 0.5, &k, 12);
+        (
+            rep.final_test_acc(),
+            rep.epochs.last().unwrap().train_loss,
+            rep.bwd_ops.int_macs,
+            rep.kept_fraction,
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+/// Full-training uint8 deployment of the §IV-D net fits every Tab. II MCU
+/// including its optimizer state and a minimal replay buffer — the
+/// end-to-end feasibility claim of the paper.
+#[test]
+fn full_training_deployment_fits_all_mcus_with_optimizer_state() {
+    let def = models::mnist_cnn(&[1, 28, 28], 10);
+    let plan = memplan::plan(&def, DnnConfig::Uint8, true);
+    let mut rng = Pcg32::seeded(2);
+    let fp = FloatParams::init(&def, &mut rng);
+    let calib = calibrate(&def, &fp, &[tinytrain::tensor::TensorF32::zeros(&[1, 28, 28])]);
+    let m = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
+    let opt = FqtSgd::new(&m, 0.01, 8);
+    let replay_bytes = 16 * 28 * 28; // 16 uint8 samples
+    let total = plan.total_ram() + opt.state_bytes() + replay_bytes;
+    for d in device::all_devices() {
+        assert!(
+            total <= d.ram_bytes,
+            "{}: {} B needed, {} B available",
+            d.name,
+            total,
+            d.ram_bytes
+        );
+    }
+}
