@@ -1,8 +1,13 @@
 //! §Perf microbenchmarks — wall-clock throughput of the native kernels
-//! (the simulated-MCU hot path) and the PJRT-executed artifact. Used by
-//! the performance pass; before/after numbers live in EXPERIMENTS.md §Perf.
+//! (the simulated-MCU hot path), the im2col/GEMM execution engine, and the
+//! PJRT-executed artifact (with `--features pjrt`). Used by the
+//! performance pass; before/after numbers live in EXPERIMENTS.md §Perf.
+//!
+//! Knobs: TT_PERF_REPS (default 10), TT_PERF_BATCH (default 8),
+//! TT_WORKERS (default: one per available core, capped at the batch).
 
-use tinytrain::kernels::{qconv, qlinear, ConvGeom, OpCounter};
+use tinytrain::kernels::{fconv, qconv, qlinear, ConvGeom, OpCounter};
+use tinytrain::memplan::Scratch;
 use tinytrain::quant::{QParams, QTensor};
 use tinytrain::tensor::TensorF32;
 use tinytrain::util::bench::{env_usize, fmt_duration, time_it, ResultSink, Table};
@@ -17,6 +22,9 @@ fn rand_q(rng: &mut Pcg32, shape: &[usize]) -> QTensor {
 
 fn main() {
     let reps = env_usize("TT_PERF_REPS", 10);
+    let batch = env_usize("TT_PERF_BATCH", 8).max(1);
+    let default_workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let workers = env_usize("TT_WORKERS", default_workers).clamp(1, batch);
     let mut rng = Pcg32::seeded(1);
     let mut tab = Table::new(
         "§Perf — native kernel throughput",
@@ -35,11 +43,102 @@ fn main() {
         let mut ops = OpCounter::new();
         std::hint::black_box(qconv::qconv2d_fwd(&x, &w, &bias, &g, oqp, true, &mut ops));
     });
-    tab.row(&["qconv2d_fwd".into(), "16x32x32 -> 32, k3".into(), fmt_duration(t), format!("{:.2}", macs / t / 1e9)]);
+    tab.row(&["qconv2d_fwd scalar".into(), "16x32x32 -> 32, k3".into(), fmt_duration(t), format!("{:.2}", macs / t / 1e9)]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("qconv2d_fwd")),
         ("seconds", Json::Num(t)),
         ("gmacs", Json::Num(macs / t / 1e9)),
+    ]));
+
+    // the same layer through the im2col/GEMM engine
+    let mut scratch = Scratch::new();
+    let (tg, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(qconv::qconv2d_fwd_gemm(
+            &x, &w, &bias, &g, oqp, true, &mut scratch, &mut ops,
+        ));
+    });
+    tab.row(&["qconv2d_fwd gemm".into(), "16x32x32 -> 32, k3".into(), fmt_duration(tg), format!("{:.2}", macs / tg / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("qconv2d_fwd_gemm")),
+        ("seconds", Json::Num(tg)),
+        ("gmacs", Json::Num(macs / tg / 1e9)),
+        ("speedup_vs_scalar", Json::Num(t / tg)),
+    ]));
+
+    // batched forward, batch >= 8: scalar loop vs GEMM vs GEMM + threads
+    let xs: Vec<QTensor> = (0..batch).map(|_| rand_q(&mut rng, &[16, 32, 32])).collect();
+    let bmacs = macs * batch as f64;
+    let (tb_scalar, _) = time_it(1, reps, || {
+        let mut ops = OpCounter::new();
+        for xb in &xs {
+            std::hint::black_box(qconv::qconv2d_fwd(xb, &w, &bias, &g, oqp, true, &mut ops));
+        }
+    });
+    let (tb_gemm, _) = time_it(1, reps, || {
+        let mut ops = OpCounter::new();
+        for xb in &xs {
+            std::hint::black_box(qconv::qconv2d_fwd_gemm(
+                xb, &w, &bias, &g, oqp, true, &mut scratch, &mut ops,
+            ));
+        }
+    });
+    let (tb_mt, _) = time_it(1, reps, || {
+        let chunk = (xs.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for shard in xs.chunks(chunk) {
+                let (w, bias, g) = (&w, &bias, &g);
+                s.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    let mut ops = OpCounter::new();
+                    for xb in shard {
+                        std::hint::black_box(qconv::qconv2d_fwd_gemm(
+                            xb, w, bias, g, oqp, true, &mut scratch, &mut ops,
+                        ));
+                    }
+                });
+            }
+        });
+    });
+    tab.row(&[format!("qconv fwd batch={batch} scalar"), "16x32x32 -> 32, k3".into(), fmt_duration(tb_scalar), format!("{:.2}", bmacs / tb_scalar / 1e9)]);
+    tab.row(&[format!("qconv fwd batch={batch} gemm"), "16x32x32 -> 32, k3".into(), fmt_duration(tb_gemm), format!("{:.2}", bmacs / tb_gemm / 1e9)]);
+    tab.row(&[format!("qconv fwd batch={batch} gemm x{workers} thr"), "16x32x32 -> 32, k3".into(), fmt_duration(tb_mt), format!("{:.2}", bmacs / tb_mt / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("qconv2d_fwd_batched")),
+        ("batch", Json::Num(batch as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("scalar_seconds", Json::Num(tb_scalar)),
+        ("gemm_seconds", Json::Num(tb_gemm)),
+        ("gemm_mt_seconds", Json::Num(tb_mt)),
+        ("gemm_speedup", Json::Num(tb_scalar / tb_gemm)),
+        ("gemm_mt_speedup", Json::Num(tb_scalar / tb_mt)),
+    ]));
+    println!(
+        "\nbatched conv fwd (batch {batch}): GEMM {:.2}x, GEMM+{workers} threads {:.2}x vs scalar",
+        tb_scalar / tb_gemm,
+        tb_scalar / tb_mt
+    );
+
+    // float conv fwd: scalar vs GEMM (the float32/mixed configurations)
+    let mut xf = TensorF32::zeros(&[16, 32, 32]);
+    rng.fill_normal(xf.data_mut(), 1.0);
+    let mut wf = TensorF32::zeros(&[32, 16, 3, 3]);
+    rng.fill_normal(wf.data_mut(), 0.3);
+    let bf = vec![0f32; 32];
+    let (tf_scalar, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(fconv::fconv2d_fwd(&xf, &wf, &bf, &g, true, &mut ops));
+    });
+    let (tf_gemm, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(fconv::fconv2d_fwd_gemm(&xf, &wf, &bf, &g, true, &mut scratch, &mut ops));
+    });
+    tab.row(&["fconv2d_fwd scalar".into(), "16x32x32 -> 32, k3".into(), fmt_duration(tf_scalar), format!("{:.2}", macs / tf_scalar / 1e9)]);
+    tab.row(&["fconv2d_fwd gemm".into(), "16x32x32 -> 32, k3".into(), fmt_duration(tf_gemm), format!("{:.2}", macs / tf_gemm / 1e9)]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("fconv2d_fwd_gemm")),
+        ("seconds", Json::Num(tf_gemm)),
+        ("speedup_vs_scalar", Json::Num(tf_scalar / tf_gemm)),
     ]));
 
     // pointwise conv (1x1) — the mbednet/mcunet majority op
@@ -50,9 +149,11 @@ fn main() {
     let macsp = gp.fwd_macs(16, 16) as f64;
     let (tp, _) = time_it(2, reps, || {
         let mut ops = OpCounter::new();
-        std::hint::black_box(qconv::qconv2d_fwd(&xp, &wp, &biasp, &gp, oqp, true, &mut ops));
+        std::hint::black_box(qconv::qconv2d_fwd_gemm(
+            &xp, &wp, &biasp, &gp, oqp, true, &mut scratch, &mut ops,
+        ));
     });
-    tab.row(&["qconv2d_fwd 1x1".into(), "64x16x16 -> 128".into(), fmt_duration(tp), format!("{:.2}", macsp / tp / 1e9)]);
+    tab.row(&["qconv2d_fwd 1x1 gemm".into(), "64x16x16 -> 128".into(), fmt_duration(tp), format!("{:.2}", macsp / tp / 1e9)]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("qconv2d_fwd_1x1")),
         ("seconds", Json::Num(tp)),
@@ -101,22 +202,26 @@ fn main() {
 
     tab.print();
 
-    // PJRT artifact step latency, if artifacts exist
-    let dir = tinytrain::runtime::artifacts_dir();
-    if dir.join("mnist_cnn_uint8_train.hlo.txt").exists() {
-        let mut trainer =
-            tinytrain::runtime::xla_trainer::load_fqt_trainer(&dir, (-2.0, 4.0), 0.01, 8, 1)
-                .expect("load artifact");
-        let mut x = TensorF32::zeros(&[1, 28, 28]);
-        rng.fill_normal(x.data_mut(), 0.5);
-        let (ta, _) = time_it(3, reps, || {
-            std::hint::black_box(trainer.train_step(&x, 3).unwrap());
-        });
-        println!("\nPJRT fused train step (fwd+bwd, mnist_cnn uint8): {}", fmt_duration(ta));
-        sink.push(Json::obj(vec![
-            ("kernel", Json::str("pjrt_train_step")),
-            ("seconds", Json::Num(ta)),
-        ]));
+    // PJRT artifact step latency, if built with the pjrt feature and the
+    // artifacts exist
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = tinytrain::runtime::artifacts_dir();
+        if dir.join("mnist_cnn_uint8_train.hlo.txt").exists() {
+            let mut trainer =
+                tinytrain::runtime::xla_trainer::load_fqt_trainer(&dir, (-2.0, 4.0), 0.01, 8, 1)
+                    .expect("load artifact");
+            let mut x = TensorF32::zeros(&[1, 28, 28]);
+            rng.fill_normal(x.data_mut(), 0.5);
+            let (ta, _) = time_it(3, reps, || {
+                std::hint::black_box(trainer.train_step(&x, 3).unwrap());
+            });
+            println!("\nPJRT fused train step (fwd+bwd, mnist_cnn uint8): {}", fmt_duration(ta));
+            sink.push(Json::obj(vec![
+                ("kernel", Json::str("pjrt_train_step")),
+                ("seconds", Json::Num(ta)),
+            ]));
+        }
     }
     let p = sink.flush().expect("write results");
     println!("results -> {}", p.display());

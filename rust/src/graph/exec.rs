@@ -14,6 +14,7 @@
 
 use crate::graph::{DnnConfig, LayerDef, LayerKind, ModelDef, Precision};
 use crate::kernels::{fconv, flinear, pool, qconv, qlinear, softmax, OpCounter};
+use crate::memplan::Scratch;
 use crate::quant::observer::MinMaxObserver;
 use crate::quant::{quantize_bias, QParams, QTensor};
 use crate::tensor::TensorF32;
@@ -76,6 +77,15 @@ impl LayerParams {
             LayerParams::Q { w, bias } => w.len() + bias.len() * 4,
             LayerParams::F { w, bias } => (w.len() + bias.len()) * 4,
             LayerParams::None => 0,
+        }
+    }
+
+    /// Human-readable parameter flavor, for mismatch diagnostics.
+    pub fn flavor(&self) -> &'static str {
+        match self {
+            LayerParams::Q { .. } => "quantized (uint8)",
+            LayerParams::F { .. } => "float32",
+            LayerParams::None => "none",
         }
     }
 }
@@ -195,6 +205,31 @@ pub struct BwdResult {
     pub grads: Vec<Option<LayerGrads>>,
 }
 
+/// Result of one batched training pass ([`NativeModel::train_batch`]):
+/// per-sample outputs in sample order plus fwd/bwd op totals.
+pub struct BatchResult {
+    pub losses: Vec<f32>,
+    pub preds: Vec<usize>,
+    /// Per-sample gradients, in sample order. Feed them to the optimizer in
+    /// this order — gradient accumulation then stays bit-identical to the
+    /// one-worker path regardless of how samples were sharded.
+    pub grads: Vec<BwdResult>,
+    pub fwd_ops: OpCounter,
+    pub bwd_ops: OpCounter,
+}
+
+/// One sample's worth of work inside a batch (worker-side record; merged
+/// deterministically on the coordinating thread).
+struct SamplePass {
+    loss: f32,
+    pred: usize,
+    grads: BwdResult,
+    err_obs: Vec<MinMaxObserver>,
+    sat: Vec<Option<(usize, usize)>>,
+    fwd_ops: OpCounter,
+    bwd_ops: OpCounter,
+}
+
 /// Mask provider interface implemented by the dynamic sparse update
 /// controller (`train::sparse`). `None` = update everything.
 pub trait MaskProvider {
@@ -307,7 +342,19 @@ impl NativeModel {
     /// Forward pass for one sample. Works for plain inference too (drop the
     /// trace): the paper's zero-downtime property — training shares the
     /// inference representation byte-for-byte.
+    ///
+    /// Convenience wrapper over [`NativeModel::forward_in`] with a
+    /// throwaway scratch arena; hot loops (the trainer, the batch engine)
+    /// should hold a [`Scratch`] and call `forward_in` directly.
     pub fn forward(&self, x: &TensorF32, ops: &mut OpCounter) -> FwdTrace {
+        self.forward_in(x, &mut Scratch::new(), ops)
+    }
+
+    /// Forward pass with an explicit scratch arena. Non-depthwise convs are
+    /// routed through the im2col/GEMM engine (`kernels::gemm`), which is
+    /// bit-exact with the scalar reference kernels; depthwise convs,
+    /// linears and pools use the MCU-faithful kernels directly.
+    pub fn forward_in(&self, x: &TensorF32, scratch: &mut Scratch, ops: &mut OpCounter) -> FwdTrace {
         let n = self.def.layers.len();
         let mut acts: Vec<Act> = Vec::with_capacity(n);
         let mut argmax: Vec<Option<Vec<u32>>> = vec![None; n];
@@ -331,22 +378,53 @@ impl NativeModel {
                 (LayerKind::Conv { geom, relu }, Act::Q(xq)) => {
                     let (w, bias) = match &self.params[i] {
                         LayerParams::Q { w, bias } => (w, bias),
-                        _ => panic!("layer {i} expected quantized params"),
+                        other => panic!(
+                            "layer {i} ({}): expected quantized (uint8) conv params, found {}",
+                            l.name,
+                            other.flavor()
+                        ),
                     };
                     let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
-                    Act::Q(qconv::qconv2d_fwd(xq, w, &bq, geom, self.act_qp[i], *relu, ops))
+                    let y = if geom.depthwise {
+                        qconv::qconv2d_fwd(xq, w, &bq, geom, self.act_qp[i], *relu, ops)
+                    } else {
+                        qconv::qconv2d_fwd_gemm(
+                            xq,
+                            w,
+                            &bq,
+                            geom,
+                            self.act_qp[i],
+                            *relu,
+                            scratch,
+                            ops,
+                        )
+                    };
+                    Act::Q(y)
                 }
                 (LayerKind::Conv { geom, relu }, Act::F(xf)) => {
                     let (w, bias) = match &self.params[i] {
                         LayerParams::F { w, bias } => (w, bias),
-                        _ => panic!("layer {i} expected float params"),
+                        other => panic!(
+                            "layer {i} ({}): expected float32 conv params, found {}",
+                            l.name,
+                            other.flavor()
+                        ),
                     };
-                    Act::F(fconv::fconv2d_fwd(xf, w, bias, geom, *relu, ops))
+                    let y = if geom.depthwise {
+                        fconv::fconv2d_fwd(xf, w, bias, geom, *relu, ops)
+                    } else {
+                        fconv::fconv2d_fwd_gemm(xf, w, bias, geom, *relu, scratch, ops)
+                    };
+                    Act::F(y)
                 }
                 (LayerKind::Linear { relu, .. }, Act::Q(xq)) => {
                     let (w, bias) = match &self.params[i] {
                         LayerParams::Q { w, bias } => (w, bias),
-                        _ => panic!("layer {i} expected quantized params"),
+                        other => panic!(
+                            "layer {i} ({}): expected quantized (uint8) linear params, found {}",
+                            l.name,
+                            other.flavor()
+                        ),
                     };
                     let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
                     Act::Q(qlinear::qlinear_fwd(xq, w, &bq, self.act_qp[i], *relu, ops))
@@ -354,7 +432,11 @@ impl NativeModel {
                 (LayerKind::Linear { relu, .. }, Act::F(xf)) => {
                     let (w, bias) = match &self.params[i] {
                         LayerParams::F { w, bias } => (w, bias),
-                        _ => panic!("layer {i} expected float params"),
+                        other => panic!(
+                            "layer {i} ({}): expected float32 linear params, found {}",
+                            l.name,
+                            other.flavor()
+                        ),
                     };
                     Act::F(flinear::flinear_fwd(xf, w, bias, *relu, ops))
                 }
@@ -395,39 +477,87 @@ impl NativeModel {
     /// saturates the uint8 range, widen its range 25 % (upper end only for
     /// folded-ReLU layers, whose lower bound is pinned at the zero point).
     pub fn forward_adapt(&mut self, x: &TensorF32, ops: &mut OpCounter) -> FwdTrace {
-        let trace = self.forward(x, ops);
-        for (i, l) in self.def.layers.iter().enumerate() {
-            if !l.trainable || self.prec[i] != Precision::Uint8 {
-                continue;
-            }
-            let relu = matches!(
-                l.kind,
-                LayerKind::Conv { relu: true, .. } | LayerKind::Linear { relu: true, .. }
-            );
-            if let Act::Q(t) = &trace.acts[i] {
-                let n = t.len().max(1);
-                let sat_hi = t.values.data().iter().filter(|&&v| v == 255).count();
-                let sat_lo = if relu {
-                    0
-                } else {
-                    t.values.data().iter().filter(|&&v| v == 0).count()
-                };
-                ops.int_ops += n as u64;
-                if (sat_hi + sat_lo) * 100 > n {
-                    let qp = self.act_qp[i];
-                    let lo = (0 - qp.zero_point) as f32 * qp.scale;
-                    let hi = (255 - qp.zero_point) as f32 * qp.scale;
-                    let (nlo, nhi) = if relu {
-                        (lo, hi * 1.25)
-                    } else {
-                        let span = hi - lo;
-                        (lo - 0.25 * span, hi + 0.25 * span)
-                    };
-                    self.act_qp[i] = QParams::from_min_max(nlo, nhi);
+        self.forward_adapt_in(x, &mut Scratch::new(), ops)
+    }
+
+    /// [`NativeModel::forward_adapt`] with an explicit scratch arena.
+    pub fn forward_adapt_in(
+        &mut self,
+        x: &TensorF32,
+        scratch: &mut Scratch,
+        ops: &mut OpCounter,
+    ) -> FwdTrace {
+        let trace = self.forward_in(x, scratch, ops);
+        let sat = self.measure_saturation(&trace, ops);
+        self.apply_range_adaptation(&sat);
+        trace
+    }
+
+    /// Per-layer saturation telemetry of one forward trace: for each
+    /// *trainable, quantized* layer, the number of output values clipped at
+    /// the uint8 range (upper end only for folded-ReLU layers, whose lower
+    /// bound is pinned at the zero point) and the output element count.
+    /// `None` for layers the adaptation rule does not apply to.
+    fn measure_saturation(
+        &self,
+        trace: &FwdTrace,
+        ops: &mut OpCounter,
+    ) -> Vec<Option<(usize, usize)>> {
+        self.def
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if !l.trainable || self.prec[i] != Precision::Uint8 {
+                    return None;
                 }
+                let relu = matches!(
+                    l.kind,
+                    LayerKind::Conv { relu: true, .. } | LayerKind::Linear { relu: true, .. }
+                );
+                match &trace.acts[i] {
+                    Act::Q(t) => {
+                        let n = t.len().max(1);
+                        let sat_hi = t.values.data().iter().filter(|&&v| v == 255).count();
+                        let sat_lo = if relu {
+                            0
+                        } else {
+                            t.values.data().iter().filter(|&&v| v == 0).count()
+                        };
+                        ops.int_ops += n as u64;
+                        Some((sat_hi + sat_lo, n))
+                    }
+                    Act::F(_) => None,
+                }
+            })
+            .collect()
+    }
+
+    /// Apply the Eqs. 6–7-style range widening for saturation telemetry
+    /// gathered by [`NativeModel::measure_saturation`]: when >1 % of a
+    /// layer's output saturates, widen its range 25 %. Split from the
+    /// measurement so the batch engine can collect telemetry concurrently
+    /// and fold it in deterministically, in sample order.
+    fn apply_range_adaptation(&mut self, sat: &[Option<(usize, usize)>]) {
+        for (i, s) in sat.iter().enumerate() {
+            let Some(&(sat, n)) = s.as_ref() else { continue };
+            if sat * 100 > n {
+                let relu = matches!(
+                    self.def.layers[i].kind,
+                    LayerKind::Conv { relu: true, .. } | LayerKind::Linear { relu: true, .. }
+                );
+                let qp = self.act_qp[i];
+                let lo = (0 - qp.zero_point) as f32 * qp.scale;
+                let hi = (255 - qp.zero_point) as f32 * qp.scale;
+                let (nlo, nhi) = if relu {
+                    (lo, hi * 1.25)
+                } else {
+                    let span = hi - lo;
+                    (lo - 0.25 * span, hi + 0.25 * span)
+                };
+                self.act_qp[i] = QParams::from_min_max(nlo, nhi);
             }
         }
-        trace
     }
 
     /// One full training-sample pass: forward (with activation-range
@@ -447,10 +577,118 @@ impl NativeModel {
         (loss, pred, bwd)
     }
 
+    /// One sample of a batch, computed against the *frozen* model snapshot
+    /// (`&self`): forward + saturation telemetry + backward against a local
+    /// copy of the error observers. Shard-independent by construction.
+    fn batch_sample_pass(&self, x: &TensorF32, label: usize, scratch: &mut Scratch) -> SamplePass {
+        let mut fwd_ops = OpCounter::new();
+        let mut bwd_ops = OpCounter::new();
+        let trace = self.forward_in(x, scratch, &mut fwd_ops);
+        let sat = self.measure_saturation(&trace, &mut fwd_ops);
+        let (loss, probs, err) = softmax::softmax_ce(&trace.logits, label, &mut bwd_ops);
+        let pred = softmax::predict(&probs);
+        let mut err_obs = self.err_obs.clone();
+        let grads =
+            self.backward_with(&trace, err, &mut DenseUpdates, &mut err_obs, &mut bwd_ops);
+        SamplePass { loss, pred, grads, err_obs, sat, fwd_ops, bwd_ops }
+    }
+
+    /// Batched training pass: run forward+backward for every sample of a
+    /// minibatch, sharding samples across `workers` `std::thread` workers.
+    ///
+    /// Semantics (chosen so results are **bit-identical for every worker
+    /// count**, including 1):
+    ///
+    ///  * every sample is evaluated against the same model snapshot — the
+    ///    state at batch entry (activation ranges, error observers,
+    ///    weights);
+    ///  * each sample's backward runs against a private copy of the error
+    ///    observers taken at batch entry;
+    ///  * after all samples finish, the per-sample observer ranges and
+    ///    activation-saturation telemetry are folded into the model
+    ///    **in sample order** on the coordinating thread.
+    ///
+    /// Gradient application stays with the caller: [`BatchResult::grads`]
+    /// holds per-sample gradients in sample order, so feeding them to an
+    /// optimizer reproduces the sequential accumulation bit-for-bit. The
+    /// dynamic sparse controller is inherently sequential (its Eq. 9 state
+    /// advances per sample), so the batch engine always computes dense
+    /// gradients; sparse runs stay on [`NativeModel::train_sample`].
+    ///
+    /// Each worker builds its scratch arena at spawn and reuses it across
+    /// its samples; with typical minibatches (≥ 8 samples) the per-call
+    /// arena cost is noise next to the conv work it serves.
+    pub fn train_batch(&mut self, xs: &[&TensorF32], ys: &[usize], workers: usize) -> BatchResult {
+        assert_eq!(xs.len(), ys.len(), "one label per sample");
+        let n = xs.len();
+        let workers = workers.max(1).min(n.max(1));
+        let mut passes: Vec<Option<SamplePass>> = (0..n).map(|_| None).collect();
+
+        if workers <= 1 {
+            let mut scratch = Scratch::for_model(&self.def);
+            for i in 0..n {
+                passes[i] = Some(self.batch_sample_pass(xs[i], ys[i], &mut scratch));
+            }
+        } else {
+            let model: &NativeModel = self;
+            let chunk = (n + workers - 1) / workers;
+            let results: Vec<Vec<(usize, SamplePass)>> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for wi in 0..workers {
+                    let lo = wi * chunk;
+                    let hi = ((wi + 1) * chunk).min(n);
+                    if lo >= hi {
+                        break;
+                    }
+                    let wxs = &xs[lo..hi];
+                    let wys = &ys[lo..hi];
+                    handles.push(s.spawn(move || {
+                        let mut scratch = Scratch::for_model(&model.def);
+                        let mut out = Vec::with_capacity(wxs.len());
+                        for (j, (&x, &y)) in wxs.iter().zip(wys.iter()).enumerate() {
+                            out.push((lo + j, model.batch_sample_pass(x, y, &mut scratch)));
+                        }
+                        out
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().expect("batch worker panicked")).collect()
+            });
+            for (i, p) in results.into_iter().flatten() {
+                passes[i] = Some(p);
+            }
+        }
+
+        // Deterministic merge, in sample order.
+        let mut losses = Vec::with_capacity(n);
+        let mut preds = Vec::with_capacity(n);
+        let mut grads = Vec::with_capacity(n);
+        let mut fwd_ops = OpCounter::new();
+        let mut bwd_ops = OpCounter::new();
+        for p in passes.into_iter() {
+            let p = p.expect("every batch sample must produce a pass");
+            self.apply_range_adaptation(&p.sat);
+            for (obs, local) in self.err_obs.iter_mut().zip(p.err_obs.iter()) {
+                if let Some((lo, hi)) = local.range() {
+                    obs.observe_range(lo, hi);
+                }
+            }
+            fwd_ops.add(&p.fwd_ops);
+            bwd_ops.add(&p.bwd_ops);
+            losses.push(p.loss);
+            preds.push(p.pred);
+            grads.push(p.grads);
+        }
+        BatchResult { losses, preds, grads, fwd_ops, bwd_ops }
+    }
+
     /// Backward pass from a float head error (`softmax − onehot`). Walks
     /// layers in reverse down to the earliest trainable layer; error
     /// tensors are quantized per layer precision; ReLU masking uses the
     /// saved forward outputs; pool routing uses the saved argmaxes.
+    ///
+    /// Updates the model's own error observers; delegates to
+    /// [`NativeModel::backward_with`], which the batch engine calls
+    /// directly with per-worker observer copies.
     pub fn backward(
         &mut self,
         trace: &FwdTrace,
@@ -458,7 +696,26 @@ impl NativeModel {
         masks: &mut dyn MaskProvider,
         ops: &mut OpCounter,
     ) -> BwdResult {
+        let mut obs = std::mem::take(&mut self.err_obs);
+        let r = self.backward_with(trace, head_err, masks, &mut obs, ops);
+        self.err_obs = obs;
+        r
+    }
+
+    /// [`NativeModel::backward`] against caller-provided error observers.
+    /// The model itself is only read, so concurrent workers can each run
+    /// backward passes over a shared `&NativeModel` with their own observer
+    /// copies and merge the observations deterministically afterwards.
+    pub fn backward_with(
+        &self,
+        trace: &FwdTrace,
+        head_err: TensorF32,
+        masks: &mut dyn MaskProvider,
+        err_obs: &mut [MinMaxObserver],
+        ops: &mut OpCounter,
+    ) -> BwdResult {
         let n = self.def.layers.len();
+        assert_eq!(err_obs.len(), n, "one error observer per layer");
         let stop = self.def.first_trainable().unwrap_or(n);
         let mut grads: Vec<Option<LayerGrads>> = (0..n).map(|_| None).collect();
 
@@ -466,7 +723,7 @@ impl NativeModel {
         let mut err: Act = match self.prec[n - 1] {
             Precision::Float32 => Act::F(head_err),
             Precision::Uint8 => {
-                let obs = &mut self.err_obs[n - 1];
+                let obs = &mut err_obs[n - 1];
                 obs.observe(head_err.data());
                 Act::Q(QTensor::quantize_with(&head_err, obs.qparams()))
             }
@@ -477,7 +734,7 @@ impl NativeModel {
             // Coerce error into this layer's precision (mixed boundary).
             err = match (self.prec[i], err) {
                 (Precision::Uint8, Act::F(t)) => {
-                    let obs = &mut self.err_obs[i];
+                    let obs = &mut err_obs[i];
                     obs.observe(t.data());
                     Act::Q(QTensor::quantize_with(&t, obs.qparams()))
                 }
@@ -510,11 +767,20 @@ impl NativeModel {
                             }
                             let (w, _) = match &self.params[i] {
                                 LayerParams::Q { w, bias } => (w, bias),
-                                _ => unreachable!(),
+                                other => panic!(
+                                    "layer {i} ({}): backward expected quantized (uint8) conv \
+                                     params, found {}",
+                                    l.name,
+                                    other.flavor()
+                                ),
                             };
                             let xq = match &layer_in {
                                 Act::Q(x) => x,
-                                _ => unreachable!(),
+                                Act::F(_) => panic!(
+                                    "layer {i} ({}): backward expected a quantized input \
+                                     activation, found float32",
+                                    l.name
+                                ),
                             };
                             if l.trainable {
                                 let (gw, gb) =
@@ -527,12 +793,12 @@ impl NativeModel {
                             }
                             if i > stop {
                                 let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
-                                let prev_obs = &mut self.err_obs[i - 1];
+                                let prev_obs = &mut err_obs[i - 1];
                                 let out_qp = propagate_qp(prev_obs, eq, ops);
                                 err = Act::Q(qconv::qconv2d_bwd_input(
                                     eq, w, geom, h, w_in, out_qp, keep.as_deref(), ops,
                                 ));
-                                observe_saturation(&mut self.err_obs[i - 1], &err);
+                                observe_saturation(&mut err_obs[i - 1], &err);
                             }
                         }
                         Act::F(ef) => {
@@ -543,11 +809,20 @@ impl NativeModel {
                             }
                             let (w, _) = match &self.params[i] {
                                 LayerParams::F { w, bias } => (w, bias),
-                                _ => unreachable!(),
+                                other => panic!(
+                                    "layer {i} ({}): backward expected float32 conv params, \
+                                     found {}",
+                                    l.name,
+                                    other.flavor()
+                                ),
                             };
                             let xf = match &layer_in {
                                 Act::F(x) => x,
-                                _ => unreachable!(),
+                                Act::Q(_) => panic!(
+                                    "layer {i} ({}): backward expected a float32 input \
+                                     activation, found quantized",
+                                    l.name
+                                ),
                             };
                             if l.trainable {
                                 let (gw, gb) =
@@ -584,11 +859,20 @@ impl NativeModel {
                             }
                             let (w, _) = match &self.params[i] {
                                 LayerParams::Q { w, bias } => (w, bias),
-                                _ => unreachable!(),
+                                other => panic!(
+                                    "layer {i} ({}): backward expected quantized (uint8) linear \
+                                     params, found {}",
+                                    l.name,
+                                    other.flavor()
+                                ),
                             };
                             let xq = match &layer_in {
                                 Act::Q(x) => x,
-                                _ => unreachable!(),
+                                Act::F(_) => panic!(
+                                    "layer {i} ({}): backward expected a quantized input \
+                                     activation, found float32",
+                                    l.name
+                                ),
                             };
                             if l.trainable {
                                 let (gw, gb) =
@@ -600,12 +884,12 @@ impl NativeModel {
                                 grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
                             }
                             if i > stop {
-                                let prev_obs = &mut self.err_obs[i - 1];
+                                let prev_obs = &mut err_obs[i - 1];
                                 let out_qp = propagate_qp(prev_obs, eq, ops);
                                 err = Act::Q(qlinear::qlinear_bwd_input(
                                     eq, w, out_qp, keep.as_deref(), ops,
                                 ));
-                                observe_saturation(&mut self.err_obs[i - 1], &err);
+                                observe_saturation(&mut err_obs[i - 1], &err);
                             }
                         }
                         Act::F(ef) => {
@@ -616,11 +900,20 @@ impl NativeModel {
                             }
                             let (w, _) = match &self.params[i] {
                                 LayerParams::F { w, bias } => (w, bias),
-                                _ => unreachable!(),
+                                other => panic!(
+                                    "layer {i} ({}): backward expected float32 linear params, \
+                                     found {}",
+                                    l.name,
+                                    other.flavor()
+                                ),
                             };
                             let xf = match &layer_in {
                                 Act::F(x) => x,
-                                _ => unreachable!(),
+                                Act::Q(_) => panic!(
+                                    "layer {i} ({}): backward expected a float32 input \
+                                     activation, found quantized",
+                                    l.name
+                                ),
                             };
                             if l.trainable {
                                 let (gw, gb) =
@@ -656,7 +949,7 @@ impl NativeModel {
                     if i > stop {
                         err = match e {
                             Act::Q(eq) => {
-                                let prev_obs = &mut self.err_obs[i - 1];
+                                let prev_obs = &mut err_obs[i - 1];
                                 let out_qp = propagate_qp(prev_obs, eq, ops);
                                 Act::Q(pool::qgap_bwd(eq, &layer_in.shape().to_vec(), out_qp, ops))
                             }
@@ -904,6 +1197,61 @@ mod tests {
         let nq = structure_norms(&Act::Q(q));
         assert!((nq[0] - 2.0).abs() < 0.1);
         assert!((nq[1] - 0.75).abs() < 0.1);
+    }
+
+    /// The batch engine must be worker-count invariant: identical losses,
+    /// predictions, gradients, op totals and post-batch model state
+    /// (adapted ranges, observers) for 1 and many workers.
+    #[test]
+    fn train_batch_is_worker_count_invariant() {
+        let (mut m1, xs, ys) = deployed(DnnConfig::Uint8, 70);
+        let (mut m2, _, _) = deployed(DnnConfig::Uint8, 70);
+        let refs: Vec<&TensorF32> = xs.iter().collect();
+        let r1 = m1.train_batch(&refs, &ys, 1);
+        let r2 = m2.train_batch(&refs, &ys, 4);
+        assert_eq!(r1.losses, r2.losses);
+        assert_eq!(r1.preds, r2.preds);
+        assert_eq!(r1.fwd_ops, r2.fwd_ops);
+        assert_eq!(r1.bwd_ops, r2.bwd_ops);
+        for (a, b) in r1.grads.iter().zip(r2.grads.iter()) {
+            for (ga, gb) in a.grads.iter().zip(b.grads.iter()) {
+                match (ga, gb) {
+                    (Some(ga), Some(gb)) => {
+                        assert_eq!(ga.gw.data(), gb.gw.data());
+                        assert_eq!(ga.gb.data(), gb.gb.data());
+                        assert_eq!(ga.kept, gb.kept);
+                    }
+                    (None, None) => {}
+                    _ => panic!("gradient presence differs between worker counts"),
+                }
+            }
+        }
+        for (a, b) in m1.act_qp.iter().zip(m2.act_qp.iter()) {
+            assert_eq!(a, b, "adapted activation ranges must match");
+        }
+        for (a, b) in m1.err_obs.iter().zip(m2.err_obs.iter()) {
+            assert_eq!(a.range(), b.range(), "merged observer state must match");
+        }
+    }
+
+    /// Batched gradients must match the per-sample path when the model
+    /// state is frozen (same snapshot semantics): sample 0 sees identical
+    /// conditions in both engines.
+    #[test]
+    fn train_batch_first_sample_matches_sequential() {
+        let (mut mb, xs, ys) = deployed(DnnConfig::Uint8, 71);
+        let (mut ms, _, _) = deployed(DnnConfig::Uint8, 71);
+        let refs: Vec<&TensorF32> = xs.iter().take(1).collect();
+        let rb = mb.train_batch(&refs, &ys[..1], 2);
+        let mut ops = OpCounter::new();
+        let (loss, pred, bwd) = ms.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
+        assert_eq!(rb.losses[0], loss);
+        assert_eq!(rb.preds[0], pred);
+        for (a, b) in rb.grads[0].grads.iter().zip(bwd.grads.iter()) {
+            if let (Some(a), Some(b)) = (a, b) {
+                assert_eq!(a.gw.data(), b.gw.data());
+            }
+        }
     }
 
     /// A few FQT steps on the toy problem must reduce the loss — the

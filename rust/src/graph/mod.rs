@@ -418,7 +418,7 @@ mod tests {
                 assert_eq!(geom.kh, 1);
                 assert_eq!(geom.kw, 3);
             }
-            _ => panic!(),
+            other => panic!("layer 0 of the time-series model must be a conv, found {other:?}"),
         }
         assert_eq!(m.shapes()[0], vec![8, 1, 32]);
     }

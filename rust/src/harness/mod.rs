@@ -6,6 +6,8 @@
 //!   TT_RUNS      independent repetitions          (default 2; paper: 5)
 //!   TT_TRAIN_PC  train samples per class          (default 3)
 //!   TT_TEST_PC   test samples per class           (default 2)
+//!   TT_WORKERS   batch-engine worker threads      (default 1; results are
+//!                bit-identical for every value — see `train_batched`)
 //!
 //! Accuracy runs use each dataset's *reduced* shape; memory/latency/energy
 //! come from the memory planner and device cost model at the *paper*
@@ -30,6 +32,10 @@ pub struct Knobs {
     pub runs: usize,
     pub train_pc: usize,
     pub test_pc: usize,
+    /// Worker threads for the batched execution engine (1 = sequential;
+    /// any value yields bit-identical results by the batch-engine
+    /// determinism contract).
+    pub workers: usize,
 }
 
 impl Knobs {
@@ -39,6 +45,7 @@ impl Knobs {
             runs: env_usize("TT_RUNS", 2),
             train_pc: env_usize("TT_TRAIN_PC", 3),
             test_pc: env_usize("TT_TEST_PC", 2),
+            workers: env_usize("TT_WORKERS", 1).max(1),
         }
     }
 }
@@ -126,6 +133,28 @@ pub fn run_tl(scen: &mut TlScenario, lambda_min: f32, knobs: &Knobs, seed: u64) 
     )
 }
 
+/// Shared setup for the §IV-D full-training runs: model, optimizer, data
+/// splits and the RNG positioned exactly after setup. Both the sequential
+/// and the batched entry points consume this, so their runs start from
+/// byte-identical state and engine comparisons stay meaningful.
+fn full_training_setup(
+    spec: &DatasetSpec,
+    cfg: DnnConfig,
+    knobs: &Knobs,
+    seed: u64,
+) -> (NativeModel, FqtSgd, Split, Split, Pcg32) {
+    let mut rng = Pcg32::new(seed, 0x44);
+    let shape = spec.reduced_shape;
+    let def = models::mnist_cnn(&shape, spec.classes);
+    let dom = Domain::new(spec, shape, seed ^ 0x1234);
+    let (tr, te) = dom.splits(knobs.train_pc * 2, knobs.test_pc * 2, &mut rng);
+    let fp = FloatParams::init(&def, &mut rng);
+    let calib = calibrate(&def, &fp, &tr.xs[..tr.len().min(4)]);
+    let m = NativeModel::build(def, cfg, &fp, &calib);
+    let opt = FqtSgd::new(&m, LR, BATCH);
+    (m, opt, tr, te, rng)
+}
+
 /// Full on-device training from a (poorly) pretrained state (§IV-D: the
 /// MNIST-pretrained net fully retrained on each MNIST-family stand-in).
 pub fn run_full_training(
@@ -134,16 +163,32 @@ pub fn run_full_training(
     knobs: &Knobs,
     seed: u64,
 ) -> (TrainReport, NativeModel) {
-    let mut rng = Pcg32::new(seed, 0x44);
-    let shape = spec.reduced_shape;
-    let def = models::mnist_cnn(&shape, spec.classes);
-    let dom = Domain::new(spec, shape, seed ^ 0x1234);
-    let (tr, te) = dom.splits(knobs.train_pc * 2, knobs.test_pc * 2, &mut rng);
-    let fp = FloatParams::init(&def, &mut rng);
-    let calib = calibrate(&def, &fp, &tr.xs[..tr.len().min(4)]);
-    let mut m = NativeModel::build(def, cfg, &fp, &calib);
-    let mut opt = FqtSgd::new(&m, LR, BATCH);
+    let (mut m, mut opt, tr, te, mut rng) = full_training_setup(spec, cfg, knobs, seed);
     let rep = loop_::train(&mut m, &mut opt, &tr, &te, knobs.epochs, &mut Sparsity::Dense, &mut rng);
+    (rep, m)
+}
+
+/// Full on-device training through the batched/threaded execution engine
+/// (`knobs.workers` threads, dense updates). Bit-identical to itself for
+/// every worker count; the sequential reference stays in
+/// [`run_full_training`].
+pub fn run_full_training_batched(
+    spec: &DatasetSpec,
+    cfg: DnnConfig,
+    knobs: &Knobs,
+    seed: u64,
+) -> (TrainReport, NativeModel) {
+    let (mut m, mut opt, tr, te, mut rng) = full_training_setup(spec, cfg, knobs, seed);
+    let rep = loop_::train_batched(
+        &mut m,
+        &mut opt,
+        &tr,
+        &te,
+        knobs.epochs,
+        BATCH,
+        knobs.workers,
+        &mut rng,
+    );
     (rep, m)
 }
 
@@ -202,7 +247,7 @@ mod tests {
 
     #[test]
     fn tl_pipeline_end_to_end_smoke() {
-        let knobs = Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1 };
+        let knobs = Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1, workers: 1 };
         let spec = spec_by_name("cwru").unwrap();
         let shape = [1usize, 1, 128]; // shrunk further for the unit test
         let mut small = spec.clone();
@@ -221,7 +266,7 @@ mod tests {
 
     #[test]
     fn sparse_tl_cheaper_than_dense() {
-        let knobs = Knobs { epochs: 1, runs: 1, train_pc: 2, test_pc: 1 };
+        let knobs = Knobs { epochs: 1, runs: 1, train_pc: 2, test_pc: 1, workers: 1 };
         let mut spec = spec_by_name("cifar10").unwrap();
         spec.reduced_shape = [3, 16, 16];
         let src = Domain::new(&spec, spec.reduced_shape, 5);
@@ -232,6 +277,17 @@ mod tests {
         let d = run_tl(&mut dense, 1.0, &knobs, 8);
         let s = run_tl(&mut sparse, 0.1, &knobs, 8);
         assert!(s.bwd_ops.total_macs() < d.bwd_ops.total_macs());
+    }
+
+    #[test]
+    fn batched_full_training_smoke() {
+        let mut spec = spec_by_name("fmnist").unwrap();
+        spec.reduced_shape = [1, 12, 12];
+        let knobs = Knobs { epochs: 2, runs: 1, train_pc: 3, test_pc: 2, workers: 2 };
+        let (rep, _) = run_full_training_batched(&spec, DnnConfig::Uint8, &knobs, 5);
+        assert_eq!(rep.epochs.len(), 2);
+        assert!(rep.samples_seen > 0);
+        assert!(rep.fwd_ops.total_macs() > 0 && rep.bwd_ops.total_macs() > 0);
     }
 
     #[test]

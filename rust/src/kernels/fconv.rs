@@ -5,7 +5,8 @@
 //! the device model prices it with the per-MCU float CPI (soft-float on the
 //! Cortex-M0+, FPU on M4/M7).
 
-use crate::kernels::{ConvGeom, OpCounter};
+use crate::kernels::{gemm, ConvGeom, OpCounter};
+use crate::memplan::Scratch;
 use crate::tensor::{idx3, idx4, TensorF32};
 
 /// Forward: `y = relu?(conv(x, w) + b)` in f32.
@@ -49,6 +50,57 @@ pub fn fconv2d_fwd(
     }
     ops.float_macs += geom.fwd_macs(h, wd);
     ops.bytes += ((x.len() + w.len() + geom.cout * oh * ow) * 4) as u64;
+    out
+}
+
+/// GEMM-routed float forward (the `float32`/`mixed` twin of
+/// [`crate::kernels::qconv::qconv2d_fwd_gemm`]). Value-identical to
+/// [`fconv2d_fwd`]: per output element the GEMM accumulates products in
+/// the same ascending `(ci, ky, kx)` order as the scalar loops, and padded
+/// im2col entries contribute an exact `w·0.0`. Non-depthwise only.
+pub fn fconv2d_fwd_gemm(
+    x: &TensorF32,
+    w: &TensorF32,
+    bias: &[f32],
+    geom: &ConvGeom,
+    relu: bool,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+
+    let n = oh * ow;
+    let kdim = geom.cin * geom.kh * geom.kw;
+    let pointwise = geom.kh == 1
+        && geom.kw == 1
+        && geom.stride == 1
+        && geom.pad_h == 0
+        && geom.pad_w == 0;
+
+    let mut out = TensorF32::zeros(&[geom.cout, oh, ow]);
+    {
+        let col_buf = scratch.fconv_col(if pointwise { 0 } else { kdim * n });
+        if pointwise {
+            gemm::gemm_f32(w.data(), x.data(), bias, geom.cout, kdim, n, out.data_mut());
+        } else {
+            gemm::im2col_f32(x.data(), h, wd, geom, oh, ow, col_buf);
+            gemm::gemm_f32(w.data(), col_buf, bias, geom.cout, kdim, n, out.data_mut());
+        }
+    }
+    if relu {
+        for v in out.data_mut().iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    ops.float_macs += geom.fwd_macs(h, wd);
+    ops.bytes += ((x.len() + w.len() + geom.cout * n) * 4) as u64;
     out
 }
 
@@ -268,6 +320,31 @@ mod tests {
             wm.data_mut()[idx] -= eps;
             let num = (loss(&wp) - loss(&wm)) / (2.0 * eps);
             assert!((num - gw.data()[idx]).abs() < 1e-2);
+        }
+    }
+
+    /// The GEMM-routed float forward must equal the scalar reference
+    /// exactly (same per-element accumulation order — see module docs).
+    #[test]
+    fn gemm_fwd_equals_scalar_reference() {
+        let mut rng = Pcg32::seeded(34);
+        let mut scratch = crate::memplan::Scratch::new();
+        for &(cin, cout, k, stride, pad, h) in &[
+            (2usize, 3usize, 3usize, 1usize, 1usize, 6usize),
+            (3, 4, 3, 2, 1, 9),
+            (4, 8, 1, 1, 0, 5), // pointwise shortcut
+            (1, 2, 3, 1, 0, 7),
+        ] {
+            let g = ConvGeom { cin, cout, kh: k, kw: k, stride, pad_h: pad, pad_w: pad, depthwise: false };
+            let mut x = TensorF32::zeros(&[cin, h, h]);
+            rng.fill_normal(x.data_mut(), 1.0);
+            let mut wt = TensorF32::zeros(&[cout, cin, k, k]);
+            rng.fill_normal(wt.data_mut(), 0.3);
+            let b: Vec<f32> = (0..cout).map(|_| rng.normal() * 0.1).collect();
+            let mut ops = OpCounter::new();
+            let ys = fconv2d_fwd(&x, &wt, &b, &g, true, &mut ops);
+            let yg = fconv2d_fwd_gemm(&x, &wt, &b, &g, true, &mut scratch, &mut ops);
+            assert_eq!(ys.data(), yg.data(), "geom {cin}->{cout} k{k} s{stride}");
         }
     }
 

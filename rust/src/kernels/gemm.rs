@@ -1,0 +1,360 @@
+//! im2col + cache-blocked GEMM: the batched execution engine's compute
+//! core.
+//!
+//! Non-depthwise convolutions are lowered to one matrix multiply per
+//! sample: the input feature map `[Cin, H, W]` is packed into a column
+//! matrix `col[Cin·Kh·Kw, Oh·Ow]` (padding positions filled with the input
+//! zero point, so they contribute `(z_x − z_x)(w − z_w) = 0`, exactly like
+//! the scalar kernels' skip), and the weight tensor is viewed as
+//! `[Cout, Cin·Kh·Kw]` — already its storage layout. The product is
+//! accumulated in i32 (exact, order-independent), so the GEMM path is
+//! **bit-exact** with the scalar reference kernels in `qconv`; the float
+//! twin accumulates in ascending-k order, matching the scalar float
+//! kernel's `(ci, ky, kx)` nesting so results are value-identical.
+//!
+//! Blocking: the inner loop is an AXPY over a contiguous row of `col`
+//! (vectorizable u8→i32 widening multiply-add); the `k` and `n` loops are
+//! tiled so one output tile and the `col` rows feeding it stay cache
+//! resident. The scalar kernels remain in `qconv`/`fconv` as the
+//! MCU-faithful reference — this module is the host-side fast path.
+//!
+//! Scratch buffers come from [`crate::memplan::Scratch`]: the sequential
+//! training loop allocates one arena per run, batch workers one per
+//! spawned worker (i.e. per minibatch × worker) — in both cases the
+//! buffers are reused across every layer and sample they serve.
+
+/// Columns per output tile (i32 accumulator row bytes ≈ 4·NC per m-row).
+const NC: usize = 256;
+/// Rows of `col` (reduction depth) per tile.
+const KC: usize = 128;
+
+/// Pack a `[Cin, H, W]` feature map into `col[Cin·Kh·Kw, Oh·Ow]`.
+///
+/// Row `(ci·Kh + ky)·Kw + kx`, column `oy·Ow + ox` holds the input value at
+/// `(ci, oy·stride + ky − pad_h, ox·stride + kx − pad_w)`, or `pad` when
+/// that position falls outside the map. One generic body serves both
+/// element types so the index math cannot drift between the integer and
+/// float engines (their bit-exactness contracts share this packing).
+fn im2col<T: Copy>(
+    xd: &[T],
+    h: usize,
+    w: usize,
+    geom: &super::ConvGeom,
+    oh: usize,
+    ow: usize,
+    pad: T,
+    col: &mut [T],
+) {
+    let n = oh * ow;
+    assert_eq!(col.len(), geom.cin * geom.kh * geom.kw * n, "im2col buffer size");
+    assert_eq!(xd.len(), geom.cin * h * w, "input size");
+    let mut r = 0usize;
+    for ci in 0..geom.cin {
+        let plane = &xd[ci * h * w..(ci + 1) * h * w];
+        for ky in 0..geom.kh {
+            for kx in 0..geom.kw {
+                let dst = &mut col[r * n..(r + 1) * n];
+                let mut p = 0usize;
+                for oy in 0..oh {
+                    let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        dst[p..p + ow].fill(pad);
+                        p += ow;
+                        continue;
+                    }
+                    let rowbase = iy as usize * w;
+                    for ox in 0..ow {
+                        let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                        dst[p] = if ix < 0 || ix >= w as isize {
+                            pad
+                        } else {
+                            plane[rowbase + ix as usize]
+                        };
+                        p += 1;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+/// u8 im2col. With `pad` = the input zero point, padded entries contribute
+/// exactly zero to the integer GEMM (matching the scalar kernels' skip).
+pub fn im2col_u8(
+    xd: &[u8],
+    h: usize,
+    w: usize,
+    geom: &super::ConvGeom,
+    oh: usize,
+    ow: usize,
+    pad: u8,
+    col: &mut [u8],
+) {
+    im2col(xd, h, w, geom, oh, ow, pad, col);
+}
+
+/// Float twin of [`im2col_u8`]; padding positions are 0.0.
+pub fn im2col_f32(
+    xd: &[f32],
+    h: usize,
+    w: usize,
+    geom: &super::ConvGeom,
+    oh: usize,
+    ow: usize,
+    col: &mut [f32],
+) {
+    im2col(xd, h, w, geom, oh, ow, 0.0, col);
+}
+
+/// Tiled integer GEMM with per-operand zero points:
+/// `out[m·n] = row_init[m] + Σ_k (a[m·k] − za)·(b[k·n] − zb)`.
+///
+/// Accumulation is i32 and exact, so the result is independent of the tile
+/// schedule — bit-identical to any naive triple loop over the same
+/// operands. The inner loop is an AXPY over a contiguous `b` row segment
+/// (the im2col layout makes the spatial dimension innermost), which the
+/// compiler vectorizes; rows of `a` equal to the zero point are skipped.
+pub fn gemm_u8_i32(
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    for (mr, orow) in out.chunks_exact_mut(n).enumerate() {
+        orow.fill(row_init[mr]);
+    }
+    let mut nb = 0;
+    while nb < n {
+        let ne = (nb + NC).min(n);
+        let mut kb = 0;
+        while kb < k {
+            let ke = (kb + KC).min(k);
+            for mr in 0..m {
+                let arow = &a[mr * k..(mr + 1) * k];
+                let orow = &mut out[mr * n + nb..mr * n + ne];
+                for kk in kb..ke {
+                    let av = arow[kk] as i32 - za;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + nb..kk * n + ne];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * (bv as i32 - zb);
+                    }
+                }
+            }
+            kb = ke;
+        }
+        nb = ne;
+    }
+}
+
+/// Tiled f32 GEMM: `out[m·n] = row_init[m] + Σ_k a[m·k]·b[k·n]`.
+///
+/// Per output element the products are added in ascending-`k` order
+/// (tiles ascend, `k` ascends within a tile), which matches the scalar
+/// float conv's `(ci, ky, kx)` loop nesting — results are value-identical
+/// to the reference kernel (padded entries add an exact `a·0.0`).
+pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    row_init: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    for (mr, orow) in out.chunks_exact_mut(n).enumerate() {
+        orow.fill(row_init[mr]);
+    }
+    let mut nb = 0;
+    while nb < n {
+        let ne = (nb + NC).min(n);
+        let mut kb = 0;
+        while kb < k {
+            let ke = (kb + KC).min(k);
+            for mr in 0..m {
+                let arow = &a[mr * k..(mr + 1) * k];
+                let orow = &mut out[mr * n + nb..mr * n + ne];
+                for kk in kb..ke {
+                    let av = arow[kk];
+                    let brow = &b[kk * n + nb..kk * n + ne];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            kb = ke;
+        }
+        nb = ne;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ConvGeom;
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::{shrink_dim, Prop};
+
+    fn naive_gemm_i32(
+        a: &[u8],
+        za: i32,
+        b: &[u8],
+        zb: i32,
+        init: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for mr in 0..m {
+            for nc in 0..n {
+                let mut acc = init[mr];
+                for kk in 0..k {
+                    acc += (a[mr * k + kk] as i32 - za) * (b[kk * n + nc] as i32 - zb);
+                }
+                out[mr * n + nc] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_tiled_gemm_matches_naive_triple_loop() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| {
+                // spans the tile boundaries: k and n around KC/NC
+                let m = 1 + r.below(9) as usize;
+                let k = 1 + r.below(300) as usize;
+                let n = 1 + r.below(600) as usize;
+                (m, k, n, r.next_u64())
+            },
+            |&(m, k, n, s)| {
+                let mut v = Vec::new();
+                for m2 in shrink_dim(m, 1) {
+                    v.push((m2, k, n, s));
+                }
+                for k2 in shrink_dim(k, 1) {
+                    v.push((m, k2, n, s));
+                }
+                for n2 in shrink_dim(n, 1) {
+                    v.push((m, k, n2, s));
+                }
+                v
+            },
+            |&(m, k, n, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+                let init: Vec<i32> = (0..m).map(|_| rng.below(1000) as i32 - 500).collect();
+                let (za, zb) = (rng.below(256) as i32, rng.below(256) as i32);
+                let mut out = vec![0i32; m * n];
+                gemm_u8_i32(&a, za, &b, zb, &init, m, k, n, &mut out);
+                let want = naive_gemm_i32(&a, za, &b, zb, &init, m, k, n);
+                if out != want {
+                    return Err("tiled result differs from naive triple loop".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_f32_matches_naive_order() {
+        let mut rng = Pcg32::seeded(5);
+        let (m, k, n) = (4, 150, 300); // crosses both tile boundaries
+        let mut a = vec![0f32; m * k];
+        let mut b = vec![0f32; k * n];
+        rng.fill_normal(&mut a, 0.5);
+        rng.fill_normal(&mut b, 0.5);
+        let init: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+        let mut out = vec![0f32; m * n];
+        gemm_f32(&a, &b, &init, m, k, n, &mut out);
+        for mr in 0..m {
+            for nc in 0..n {
+                let mut acc = init[mr];
+                for kk in 0..k {
+                    acc += a[mr * k + kk] * b[kk * n + nc];
+                }
+                // ascending-k accumulation on both sides -> exactly equal
+                assert_eq!(out[mr * n + nc], acc, "({mr},{nc})");
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_identity_for_pointwise() {
+        // 1x1/stride-1/no-pad im2col is the identity layout [Cin, H·W]
+        let g = ConvGeom {
+            cin: 3,
+            cout: 1,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad_h: 0,
+            pad_w: 0,
+            depthwise: false,
+        };
+        let xd: Vec<u8> = (0..3 * 4 * 4).map(|v| v as u8).collect();
+        let mut col = vec![0u8; 3 * 16];
+        im2col_u8(&xd, 4, 4, &g, 4, 4, 99, &mut col);
+        assert_eq!(col, xd);
+    }
+
+    #[test]
+    fn im2col_pads_with_zero_point() {
+        let g = ConvGeom {
+            cin: 1,
+            cout: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
+        let xd = vec![10u8; 4]; // 2x2 map
+        let mut col = vec![0u8; 9 * 4];
+        im2col_u8(&xd, 2, 2, &g, 2, 2, 7, &mut col);
+        // row (ky=0,kx=0), output (0,0) reads input (-1,-1) -> pad
+        assert_eq!(col[0], 7);
+        // center tap (ky=1,kx=1) reads the map itself
+        let center = &col[4 * 4..5 * 4];
+        assert_eq!(center, &[10, 10, 10, 10]);
+        // 2x2 map, 3x3 kernel, pad 1: each of the 4 output positions sees
+        // 4 in-bounds taps -> 16 of the 36 col entries are real values
+        let in_bounds = col.iter().filter(|&&v| v == 10).count();
+        assert_eq!(in_bounds, 16);
+    }
+
+    #[test]
+    fn empty_dims_are_safe() {
+        let mut out: Vec<i32> = Vec::new();
+        gemm_u8_i32(&[], 0, &[], 0, &[], 0, 0, 3, &mut out);
+        let mut out2 = vec![1i32; 2];
+        // k == 0: output is just row_init
+        gemm_u8_i32(&[], 3, &[], 4, &[7, -7], 2, 0, 1, &mut out2);
+        assert_eq!(out2, vec![7, -7]);
+    }
+}

@@ -18,6 +18,7 @@
 
 pub mod fconv;
 pub mod flinear;
+pub mod gemm;
 pub mod pool;
 pub mod qconv;
 pub mod qlinear;
@@ -71,10 +72,26 @@ pub struct ConvGeom {
 
 impl ConvGeom {
     /// Output spatial size for an input of `(h, w)`.
+    ///
+    /// Degenerate geometry (a kernel larger than the padded input, or a
+    /// zero stride) is reported with a descriptive panic instead of the
+    /// silent usize underflow it used to produce.
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
-        let oh = (h + 2 * self.pad_h - self.kh) / self.stride + 1;
-        let ow = (w + 2 * self.pad_w - self.kw) / self.stride + 1;
-        (oh, ow)
+        assert!(self.stride > 0, "conv stride must be non-zero");
+        let (eh, ew) = (h + 2 * self.pad_h, w + 2 * self.pad_w);
+        assert!(
+            self.kh <= eh && self.kw <= ew,
+            "conv kernel {}x{} exceeds padded input {}x{} (input {}x{}, padding {}x{})",
+            self.kh,
+            self.kw,
+            eh,
+            ew,
+            h,
+            w,
+            self.pad_h,
+            self.pad_w
+        );
+        ((eh - self.kh) / self.stride + 1, (ew - self.kw) / self.stride + 1)
     }
 
     /// MACs of one forward pass over an `(h, w)` input.
@@ -115,6 +132,28 @@ mod tests {
         let g = ConvGeom { cin: 8, cout: 8, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: true };
         assert_eq!(g.weights(), 8 * 9);
         assert_eq!(g.fwd_macs(10, 10), (8 * 10 * 10 * 9) as u64);
+    }
+
+    /// Regression: `kh > h + 2·pad_h` used to underflow usize and panic
+    /// with an inscrutable overflow message (or wrap in release builds).
+    #[test]
+    #[should_panic(expected = "exceeds padded input")]
+    fn oversized_kernel_panics_descriptively() {
+        let g = ConvGeom { cin: 1, cout: 1, kh: 5, kw: 3, stride: 1, pad_h: 0, pad_w: 1, depthwise: false };
+        g.out_hw(2, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "stride must be non-zero")]
+    fn zero_stride_panics_descriptively() {
+        let g = ConvGeom { cin: 1, cout: 1, kh: 1, kw: 1, stride: 0, pad_h: 0, pad_w: 0, depthwise: false };
+        g.out_hw(4, 4);
+    }
+
+    #[test]
+    fn boundary_kernel_equal_to_padded_input_is_valid() {
+        let g = ConvGeom { cin: 1, cout: 1, kh: 4, kw: 4, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        assert_eq!(g.out_hw(2, 2), (1, 1));
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //! not computed and they contribute nothing to the backpropagated error —
 //! which is exactly the computational-tree pruning the paper describes.
 
-use crate::kernels::{ConvGeom, OpCounter};
+use crate::kernels::{gemm, ConvGeom, OpCounter};
+use crate::memplan::Scratch;
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
 use crate::tensor::{idx3, idx4, TensorF32};
 
@@ -116,6 +117,71 @@ pub fn qconv2d_fwd(
     ops.int_macs += geom.fwd_macs(h, wd);
     ops.int_ops += (geom.cout * oh * ow) as u64; // requantization
     ops.bytes += (x.len() + w.len() + geom.cout * oh * ow) as u64;
+    out
+}
+
+/// GEMM-routed forward of the folded QConv block: im2col packing plus the
+/// tiled integer GEMM core of [`crate::kernels::gemm`], **bit-exact** with
+/// [`qconv2d_fwd`] (i32 accumulation is order-independent; padded im2col
+/// entries hold the input zero point and contribute exactly zero, matching
+/// the scalar kernel's skip).
+///
+/// Non-depthwise geometry only — depthwise convolutions have no useful
+/// im2col lowering and stay on the scalar kernel. For pointwise
+/// (1×1/stride-1/no-pad) convs the packing step is skipped entirely: the
+/// input's `[Cin, H·W]` layout already *is* the column matrix.
+///
+/// `scratch` supplies the packing/accumulator buffers (one arena per model
+/// or per batch worker, see [`crate::memplan::Scratch`]); op accounting is
+/// identical to the scalar kernel so the device cost model is unaffected
+/// by the routing choice.
+pub fn qconv2d_fwd_gemm(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+
+    let n = oh * ow;
+    let kdim = geom.cin * geom.kh * geom.kw;
+    let zx = x.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale);
+
+    let pointwise = geom.kh == 1
+        && geom.kw == 1
+        && geom.stride == 1
+        && geom.pad_h == 0
+        && geom.pad_w == 0;
+
+    let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
+    {
+        let (col_buf, acc) =
+            scratch.qconv_bufs(if pointwise { 0 } else { kdim * n }, geom.cout * n);
+        let col: &[u8] = if pointwise {
+            x.values.data()
+        } else {
+            gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
+            col_buf
+        };
+        gemm::gemm_u8_i32(w.values.data(), zw, col, zx, bias, geom.cout, kdim, n, acc);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, relu);
+        }
+    }
+
+    ops.int_macs += geom.fwd_macs(h, wd);
+    ops.int_ops += (geom.cout * n) as u64; // requantization
+    ops.bytes += (x.len() + w.len() + geom.cout * n) as u64;
     out
 }
 
@@ -633,6 +699,91 @@ mod tests {
         let mut ops = OpCounter::new();
         relu_bwd_mask_q(&mut e, &y, &mut ops);
         assert_eq!(e.values.data(), &[100, 88, 100, 111]);
+    }
+
+    /// Property: the GEMM-routed forward is bit-exact with the scalar
+    /// reference across random geometries (kernel size, stride, padding,
+    /// channel counts, relu on/off), and its op accounting is identical.
+    #[test]
+    fn prop_gemm_fwd_bit_exact_with_scalar() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| {
+                let cin = 1 + r.below(5) as usize;
+                let cout = 1 + r.below(6) as usize;
+                let k = 1 + 2 * r.below(2) as usize; // 1 or 3
+                let stride = 1 + r.below(2) as usize;
+                let pad = r.below(2) as usize;
+                let h = k.max(2) + r.below(8) as usize;
+                (cin, cout, k, stride, pad, h, r.next_u64())
+            },
+            |&(cin, cout, k, stride, pad, h, s)| {
+                shrink_dim(h, k).into_iter().map(|h2| (cin, cout, k, stride, pad, h2, s)).collect()
+            },
+            |&(cin, cout, k, stride, pad, h, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let g = ConvGeom {
+                    cin,
+                    cout,
+                    kh: k,
+                    kw: k,
+                    stride,
+                    pad_h: pad,
+                    pad_w: pad,
+                    depthwise: false,
+                };
+                let (x, wt, b) = rand_setup(&mut rng, &g, h, h);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&wt);
+                let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+                let oqp = QParams::from_min_max(-2.0, 2.0);
+                let relu = seed % 2 == 0;
+                let mut ops_s = OpCounter::new();
+                let mut ops_g = OpCounter::new();
+                let ys = qconv2d_fwd(&xq, &wq, &bq, &g, oqp, relu, &mut ops_s);
+                let mut scratch = crate::memplan::Scratch::new();
+                let yg =
+                    qconv2d_fwd_gemm(&xq, &wq, &bq, &g, oqp, relu, &mut scratch, &mut ops_g);
+                if ys.values.data() != yg.values.data() {
+                    return Err("GEMM forward differs from scalar reference".into());
+                }
+                if ops_s.int_macs != ops_g.int_macs || ops_s.int_ops != ops_g.int_ops {
+                    return Err(format!(
+                        "op accounting differs: macs {} vs {}, ops {} vs {}",
+                        ops_s.int_macs, ops_g.int_macs, ops_s.int_ops, ops_g.int_ops
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The GEMM path must also be bit-exact on the pointwise shortcut (no
+    /// im2col copy) and reuse a shared scratch across different layers.
+    #[test]
+    fn gemm_fwd_pointwise_and_scratch_reuse() {
+        let mut rng = Pcg32::seeded(9);
+        let mut scratch = crate::memplan::Scratch::new();
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        for &(cin, cout, k, h) in &[(8usize, 16usize, 1usize, 6usize), (4, 8, 3, 7), (8, 4, 1, 5)] {
+            let g = ConvGeom {
+                cin,
+                cout,
+                kh: k,
+                kw: k,
+                stride: 1,
+                pad_h: k / 2,
+                pad_w: k / 2,
+                depthwise: false,
+            };
+            let (x, wt, b) = rand_setup(&mut rng, &g, h, h);
+            let xq = QTensor::quantize(&x);
+            let wq = QTensor::quantize(&wt);
+            let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+            let mut ops = OpCounter::new();
+            let ys = qconv2d_fwd(&xq, &wq, &bq, &g, oqp, true, &mut ops);
+            let yg = qconv2d_fwd_gemm(&xq, &wq, &bq, &g, oqp, true, &mut scratch, &mut ops);
+            assert_eq!(ys.values.data(), yg.values.data(), "{cin}x{h}x{h} k{k}");
+        }
     }
 
     /// Property: forward output always within the uint8 range and exactly at

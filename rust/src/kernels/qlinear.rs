@@ -9,7 +9,7 @@
 //! The sparse-update "structures" of a linear layer are its output rows
 //! (paper §III-B: rows/columns); `keep` masks whole rows.
 
-use crate::kernels::OpCounter;
+use crate::kernels::{gemm, OpCounter};
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
 use crate::tensor::TensorF32;
 
@@ -33,15 +33,15 @@ pub fn qlinear_fwd(
     let xd = x.values.data();
     let wd = w.values.data();
 
+    // Routed through the shared integer GEMM core with N = 1: the
+    // per-sample matvec is a degenerate GEMM (weights are the `[Out, In]`
+    // A-matrix, the input vector a single column). Bit-exact with the
+    // previous hand-rolled loop — i32 sums are order-independent.
+    let mut acc = vec![0i32; n_out];
+    gemm::gemm_u8_i32(wd, zw, xd, zx, bias, n_out, n_in, 1, &mut acc);
     let mut out = QTensor::zeros(&[n_out], out_qp);
-    let od = out.values.data_mut();
-    for o in 0..n_out {
-        let row = &wd[o * n_in..(o + 1) * n_in];
-        let mut acc: i32 = bias[o];
-        for (xv, wv) in xd.iter().zip(row.iter()) {
-            acc += (*xv as i32 - zx) * (*wv as i32 - zw);
-        }
-        od[o] = requantize(acc, mult, out_qp.zero_point, relu);
+    for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+        *o = requantize(a, mult, out_qp.zero_point, relu);
     }
 
     ops.int_macs += (n_out * n_in) as u64;

@@ -14,7 +14,32 @@
 //!    and executes them from Rust; Python is never on the training path.
 //!
 //! See DESIGN.md for the system inventory and the experiment index, and
-//! EXPERIMENTS.md for reproduced numbers.
+//! EXPERIMENTS.md for reproduced numbers (both at the repository root).
+//!
+//! ## Execution engines
+//!
+//! Two native execution paths share one numerics contract:
+//!
+//!  * the **scalar kernels** (`kernels::{qconv, fconv, qlinear, …}`) are
+//!    the MCU-faithful reference — the Rust port of what the paper's C
+//!    framework executes on a Cortex-M;
+//!  * the **batched im2col/GEMM engine** (`kernels::gemm`, backed by the
+//!    [`memplan::Scratch`] arena) lowers non-depthwise convolutions to a
+//!    tiled integer GEMM and shards minibatch samples across threads via
+//!    [`graph::exec::NativeModel::train_batch`] /
+//!    [`train::loop_::train_batched`] (`TT_WORKERS` knob). Integer
+//!    accumulation is exact, per-sample work runs against a frozen model
+//!    snapshot, and all state updates are merged in sample order — so the
+//!    engine is **bit-exact** with the scalar reference and produces
+//!    **bit-identical weights for every worker count** (property-tested).
+//!
+//! ## Cargo features
+//!
+//!  * `pjrt` (off by default) — compiles the PJRT runtime
+//!    (`runtime::Runtime`, `runtime::xla_trainer`) and the XLA
+//!    cross-validation suite. Requires the `xla` crate (uncomment it in
+//!    `Cargo.toml`); the default build is fully offline and
+//!    dependency-free.
 
 pub mod coordinator;
 pub mod data;

@@ -68,34 +68,47 @@ fn cmd_train(args: &Args) -> i32 {
     knobs.epochs = args.usize_or("epochs", knobs.epochs);
 
     if args.get_or("backend", "native") == "xla" {
-        // AOT HLO path (mnist-family shapes only — see python/compile)
-        let dir = tinytrain::runtime::artifacts_dir();
-        let mut t = match tinytrain::runtime::xla_trainer::load_fqt_trainer(
-            &dir,
-            (-2.0, 4.0),
-            harness::LR,
-            harness::BATCH,
-            seed,
-        ) {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("{e:#}");
-                return 1;
+        // AOT HLO path (mnist-family shapes only — see python/compile).
+        // Compiled only under the `pjrt` feature; the default offline build
+        // reports how to enable it instead.
+        #[cfg(feature = "pjrt")]
+        {
+            let dir = tinytrain::runtime::artifacts_dir();
+            let mut t = match tinytrain::runtime::xla_trainer::load_fqt_trainer(
+                &dir,
+                (-2.0, 4.0),
+                harness::LR,
+                harness::BATCH,
+                seed,
+            ) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    return 1;
+                }
+            };
+            let dom = Domain::new(&spec, [1, 28, 28], seed);
+            let mut rng = tinytrain::util::prng::Pcg32::seeded(seed);
+            let (tr, te) = dom.splits(knobs.train_pc * 2, knobs.test_pc * 2, &mut rng);
+            for ep in 0..knobs.epochs {
+                let mut tot = 0.0;
+                for (x, &y) in tr.xs.iter().zip(&tr.ys) {
+                    tot += t.train_step(x, y).unwrap().0;
+                }
+                t.finish();
+                let acc = t.evaluate(&te.xs, &te.ys).unwrap();
+                println!("epoch {ep}: loss={:.4} test_acc={acc:.3}", tot / tr.len() as f32);
             }
-        };
-        let dom = Domain::new(&spec, [1, 28, 28], seed);
-        let mut rng = tinytrain::util::prng::Pcg32::seeded(seed);
-        let (tr, te) = dom.splits(knobs.train_pc * 2, knobs.test_pc * 2, &mut rng);
-        for ep in 0..knobs.epochs {
-            let mut tot = 0.0;
-            for (x, &y) in tr.xs.iter().zip(&tr.ys) {
-                tot += t.train_step(x, y).unwrap().0;
-            }
-            t.finish();
-            let acc = t.evaluate(&te.xs, &te.ys).unwrap();
-            println!("epoch {ep}: loss={:.4} test_acc={acc:.3}", tot / tr.len() as f32);
+            return 0;
         }
-        return 0;
+        #[cfg(not(feature = "pjrt"))]
+        {
+            eprintln!(
+                "the xla backend requires the `pjrt` feature: enable the xla \
+                 dependency in rust/Cargo.toml and rebuild with --features pjrt"
+            );
+            return 1;
+        }
     }
 
     let (rep, _) = harness::run_full_training(&spec, cfg, &knobs, seed);

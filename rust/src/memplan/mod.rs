@@ -18,8 +18,92 @@
 //! greedy best-fit arena allocation (size-descending first fit — the
 //! standard offline dynamic-storage-allocation heuristic used by MCU
 //! inference libraries [2], [3]).
+//!
+//! It also provides the [`Scratch`] arena backing the im2col/GEMM execution
+//! engine (`kernels::gemm`): one growable set of packing/accumulator
+//! buffers, sized once per model and reused across every conv call of a
+//! forward pass instead of being reallocated per layer.
 
 use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
+
+/// Reusable scratch buffers for the im2col/GEMM conv path.
+///
+/// Holds the packed im2col matrix (u8 for the quantized path, f32 for the
+/// float path) and the i32 accumulator tile. Buffers only ever grow, so a
+/// scratch sized with [`Scratch::for_model`] performs no allocation on the
+/// hot path; [`Scratch::new`] starts empty and grows on first use. The
+/// arena is plain owned data — each batch worker thread carries its own.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    col_u8: Vec<u8>,
+    col_f32: Vec<f32>,
+    acc_i32: Vec<i32>,
+}
+
+impl Scratch {
+    /// Empty arena; buffers grow on demand.
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Arena pre-sized for the largest non-depthwise conv of `def` (the
+    /// only layers the GEMM path serves), so a full forward pass allocates
+    /// exactly once, at model-deployment time.
+    pub fn for_model(def: &ModelDef) -> Scratch {
+        let mut s = Scratch::new();
+        let shapes = def.shapes();
+        for (i, l) in def.layers.iter().enumerate() {
+            if let LayerKind::Conv { geom, .. } = &l.kind {
+                if geom.depthwise {
+                    continue;
+                }
+                let n = shapes[i][1] * shapes[i][2]; // Oh·Ow
+                let kdim = geom.cin * geom.kh * geom.kw;
+                s.reserve(kdim * n, geom.cout * n);
+            }
+        }
+        s
+    }
+
+    // The f32 column buffer is deliberately *not* pre-reserved: the uint8
+    // configuration (the paper's main path) never touches it, and a
+    // float32/mixed model grows it exactly once on its first forward.
+    fn reserve(&mut self, col: usize, acc: usize) {
+        if self.col_u8.len() < col {
+            self.col_u8.resize(col, 0);
+        }
+        if self.acc_i32.len() < acc {
+            self.acc_i32.resize(acc, 0);
+        }
+    }
+
+    /// Borrow the u8 im2col buffer and the i32 accumulator tile for one
+    /// quantized conv call, growing them if needed. Contents are
+    /// unspecified — callers fully overwrite both.
+    pub fn qconv_bufs(&mut self, col_len: usize, acc_len: usize) -> (&mut [u8], &mut [i32]) {
+        if self.col_u8.len() < col_len {
+            self.col_u8.resize(col_len, 0);
+        }
+        if self.acc_i32.len() < acc_len {
+            self.acc_i32.resize(acc_len, 0);
+        }
+        (&mut self.col_u8[..col_len], &mut self.acc_i32[..acc_len])
+    }
+
+    /// Borrow the f32 im2col buffer for one float conv call.
+    pub fn fconv_col(&mut self, len: usize) -> &mut [f32] {
+        if self.col_f32.len() < len {
+            self.col_f32.resize(len, 0.0);
+        }
+        &mut self.col_f32[..len]
+    }
+
+    /// Currently reserved bytes across all buffers (diagnostics / memory
+    /// accounting).
+    pub fn reserved_bytes(&self) -> usize {
+        self.col_u8.len() + self.col_f32.len() * 4 + self.acc_i32.len() * 4
+    }
+}
 
 /// Fixed Flash overhead of the runtime image (scheduler, kernels, CLI).
 pub const RUNTIME_FLASH_BYTES: usize = 48 * 1024;
@@ -320,6 +404,33 @@ mod tests {
                 rep.flash
             );
         }
+    }
+
+    #[test]
+    fn scratch_for_model_presizes_largest_conv() {
+        let m = models::mnist_cnn(&[1, 12, 12], 4);
+        let s = Scratch::for_model(&m);
+        assert!(s.reserved_bytes() > 0);
+        // serving a smaller conv must not grow beyond the presize
+        let mut s2 = s.clone();
+        let before = s2.reserved_bytes();
+        let (col, acc) = s2.qconv_bufs(9, 16);
+        assert_eq!(col.len(), 9);
+        assert_eq!(acc.len(), 16);
+        assert_eq!(s2.reserved_bytes(), before);
+    }
+
+    #[test]
+    fn scratch_grows_on_demand() {
+        let mut s = Scratch::new();
+        assert_eq!(s.reserved_bytes(), 0);
+        {
+            let (col, acc) = s.qconv_bufs(100, 50);
+            assert_eq!((col.len(), acc.len()), (100, 50));
+        }
+        let f = s.fconv_col(70);
+        assert_eq!(f.len(), 70);
+        assert!(s.reserved_bytes() >= 100 + 50 * 4 + 70 * 4);
     }
 
     #[test]

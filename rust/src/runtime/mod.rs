@@ -7,19 +7,23 @@
 //! input/output tuple (names/dtypes/shapes) which [`Artifact`] validates
 //! against at load time, so a drifted artifact fails loudly instead of
 //! feeding garbage.
+//!
+//! # The `pjrt` feature
+//!
+//! Everything that touches the `xla` crate is compiled only under the
+//! off-by-default `pjrt` cargo feature, so the default build needs neither
+//! network access nor the PJRT plugin. The manifest parsing and the
+//! artifact-directory plumbing stay available unconditionally (they are
+//! plain std + `util::json`). To build the PJRT path, uncomment the `xla`
+//! dependency in `Cargo.toml` and pass `--features pjrt`.
 
+#[cfg(feature = "pjrt")]
 pub mod xla_trainer;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-
-/// Lazily constructed PJRT CPU client (compilation is cached per artifact).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
 
 /// Tensor spec from the manifest.
 #[derive(Clone, Debug, PartialEq)]
@@ -74,96 +78,122 @@ impl Manifest {
     }
 }
 
-/// A loaded, compiled artifact.
-pub struct Artifact {
-    pub manifest: Manifest,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load `<dir>/<name>.hlo.txt` + `<dir>/<name>.json` and compile.
-    pub fn load_artifact(&self, dir: &Path, name: &str) -> Result<Artifact> {
-        let hlo: PathBuf = dir.join(format!("{name}.hlo.txt"));
-        let man: PathBuf = dir.join(format!("{name}.json"));
-        if !hlo.exists() {
-            bail!(
-                "artifact {} not found — run `make artifacts` first",
-                hlo.display()
-            );
-        }
-        let manifest = Manifest::load(&man)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo.to_str().context("non-utf8 path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Artifact { manifest, exe })
-    }
-}
-
-impl Artifact {
-    /// Execute with positional inputs; returns the decomposed output tuple.
-    /// Input count and element counts are validated against the manifest.
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.manifest.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.manifest.name,
-                self.manifest.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (lit, spec)) in inputs.iter().zip(&self.manifest.inputs).enumerate() {
-            if lit.element_count() != spec.elements() {
-                bail!(
-                    "{}: input {i} has {} elements, manifest says {:?}",
-                    self.manifest.name,
-                    lit.element_count(),
-                    spec.shape
-                );
-            }
-        }
-        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        if outs.len() != self.manifest.outputs.len() {
-            bail!(
-                "{}: got {} outputs, manifest says {}",
-                self.manifest.name,
-                outs.len(),
-                self.manifest.outputs.len()
-            );
-        }
-        Ok(outs)
-    }
-}
-
-/// Build a u8 literal with the given logical shape. (`u8` has no
-/// `NativeType` impl in the xla crate, so the untyped-bytes path is used.)
-pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<xla::Literal> {
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::U8,
-        shape,
-        data,
-    )?)
-}
-
-/// Build an f32 literal with the given logical shape.
-pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
-}
-
 /// Default artifact directory (next to the workspace root).
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("TT_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{lit_f32, lit_u8, Artifact, Runtime};
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::{Path, PathBuf};
+
+    use super::Manifest;
+    use crate::bail;
+    use crate::util::error::{Context, Error, Result};
+
+    impl From<xla::Error> for Error {
+        fn from(e: xla::Error) -> Error {
+            Error::msg(e)
+        }
+    }
+
+    /// Lazily constructed PJRT CPU client (compilation is cached per
+    /// artifact).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    /// A loaded, compiled artifact.
+    pub struct Artifact {
+        pub manifest: Manifest,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime { client: xla::PjRtClient::cpu()? })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load `<dir>/<name>.hlo.txt` + `<dir>/<name>.json` and compile.
+        pub fn load_artifact(&self, dir: &Path, name: &str) -> Result<Artifact> {
+            let hlo: PathBuf = dir.join(format!("{name}.hlo.txt"));
+            let man: PathBuf = dir.join(format!("{name}.json"));
+            if !hlo.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first",
+                    hlo.display()
+                );
+            }
+            let manifest = Manifest::load(&man)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(Artifact { manifest, exe })
+        }
+    }
+
+    impl Artifact {
+        /// Execute with positional inputs; returns the decomposed output
+        /// tuple. Input count and element counts are validated against the
+        /// manifest.
+        pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            if inputs.len() != self.manifest.inputs.len() {
+                bail!(
+                    "{}: expected {} inputs, got {}",
+                    self.manifest.name,
+                    self.manifest.inputs.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (lit, spec)) in inputs.iter().zip(&self.manifest.inputs).enumerate() {
+                if lit.element_count() != spec.elements() {
+                    bail!(
+                        "{}: input {i} has {} elements, manifest says {:?}",
+                        self.manifest.name,
+                        lit.element_count(),
+                        spec.shape
+                    );
+                }
+            }
+            let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            if outs.len() != self.manifest.outputs.len() {
+                bail!(
+                    "{}: got {} outputs, manifest says {}",
+                    self.manifest.name,
+                    outs.len(),
+                    self.manifest.outputs.len()
+                );
+            }
+            Ok(outs)
+        }
+    }
+
+    /// Build a u8 literal with the given logical shape. (`u8` has no
+    /// `NativeType` impl in the xla crate, so the untyped-bytes path is
+    /// used.)
+    pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<xla::Literal> {
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            shape,
+            data,
+        )?)
+    }
+
+    /// Build an f32 literal with the given logical shape.
+    pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@
 //! The input/output tuple layout matches `python/compile/model.py`
 //! (`fqt_train_step` / `QP_LEN`); the manifest validates it at load time.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::quant::observer::MinMaxObserver;
 use crate::quant::QParams;
@@ -129,7 +129,7 @@ impl XlaFqtTrainer {
     /// activation ranges start wide and adapt online from the saturation
     /// telemetry the artifact returns).
     pub fn new(art: Artifact, input_range: (f32, f32), lr: f32, batch: usize, seed: u64) -> Result<Self> {
-        anyhow::ensure!(
+        crate::ensure!(
             art.manifest.inputs.len() == 11 && art.manifest.outputs.len() == 12,
             "unexpected artifact interface for {}",
             art.manifest.name

@@ -314,7 +314,10 @@ mod tests {
         let head = m.def.layers.len() - 1;
         let qp_before = match &m.params[head] {
             LayerParams::Q { w, .. } => w.qp,
-            _ => panic!(),
+            other => panic!(
+                "head layer of the uint8 config must hold quantized params, found {}",
+                other.flavor()
+            ),
         };
         let mut opt = FqtSgd::new(&m, 0.05, 4);
         let mut ops = OpCounter::new();
@@ -326,7 +329,10 @@ mod tests {
         }
         let qp_after = match &m.params[head] {
             LayerParams::Q { w, .. } => w.qp,
-            _ => panic!(),
+            other => panic!(
+                "head layer of the uint8 config must hold quantized params, found {}",
+                other.flavor()
+            ),
         };
         assert_ne!(qp_before, qp_after, "Eqs. 6-7 should move the weight range");
     }

@@ -5,6 +5,7 @@
 
 use crate::graph::exec::{DenseUpdates, NativeModel};
 use crate::kernels::{softmax, OpCounter};
+use crate::memplan::Scratch;
 use crate::tensor::TensorF32;
 use crate::train::sparse::DynamicSparse;
 use crate::train::Optimizer;
@@ -77,6 +78,9 @@ pub fn train(
     let mut bwd_ops = OpCounter::new();
     let mut epoch_stats = Vec::with_capacity(epochs);
     let mut samples_seen = 0u64;
+    // One scratch arena for the whole run: the im2col/GEMM buffers are
+    // sized for the largest conv once and reused by every forward pass.
+    let mut scratch = Scratch::for_model(&model.def);
 
     for _ in 0..epochs {
         let order = rng.permutation(train_split.len());
@@ -85,7 +89,7 @@ pub fn train(
         for &i in &order {
             let x = &train_split.xs[i];
             let y = train_split.ys[i];
-            let trace = model.forward_adapt(x, &mut fwd_ops);
+            let trace = model.forward_adapt_in(x, &mut scratch, &mut fwd_ops);
             let (loss, probs, err) = softmax::softmax_ce(&trace.logits, y, &mut bwd_ops);
             loss_sum += loss;
             if softmax::predict(&probs) == y {
@@ -114,6 +118,64 @@ pub fn train(
         Sparsity::Dynamic(ctl) => ctl.kept_fraction(),
     };
     TrainReport { epochs: epoch_stats, fwd_ops, bwd_ops, samples_seen, kept_fraction }
+}
+
+/// Batched/threaded variant of [`train`]: each shuffled epoch is processed
+/// in `batch`-sized slices through [`NativeModel::train_batch`], with
+/// samples sharded across `workers` `std::thread` workers.
+///
+/// Within a slice every sample sees the same model snapshot and the
+/// activation-range / error-observer updates are folded in afterwards in
+/// sample order, so the resulting weights are **bit-identical for every
+/// worker count** (the determinism contract of the batch engine; see
+/// `NativeModel::train_batch`). The dynamic sparse controller is
+/// inherently per-sample-sequential, so this path always runs dense
+/// updates — sparse experiments stay on [`train`].
+#[allow(clippy::too_many_arguments)]
+pub fn train_batched(
+    model: &mut NativeModel,
+    opt: &mut dyn Optimizer,
+    train_split: &Split,
+    test_split: &Split,
+    epochs: usize,
+    batch: usize,
+    workers: usize,
+    rng: &mut Pcg32,
+) -> TrainReport {
+    let mut fwd_ops = OpCounter::new();
+    let mut bwd_ops = OpCounter::new();
+    let mut epoch_stats = Vec::with_capacity(epochs);
+    let mut samples_seen = 0u64;
+    let batch = batch.max(1);
+
+    for _ in 0..epochs {
+        let order = rng.permutation(train_split.len());
+        let mut loss_sum = 0.0;
+        let mut correct = 0usize;
+        for chunk in order.chunks(batch) {
+            let xs: Vec<&TensorF32> = chunk.iter().map(|&i| &train_split.xs[i]).collect();
+            let ys: Vec<usize> = chunk.iter().map(|&i| train_split.ys[i]).collect();
+            let res = model.train_batch(&xs, &ys, workers);
+            fwd_ops.add(&res.fwd_ops);
+            bwd_ops.add(&res.bwd_ops);
+            for (k, bwd) in res.grads.iter().enumerate() {
+                loss_sum += res.losses[k];
+                if res.preds[k] == ys[k] {
+                    correct += 1;
+                }
+                opt.accumulate(model, bwd, &mut bwd_ops);
+                samples_seen += 1;
+            }
+        }
+        opt.finish(model, &mut bwd_ops);
+        epoch_stats.push(EpochStats {
+            train_loss: loss_sum / train_split.len().max(1) as f32,
+            train_acc: correct as f32 / train_split.len().max(1) as f32,
+            test_acc: model.evaluate(&test_split.xs, &test_split.ys),
+        });
+    }
+
+    TrainReport { epochs: epoch_stats, fwd_ops, bwd_ops, samples_seen, kept_fraction: 1.0 }
 }
 
 /// Measure per-sample fwd/bwd op counts of the *current* model state,
@@ -197,6 +259,47 @@ mod tests {
         assert_eq!(rep.samples_seen, 12 * 16);
         assert!(rep.fwd_ops.total_macs() > 0 && rep.bwd_ops.total_macs() > 0);
         assert_eq!(rep.kept_fraction, 1.0);
+    }
+
+    /// Batched training must reach the same accuracy bar as the sequential
+    /// loop on the toy problem, with correct bookkeeping.
+    #[test]
+    fn batched_loop_learns_and_reports() {
+        let (mut m, tr, te) = toy();
+        let mut opt = FqtSgd::new(&m, 0.01, 4);
+        let mut rng = Pcg32::seeded(1);
+        let rep = train_batched(&mut m, &mut opt, &tr, &te, 12, 4, 2, &mut rng);
+        assert_eq!(rep.epochs.len(), 12);
+        assert!(rep.final_test_acc() >= 0.7, "acc={}", rep.final_test_acc());
+        assert_eq!(rep.samples_seen, 12 * 16);
+        assert!(rep.fwd_ops.total_macs() > 0 && rep.bwd_ops.total_macs() > 0);
+        assert_eq!(rep.kept_fraction, 1.0);
+    }
+
+    /// The headline determinism contract: a full batched training run must
+    /// produce bit-identical weights for every worker count.
+    #[test]
+    fn batched_training_weights_invariant_to_worker_count() {
+        use crate::graph::exec::LayerParams;
+        let run = |workers: usize| -> (Vec<u8>, Vec<u32>) {
+            let (mut m, tr, te) = toy();
+            let mut opt = FqtSgd::new(&m, 0.01, 4);
+            let mut rng = Pcg32::seeded(7);
+            let _ = train_batched(&mut m, &mut opt, &tr, &te, 3, 4, workers, &mut rng);
+            let mut wbits = Vec::new();
+            let mut bbits = Vec::new();
+            for p in &m.params {
+                if let LayerParams::Q { w, bias } = p {
+                    wbits.extend_from_slice(w.values.data());
+                    bbits.extend(bias.iter().map(|b| b.to_bits()));
+                }
+            }
+            (wbits, bbits)
+        };
+        let (w1, b1) = run(1);
+        let (w3, b3) = run(3);
+        assert_eq!(w1, w3, "quantized weights diverged across worker counts");
+        assert_eq!(b1, b3, "float biases diverged across worker counts");
     }
 
     #[test]

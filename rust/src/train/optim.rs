@@ -269,13 +269,19 @@ mod tests {
         let head = m.def.layers.len() - 1;
         let qp0 = match &m.params[head] {
             LayerParams::Q { w, .. } => w.qp,
-            _ => panic!(),
+            other => panic!(
+                "head layer of the uint8 config must hold quantized params, found {}",
+                other.flavor()
+            ),
         };
         let mut opt = NaiveQSgdM::new(&m, 0.05, 4);
         train(&mut m, &mut opt, &xs, &ys, 5);
         let qp1 = match &m.params[head] {
             LayerParams::Q { w, .. } => w.qp,
-            _ => panic!(),
+            other => panic!(
+                "head layer of the uint8 config must hold quantized params, found {}",
+                other.flavor()
+            ),
         };
         assert_eq!(qp0, qp1, "baselines must not adapt quantization params");
     }

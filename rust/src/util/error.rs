@@ -1,0 +1,157 @@
+//! Minimal error plumbing for fallible subsystems (the PJRT runtime, the
+//! artifact manifests). The offline vendor set ships neither `anyhow` nor
+//! `thiserror`, so this module carries the tiny subset we use: a string-y
+//! error type with a context chain, a [`Context`] extension trait for
+//! `Result`/`Option`, and the [`crate::bail!`]/[`crate::ensure!`] macros.
+
+use std::fmt;
+
+/// A boxed-string error with an outermost-first context chain, printed as
+/// `context: deeper context: root cause` (what `anyhow`'s `{:#}` shows).
+pub struct Error {
+    msg: String,
+    /// Contexts, innermost first (pushed as the error propagates outward).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string(), chain: Vec::new() }
+    }
+
+    /// Attach one more layer of context.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.push(c.to_string());
+        self
+    }
+
+    /// The root-cause message, without contexts.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.chain.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Early-return with a formatted [`Error`] unless the condition holds
+/// (mirrors `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(Error::msg("root cause"))
+    }
+
+    #[test]
+    fn context_chain_prints_outermost_first() {
+        let e = fails().context("loading artifact").unwrap_err().context("running bench");
+        assert_eq!(e.to_string(), "running bench: loading artifact: root cause");
+        assert_eq!(e.root_cause(), "root cause");
+    }
+
+    #[test]
+    fn option_context_converts_none() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, String> = Ok(1);
+        let v = ok.with_context(|| unreachable!("must not evaluate on Ok"));
+        assert_eq!(v.unwrap(), 1);
+    }
+
+    #[test]
+    fn bail_and_ensure_macros() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too large: {x}");
+            if x == 0 {
+                crate::bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is not allowed");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too large: 11");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod argparse;
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod proptest;
