@@ -37,7 +37,8 @@ fn run(standardize: bool, adapt_range: bool, knobs: &Knobs, seed: u64) -> (f32, 
     let mut opt = FqtSgd::new(&m, lr, harness::BATCH);
     opt.standardize = standardize;
     opt.adapt_range = adapt_range;
-    let rep = loop_::train(&mut m, &mut opt, &tr, &te, knobs.epochs, &mut Sparsity::Dense, &mut rng);
+    let rep =
+        loop_::train(&mut m, &mut opt, &tr, &te, knobs.epochs, &mut Sparsity::Dense, &mut rng);
     (rep.final_test_acc(), rep.epochs.last().unwrap().train_loss)
 }
 

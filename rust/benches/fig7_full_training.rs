@@ -49,7 +49,8 @@ fn main() {
         &["device", "config", "fwd", "bwd", "bwd/fwd", "energy", "fits"],
     );
     for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
-        let (_, mut model) = harness::run_full_training(&spec, cfg, &Knobs { epochs: 1, ..knobs }, 7);
+        let (_, mut model) =
+            harness::run_full_training(&spec, cfg, &Knobs { epochs: 1, ..knobs }, 7);
         let mut rng = tinytrain::util::prng::Pcg32::seeded(9);
         let dom = tinytrain::data::Domain::new(&spec, spec.reduced_shape, 9);
         let (split, _): (Split, Split) = dom.splits(2, 0, &mut rng);

@@ -41,7 +41,12 @@ fn mcunet_scenario(
     harness::TlScenario { model, train, test }
 }
 
-fn run_with(scen: &mut harness::TlScenario, opt: &mut dyn Optimizer, knobs: &Knobs, seed: u64) -> f32 {
+fn run_with(
+    scen: &mut harness::TlScenario,
+    opt: &mut dyn Optimizer,
+    knobs: &Knobs,
+    seed: u64,
+) -> f32 {
     let mut rng = Pcg32::new(seed, 0xAB);
     let rep = loop_::train(
         &mut scen.model,
@@ -60,7 +65,19 @@ fn main() {
     println!("Tab. IV + Fig. 9 reproduction — knobs: {knobs:?} (paper: 50 epochs, lr 1e-3, b 48)");
     let mut tab = Table::new(
         "Tab. IV — optimizer comparison, MCUNet-5FPS stand-in (last two blocks)",
-        &["optimizer", "precision", "cars", "cf10", "cf100", "cub", "flowers", "food", "pets", "vww", "avg"],
+        &[
+            "optimizer",
+            "precision",
+            "cars",
+            "cf10",
+            "cf100",
+            "cub",
+            "flowers",
+            "food",
+            "pets",
+            "vww",
+            "avg",
+        ],
     );
     let mut sink = ResultSink::new("fig9_tab4_mcunet");
 

@@ -33,7 +33,16 @@ fn main() {
     let mut sink = ResultSink::new("perf_kernels");
 
     // conv fwd: the mbednet stem-like layer (dominates TL forward cost)
-    let g = ConvGeom { cin: 16, cout: 32, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+    let g = ConvGeom {
+        cin: 16,
+        cout: 32,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad_h: 1,
+        pad_w: 1,
+        depthwise: false,
+    };
     let x = rand_q(&mut rng, &[16, 32, 32]);
     let w = rand_q(&mut rng, &[32, 16, 3, 3]);
     let bias = vec![0i32; 32];
@@ -43,7 +52,12 @@ fn main() {
         let mut ops = OpCounter::new();
         std::hint::black_box(qconv::qconv2d_fwd(&x, &w, &bias, &g, oqp, true, &mut ops));
     });
-    tab.row(&["qconv2d_fwd scalar".into(), "16x32x32 -> 32, k3".into(), fmt_duration(t), format!("{:.2}", macs / t / 1e9)]);
+    tab.row(&[
+        "qconv2d_fwd scalar".into(),
+        "16x32x32 -> 32, k3".into(),
+        fmt_duration(t),
+        format!("{:.2}", macs / t / 1e9),
+    ]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("qconv2d_fwd")),
         ("seconds", Json::Num(t)),
@@ -55,10 +69,22 @@ fn main() {
     let (tg, _) = time_it(2, reps, || {
         let mut ops = OpCounter::new();
         std::hint::black_box(qconv::qconv2d_fwd_gemm(
-            &x, &w, &bias, &g, oqp, true, &mut scratch, &mut ops,
+            &x,
+            &w,
+            &bias,
+            &g,
+            oqp,
+            true,
+            &mut scratch,
+            &mut ops,
         ));
     });
-    tab.row(&["qconv2d_fwd gemm".into(), "16x32x32 -> 32, k3".into(), fmt_duration(tg), format!("{:.2}", macs / tg / 1e9)]);
+    tab.row(&[
+        "qconv2d_fwd gemm".into(),
+        "16x32x32 -> 32, k3".into(),
+        fmt_duration(tg),
+        format!("{:.2}", macs / tg / 1e9),
+    ]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("qconv2d_fwd_gemm")),
         ("seconds", Json::Num(tg)),
@@ -79,12 +105,19 @@ fn main() {
         let mut ops = OpCounter::new();
         for xb in &xs {
             std::hint::black_box(qconv::qconv2d_fwd_gemm(
-                xb, &w, &bias, &g, oqp, true, &mut scratch, &mut ops,
+                xb,
+                &w,
+                &bias,
+                &g,
+                oqp,
+                true,
+                &mut scratch,
+                &mut ops,
             ));
         }
     });
     let (tb_mt, _) = time_it(1, reps, || {
-        let chunk = (xs.len() + workers - 1) / workers;
+        let chunk = xs.len().div_ceil(workers);
         std::thread::scope(|s| {
             for shard in xs.chunks(chunk) {
                 let (w, bias, g) = (&w, &bias, &g);
@@ -93,16 +126,38 @@ fn main() {
                     let mut ops = OpCounter::new();
                     for xb in shard {
                         std::hint::black_box(qconv::qconv2d_fwd_gemm(
-                            xb, w, bias, g, oqp, true, &mut scratch, &mut ops,
+                            xb,
+                            w,
+                            bias,
+                            g,
+                            oqp,
+                            true,
+                            &mut scratch,
+                            &mut ops,
                         ));
                     }
                 });
             }
         });
     });
-    tab.row(&[format!("qconv fwd batch={batch} scalar"), "16x32x32 -> 32, k3".into(), fmt_duration(tb_scalar), format!("{:.2}", bmacs / tb_scalar / 1e9)]);
-    tab.row(&[format!("qconv fwd batch={batch} gemm"), "16x32x32 -> 32, k3".into(), fmt_duration(tb_gemm), format!("{:.2}", bmacs / tb_gemm / 1e9)]);
-    tab.row(&[format!("qconv fwd batch={batch} gemm x{workers} thr"), "16x32x32 -> 32, k3".into(), fmt_duration(tb_mt), format!("{:.2}", bmacs / tb_mt / 1e9)]);
+    tab.row(&[
+        format!("qconv fwd batch={batch} scalar"),
+        "16x32x32 -> 32, k3".into(),
+        fmt_duration(tb_scalar),
+        format!("{:.2}", bmacs / tb_scalar / 1e9),
+    ]);
+    tab.row(&[
+        format!("qconv fwd batch={batch} gemm"),
+        "16x32x32 -> 32, k3".into(),
+        fmt_duration(tb_gemm),
+        format!("{:.2}", bmacs / tb_gemm / 1e9),
+    ]);
+    tab.row(&[
+        format!("qconv fwd batch={batch} gemm x{workers} thr"),
+        "16x32x32 -> 32, k3".into(),
+        fmt_duration(tb_mt),
+        format!("{:.2}", bmacs / tb_mt / 1e9),
+    ]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("qconv2d_fwd_batched")),
         ("batch", Json::Num(batch as f64)),
@@ -131,10 +186,28 @@ fn main() {
     });
     let (tf_gemm, _) = time_it(2, reps, || {
         let mut ops = OpCounter::new();
-        std::hint::black_box(fconv::fconv2d_fwd_gemm(&xf, &wf, &bf, &g, true, &mut scratch, &mut ops));
+        std::hint::black_box(fconv::fconv2d_fwd_gemm(
+            &xf,
+            &wf,
+            &bf,
+            &g,
+            true,
+            &mut scratch,
+            &mut ops,
+        ));
     });
-    tab.row(&["fconv2d_fwd scalar".into(), "16x32x32 -> 32, k3".into(), fmt_duration(tf_scalar), format!("{:.2}", macs / tf_scalar / 1e9)]);
-    tab.row(&["fconv2d_fwd gemm".into(), "16x32x32 -> 32, k3".into(), fmt_duration(tf_gemm), format!("{:.2}", macs / tf_gemm / 1e9)]);
+    tab.row(&[
+        "fconv2d_fwd scalar".into(),
+        "16x32x32 -> 32, k3".into(),
+        fmt_duration(tf_scalar),
+        format!("{:.2}", macs / tf_scalar / 1e9),
+    ]);
+    tab.row(&[
+        "fconv2d_fwd gemm".into(),
+        "16x32x32 -> 32, k3".into(),
+        fmt_duration(tf_gemm),
+        format!("{:.2}", macs / tf_gemm / 1e9),
+    ]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("fconv2d_fwd_gemm")),
         ("seconds", Json::Num(tf_gemm)),
@@ -142,7 +215,16 @@ fn main() {
     ]));
 
     // pointwise conv (1x1) — the mbednet/mcunet majority op
-    let gp = ConvGeom { cin: 64, cout: 128, kh: 1, kw: 1, stride: 1, pad_h: 0, pad_w: 0, depthwise: false };
+    let gp = ConvGeom {
+        cin: 64,
+        cout: 128,
+        kh: 1,
+        kw: 1,
+        stride: 1,
+        pad_h: 0,
+        pad_w: 0,
+        depthwise: false,
+    };
     let xp = rand_q(&mut rng, &[64, 16, 16]);
     let wp = rand_q(&mut rng, &[128, 64, 1, 1]);
     let biasp = vec![0i32; 128];
@@ -150,38 +232,169 @@ fn main() {
     let (tp, _) = time_it(2, reps, || {
         let mut ops = OpCounter::new();
         std::hint::black_box(qconv::qconv2d_fwd_gemm(
-            &xp, &wp, &biasp, &gp, oqp, true, &mut scratch, &mut ops,
+            &xp,
+            &wp,
+            &biasp,
+            &gp,
+            oqp,
+            true,
+            &mut scratch,
+            &mut ops,
         ));
     });
-    tab.row(&["qconv2d_fwd 1x1 gemm".into(), "64x16x16 -> 128".into(), fmt_duration(tp), format!("{:.2}", macsp / tp / 1e9)]);
+    tab.row(&[
+        "qconv2d_fwd 1x1 gemm".into(),
+        "64x16x16 -> 128".into(),
+        fmt_duration(tp),
+        format!("{:.2}", macsp / tp / 1e9),
+    ]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("qconv2d_fwd_1x1")),
         ("seconds", Json::Num(tp)),
         ("gmacs", Json::Num(macsp / tp / 1e9)),
     ]));
 
-    // conv bwd input + weight (the training additions)
+    // conv backward, scalar vs GEMM, at several §III-B sparsity levels:
+    // the Eq. 9 controller's kept ratio maps onto whole skipped GEMM rows,
+    // so backward time should scale ~linearly with the kept fraction.
     let e = rand_q(&mut rng, &[32, 32, 32]);
-    let (tb, _) = time_it(2, reps, || {
-        let mut ops = OpCounter::new();
-        std::hint::black_box(qconv::qconv2d_bwd_input(&e, &w, &g, 32, 32, oqp, None, &mut ops));
-    });
-    tab.row(&["qconv2d_bwd_input".into(), "32x32x32".into(), fmt_duration(tb), format!("{:.2}", macs / tb / 1e9)]);
-    sink.push(Json::obj(vec![
-        ("kernel", Json::str("qconv2d_bwd_input")),
-        ("seconds", Json::Num(tb)),
-        ("gmacs", Json::Num(macs / tb / 1e9)),
-    ]));
+    for &kept_frac in &[1.0f64, 0.5, 0.25] {
+        let kept_n = ((g.cout as f64 * kept_frac).round() as usize).clamp(1, g.cout);
+        // evenly spread the kept channels across the channel range
+        let mask: Vec<bool> = {
+            let mut m = vec![false; g.cout];
+            for j in 0..kept_n {
+                m[j * g.cout / kept_n] = true;
+            }
+            m
+        };
+        let keep = if kept_frac >= 1.0 { None } else { Some(&mask[..]) };
+        let kmacs = macs * kept_frac;
+        let label = format!("kept={:.0}%", kept_frac * 100.0);
 
-    let (tw, _) = time_it(2, reps, || {
+        let (tbi_s, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(qconv::qconv2d_bwd_input(&e, &w, &g, 32, 32, oqp, keep, &mut ops));
+        });
+        let (tbi_g, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(qconv::qconv2d_bwd_input_gemm(
+                &e,
+                &w,
+                &g,
+                32,
+                32,
+                oqp,
+                keep,
+                &mut scratch,
+                &mut ops,
+            ));
+        });
+        let (tbw_s, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(qconv::qconv2d_bwd_weight(&e, &x, &g, keep, &mut ops));
+        });
+        let (tbw_g, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(qconv::qconv2d_bwd_weight_gemm(
+                &e,
+                &x,
+                &g,
+                keep,
+                &mut scratch,
+                &mut ops,
+            ));
+        });
+        tab.row(&[
+            format!("qconv bwd_input scalar {label}"),
+            "32x32x32".into(),
+            fmt_duration(tbi_s),
+            format!("{:.2}", kmacs / tbi_s / 1e9),
+        ]);
+        tab.row(&[
+            format!("qconv bwd_input gemm {label}"),
+            "32x32x32".into(),
+            fmt_duration(tbi_g),
+            format!("{:.2}", kmacs / tbi_g / 1e9),
+        ]);
+        tab.row(&[
+            format!("qconv bwd_weight scalar {label}"),
+            "32x32x32".into(),
+            fmt_duration(tbw_s),
+            format!("{:.2}", kmacs / tbw_s / 1e9),
+        ]);
+        tab.row(&[
+            format!("qconv bwd_weight gemm {label}"),
+            "32x32x32".into(),
+            fmt_duration(tbw_g),
+            format!("{:.2}", kmacs / tbw_g / 1e9),
+        ]);
+        sink.push(Json::obj(vec![
+            ("kernel", Json::str("qconv2d_bwd_sparsity")),
+            ("kept_fraction", Json::Num(kept_frac)),
+            ("bwd_input_scalar_seconds", Json::Num(tbi_s)),
+            ("bwd_input_gemm_seconds", Json::Num(tbi_g)),
+            ("bwd_input_gemm_speedup", Json::Num(tbi_s / tbi_g)),
+            ("bwd_weight_scalar_seconds", Json::Num(tbw_s)),
+            ("bwd_weight_gemm_seconds", Json::Num(tbw_g)),
+            ("bwd_weight_gemm_speedup", Json::Num(tbw_s / tbw_g)),
+        ]));
+        println!(
+            "conv bwd {label}: input gemm {:.2}x, weight gemm {:.2}x vs scalar",
+            tbi_s / tbi_g,
+            tbw_s / tbw_g
+        );
+    }
+
+    // float conv backward, scalar vs GEMM (dense)
+    let ef = {
+        let mut t = TensorF32::zeros(&[32, 32, 32]);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    };
+    let (tfb_s, _) = time_it(1, reps, || {
         let mut ops = OpCounter::new();
-        std::hint::black_box(qconv::qconv2d_bwd_weight(&e, &x, &g, None, &mut ops));
+        std::hint::black_box(fconv::fconv2d_bwd_input(&ef, &wf, &g, 32, 32, None, &mut ops));
+        std::hint::black_box(fconv::fconv2d_bwd_weight(&ef, &xf, &g, None, &mut ops));
     });
-    tab.row(&["qconv2d_bwd_weight".into(), "32x32x32".into(), fmt_duration(tw), format!("{:.2}", macs / tw / 1e9)]);
+    let (tfb_g, _) = time_it(1, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(fconv::fconv2d_bwd_input_gemm(
+            &ef,
+            &wf,
+            &g,
+            32,
+            32,
+            None,
+            &mut scratch,
+            &mut ops,
+        ));
+        std::hint::black_box(fconv::fconv2d_bwd_weight_gemm(
+            &ef,
+            &xf,
+            &g,
+            None,
+            &mut scratch,
+            &mut ops,
+        ));
+    });
+    tab.row(&[
+        "fconv bwd (in+wt) scalar".into(),
+        "32x32x32".into(),
+        fmt_duration(tfb_s),
+        format!("{:.2}", 2.0 * macs / tfb_s / 1e9),
+    ]);
+    tab.row(&[
+        "fconv bwd (in+wt) gemm".into(),
+        "32x32x32".into(),
+        fmt_duration(tfb_g),
+        format!("{:.2}", 2.0 * macs / tfb_g / 1e9),
+    ]);
     sink.push(Json::obj(vec![
-        ("kernel", Json::str("qconv2d_bwd_weight")),
-        ("seconds", Json::Num(tw)),
-        ("gmacs", Json::Num(macs / tw / 1e9)),
+        ("kernel", Json::str("fconv2d_bwd_gemm")),
+        ("scalar_seconds", Json::Num(tfb_s)),
+        ("gemm_seconds", Json::Num(tfb_g)),
+        ("speedup_vs_scalar", Json::Num(tfb_s / tfb_g)),
     ]));
 
     // linear fwd (head-sized)
@@ -193,7 +406,12 @@ fn main() {
         let mut ops = OpCounter::new();
         std::hint::black_box(qlinear::qlinear_fwd(&xl, &wl, &biasl, oqp, false, &mut ops));
     });
-    tab.row(&["qlinear_fwd".into(), "512 -> 256".into(), fmt_duration(tl), format!("{:.2}", macsl / tl / 1e9)]);
+    tab.row(&[
+        "qlinear_fwd".into(),
+        "512 -> 256".into(),
+        fmt_duration(tl),
+        format!("{:.2}", macsl / tl / 1e9),
+    ]);
     sink.push(Json::obj(vec![
         ("kernel", Json::str("qlinear_fwd")),
         ("seconds", Json::Num(tl)),

@@ -20,6 +20,7 @@ pub mod stream;
 use crate::device::DeviceModel;
 use crate::graph::exec::NativeModel;
 use crate::kernels::{softmax, OpCounter};
+use crate::memplan::Scratch;
 use crate::tensor::TensorF32;
 use crate::train::loop_::Sparsity;
 use crate::train::Optimizer;
@@ -88,6 +89,10 @@ pub struct Coordinator<'a> {
     sparsity: Sparsity,
     replay: ReplayBuffer,
     rng: Pcg32,
+    /// GEMM scratch arena, sized at construction (uint8 buffers; f32 twins
+    /// grow once on a float model's first pass) and reused by every
+    /// inference and training pass of the run.
+    scratch: Scratch,
     pub telemetry: Telemetry,
 }
 
@@ -101,6 +106,7 @@ impl<'a> Coordinator<'a> {
         seed: u64,
     ) -> Coordinator<'a> {
         let replay = ReplayBuffer::new(cfg.replay_capacity, seed ^ 0xBEEF);
+        let scratch = Scratch::for_model(&model.def);
         Coordinator {
             model,
             device,
@@ -109,6 +115,7 @@ impl<'a> Coordinator<'a> {
             sparsity,
             replay,
             rng: Pcg32::new(seed, 0xC0),
+            scratch,
             telemetry: Telemetry::default(),
         }
     }
@@ -127,7 +134,7 @@ impl<'a> Coordinator<'a> {
 
             // 1. immediate inference
             let mut fwd = OpCounter::new();
-            let trace = self.model.forward(&arrival.x, &mut fwd);
+            let trace = self.model.forward_in(&arrival.x, &mut self.scratch, &mut fwd);
             let pred = softmax::predict(&trace.logits);
             self.telemetry.inferences += 1;
             if pred == arrival.y {
@@ -177,18 +184,19 @@ impl<'a> Coordinator<'a> {
     fn train_one(&mut self, x: &TensorF32, y: usize) -> (f64, OpCounter, OpCounter) {
         let mut fwd = OpCounter::new();
         let mut bwd = OpCounter::new();
-        let trace = self.model.forward_adapt(x, &mut fwd);
+        let trace = self.model.forward_adapt_in(x, &mut self.scratch, &mut fwd);
         let (loss, _, err) = softmax::softmax_ce(&trace.logits, y, &mut bwd);
         let res = match &mut self.sparsity {
-            Sparsity::Dense => self.model.backward(
+            Sparsity::Dense => self.model.backward_in(
                 &trace,
                 err,
                 &mut crate::graph::exec::DenseUpdates,
+                &mut self.scratch,
                 &mut bwd,
             ),
             Sparsity::Dynamic(ctl) => {
                 ctl.begin_sample(loss);
-                self.model.backward(&trace, err, ctl, &mut bwd)
+                self.model.backward_in(&trace, err, ctl, &mut self.scratch, &mut bwd)
             }
         };
         self.opt.accumulate(&mut self.model, &res, &mut bwd);

@@ -64,6 +64,7 @@ impl ReplayBuffer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{shrink_dim, Prop};
 
     fn sample(v: f32) -> TensorF32 {
         TensorF32::from_vec(&[2], vec![v, v])
@@ -108,5 +109,76 @@ mod tests {
         rb.push(sample(1.0), 0);
         rb.push(sample(2.0), 1);
         assert_eq!(rb.bytes(), 2 * (2 * 4 + 8));
+    }
+
+    /// Reservoir statistics under fixed seeds: with capacity C and a stream
+    /// of N items, every position must be retained with probability ≈ C/N —
+    /// early and late items alike (the unbiasedness that protects the
+    /// training distribution on long streams).
+    #[test]
+    fn reservoir_retention_is_unbiased_across_positions() {
+        let (cap, n, runs) = (6usize, 60usize, 400usize);
+        let expected = cap as f32 / n as f32; // 0.1
+        let mut early_hits = 0usize;
+        let mut late_hits = 0usize;
+        for seed in 0..runs {
+            let mut rb = ReplayBuffer::new(cap, seed as u64);
+            for i in 0..n {
+                rb.push(sample(i as f32), 0);
+            }
+            if rb.items.iter().any(|(x, _)| x.data()[0] == 3.0) {
+                early_hits += 1;
+            }
+            if rb.items.iter().any(|(x, _)| x.data()[0] == 50.0) {
+                late_hits += 1;
+            }
+        }
+        let early = early_hits as f32 / runs as f32;
+        let late = late_hits as f32 / runs as f32;
+        // ±6 percentage points around the 10% expectation (≈4σ for 400
+        // Bernoulli trials) keeps this deterministic-seed test robust.
+        assert!((early - expected).abs() < 0.06, "early retention {early} vs {expected}");
+        assert!((late - expected).abs() < 0.06, "late retention {late} vs {expected}");
+    }
+
+    /// Bounded-capacity property: for any (cap, stream length), the buffer
+    /// holds exactly min(cap, len) items, has seen the whole stream, and
+    /// every retained item came from the stream.
+    #[test]
+    fn prop_reservoir_bounded_and_consistent() {
+        Prop::new(64).check(
+            |r: &mut Pcg32| {
+                (1 + r.below(20) as usize, r.below(100) as usize, r.next_u64())
+            },
+            |&(cap, n, s)| {
+                let mut v = Vec::new();
+                for c2 in shrink_dim(cap, 1) {
+                    v.push((c2, n, s));
+                }
+                for n2 in shrink_dim(n, 0) {
+                    v.push((cap, n2, s));
+                }
+                v
+            },
+            |&(cap, n, seed)| {
+                let mut rb = ReplayBuffer::new(cap, seed);
+                for i in 0..n {
+                    rb.push(sample(i as f32), i % 7);
+                }
+                if rb.len() != cap.min(n) {
+                    return Err(format!("len {} != min(cap {cap}, n {n})", rb.len()));
+                }
+                if rb.seen() != n as u64 {
+                    return Err(format!("seen {} != {n}", rb.seen()));
+                }
+                for (x, y) in &rb.items {
+                    let v = x.data()[0] as usize;
+                    if v >= n || *y != v % 7 {
+                        return Err(format!("retained item ({v}, {y}) not from the stream"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -51,7 +51,13 @@ impl DatasetSpec {
         paper: [usize; 3],
         reduced: [usize; 3],
     ) -> DatasetSpec {
-        DatasetSpec { name, classes, paper_shape: paper, reduced_shape: reduced, kind: Kind::Vision }
+        DatasetSpec {
+            name,
+            classes,
+            paper_shape: paper,
+            reduced_shape: reduced,
+            kind: Kind::Vision,
+        }
     }
 
     const fn ts(name: &'static str, classes: usize, len: usize, reduced: usize) -> DatasetSpec {
@@ -164,7 +170,12 @@ impl Domain {
     }
 
     /// Build class-balanced train/test splits.
-    pub fn splits(&self, per_class_train: usize, per_class_test: usize, rng: &mut Pcg32) -> (Split, Split) {
+    pub fn splits(
+        &self,
+        per_class_train: usize,
+        per_class_test: usize,
+        rng: &mut Pcg32,
+    ) -> (Split, Split) {
         let mk = |per_class: usize, rng: &mut Pcg32| {
             let mut xs = Vec::new();
             let mut ys = Vec::new();
@@ -300,12 +311,7 @@ mod tests {
             let x = dom.sample(y, &mut rng);
             let mut best = (f32::INFINITY, 0usize);
             for (c, p) in dom.protos.iter().enumerate() {
-                let d: f32 = x
-                    .data()
-                    .iter()
-                    .zip(p.data())
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum();
+                let d: f32 = x.data().iter().zip(p.data()).map(|(a, b)| (a - b) * (a - b)).sum();
                 if d < best.0 {
                     best = (d, c);
                 }

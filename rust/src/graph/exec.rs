@@ -13,7 +13,7 @@
 //! sparse update controller (§III-B).
 
 use crate::graph::{DnnConfig, LayerDef, LayerKind, ModelDef, Precision};
-use crate::kernels::{fconv, flinear, pool, qconv, qlinear, softmax, OpCounter};
+use crate::kernels::{fconv, flinear, kept_count, pool, qconv, qlinear, softmax, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::observer::MinMaxObserver;
 use crate::quant::{quantize_bias, QParams, QTensor};
@@ -101,11 +101,7 @@ pub struct FloatParams {
 impl FloatParams {
     /// He-initialized random parameters.
     pub fn init(def: &ModelDef, rng: &mut Pcg32) -> FloatParams {
-        let layers = def
-            .layers
-            .iter()
-            .map(|l| init_layer(l, rng))
-            .collect();
+        let layers = def.layers.iter().map(|l| init_layer(l, rng)).collect();
         FloatParams { layers }
     }
 }
@@ -152,10 +148,7 @@ pub fn calibrate(def: &ModelDef, fp: &FloatParams, samples: &[TensorF32]) -> Cal
             obs[i].observe(cur.data());
         }
     }
-    Calibration {
-        input_qp: in_obs.qparams(),
-        act_qp: obs.iter().map(|o| o.qparams()).collect(),
-    }
+    Calibration { input_qp: in_obs.qparams(), act_qp: obs.iter().map(|o| o.qparams()).collect() }
 }
 
 fn float_layer_fwd(
@@ -329,8 +322,10 @@ impl NativeModel {
             while j > 0 {
                 j -= 1;
                 match self.def.layers[j].kind {
-                    LayerKind::Conv { .. } | LayerKind::Linear { .. } | LayerKind::GlobalAvgPool => {
-                        return self.act_qp[j]
+                    LayerKind::Conv { .. }
+                    | LayerKind::Linear { .. }
+                    | LayerKind::GlobalAvgPool => {
+                        return self.act_qp[j];
                     }
                     _ => {}
                 }
@@ -354,7 +349,12 @@ impl NativeModel {
     /// routed through the im2col/GEMM engine (`kernels::gemm`), which is
     /// bit-exact with the scalar reference kernels; depthwise convs,
     /// linears and pools use the MCU-faithful kernels directly.
-    pub fn forward_in(&self, x: &TensorF32, scratch: &mut Scratch, ops: &mut OpCounter) -> FwdTrace {
+    pub fn forward_in(
+        &self,
+        x: &TensorF32,
+        scratch: &mut Scratch,
+        ops: &mut OpCounter,
+    ) -> FwdTrace {
         let n = self.def.layers.len();
         let mut acts: Vec<Act> = Vec::with_capacity(n);
         let mut argmax: Vec<Option<Vec<u32>>> = vec![None; n];
@@ -562,7 +562,7 @@ impl NativeModel {
 
     /// One full training-sample pass: forward (with activation-range
     /// adaptation), loss, backward. Returns the loss, the predicted class
-    /// and the per-layer gradients.
+    /// and the per-layer gradients. One scratch arena serves both passes.
     pub fn train_sample(
         &mut self,
         x: &TensorF32,
@@ -570,10 +570,11 @@ impl NativeModel {
         masks: &mut dyn MaskProvider,
         ops: &mut OpCounter,
     ) -> (f32, usize, BwdResult) {
-        let trace = self.forward_adapt(x, ops);
+        let mut scratch = Scratch::new();
+        let trace = self.forward_adapt_in(x, &mut scratch, ops);
         let (loss, probs, err_f) = softmax::softmax_ce(&trace.logits, label, ops);
         let pred = softmax::predict(&probs);
-        let bwd = self.backward(&trace, err_f, masks, ops);
+        let bwd = self.backward_in(&trace, err_f, masks, &mut scratch, ops);
         (loss, pred, bwd)
     }
 
@@ -588,8 +589,14 @@ impl NativeModel {
         let (loss, probs, err) = softmax::softmax_ce(&trace.logits, label, &mut bwd_ops);
         let pred = softmax::predict(&probs);
         let mut err_obs = self.err_obs.clone();
-        let grads =
-            self.backward_with(&trace, err, &mut DenseUpdates, &mut err_obs, &mut bwd_ops);
+        let grads = self.backward_with(
+            &trace,
+            err,
+            &mut DenseUpdates,
+            &mut err_obs,
+            scratch,
+            &mut bwd_ops,
+        );
         SamplePass { loss, pred, grads, err_obs, sat, fwd_ops, bwd_ops }
     }
 
@@ -631,7 +638,7 @@ impl NativeModel {
             }
         } else {
             let model: &NativeModel = self;
-            let chunk = (n + workers - 1) / workers;
+            let chunk = n.div_ceil(workers);
             let results: Vec<Vec<(usize, SamplePass)>> = std::thread::scope(|s| {
                 let mut handles = Vec::new();
                 for wi in 0..workers {
@@ -686,9 +693,9 @@ impl NativeModel {
     /// tensors are quantized per layer precision; ReLU masking uses the
     /// saved forward outputs; pool routing uses the saved argmaxes.
     ///
-    /// Updates the model's own error observers; delegates to
-    /// [`NativeModel::backward_with`], which the batch engine calls
-    /// directly with per-worker observer copies.
+    /// Convenience wrapper over [`NativeModel::backward_in`] with a
+    /// throwaway scratch arena; hot loops (the trainer, the batch engine)
+    /// should hold a [`Scratch`] and call `backward_in` directly.
     pub fn backward(
         &mut self,
         trace: &FwdTrace,
@@ -696,22 +703,45 @@ impl NativeModel {
         masks: &mut dyn MaskProvider,
         ops: &mut OpCounter,
     ) -> BwdResult {
+        self.backward_in(trace, head_err, masks, &mut Scratch::new(), ops)
+    }
+
+    /// [`NativeModel::backward`] with an explicit scratch arena backing the
+    /// GEMM-routed backward kernels. Updates the model's own error
+    /// observers; delegates to [`NativeModel::backward_with`], which the
+    /// batch engine calls directly with per-worker observer copies.
+    pub fn backward_in(
+        &mut self,
+        trace: &FwdTrace,
+        head_err: TensorF32,
+        masks: &mut dyn MaskProvider,
+        scratch: &mut Scratch,
+        ops: &mut OpCounter,
+    ) -> BwdResult {
         let mut obs = std::mem::take(&mut self.err_obs);
-        let r = self.backward_with(trace, head_err, masks, &mut obs, ops);
+        let r = self.backward_with(trace, head_err, masks, &mut obs, scratch, ops);
         self.err_obs = obs;
         r
     }
 
-    /// [`NativeModel::backward`] against caller-provided error observers.
-    /// The model itself is only read, so concurrent workers can each run
-    /// backward passes over a shared `&NativeModel` with their own observer
-    /// copies and merge the observations deterministically afterwards.
+    /// [`NativeModel::backward_in`] against caller-provided error
+    /// observers. The model itself is only read, so concurrent workers can
+    /// each run backward passes over a shared `&NativeModel` with their own
+    /// observer copies (and their own scratch arenas) and merge the
+    /// observations deterministically afterwards.
+    ///
+    /// Backward compute is GEMM-routed like the forward pass: non-depthwise
+    /// convs lower `dW` onto an error × im2col A·Bᵀ GEMM and `dX` onto a
+    /// flipped-weights × backward-im2col GEMM; linear layers use the shared
+    /// GEMM cores as degenerate cases. Sparse-update masks skip whole GEMM
+    /// rows (see DESIGN.md §2). Depthwise convs stay on the scalar kernels.
     pub fn backward_with(
         &self,
         trace: &FwdTrace,
         head_err: TensorF32,
         masks: &mut dyn MaskProvider,
         err_obs: &mut [MinMaxObserver],
+        scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> BwdResult {
         let n = self.def.layers.len();
@@ -742,7 +772,8 @@ impl NativeModel {
                 (_, e) => e,
             };
 
-            let layer_in: Act = if i == 0 { trace.input.clone() } else { trace.acts[i - 1].clone() };
+            let layer_in: Act =
+                if i == 0 { trace.input.clone() } else { trace.acts[i - 1].clone() };
             // Input act coerced to this layer's precision (as in forward).
             let layer_in = match (self.prec[i], layer_in) {
                 (Precision::Uint8, Act::F(t)) => Act::Q(QTensor::quantize_with(&t, self.in_qp(i))),
@@ -783,21 +814,50 @@ impl NativeModel {
                                 ),
                             };
                             if l.trainable {
-                                let (gw, gb) =
-                                    qconv::qconv2d_bwd_weight(eq, xq, geom, keep.as_deref(), ops);
+                                let (gw, gb) = if geom.depthwise {
+                                    qconv::qconv2d_bwd_weight(eq, xq, geom, keep.as_deref(), ops)
+                                } else {
+                                    qconv::qconv2d_bwd_weight_gemm(
+                                        eq,
+                                        xq,
+                                        geom,
+                                        keep.as_deref(),
+                                        scratch,
+                                        ops,
+                                    )
+                                };
                                 let total = geom.cout;
-                                let kept =
-                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
-                                        .unwrap_or(total);
+                                let kept = kept_count(keep.as_deref(), total);
                                 grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
                             }
                             if i > stop {
                                 let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
                                 let prev_obs = &mut err_obs[i - 1];
                                 let out_qp = propagate_qp(prev_obs, eq, ops);
-                                err = Act::Q(qconv::qconv2d_bwd_input(
-                                    eq, w, geom, h, w_in, out_qp, keep.as_deref(), ops,
-                                ));
+                                err = if geom.depthwise {
+                                    Act::Q(qconv::qconv2d_bwd_input(
+                                        eq,
+                                        w,
+                                        geom,
+                                        h,
+                                        w_in,
+                                        out_qp,
+                                        keep.as_deref(),
+                                        ops,
+                                    ))
+                                } else {
+                                    Act::Q(qconv::qconv2d_bwd_input_gemm(
+                                        eq,
+                                        w,
+                                        geom,
+                                        h,
+                                        w_in,
+                                        out_qp,
+                                        keep.as_deref(),
+                                        scratch,
+                                        ops,
+                                    ))
+                                };
                                 observe_saturation(&mut err_obs[i - 1], &err);
                             }
                         }
@@ -825,19 +885,46 @@ impl NativeModel {
                                 ),
                             };
                             if l.trainable {
-                                let (gw, gb) =
-                                    fconv::fconv2d_bwd_weight(ef, xf, geom, keep.as_deref(), ops);
+                                let (gw, gb) = if geom.depthwise {
+                                    fconv::fconv2d_bwd_weight(ef, xf, geom, keep.as_deref(), ops)
+                                } else {
+                                    fconv::fconv2d_bwd_weight_gemm(
+                                        ef,
+                                        xf,
+                                        geom,
+                                        keep.as_deref(),
+                                        scratch,
+                                        ops,
+                                    )
+                                };
                                 let total = geom.cout;
-                                let kept =
-                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
-                                        .unwrap_or(total);
+                                let kept = kept_count(keep.as_deref(), total);
                                 grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
                             }
                             if i > stop {
                                 let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
-                                err = Act::F(fconv::fconv2d_bwd_input(
-                                    ef, w, geom, h, w_in, keep.as_deref(), ops,
-                                ));
+                                err = if geom.depthwise {
+                                    Act::F(fconv::fconv2d_bwd_input(
+                                        ef,
+                                        w,
+                                        geom,
+                                        h,
+                                        w_in,
+                                        keep.as_deref(),
+                                        ops,
+                                    ))
+                                } else {
+                                    Act::F(fconv::fconv2d_bwd_input_gemm(
+                                        ef,
+                                        w,
+                                        geom,
+                                        h,
+                                        w_in,
+                                        keep.as_deref(),
+                                        scratch,
+                                        ops,
+                                    ))
+                                };
                             }
                         }
                     }
@@ -875,19 +962,27 @@ impl NativeModel {
                                 ),
                             };
                             if l.trainable {
-                                let (gw, gb) =
-                                    qlinear::qlinear_bwd_weight(eq, xq, keep.as_deref(), ops);
+                                let (gw, gb) = qlinear::qlinear_bwd_weight_gemm(
+                                    eq,
+                                    xq,
+                                    keep.as_deref(),
+                                    scratch,
+                                    ops,
+                                );
                                 let total = eq.len();
-                                let kept =
-                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
-                                        .unwrap_or(total);
+                                let kept = kept_count(keep.as_deref(), total);
                                 grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
                             }
                             if i > stop {
                                 let prev_obs = &mut err_obs[i - 1];
                                 let out_qp = propagate_qp(prev_obs, eq, ops);
-                                err = Act::Q(qlinear::qlinear_bwd_input(
-                                    eq, w, out_qp, keep.as_deref(), ops,
+                                err = Act::Q(qlinear::qlinear_bwd_input_gemm(
+                                    eq,
+                                    w,
+                                    out_qp,
+                                    keep.as_deref(),
+                                    scratch,
+                                    ops,
                                 ));
                                 observe_saturation(&mut err_obs[i - 1], &err);
                             }
@@ -917,16 +1012,18 @@ impl NativeModel {
                             };
                             if l.trainable {
                                 let (gw, gb) =
-                                    flinear::flinear_bwd_weight(ef, xf, keep.as_deref(), ops);
+                                    flinear::flinear_bwd_weight_gemm(ef, xf, keep.as_deref(), ops);
                                 let total = ef.len();
-                                let kept =
-                                    keep.as_ref().map(|k| k.iter().filter(|&&b| b).count())
-                                        .unwrap_or(total);
+                                let kept = kept_count(keep.as_deref(), total);
                                 grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
                             }
                             if i > stop {
-                                err = Act::F(flinear::flinear_bwd_input(
-                                    ef, w, keep.as_deref(), ops,
+                                err = Act::F(flinear::flinear_bwd_input_gemm(
+                                    ef,
+                                    w,
+                                    keep.as_deref(),
+                                    scratch,
+                                    ops,
                                 ));
                             }
                         }
@@ -979,11 +1076,7 @@ impl NativeModel {
     /// Test-set accuracy.
     pub fn evaluate(&self, xs: &[TensorF32], ys: &[usize]) -> f32 {
         let mut ops = OpCounter::new();
-        let correct = xs
-            .iter()
-            .zip(ys)
-            .filter(|(x, &y)| self.predict(x, &mut ops) == y)
-            .count();
+        let correct = xs.iter().zip(ys).filter(|(x, &y)| self.predict(x, &mut ops) == y).count();
         correct as f32 / xs.len().max(1) as f32
     }
 }
@@ -1048,7 +1141,12 @@ mod tests {
     use super::*;
     use crate::graph::models;
 
-    fn toy_data(rng: &mut Pcg32, n: usize, shape: &[usize], classes: usize) -> (Vec<TensorF32>, Vec<usize>) {
+    fn toy_data(
+        rng: &mut Pcg32,
+        n: usize,
+        shape: &[usize],
+        classes: usize,
+    ) -> (Vec<TensorF32>, Vec<usize>) {
         // Two-class-separable synthetic data: class k biases channel mean.
         let mut xs = Vec::new();
         let mut ys = Vec::new();
@@ -1179,12 +1277,7 @@ mod tests {
         let mut ops_fwd = OpCounter::new();
         m.forward(&xs[0], &mut ops_fwd);
         let bwd_macs = ops_full.total_macs().saturating_sub(ops_fwd.total_macs());
-        assert!(
-            bwd_macs < ops_fwd.total_macs(),
-            "bwd={} fwd={}",
-            bwd_macs,
-            ops_fwd.total_macs()
-        );
+        assert!(bwd_macs < ops_fwd.total_macs(), "bwd={} fwd={}", bwd_macs, ops_fwd.total_macs());
     }
 
     #[test]

@@ -164,7 +164,8 @@ pub fn run_full_training(
     seed: u64,
 ) -> (TrainReport, NativeModel) {
     let (mut m, mut opt, tr, te, mut rng) = full_training_setup(spec, cfg, knobs, seed);
-    let rep = loop_::train(&mut m, &mut opt, &tr, &te, knobs.epochs, &mut Sparsity::Dense, &mut rng);
+    let rep =
+        loop_::train(&mut m, &mut opt, &tr, &te, knobs.epochs, &mut Sparsity::Dense, &mut rng);
     (rep, m)
 }
 

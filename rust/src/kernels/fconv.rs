@@ -5,7 +5,7 @@
 //! the device model prices it with the per-MCU float CPI (soft-float on the
 //! Cortex-M0+, FPU on M4/M7).
 
-use crate::kernels::{gemm, ConvGeom, OpCounter};
+use crate::kernels::{gemm, kept_count, ConvGeom, OpCounter};
 use crate::memplan::Scratch;
 use crate::tensor::{idx3, idx4, TensorF32};
 
@@ -75,11 +75,7 @@ pub fn fconv2d_fwd_gemm(
 
     let n = oh * ow;
     let kdim = geom.cin * geom.kh * geom.kw;
-    let pointwise = geom.kh == 1
-        && geom.kw == 1
-        && geom.stride == 1
-        && geom.pad_h == 0
-        && geom.pad_w == 0;
+    let pointwise = geom.is_pointwise();
 
     let mut out = TensorF32::zeros(&[geom.cout, oh, ow]);
     {
@@ -157,6 +153,43 @@ pub fn fconv2d_bwd_input(
     out
 }
 
+/// GEMM-routed float error backprop, value-identical to
+/// [`fconv2d_bwd_input`]: `dX[Cin, H·W] = wt_flip × colE`. The flipped
+/// packing makes the GEMM's ascending-k accumulation visit contributions in
+/// the scalar kernel's `(co, oy, ox)` order, and stride-gap/edge positions
+/// hold 0.0 (an exact `w·0.0` addition), so per-element sums are identical.
+///
+/// `keep` drops masked output channels from both packings — whole GEMM rows
+/// are skipped, shrinking the reduction depth proportionally. Non-depthwise
+/// only; op accounting matches the scalar kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn fconv2d_bwd_input_gemm(
+    e: &TensorF32,
+    w: &TensorF32,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let kc = kept_count(keep, geom.cout);
+    let krow = kc * geom.kh * geom.kw;
+    let n = in_h * in_w;
+    let mut out = TensorF32::zeros(&[geom.cin, in_h, in_w]);
+    {
+        let (wt_buf, col_buf, init) = scratch.fconv_bwd_bufs(geom.cin * krow, krow * n, geom.cin);
+        gemm::pack_wt_flip_f32(w.data(), geom, keep, wt_buf);
+        gemm::im2col_bwd_f32(e.data(), oh, ow, geom, in_h, in_w, keep, col_buf);
+        gemm::gemm_f32(wt_buf, col_buf, init, geom.cin, krow, n, out.data_mut());
+    }
+    ops.float_macs += kc as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.bytes += ((e.len() + w.len() + geom.cin * n) * 4) as u64;
+    out
+}
+
 /// Weight + bias gradient (float), optional channel mask.
 pub fn fconv2d_bwd_weight(
     e: &TensorF32,
@@ -212,6 +245,62 @@ pub fn fconv2d_bwd_weight(
     (gw, gb)
 }
 
+/// GEMM-routed float weight gradient, value-identical to
+/// [`fconv2d_bwd_weight`]: each `∇W` element is one contiguous dot product
+/// of an error row with a forward-im2col row ([`gemm::gemm_abt_f32`]),
+/// accumulated in the scalar kernel's ascending `(oy, ox)` order (padded
+/// positions hold 0.0 and add an exact `e·0.0`). `keep` skips masked output
+/// channels as whole GEMM rows. Non-depthwise only.
+pub fn fconv2d_bwd_weight_gemm(
+    e: &TensorF32,
+    x: &TensorF32,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let n = oh * ow;
+    let kdim = geom.cin * geom.kh * geom.kw;
+    let pointwise = geom.is_pointwise();
+
+    let mut gw = TensorF32::zeros(&[geom.cout, geom.cin, geom.kh, geom.kw]);
+    let mut gb = TensorF32::zeros(&[geom.cout]);
+    {
+        let col_buf = scratch.fconv_col(if pointwise { 0 } else { kdim * n });
+        let col: &[f32] = if pointwise {
+            x.data()
+        } else {
+            gemm::im2col_f32(x.data(), h, wd, geom, oh, ow, col_buf);
+            col_buf
+        };
+        gemm::gemm_abt_f32(e.data(), col, geom.cout, kdim, n, keep, gw.data_mut());
+    }
+
+    let ed = e.data();
+    let gbd = gb.data_mut();
+    let mut kept = 0u64;
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        kept += 1;
+        let mut bacc = 0f32;
+        for &ev in &ed[co * n..(co + 1) * n] {
+            bacc += ev;
+        }
+        gbd[co] = bacc;
+    }
+
+    ops.float_macs += kept * (n * geom.cin * geom.kh * geom.kw) as u64;
+    ops.bytes += ((e.len() + x.len() + gw.len()) * 4) as u64;
+    (gw, gb)
+}
+
 /// ReLU backward in float: zero the error where the forward output was 0.
 pub fn relu_bwd_mask_f(e: &mut TensorF32, y_fwd: &TensorF32, ops: &mut OpCounter) {
     assert_eq!(e.shape(), y_fwd.shape());
@@ -233,7 +322,16 @@ mod tests {
     #[test]
     fn weight_grad_matches_finite_difference() {
         let mut rng = Pcg32::seeded(31);
-        let g = ConvGeom { cin: 2, cout: 2, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 2,
+            cout: 2,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
         let (h, w) = (5, 5);
         let mut x = TensorF32::zeros(&[g.cin, h, w]);
         rng.fill_normal(x.data_mut(), 1.0);
@@ -267,7 +365,16 @@ mod tests {
     #[test]
     fn input_grad_matches_finite_difference() {
         let mut rng = Pcg32::seeded(32);
-        let g = ConvGeom { cin: 2, cout: 3, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 2,
+            cout: 3,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
         let (h, w) = (6, 6);
         let mut x = TensorF32::zeros(&[g.cin, h, w]);
         rng.fill_normal(x.data_mut(), 1.0);
@@ -297,7 +404,16 @@ mod tests {
     #[test]
     fn depthwise_grads_match_fd() {
         let mut rng = Pcg32::seeded(33);
-        let g = ConvGeom { cin: 3, cout: 3, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: true };
+        let g = ConvGeom {
+            cin: 3,
+            cout: 3,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: true,
+        };
         let (h, w) = (4, 4);
         let mut x = TensorF32::zeros(&[g.cin, h, w]);
         rng.fill_normal(x.data_mut(), 1.0);
@@ -335,7 +451,16 @@ mod tests {
             (4, 8, 1, 1, 0, 5), // pointwise shortcut
             (1, 2, 3, 1, 0, 7),
         ] {
-            let g = ConvGeom { cin, cout, kh: k, kw: k, stride, pad_h: pad, pad_w: pad, depthwise: false };
+            let g = ConvGeom {
+                cin,
+                cout,
+                kh: k,
+                kw: k,
+                stride,
+                pad_h: pad,
+                pad_w: pad,
+                depthwise: false,
+            };
             let mut x = TensorF32::zeros(&[cin, h, h]);
             rng.fill_normal(x.data_mut(), 1.0);
             let mut wt = TensorF32::zeros(&[cout, cin, k, k]);
@@ -345,6 +470,58 @@ mod tests {
             let ys = fconv2d_fwd(&x, &wt, &b, &g, true, &mut ops);
             let yg = fconv2d_fwd_gemm(&x, &wt, &b, &g, true, &mut scratch, &mut ops);
             assert_eq!(ys.data(), yg.data(), "geom {cin}->{cout} k{k} s{stride}");
+        }
+    }
+
+    /// The GEMM-routed float backward kernels must equal the scalar
+    /// references exactly (same per-element accumulation order — see the
+    /// kernel docs), across geometries and sparse masks.
+    #[test]
+    fn gemm_bwd_equals_scalar_reference() {
+        let mut rng = Pcg32::seeded(35);
+        let mut scratch = crate::memplan::Scratch::new();
+        for &(cin, cout, k, stride, pad, h) in &[
+            (2usize, 3usize, 3usize, 1usize, 1usize, 6usize),
+            (3, 4, 3, 2, 1, 9),
+            (4, 8, 1, 1, 0, 5), // pointwise shortcut
+            (1, 2, 3, 1, 0, 7),
+            (2, 5, 3, 2, 0, 8),
+        ] {
+            let g = ConvGeom {
+                cin,
+                cout,
+                kh: k,
+                kw: k,
+                stride,
+                pad_h: pad,
+                pad_w: pad,
+                depthwise: false,
+            };
+            let (oh, ow) = g.out_hw(h, h);
+            let mut x = TensorF32::zeros(&[cin, h, h]);
+            rng.fill_normal(x.data_mut(), 1.0);
+            let mut wt = TensorF32::zeros(&[cout, cin, k, k]);
+            rng.fill_normal(wt.data_mut(), 0.3);
+            let mut e = TensorF32::zeros(&[cout, oh, ow]);
+            rng.fill_normal(e.data_mut(), 1.0);
+            let mask: Vec<bool> = (0..cout).map(|i| i % 2 == 0).collect();
+            for keep in [None, Some(&mask[..])] {
+                let mut ops_s = OpCounter::new();
+                let mut ops_g = OpCounter::new();
+                let (gws, gbs) = fconv2d_bwd_weight(&e, &x, &g, keep, &mut ops_s);
+                let (gwg, gbg) =
+                    fconv2d_bwd_weight_gemm(&e, &x, &g, keep, &mut scratch, &mut ops_g);
+                assert_eq!(gws.data(), gwg.data(), "gw {cin}->{cout} k{k} s{stride}");
+                assert_eq!(gbs.data(), gbg.data(), "gb {cin}->{cout} k{k} s{stride}");
+                assert_eq!(ops_s, ops_g, "bwd_weight ops {cin}->{cout} k{k} s{stride}");
+
+                let mut ops_s2 = OpCounter::new();
+                let mut ops_g2 = OpCounter::new();
+                let es = fconv2d_bwd_input(&e, &wt, &g, h, h, keep, &mut ops_s2);
+                let eg = fconv2d_bwd_input_gemm(&e, &wt, &g, h, h, keep, &mut scratch, &mut ops_g2);
+                assert_eq!(es.data(), eg.data(), "dx {cin}->{cout} k{k} s{stride}");
+                assert_eq!(ops_s2, ops_g2, "bwd_input ops {cin}->{cout} k{k} s{stride}");
+            }
         }
     }
 

@@ -1,7 +1,8 @@
 //! Float32 twin of the quantized linear kernels (`float32` configuration
 //! and the float classification head of the `mixed` configuration).
 
-use crate::kernels::OpCounter;
+use crate::kernels::{gemm, kept_count, OpCounter};
+use crate::memplan::Scratch;
 use crate::tensor::TensorF32;
 
 /// Forward: `y = relu?(W·x + b)` in f32.
@@ -61,6 +62,37 @@ pub fn flinear_bwd_input(
     out
 }
 
+/// GEMM-routed error backprop, value-identical to [`flinear_bwd_input`]:
+/// `e_in = eᵀ·W` as a 1×`n_out`×`n_in` float GEMM whose ascending-k
+/// accumulation is the scalar kernel's row order. Masked rows are zeroed in
+/// the scratch copy of `e` (their AXPY adds an exact `0.0·w`).
+pub fn flinear_bwd_input_gemm(
+    e: &TensorF32,
+    w: &TensorF32,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    let n_out = e.len();
+    let n_in = w.shape()[1];
+    assert_eq!(w.shape()[0], n_out);
+    let kept = kept_count(keep, n_out) as u64;
+    let mut out = TensorF32::zeros(&[n_in]);
+    {
+        let (_, ecopy, init) = scratch.fconv_bwd_bufs(0, n_out, 1);
+        for (dst, (i, &src)) in ecopy.iter_mut().zip(e.data().iter().enumerate()) {
+            *dst = match keep {
+                Some(k) if !k[i] => 0.0,
+                _ => src,
+            };
+        }
+        gemm::gemm_f32(ecopy, w.data(), init, 1, n_out, n_in, out.data_mut());
+    }
+    ops.float_macs += kept * n_in as u64;
+    ops.bytes += ((n_out + n_out * n_in + n_in) * 4) as u64;
+    out
+}
+
 /// Weight + bias gradient `∇W = e·xᵀ`, optional row mask.
 pub fn flinear_bwd_weight(
     e: &TensorF32,
@@ -89,6 +121,37 @@ pub fn flinear_bwd_weight(
         for (gv, xv) in row.iter_mut().zip(x.data().iter()) {
             *gv = ev * xv;
         }
+    }
+    ops.float_macs += kept * n_in as u64;
+    ops.bytes += ((n_out + n_in + n_out * n_in) * 4) as u64;
+    (gw, gb)
+}
+
+/// GEMM-routed weight gradient, value-identical to [`flinear_bwd_weight`]:
+/// the outer product is a rank-1 A·Bᵀ GEMM ([`gemm::gemm_abt_f32`] with
+/// reduction depth 1); `keep` skips masked rows as whole GEMM rows. Each
+/// element is the same single product the scalar kernel computes.
+pub fn flinear_bwd_weight_gemm(
+    e: &TensorF32,
+    x: &TensorF32,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    let n_out = e.len();
+    let n_in = x.len();
+    let mut gw = TensorF32::zeros(&[n_out, n_in]);
+    let mut gb = TensorF32::zeros(&[n_out]);
+    gemm::gemm_abt_f32(e.data(), x.data(), n_out, n_in, 1, keep, gw.data_mut());
+    let gbd = gb.data_mut();
+    let mut kept = 0u64;
+    for o in 0..n_out {
+        if let Some(k) = keep {
+            if !k[o] {
+                continue;
+            }
+        }
+        kept += 1;
+        gbd[o] = e.data()[o];
     }
     ops.float_macs += kept * n_in as u64;
     ops.bytes += ((n_out + n_in + n_out * n_in) * 4) as u64;
@@ -146,6 +209,40 @@ mod tests {
         let mut ops = OpCounter::new();
         let y = flinear_fwd(&x, &w, &[0.0, 0.0], true, &mut ops);
         assert_eq!(y.data(), &[0.0, 2.0]);
+    }
+
+    /// The GEMM-routed float backward kernels must equal the scalar
+    /// references exactly, across sizes and masks, with identical op
+    /// accounting.
+    #[test]
+    fn gemm_bwd_equals_scalar_reference() {
+        let mut rng = Pcg32::seeded(42);
+        let mut scratch = crate::memplan::Scratch::new();
+        for &(n_in, n_out) in &[(1usize, 1usize), (12, 5), (33, 17), (64, 10)] {
+            let mut x = TensorF32::zeros(&[n_in]);
+            rng.fill_normal(x.data_mut(), 1.0);
+            let mut w = TensorF32::zeros(&[n_out, n_in]);
+            rng.fill_normal(w.data_mut(), 0.3);
+            let mut e = TensorF32::zeros(&[n_out]);
+            rng.fill_normal(e.data_mut(), 1.0);
+            let mask: Vec<bool> = (0..n_out).map(|i| i % 2 == 0).collect();
+            for keep in [None, Some(&mask[..])] {
+                let mut ops_s = OpCounter::new();
+                let mut ops_g = OpCounter::new();
+                let (gws, gbs) = flinear_bwd_weight(&e, &x, keep, &mut ops_s);
+                let (gwg, gbg) = flinear_bwd_weight_gemm(&e, &x, keep, &mut ops_g);
+                assert_eq!(gws.data(), gwg.data(), "gw {n_in}->{n_out}");
+                assert_eq!(gbs.data(), gbg.data(), "gb {n_in}->{n_out}");
+                assert_eq!(ops_s, ops_g, "bwd_weight ops {n_in}->{n_out}");
+
+                let mut ops_s2 = OpCounter::new();
+                let mut ops_g2 = OpCounter::new();
+                let es = flinear_bwd_input(&e, &w, keep, &mut ops_s2);
+                let eg = flinear_bwd_input_gemm(&e, &w, keep, &mut scratch, &mut ops_g2);
+                assert_eq!(es.data(), eg.data(), "dx {n_in}->{n_out}");
+                assert_eq!(ops_s2, ops_g2, "bwd_input ops {n_in}->{n_out}");
+            }
+        }
     }
 
     #[test]

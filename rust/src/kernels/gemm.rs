@@ -107,6 +107,265 @@ pub fn im2col_f32(
     im2col(xd, h, w, geom, oh, ow, 0.0, col);
 }
 
+/// Pack weights `[Cout, Cin, Kh, Kw]` into the flipped-transposed matrix
+/// `wt[Cin, kept·Kh·Kw]` consumed by the backward-input GEMM: column
+/// `(j·Kh + kyf)·Kw + kxf` of row `ci` holds `w[co_j, ci, Kh−1−kyf,
+/// Kw−1−kxf]`, where `co_j` enumerates the **kept** output channels in
+/// ascending order (all of them when `keep` is `None`).
+///
+/// Masked channels are dropped from the packing entirely, so they occupy no
+/// GEMM rows at all — the Eq. 9 controller's `kept/total` ratio maps
+/// one-to-one onto reduction-dimension length (proportional FLOP savings).
+/// The kernel flip makes the GEMM's ascending-k accumulation visit
+/// contributions in the scalar backward kernel's `(co, oy, ox)` order (see
+/// [`im2col_bwd_f32`]), which is what keeps the float path value-identical.
+///
+/// Returns the number of kept channels.
+fn pack_wt_flip<T: Copy>(
+    wdat: &[T],
+    geom: &super::ConvGeom,
+    keep: Option<&[bool]>,
+    dst: &mut [T],
+) -> usize {
+    assert!(!geom.depthwise, "flipped packing is defined for dense convs only");
+    let (cin, kh, kw) = (geom.cin, geom.kh, geom.kw);
+    assert_eq!(wdat.len(), geom.cout * cin * kh * kw, "weight size");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), geom.cout, "keep mask length");
+    }
+    let kc = super::kept_count(keep, geom.cout);
+    let krow = kc * kh * kw;
+    assert_eq!(dst.len(), cin * krow, "packed buffer size");
+    let mut j = 0usize;
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        for ci in 0..cin {
+            for kyf in 0..kh {
+                let ky = kh - 1 - kyf;
+                for kxf in 0..kw {
+                    let kx = kw - 1 - kxf;
+                    dst[ci * krow + (j * kh + kyf) * kw + kxf] =
+                        wdat[((co * cin + ci) * kh + ky) * kw + kx];
+                }
+            }
+        }
+        j += 1;
+    }
+    kc
+}
+
+/// u8 flipped-transposed weight packing (see [`pack_wt_flip`]).
+pub fn pack_wt_flip_u8(
+    wdat: &[u8],
+    geom: &super::ConvGeom,
+    keep: Option<&[bool]>,
+    dst: &mut [u8],
+) -> usize {
+    pack_wt_flip(wdat, geom, keep, dst)
+}
+
+/// f32 twin of [`pack_wt_flip_u8`].
+pub fn pack_wt_flip_f32(
+    wdat: &[f32],
+    geom: &super::ConvGeom,
+    keep: Option<&[bool]>,
+    dst: &mut [f32],
+) -> usize {
+    pack_wt_flip(wdat, geom, keep, dst)
+}
+
+/// Pack the error map `[Cout, Oh, Ow]` into the backward column matrix
+/// `col[kept·Kh·Kw, H·W]` (the im2col of the stride-dilated, edge-padded
+/// error — the standard transposed-conv-as-correlation lowering). Row
+/// `(j·Kh + kyf)·Kw + kxf`, column `iy·W + ix` holds `e[co_j, oy, ox]` with
+/// `oy = (iy + pad_h − (Kh−1−kyf)) / stride` (and the analogous `ox`) when
+/// that division is exact and in range, else `pad`.
+///
+/// Together with [`pack_wt_flip`] this computes `dX = wtᵀ_flip × col`
+/// directly into the input layout — no separate col2im scatter pass. Masked
+/// output channels are omitted from the packing (whole GEMM rows skipped).
+fn im2col_bwd<T: Copy>(
+    ed: &[T],
+    oh: usize,
+    ow: usize,
+    geom: &super::ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    keep: Option<&[bool]>,
+    pad: T,
+    col: &mut [T],
+) {
+    assert!(!geom.depthwise, "backward packing is defined for dense convs only");
+    assert_eq!(ed.len(), geom.cout * oh * ow, "error size");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), geom.cout, "keep mask length");
+    }
+    let kc = super::kept_count(keep, geom.cout);
+    let n = in_h * in_w;
+    assert_eq!(col.len(), kc * geom.kh * geom.kw * n, "backward col buffer size");
+    let s = geom.stride as isize;
+    let mut r = 0usize;
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        let plane = &ed[co * oh * ow..(co + 1) * oh * ow];
+        for kyf in 0..geom.kh {
+            let ky = geom.kh - 1 - kyf;
+            for kxf in 0..geom.kw {
+                let kx = geom.kw - 1 - kxf;
+                let dst = &mut col[r * n..(r + 1) * n];
+                let mut p = 0usize;
+                for iy in 0..in_h {
+                    let ty = iy as isize + geom.pad_h as isize - ky as isize;
+                    if ty < 0 || ty % s != 0 || ty / s >= oh as isize {
+                        dst[p..p + in_w].fill(pad);
+                        p += in_w;
+                        continue;
+                    }
+                    let rowbase = (ty / s) as usize * ow;
+                    for ix in 0..in_w {
+                        let tx = ix as isize + geom.pad_w as isize - kx as isize;
+                        dst[p] = if tx < 0 || tx % s != 0 || tx / s >= ow as isize {
+                            pad
+                        } else {
+                            plane[rowbase + (tx / s) as usize]
+                        };
+                        p += 1;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+/// u8 backward im2col. With `pad` = the error zero point, padded and
+/// stride-gap entries contribute exactly zero to the integer GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_bwd_u8(
+    ed: &[u8],
+    oh: usize,
+    ow: usize,
+    geom: &super::ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    keep: Option<&[bool]>,
+    pad: u8,
+    col: &mut [u8],
+) {
+    im2col_bwd(ed, oh, ow, geom, in_h, in_w, keep, pad, col);
+}
+
+/// Float twin of [`im2col_bwd_u8`]; padding positions are 0.0 and add an
+/// exact `w·0.0` to the GEMM sum.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_bwd_f32(
+    ed: &[f32],
+    oh: usize,
+    ow: usize,
+    geom: &super::ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    keep: Option<&[bool]>,
+    col: &mut [f32],
+) {
+    im2col_bwd(ed, oh, ow, geom, in_h, in_w, keep, 0.0, col);
+}
+
+/// Integer GEMM against a transposed B with per-row skipping:
+/// `out[i·n + j] = Σ_k (a[i·kd + k] − za)·(b[j·kd + k] − zb)`, with rows `i`
+/// where `keep[i]` is false left at zero (and their dot products never
+/// computed — this is the whole-GEMM-row skip the sparse controller's
+/// masks map onto).
+///
+/// Both operands are row-major over the shared reduction dimension, so each
+/// output element is one contiguous dot product (the weight-gradient
+/// lowering: A = error `[Cout, Oh·Ow]`, B = forward im2col `[Cin·Kh·Kw,
+/// Oh·Ow]`). Accumulation is i32 and exact.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_abt_u8_i32(
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    m: usize,
+    n: usize,
+    kd: usize,
+    keep: Option<&[bool]>,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * kd, "A shape mismatch");
+    assert_eq!(b.len(), n * kd, "B shape mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), m, "keep mask length mismatch");
+    }
+    out.fill(0);
+    for i in 0..m {
+        if let Some(k) = keep {
+            if !k[i] {
+                continue;
+            }
+        }
+        let arow = &a[i * kd..(i + 1) * kd];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * kd..(j + 1) * kd];
+            let mut acc = 0i32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += (av as i32 - za) * (bv as i32 - zb);
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Float twin of [`gemm_abt_u8_i32`]: `out[i·n + j] = Σ_k a[i·kd + k] ·
+/// b[j·kd + k]`, skipped rows left at zero. Each dot product accumulates in
+/// ascending-`k` order — for the weight-gradient lowering that is the
+/// scalar float kernel's `(oy, ox)` order, so results are value-identical.
+pub fn gemm_abt_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    kd: usize,
+    keep: Option<&[bool]>,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * kd, "A shape mismatch");
+    assert_eq!(b.len(), n * kd, "B shape mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), m, "keep mask length mismatch");
+    }
+    out.fill(0.0);
+    for i in 0..m {
+        if let Some(k) = keep {
+            if !k[i] {
+                continue;
+            }
+        }
+        let arow = &a[i * kd..(i + 1) * kd];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * kd..(j + 1) * kd];
+            let mut acc = 0f32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+}
+
 /// Tiled integer GEMM with per-operand zero points:
 /// `out[m·n] = row_init[m] + Σ_k (a[m·k] − za)·(b[k·n] − zb)`.
 ///
@@ -346,6 +605,156 @@ mod tests {
         // 4 in-bounds taps -> 16 of the 36 col entries are real values
         let in_bounds = col.iter().filter(|&&v| v == 10).count();
         assert_eq!(in_bounds, 16);
+    }
+
+    #[test]
+    fn abt_u8_matches_naive_dots_and_skips_rows() {
+        let mut rng = Pcg32::seeded(11);
+        let (m, n, kd) = (5, 7, 37);
+        let a: Vec<u8> = (0..m * kd).map(|_| rng.below(256) as u8).collect();
+        let b: Vec<u8> = (0..n * kd).map(|_| rng.below(256) as u8).collect();
+        let (za, zb) = (rng.below(256) as i32, rng.below(256) as i32);
+        let keep: Vec<bool> = (0..m).map(|i| i % 2 == 0).collect();
+        let mut out = vec![-1i32; m * n];
+        gemm_abt_u8_i32(&a, za, &b, zb, m, n, kd, Some(&keep), &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = if keep[i] {
+                    (0..kd).map(|k| (a[i * kd + k] as i32 - za) * (b[j * kd + k] as i32 - zb)).sum()
+                } else {
+                    0
+                };
+                assert_eq!(out[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn abt_f32_matches_ascending_k_dots() {
+        let mut rng = Pcg32::seeded(12);
+        let (m, n, kd) = (3, 4, 41);
+        let mut a = vec![0f32; m * kd];
+        let mut b = vec![0f32; n * kd];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let mut out = vec![9f32; m * n];
+        gemm_abt_f32(&a, &b, m, n, kd, None, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for k in 0..kd {
+                    acc += a[i * kd + k] * b[j * kd + k];
+                }
+                assert_eq!(out[i * n + j], acc, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_wt_flip_transposes_and_flips() {
+        // Cout=2, Cin=1, 2x2 kernel with recognizable values co*100 + ky*10 + kx.
+        let g = ConvGeom {
+            cin: 1,
+            cout: 2,
+            kh: 2,
+            kw: 2,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
+        let w: Vec<u8> = vec![0, 1, 10, 11, 100, 101, 110, 111];
+        let mut dst = vec![0u8; 8];
+        let kc = pack_wt_flip_u8(&w, &g, None, &mut dst);
+        assert_eq!(kc, 2);
+        // row ci=0: channels ascending, each kernel flipped in both axes
+        assert_eq!(dst, vec![11, 10, 1, 0, 111, 110, 101, 100]);
+
+        // masking drops channel 0 entirely
+        let mut dst2 = vec![0u8; 4];
+        let kc2 = pack_wt_flip_u8(&w, &g, Some(&[false, true]), &mut dst2);
+        assert_eq!(kc2, 1);
+        assert_eq!(dst2, vec![111, 110, 101, 100]);
+    }
+
+    /// The full backward-input lowering (pack_wt_flip × im2col_bwd through
+    /// the plain GEMM) must reproduce the naive transposed-conv scatter in
+    /// exact integer arithmetic, across strides and paddings.
+    #[test]
+    fn prop_bwd_lowering_matches_naive_scatter() {
+        Prop::new(32).check(
+            |r: &mut Pcg32| {
+                let cin = 1 + r.below(4) as usize;
+                let cout = 1 + r.below(4) as usize;
+                let k = 1 + r.below(3) as usize;
+                let stride = 1 + r.below(2) as usize;
+                let pad = r.below(2) as usize;
+                let h = k.max(2) + r.below(6) as usize;
+                (cin, cout, k, stride, pad, h, r.next_u64())
+            },
+            |&(cin, cout, k, stride, pad, h, s)| {
+                shrink_dim(h, k).into_iter().map(|h2| (cin, cout, k, stride, pad, h2, s)).collect()
+            },
+            |&(cin, cout, k, stride, pad, h, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let g = ConvGeom {
+                    cin,
+                    cout,
+                    kh: k,
+                    kw: k,
+                    stride,
+                    pad_h: pad,
+                    pad_w: pad,
+                    depthwise: false,
+                };
+                let (oh, ow) = g.out_hw(h, h);
+                let ed: Vec<u8> = (0..cout * oh * ow).map(|_| rng.below(256) as u8).collect();
+                let wd: Vec<u8> = (0..cout * cin * k * k).map(|_| rng.below(256) as u8).collect();
+                let (ze, zw) = (rng.below(256) as i32, rng.below(256) as i32);
+
+                // naive scatter (the scalar backward kernel's loop order)
+                let mut want = vec![0i32; cin * h * h];
+                for co in 0..cout {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let ev = ed[(co * oh + oy) * ow + ox] as i32 - ze;
+                            for ci in 0..cin {
+                                for ky in 0..k {
+                                    let iy = (oy * stride + ky) as isize - pad as isize;
+                                    if iy < 0 || iy >= h as isize {
+                                        continue;
+                                    }
+                                    for kx in 0..k {
+                                        let ix = (ox * stride + kx) as isize - pad as isize;
+                                        if ix < 0 || ix >= h as isize {
+                                            continue;
+                                        }
+                                        let wv =
+                                            wd[((co * cin + ci) * k + ky) * k + kx] as i32 - zw;
+                                        want[(ci * h + iy as usize) * h + ix as usize] += ev * wv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+
+                let krow = cout * k * k;
+                let n = h * h;
+                let mut wt = vec![0u8; cin * krow];
+                pack_wt_flip_u8(&wd, &g, None, &mut wt);
+                let mut col = vec![0u8; krow * n];
+                let ze_byte = ze.clamp(0, 255) as u8;
+                im2col_bwd_u8(&ed, oh, ow, &g, h, h, None, ze_byte, &mut col);
+                let init = vec![0i32; cin];
+                let mut got = vec![0i32; cin * n];
+                gemm_u8_i32(&wt, zw, &col, ze, &init, cin, krow, n, &mut got);
+                if got != want {
+                    return Err("backward lowering differs from naive scatter".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

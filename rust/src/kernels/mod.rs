@@ -56,6 +56,13 @@ impl OpCounter {
     }
 }
 
+/// Number of kept structures under an optional §III-B sparse-update mask
+/// (`None` means everything is kept). Shared by the executor's telemetry
+/// and the GEMM backward kernels' op accounting.
+pub fn kept_count(keep: Option<&[bool]>, total: usize) -> usize {
+    keep.map_or(total, |k| k.iter().filter(|&&b| b).count())
+}
+
 /// Geometry of a 2-D convolution (shared by fwd and both bwd kernels).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ConvGeom {
@@ -94,6 +101,14 @@ impl ConvGeom {
         ((eh - self.kh) / self.stride + 1, (ew - self.kw) / self.stride + 1)
     }
 
+    /// Pointwise geometry (1×1 kernel, stride 1, no padding): the im2col
+    /// packing is the identity, so the GEMM engine's fast paths skip it.
+    /// Pure geometry — callers that need a dense conv check `depthwise`
+    /// separately.
+    pub fn is_pointwise(&self) -> bool {
+        self.kh == 1 && self.kw == 1 && self.stride == 1 && self.pad_h == 0 && self.pad_w == 0
+    }
+
     /// MACs of one forward pass over an `(h, w)` input.
     pub fn fwd_macs(&self, h: usize, w: usize) -> u64 {
         let (oh, ow) = self.out_hw(h, w);
@@ -121,7 +136,16 @@ mod tests {
 
     #[test]
     fn conv_geom_shapes() {
-        let g = ConvGeom { cin: 3, cout: 8, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 3,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
         assert_eq!(g.out_hw(32, 32), (16, 16));
         assert_eq!(g.weights(), 8 * 3 * 9);
         assert_eq!(g.fwd_macs(32, 32), (8 * 16 * 16 * 27) as u64);
@@ -129,7 +153,16 @@ mod tests {
 
     #[test]
     fn depthwise_geom() {
-        let g = ConvGeom { cin: 8, cout: 8, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: true };
+        let g = ConvGeom {
+            cin: 8,
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: true,
+        };
         assert_eq!(g.weights(), 8 * 9);
         assert_eq!(g.fwd_macs(10, 10), (8 * 10 * 10 * 9) as u64);
     }
@@ -139,20 +172,47 @@ mod tests {
     #[test]
     #[should_panic(expected = "exceeds padded input")]
     fn oversized_kernel_panics_descriptively() {
-        let g = ConvGeom { cin: 1, cout: 1, kh: 5, kw: 3, stride: 1, pad_h: 0, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 1,
+            cout: 1,
+            kh: 5,
+            kw: 3,
+            stride: 1,
+            pad_h: 0,
+            pad_w: 1,
+            depthwise: false,
+        };
         g.out_hw(2, 2);
     }
 
     #[test]
     #[should_panic(expected = "stride must be non-zero")]
     fn zero_stride_panics_descriptively() {
-        let g = ConvGeom { cin: 1, cout: 1, kh: 1, kw: 1, stride: 0, pad_h: 0, pad_w: 0, depthwise: false };
+        let g = ConvGeom {
+            cin: 1,
+            cout: 1,
+            kh: 1,
+            kw: 1,
+            stride: 0,
+            pad_h: 0,
+            pad_w: 0,
+            depthwise: false,
+        };
         g.out_hw(4, 4);
     }
 
     #[test]
     fn boundary_kernel_equal_to_padded_input_is_valid() {
-        let g = ConvGeom { cin: 1, cout: 1, kh: 4, kw: 4, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 1,
+            cout: 1,
+            kh: 4,
+            kw: 4,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
         assert_eq!(g.out_hw(2, 2), (1, 1));
     }
 

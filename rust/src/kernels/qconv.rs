@@ -15,7 +15,7 @@
 //! not computed and they contribute nothing to the backpropagated error —
 //! which is exactly the computational-tree pruning the paper describes.
 
-use crate::kernels::{gemm, ConvGeom, OpCounter};
+use crate::kernels::{gemm, kept_count, ConvGeom, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
 use crate::tensor::{idx3, idx4, TensorF32};
@@ -51,13 +51,7 @@ pub fn qconv2d_fwd(
     // dominant op of the MobileNet-style stacks (§Perf): a plain matmul
     // with the spatial dim innermost so the compiler can vectorize the
     // per-position MAC over a contiguous row.
-    if geom.kh == 1
-        && geom.kw == 1
-        && geom.stride == 1
-        && geom.pad_h == 0
-        && geom.pad_w == 0
-        && !geom.depthwise
-    {
+    if geom.is_pointwise() && !geom.depthwise {
         let hw = h * wd;
         let mut acc = vec![0i32; hw];
         for co in 0..geom.cout {
@@ -157,11 +151,7 @@ pub fn qconv2d_fwd_gemm(
     let zw = w.qp.zero_point;
     let mult = requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale);
 
-    let pointwise = geom.kh == 1
-        && geom.kw == 1
-        && geom.stride == 1
-        && geom.pad_h == 0
-        && geom.pad_w == 0;
+    let pointwise = geom.is_pointwise();
 
     let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
     {
@@ -216,13 +206,7 @@ pub fn qconv2d_bwd_input(
 
     // Pointwise fast path (see qconv2d_fwd): per (co, ci) the weight tap is
     // constant, so the position loop is a vectorizable AXPY.
-    if geom.kh == 1
-        && geom.kw == 1
-        && geom.stride == 1
-        && geom.pad_h == 0
-        && geom.pad_w == 0
-        && !geom.depthwise
-    {
+    if geom.is_pointwise() && !geom.depthwise {
         let hw = in_h * in_w;
         for co in 0..geom.cout {
             if let Some(k) = keep {
@@ -303,10 +287,87 @@ pub fn qconv2d_bwd_input(
     out
 }
 
+/// GEMM-routed error backprop, **bit-exact** with [`qconv2d_bwd_input`]:
+/// the transposed conv is lowered to `dX[Cin, H·W] = wt_flip × colE` where
+/// `wt_flip` is the flipped-transposed weight packing and `colE` the
+/// backward im2col of the error (see [`crate::kernels::gemm`]); i32
+/// accumulation makes the result independent of the lowering.
+///
+/// `keep` masks **whole GEMM rows**: masked output channels are dropped
+/// from both packings, so the reduction depth shrinks from `Cout·Kh·Kw` to
+/// `kept·Kh·Kw` — the Eq. 9 controller's kept ratio becomes a proportional
+/// FLOP reduction rather than a per-element filter. Non-depthwise only;
+/// op accounting is identical to the scalar kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm(
+    e: &QTensor,
+    w: &QTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale);
+    let kc = kept_count(keep, geom.cout);
+    let krow = kc * geom.kh * geom.kw;
+    let n = in_h * in_w;
+    // Dense pointwise shortcut: the error's `[Cout, H·W]` layout already is
+    // the backward column matrix (flip and dilation are trivial at 1×1/s1).
+    let pointwise_dense = geom.is_pointwise() && keep.is_none();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (wt_buf, col_buf, acc, init) = scratch.qconv_bwd_bufs(
+            geom.cin * krow,
+            if pointwise_dense { 0 } else { krow * n },
+            geom.cin * n,
+            geom.cin,
+        );
+        gemm::pack_wt_flip_u8(w.values.data(), geom, keep, wt_buf);
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                keep,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32(wt_buf, zw, col, ze, init, geom.cin, krow, n, acc);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, false);
+        }
+    }
+
+    ops.int_macs += kc as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + w.len() + geom.cin * n) as u64;
+    out
+}
+
 /// Weight gradient (Eq. 2) in float: `∇W = (s_e · s_x) · Σ (e−z_e)(x−z_x)`.
 /// Per the paper, the gradient is *not* requantized — the SGD step (Eq. 5)
 /// consumes it in float space. Returns `(grad_w [Cout,Cf,Kh,Kw], grad_b
 /// [Cout])`.
+///
+/// The reduction runs in i32 (exact: `|e·x| ≤ 255²·Oh·Ow` stays far below
+/// 2³¹ for every model here) and is scaled to float once at the end, so the
+/// result is independent of summation order — the property the GEMM twin
+/// ([`qconv2d_bwd_weight_gemm`]) relies on for bit-exactness.
 pub fn qconv2d_bwd_weight(
     e: &QTensor,
     x: &QTensor,
@@ -332,13 +393,7 @@ pub fn qconv2d_bwd_weight(
 
     // Pointwise fast path: ∇W[co][ci] is a single dot product over the
     // spatial positions — i32-exact, vectorizable.
-    if geom.kh == 1
-        && geom.kw == 1
-        && geom.stride == 1
-        && geom.pad_h == 0
-        && geom.pad_w == 0
-        && !geom.depthwise
-    {
+    if geom.is_pointwise() && !geom.depthwise {
         let hw = oh * ow;
         for co in 0..geom.cout {
             if let Some(k) = keep {
@@ -368,6 +423,7 @@ pub fn qconv2d_bwd_weight(
         return (gw, gb);
     }
 
+    let mut acc = vec![0i32; gwd.len()];
     for co in 0..geom.cout {
         if let Some(k) = keep {
             if !k[co] {
@@ -396,8 +452,7 @@ pub fn qconv2d_bwd_weight(
                                 continue;
                             }
                             let xv = xd[idx3(ci, iy as usize, ix as usize, h, wd)] as i32 - zx;
-                            gwd[idx4(co, cf, ky, kx, cin_per_filter, geom.kh, geom.kw)] +=
-                                (ev * xv) as f32;
+                            acc[idx4(co, cf, ky, kx, cin_per_filter, geom.kh, geom.kw)] += ev * xv;
                         }
                     }
                 }
@@ -405,13 +460,81 @@ pub fn qconv2d_bwd_weight(
         }
         gbd[co] = bias_acc as f32 * e.qp.scale;
     }
-    // Scale i32-accumulated weight grads to float once at the end.
-    for g in gwd.iter_mut() {
-        *g *= s;
+    // Scale the i32-accumulated weight grads to float once at the end.
+    for (g, &a) in gwd.iter_mut().zip(acc.iter()) {
+        *g = a as f32 * s;
     }
 
     let per_co = (oh * ow * cin_per_filter * geom.kh * geom.kw) as u64;
     ops.int_macs += kept_channels * per_co;
+    ops.float_ops += gw.len() as u64;
+    ops.bytes += (e.len() + x.len() + gw.len() * 4) as u64;
+    (gw, gb)
+}
+
+/// GEMM-routed weight gradient, **bit-exact** with [`qconv2d_bwd_weight`]:
+/// `∇W[Cout, Cin·Kh·Kw] = E[Cout, Oh·Ow] × colᵀ` where `col` is the same
+/// forward im2col packing of the layer input the forward GEMM uses — both
+/// operands are row-major over the spatial reduction, so each gradient
+/// element is one contiguous dot product ([`gemm::gemm_abt_u8_i32`]).
+///
+/// `keep` skips masked output channels as whole GEMM rows (their `∇W` rows
+/// and `∇b` entries stay exactly zero, as with the scalar kernel). The i32
+/// reduction matches the scalar kernel's exact accumulation. Non-depthwise
+/// only; op accounting is identical to the scalar kernel.
+pub fn qconv2d_bwd_weight_gemm(
+    e: &QTensor,
+    x: &QTensor,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zx = x.qp.zero_point;
+    let s = e.qp.scale * x.qp.scale;
+    let n = oh * ow;
+    let kdim = geom.cin * geom.kh * geom.kw;
+    let pointwise = geom.is_pointwise();
+
+    let mut gw = TensorF32::zeros(&[geom.cout, geom.cin, geom.kh, geom.kw]);
+    let mut gb = TensorF32::zeros(&[geom.cout]);
+    {
+        let (col_buf, acc) =
+            scratch.qconv_bufs(if pointwise { 0 } else { kdim * n }, geom.cout * kdim);
+        let col: &[u8] = if pointwise {
+            x.values.data()
+        } else {
+            gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
+            col_buf
+        };
+        gemm::gemm_abt_u8_i32(e.values.data(), ze, col, zx, geom.cout, kdim, n, keep, acc);
+        for (g, &a) in gw.data_mut().iter_mut().zip(acc.iter()) {
+            *g = a as f32 * s;
+        }
+    }
+
+    let ed = e.values.data();
+    let gbd = gb.data_mut();
+    let mut kept_channels = 0u64;
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        kept_channels += 1;
+        let mut bias_acc: i32 = 0;
+        for &evq in &ed[co * n..(co + 1) * n] {
+            bias_acc += evq as i32 - ze;
+        }
+        gbd[co] = bias_acc as f32 * e.qp.scale;
+    }
+
+    ops.int_macs += kept_channels * (n * geom.cin * geom.kh * geom.kw) as u64;
     ops.float_ops += gw.len() as u64;
     ops.bytes += (e.len() + x.len() + gw.len() * 4) as u64;
     (gw, gb)
@@ -473,7 +596,8 @@ mod tests {
                             }
                         }
                     }
-                    out.data_mut()[idx3(co, oy, ox, oh, ow)] = if relu { acc.max(0.0) } else { acc };
+                    out.data_mut()[idx3(co, oy, ox, oh, ow)] =
+                        if relu { acc.max(0.0) } else { acc };
                 }
             }
         }
@@ -501,7 +625,16 @@ mod tests {
     #[test]
     fn fwd_tracks_float_reference() {
         let mut rng = Pcg32::seeded(1);
-        let g = ConvGeom { cin: 3, cout: 4, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 3,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
         let (x, wt, b) = rand_setup(&mut rng, &g, 8, 8);
         let yref = ref_conv_f32(&x, &wt, &b, &g, true);
 
@@ -526,7 +659,16 @@ mod tests {
     #[test]
     fn depthwise_fwd_tracks_reference() {
         let mut rng = Pcg32::seeded(2);
-        let g = ConvGeom { cin: 4, cout: 4, kh: 3, kw: 3, stride: 2, pad_h: 1, pad_w: 1, depthwise: true };
+        let g = ConvGeom {
+            cin: 4,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: true,
+        };
         let (x, wt, b) = rand_setup(&mut rng, &g, 9, 9);
         let yref = ref_conv_f32(&x, &wt, &b, &g, false);
         let xq = QTensor::quantize(&x);
@@ -544,7 +686,16 @@ mod tests {
     #[test]
     fn bwd_input_tracks_float_reference() {
         let mut rng = Pcg32::seeded(3);
-        let g = ConvGeom { cin: 3, cout: 5, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 3,
+            cout: 5,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
         let (h, w) = (6, 6);
         let (oh, ow) = g.out_hw(h, w);
         let mut e = TensorF32::zeros(&[g.cout, oh, ow]);
@@ -592,7 +743,16 @@ mod tests {
     #[test]
     fn bwd_weight_tracks_float_reference() {
         let mut rng = Pcg32::seeded(4);
-        let g = ConvGeom { cin: 2, cout: 3, kh: 3, kw: 3, stride: 1, pad_h: 0, pad_w: 0, depthwise: false };
+        let g = ConvGeom {
+            cin: 2,
+            cout: 3,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 0,
+            pad_w: 0,
+            depthwise: false,
+        };
         let (h, w) = (6, 6);
         let (oh, ow) = g.out_hw(h, w);
         let mut x = TensorF32::zeros(&[g.cin, h, w]);
@@ -640,7 +800,16 @@ mod tests {
     #[test]
     fn sparse_mask_skips_channels_exactly() {
         let mut rng = Pcg32::seeded(5);
-        let g = ConvGeom { cin: 3, cout: 6, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+        let g = ConvGeom {
+            cin: 3,
+            cout: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: false,
+        };
         let (h, w) = (5, 5);
         let (oh, ow) = g.out_hw(h, w);
         let mut e = TensorF32::zeros(&[g.cout, oh, ow]);
@@ -757,6 +926,91 @@ mod tests {
         );
     }
 
+    /// Property: both GEMM-routed backward kernels are bit-exact with the
+    /// scalar references across random geometries (kernel size, stride,
+    /// padding, channel counts) and random sparse masks, with identical op
+    /// accounting.
+    #[test]
+    fn prop_gemm_bwd_bit_exact_with_scalar() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| {
+                let cin = 1 + r.below(5) as usize;
+                let cout = 1 + r.below(6) as usize;
+                let k = 1 + 2 * r.below(2) as usize; // 1 or 3
+                let stride = 1 + r.below(2) as usize;
+                let pad = r.below(2) as usize;
+                let h = k.max(2) + r.below(8) as usize;
+                (cin, cout, k, stride, pad, h, r.next_u64())
+            },
+            |&(cin, cout, k, stride, pad, h, s)| {
+                shrink_dim(h, k).into_iter().map(|h2| (cin, cout, k, stride, pad, h2, s)).collect()
+            },
+            |&(cin, cout, k, stride, pad, h, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let g = ConvGeom {
+                    cin,
+                    cout,
+                    kh: k,
+                    kw: k,
+                    stride,
+                    pad_h: pad,
+                    pad_w: pad,
+                    depthwise: false,
+                };
+                let (oh, ow) = g.out_hw(h, h);
+                let mut e = TensorF32::zeros(&[cout, oh, ow]);
+                rng.fill_normal(e.data_mut(), 1.0);
+                let (x, wt, _) = rand_setup(&mut rng, &g, h, h);
+                let eq = QTensor::quantize(&e);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&wt);
+                // one of: dense, random mask, all-masked
+                let keep: Option<Vec<bool>> = match seed % 3 {
+                    0 => None,
+                    1 => Some((0..cout).map(|_| rng.below(2) == 1).collect()),
+                    _ => Some(vec![false; cout]),
+                };
+                let keep = keep.as_deref();
+                let mut scratch = crate::memplan::Scratch::new();
+
+                let mut ops_s = OpCounter::new();
+                let mut ops_g = OpCounter::new();
+                let (gws, gbs) = qconv2d_bwd_weight(&eq, &xq, &g, keep, &mut ops_s);
+                let (gwg, gbg) =
+                    qconv2d_bwd_weight_gemm(&eq, &xq, &g, keep, &mut scratch, &mut ops_g);
+                if gws.data() != gwg.data() || gbs.data() != gbg.data() {
+                    return Err("GEMM weight gradient differs from scalar".into());
+                }
+                if ops_s != ops_g {
+                    return Err("bwd_weight op accounting differs".into());
+                }
+
+                let oqp = QParams::from_min_max(-2.0, 2.0);
+                let mut ops_s2 = OpCounter::new();
+                let mut ops_g2 = OpCounter::new();
+                let es = qconv2d_bwd_input(&eq, &wq, &g, h, h, oqp, keep, &mut ops_s2);
+                let eg = qconv2d_bwd_input_gemm(
+                    &eq,
+                    &wq,
+                    &g,
+                    h,
+                    h,
+                    oqp,
+                    keep,
+                    &mut scratch,
+                    &mut ops_g2,
+                );
+                if es.values.data() != eg.values.data() {
+                    return Err("GEMM input gradient differs from scalar".into());
+                }
+                if ops_s2 != ops_g2 {
+                    return Err("bwd_input op accounting differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
     /// The GEMM path must also be bit-exact on the pointwise shortcut (no
     /// im2col copy) and reuse a shared scratch across different layers.
     #[test]
@@ -802,7 +1056,16 @@ mod tests {
             },
             |&(cin, cout, h, seed)| {
                 let mut rng = Pcg32::seeded(seed);
-                let g = ConvGeom { cin, cout, kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, depthwise: false };
+                let g = ConvGeom {
+                    cin,
+                    cout,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad_h: 1,
+                    pad_w: 1,
+                    depthwise: false,
+                };
                 let (x, wt, b) = rand_setup(&mut rng, &g, h, h);
                 let xq = QTensor::quantize(&x);
                 let wq = QTensor::quantize(&wt);

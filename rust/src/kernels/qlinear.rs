@@ -9,7 +9,8 @@
 //! The sparse-update "structures" of a linear layer are its output rows
 //! (paper §III-B: rows/columns); `keep` masks whole rows.
 
-use crate::kernels::{gemm, OpCounter};
+use crate::kernels::{gemm, kept_count, OpCounter};
+use crate::memplan::Scratch;
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
 use crate::tensor::TensorF32;
 
@@ -99,6 +100,49 @@ pub fn qlinear_bwd_input(
     out
 }
 
+/// GEMM-routed error backprop, **bit-exact** with [`qlinear_bwd_input`]:
+/// `e_in = eᵀ·W` expressed as a 1×`n_out`×`n_in` GEMM over the row-major
+/// weight matrix. Masked rows are written to the scratch copy of `e` at the
+/// error zero point, which the integer GEMM core skips as whole AXPY rows
+/// (`av == 0`), so the kept ratio is a proportional FLOP reduction.
+pub fn qlinear_bwd_input_gemm(
+    e: &QTensor,
+    w: &QTensor,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let n_out = e.len();
+    let n_in = w.shape()[1];
+    assert_eq!(w.shape()[0], n_out);
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale);
+    let kept = kept_count(keep, n_out) as u64;
+
+    let mut out = QTensor::zeros(&[n_in], out_qp);
+    {
+        let (_, ecopy, acc, init) = scratch.qconv_bwd_bufs(0, n_out, n_in, 1);
+        let zq = e.qp.qzero();
+        for (dst, (i, &src)) in ecopy.iter_mut().zip(e.values.data().iter().enumerate()) {
+            *dst = match keep {
+                Some(k) if !k[i] => zq,
+                _ => src,
+            };
+        }
+        gemm::gemm_u8_i32(ecopy, ze, w.values.data(), zw, init, 1, n_out, n_in, acc);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, false);
+        }
+    }
+
+    ops.int_macs += kept * n_in as u64;
+    ops.int_ops += n_in as u64;
+    ops.bytes += (n_out + n_out * n_in + n_in) as u64;
+    out
+}
+
 /// Weight gradient in float: `∇W[o][i] = s_e·s_x · (e[o]−z_e)(x[i]−z_x)`,
 /// bias gradient `∇b[o] = s_e · (e[o]−z_e)`. Not requantized (Eq. 5 runs in
 /// float). `keep` masks output rows.
@@ -135,6 +179,53 @@ pub fn qlinear_bwd_weight(
         for (gv, xv) in row.iter_mut().zip(xd.iter()) {
             *gv = (ev * (*xv as i32 - zx)) as f32 * s;
         }
+    }
+
+    ops.int_macs += kept * n_in as u64;
+    ops.float_ops += kept * n_in as u64;
+    ops.bytes += (n_out + n_in + n_out * n_in * 4) as u64;
+    (gw, gb)
+}
+
+/// GEMM-routed weight gradient, **bit-exact** with [`qlinear_bwd_weight`]:
+/// the outer product `∇W = e·xᵀ` is a rank-1 A·Bᵀ GEMM
+/// ([`gemm::gemm_abt_u8_i32`] with reduction depth 1); `keep` skips masked
+/// rows as whole GEMM rows. Each element is the same single i32 product the
+/// scalar kernel computes, scaled to float once.
+pub fn qlinear_bwd_weight_gemm(
+    e: &QTensor,
+    x: &QTensor,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    let n_out = e.len();
+    let n_in = x.len();
+    let ze = e.qp.zero_point;
+    let zx = x.qp.zero_point;
+    let s = e.qp.scale * x.qp.scale;
+
+    let mut gw = TensorF32::zeros(&[n_out, n_in]);
+    let mut gb = TensorF32::zeros(&[n_out]);
+    {
+        let (_, _, acc, _) = scratch.qconv_bwd_bufs(0, 0, n_out * n_in, 0);
+        gemm::gemm_abt_u8_i32(e.values.data(), ze, x.values.data(), zx, n_out, n_in, 1, keep, acc);
+        for (g, &a) in gw.data_mut().iter_mut().zip(acc.iter()) {
+            *g = a as f32 * s;
+        }
+    }
+
+    let ed = e.values.data();
+    let gbd = gb.data_mut();
+    let mut kept = 0u64;
+    for o in 0..n_out {
+        if let Some(k) = keep {
+            if !k[o] {
+                continue;
+            }
+        }
+        kept += 1;
+        gbd[o] = (ed[o] as i32 - ze) as f32 * e.qp.scale;
     }
 
     ops.int_macs += kept * n_in as u64;
@@ -240,6 +331,66 @@ mod tests {
             assert_eq!(all_zero, !keep[o]);
         }
         assert_eq!(ops.int_macs, 3 * n_in as u64);
+    }
+
+    /// Property: both GEMM-routed backward kernels are bit-exact with the
+    /// scalar references across random sizes and masks, with identical op
+    /// accounting.
+    #[test]
+    fn prop_gemm_bwd_bit_exact_with_scalar() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| (1 + r.below(48) as usize, 1 + r.below(24) as usize, r.next_u64()),
+            |&(i, o, s)| {
+                let mut v = Vec::new();
+                for i2 in shrink_dim(i, 1) {
+                    v.push((i2, o, s));
+                }
+                for o2 in shrink_dim(o, 1) {
+                    v.push((i, o2, s));
+                }
+                v
+            },
+            |&(n_in, n_out, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let (x, w, _) = rand_case(&mut rng, n_in, n_out);
+                let mut e = TensorF32::zeros(&[n_out]);
+                rng.fill_normal(e.data_mut(), 1.0);
+                let eq = QTensor::quantize(&e);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&w);
+                let keep: Option<Vec<bool>> = match seed % 3 {
+                    0 => None,
+                    1 => Some((0..n_out).map(|_| rng.below(2) == 1).collect()),
+                    _ => Some(vec![false; n_out]),
+                };
+                let keep = keep.as_deref();
+                let mut scratch = crate::memplan::Scratch::new();
+
+                let mut ops_s = OpCounter::new();
+                let mut ops_g = OpCounter::new();
+                let (gws, gbs) = qlinear_bwd_weight(&eq, &xq, keep, &mut ops_s);
+                let (gwg, gbg) = qlinear_bwd_weight_gemm(&eq, &xq, keep, &mut scratch, &mut ops_g);
+                if gws.data() != gwg.data() || gbs.data() != gbg.data() {
+                    return Err("GEMM weight gradient differs from scalar".into());
+                }
+                if ops_s != ops_g {
+                    return Err("bwd_weight op accounting differs".into());
+                }
+
+                let oqp = QParams::from_min_max(-2.0, 2.0);
+                let mut ops_s2 = OpCounter::new();
+                let mut ops_g2 = OpCounter::new();
+                let es = qlinear_bwd_input(&eq, &wq, oqp, keep, &mut ops_s2);
+                let eg = qlinear_bwd_input_gemm(&eq, &wq, oqp, keep, &mut scratch, &mut ops_g2);
+                if es.values.data() != eg.values.data() {
+                    return Err("GEMM input gradient differs from scalar".into());
+                }
+                if ops_s2 != ops_g2 {
+                    return Err("bwd_input op accounting differs".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

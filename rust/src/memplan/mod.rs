@@ -38,6 +38,13 @@ pub struct Scratch {
     col_u8: Vec<u8>,
     col_f32: Vec<f32>,
     acc_i32: Vec<i32>,
+    /// Flipped-transposed weight packing for the backward-input GEMM.
+    wt_u8: Vec<u8>,
+    wt_f32: Vec<f32>,
+    /// Zero-filled `row_init` vectors for backward GEMMs (read-only; kept
+    /// permanently zeroed so borrowing them costs nothing per call).
+    zeros_i32: Vec<i32>,
+    zeros_f32: Vec<f32>,
 }
 
 impl Scratch {
@@ -46,21 +53,48 @@ impl Scratch {
         Scratch::default()
     }
 
-    /// Arena pre-sized for the largest non-depthwise conv of `def` (the
-    /// only layers the GEMM path serves), so a full forward pass allocates
-    /// exactly once, at model-deployment time.
+    /// Arena pre-sized for the largest non-depthwise conv and linear
+    /// layers of `def`, covering both the forward im2col buffers and the
+    /// backward packing/accumulator buffers of the **uint8 path** (the
+    /// paper's main configuration), so a uint8 training step allocates
+    /// exactly once, at model-deployment time. The f32 twins follow the
+    /// convention below: they grow exactly once, on a float32/mixed
+    /// model's first pass, and stay empty on uint8 models.
     pub fn for_model(def: &ModelDef) -> Scratch {
         let mut s = Scratch::new();
         let shapes = def.shapes();
+        let mut prev = def.input_shape.clone();
         for (i, l) in def.layers.iter().enumerate() {
-            if let LayerKind::Conv { geom, .. } = &l.kind {
-                if geom.depthwise {
-                    continue;
+            match &l.kind {
+                LayerKind::Conv { geom, .. } if !geom.depthwise => {
+                    let n = shapes[i][1] * shapes[i][2]; // Oh·Ow
+                    let kdim = geom.cin * geom.kh * geom.kw;
+                    s.reserve(kdim * n, geom.cout * n);
+                    // backward: dW accumulator [Cout, kdim], dX packing
+                    // [Cin, Cout·Kh·Kw] × col[Cout·Kh·Kw, H·W] + acc/init
+                    let hw_in = prev[1] * prev[2];
+                    let krow = geom.cout * geom.kh * geom.kw;
+                    s.reserve(krow * hw_in, geom.cout * kdim);
+                    s.reserve(0, geom.cin * hw_in);
+                    if s.wt_u8.len() < geom.cin * krow {
+                        s.wt_u8.resize(geom.cin * krow, 0);
+                    }
+                    if s.zeros_i32.len() < geom.cin {
+                        s.zeros_i32.resize(geom.cin, 0);
+                    }
                 }
-                let n = shapes[i][1] * shapes[i][2]; // Oh·Ow
-                let kdim = geom.cin * geom.kh * geom.kw;
-                s.reserve(kdim * n, geom.cout * n);
+                LayerKind::Linear { n_in, n_out, .. } => {
+                    // backward: the rank-1 dW GEMM accumulates [Out, In] in
+                    // i32; the input-gradient GEMM copies the masked error
+                    // (Out u8) and needs a 1-element zero row_init.
+                    s.reserve(*n_out, n_out * n_in);
+                    if s.zeros_i32.is_empty() {
+                        s.zeros_i32.push(0);
+                    }
+                }
+                _ => {}
             }
+            prev = shapes[i].clone();
         }
         s
     }
@@ -98,10 +132,66 @@ impl Scratch {
         &mut self.col_f32[..len]
     }
 
+    /// Borrow the buffers of one quantized backward GEMM call: the flipped
+    /// weight packing, the backward column matrix, the i32 accumulator and
+    /// a zeroed `row_init` slice. Contents of the first three are
+    /// unspecified — callers fully overwrite them; the init slice is
+    /// permanently zero.
+    pub fn qconv_bwd_bufs(
+        &mut self,
+        wt_len: usize,
+        col_len: usize,
+        acc_len: usize,
+        init_len: usize,
+    ) -> (&mut [u8], &mut [u8], &mut [i32], &[i32]) {
+        if self.wt_u8.len() < wt_len {
+            self.wt_u8.resize(wt_len, 0);
+        }
+        if self.col_u8.len() < col_len {
+            self.col_u8.resize(col_len, 0);
+        }
+        if self.acc_i32.len() < acc_len {
+            self.acc_i32.resize(acc_len, 0);
+        }
+        if self.zeros_i32.len() < init_len {
+            self.zeros_i32.resize(init_len, 0);
+        }
+        (
+            &mut self.wt_u8[..wt_len],
+            &mut self.col_u8[..col_len],
+            &mut self.acc_i32[..acc_len],
+            &self.zeros_i32[..init_len],
+        )
+    }
+
+    /// Float twin of [`Scratch::qconv_bwd_bufs`]: flipped weight packing,
+    /// backward column matrix and a zeroed f32 `row_init` slice (the f32
+    /// GEMM writes straight into the output tensor, so no accumulator).
+    pub fn fconv_bwd_bufs(
+        &mut self,
+        wt_len: usize,
+        col_len: usize,
+        init_len: usize,
+    ) -> (&mut [f32], &mut [f32], &[f32]) {
+        if self.wt_f32.len() < wt_len {
+            self.wt_f32.resize(wt_len, 0.0);
+        }
+        if self.col_f32.len() < col_len {
+            self.col_f32.resize(col_len, 0.0);
+        }
+        if self.zeros_f32.len() < init_len {
+            self.zeros_f32.resize(init_len, 0.0);
+        }
+        (&mut self.wt_f32[..wt_len], &mut self.col_f32[..col_len], &self.zeros_f32[..init_len])
+    }
+
     /// Currently reserved bytes across all buffers (diagnostics / memory
     /// accounting).
     pub fn reserved_bytes(&self) -> usize {
-        self.col_u8.len() + self.col_f32.len() * 4 + self.acc_i32.len() * 4
+        self.col_u8.len()
+            + self.wt_u8.len()
+            + (self.col_f32.len() + self.wt_f32.len()) * 4
+            + (self.acc_i32.len() + self.zeros_i32.len() + self.zeros_f32.len()) * 4
     }
 }
 
@@ -417,6 +507,28 @@ mod tests {
         let (col, acc) = s2.qconv_bufs(9, 16);
         assert_eq!(col.len(), 9);
         assert_eq!(acc.len(), 16);
+        assert_eq!(s2.reserved_bytes(), before);
+    }
+
+    #[test]
+    fn scratch_backward_bufs_grow_and_init_stays_zero() {
+        let mut s = Scratch::new();
+        {
+            let (wt, col, acc, init) = s.qconv_bwd_bufs(10, 20, 30, 4);
+            assert_eq!((wt.len(), col.len(), acc.len(), init.len()), (10, 20, 30, 4));
+            assert!(init.iter().all(|&v| v == 0));
+        }
+        {
+            let (wt, col, init) = s.fconv_bwd_bufs(5, 6, 3);
+            assert_eq!((wt.len(), col.len(), init.len()), (5, 6, 3));
+            assert!(init.iter().all(|&v| v == 0.0));
+        }
+        // for_model pre-reserves the backward buffers of the model's own
+        // convs: serving a smaller backward call must not grow the arena.
+        let m = models::mnist_cnn(&[1, 12, 12], 4);
+        let mut s2 = Scratch::for_model(&m);
+        let before = s2.reserved_bytes();
+        let _ = s2.qconv_bwd_bufs(4, 9, 16, 1);
         assert_eq!(s2.reserved_bytes(), before);
     }
 

@@ -126,10 +126,7 @@ mod pjrt_impl {
             let hlo: PathBuf = dir.join(format!("{name}.hlo.txt"));
             let man: PathBuf = dir.join(format!("{name}.json"));
             if !hlo.exists() {
-                bail!(
-                    "artifact {} not found — run `make artifacts` first",
-                    hlo.display()
-                );
+                bail!("artifact {} not found — run `make artifacts` first", hlo.display());
             }
             let manifest = Manifest::load(&man)?;
             let proto = xla::HloModuleProto::from_text_file(
@@ -182,11 +179,7 @@ mod pjrt_impl {
     /// `NativeType` impl in the xla crate, so the untyped-bytes path is
     /// used.)
     pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<xla::Literal> {
-        Ok(xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::U8,
-            shape,
-            data,
-        )?)
+        Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, shape, data)?)
     }
 
     /// Build an f32 literal with the given logical shape.

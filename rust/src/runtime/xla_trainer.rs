@@ -128,7 +128,13 @@ impl XlaFqtTrainer {
     /// data distribution (replaces PTQ calibration for the input tensor;
     /// activation ranges start wide and adapt online from the saturation
     /// telemetry the artifact returns).
-    pub fn new(art: Artifact, input_range: (f32, f32), lr: f32, batch: usize, seed: u64) -> Result<Self> {
+    pub fn new(
+        art: Artifact,
+        input_range: (f32, f32),
+        lr: f32,
+        batch: usize,
+        seed: u64,
+    ) -> Result<Self> {
         crate::ensure!(
             art.manifest.inputs.len() == 11 && art.manifest.outputs.len() == 12,
             "unexpected artifact interface for {}",

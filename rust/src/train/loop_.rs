@@ -79,7 +79,8 @@ pub fn train(
     let mut epoch_stats = Vec::with_capacity(epochs);
     let mut samples_seen = 0u64;
     // One scratch arena for the whole run: the im2col/GEMM buffers are
-    // sized for the largest conv once and reused by every forward pass.
+    // sized for the largest conv once and reused by every forward and
+    // backward pass.
     let mut scratch = Scratch::for_model(&model.def);
 
     for _ in 0..epochs {
@@ -96,10 +97,12 @@ pub fn train(
                 correct += 1;
             }
             let bwd = match sparsity {
-                Sparsity::Dense => model.backward(&trace, err, &mut DenseUpdates, &mut bwd_ops),
+                Sparsity::Dense => {
+                    model.backward_in(&trace, err, &mut DenseUpdates, &mut scratch, &mut bwd_ops)
+                }
                 Sparsity::Dynamic(ctl) => {
                     ctl.begin_sample(loss);
-                    model.backward(&trace, err, ctl, &mut bwd_ops)
+                    model.backward_in(&trace, err, ctl, &mut scratch, &mut bwd_ops)
                 }
             };
             opt.accumulate(model, &bwd, &mut bwd_ops);
@@ -326,7 +329,12 @@ mod tests {
         let (mut m, tr, _) = toy();
         let (fwd, bwd) = measure_step_ops(&mut m, &tr, 4, &mut Sparsity::Dense);
         // full training: backward ≈ 2× forward (§I-A), must at least exceed
-        assert!(bwd.total_macs() > fwd.total_macs(), "bwd={} fwd={}", bwd.total_macs(), fwd.total_macs());
+        assert!(
+            bwd.total_macs() > fwd.total_macs(),
+            "bwd={} fwd={}",
+            bwd.total_macs(),
+            fwd.total_macs()
+        );
     }
 
     #[test]
@@ -346,6 +354,11 @@ mod tests {
         let split = Split { xs, ys: vec![0, 1, 2, 3] };
         let (fwd, bwd) = measure_step_ops(&mut m, &split, 4, &mut Sparsity::Dense);
         // transfer learning: fwd dominates (Fig. 4b property)
-        assert!(fwd.total_macs() > bwd.total_macs(), "fwd={} bwd={}", fwd.total_macs(), bwd.total_macs());
+        assert!(
+            fwd.total_macs() > bwd.total_macs(),
+            "fwd={} bwd={}",
+            fwd.total_macs(),
+            bwd.total_macs()
+        );
     }
 }

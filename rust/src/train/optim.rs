@@ -230,7 +230,13 @@ mod tests {
         (NativeModel::build(def, cfg, &fp, &calib), xs, ys)
     }
 
-    fn train(m: &mut NativeModel, opt: &mut dyn Optimizer, xs: &[TensorF32], ys: &[usize], epochs: usize) -> f32 {
+    fn train(
+        m: &mut NativeModel,
+        opt: &mut dyn Optimizer,
+        xs: &[TensorF32],
+        ys: &[usize],
+        epochs: usize,
+    ) -> f32 {
         let mut ops = OpCounter::new();
         for _ in 0..epochs {
             for (x, &y) in xs.iter().zip(ys) {

@@ -54,7 +54,8 @@ impl DynamicSparse {
     /// `|ε| = loss / max_loss ∈ [0, 1]`.
     pub fn begin_sample(&mut self, loss: f32) {
         self.max_loss = self.max_loss.max(loss.abs());
-        self.cur_eps = if self.max_loss > 0.0 { (loss.abs() / self.max_loss).clamp(0.0, 1.0) } else { 1.0 };
+        self.cur_eps =
+            if self.max_loss > 0.0 { (loss.abs() / self.max_loss).clamp(0.0, 1.0) } else { 1.0 };
     }
 
     /// The current per-layer update rate `min(λ_min + |ε|(λ_max−λ_min), 1)`.
@@ -146,6 +147,49 @@ mod tests {
     #[should_panic(expected = "λ_min")]
     fn rejects_bad_lambdas() {
         DynamicSparse::new(0.9, 0.1);
+    }
+
+    /// Edge case: a zero loss before any history leaves `max_loss` at 0 —
+    /// the controller must fall back to the conservative full rate (λ_max),
+    /// not divide by zero.
+    #[test]
+    fn zero_loss_without_history_uses_full_rate() {
+        let mut c = DynamicSparse::new(0.2, 0.8);
+        c.begin_sample(0.0);
+        assert!((c.rate() - 0.8).abs() < 1e-6);
+        assert!(c.rate().is_finite());
+    }
+
+    /// Edge case: a zero loss after history pins the rate at λ_min.
+    #[test]
+    fn zero_loss_after_history_uses_lambda_min() {
+        let mut c = DynamicSparse::new(0.2, 0.8);
+        c.begin_sample(3.0);
+        c.begin_sample(0.0);
+        assert!((c.rate() - 0.2).abs() < 1e-6);
+    }
+
+    /// Edge case: a loss above the running maximum becomes the new maximum
+    /// (|ε| = 1 exactly, never above) and rescales subsequent samples.
+    #[test]
+    fn loss_above_running_max_resets_normalizer() {
+        let mut c = DynamicSparse::new(0.1, 1.0);
+        c.begin_sample(2.0);
+        c.begin_sample(8.0); // above the max: |ε| must clamp to exactly 1
+        assert!((c.rate() - 1.0).abs() < 1e-6);
+        c.begin_sample(2.0); // now normalized by 8, not by 2
+        assert!((c.rate() - (0.1 + 0.25 * 0.9)).abs() < 1e-6);
+    }
+
+    /// Edge case: negative losses participate via |loss| (the controller
+    /// normalizes magnitudes, not signed values).
+    #[test]
+    fn negative_loss_uses_magnitude() {
+        let mut c = DynamicSparse::new(0.1, 1.0);
+        c.begin_sample(-4.0);
+        assert!((c.rate() - 1.0).abs() < 1e-6);
+        c.begin_sample(-1.0);
+        assert!((c.rate() - (0.1 + 0.25 * 0.9)).abs() < 1e-6);
     }
 
     #[test]

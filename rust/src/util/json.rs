@@ -271,7 +271,9 @@ impl<'a> Parser<'a> {
                         for _ in 0..4 {
                             let d = self.bump().ok_or_else(|| self.err("bad \\u"))?;
                             code = code * 16
-                                + (d as char).to_digit(16).ok_or_else(|| self.err("bad \\u digit"))?;
+                                + (d as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| self.err("bad \\u digit"))?;
                         }
                         s.push(char::from_u32(code).ok_or_else(|| self.err("non-BMP \\u"))?);
                     }

@@ -138,7 +138,9 @@ pub fn argmax(xs: &[f32]) -> usize {
 /// O(n log n); n is the number of *structures* per layer (small).
 pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(core::cmp::Ordering::Equal).then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(core::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
     idx.truncate(k.min(xs.len()));
     idx
 }

@@ -28,7 +28,16 @@ fn gemm_conv_bit_exact_across_model_geometries() {
         (3, 16, 3, 2, 1, 32),
     ];
     for &(cin, cout, k, stride, pad, h) in &cases {
-        let g = ConvGeom { cin, cout, kh: k, kw: k, stride, pad_h: pad, pad_w: pad, depthwise: false };
+        let g = ConvGeom {
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride,
+            pad_h: pad,
+            pad_w: pad,
+            depthwise: false,
+        };
         let mut x = TensorF32::zeros(&[cin, h, h]);
         rng.fill_normal(x.data_mut(), 1.0);
         let mut w = TensorF32::zeros(&[cout, cin, k, k]);
@@ -51,6 +60,77 @@ fn gemm_conv_bit_exact_across_model_geometries() {
         let yfs = fconv::fconv2d_fwd(&x, &w, &b, &g, true, &mut ops);
         let yfg = fconv::fconv2d_fwd_gemm(&x, &w, &b, &g, true, &mut scratch, &mut ops);
         assert_eq!(yfs.data(), yfg.data(), "float mismatch at {cin}->{cout} k{k} s{stride}");
+    }
+}
+
+/// GEMM-routed backward kernels (quantized and float, weight and input
+/// gradients) must be byte-identical to the scalar references across the
+/// same sweep of model geometries, dense and under sparse channel masks.
+#[test]
+fn gemm_backward_bit_exact_across_model_geometries() {
+    let mut rng = Pcg32::seeded(4048);
+    let mut scratch = Scratch::new();
+    let cases = [
+        (1usize, 16usize, 3usize, 2usize, 1usize, 28usize),
+        (16, 32, 3, 2, 1, 14),
+        (16, 24, 1, 1, 0, 16), // pointwise
+        (3, 16, 3, 2, 1, 32),
+    ];
+    for &(cin, cout, k, stride, pad, h) in &cases {
+        let g = ConvGeom {
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride,
+            pad_h: pad,
+            pad_w: pad,
+            depthwise: false,
+        };
+        let (oh, ow) = g.out_hw(h, h);
+        let mut x = TensorF32::zeros(&[cin, h, h]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut w = TensorF32::zeros(&[cout, cin, k, k]);
+        rng.fill_normal(w.data_mut(), 0.3);
+        let mut e = TensorF32::zeros(&[cout, oh, ow]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&w);
+        let eq = QTensor::quantize(&e);
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        let mask: Vec<bool> = (0..cout).map(|c| c % 3 != 1).collect();
+        for keep in [None, Some(&mask[..])] {
+            let mut ops = OpCounter::new();
+            let (gws, gbs) = qconv::qconv2d_bwd_weight(&eq, &xq, &g, keep, &mut ops);
+            let (gwg, gbg) =
+                qconv::qconv2d_bwd_weight_gemm(&eq, &xq, &g, keep, &mut scratch, &mut ops);
+            assert_eq!(gws.data(), gwg.data(), "q gw at {cin}->{cout} k{k} s{stride}");
+            assert_eq!(gbs.data(), gbg.data(), "q gb at {cin}->{cout} k{k} s{stride}");
+
+            let es = qconv::qconv2d_bwd_input(&eq, &wq, &g, h, h, oqp, keep, &mut ops);
+            let eg = qconv::qconv2d_bwd_input_gemm(
+                &eq,
+                &wq,
+                &g,
+                h,
+                h,
+                oqp,
+                keep,
+                &mut scratch,
+                &mut ops,
+            );
+            assert_eq!(es.values.data(), eg.values.data(), "q dx at {cin}->{cout} k{k} s{stride}");
+
+            let (fgws, fgbs) = fconv::fconv2d_bwd_weight(&e, &x, &g, keep, &mut ops);
+            let (fgwg, fgbg) =
+                fconv::fconv2d_bwd_weight_gemm(&e, &x, &g, keep, &mut scratch, &mut ops);
+            assert_eq!(fgws.data(), fgwg.data(), "f gw at {cin}->{cout} k{k} s{stride}");
+            assert_eq!(fgbs.data(), fgbg.data(), "f gb at {cin}->{cout} k{k} s{stride}");
+
+            let fes = fconv::fconv2d_bwd_input(&e, &w, &g, h, h, keep, &mut ops);
+            let feg = fconv::fconv2d_bwd_input_gemm(&e, &w, &g, h, h, keep, &mut scratch, &mut ops);
+            assert_eq!(fes.data(), feg.data(), "f dx at {cin}->{cout} k{k} s{stride}");
+        }
     }
 }
 

@@ -74,11 +74,7 @@ fn training_plan_dominates_inference_plan_everywhere() {
 fn device_cost_is_monotone() {
     Prop::new(64).check(
         |r| {
-            (
-                r.below(1_000_000) as u64,
-                r.below(1_000_000) as u64,
-                r.below(100_000) as u64,
-            )
+            (r.below(1_000_000) as u64, r.below(1_000_000) as u64, r.below(100_000) as u64)
         },
         |_| vec![],
         |&(im, fm, by)| {

@@ -78,11 +78,7 @@ mod pjrt_suite {
             let out_qp = QParams { scale: 1.0, zero_point: zo };
             let y = qlinear::qlinear_fwd(&xq, &wq, &vec![0i32; m], out_qp, false, &mut ops);
             for row in 0..m {
-                assert_eq!(
-                    y.values.data()[row],
-                    y_xla[row * n + col],
-                    "mismatch at ({row},{col})"
-                );
+                assert_eq!(y.values.data()[row], y_xla[row * n + col], "mismatch at ({row},{col})");
             }
             // and the raw accumulator path
             for row in 0..m {
