@@ -89,6 +89,9 @@ fn main() {
                 format!("{} B", mem.flash),
                 fits.join(" "),
             ]);
+            // memory section: analytic segments + the compiled plan's
+            // arena (planned_peak_bytes, per-buffer offsets) at paper shape
+            let def_paper = harness::mbednet_for(&spec, &spec.paper_shape);
             sink.push(Json::obj(vec![
                 ("fig", Json::str("4cd")),
                 ("dataset", Json::str(spec.name)),
@@ -96,6 +99,7 @@ fn main() {
                 ("feature_ram", Json::Num(mem.feature_ram as f64)),
                 ("weight_ram", Json::Num(mem.weight_ram as f64)),
                 ("flash", Json::Num(mem.flash as f64)),
+                ("memory", harness::memory_json(&def_paper, cfg, &mem)),
             ]));
         }
         acc_tab.row(&row);

@@ -46,6 +46,7 @@ fn main() {
                     ("config", Json::str(cfg.name())),
                     ("latency_s", Json::Num(total)),
                     ("energy_j", Json::Num(energy)),
+                    ("planned_peak_bytes", Json::Num(mem.planned_peak_bytes as f64)),
                     ("fits", Json::Bool(fits)),
                 ]));
             }

@@ -6,6 +6,8 @@
 //! Knobs: TT_PERF_REPS (default 10), TT_PERF_BATCH (default 8),
 //! TT_WORKERS (default: one per available core, capped at the batch).
 
+use tinytrain::graph::plan::ExecPlan;
+use tinytrain::graph::{models, DnnConfig};
 use tinytrain::kernels::{fconv, qconv, qlinear, ConvGeom, OpCounter};
 use tinytrain::memplan::Scratch;
 use tinytrain::quant::{QParams, QTensor};
@@ -417,6 +419,35 @@ fn main() {
         ("seconds", Json::Num(tl)),
         ("gmacs", Json::Num(macsl / tl / 1e9)),
     ]));
+
+    // Execution-plan build overhead: compiling the layer-op plan must be
+    // O(layers) — a one-off deployment cost, orders of magnitude below a
+    // single forward pass, never per-sample. The quick-mode CI smoke
+    // records it so a regression (e.g. an accidental per-sample recompile
+    // or superlinear liveness pass) shows up in the JSON trajectory.
+    for (mname, def) in [
+        ("mnist_cnn", models::mnist_cnn(&[1, 28, 28], 10)),
+        ("mbednet", models::mbednet(&[3, 32, 32], 10)),
+        ("mcunet5fps", models::mcunet5fps(&[3, 32, 32], 10)),
+    ] {
+        let (tplan, _) = time_it(2, reps.max(10), || {
+            std::hint::black_box(ExecPlan::compile(&def, DnnConfig::Uint8));
+        });
+        let layers = def.layers.len();
+        tab.row(&[
+            format!("plan_build {mname}"),
+            format!("{layers} layers"),
+            fmt_duration(tplan),
+            String::new(),
+        ]);
+        sink.push(Json::obj(vec![
+            ("kernel", Json::str("plan_build")),
+            ("model", Json::str(mname)),
+            ("layers", Json::Num(layers as f64)),
+            ("seconds", Json::Num(tplan)),
+            ("us_per_layer", Json::Num(tplan * 1e6 / layers as f64)),
+        ]));
+    }
 
     tab.print();
 

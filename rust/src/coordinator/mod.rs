@@ -89,9 +89,10 @@ pub struct Coordinator<'a> {
     sparsity: Sparsity,
     replay: ReplayBuffer,
     rng: Pcg32,
-    /// GEMM scratch arena, sized at construction (uint8 buffers; f32 twins
-    /// grow once on a float model's first pass) and reused by every
-    /// inference and training pass of the run.
+    /// GEMM scratch arena, pre-sized at construction from the model's
+    /// compiled execution plan (exact per-op requirements, every
+    /// precision) and reused by every inference and training pass of the
+    /// run with zero growth.
     scratch: Scratch,
     pub telemetry: Telemetry,
 }
@@ -106,7 +107,7 @@ impl<'a> Coordinator<'a> {
         seed: u64,
     ) -> Coordinator<'a> {
         let replay = ReplayBuffer::new(cfg.replay_capacity, seed ^ 0xBEEF);
-        let scratch = Scratch::for_model(&model.def);
+        let scratch = model.make_scratch();
         Coordinator {
             model,
             device,

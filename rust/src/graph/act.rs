@@ -1,0 +1,228 @@
+//! Activation values, deployed per-layer parameters, float master weights
+//! and PTQ calibration — the data types the executor ([`crate::graph::exec`])
+//! and the compiled layer-op plan ([`crate::graph::plan`]) both operate on.
+
+use crate::graph::{LayerDef, LayerKind, ModelDef};
+use crate::kernels::{fconv, flinear, pool, OpCounter};
+use crate::quant::observer::MinMaxObserver;
+use crate::quant::{QParams, QTensor};
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+/// An activation value flowing through the graph — quantized or float
+/// depending on the layer precision (mixed configurations cross the
+/// boundary exactly once, after the last conv).
+#[derive(Clone, Debug)]
+pub enum Act {
+    Q(QTensor),
+    F(TensorF32),
+}
+
+impl Act {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Act::Q(t) => t.shape(),
+            Act::F(t) => t.shape(),
+        }
+    }
+
+    pub fn to_float(&self) -> TensorF32 {
+        match self {
+            Act::Q(t) => t.dequantize(),
+            Act::F(t) => t.clone(),
+        }
+    }
+
+    /// Reinterpret with a new shape of identical volume. Zero-copy: the
+    /// payload buffer is shared with `self` (see [`crate::tensor::Tensor::reshape`]),
+    /// which is what makes `Flatten` a view rather than a copy in the
+    /// planned executor.
+    pub fn reshaped(&self, shape: &[usize]) -> Act {
+        match self {
+            Act::Q(t) => Act::Q(QTensor { values: t.values.reshape(shape), qp: t.qp }),
+            Act::F(t) => Act::F(t.reshape(shape)),
+        }
+    }
+
+    /// Bytes this activation occupies in the on-device arena.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Act::Q(t) => t.len(),
+            Act::F(t) => t.len() * 4,
+        }
+    }
+}
+
+/// Deployed per-layer parameters. The float bias master is kept for both
+/// flavors: quantized kernels consume it re-quantized to i32 at the current
+/// input/weight scales (cheap, `Cout` values), and the bias SGD step runs
+/// in float either way.
+#[derive(Clone, Debug)]
+pub enum LayerParams {
+    Q { w: QTensor, bias: Vec<f32> },
+    F { w: TensorF32, bias: Vec<f32> },
+    None,
+}
+
+impl LayerParams {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            LayerParams::Q { w, bias } => w.len() + bias.len() * 4,
+            LayerParams::F { w, bias } => (w.len() + bias.len()) * 4,
+            LayerParams::None => 0,
+        }
+    }
+
+    /// Human-readable parameter flavor, for mismatch diagnostics.
+    pub fn flavor(&self) -> &'static str {
+        match self {
+            LayerParams::Q { .. } => "quantized (uint8)",
+            LayerParams::F { .. } => "float32",
+            LayerParams::None => "none",
+        }
+    }
+}
+
+/// Float master weights used before deployment (pretraining on the source
+/// domain and PTQ calibration both run on these).
+#[derive(Clone, Debug)]
+pub struct FloatParams {
+    /// `(weights, bias)` for weighted layers; `None` for pools etc.
+    pub layers: Vec<Option<(TensorF32, Vec<f32>)>>,
+}
+
+impl FloatParams {
+    /// He-initialized random parameters.
+    pub fn init(def: &ModelDef, rng: &mut Pcg32) -> FloatParams {
+        let layers = def.layers.iter().map(|l| init_layer(l, rng)).collect();
+        FloatParams { layers }
+    }
+}
+
+pub(crate) fn init_layer(l: &LayerDef, rng: &mut Pcg32) -> Option<(TensorF32, Vec<f32>)> {
+    match &l.kind {
+        LayerKind::Conv { geom, .. } => {
+            let cf = if geom.depthwise { 1 } else { geom.cin };
+            let fan_in = (cf * geom.kh * geom.kw) as f32;
+            let std = (2.0 / fan_in).sqrt();
+            let mut w = TensorF32::zeros(&[geom.cout, cf, geom.kh, geom.kw]);
+            rng.fill_normal(w.data_mut(), std);
+            Some((w, vec![0.0; geom.cout]))
+        }
+        LayerKind::Linear { n_in, n_out, .. } => {
+            let std = (2.0 / *n_in as f32).sqrt();
+            let mut w = TensorF32::zeros(&[*n_out, *n_in]);
+            rng.fill_normal(w.data_mut(), std);
+            Some((w, vec![0.0; *n_out]))
+        }
+        _ => None,
+    }
+}
+
+/// PTQ calibration result: input range plus per-layer activation ranges.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub input_qp: QParams,
+    pub act_qp: Vec<QParams>,
+}
+
+/// Run `samples` through the float model and record every layer's output
+/// range (post-training quantization calibration).
+pub fn calibrate(def: &ModelDef, fp: &FloatParams, samples: &[TensorF32]) -> Calibration {
+    let mut in_obs = MinMaxObserver::calibration();
+    let mut obs: Vec<MinMaxObserver> =
+        def.layers.iter().map(|_| MinMaxObserver::calibration()).collect();
+    let mut ops = OpCounter::new();
+    for x in samples {
+        in_obs.observe(x.data());
+        let mut cur = x.clone();
+        for (i, l) in def.layers.iter().enumerate() {
+            cur = float_layer_fwd(l, &cur, fp.layers[i].as_ref(), &mut ops).0;
+            obs[i].observe(cur.data());
+        }
+    }
+    Calibration { input_qp: in_obs.qparams(), act_qp: obs.iter().map(|o| o.qparams()).collect() }
+}
+
+fn float_layer_fwd(
+    l: &LayerDef,
+    x: &TensorF32,
+    p: Option<&(TensorF32, Vec<f32>)>,
+    ops: &mut OpCounter,
+) -> (TensorF32, Option<Vec<u32>>) {
+    match &l.kind {
+        LayerKind::Conv { geom, relu } => {
+            let (w, b) = p.expect("conv params");
+            (fconv::fconv2d_fwd(x, w, b, geom, *relu, ops), None)
+        }
+        LayerKind::Linear { relu, .. } => {
+            let (w, b) = p.expect("linear params");
+            (flinear::flinear_fwd(x, w, b, *relu, ops), None)
+        }
+        LayerKind::MaxPool { k } => {
+            let o = pool::fmaxpool_fwd(x, *k, ops);
+            (o.y, Some(o.argmax))
+        }
+        LayerKind::GlobalAvgPool => (pool::fgap_fwd(x, ops), None),
+        LayerKind::Flatten => (x.reshape(&[x.len()]), None),
+    }
+}
+
+/// L1 norm of the error per structure (outer dimension: out-channels for
+/// conv, rows for linear) — the §III-B ranking heuristic, computed on the
+/// dequantized magnitudes.
+pub fn structure_norms(e: &Act) -> Vec<f32> {
+    match e {
+        Act::Q(t) => {
+            let z = t.qp.zero_point;
+            let s = t.qp.scale;
+            (0..t.values.outer_dim())
+                .map(|c| {
+                    t.values.outer(c).iter().map(|&q| ((q as i32 - z).abs() as f32) * s).sum()
+                })
+                .collect()
+        }
+        Act::F(t) => (0..t.outer_dim()).map(|c| crate::util::stats::l1(t.outer(c))).collect(),
+    }
+}
+
+/// Error-observer update when the float-space error is not directly
+/// available (fully quantized path): use the incoming error's dequantized
+/// range as the proposal for the next layer's range; the saturation check
+/// afterwards widens it if the requantized result clips.
+pub(crate) fn propagate_qp(
+    obs: &mut MinMaxObserver,
+    incoming: &QTensor,
+    _ops: &mut OpCounter,
+) -> QParams {
+    if !obs.has_observed() {
+        // bootstrap from the incoming error's range
+        let lo = (0 - incoming.qp.zero_point) as f32 * incoming.qp.scale;
+        let hi = (255 - incoming.qp.zero_point) as f32 * incoming.qp.scale;
+        obs.observe_range(lo, hi);
+    }
+    obs.qparams()
+}
+
+/// Post-hoc range widening: if a noticeable fraction of the requantized
+/// error saturates the uint8 range, widen the observer so subsequent
+/// samples get more headroom (online analogue of Eqs. 6–7 for errors).
+pub(crate) fn observe_saturation(obs: &mut MinMaxObserver, e: &Act) {
+    if let Act::Q(t) = e {
+        let n = t.len().max(1);
+        let sat = t.values.data().iter().filter(|&&v| v == 0 || v == 255).count();
+        let (lo, hi) = match obs.range() {
+            Some(r) => r,
+            None => return,
+        };
+        if sat * 200 > n {
+            // >0.5% saturated: widen by 25%
+            obs.observe_range(lo * 1.25, hi * 1.25);
+        } else {
+            // follow the actual occupied range so scales can also shrink
+            let deq = t.dequantize();
+            let (dlo, dhi) = crate::util::stats::min_max(deq.data());
+            obs.observe_range(dlo, dhi);
+        }
+    }
+}

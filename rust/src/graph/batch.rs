@@ -1,0 +1,146 @@
+//! Batched/threaded execution engine: shard minibatch samples across
+//! `std::thread` workers against a frozen model snapshot, with a
+//! deterministic sample-order merge — bit-identical results for every
+//! worker count (the determinism contract; see DESIGN.md).
+
+use crate::graph::exec::{BwdResult, DenseUpdates, NativeModel};
+use crate::kernels::{softmax, OpCounter};
+use crate::memplan::Scratch;
+use crate::quant::observer::MinMaxObserver;
+use crate::tensor::TensorF32;
+
+/// Result of one batched training pass ([`NativeModel::train_batch`]):
+/// per-sample outputs in sample order plus fwd/bwd op totals.
+pub struct BatchResult {
+    pub losses: Vec<f32>,
+    pub preds: Vec<usize>,
+    /// Per-sample gradients, in sample order. Feed them to the optimizer in
+    /// this order — gradient accumulation then stays bit-identical to the
+    /// one-worker path regardless of how samples were sharded.
+    pub grads: Vec<BwdResult>,
+    pub fwd_ops: OpCounter,
+    pub bwd_ops: OpCounter,
+}
+
+/// One sample's worth of work inside a batch (worker-side record; merged
+/// deterministically on the coordinating thread).
+struct SamplePass {
+    loss: f32,
+    pred: usize,
+    grads: BwdResult,
+    err_obs: Vec<MinMaxObserver>,
+    sat: Vec<Option<(usize, usize)>>,
+    fwd_ops: OpCounter,
+    bwd_ops: OpCounter,
+}
+
+impl NativeModel {
+    /// One sample of a batch, computed against the *frozen* model snapshot
+    /// (`&self`): forward + saturation telemetry + backward against a local
+    /// copy of the error observers. Shard-independent by construction.
+    fn batch_sample_pass(&self, x: &TensorF32, label: usize, scratch: &mut Scratch) -> SamplePass {
+        let mut fwd_ops = OpCounter::new();
+        let mut bwd_ops = OpCounter::new();
+        let trace = self.forward_in(x, scratch, &mut fwd_ops);
+        let sat = self.measure_saturation(&trace, &mut fwd_ops);
+        let (loss, probs, err) = softmax::softmax_ce(&trace.logits, label, &mut bwd_ops);
+        let pred = softmax::predict(&probs);
+        let mut err_obs = self.err_obs.clone();
+        let grads = self.backward_with(
+            &trace,
+            err,
+            &mut DenseUpdates,
+            &mut err_obs,
+            scratch,
+            &mut bwd_ops,
+        );
+        SamplePass { loss, pred, grads, err_obs, sat, fwd_ops, bwd_ops }
+    }
+
+    /// Batched training pass: run forward+backward for every sample of a
+    /// minibatch, sharding samples across `workers` `std::thread` workers.
+    ///
+    /// Semantics (chosen so results are **bit-identical for every worker
+    /// count**, including 1):
+    ///
+    ///  * every sample is evaluated against the same model snapshot — the
+    ///    state at batch entry (activation ranges, error observers,
+    ///    weights);
+    ///  * each sample's backward runs against a private copy of the error
+    ///    observers taken at batch entry;
+    ///  * after all samples finish, the per-sample observer ranges and
+    ///    activation-saturation telemetry are folded into the model
+    ///    **in sample order** on the coordinating thread.
+    ///
+    /// Gradient application stays with the caller: [`BatchResult::grads`]
+    /// holds per-sample gradients in sample order, so feeding them to an
+    /// optimizer reproduces the sequential accumulation bit-for-bit. The
+    /// dynamic sparse controller is inherently sequential (its Eq. 9 state
+    /// advances per sample), so the batch engine always computes dense
+    /// gradients; sparse runs stay on [`NativeModel::train_sample`].
+    ///
+    /// Each worker builds its scratch arena at spawn — pre-sized from the
+    /// compiled plan, so it never grows — and reuses it across its samples.
+    pub fn train_batch(&mut self, xs: &[&TensorF32], ys: &[usize], workers: usize) -> BatchResult {
+        assert_eq!(xs.len(), ys.len(), "one label per sample");
+        let n = xs.len();
+        let workers = workers.max(1).min(n.max(1));
+        let mut passes: Vec<Option<SamplePass>> = (0..n).map(|_| None).collect();
+
+        if workers <= 1 {
+            let mut scratch = self.make_scratch();
+            for i in 0..n {
+                passes[i] = Some(self.batch_sample_pass(xs[i], ys[i], &mut scratch));
+            }
+        } else {
+            let model: &NativeModel = self;
+            let chunk = n.div_ceil(workers);
+            let results: Vec<Vec<(usize, SamplePass)>> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for wi in 0..workers {
+                    let lo = wi * chunk;
+                    let hi = ((wi + 1) * chunk).min(n);
+                    if lo >= hi {
+                        break;
+                    }
+                    let wxs = &xs[lo..hi];
+                    let wys = &ys[lo..hi];
+                    handles.push(s.spawn(move || {
+                        let mut scratch = model.make_scratch();
+                        let mut out = Vec::with_capacity(wxs.len());
+                        for (j, (&x, &y)) in wxs.iter().zip(wys.iter()).enumerate() {
+                            out.push((lo + j, model.batch_sample_pass(x, y, &mut scratch)));
+                        }
+                        out
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().expect("batch worker panicked")).collect()
+            });
+            for (i, p) in results.into_iter().flatten() {
+                passes[i] = Some(p);
+            }
+        }
+
+        // Deterministic merge, in sample order.
+        let mut losses = Vec::with_capacity(n);
+        let mut preds = Vec::with_capacity(n);
+        let mut grads = Vec::with_capacity(n);
+        let mut fwd_ops = OpCounter::new();
+        let mut bwd_ops = OpCounter::new();
+        for p in passes.into_iter() {
+            let p = p.expect("every batch sample must produce a pass");
+            self.apply_range_adaptation(&p.sat);
+            for (obs, local) in self.err_obs.iter_mut().zip(p.err_obs.iter()) {
+                if let Some((lo, hi)) = local.range() {
+                    obs.observe_range(lo, hi);
+                }
+            }
+            fwd_ops.add(&p.fwd_ops);
+            bwd_ops.add(&p.bwd_ops);
+            losses.push(p.loss);
+            preds.push(p.pred);
+            grads.push(p.grads);
+        }
+        BatchResult { losses, preds, grads, fwd_ops, bwd_ops }
+    }
+}

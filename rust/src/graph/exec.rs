@@ -1,179 +1,34 @@
-//! Native model executor: the MCU-faithful forward and backward passes.
+//! Native model executor: deployed model state plus the forward and
+//! backward entry points, lowered onto the compiled layer-op plan.
 //!
-//! This is the Rust port of what the paper's C framework runs on-device.
 //! A [`NativeModel`] owns the deployed state exactly as the MCU would hold
 //! it: quantized weight tensors (uint8 + per-tensor params) for quantized
 //! layers, float weights for float layers, fixed activation quantization
 //! parameters from PTQ calibration, and online min/max observers for the
-//! backpropagated error tensors (see `quant::observer`).
+//! backpropagated error tensors (see `quant::observer`) — plus the
+//! [`ExecPlan`] compiled once at deployment (`graph::plan`), which carries
+//! the trait-based layer ops, the liveness-planned activation arena and
+//! the exact scratch requirements of a training step.
 //!
 //! The forward pass doubles as inference (the paper's in-place property:
 //! the same representation serves both, §III-A); the backward pass
 //! implements Eqs. 1–4 with optional per-structure masks from the dynamic
-//! sparse update controller (§III-B).
+//! sparse update controller (§III-B). Both are pure dispatch over the
+//! plan's op list; the straight-line pre-plan implementation is retained
+//! in [`crate::graph::reference`] as the golden parity reference.
 
-use crate::graph::{DnnConfig, LayerDef, LayerKind, ModelDef, Precision};
-use crate::kernels::{fconv, flinear, kept_count, pool, qconv, qlinear, softmax, OpCounter};
+pub use crate::graph::act::{calibrate, structure_norms, Act, Calibration, FloatParams, LayerParams};
+pub use crate::graph::batch::BatchResult;
+
+use crate::graph::act::init_layer;
+use crate::graph::plan::ExecPlan;
+use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
+use crate::kernels::{softmax, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::observer::MinMaxObserver;
-use crate::quant::{quantize_bias, QParams, QTensor};
+use crate::quant::{QParams, QTensor};
 use crate::tensor::TensorF32;
 use crate::util::prng::Pcg32;
-
-/// An activation value flowing through the graph — quantized or float
-/// depending on the layer precision (mixed configurations cross the
-/// boundary exactly once, after the last conv).
-#[derive(Clone, Debug)]
-pub enum Act {
-    Q(QTensor),
-    F(TensorF32),
-}
-
-impl Act {
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            Act::Q(t) => t.shape(),
-            Act::F(t) => t.shape(),
-        }
-    }
-
-    pub fn to_float(&self) -> TensorF32 {
-        match self {
-            Act::Q(t) => t.dequantize(),
-            Act::F(t) => t.clone(),
-        }
-    }
-
-    fn reshaped(&self, shape: &[usize]) -> Act {
-        match self {
-            Act::Q(t) => Act::Q(QTensor { values: t.values.reshape(shape), qp: t.qp }),
-            Act::F(t) => Act::F(t.reshape(shape)),
-        }
-    }
-
-    /// Bytes this activation occupies in the on-device arena.
-    pub fn byte_size(&self) -> usize {
-        match self {
-            Act::Q(t) => t.len(),
-            Act::F(t) => t.len() * 4,
-        }
-    }
-}
-
-/// Deployed per-layer parameters. The float bias master is kept for both
-/// flavors: quantized kernels consume it re-quantized to i32 at the current
-/// input/weight scales (cheap, `Cout` values), and the bias SGD step runs
-/// in float either way.
-#[derive(Clone, Debug)]
-pub enum LayerParams {
-    Q { w: QTensor, bias: Vec<f32> },
-    F { w: TensorF32, bias: Vec<f32> },
-    None,
-}
-
-impl LayerParams {
-    pub fn byte_size(&self) -> usize {
-        match self {
-            LayerParams::Q { w, bias } => w.len() + bias.len() * 4,
-            LayerParams::F { w, bias } => (w.len() + bias.len()) * 4,
-            LayerParams::None => 0,
-        }
-    }
-
-    /// Human-readable parameter flavor, for mismatch diagnostics.
-    pub fn flavor(&self) -> &'static str {
-        match self {
-            LayerParams::Q { .. } => "quantized (uint8)",
-            LayerParams::F { .. } => "float32",
-            LayerParams::None => "none",
-        }
-    }
-}
-
-/// Float master weights used before deployment (pretraining on the source
-/// domain and PTQ calibration both run on these).
-#[derive(Clone, Debug)]
-pub struct FloatParams {
-    /// `(weights, bias)` for weighted layers; `None` for pools etc.
-    pub layers: Vec<Option<(TensorF32, Vec<f32>)>>,
-}
-
-impl FloatParams {
-    /// He-initialized random parameters.
-    pub fn init(def: &ModelDef, rng: &mut Pcg32) -> FloatParams {
-        let layers = def.layers.iter().map(|l| init_layer(l, rng)).collect();
-        FloatParams { layers }
-    }
-}
-
-fn init_layer(l: &LayerDef, rng: &mut Pcg32) -> Option<(TensorF32, Vec<f32>)> {
-    match &l.kind {
-        LayerKind::Conv { geom, .. } => {
-            let cf = if geom.depthwise { 1 } else { geom.cin };
-            let fan_in = (cf * geom.kh * geom.kw) as f32;
-            let std = (2.0 / fan_in).sqrt();
-            let mut w = TensorF32::zeros(&[geom.cout, cf, geom.kh, geom.kw]);
-            rng.fill_normal(w.data_mut(), std);
-            Some((w, vec![0.0; geom.cout]))
-        }
-        LayerKind::Linear { n_in, n_out, .. } => {
-            let std = (2.0 / *n_in as f32).sqrt();
-            let mut w = TensorF32::zeros(&[*n_out, *n_in]);
-            rng.fill_normal(w.data_mut(), std);
-            Some((w, vec![0.0; *n_out]))
-        }
-        _ => None,
-    }
-}
-
-/// PTQ calibration result: input range plus per-layer activation ranges.
-#[derive(Clone, Debug)]
-pub struct Calibration {
-    pub input_qp: QParams,
-    pub act_qp: Vec<QParams>,
-}
-
-/// Run `samples` through the float model and record every layer's output
-/// range (post-training quantization calibration).
-pub fn calibrate(def: &ModelDef, fp: &FloatParams, samples: &[TensorF32]) -> Calibration {
-    let mut in_obs = MinMaxObserver::calibration();
-    let mut obs: Vec<MinMaxObserver> =
-        def.layers.iter().map(|_| MinMaxObserver::calibration()).collect();
-    let mut ops = OpCounter::new();
-    for x in samples {
-        in_obs.observe(x.data());
-        let mut cur = x.clone();
-        for (i, l) in def.layers.iter().enumerate() {
-            cur = float_layer_fwd(l, &cur, fp.layers[i].as_ref(), &mut ops).0;
-            obs[i].observe(cur.data());
-        }
-    }
-    Calibration { input_qp: in_obs.qparams(), act_qp: obs.iter().map(|o| o.qparams()).collect() }
-}
-
-fn float_layer_fwd(
-    l: &LayerDef,
-    x: &TensorF32,
-    p: Option<&(TensorF32, Vec<f32>)>,
-    ops: &mut OpCounter,
-) -> (TensorF32, Option<Vec<u32>>) {
-    match &l.kind {
-        LayerKind::Conv { geom, relu } => {
-            let (w, b) = p.expect("conv params");
-            (fconv::fconv2d_fwd(x, w, b, geom, *relu, ops), None)
-        }
-        LayerKind::Linear { relu, .. } => {
-            let (w, b) = p.expect("linear params");
-            (flinear::flinear_fwd(x, w, b, *relu, ops), None)
-        }
-        LayerKind::MaxPool { k } => {
-            let o = pool::fmaxpool_fwd(x, *k, ops);
-            (o.y, Some(o.argmax))
-        }
-        LayerKind::GlobalAvgPool => (pool::fgap_fwd(x, ops), None),
-        LayerKind::Flatten => (x.reshape(&[x.len()]), None),
-    }
-}
 
 /// Saved forward-pass state needed by backprop (the data dependencies of
 /// Fig. 1: layer inputs, post-activation outputs, pool argmaxes).
@@ -198,31 +53,6 @@ pub struct BwdResult {
     pub grads: Vec<Option<LayerGrads>>,
 }
 
-/// Result of one batched training pass ([`NativeModel::train_batch`]):
-/// per-sample outputs in sample order plus fwd/bwd op totals.
-pub struct BatchResult {
-    pub losses: Vec<f32>,
-    pub preds: Vec<usize>,
-    /// Per-sample gradients, in sample order. Feed them to the optimizer in
-    /// this order — gradient accumulation then stays bit-identical to the
-    /// one-worker path regardless of how samples were sharded.
-    pub grads: Vec<BwdResult>,
-    pub fwd_ops: OpCounter,
-    pub bwd_ops: OpCounter,
-}
-
-/// One sample's worth of work inside a batch (worker-side record; merged
-/// deterministically on the coordinating thread).
-struct SamplePass {
-    loss: f32,
-    pred: usize,
-    grads: BwdResult,
-    err_obs: Vec<MinMaxObserver>,
-    sat: Vec<Option<(usize, usize)>>,
-    fwd_ops: OpCounter,
-    bwd_ops: OpCounter,
-}
-
 /// Mask provider interface implemented by the dynamic sparse update
 /// controller (`train::sparse`). `None` = update everything.
 pub trait MaskProvider {
@@ -238,7 +68,8 @@ impl MaskProvider for DenseUpdates {
     }
 }
 
-/// A deployed model: the exact state the MCU holds in RAM/Flash.
+/// A deployed model: the exact state the MCU holds in RAM/Flash, plus the
+/// execution plan compiled for its configuration.
 pub struct NativeModel {
     pub def: ModelDef,
     pub cfg: DnnConfig,
@@ -247,11 +78,13 @@ pub struct NativeModel {
     pub input_qp: QParams,
     pub act_qp: Vec<QParams>,
     pub err_obs: Vec<MinMaxObserver>,
+    plan: ExecPlan,
 }
 
 impl NativeModel {
     /// Deploy: quantize float master weights per the configuration, using
-    /// PTQ calibration ranges for activations.
+    /// PTQ calibration ranges for activations, and compile the execution
+    /// plan (`O(layers)`, once).
     pub fn build(def: ModelDef, cfg: DnnConfig, fp: &FloatParams, calib: &Calibration) -> Self {
         let prec = def.precisions(cfg);
         let params = def
@@ -269,15 +102,28 @@ impl NativeModel {
             })
             .collect();
         let err_obs = def.layers.iter().map(|_| MinMaxObserver::online()).collect();
+        let plan = ExecPlan::compile(&def, cfg);
         NativeModel {
             prec,
             params,
             input_qp: calib.input_qp,
             act_qp: calib.act_qp.clone(),
             err_obs,
+            plan,
             def,
             cfg,
         }
+    }
+
+    /// The execution plan compiled at deployment.
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    /// Scratch arena pre-sized from the plan's exact requirements: a full
+    /// training step (any configuration) performs zero arena growth.
+    pub fn make_scratch(&self) -> Scratch {
+        self.plan.make_scratch()
     }
 
     /// Re-randomize the trainable layers (§IV-A: "we set the last five
@@ -312,28 +158,6 @@ impl NativeModel {
         FloatParams { layers }
     }
 
-    /// Quantization parameters of the input to layer `i`.
-    fn in_qp(&self, i: usize) -> QParams {
-        if i == 0 {
-            self.input_qp
-        } else {
-            // pools/flatten pass qparams through
-            let mut j = i;
-            while j > 0 {
-                j -= 1;
-                match self.def.layers[j].kind {
-                    LayerKind::Conv { .. }
-                    | LayerKind::Linear { .. }
-                    | LayerKind::GlobalAvgPool => {
-                        return self.act_qp[j];
-                    }
-                    _ => {}
-                }
-            }
-            self.input_qp
-        }
-    }
-
     /// Forward pass for one sample. Works for plain inference too (drop the
     /// trace): the paper's zero-downtime property — training shares the
     /// inference representation byte-for-byte.
@@ -345,125 +169,18 @@ impl NativeModel {
         self.forward_in(x, &mut Scratch::new(), ops)
     }
 
-    /// Forward pass with an explicit scratch arena. Non-depthwise convs are
-    /// routed through the im2col/GEMM engine (`kernels::gemm`), which is
-    /// bit-exact with the scalar reference kernels; depthwise convs,
-    /// linears and pools use the MCU-faithful kernels directly.
+    /// Forward pass with an explicit scratch arena, executing the compiled
+    /// plan: non-depthwise convs route through the im2col/GEMM engine
+    /// (`kernels::gemm`), bit-exact with the scalar reference kernels;
+    /// depthwise convs, linears and pools use the MCU-faithful kernels
+    /// directly. `Flatten` is a zero-copy view.
     pub fn forward_in(
         &self,
         x: &TensorF32,
         scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> FwdTrace {
-        let n = self.def.layers.len();
-        let mut acts: Vec<Act> = Vec::with_capacity(n);
-        let mut argmax: Vec<Option<Vec<u32>>> = vec![None; n];
-
-        let input = match self.prec[0] {
-            Precision::Uint8 => Act::Q(QTensor::quantize_with(x, self.input_qp)),
-            Precision::Float32 => Act::F(x.clone()),
-        };
-
-        let mut cur = input.clone();
-        for (i, l) in self.def.layers.iter().enumerate() {
-            // coerce the running activation into this layer's precision
-            cur = match (self.prec[i], cur) {
-                (Precision::Uint8, Act::F(t)) => {
-                    Act::Q(QTensor::quantize_with(&t, self.in_qp(i)))
-                }
-                (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
-                (_, c) => c,
-            };
-            cur = match (&l.kind, &cur) {
-                (LayerKind::Conv { geom, relu }, Act::Q(xq)) => {
-                    let (w, bias) = match &self.params[i] {
-                        LayerParams::Q { w, bias } => (w, bias),
-                        other => panic!(
-                            "layer {i} ({}): expected quantized (uint8) conv params, found {}",
-                            l.name,
-                            other.flavor()
-                        ),
-                    };
-                    let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
-                    let y = if geom.depthwise {
-                        qconv::qconv2d_fwd(xq, w, &bq, geom, self.act_qp[i], *relu, ops)
-                    } else {
-                        qconv::qconv2d_fwd_gemm(
-                            xq,
-                            w,
-                            &bq,
-                            geom,
-                            self.act_qp[i],
-                            *relu,
-                            scratch,
-                            ops,
-                        )
-                    };
-                    Act::Q(y)
-                }
-                (LayerKind::Conv { geom, relu }, Act::F(xf)) => {
-                    let (w, bias) = match &self.params[i] {
-                        LayerParams::F { w, bias } => (w, bias),
-                        other => panic!(
-                            "layer {i} ({}): expected float32 conv params, found {}",
-                            l.name,
-                            other.flavor()
-                        ),
-                    };
-                    let y = if geom.depthwise {
-                        fconv::fconv2d_fwd(xf, w, bias, geom, *relu, ops)
-                    } else {
-                        fconv::fconv2d_fwd_gemm(xf, w, bias, geom, *relu, scratch, ops)
-                    };
-                    Act::F(y)
-                }
-                (LayerKind::Linear { relu, .. }, Act::Q(xq)) => {
-                    let (w, bias) = match &self.params[i] {
-                        LayerParams::Q { w, bias } => (w, bias),
-                        other => panic!(
-                            "layer {i} ({}): expected quantized (uint8) linear params, found {}",
-                            l.name,
-                            other.flavor()
-                        ),
-                    };
-                    let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
-                    Act::Q(qlinear::qlinear_fwd(xq, w, &bq, self.act_qp[i], *relu, ops))
-                }
-                (LayerKind::Linear { relu, .. }, Act::F(xf)) => {
-                    let (w, bias) = match &self.params[i] {
-                        LayerParams::F { w, bias } => (w, bias),
-                        other => panic!(
-                            "layer {i} ({}): expected float32 linear params, found {}",
-                            l.name,
-                            other.flavor()
-                        ),
-                    };
-                    Act::F(flinear::flinear_fwd(xf, w, bias, *relu, ops))
-                }
-                (LayerKind::MaxPool { k }, Act::Q(xq)) => {
-                    let o = pool::qmaxpool_fwd(xq, *k, ops);
-                    argmax[i] = Some(o.argmax);
-                    Act::Q(o.y)
-                }
-                (LayerKind::MaxPool { k }, Act::F(xf)) => {
-                    let o = pool::fmaxpool_fwd(xf, *k, ops);
-                    argmax[i] = Some(o.argmax);
-                    Act::F(o.y)
-                }
-                (LayerKind::GlobalAvgPool, Act::Q(xq)) => {
-                    Act::Q(pool::qgap_fwd(xq, self.act_qp[i], ops))
-                }
-                (LayerKind::GlobalAvgPool, Act::F(xf)) => Act::F(pool::fgap_fwd(xf, ops)),
-                (LayerKind::Flatten, a) => {
-                    let flat: usize = a.shape().iter().product();
-                    a.reshaped(&[flat])
-                }
-            };
-            acts.push(cur.clone());
-        }
-
-        let logits = acts.last().unwrap().to_float().into_vec();
-        FwdTrace { input, acts, argmax, logits }
+        self.plan.run_forward(self, x, scratch, ops)
     }
 
     /// Training-path forward: run the regular forward pass, then let the
@@ -498,7 +215,7 @@ impl NativeModel {
     /// the uint8 range (upper end only for folded-ReLU layers, whose lower
     /// bound is pinned at the zero point) and the output element count.
     /// `None` for layers the adaptation rule does not apply to.
-    fn measure_saturation(
+    pub(crate) fn measure_saturation(
         &self,
         trace: &FwdTrace,
         ops: &mut OpCounter,
@@ -538,7 +255,7 @@ impl NativeModel {
     /// layer's output saturates, widen its range 25 %. Split from the
     /// measurement so the batch engine can collect telemetry concurrently
     /// and fold it in deterministically, in sample order.
-    fn apply_range_adaptation(&mut self, sat: &[Option<(usize, usize)>]) {
+    pub(crate) fn apply_range_adaptation(&mut self, sat: &[Option<(usize, usize)>]) {
         for (i, s) in sat.iter().enumerate() {
             let Some(&(sat, n)) = s.as_ref() else { continue };
             if sat * 100 > n {
@@ -578,118 +295,8 @@ impl NativeModel {
         (loss, pred, bwd)
     }
 
-    /// One sample of a batch, computed against the *frozen* model snapshot
-    /// (`&self`): forward + saturation telemetry + backward against a local
-    /// copy of the error observers. Shard-independent by construction.
-    fn batch_sample_pass(&self, x: &TensorF32, label: usize, scratch: &mut Scratch) -> SamplePass {
-        let mut fwd_ops = OpCounter::new();
-        let mut bwd_ops = OpCounter::new();
-        let trace = self.forward_in(x, scratch, &mut fwd_ops);
-        let sat = self.measure_saturation(&trace, &mut fwd_ops);
-        let (loss, probs, err) = softmax::softmax_ce(&trace.logits, label, &mut bwd_ops);
-        let pred = softmax::predict(&probs);
-        let mut err_obs = self.err_obs.clone();
-        let grads = self.backward_with(
-            &trace,
-            err,
-            &mut DenseUpdates,
-            &mut err_obs,
-            scratch,
-            &mut bwd_ops,
-        );
-        SamplePass { loss, pred, grads, err_obs, sat, fwd_ops, bwd_ops }
-    }
-
-    /// Batched training pass: run forward+backward for every sample of a
-    /// minibatch, sharding samples across `workers` `std::thread` workers.
-    ///
-    /// Semantics (chosen so results are **bit-identical for every worker
-    /// count**, including 1):
-    ///
-    ///  * every sample is evaluated against the same model snapshot — the
-    ///    state at batch entry (activation ranges, error observers,
-    ///    weights);
-    ///  * each sample's backward runs against a private copy of the error
-    ///    observers taken at batch entry;
-    ///  * after all samples finish, the per-sample observer ranges and
-    ///    activation-saturation telemetry are folded into the model
-    ///    **in sample order** on the coordinating thread.
-    ///
-    /// Gradient application stays with the caller: [`BatchResult::grads`]
-    /// holds per-sample gradients in sample order, so feeding them to an
-    /// optimizer reproduces the sequential accumulation bit-for-bit. The
-    /// dynamic sparse controller is inherently sequential (its Eq. 9 state
-    /// advances per sample), so the batch engine always computes dense
-    /// gradients; sparse runs stay on [`NativeModel::train_sample`].
-    ///
-    /// Each worker builds its scratch arena at spawn and reuses it across
-    /// its samples; with typical minibatches (≥ 8 samples) the per-call
-    /// arena cost is noise next to the conv work it serves.
-    pub fn train_batch(&mut self, xs: &[&TensorF32], ys: &[usize], workers: usize) -> BatchResult {
-        assert_eq!(xs.len(), ys.len(), "one label per sample");
-        let n = xs.len();
-        let workers = workers.max(1).min(n.max(1));
-        let mut passes: Vec<Option<SamplePass>> = (0..n).map(|_| None).collect();
-
-        if workers <= 1 {
-            let mut scratch = Scratch::for_model(&self.def);
-            for i in 0..n {
-                passes[i] = Some(self.batch_sample_pass(xs[i], ys[i], &mut scratch));
-            }
-        } else {
-            let model: &NativeModel = self;
-            let chunk = n.div_ceil(workers);
-            let results: Vec<Vec<(usize, SamplePass)>> = std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for wi in 0..workers {
-                    let lo = wi * chunk;
-                    let hi = ((wi + 1) * chunk).min(n);
-                    if lo >= hi {
-                        break;
-                    }
-                    let wxs = &xs[lo..hi];
-                    let wys = &ys[lo..hi];
-                    handles.push(s.spawn(move || {
-                        let mut scratch = Scratch::for_model(&model.def);
-                        let mut out = Vec::with_capacity(wxs.len());
-                        for (j, (&x, &y)) in wxs.iter().zip(wys.iter()).enumerate() {
-                            out.push((lo + j, model.batch_sample_pass(x, y, &mut scratch)));
-                        }
-                        out
-                    }));
-                }
-                handles.into_iter().map(|h| h.join().expect("batch worker panicked")).collect()
-            });
-            for (i, p) in results.into_iter().flatten() {
-                passes[i] = Some(p);
-            }
-        }
-
-        // Deterministic merge, in sample order.
-        let mut losses = Vec::with_capacity(n);
-        let mut preds = Vec::with_capacity(n);
-        let mut grads = Vec::with_capacity(n);
-        let mut fwd_ops = OpCounter::new();
-        let mut bwd_ops = OpCounter::new();
-        for p in passes.into_iter() {
-            let p = p.expect("every batch sample must produce a pass");
-            self.apply_range_adaptation(&p.sat);
-            for (obs, local) in self.err_obs.iter_mut().zip(p.err_obs.iter()) {
-                if let Some((lo, hi)) = local.range() {
-                    obs.observe_range(lo, hi);
-                }
-            }
-            fwd_ops.add(&p.fwd_ops);
-            bwd_ops.add(&p.bwd_ops);
-            losses.push(p.loss);
-            preds.push(p.pred);
-            grads.push(p.grads);
-        }
-        BatchResult { losses, preds, grads, fwd_ops, bwd_ops }
-    }
-
     /// Backward pass from a float head error (`softmax − onehot`). Walks
-    /// layers in reverse down to the earliest trainable layer; error
+    /// the plan in reverse down to the earliest trainable layer; error
     /// tensors are quantized per layer precision; ReLU masking uses the
     /// saved forward outputs; pool routing uses the saved argmaxes.
     ///
@@ -744,327 +351,7 @@ impl NativeModel {
         scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> BwdResult {
-        let n = self.def.layers.len();
-        assert_eq!(err_obs.len(), n, "one error observer per layer");
-        let stop = self.def.first_trainable().unwrap_or(n);
-        let mut grads: Vec<Option<LayerGrads>> = (0..n).map(|_| None).collect();
-
-        // Error w.r.t. the output of layer `i`, in layer i's precision.
-        let mut err: Act = match self.prec[n - 1] {
-            Precision::Float32 => Act::F(head_err),
-            Precision::Uint8 => {
-                let obs = &mut err_obs[n - 1];
-                obs.observe(head_err.data());
-                Act::Q(QTensor::quantize_with(&head_err, obs.qparams()))
-            }
-        };
-
-        for i in (stop..n).rev() {
-            let l = self.def.layers[i].clone();
-            // Coerce error into this layer's precision (mixed boundary).
-            err = match (self.prec[i], err) {
-                (Precision::Uint8, Act::F(t)) => {
-                    let obs = &mut err_obs[i];
-                    obs.observe(t.data());
-                    Act::Q(QTensor::quantize_with(&t, obs.qparams()))
-                }
-                (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
-                (_, e) => e,
-            };
-
-            let layer_in: Act =
-                if i == 0 { trace.input.clone() } else { trace.acts[i - 1].clone() };
-            // Input act coerced to this layer's precision (as in forward).
-            let layer_in = match (self.prec[i], layer_in) {
-                (Precision::Uint8, Act::F(t)) => Act::Q(QTensor::quantize_with(&t, self.in_qp(i))),
-                (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
-                (_, a) => a,
-            };
-
-            match (&l.kind, &mut err) {
-                (LayerKind::Conv { geom, relu }, e) => {
-                    let keep = if l.trainable {
-                        let norms = structure_norms(e);
-                        masks.mask(i, &norms)
-                    } else {
-                        None
-                    };
-                    match e {
-                        Act::Q(eq) => {
-                            if *relu {
-                                if let Act::Q(y) = &trace.acts[i] {
-                                    qconv::relu_bwd_mask_q(eq, y, ops);
-                                }
-                            }
-                            let (w, _) = match &self.params[i] {
-                                LayerParams::Q { w, bias } => (w, bias),
-                                other => panic!(
-                                    "layer {i} ({}): backward expected quantized (uint8) conv \
-                                     params, found {}",
-                                    l.name,
-                                    other.flavor()
-                                ),
-                            };
-                            let xq = match &layer_in {
-                                Act::Q(x) => x,
-                                Act::F(_) => panic!(
-                                    "layer {i} ({}): backward expected a quantized input \
-                                     activation, found float32",
-                                    l.name
-                                ),
-                            };
-                            if l.trainable {
-                                let (gw, gb) = if geom.depthwise {
-                                    qconv::qconv2d_bwd_weight(eq, xq, geom, keep.as_deref(), ops)
-                                } else {
-                                    qconv::qconv2d_bwd_weight_gemm(
-                                        eq,
-                                        xq,
-                                        geom,
-                                        keep.as_deref(),
-                                        scratch,
-                                        ops,
-                                    )
-                                };
-                                let total = geom.cout;
-                                let kept = kept_count(keep.as_deref(), total);
-                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
-                            }
-                            if i > stop {
-                                let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
-                                let prev_obs = &mut err_obs[i - 1];
-                                let out_qp = propagate_qp(prev_obs, eq, ops);
-                                err = if geom.depthwise {
-                                    Act::Q(qconv::qconv2d_bwd_input(
-                                        eq,
-                                        w,
-                                        geom,
-                                        h,
-                                        w_in,
-                                        out_qp,
-                                        keep.as_deref(),
-                                        ops,
-                                    ))
-                                } else {
-                                    Act::Q(qconv::qconv2d_bwd_input_gemm(
-                                        eq,
-                                        w,
-                                        geom,
-                                        h,
-                                        w_in,
-                                        out_qp,
-                                        keep.as_deref(),
-                                        scratch,
-                                        ops,
-                                    ))
-                                };
-                                observe_saturation(&mut err_obs[i - 1], &err);
-                            }
-                        }
-                        Act::F(ef) => {
-                            if *relu {
-                                if let Act::F(y) = &trace.acts[i] {
-                                    fconv::relu_bwd_mask_f(ef, y, ops);
-                                }
-                            }
-                            let (w, _) = match &self.params[i] {
-                                LayerParams::F { w, bias } => (w, bias),
-                                other => panic!(
-                                    "layer {i} ({}): backward expected float32 conv params, \
-                                     found {}",
-                                    l.name,
-                                    other.flavor()
-                                ),
-                            };
-                            let xf = match &layer_in {
-                                Act::F(x) => x,
-                                Act::Q(_) => panic!(
-                                    "layer {i} ({}): backward expected a float32 input \
-                                     activation, found quantized",
-                                    l.name
-                                ),
-                            };
-                            if l.trainable {
-                                let (gw, gb) = if geom.depthwise {
-                                    fconv::fconv2d_bwd_weight(ef, xf, geom, keep.as_deref(), ops)
-                                } else {
-                                    fconv::fconv2d_bwd_weight_gemm(
-                                        ef,
-                                        xf,
-                                        geom,
-                                        keep.as_deref(),
-                                        scratch,
-                                        ops,
-                                    )
-                                };
-                                let total = geom.cout;
-                                let kept = kept_count(keep.as_deref(), total);
-                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
-                            }
-                            if i > stop {
-                                let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
-                                err = if geom.depthwise {
-                                    Act::F(fconv::fconv2d_bwd_input(
-                                        ef,
-                                        w,
-                                        geom,
-                                        h,
-                                        w_in,
-                                        keep.as_deref(),
-                                        ops,
-                                    ))
-                                } else {
-                                    Act::F(fconv::fconv2d_bwd_input_gemm(
-                                        ef,
-                                        w,
-                                        geom,
-                                        h,
-                                        w_in,
-                                        keep.as_deref(),
-                                        scratch,
-                                        ops,
-                                    ))
-                                };
-                            }
-                        }
-                    }
-                }
-                (LayerKind::Linear { .. }, e) => {
-                    let relu = matches!(l.kind, LayerKind::Linear { relu: true, .. });
-                    let keep = if l.trainable {
-                        let norms = structure_norms(e);
-                        masks.mask(i, &norms)
-                    } else {
-                        None
-                    };
-                    match e {
-                        Act::Q(eq) => {
-                            if relu {
-                                if let Act::Q(y) = &trace.acts[i] {
-                                    qconv::relu_bwd_mask_q(eq, y, ops);
-                                }
-                            }
-                            let (w, _) = match &self.params[i] {
-                                LayerParams::Q { w, bias } => (w, bias),
-                                other => panic!(
-                                    "layer {i} ({}): backward expected quantized (uint8) linear \
-                                     params, found {}",
-                                    l.name,
-                                    other.flavor()
-                                ),
-                            };
-                            let xq = match &layer_in {
-                                Act::Q(x) => x,
-                                Act::F(_) => panic!(
-                                    "layer {i} ({}): backward expected a quantized input \
-                                     activation, found float32",
-                                    l.name
-                                ),
-                            };
-                            if l.trainable {
-                                let (gw, gb) = qlinear::qlinear_bwd_weight_gemm(
-                                    eq,
-                                    xq,
-                                    keep.as_deref(),
-                                    scratch,
-                                    ops,
-                                );
-                                let total = eq.len();
-                                let kept = kept_count(keep.as_deref(), total);
-                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
-                            }
-                            if i > stop {
-                                let prev_obs = &mut err_obs[i - 1];
-                                let out_qp = propagate_qp(prev_obs, eq, ops);
-                                err = Act::Q(qlinear::qlinear_bwd_input_gemm(
-                                    eq,
-                                    w,
-                                    out_qp,
-                                    keep.as_deref(),
-                                    scratch,
-                                    ops,
-                                ));
-                                observe_saturation(&mut err_obs[i - 1], &err);
-                            }
-                        }
-                        Act::F(ef) => {
-                            if relu {
-                                if let Act::F(y) = &trace.acts[i] {
-                                    fconv::relu_bwd_mask_f(ef, y, ops);
-                                }
-                            }
-                            let (w, _) = match &self.params[i] {
-                                LayerParams::F { w, bias } => (w, bias),
-                                other => panic!(
-                                    "layer {i} ({}): backward expected float32 linear params, \
-                                     found {}",
-                                    l.name,
-                                    other.flavor()
-                                ),
-                            };
-                            let xf = match &layer_in {
-                                Act::F(x) => x,
-                                Act::Q(_) => panic!(
-                                    "layer {i} ({}): backward expected a float32 input \
-                                     activation, found quantized",
-                                    l.name
-                                ),
-                            };
-                            if l.trainable {
-                                let (gw, gb) =
-                                    flinear::flinear_bwd_weight_gemm(ef, xf, keep.as_deref(), ops);
-                                let total = ef.len();
-                                let kept = kept_count(keep.as_deref(), total);
-                                grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
-                            }
-                            if i > stop {
-                                err = Act::F(flinear::flinear_bwd_input_gemm(
-                                    ef,
-                                    w,
-                                    keep.as_deref(),
-                                    scratch,
-                                    ops,
-                                ));
-                            }
-                        }
-                    }
-                }
-                (LayerKind::MaxPool { .. }, e) => {
-                    if i > stop {
-                        let am = trace.argmax[i].as_ref().expect("pool argmax");
-                        err = match e {
-                            Act::Q(eq) => {
-                                Act::Q(pool::qmaxpool_bwd(eq, am, &layer_in.shape().to_vec(), ops))
-                            }
-                            Act::F(ef) => {
-                                Act::F(pool::fmaxpool_bwd(ef, am, &layer_in.shape().to_vec(), ops))
-                            }
-                        };
-                    }
-                }
-                (LayerKind::GlobalAvgPool, e) => {
-                    if i > stop {
-                        err = match e {
-                            Act::Q(eq) => {
-                                let prev_obs = &mut err_obs[i - 1];
-                                let out_qp = propagate_qp(prev_obs, eq, ops);
-                                Act::Q(pool::qgap_bwd(eq, &layer_in.shape().to_vec(), out_qp, ops))
-                            }
-                            Act::F(ef) => {
-                                Act::F(pool::fgap_bwd(ef, &layer_in.shape().to_vec(), ops))
-                            }
-                        };
-                    }
-                }
-                (LayerKind::Flatten, e) => {
-                    if i > stop {
-                        err = e.reshaped(&layer_in.shape().to_vec());
-                    }
-                }
-            }
-        }
-
-        BwdResult { grads }
+        self.plan.run_backward(self, trace, head_err, masks, err_obs, scratch, ops)
     }
 
     /// Plain inference: predicted class for one sample.
@@ -1078,298 +365,5 @@ impl NativeModel {
         let mut ops = OpCounter::new();
         let correct = xs.iter().zip(ys).filter(|(x, &y)| self.predict(x, &mut ops) == y).count();
         correct as f32 / xs.len().max(1) as f32
-    }
-}
-
-/// L1 norm of the error per structure (outer dimension: out-channels for
-/// conv, rows for linear) — the §III-B ranking heuristic, computed on the
-/// dequantized magnitudes.
-pub fn structure_norms(e: &Act) -> Vec<f32> {
-    match e {
-        Act::Q(t) => {
-            let z = t.qp.zero_point;
-            let s = t.qp.scale;
-            (0..t.values.outer_dim())
-                .map(|c| {
-                    t.values.outer(c).iter().map(|&q| ((q as i32 - z).abs() as f32) * s).sum()
-                })
-                .collect()
-        }
-        Act::F(t) => (0..t.outer_dim()).map(|c| crate::util::stats::l1(t.outer(c))).collect(),
-    }
-}
-
-/// Error-observer update when the float-space error is not directly
-/// available (fully quantized path): use the incoming error's dequantized
-/// range as the proposal for the next layer's range; the saturation check
-/// afterwards widens it if the requantized result clips.
-fn propagate_qp(obs: &mut MinMaxObserver, incoming: &QTensor, _ops: &mut OpCounter) -> QParams {
-    if !obs.has_observed() {
-        // bootstrap from the incoming error's range
-        let lo = (0 - incoming.qp.zero_point) as f32 * incoming.qp.scale;
-        let hi = (255 - incoming.qp.zero_point) as f32 * incoming.qp.scale;
-        obs.observe_range(lo, hi);
-    }
-    obs.qparams()
-}
-
-/// Post-hoc range widening: if a noticeable fraction of the requantized
-/// error saturates the uint8 range, widen the observer so subsequent
-/// samples get more headroom (online analogue of Eqs. 6–7 for errors).
-fn observe_saturation(obs: &mut MinMaxObserver, e: &Act) {
-    if let Act::Q(t) = e {
-        let n = t.len().max(1);
-        let sat = t.values.data().iter().filter(|&&v| v == 0 || v == 255).count();
-        let (lo, hi) = match obs.range() {
-            Some(r) => r,
-            None => return,
-        };
-        if sat * 200 > n {
-            // >0.5% saturated: widen by 25%
-            obs.observe_range(lo * 1.25, hi * 1.25);
-        } else {
-            // follow the actual occupied range so scales can also shrink
-            let deq = t.dequantize();
-            let (dlo, dhi) = crate::util::stats::min_max(deq.data());
-            obs.observe_range(dlo, dhi);
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::graph::models;
-
-    fn toy_data(
-        rng: &mut Pcg32,
-        n: usize,
-        shape: &[usize],
-        classes: usize,
-    ) -> (Vec<TensorF32>, Vec<usize>) {
-        // Two-class-separable synthetic data: class k biases channel mean.
-        let mut xs = Vec::new();
-        let mut ys = Vec::new();
-        for i in 0..n {
-            let y = i % classes;
-            let mut x = TensorF32::zeros(shape);
-            rng.fill_normal(x.data_mut(), 0.5);
-            for v in x.data_mut().iter_mut() {
-                *v += y as f32 * 0.8;
-            }
-            xs.push(x);
-            ys.push(y);
-        }
-        (xs, ys)
-    }
-
-    fn deployed(cfg: DnnConfig, seed: u64) -> (NativeModel, Vec<TensorF32>, Vec<usize>) {
-        let mut rng = Pcg32::seeded(seed);
-        let def = models::mnist_cnn(&[1, 12, 12], 3);
-        let fp = FloatParams::init(&def, &mut rng);
-        let (xs, ys) = toy_data(&mut rng, 12, &[1, 12, 12], 3);
-        let calib = calibrate(&def, &fp, &xs[..4]);
-        (NativeModel::build(def, cfg, &fp, &calib), xs, ys)
-    }
-
-    #[test]
-    fn forward_shapes_all_configs() {
-        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
-            let (m, xs, _) = deployed(cfg, 61);
-            let mut ops = OpCounter::new();
-            let t = m.forward(&xs[0], &mut ops);
-            assert_eq!(t.logits.len(), 3, "{cfg:?}");
-            assert_eq!(t.acts.len(), m.def.layers.len());
-            assert!(ops.total_macs() > 0);
-        }
-    }
-
-    #[test]
-    fn quantized_forward_tracks_float_forward() {
-        let (mq, xs, _) = deployed(DnnConfig::Uint8, 62);
-        let (mf, _, _) = deployed(DnnConfig::Float32, 62);
-        let mut ops = OpCounter::new();
-        // identical float masters (same seed) -> logits should correlate
-        let lq = mq.forward(&xs[0], &mut ops).logits;
-        let lf = mf.forward(&xs[0], &mut ops).logits;
-        // rank agreement on the toy problem is enough (quantization noise)
-        let aq = crate::util::stats::argmax(&lq);
-        let af = crate::util::stats::argmax(&lf);
-        assert_eq!(aq, af, "lq={lq:?} lf={lf:?}");
-    }
-
-    #[test]
-    fn uint8_uses_integer_macs_float_uses_float_macs() {
-        let (mq, xs, _) = deployed(DnnConfig::Uint8, 63);
-        let mut ops = OpCounter::new();
-        mq.forward(&xs[0], &mut ops);
-        assert!(ops.int_macs > 0);
-        assert_eq!(ops.float_macs, 0);
-
-        let (mf, _, _) = deployed(DnnConfig::Float32, 63);
-        let mut ops2 = OpCounter::new();
-        mf.forward(&xs[0], &mut ops2);
-        assert!(ops2.float_macs > 0);
-        assert_eq!(ops2.int_macs, 0);
-    }
-
-    #[test]
-    fn mixed_config_crosses_boundary_once() {
-        let (m, xs, _) = deployed(DnnConfig::Mixed, 64);
-        let mut ops = OpCounter::new();
-        let t = m.forward(&xs[0], &mut ops);
-        // feature extractor quantized, head float
-        assert!(matches!(t.acts[0], Act::Q(_)));
-        assert!(matches!(t.acts.last().unwrap(), Act::F(_)));
-        assert!(ops.int_macs > 0 && ops.float_macs > 0);
-    }
-
-    #[test]
-    fn backward_produces_grads_for_trainable_layers_only() {
-        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
-            let (mut m, xs, ys) = deployed(cfg, 65);
-            let mut ops = OpCounter::new();
-            let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
-            for (i, l) in m.def.layers.iter().enumerate() {
-                assert_eq!(bwd.grads[i].is_some(), l.trainable, "layer {i} {cfg:?}");
-            }
-        }
-    }
-
-    #[test]
-    fn grad_shapes_match_weights() {
-        let (mut m, xs, ys) = deployed(DnnConfig::Uint8, 66);
-        let mut ops = OpCounter::new();
-        let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
-        for (i, g) in bwd.grads.iter().enumerate() {
-            if let Some(g) = g {
-                match &m.params[i] {
-                    LayerParams::Q { w, bias } => {
-                        assert_eq!(g.gw.shape(), w.shape());
-                        assert_eq!(g.gb.len(), bias.len());
-                    }
-                    LayerParams::F { w, bias } => {
-                        assert_eq!(g.gw.shape(), w.shape());
-                        assert_eq!(g.gb.len(), bias.len());
-                    }
-                    LayerParams::None => panic!("grads on weightless layer"),
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn transfer_mode_stops_backprop_early() {
-        let mut rng = Pcg32::seeded(67);
-        let mut def = models::mnist_cnn(&[1, 12, 12], 3);
-        def.set_trainable_tail(2); // only the two linear layers
-        let fp = FloatParams::init(&def, &mut rng);
-        let (xs, ys) = toy_data(&mut rng, 6, &[1, 12, 12], 3);
-        let calib = calibrate(&def, &fp, &xs[..2]);
-        let mut m = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
-
-        let mut ops_full = OpCounter::new();
-        let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops_full);
-        assert!(bwd.grads[0].is_none());
-        assert!(bwd.grads[4].is_some() && bwd.grads[5].is_some());
-
-        // transfer-learning bwd must be cheaper than fwd (Fig. 4b property)
-        let mut ops_fwd = OpCounter::new();
-        m.forward(&xs[0], &mut ops_fwd);
-        let bwd_macs = ops_full.total_macs().saturating_sub(ops_fwd.total_macs());
-        assert!(bwd_macs < ops_fwd.total_macs(), "bwd={} fwd={}", bwd_macs, ops_fwd.total_macs());
-    }
-
-    #[test]
-    fn structure_norms_match_dequantized_l1() {
-        let t = TensorF32::from_vec(&[2, 2], vec![1.0, -1.0, 0.5, 0.25]);
-        let nf = structure_norms(&Act::F(t.clone()));
-        assert!((nf[0] - 2.0).abs() < 1e-6);
-        assert!((nf[1] - 0.75).abs() < 1e-6);
-        let q = QTensor::quantize(&t);
-        let nq = structure_norms(&Act::Q(q));
-        assert!((nq[0] - 2.0).abs() < 0.1);
-        assert!((nq[1] - 0.75).abs() < 0.1);
-    }
-
-    /// The batch engine must be worker-count invariant: identical losses,
-    /// predictions, gradients, op totals and post-batch model state
-    /// (adapted ranges, observers) for 1 and many workers.
-    #[test]
-    fn train_batch_is_worker_count_invariant() {
-        let (mut m1, xs, ys) = deployed(DnnConfig::Uint8, 70);
-        let (mut m2, _, _) = deployed(DnnConfig::Uint8, 70);
-        let refs: Vec<&TensorF32> = xs.iter().collect();
-        let r1 = m1.train_batch(&refs, &ys, 1);
-        let r2 = m2.train_batch(&refs, &ys, 4);
-        assert_eq!(r1.losses, r2.losses);
-        assert_eq!(r1.preds, r2.preds);
-        assert_eq!(r1.fwd_ops, r2.fwd_ops);
-        assert_eq!(r1.bwd_ops, r2.bwd_ops);
-        for (a, b) in r1.grads.iter().zip(r2.grads.iter()) {
-            for (ga, gb) in a.grads.iter().zip(b.grads.iter()) {
-                match (ga, gb) {
-                    (Some(ga), Some(gb)) => {
-                        assert_eq!(ga.gw.data(), gb.gw.data());
-                        assert_eq!(ga.gb.data(), gb.gb.data());
-                        assert_eq!(ga.kept, gb.kept);
-                    }
-                    (None, None) => {}
-                    _ => panic!("gradient presence differs between worker counts"),
-                }
-            }
-        }
-        for (a, b) in m1.act_qp.iter().zip(m2.act_qp.iter()) {
-            assert_eq!(a, b, "adapted activation ranges must match");
-        }
-        for (a, b) in m1.err_obs.iter().zip(m2.err_obs.iter()) {
-            assert_eq!(a.range(), b.range(), "merged observer state must match");
-        }
-    }
-
-    /// Batched gradients must match the per-sample path when the model
-    /// state is frozen (same snapshot semantics): sample 0 sees identical
-    /// conditions in both engines.
-    #[test]
-    fn train_batch_first_sample_matches_sequential() {
-        let (mut mb, xs, ys) = deployed(DnnConfig::Uint8, 71);
-        let (mut ms, _, _) = deployed(DnnConfig::Uint8, 71);
-        let refs: Vec<&TensorF32> = xs.iter().take(1).collect();
-        let rb = mb.train_batch(&refs, &ys[..1], 2);
-        let mut ops = OpCounter::new();
-        let (loss, pred, bwd) = ms.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
-        assert_eq!(rb.losses[0], loss);
-        assert_eq!(rb.preds[0], pred);
-        for (a, b) in rb.grads[0].grads.iter().zip(bwd.grads.iter()) {
-            if let (Some(a), Some(b)) = (a, b) {
-                assert_eq!(a.gw.data(), b.gw.data());
-            }
-        }
-    }
-
-    /// A few FQT steps on the toy problem must reduce the loss — the
-    /// integration smoke test of the whole fwd/bwd stack (full training is
-    /// exercised by `train::` and the benches).
-    #[test]
-    fn quantized_training_reduces_loss_smoke() {
-        use crate::train::Optimizer;
-        let (mut m, xs, ys) = deployed(DnnConfig::Uint8, 68);
-        let mut opt = crate::train::fqt::FqtSgd::new(&m, 0.01, 4);
-        let mut first = 0.0;
-        let mut last = 0.0;
-        let mut ops = OpCounter::new();
-        for epoch in 0..12 {
-            let mut tot = 0.0;
-            for (x, &y) in xs.iter().zip(ys.iter()) {
-                let (loss, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
-                opt.accumulate(&mut m, &bwd, &mut ops);
-                tot += loss;
-            }
-            if epoch == 0 {
-                first = tot;
-            }
-            last = tot;
-        }
-        assert!(last < first * 0.9, "loss did not drop: first={first} last={last}");
     }
 }

@@ -1,0 +1,266 @@
+//! Model-level tests of the executor ([`crate::graph::exec`]) and the
+//! batch engine ([`crate::graph::batch`]), kept in their own file so no
+//! graph source file outgrows the ~400-line budget. Plan-vs-reference
+//! golden parity lives in `tests/plan_parity.rs`.
+
+use crate::graph::exec::*;
+use crate::graph::{models, DnnConfig};
+use crate::kernels::OpCounter;
+use crate::quant::QTensor;
+use crate::tensor::TensorF32;
+use crate::util::prng::Pcg32;
+
+fn toy_data(
+    rng: &mut Pcg32,
+    n: usize,
+    shape: &[usize],
+    classes: usize,
+) -> (Vec<TensorF32>, Vec<usize>) {
+    // Two-class-separable synthetic data: class k biases channel mean.
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..n {
+        let y = i % classes;
+        let mut x = TensorF32::zeros(shape);
+        rng.fill_normal(x.data_mut(), 0.5);
+        for v in x.data_mut().iter_mut() {
+            *v += y as f32 * 0.8;
+        }
+        xs.push(x);
+        ys.push(y);
+    }
+    (xs, ys)
+}
+
+fn deployed(cfg: DnnConfig, seed: u64) -> (NativeModel, Vec<TensorF32>, Vec<usize>) {
+    let mut rng = Pcg32::seeded(seed);
+    let def = models::mnist_cnn(&[1, 12, 12], 3);
+    let fp = FloatParams::init(&def, &mut rng);
+    let (xs, ys) = toy_data(&mut rng, 12, &[1, 12, 12], 3);
+    let calib = calibrate(&def, &fp, &xs[..4]);
+    (NativeModel::build(def, cfg, &fp, &calib), xs, ys)
+}
+
+#[test]
+fn forward_shapes_all_configs() {
+    for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+        let (m, xs, _) = deployed(cfg, 61);
+        let mut ops = OpCounter::new();
+        let t = m.forward(&xs[0], &mut ops);
+        assert_eq!(t.logits.len(), 3, "{cfg:?}");
+        assert_eq!(t.acts.len(), m.def.layers.len());
+        assert!(ops.total_macs() > 0);
+    }
+}
+
+#[test]
+fn quantized_forward_tracks_float_forward() {
+    let (mq, xs, _) = deployed(DnnConfig::Uint8, 62);
+    let (mf, _, _) = deployed(DnnConfig::Float32, 62);
+    let mut ops = OpCounter::new();
+    // identical float masters (same seed) -> logits should correlate
+    let lq = mq.forward(&xs[0], &mut ops).logits;
+    let lf = mf.forward(&xs[0], &mut ops).logits;
+    // rank agreement on the toy problem is enough (quantization noise)
+    let aq = crate::util::stats::argmax(&lq);
+    let af = crate::util::stats::argmax(&lf);
+    assert_eq!(aq, af, "lq={lq:?} lf={lf:?}");
+}
+
+#[test]
+fn uint8_uses_integer_macs_float_uses_float_macs() {
+    let (mq, xs, _) = deployed(DnnConfig::Uint8, 63);
+    let mut ops = OpCounter::new();
+    mq.forward(&xs[0], &mut ops);
+    assert!(ops.int_macs > 0);
+    assert_eq!(ops.float_macs, 0);
+
+    let (mf, _, _) = deployed(DnnConfig::Float32, 63);
+    let mut ops2 = OpCounter::new();
+    mf.forward(&xs[0], &mut ops2);
+    assert!(ops2.float_macs > 0);
+    assert_eq!(ops2.int_macs, 0);
+}
+
+#[test]
+fn mixed_config_crosses_boundary_once() {
+    let (m, xs, _) = deployed(DnnConfig::Mixed, 64);
+    let mut ops = OpCounter::new();
+    let t = m.forward(&xs[0], &mut ops);
+    // feature extractor quantized, head float
+    assert!(matches!(t.acts[0], Act::Q(_)));
+    assert!(matches!(t.acts.last().unwrap(), Act::F(_)));
+    assert!(ops.int_macs > 0 && ops.float_macs > 0);
+}
+
+#[test]
+fn backward_produces_grads_for_trainable_layers_only() {
+    for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+        let (mut m, xs, ys) = deployed(cfg, 65);
+        let mut ops = OpCounter::new();
+        let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
+        for (i, l) in m.def.layers.iter().enumerate() {
+            assert_eq!(bwd.grads[i].is_some(), l.trainable, "layer {i} {cfg:?}");
+        }
+    }
+}
+
+#[test]
+fn grad_shapes_match_weights() {
+    let (mut m, xs, ys) = deployed(DnnConfig::Uint8, 66);
+    let mut ops = OpCounter::new();
+    let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
+    for (i, g) in bwd.grads.iter().enumerate() {
+        if let Some(g) = g {
+            match &m.params[i] {
+                LayerParams::Q { w, bias } => {
+                    assert_eq!(g.gw.shape(), w.shape());
+                    assert_eq!(g.gb.len(), bias.len());
+                }
+                LayerParams::F { w, bias } => {
+                    assert_eq!(g.gw.shape(), w.shape());
+                    assert_eq!(g.gb.len(), bias.len());
+                }
+                LayerParams::None => panic!("grads on weightless layer"),
+            }
+        }
+    }
+}
+
+#[test]
+fn transfer_mode_stops_backprop_early() {
+    let mut rng = Pcg32::seeded(67);
+    let mut def = models::mnist_cnn(&[1, 12, 12], 3);
+    def.set_trainable_tail(2); // only the two linear layers
+    let fp = FloatParams::init(&def, &mut rng);
+    let (xs, ys) = toy_data(&mut rng, 6, &[1, 12, 12], 3);
+    let calib = calibrate(&def, &fp, &xs[..2]);
+    let mut m = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
+
+    let mut ops_full = OpCounter::new();
+    let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops_full);
+    assert!(bwd.grads[0].is_none());
+    assert!(bwd.grads[4].is_some() && bwd.grads[5].is_some());
+
+    // transfer-learning bwd must be cheaper than fwd (Fig. 4b property)
+    let mut ops_fwd = OpCounter::new();
+    m.forward(&xs[0], &mut ops_fwd);
+    let bwd_macs = ops_full.total_macs().saturating_sub(ops_fwd.total_macs());
+    assert!(bwd_macs < ops_fwd.total_macs(), "bwd={} fwd={}", bwd_macs, ops_fwd.total_macs());
+}
+
+#[test]
+fn structure_norms_match_dequantized_l1() {
+    let t = TensorF32::from_vec(&[2, 2], vec![1.0, -1.0, 0.5, 0.25]);
+    let nf = structure_norms(&Act::F(t.clone()));
+    assert!((nf[0] - 2.0).abs() < 1e-6);
+    assert!((nf[1] - 0.75).abs() < 1e-6);
+    let q = QTensor::quantize(&t);
+    let nq = structure_norms(&Act::Q(q));
+    assert!((nq[0] - 2.0).abs() < 0.1);
+    assert!((nq[1] - 0.75).abs() < 0.1);
+}
+
+/// The batch engine must be worker-count invariant: identical losses,
+/// predictions, gradients, op totals and post-batch model state
+/// (adapted ranges, observers) for 1 and many workers.
+#[test]
+fn train_batch_is_worker_count_invariant() {
+    let (mut m1, xs, ys) = deployed(DnnConfig::Uint8, 70);
+    let (mut m2, _, _) = deployed(DnnConfig::Uint8, 70);
+    let refs: Vec<&TensorF32> = xs.iter().collect();
+    let r1 = m1.train_batch(&refs, &ys, 1);
+    let r2 = m2.train_batch(&refs, &ys, 4);
+    assert_eq!(r1.losses, r2.losses);
+    assert_eq!(r1.preds, r2.preds);
+    assert_eq!(r1.fwd_ops, r2.fwd_ops);
+    assert_eq!(r1.bwd_ops, r2.bwd_ops);
+    for (a, b) in r1.grads.iter().zip(r2.grads.iter()) {
+        for (ga, gb) in a.grads.iter().zip(b.grads.iter()) {
+            match (ga, gb) {
+                (Some(ga), Some(gb)) => {
+                    assert_eq!(ga.gw.data(), gb.gw.data());
+                    assert_eq!(ga.gb.data(), gb.gb.data());
+                    assert_eq!(ga.kept, gb.kept);
+                }
+                (None, None) => {}
+                _ => panic!("gradient presence differs between worker counts"),
+            }
+        }
+    }
+    for (a, b) in m1.act_qp.iter().zip(m2.act_qp.iter()) {
+        assert_eq!(a, b, "adapted activation ranges must match");
+    }
+    for (a, b) in m1.err_obs.iter().zip(m2.err_obs.iter()) {
+        assert_eq!(a.range(), b.range(), "merged observer state must match");
+    }
+}
+
+/// Batched gradients must match the per-sample path when the model
+/// state is frozen (same snapshot semantics): sample 0 sees identical
+/// conditions in both engines.
+#[test]
+fn train_batch_first_sample_matches_sequential() {
+    let (mut mb, xs, ys) = deployed(DnnConfig::Uint8, 71);
+    let (mut ms, _, _) = deployed(DnnConfig::Uint8, 71);
+    let refs: Vec<&TensorF32> = xs.iter().take(1).collect();
+    let rb = mb.train_batch(&refs, &ys[..1], 2);
+    let mut ops = OpCounter::new();
+    let (loss, pred, bwd) = ms.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
+    assert_eq!(rb.losses[0], loss);
+    assert_eq!(rb.preds[0], pred);
+    for (a, b) in rb.grads[0].grads.iter().zip(bwd.grads.iter()) {
+        if let (Some(a), Some(b)) = (a, b) {
+            assert_eq!(a.gw.data(), b.gw.data());
+        }
+    }
+}
+
+/// A few FQT steps on the toy problem must reduce the loss — the
+/// integration smoke test of the whole fwd/bwd stack (full training is
+/// exercised by `train::` and the benches).
+#[test]
+fn quantized_training_reduces_loss_smoke() {
+    use crate::train::Optimizer;
+    let (mut m, xs, ys) = deployed(DnnConfig::Uint8, 68);
+    let mut opt = crate::train::fqt::FqtSgd::new(&m, 0.01, 4);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    let mut ops = OpCounter::new();
+    for epoch in 0..12 {
+        let mut tot = 0.0;
+        for (x, &y) in xs.iter().zip(ys.iter()) {
+            let (loss, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
+            opt.accumulate(&mut m, &bwd, &mut ops);
+            tot += loss;
+        }
+        if epoch == 0 {
+            first = tot;
+        }
+        last = tot;
+    }
+    assert!(last < first * 0.9, "loss did not drop: first={first} last={last}");
+}
+
+/// The flatten layer of the planned executor is a zero-copy view: its
+/// trace activation aliases the pool output's buffer.
+#[test]
+fn flatten_activation_aliases_its_input() {
+    let (m, xs, _) = deployed(DnnConfig::Uint8, 72);
+    let mut ops = OpCounter::new();
+    let t = m.forward(&xs[0], &mut ops);
+    let i = m
+        .def
+        .layers
+        .iter()
+        .position(|l| matches!(l.kind, crate::graph::LayerKind::Flatten))
+        .expect("mnist_cnn has a flatten layer");
+    match (&t.acts[i - 1], &t.acts[i]) {
+        (Act::Q(a), Act::Q(b)) => {
+            assert!(b.values.shares_data(&a.values), "flatten must alias its input buffer");
+            assert_eq!(b.len(), a.len());
+            assert_eq!(b.shape().len(), 1);
+        }
+        other => panic!("unexpected activation flavors around flatten: {other:?}"),
+    }
+}

@@ -14,8 +14,16 @@
 //! paper's monolithic QConv block, Fig. 2b), so it never appears as a graph
 //! node.
 
+pub mod act;
+pub mod batch;
 pub mod exec;
+#[cfg(test)]
+mod exec_tests;
 pub mod models;
+pub mod ops;
+pub mod plan;
+pub mod reference;
+mod reference_bwd;
 
 use crate::kernels::ConvGeom;
 

@@ -1,0 +1,208 @@
+//! Fully connected layer ops (quantized and float). Both route their
+//! backward GEMMs through the shared cores as degenerate cases, exactly as
+//! the pre-plan executor did.
+
+use crate::graph::act::{observe_saturation, propagate_qp, Act, LayerParams};
+use crate::graph::exec::LayerGrads;
+use crate::graph::ops::{fwd_input, sparse_keep, ExecCtx, LayerOp, QpSlot};
+use crate::kernels::{fconv, flinear, kept_count, qconv, qlinear};
+use crate::quant::{quantize_bias, QTensor};
+
+/// Quantized (uint8) fully connected layer.
+pub struct QLinearOp {
+    pub layer: usize,
+    pub name: String,
+    pub relu: bool,
+    pub in_qp: QpSlot,
+}
+
+impl LayerOp for QLinearOp {
+    fn layer(&self) -> usize {
+        self.layer
+    }
+
+    fn describe(&self) -> String {
+        format!("qlinear@{}", self.layer)
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        let staged = ctx.staged.take();
+        let input = fwd_input(&staged, &ctx.input, &ctx.acts, l);
+        let xq = match input {
+            Act::Q(t) => t,
+            Act::F(_) => panic!(
+                "layer {l} ({}): expected a quantized input activation, found float32",
+                self.name
+            ),
+        };
+        let (w, bias) = match &ctx.params[l] {
+            LayerParams::Q { w, bias } => (w, bias),
+            other => panic!(
+                "layer {l} ({}): expected quantized (uint8) linear params, found {}",
+                self.name,
+                other.flavor()
+            ),
+        };
+        let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+        let y = qlinear::qlinear_fwd(xq, w, &bq, ctx.act_qp[l], self.relu, ctx.ops);
+        ctx.acts.push(Act::Q(y));
+    }
+
+    fn backward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        let trace = ctx.trace.expect("backward needs a forward trace");
+        let mut err = ctx.err.take().expect("backward error not set");
+        let trainable = ctx.layers[l].trainable;
+        let keep = sparse_keep(ctx, l, trainable, &err);
+        let lin_raw: &Act = if l == 0 { &trace.input } else { &trace.acts[l - 1] };
+        let coerced = match lin_raw {
+            Act::F(t) => Some(Act::Q(QTensor::quantize_with(t, self.in_qp.resolve(ctx)))),
+            Act::Q(_) => None,
+        };
+        let xq = match coerced.as_ref().unwrap_or(lin_raw) {
+            Act::Q(x) => x,
+            Act::F(_) => panic!(
+                "layer {l} ({}): backward expected a quantized input activation, found float32",
+                self.name
+            ),
+        };
+        let eq = match &mut err {
+            Act::Q(e) => e,
+            Act::F(_) => panic!(
+                "layer {l} ({}): backward expected a quantized error, found float32",
+                self.name
+            ),
+        };
+        if self.relu {
+            if let Act::Q(y) = &trace.acts[l] {
+                qconv::relu_bwd_mask_q(eq, y, ctx.ops);
+            }
+        }
+        let (w, _) = match &ctx.params[l] {
+            LayerParams::Q { w, bias } => (w, bias),
+            other => panic!(
+                "layer {l} ({}): backward expected quantized (uint8) linear params, found {}",
+                self.name,
+                other.flavor()
+            ),
+        };
+        if trainable {
+            let (gw, gb) =
+                qlinear::qlinear_bwd_weight_gemm(eq, xq, keep.as_deref(), ctx.scratch, ctx.ops);
+            let total = eq.len();
+            let kept = kept_count(keep.as_deref(), total);
+            ctx.grads[l] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+        }
+        if l > ctx.stop {
+            let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
+            let out_qp = propagate_qp(&mut obs[l - 1], eq, ctx.ops);
+            let next = Act::Q(qlinear::qlinear_bwd_input_gemm(
+                eq,
+                w,
+                out_qp,
+                keep.as_deref(),
+                ctx.scratch,
+                ctx.ops,
+            ));
+            observe_saturation(&mut obs[l - 1], &next);
+            ctx.err = Some(next);
+        }
+    }
+}
+
+/// Float fully connected layer.
+pub struct FLinearOp {
+    pub layer: usize,
+    pub name: String,
+    pub relu: bool,
+}
+
+impl LayerOp for FLinearOp {
+    fn layer(&self) -> usize {
+        self.layer
+    }
+
+    fn describe(&self) -> String {
+        format!("flinear@{}", self.layer)
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        let staged = ctx.staged.take();
+        let input = fwd_input(&staged, &ctx.input, &ctx.acts, l);
+        let xf = match input {
+            Act::F(t) => t,
+            Act::Q(_) => panic!(
+                "layer {l} ({}): expected a float32 input activation, found quantized",
+                self.name
+            ),
+        };
+        let (w, bias) = match &ctx.params[l] {
+            LayerParams::F { w, bias } => (w, bias),
+            other => panic!(
+                "layer {l} ({}): expected float32 linear params, found {}",
+                self.name,
+                other.flavor()
+            ),
+        };
+        let y = flinear::flinear_fwd(xf, w, bias, self.relu, ctx.ops);
+        ctx.acts.push(Act::F(y));
+    }
+
+    fn backward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        let trace = ctx.trace.expect("backward needs a forward trace");
+        let mut err = ctx.err.take().expect("backward error not set");
+        let trainable = ctx.layers[l].trainable;
+        let keep = sparse_keep(ctx, l, trainable, &err);
+        let lin_raw: &Act = if l == 0 { &trace.input } else { &trace.acts[l - 1] };
+        let coerced = match lin_raw {
+            Act::Q(t) => Some(Act::F(t.dequantize())),
+            Act::F(_) => None,
+        };
+        let xf = match coerced.as_ref().unwrap_or(lin_raw) {
+            Act::F(x) => x,
+            Act::Q(_) => panic!(
+                "layer {l} ({}): backward expected a float32 input activation, found quantized",
+                self.name
+            ),
+        };
+        let ef = match &mut err {
+            Act::F(e) => e,
+            Act::Q(_) => panic!(
+                "layer {l} ({}): backward expected a float32 error, found quantized",
+                self.name
+            ),
+        };
+        if self.relu {
+            if let Act::F(y) = &trace.acts[l] {
+                fconv::relu_bwd_mask_f(ef, y, ctx.ops);
+            }
+        }
+        let (w, _) = match &ctx.params[l] {
+            LayerParams::F { w, bias } => (w, bias),
+            other => panic!(
+                "layer {l} ({}): backward expected float32 linear params, found {}",
+                self.name,
+                other.flavor()
+            ),
+        };
+        if trainable {
+            let (gw, gb) = flinear::flinear_bwd_weight_gemm(ef, xf, keep.as_deref(), ctx.ops);
+            let total = ef.len();
+            let kept = kept_count(keep.as_deref(), total);
+            ctx.grads[l] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+        }
+        if l > ctx.stop {
+            let next = Act::F(flinear::flinear_bwd_input_gemm(
+                ef,
+                w,
+                keep.as_deref(),
+                ctx.scratch,
+                ctx.ops,
+            ));
+            ctx.err = Some(next);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! The compiled layer operations executed by the plan
+//! ([`crate::graph::plan::ExecPlan`]).
+//!
+//! Each [`LayerOp`] is one step of the compiled schedule, carrying
+//! everything that is static across samples — geometry, precision,
+//! pre-resolved input-quantization slots, layer indices — so the per-sample
+//! passes are pure dispatch over a `Vec<Box<dyn LayerOp>>` with no shape
+//! inference, precision matching or parameter probing on the hot path.
+//!
+//! Two op families exist:
+//!
+//!  * **compute ops** (`QConvOp`, `FConvOp`, `QLinearOp`, `FLinearOp`,
+//!    `MaxPoolOp`, `GlobalAvgPoolOp`, `FlattenOp`) — one per graph layer,
+//!    calling the exact same kernels as the pre-plan executor did, so
+//!    outputs and [`OpCounter`] accounting are bit-identical;
+//!  * **boundary ops** (`QuantizeOp`, `DequantizeOp`) — the precision
+//!    coercions that previously hid inside the forward/backward loops,
+//!    made explicit plan steps. In the forward direction they coerce the
+//!    running activation into the next layer's precision; in the backward
+//!    direction they coerce the error tensor the opposite way (observing
+//!    float errors into the per-layer min/max observers exactly as
+//!    before).
+//!
+//! The numerics contract is strict: for every model × configuration the
+//! planned passes produce bit-identical activations, logits, gradients,
+//! observer states and op counts to the straight-line reference executor
+//! ([`crate::graph::reference`]) — enforced by `tests/plan_parity.rs`.
+
+mod conv;
+mod linear;
+mod shape;
+
+pub use conv::{FConvOp, QConvOp};
+pub use linear::{FLinearOp, QLinearOp};
+pub use shape::{FlattenOp, GlobalAvgPoolOp, MaxPoolOp};
+
+use crate::graph::act::{structure_norms, Act, LayerParams};
+use crate::graph::exec::{FwdTrace, LayerGrads, MaskProvider};
+use crate::graph::{LayerDef, Precision};
+use crate::kernels::OpCounter;
+use crate::memplan::Scratch;
+use crate::quant::observer::MinMaxObserver;
+use crate::quant::{QParams, QTensor};
+
+/// Where a layer's input quantization parameters live, resolved at plan
+/// time: the nearest preceding producer layer (conv / linear / global
+/// average pool), or the network input. The *values* are read at run time
+/// because activation-range adaptation moves them between steps.
+#[derive(Clone, Copy, Debug)]
+pub enum QpSlot {
+    /// The network input's quantization parameters.
+    Input,
+    /// The activation parameters of producer layer `j`.
+    Layer(usize),
+}
+
+impl QpSlot {
+    pub fn resolve(&self, ctx: &ExecCtx) -> QParams {
+        match self {
+            QpSlot::Input => ctx.input_qp,
+            QpSlot::Layer(j) => ctx.act_qp[*j],
+        }
+    }
+}
+
+/// Mutable execution state threaded through the plan ops. Forward passes
+/// populate `acts`/`argmax`; backward passes consume a [`FwdTrace`] and
+/// populate `grads`. Model state (parameters, precisions, quantization
+/// parameters) is borrowed read-only, so concurrent workers can execute
+/// the same plan over a shared model snapshot.
+pub struct ExecCtx<'a> {
+    /// Per-layer deployed parameters (read-only).
+    pub params: &'a [LayerParams],
+    /// Per-layer precision under the deployed configuration.
+    pub prec: &'a [Precision],
+    /// Per-layer activation quantization parameters.
+    pub act_qp: &'a [QParams],
+    /// Network-input quantization parameters.
+    pub input_qp: QParams,
+    /// Layer definitions (names, trainable flags).
+    pub layers: &'a [LayerDef],
+    /// Earliest layer the backward pass reaches (first trainable layer).
+    pub stop: usize,
+    /// GEMM scratch arena (im2col packings, accumulators).
+    pub scratch: &'a mut Scratch,
+    /// Arithmetic accounting.
+    pub ops: &'a mut OpCounter,
+    /// Forward: the precision-coerced network input.
+    pub input: Option<Act>,
+    /// Forward: per-layer outputs, pushed in execution order.
+    pub acts: Vec<Act>,
+    /// Forward: max-pool argmax routes.
+    pub argmax: Vec<Option<Vec<u32>>>,
+    /// Forward: output of a boundary op awaiting the next compute op.
+    pub staged: Option<Act>,
+    /// Backward: the forward trace being differentiated.
+    pub trace: Option<&'a FwdTrace>,
+    /// Backward: error w.r.t. the current layer's output.
+    pub err: Option<Act>,
+    /// Backward: per-layer error observers.
+    pub err_obs: Option<&'a mut [MinMaxObserver]>,
+    /// Backward: sparse-update mask provider (§III-B controller).
+    pub masks: Option<&'a mut dyn MaskProvider>,
+    /// Backward: per-layer gradients, aligned with the layer list.
+    pub grads: Vec<Option<LayerGrads>>,
+}
+
+/// Resolve a compute op's forward input: the staged boundary output if one
+/// exists, else the previous layer's activation (the network input for
+/// layer 0). Takes the needed context fields separately so callers keep
+/// `ctx.scratch` / `ctx.ops` mutably borrowable while the input is live.
+pub(crate) fn fwd_input<'a>(
+    staged: &'a Option<Act>,
+    input: &'a Option<Act>,
+    acts: &'a [Act],
+    layer: usize,
+) -> &'a Act {
+    match staged {
+        Some(a) => a,
+        None if layer == 0 => input.as_ref().expect("forward input not set"),
+        None => &acts[layer - 1],
+    }
+}
+
+/// Ask the §III-B controller for this layer's structure mask (trainable
+/// layers only), computed from the pre-ReLU error norms — the exact call
+/// sequence of the reference executor, which keeps the controller's
+/// internal state bit-identical between the two paths.
+pub(crate) fn sparse_keep(
+    ctx: &mut ExecCtx,
+    layer: usize,
+    trainable: bool,
+    err: &Act,
+) -> Option<Vec<bool>> {
+    if !trainable {
+        return None;
+    }
+    let norms = structure_norms(err);
+    ctx.masks.as_mut().expect("backward mask provider not set").mask(layer, &norms)
+}
+
+/// One compiled step of the execution plan. `forward` consumes the previous
+/// layer's activation (or the staged boundary output) and pushes its own;
+/// `backward` consumes `ctx.err` and replaces it with the error w.r.t. its
+/// input, filling `ctx.grads` for trainable layers.
+pub trait LayerOp: Send + Sync {
+    /// Index of the graph layer this op belongs to (boundary ops carry the
+    /// index of the layer they feed).
+    fn layer(&self) -> usize;
+
+    /// Short diagnostic label, e.g. `"qconv@3"`.
+    fn describe(&self) -> String;
+
+    /// Whether this op participates in a backward pass that stops at layer
+    /// `stop`. Compute ops run down to and including `stop`; boundary ops
+    /// sit *between* layers and only run while the error still propagates
+    /// past them.
+    fn runs_backward(&self, stop: usize) -> bool {
+        self.layer() >= stop
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx);
+
+    fn backward(&self, ctx: &mut ExecCtx);
+}
+
+/// Forward boundary: quantize the running float activation into the target
+/// layer's uint8 representation. Backward: dequantize the error crossing
+/// the same boundary in reverse.
+///
+/// None of the three shipping `DnnConfig`s produce a float→uint8 crossing
+/// (`Mixed` crosses uint8→float exactly once), so this op is compiled only
+/// for future configurations; it is the exact mirror of [`DequantizeOp`],
+/// whose path the parity suite does exercise.
+pub struct QuantizeOp {
+    pub layer: usize,
+    pub qp: QpSlot,
+}
+
+impl LayerOp for QuantizeOp {
+    fn layer(&self) -> usize {
+        self.layer
+    }
+
+    fn describe(&self) -> String {
+        format!("quantize@{}", self.layer)
+    }
+
+    fn runs_backward(&self, stop: usize) -> bool {
+        self.layer > stop
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx) {
+        let qp = self.qp.resolve(ctx);
+        let src = &ctx.acts[self.layer - 1];
+        let staged = match src {
+            Act::F(t) => Act::Q(QTensor::quantize_with(t, qp)),
+            Act::Q(_) => panic!(
+                "boundary op before layer {}: expected a float activation to quantize",
+                self.layer
+            ),
+        };
+        ctx.staged = Some(staged);
+    }
+
+    fn backward(&self, ctx: &mut ExecCtx) {
+        let err = ctx.err.take().expect("backward error not set at quantize boundary");
+        let next = match err {
+            Act::Q(t) => Act::F(t.dequantize()),
+            Act::F(t) => Act::F(t),
+        };
+        ctx.err = Some(next);
+    }
+}
+
+/// Forward boundary: dequantize the running uint8 activation for a float
+/// target layer. Backward: observe the float error into the previous
+/// layer's min/max observer and quantize it (the fully quantized error
+/// path of §III-A).
+pub struct DequantizeOp {
+    pub layer: usize,
+}
+
+impl LayerOp for DequantizeOp {
+    fn layer(&self) -> usize {
+        self.layer
+    }
+
+    fn describe(&self) -> String {
+        format!("dequantize@{}", self.layer)
+    }
+
+    fn runs_backward(&self, stop: usize) -> bool {
+        self.layer > stop
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx) {
+        let src = &ctx.acts[self.layer - 1];
+        let staged = match src {
+            Act::Q(t) => Act::F(t.dequantize()),
+            Act::F(_) => panic!(
+                "boundary op before layer {}: expected a quantized activation to dequantize",
+                self.layer
+            ),
+        };
+        ctx.staged = Some(staged);
+    }
+
+    fn backward(&self, ctx: &mut ExecCtx) {
+        let err = ctx.err.take().expect("backward error not set at dequantize boundary");
+        let next = match err {
+            Act::F(t) => {
+                let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
+                let o = &mut obs[self.layer - 1];
+                o.observe(t.data());
+                Act::Q(QTensor::quantize_with(&t, o.qparams()))
+            }
+            Act::Q(t) => Act::Q(t),
+        };
+        ctx.err = Some(next);
+    }
+}

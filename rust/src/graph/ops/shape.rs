@@ -1,0 +1,137 @@
+//! Shape / pooling layer ops: max pool, global average pool, and the
+//! zero-copy flatten view.
+
+use crate::graph::act::{propagate_qp, Act};
+use crate::graph::ops::{fwd_input, ExecCtx, LayerOp};
+use crate::kernels::pool;
+
+/// Square max pool (window == stride == `k`), with pre-resolved input
+/// shape for the backward routing.
+pub struct MaxPoolOp {
+    pub layer: usize,
+    pub k: usize,
+    pub in_shape: Vec<usize>,
+}
+
+impl LayerOp for MaxPoolOp {
+    fn layer(&self) -> usize {
+        self.layer
+    }
+
+    fn describe(&self) -> String {
+        format!("maxpool@{}", self.layer)
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        let staged = ctx.staged.take();
+        let input = fwd_input(&staged, &ctx.input, &ctx.acts, l);
+        let (y, am) = match input {
+            Act::Q(xq) => {
+                let o = pool::qmaxpool_fwd(xq, self.k, ctx.ops);
+                (Act::Q(o.y), o.argmax)
+            }
+            Act::F(xf) => {
+                let o = pool::fmaxpool_fwd(xf, self.k, ctx.ops);
+                (Act::F(o.y), o.argmax)
+            }
+        };
+        ctx.argmax[l] = Some(am);
+        ctx.acts.push(y);
+    }
+
+    fn backward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        if l <= ctx.stop {
+            return;
+        }
+        let trace = ctx.trace.expect("backward needs a forward trace");
+        let am = trace.argmax[l].as_ref().expect("pool argmax");
+        let err = ctx.err.take().expect("backward error not set");
+        let next = match err {
+            Act::Q(eq) => Act::Q(pool::qmaxpool_bwd(&eq, am, &self.in_shape, ctx.ops)),
+            Act::F(ef) => Act::F(pool::fmaxpool_bwd(&ef, am, &self.in_shape, ctx.ops)),
+        };
+        ctx.err = Some(next);
+    }
+}
+
+/// Global average pool `[C,H,W] -> [C]`.
+pub struct GlobalAvgPoolOp {
+    pub layer: usize,
+    pub in_shape: Vec<usize>,
+}
+
+impl LayerOp for GlobalAvgPoolOp {
+    fn layer(&self) -> usize {
+        self.layer
+    }
+
+    fn describe(&self) -> String {
+        format!("gap@{}", self.layer)
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        let staged = ctx.staged.take();
+        let input = fwd_input(&staged, &ctx.input, &ctx.acts, l);
+        let y = match input {
+            Act::Q(xq) => Act::Q(pool::qgap_fwd(xq, ctx.act_qp[l], ctx.ops)),
+            Act::F(xf) => Act::F(pool::fgap_fwd(xf, ctx.ops)),
+        };
+        ctx.acts.push(y);
+    }
+
+    fn backward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        if l <= ctx.stop {
+            return;
+        }
+        let err = ctx.err.take().expect("backward error not set");
+        let next = match err {
+            Act::Q(eq) => {
+                let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
+                let out_qp = propagate_qp(&mut obs[l - 1], &eq, ctx.ops);
+                Act::Q(pool::qgap_bwd(&eq, &self.in_shape, out_qp, ctx.ops))
+            }
+            Act::F(ef) => Act::F(pool::fgap_bwd(&ef, &self.in_shape, ctx.ops)),
+        };
+        ctx.err = Some(next);
+    }
+}
+
+/// `[C,H,W] -> [C·H·W]`, as a zero-copy view: the output activation aliases
+/// the input buffer (copy-on-write), so flattening costs no allocation and
+/// no copy in either pass.
+pub struct FlattenOp {
+    pub layer: usize,
+    pub out_len: usize,
+    pub in_shape: Vec<usize>,
+}
+
+impl LayerOp for FlattenOp {
+    fn layer(&self) -> usize {
+        self.layer
+    }
+
+    fn describe(&self) -> String {
+        format!("flatten@{}", self.layer)
+    }
+
+    fn forward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        let staged = ctx.staged.take();
+        let input = fwd_input(&staged, &ctx.input, &ctx.acts, l);
+        let y = input.reshaped(&[self.out_len]);
+        ctx.acts.push(y);
+    }
+
+    fn backward(&self, ctx: &mut ExecCtx) {
+        let l = self.layer;
+        if l <= ctx.stop {
+            return;
+        }
+        let err = ctx.err.take().expect("backward error not set");
+        ctx.err = Some(err.reshaped(&self.in_shape));
+    }
+}

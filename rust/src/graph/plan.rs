@@ -1,0 +1,546 @@
+//! Compile-once execution planning: lower a `ModelDef × DnnConfig` pair
+//! into a trait-based layer-op schedule plus an activation-liveness arena
+//! plan.
+//!
+//! The pre-plan executor re-derived everything per sample: precision
+//! coercions were matched dynamically, parameter flavors probed, shapes
+//! re-inferred, and activations allocated ad hoc. [`ExecPlan::compile`]
+//! does all of that exactly once, at deployment:
+//!
+//!  * **op lowering** — each graph layer becomes one boxed
+//!    [`LayerOp`](crate::graph::ops::LayerOp) (`QConvOp` / `FConvOp` /
+//!    `QLinearOp` / `FLinearOp` / `MaxPoolOp` / `GlobalAvgPoolOp` /
+//!    `FlattenOp`) carrying pre-resolved geometry, input shapes and
+//!    quantization-parameter slots; the precision coercions that hid
+//!    inside the old forward/backward loops become explicit
+//!    `QuantizeOp` / `DequantizeOp` boundary steps;
+//!  * **liveness** — the forward+backward schedule of the real plan
+//!    (including the zero-copy `Flatten` aliasing and the transient
+//!    boundary staging buffers) is lowered onto
+//!    [`crate::memplan::allocate_arena`], giving `planned_peak_bytes` and
+//!    per-buffer arena offsets from the plan itself rather than the
+//!    analytic estimate;
+//!  * **scratch sizing** — every GEMM scratch request the ops can make is
+//!    accumulated into a [`ScratchSpec`], so
+//!    [`Scratch::for_spec`](crate::memplan::Scratch::for_spec) pre-sizes
+//!    one arena that serves the whole training step with zero growth, for
+//!    every configuration (uint8, mixed *and* float32).
+//!
+//! Plan construction is `O(layers)` — independent of sample count and of
+//! spatial extents (only shape arithmetic, no tensor allocation). The
+//! planned passes are bit-identical to the straight-line reference
+//! executor ([`crate::graph::reference`]): same kernels, same call order,
+//! same `OpCounter` accounting (enforced by `tests/plan_parity.rs`).
+
+use crate::graph::act::Act;
+use crate::graph::exec::{BwdResult, FwdTrace, MaskProvider, NativeModel};
+use crate::graph::ops::{
+    DequantizeOp, ExecCtx, FConvOp, FLinearOp, FlattenOp, GlobalAvgPoolOp, LayerOp, MaxPoolOp,
+    QConvOp, QLinearOp, QpSlot, QuantizeOp,
+};
+use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
+use crate::kernels::OpCounter;
+use crate::memplan::{allocate_arena, ArenaItem, ArenaPlan, Scratch, ScratchSpec};
+use crate::quant::observer::MinMaxObserver;
+use crate::quant::QTensor;
+use crate::tensor::TensorF32;
+
+/// A compiled execution schedule for one deployed model configuration.
+pub struct ExecPlan {
+    ops: Vec<Box<dyn LayerOp>>,
+    /// Liveness-planned activation arena for a full training step.
+    arena: ArenaPlan,
+    /// Peak feature-arena bytes of the planned training step.
+    pub planned_peak_bytes: usize,
+    /// Union of every GEMM scratch request the ops can make.
+    spec: ScratchSpec,
+    /// The configuration this plan was compiled for.
+    pub cfg: DnnConfig,
+}
+
+impl ExecPlan {
+    /// Compile the plan for `def` under `cfg`. `O(layers)`: pure shape and
+    /// precision arithmetic, no per-sample work.
+    pub fn compile(def: &ModelDef, cfg: DnnConfig) -> ExecPlan {
+        let prec = def.precisions(cfg);
+        let shapes = def.shapes();
+        // Backward scratch is sized only for the layers the backward pass
+        // can actually visit: weight-gradient buffers for trainable
+        // layers, input-gradient buffers above the earliest trainable
+        // layer. Frozen early layers contribute their forward buffers
+        // only (transfer-learning tails keep arenas small).
+        let stop = def.first_trainable().unwrap_or(def.layers.len());
+        let mut ops: Vec<Box<dyn LayerOp>> = Vec::with_capacity(def.layers.len() + 2);
+        let mut spec = ScratchSpec::default();
+        for (i, l) in def.layers.iter().enumerate() {
+            let in_shape = if i == 0 { def.input_shape.clone() } else { shapes[i - 1].clone() };
+            let prev = if i == 0 { prec[0] } else { prec[i - 1] };
+            if prec[i] != prev {
+                match prec[i] {
+                    Precision::Uint8 => {
+                        ops.push(Box::new(QuantizeOp { layer: i, qp: in_qp_slot(def, i) }))
+                    }
+                    Precision::Float32 => ops.push(Box::new(DequantizeOp { layer: i })),
+                }
+            }
+            match &l.kind {
+                LayerKind::Conv { geom, relu } => {
+                    if !geom.depthwise {
+                        let n_hw = shapes[i][1] * shapes[i][2];
+                        let kdim = geom.cin * geom.kh * geom.kw;
+                        let hw_in = in_shape[1] * in_shape[2];
+                        let krow = geom.cout * geom.kh * geom.kw;
+                        let fwd_col = if geom.is_pointwise() { 0 } else { kdim * n_hw };
+                        match prec[i] {
+                            Precision::Uint8 => {
+                                spec.col_u8 = spec.col_u8.max(fwd_col);
+                                spec.acc_i32 = spec.acc_i32.max(geom.cout * n_hw);
+                                if l.trainable {
+                                    spec.acc_i32 = spec.acc_i32.max(geom.cout * kdim);
+                                }
+                                if i > stop {
+                                    spec.col_u8 = spec.col_u8.max(krow * hw_in);
+                                    spec.acc_i32 = spec.acc_i32.max(geom.cin * hw_in);
+                                    spec.wt_u8 = spec.wt_u8.max(geom.cin * krow);
+                                    spec.zeros_i32 = spec.zeros_i32.max(geom.cin);
+                                }
+                            }
+                            Precision::Float32 => {
+                                spec.col_f32 = spec.col_f32.max(fwd_col);
+                                if i > stop {
+                                    spec.col_f32 = spec.col_f32.max(krow * hw_in);
+                                    spec.wt_f32 = spec.wt_f32.max(geom.cin * krow);
+                                    spec.zeros_f32 = spec.zeros_f32.max(geom.cin);
+                                }
+                            }
+                        }
+                    }
+                    match prec[i] {
+                        Precision::Uint8 => ops.push(Box::new(QConvOp {
+                            layer: i,
+                            name: l.name.clone(),
+                            geom: *geom,
+                            relu: *relu,
+                            in_qp: in_qp_slot(def, i),
+                            in_h: in_shape[1],
+                            in_w: in_shape[2],
+                        })),
+                        Precision::Float32 => ops.push(Box::new(FConvOp {
+                            layer: i,
+                            name: l.name.clone(),
+                            geom: *geom,
+                            relu: *relu,
+                            in_h: in_shape[1],
+                            in_w: in_shape[2],
+                        })),
+                    }
+                }
+                LayerKind::Linear { n_in, n_out, relu } => {
+                    match prec[i] {
+                        Precision::Uint8 => {
+                            if l.trainable {
+                                spec.acc_i32 = spec.acc_i32.max(n_out * n_in);
+                            }
+                            if i > stop {
+                                spec.col_u8 = spec.col_u8.max(*n_out);
+                                spec.acc_i32 = spec.acc_i32.max(*n_in);
+                                spec.zeros_i32 = spec.zeros_i32.max(1);
+                            }
+                        }
+                        Precision::Float32 => {
+                            if i > stop {
+                                spec.col_f32 = spec.col_f32.max(*n_out);
+                                spec.zeros_f32 = spec.zeros_f32.max(1);
+                            }
+                        }
+                    }
+                    match prec[i] {
+                        Precision::Uint8 => ops.push(Box::new(QLinearOp {
+                            layer: i,
+                            name: l.name.clone(),
+                            relu: *relu,
+                            in_qp: in_qp_slot(def, i),
+                        })),
+                        Precision::Float32 => ops.push(Box::new(FLinearOp {
+                            layer: i,
+                            name: l.name.clone(),
+                            relu: *relu,
+                        })),
+                    }
+                }
+                LayerKind::MaxPool { k } => {
+                    ops.push(Box::new(MaxPoolOp { layer: i, k: *k, in_shape }))
+                }
+                LayerKind::GlobalAvgPool => {
+                    ops.push(Box::new(GlobalAvgPoolOp { layer: i, in_shape }))
+                }
+                LayerKind::Flatten => {
+                    let out_len: usize = in_shape.iter().product();
+                    ops.push(Box::new(FlattenOp { layer: i, out_len, in_shape }))
+                }
+            }
+        }
+        let arena = planned_arena(def, cfg, true);
+        ExecPlan { planned_peak_bytes: arena.total_bytes, arena, ops, spec, cfg }
+    }
+
+    /// The compiled schedule, in forward execution order.
+    pub fn ops(&self) -> &[Box<dyn LayerOp>] {
+        &self.ops
+    }
+
+    /// Number of plan steps (compute ops + precision boundary ops).
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The union of all GEMM scratch requests the plan's ops can make.
+    pub fn scratch_spec(&self) -> &ScratchSpec {
+        &self.spec
+    }
+
+    /// Pre-sized scratch arena serving every op of this plan with zero
+    /// growth across a full training step.
+    pub fn make_scratch(&self) -> Scratch {
+        Scratch::for_spec(&self.spec)
+    }
+
+    /// The planned arena placement: `(buffer name, offset, bytes)` per
+    /// liveness-planned buffer, sorted by offset then birth. This is the
+    /// table the harness emits so memory claims are reproducible.
+    pub fn arena_table(&self) -> Vec<(String, usize, usize)> {
+        let mut rows: Vec<(String, usize, usize)> =
+            self.arena.items.iter().map(|(it, off)| (it.name.clone(), *off, it.bytes)).collect();
+        rows.sort_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)));
+        rows
+    }
+
+    /// Run the planned forward pass. Bit-identical (values and op counts)
+    /// to [`crate::graph::reference::forward_reference`].
+    pub fn run_forward(
+        &self,
+        model: &NativeModel,
+        x: &TensorF32,
+        scratch: &mut Scratch,
+        ops: &mut OpCounter,
+    ) -> FwdTrace {
+        let n = model.def.layers.len();
+        let input = match model.prec[0] {
+            Precision::Uint8 => Act::Q(QTensor::quantize_with(x, model.input_qp)),
+            Precision::Float32 => Act::F(x.clone()),
+        };
+        let mut ctx = ExecCtx {
+            params: &model.params,
+            prec: &model.prec,
+            act_qp: &model.act_qp,
+            input_qp: model.input_qp,
+            layers: &model.def.layers,
+            stop: 0,
+            scratch,
+            ops,
+            input: Some(input),
+            acts: Vec::with_capacity(n),
+            argmax: vec![None; n],
+            staged: None,
+            trace: None,
+            err: None,
+            err_obs: None,
+            masks: None,
+            grads: Vec::new(),
+        };
+        for op in &self.ops {
+            op.forward(&mut ctx);
+        }
+        let logits = ctx.acts.last().expect("model must have at least one layer").to_float();
+        FwdTrace {
+            input: ctx.input.take().expect("forward input survives the pass"),
+            acts: ctx.acts,
+            argmax: ctx.argmax,
+            logits: logits.into_vec(),
+        }
+    }
+
+    /// Run the planned backward pass against caller-provided error
+    /// observers. Bit-identical (gradients, observer updates, op counts)
+    /// to [`crate::graph::reference::backward_reference`].
+    pub fn run_backward(
+        &self,
+        model: &NativeModel,
+        trace: &FwdTrace,
+        head_err: TensorF32,
+        masks: &mut dyn MaskProvider,
+        err_obs: &mut [MinMaxObserver],
+        scratch: &mut Scratch,
+        ops: &mut OpCounter,
+    ) -> BwdResult {
+        let n = model.def.layers.len();
+        assert_eq!(err_obs.len(), n, "one error observer per layer");
+        let stop = model.def.first_trainable().unwrap_or(n);
+        let err = match model.prec[n - 1] {
+            Precision::Float32 => Act::F(head_err),
+            Precision::Uint8 => {
+                let obs = &mut err_obs[n - 1];
+                obs.observe(head_err.data());
+                Act::Q(QTensor::quantize_with(&head_err, obs.qparams()))
+            }
+        };
+        let mut ctx = ExecCtx {
+            params: &model.params,
+            prec: &model.prec,
+            act_qp: &model.act_qp,
+            input_qp: model.input_qp,
+            layers: &model.def.layers,
+            stop,
+            scratch,
+            ops,
+            input: None,
+            acts: Vec::new(),
+            argmax: Vec::new(),
+            staged: None,
+            trace: Some(trace),
+            err: Some(err),
+            err_obs: Some(err_obs),
+            masks: Some(masks),
+            grads: (0..n).map(|_| None).collect(),
+        };
+        for op in self.ops.iter().rev() {
+            if op.runs_backward(stop) {
+                op.backward(&mut ctx);
+            }
+        }
+        BwdResult { grads: ctx.grads }
+    }
+}
+
+/// Resolve where layer `i`'s input quantization parameters live: the
+/// nearest preceding producer (conv / linear / global average pool) — pools
+/// and flatten pass quantization parameters through — falling back to the
+/// network input.
+fn in_qp_slot(def: &ModelDef, i: usize) -> QpSlot {
+    for j in (0..i).rev() {
+        match def.layers[j].kind {
+            LayerKind::Conv { .. } | LayerKind::Linear { .. } | LayerKind::GlobalAvgPool => {
+                return QpSlot::Layer(j);
+            }
+            _ => {}
+        }
+    }
+    QpSlot::Input
+}
+
+fn act_bytes(shape: &[usize], prec: Precision) -> usize {
+    let n: usize = shape.iter().product();
+    match prec {
+        Precision::Uint8 => n,
+        Precision::Float32 => n * 4,
+    }
+}
+
+/// Liveness items of the *planned* schedule: the analytic fwd/bwd timeline
+/// refined with what the compiled ops actually allocate — `Flatten` outputs
+/// alias their input buffer (zero-copy view, so they add no arena item,
+/// only extend the aliased buffer's lifetime), and precision boundaries add
+/// transient staging buffers. Timeline: forward step of layer `i` is time
+/// `i`; its backward step is time `2n−1−i`.
+pub fn arena_items(def: &ModelDef, cfg: DnnConfig, training: bool) -> Vec<ArenaItem> {
+    let n = def.layers.len();
+    let prec = def.precisions(cfg);
+    let shapes = def.shapes();
+    let stop = if training { def.first_trainable().unwrap_or(n) } else { n };
+    let bwd_t = |i: usize| 2 * n - 1 - i;
+
+    let mut items: Vec<ArenaItem> = Vec::new();
+    // The input buffer is item 0; if layer 0 is trainable its input must
+    // survive until layer 0's backward step.
+    let input_trainable = training && def.layers.first().is_some_and(|l| l.trainable);
+    let input_death = if input_trainable { bwd_t(0) } else { 0 };
+    items.push(ArenaItem {
+        name: "input".into(),
+        bytes: act_bytes(&def.input_shape, prec[0]),
+        birth: 0,
+        death: input_death,
+    });
+    // items index of the buffer backing each layer's output activation
+    let mut slot: Vec<usize> = Vec::with_capacity(n);
+
+    for i in 0..n {
+        // Death of layer i's output: consumed by layer i+1 in forward;
+        // training extends it to backward uses (weight-gradient input,
+        // ReLU masking, the loss at the head).
+        let mut death = if i + 1 < n { i + 1 } else { i };
+        if training {
+            if i + 1 < n && def.layers[i + 1].trainable {
+                death = death.max(bwd_t(i + 1));
+            }
+            let needs_own_output = matches!(
+                def.layers[i].kind,
+                LayerKind::Conv { relu: true, .. } | LayerKind::Linear { relu: true, .. }
+            );
+            if i >= stop && needs_own_output {
+                death = death.max(bwd_t(i));
+            }
+            if i == n - 1 {
+                death = death.max(bwd_t(n - 1));
+            }
+        }
+        if matches!(def.layers[i].kind, LayerKind::Flatten) {
+            // zero-copy view: no new buffer, extend the aliased one
+            let s = if i == 0 { 0 } else { slot[i - 1] };
+            items[s].death = items[s].death.max(death);
+            slot.push(s);
+        } else {
+            items.push(ArenaItem {
+                name: format!("act{i}"),
+                bytes: act_bytes(&shapes[i], prec[i]),
+                birth: i,
+                death,
+            });
+            slot.push(items.len() - 1);
+        }
+
+        let prev_prec = if i == 0 { prec[0] } else { prec[i - 1] };
+        let crosses = prec[i] != prev_prec;
+        if crosses {
+            // forward boundary staging buffer, transient within step i
+            let in_shape = if i == 0 { &def.input_shape } else { &shapes[i - 1] };
+            items.push(ArenaItem {
+                name: format!("stage{i}"),
+                bytes: act_bytes(in_shape, prec[i]),
+                birth: i,
+                death: i,
+            });
+        }
+        if training {
+            if matches!(def.layers[i].kind, LayerKind::MaxPool { .. }) && i >= stop {
+                let n_out: usize = shapes[i].iter().product();
+                items.push(ArenaItem {
+                    name: format!("argmax{i}"),
+                    bytes: n_out * 4,
+                    birth: i,
+                    death: bwd_t(i),
+                });
+            }
+            // Error buffers: err{i} is produced by layer i+1's backward
+            // (or the loss head) and consumed at bwd(i). A flatten's
+            // backward is a zero-copy reshape, so the error it emits
+            // aliases the one it consumed — the chain is represented by
+            // its top item, with the death extended through the
+            // consecutive flatten layers below it.
+            let produced_by_flatten =
+                i + 1 < n && matches!(def.layers[i + 1].kind, LayerKind::Flatten);
+            if i >= stop && !produced_by_flatten {
+                let mut death = bwd_t(i);
+                let mut j = i;
+                while j > stop && matches!(def.layers[j].kind, LayerKind::Flatten) {
+                    j -= 1;
+                    death = death.max(bwd_t(j));
+                }
+                items.push(ArenaItem {
+                    name: format!("err{i}"),
+                    bytes: act_bytes(&shapes[i], prec[i]),
+                    birth: bwd_t(i).saturating_sub(1),
+                    death,
+                });
+            }
+            // backward staging: the layer input re-coerced across the
+            // boundary for the weight-gradient GEMM, transient at bwd(i)
+            if i >= stop && crosses && def.layers[i].has_weights() {
+                let in_shape = if i == 0 { &def.input_shape } else { &shapes[i - 1] };
+                items.push(ArenaItem {
+                    name: format!("bstage{i}"),
+                    bytes: act_bytes(in_shape, prec[i]),
+                    birth: bwd_t(i),
+                    death: bwd_t(i),
+                });
+            }
+        }
+    }
+    items
+}
+
+/// Arena placement of the planned schedule (see [`arena_items`]).
+pub fn planned_arena(def: &ModelDef, cfg: DnnConfig, training: bool) -> ArenaPlan {
+    allocate_arena(arena_items(def, cfg, training))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn plan_has_one_op_per_layer_plus_boundaries() {
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let n = def.layers.len();
+        assert_eq!(ExecPlan::compile(&def, DnnConfig::Uint8).num_ops(), n);
+        assert_eq!(ExecPlan::compile(&def, DnnConfig::Float32).num_ops(), n);
+        // mixed crosses the precision boundary exactly once (after the
+        // last conv), adding exactly one dequantize boundary op
+        assert_eq!(ExecPlan::compile(&def, DnnConfig::Mixed).num_ops(), n + 1);
+    }
+
+    #[test]
+    fn plan_scratch_spec_covers_uint8_model() {
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let plan = ExecPlan::compile(&def, DnnConfig::Uint8);
+        let spec = plan.scratch_spec();
+        assert!(spec.col_u8 > 0 && spec.acc_i32 > 0 && spec.wt_u8 > 0 && spec.zeros_i32 > 0);
+        // the uint8 plan never touches the float twins
+        assert_eq!(spec.col_f32, 0);
+        assert_eq!(spec.wt_f32, 0);
+        // a float32 plan sizes the float twins instead
+        let fspec = ExecPlan::compile(&def, DnnConfig::Float32).scratch_spec().clone();
+        assert!(fspec.col_f32 > 0 && fspec.wt_f32 > 0 && fspec.zeros_f32 > 0);
+        assert_eq!(fspec.col_u8, 0);
+    }
+
+    #[test]
+    fn planned_arena_is_bounded_and_nonempty() {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let def = models::mbednet(&[3, 16, 16], 5);
+            let plan = ExecPlan::compile(&def, cfg);
+            let total_bytes: usize = arena_items(&def, cfg, true).iter().map(|i| i.bytes).sum();
+            assert!(plan.planned_peak_bytes > 0, "{cfg:?}");
+            assert!(plan.planned_peak_bytes <= total_bytes, "{cfg:?}");
+            assert!(!plan.arena_table().is_empty(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn flatten_adds_no_arena_item() {
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let items = arena_items(&def, DnnConfig::Uint8, true);
+        assert!(items.iter().all(|it| it.name != "act3"), "flatten output must alias");
+        // ... and so does its backward reshape: the error below the
+        // flatten (err2) shares the flatten error's buffer (err3)
+        assert!(items.iter().all(|it| it.name != "err2"), "flatten bwd error must alias");
+        assert!(items.iter().any(|it| it.name == "err3"));
+        // training arena carries error buffers for the trainable layers
+        assert!(items.iter().any(|it| it.name.starts_with("err")));
+    }
+
+    #[test]
+    fn inference_arena_smaller_than_training_arena() {
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let inf = planned_arena(&def, DnnConfig::Uint8, false);
+        let tr = planned_arena(&def, DnnConfig::Uint8, true);
+        assert!(tr.total_bytes > inf.total_bytes, "{} vs {}", tr.total_bytes, inf.total_bytes);
+    }
+
+    #[test]
+    fn compile_is_o_layers_in_op_count() {
+        // structural O(layers) guard: the op count is bounded by
+        // layers + boundary crossings (≤ 1 per layer), for every model
+        for def in [
+            models::mnist_cnn(&[1, 12, 12], 4),
+            models::mbednet(&[3, 16, 16], 5),
+            models::mcunet5fps(&[3, 32, 32], 4),
+        ] {
+            for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+                let plan = ExecPlan::compile(&def, cfg);
+                let n = def.layers.len();
+                assert!(plan.num_ops() >= n && plan.num_ops() <= 2 * n, "{} {cfg:?}", def.name);
+            }
+        }
+    }
+}

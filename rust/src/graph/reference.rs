@@ -1,0 +1,148 @@
+//! Straight-line reference executor — the pre-plan implementation of the
+//! forward and backward passes, retained verbatim as the golden parity
+//! oracle for the compiled layer-op plan (`graph::plan`).
+//!
+//! Production code must not call these: [`NativeModel::forward_in`] and
+//! [`NativeModel::backward_with`] dispatch over the compiled plan. The
+//! property tests in `tests/plan_parity.rs` run both paths over all three
+//! models × all three configurations on random inputs and assert
+//! bit-identical logits, activations, gradients, observer updates and
+//! [`OpCounter`] totals — the contract that keeps refactors of the planned
+//! executor honest.
+
+use crate::graph::act::{Act, LayerParams};
+use crate::graph::exec::{FwdTrace, NativeModel};
+use crate::graph::{LayerKind, Precision};
+use crate::kernels::{fconv, flinear, pool, qconv, qlinear, OpCounter};
+use crate::memplan::Scratch;
+use crate::quant::{quantize_bias, QTensor};
+use crate::tensor::TensorF32;
+
+pub use crate::graph::reference_bwd::backward_reference;
+
+/// Quantization parameters of the input to layer `i` (pools/flatten pass
+/// qparams through).
+pub(crate) fn in_qp(m: &NativeModel, i: usize) -> crate::quant::QParams {
+    if i == 0 {
+        m.input_qp
+    } else {
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            match m.def.layers[j].kind {
+                LayerKind::Conv { .. } | LayerKind::Linear { .. } | LayerKind::GlobalAvgPool => {
+                    return m.act_qp[j];
+                }
+                _ => {}
+            }
+        }
+        m.input_qp
+    }
+}
+
+/// The pre-plan forward pass, byte-for-byte.
+pub fn forward_reference(
+    m: &NativeModel,
+    x: &TensorF32,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> FwdTrace {
+    let n = m.def.layers.len();
+    let mut acts: Vec<Act> = Vec::with_capacity(n);
+    let mut argmax: Vec<Option<Vec<u32>>> = vec![None; n];
+
+    let input = match m.prec[0] {
+        Precision::Uint8 => Act::Q(QTensor::quantize_with(x, m.input_qp)),
+        Precision::Float32 => Act::F(x.clone()),
+    };
+
+    let mut cur = input.clone();
+    for (i, l) in m.def.layers.iter().enumerate() {
+        // coerce the running activation into this layer's precision
+        cur = match (m.prec[i], cur) {
+            (Precision::Uint8, Act::F(t)) => Act::Q(QTensor::quantize_with(&t, in_qp(m, i))),
+            (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
+            (_, c) => c,
+        };
+        cur = match (&l.kind, &cur) {
+            (LayerKind::Conv { geom, relu }, Act::Q(xq)) => {
+                let (w, bias) = match &m.params[i] {
+                    LayerParams::Q { w, bias } => (w, bias),
+                    other => panic!(
+                        "layer {i} ({}): expected quantized (uint8) conv params, found {}",
+                        l.name,
+                        other.flavor()
+                    ),
+                };
+                let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                let y = if geom.depthwise {
+                    qconv::qconv2d_fwd(xq, w, &bq, geom, m.act_qp[i], *relu, ops)
+                } else {
+                    qconv::qconv2d_fwd_gemm(xq, w, &bq, geom, m.act_qp[i], *relu, scratch, ops)
+                };
+                Act::Q(y)
+            }
+            (LayerKind::Conv { geom, relu }, Act::F(xf)) => {
+                let (w, bias) = match &m.params[i] {
+                    LayerParams::F { w, bias } => (w, bias),
+                    other => panic!(
+                        "layer {i} ({}): expected float32 conv params, found {}",
+                        l.name,
+                        other.flavor()
+                    ),
+                };
+                let y = if geom.depthwise {
+                    fconv::fconv2d_fwd(xf, w, bias, geom, *relu, ops)
+                } else {
+                    fconv::fconv2d_fwd_gemm(xf, w, bias, geom, *relu, scratch, ops)
+                };
+                Act::F(y)
+            }
+            (LayerKind::Linear { relu, .. }, Act::Q(xq)) => {
+                let (w, bias) = match &m.params[i] {
+                    LayerParams::Q { w, bias } => (w, bias),
+                    other => panic!(
+                        "layer {i} ({}): expected quantized (uint8) linear params, found {}",
+                        l.name,
+                        other.flavor()
+                    ),
+                };
+                let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                Act::Q(qlinear::qlinear_fwd(xq, w, &bq, m.act_qp[i], *relu, ops))
+            }
+            (LayerKind::Linear { relu, .. }, Act::F(xf)) => {
+                let (w, bias) = match &m.params[i] {
+                    LayerParams::F { w, bias } => (w, bias),
+                    other => panic!(
+                        "layer {i} ({}): expected float32 linear params, found {}",
+                        l.name,
+                        other.flavor()
+                    ),
+                };
+                Act::F(flinear::flinear_fwd(xf, w, bias, *relu, ops))
+            }
+            (LayerKind::MaxPool { k }, Act::Q(xq)) => {
+                let o = pool::qmaxpool_fwd(xq, *k, ops);
+                argmax[i] = Some(o.argmax);
+                Act::Q(o.y)
+            }
+            (LayerKind::MaxPool { k }, Act::F(xf)) => {
+                let o = pool::fmaxpool_fwd(xf, *k, ops);
+                argmax[i] = Some(o.argmax);
+                Act::F(o.y)
+            }
+            (LayerKind::GlobalAvgPool, Act::Q(xq)) => {
+                Act::Q(pool::qgap_fwd(xq, m.act_qp[i], ops))
+            }
+            (LayerKind::GlobalAvgPool, Act::F(xf)) => Act::F(pool::fgap_fwd(xf, ops)),
+            (LayerKind::Flatten, a) => {
+                let flat: usize = a.shape().iter().product();
+                a.reshaped(&[flat])
+            }
+        };
+        acts.push(cur.clone());
+    }
+
+    let logits = acts.last().unwrap().to_float().into_vec();
+    FwdTrace { input, acts, argmax, logits }
+}

@@ -1,0 +1,345 @@
+//! Backward half of the straight-line reference executor — see
+//! [`crate::graph::reference`] for the contract. Split into its own file
+//! only to keep every graph source file within the ~400-line budget; the
+//! code is the pre-plan implementation, verbatim.
+
+use crate::graph::act::{observe_saturation, propagate_qp, structure_norms, Act, LayerParams};
+use crate::graph::exec::{BwdResult, FwdTrace, LayerGrads, MaskProvider, NativeModel};
+use crate::graph::reference::in_qp;
+use crate::graph::{LayerKind, Precision};
+use crate::kernels::{fconv, flinear, kept_count, pool, qconv, qlinear, OpCounter};
+use crate::memplan::Scratch;
+use crate::quant::observer::MinMaxObserver;
+use crate::quant::QTensor;
+use crate::tensor::TensorF32;
+
+/// The pre-plan backward pass, byte-for-byte, against caller-provided
+/// error observers.
+pub fn backward_reference(
+    m: &NativeModel,
+    trace: &FwdTrace,
+    head_err: TensorF32,
+    masks: &mut dyn MaskProvider,
+    err_obs: &mut [MinMaxObserver],
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> BwdResult {
+    let n = m.def.layers.len();
+    assert_eq!(err_obs.len(), n, "one error observer per layer");
+    let stop = m.def.first_trainable().unwrap_or(n);
+    let mut grads: Vec<Option<LayerGrads>> = (0..n).map(|_| None).collect();
+
+    // Error w.r.t. the output of layer `i`, in layer i's precision.
+    let mut err: Act = match m.prec[n - 1] {
+        Precision::Float32 => Act::F(head_err),
+        Precision::Uint8 => {
+            let obs = &mut err_obs[n - 1];
+            obs.observe(head_err.data());
+            Act::Q(QTensor::quantize_with(&head_err, obs.qparams()))
+        }
+    };
+
+    for i in (stop..n).rev() {
+        let l = m.def.layers[i].clone();
+        // Coerce error into this layer's precision (mixed boundary).
+        err = match (m.prec[i], err) {
+            (Precision::Uint8, Act::F(t)) => {
+                let obs = &mut err_obs[i];
+                obs.observe(t.data());
+                Act::Q(QTensor::quantize_with(&t, obs.qparams()))
+            }
+            (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
+            (_, e) => e,
+        };
+
+        let layer_in: Act = if i == 0 { trace.input.clone() } else { trace.acts[i - 1].clone() };
+        // Input act coerced to this layer's precision (as in forward).
+        let layer_in = match (m.prec[i], layer_in) {
+            (Precision::Uint8, Act::F(t)) => Act::Q(QTensor::quantize_with(&t, in_qp(m, i))),
+            (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
+            (_, a) => a,
+        };
+
+        match (&l.kind, &mut err) {
+            (LayerKind::Conv { geom, relu }, e) => {
+                let keep = if l.trainable {
+                    let norms = structure_norms(e);
+                    masks.mask(i, &norms)
+                } else {
+                    None
+                };
+                match e {
+                    Act::Q(eq) => {
+                        if *relu {
+                            if let Act::Q(y) = &trace.acts[i] {
+                                qconv::relu_bwd_mask_q(eq, y, ops);
+                            }
+                        }
+                        let (w, _) = match &m.params[i] {
+                            LayerParams::Q { w, bias } => (w, bias),
+                            other => panic!(
+                                "layer {i} ({}): backward expected quantized (uint8) conv \
+                                 params, found {}",
+                                l.name,
+                                other.flavor()
+                            ),
+                        };
+                        let xq = match &layer_in {
+                            Act::Q(x) => x,
+                            Act::F(_) => panic!(
+                                "layer {i} ({}): backward expected a quantized input \
+                                 activation, found float32",
+                                l.name
+                            ),
+                        };
+                        if l.trainable {
+                            let (gw, gb) = if geom.depthwise {
+                                qconv::qconv2d_bwd_weight(eq, xq, geom, keep.as_deref(), ops)
+                            } else {
+                                qconv::qconv2d_bwd_weight_gemm(
+                                    eq,
+                                    xq,
+                                    geom,
+                                    keep.as_deref(),
+                                    scratch,
+                                    ops,
+                                )
+                            };
+                            let total = geom.cout;
+                            let kept = kept_count(keep.as_deref(), total);
+                            grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                        }
+                        if i > stop {
+                            let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
+                            let prev_obs = &mut err_obs[i - 1];
+                            let out_qp = propagate_qp(prev_obs, eq, ops);
+                            err = if geom.depthwise {
+                                Act::Q(qconv::qconv2d_bwd_input(
+                                    eq,
+                                    w,
+                                    geom,
+                                    h,
+                                    w_in,
+                                    out_qp,
+                                    keep.as_deref(),
+                                    ops,
+                                ))
+                            } else {
+                                Act::Q(qconv::qconv2d_bwd_input_gemm(
+                                    eq,
+                                    w,
+                                    geom,
+                                    h,
+                                    w_in,
+                                    out_qp,
+                                    keep.as_deref(),
+                                    scratch,
+                                    ops,
+                                ))
+                            };
+                            observe_saturation(&mut err_obs[i - 1], &err);
+                        }
+                    }
+                    Act::F(ef) => {
+                        if *relu {
+                            if let Act::F(y) = &trace.acts[i] {
+                                fconv::relu_bwd_mask_f(ef, y, ops);
+                            }
+                        }
+                        let (w, _) = match &m.params[i] {
+                            LayerParams::F { w, bias } => (w, bias),
+                            other => panic!(
+                                "layer {i} ({}): backward expected float32 conv params, \
+                                 found {}",
+                                l.name,
+                                other.flavor()
+                            ),
+                        };
+                        let xf = match &layer_in {
+                            Act::F(x) => x,
+                            Act::Q(_) => panic!(
+                                "layer {i} ({}): backward expected a float32 input \
+                                 activation, found quantized",
+                                l.name
+                            ),
+                        };
+                        if l.trainable {
+                            let (gw, gb) = if geom.depthwise {
+                                fconv::fconv2d_bwd_weight(ef, xf, geom, keep.as_deref(), ops)
+                            } else {
+                                fconv::fconv2d_bwd_weight_gemm(
+                                    ef,
+                                    xf,
+                                    geom,
+                                    keep.as_deref(),
+                                    scratch,
+                                    ops,
+                                )
+                            };
+                            let total = geom.cout;
+                            let kept = kept_count(keep.as_deref(), total);
+                            grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                        }
+                        if i > stop {
+                            let (h, w_in) = (layer_in.shape()[1], layer_in.shape()[2]);
+                            err = if geom.depthwise {
+                                Act::F(fconv::fconv2d_bwd_input(
+                                    ef,
+                                    w,
+                                    geom,
+                                    h,
+                                    w_in,
+                                    keep.as_deref(),
+                                    ops,
+                                ))
+                            } else {
+                                Act::F(fconv::fconv2d_bwd_input_gemm(
+                                    ef,
+                                    w,
+                                    geom,
+                                    h,
+                                    w_in,
+                                    keep.as_deref(),
+                                    scratch,
+                                    ops,
+                                ))
+                            };
+                        }
+                    }
+                }
+            }
+            (LayerKind::Linear { .. }, e) => {
+                let relu = matches!(l.kind, LayerKind::Linear { relu: true, .. });
+                let keep = if l.trainable {
+                    let norms = structure_norms(e);
+                    masks.mask(i, &norms)
+                } else {
+                    None
+                };
+                match e {
+                    Act::Q(eq) => {
+                        if relu {
+                            if let Act::Q(y) = &trace.acts[i] {
+                                qconv::relu_bwd_mask_q(eq, y, ops);
+                            }
+                        }
+                        let (w, _) = match &m.params[i] {
+                            LayerParams::Q { w, bias } => (w, bias),
+                            other => panic!(
+                                "layer {i} ({}): backward expected quantized (uint8) linear \
+                                 params, found {}",
+                                l.name,
+                                other.flavor()
+                            ),
+                        };
+                        let xq = match &layer_in {
+                            Act::Q(x) => x,
+                            Act::F(_) => panic!(
+                                "layer {i} ({}): backward expected a quantized input \
+                                 activation, found float32",
+                                l.name
+                            ),
+                        };
+                        if l.trainable {
+                            let (gw, gb) = qlinear::qlinear_bwd_weight_gemm(
+                                eq,
+                                xq,
+                                keep.as_deref(),
+                                scratch,
+                                ops,
+                            );
+                            let total = eq.len();
+                            let kept = kept_count(keep.as_deref(), total);
+                            grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                        }
+                        if i > stop {
+                            let prev_obs = &mut err_obs[i - 1];
+                            let out_qp = propagate_qp(prev_obs, eq, ops);
+                            err = Act::Q(qlinear::qlinear_bwd_input_gemm(
+                                eq,
+                                w,
+                                out_qp,
+                                keep.as_deref(),
+                                scratch,
+                                ops,
+                            ));
+                            observe_saturation(&mut err_obs[i - 1], &err);
+                        }
+                    }
+                    Act::F(ef) => {
+                        if relu {
+                            if let Act::F(y) = &trace.acts[i] {
+                                fconv::relu_bwd_mask_f(ef, y, ops);
+                            }
+                        }
+                        let (w, _) = match &m.params[i] {
+                            LayerParams::F { w, bias } => (w, bias),
+                            other => panic!(
+                                "layer {i} ({}): backward expected float32 linear params, \
+                                 found {}",
+                                l.name,
+                                other.flavor()
+                            ),
+                        };
+                        let xf = match &layer_in {
+                            Act::F(x) => x,
+                            Act::Q(_) => panic!(
+                                "layer {i} ({}): backward expected a float32 input \
+                                 activation, found quantized",
+                                l.name
+                            ),
+                        };
+                        if l.trainable {
+                            let (gw, gb) =
+                                flinear::flinear_bwd_weight_gemm(ef, xf, keep.as_deref(), ops);
+                            let total = ef.len();
+                            let kept = kept_count(keep.as_deref(), total);
+                            grads[i] = Some(LayerGrads { gw, gb, kept: (kept, total) });
+                        }
+                        if i > stop {
+                            err = Act::F(flinear::flinear_bwd_input_gemm(
+                                ef,
+                                w,
+                                keep.as_deref(),
+                                scratch,
+                                ops,
+                            ));
+                        }
+                    }
+                }
+            }
+            (LayerKind::MaxPool { .. }, e) => {
+                if i > stop {
+                    let am = trace.argmax[i].as_ref().expect("pool argmax");
+                    err = match e {
+                        Act::Q(eq) => {
+                            Act::Q(pool::qmaxpool_bwd(eq, am, &layer_in.shape().to_vec(), ops))
+                        }
+                        Act::F(ef) => {
+                            Act::F(pool::fmaxpool_bwd(ef, am, &layer_in.shape().to_vec(), ops))
+                        }
+                    };
+                }
+            }
+            (LayerKind::GlobalAvgPool, e) => {
+                if i > stop {
+                    err = match e {
+                        Act::Q(eq) => {
+                            let prev_obs = &mut err_obs[i - 1];
+                            let out_qp = propagate_qp(prev_obs, eq, ops);
+                            Act::Q(pool::qgap_bwd(eq, &layer_in.shape().to_vec(), out_qp, ops))
+                        }
+                        Act::F(ef) => Act::F(pool::fgap_bwd(ef, &layer_in.shape().to_vec(), ops)),
+                    };
+                }
+            }
+            (LayerKind::Flatten, e) => {
+                if i > stop {
+                    err = e.reshaped(&layer_in.shape().to_vec());
+                }
+            }
+        }
+    }
+
+    BwdResult { grads }
+}

@@ -11,11 +11,12 @@
 //!
 //! Accuracy runs use each dataset's *reduced* shape; memory/latency/energy
 //! come from the memory planner and device cost model at the *paper*
-//! shape (DESIGN.md §3).
+//! shape (DESIGN.md §4).
 
 use crate::data::{DatasetSpec, Domain};
 use crate::device::{Cost, DeviceModel};
 use crate::graph::exec::{calibrate, FloatParams, NativeModel};
+use crate::graph::plan::ExecPlan;
 use crate::graph::{models, DnnConfig, ModelDef};
 use crate::kernels::OpCounter;
 use crate::memplan::{self, MemoryReport};
@@ -23,6 +24,7 @@ use crate::train::fqt::FqtSgd;
 use crate::train::loop_::{self, Sparsity, Split, TrainReport};
 use crate::train::sparse::DynamicSparse;
 use crate::util::bench::env_usize;
+use crate::util::json::Json;
 use crate::util::prng::Pcg32;
 
 /// Scaling knobs from the environment.
@@ -221,6 +223,33 @@ pub fn tl_memory(spec: &DatasetSpec, cfg: DnnConfig) -> MemoryReport {
     memplan::plan(&def, cfg, true)
 }
 
+/// Memory section of the run-report JSON: the analytic three-segment
+/// report (pass the one already computed for the row, e.g. by
+/// [`tl_memory`]) plus the compiled plan's arena — `planned_peak_bytes`
+/// and the per-buffer `(name, offset, bytes)` placement — so Fig. 5-style
+/// memory claims are reproducible from a single recorded run.
+pub fn memory_json(def: &ModelDef, cfg: DnnConfig, rep: &MemoryReport) -> Json {
+    let plan = ExecPlan::compile(def, cfg);
+    let slots: Vec<Json> = plan
+        .arena_table()
+        .iter()
+        .map(|(name, offset, bytes)| {
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("offset", Json::Num(*offset as f64)),
+                ("bytes", Json::Num(*bytes as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("feature_ram", Json::Num(rep.feature_ram as f64)),
+        ("weight_ram", Json::Num(rep.weight_ram as f64)),
+        ("flash", Json::Num(rep.flash as f64)),
+        ("planned_peak_bytes", Json::Num(rep.planned_peak_bytes as f64)),
+        ("arena", Json::Arr(slots)),
+    ])
+}
+
 /// Mean and std over per-run values.
 pub fn mean_std(vals: &[f32]) -> (f32, f32) {
     (crate::util::stats::mean(vals), crate::util::stats::std(vals))
@@ -289,6 +318,21 @@ mod tests {
         assert_eq!(rep.epochs.len(), 2);
         assert!(rep.samples_seen > 0);
         assert!(rep.fwd_ops.total_macs() > 0 && rep.bwd_ops.total_macs() > 0);
+    }
+
+    #[test]
+    fn memory_json_carries_plan_arena() {
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let rep = memplan::plan(&def, DnnConfig::Uint8, true);
+        let j = memory_json(&def, DnnConfig::Uint8, &rep);
+        assert!(j.get("planned_peak_bytes").as_f64().unwrap() > 0.0);
+        let arena = j.get("arena").as_arr().unwrap();
+        assert!(!arena.is_empty());
+        for slot in arena {
+            assert!(slot.get("bytes").as_f64().unwrap() > 0.0);
+            assert!(slot.get("offset").as_f64().is_some());
+            assert!(slot.get("name").as_str().is_some());
+        }
     }
 
     #[test]

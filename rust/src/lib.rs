@@ -33,6 +33,16 @@
 //!    engine is **bit-exact** with the scalar reference and produces
 //!    **bit-identical weights for every worker count** (property-tested).
 //!
+//! Both passes execute through a **compile-once layer-op plan**
+//! ([`graph::plan::ExecPlan`]): at deployment the graph is lowered into a
+//! `Vec<Box<dyn LayerOp>>` with pre-resolved shapes, precisions and
+//! quantization-parameter slots, plus a liveness-planned activation arena
+//! (`planned_peak_bytes`) and the exact scratch requirements of a
+//! training step — so a step performs zero arena growth after plan
+//! construction, `Flatten` is a zero-copy view, and per-sample execution
+//! is pure dispatch. The pre-plan straight-line executor is retained in
+//! [`graph::reference`] as the golden parity oracle (DESIGN.md §3).
+//!
 //! ## Cargo features
 //!
 //!  * `pjrt` (off by default) — compiles the PJRT runtime

@@ -26,6 +26,22 @@
 
 use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
 
+/// Exact scratch requirements of a compiled execution plan: the union of
+/// every buffer request the plan's ops can make, per backing buffer.
+/// Computed by `graph::plan::ExecPlan::compile` (which knows each layer's
+/// precision, so float models get their f32 twins pre-sized too) and
+/// consumed by [`Scratch::for_spec`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScratchSpec {
+    pub col_u8: usize,
+    pub col_f32: usize,
+    pub acc_i32: usize,
+    pub wt_u8: usize,
+    pub wt_f32: usize,
+    pub zeros_i32: usize,
+    pub zeros_f32: usize,
+}
+
 /// Reusable scratch buffers for the im2col/GEMM conv path.
 ///
 /// Holds the packed im2col matrix (u8 for the quantized path, f32 for the
@@ -53,62 +69,32 @@ impl Scratch {
         Scratch::default()
     }
 
-    /// Arena pre-sized for the largest non-depthwise conv and linear
-    /// layers of `def`, covering both the forward im2col buffers and the
-    /// backward packing/accumulator buffers of the **uint8 path** (the
-    /// paper's main configuration), so a uint8 training step allocates
-    /// exactly once, at model-deployment time. The f32 twins follow the
-    /// convention below: they grow exactly once, on a float32/mixed
-    /// model's first pass, and stay empty on uint8 models.
-    pub fn for_model(def: &ModelDef) -> Scratch {
+    /// Arena pre-sized from a compiled plan's [`ScratchSpec`]: every
+    /// buffer is resized to the largest request any op of the plan can
+    /// make, so a full training step — uint8, mixed *or* float32 —
+    /// performs zero arena growth after construction (asserted by the
+    /// arena-capacity tests in `tests/plan_parity.rs`).
+    pub fn for_spec(spec: &ScratchSpec) -> Scratch {
         let mut s = Scratch::new();
-        let shapes = def.shapes();
-        let mut prev = def.input_shape.clone();
-        for (i, l) in def.layers.iter().enumerate() {
-            match &l.kind {
-                LayerKind::Conv { geom, .. } if !geom.depthwise => {
-                    let n = shapes[i][1] * shapes[i][2]; // Oh·Ow
-                    let kdim = geom.cin * geom.kh * geom.kw;
-                    s.reserve(kdim * n, geom.cout * n);
-                    // backward: dW accumulator [Cout, kdim], dX packing
-                    // [Cin, Cout·Kh·Kw] × col[Cout·Kh·Kw, H·W] + acc/init
-                    let hw_in = prev[1] * prev[2];
-                    let krow = geom.cout * geom.kh * geom.kw;
-                    s.reserve(krow * hw_in, geom.cout * kdim);
-                    s.reserve(0, geom.cin * hw_in);
-                    if s.wt_u8.len() < geom.cin * krow {
-                        s.wt_u8.resize(geom.cin * krow, 0);
-                    }
-                    if s.zeros_i32.len() < geom.cin {
-                        s.zeros_i32.resize(geom.cin, 0);
-                    }
-                }
-                LayerKind::Linear { n_in, n_out, .. } => {
-                    // backward: the rank-1 dW GEMM accumulates [Out, In] in
-                    // i32; the input-gradient GEMM copies the masked error
-                    // (Out u8) and needs a 1-element zero row_init.
-                    s.reserve(*n_out, n_out * n_in);
-                    if s.zeros_i32.is_empty() {
-                        s.zeros_i32.push(0);
-                    }
-                }
-                _ => {}
-            }
-            prev = shapes[i].clone();
-        }
+        s.col_u8.resize(spec.col_u8, 0);
+        s.col_f32.resize(spec.col_f32, 0.0);
+        s.acc_i32.resize(spec.acc_i32, 0);
+        s.wt_u8.resize(spec.wt_u8, 0);
+        s.wt_f32.resize(spec.wt_f32, 0.0);
+        s.zeros_i32.resize(spec.zeros_i32, 0);
+        s.zeros_f32.resize(spec.zeros_f32, 0.0);
         s
     }
 
-    // The f32 column buffer is deliberately *not* pre-reserved: the uint8
-    // configuration (the paper's main path) never touches it, and a
-    // float32/mixed model grows it exactly once on its first forward.
-    fn reserve(&mut self, col: usize, acc: usize) {
-        if self.col_u8.len() < col {
-            self.col_u8.resize(col, 0);
-        }
-        if self.acc_i32.len() < acc {
-            self.acc_i32.resize(acc, 0);
-        }
+    /// Arena pre-sized for the **uint8 deployment** of `def` (the paper's
+    /// main configuration). Delegates to the compiled execution plan's
+    /// exact scratch requirements (`graph::plan::ExecPlan::compile`), so
+    /// this and [`Scratch::for_spec`] can never drift apart. Kept for
+    /// callers that hold a `ModelDef` but no deployed model; production
+    /// paths use `NativeModel::make_scratch`, which additionally covers
+    /// the float32/mixed configurations.
+    pub fn for_model(def: &ModelDef) -> Scratch {
+        crate::graph::plan::ExecPlan::compile(def, DnnConfig::Uint8).make_scratch()
     }
 
     /// Borrow the u8 im2col buffer and the i32 accumulator tile for one
@@ -247,12 +233,20 @@ pub fn allocate_arena(mut items: Vec<ArenaItem>) -> ArenaPlan {
 /// The three-segment memory report (Figs. 4c/4d).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MemoryReport {
-    /// Feature-map arena bytes (activations + error tensors + argmaxes).
+    /// Feature-map arena bytes (activations + error tensors + argmaxes),
+    /// from the analytic per-layer timeline.
     pub feature_ram: usize,
     /// Trainable weights + gradient buffers + optimizer state bytes.
     pub weight_ram: usize,
     /// Frozen weights + runtime image bytes.
     pub flash: usize,
+    /// Peak feature-arena bytes of the *compiled execution plan*
+    /// (`graph::plan`): the liveness of what the planned ops actually
+    /// allocate — zero-copy `Flatten` aliasing included, transient
+    /// precision-boundary staging buffers included — lowered onto
+    /// [`allocate_arena`]. This is the number the harness reports so
+    /// Fig. 5-style memory claims are reproducible from one run.
+    pub planned_peak_bytes: usize,
 }
 
 impl MemoryReport {
@@ -373,7 +367,13 @@ pub fn plan(def: &ModelDef, cfg: DnnConfig, training: bool) -> MemoryReport {
         }
     }
 
-    MemoryReport { feature_ram: arena.total_bytes, weight_ram, flash }
+    let planned = crate::graph::plan::planned_arena(def, cfg, training);
+    MemoryReport {
+        feature_ram: arena.total_bytes,
+        weight_ram,
+        flash,
+        planned_peak_bytes: planned.total_bytes,
+    }
 }
 
 #[cfg(test)]
@@ -530,6 +530,37 @@ mod tests {
         let before = s2.reserved_bytes();
         let _ = s2.qconv_bwd_bufs(4, 9, 16, 1);
         assert_eq!(s2.reserved_bytes(), before);
+    }
+
+    #[test]
+    fn scratch_for_spec_presizes_exactly() {
+        let spec = ScratchSpec {
+            col_u8: 10,
+            col_f32: 4,
+            acc_i32: 6,
+            wt_u8: 3,
+            wt_f32: 2,
+            zeros_i32: 5,
+            zeros_f32: 1,
+        };
+        let s = Scratch::for_spec(&spec);
+        assert_eq!(s.reserved_bytes(), 10 + 3 + (4 + 2) * 4 + (6 + 5 + 1) * 4);
+        // serving requests within the spec must not grow the arena
+        let mut s2 = s.clone();
+        let before = s2.reserved_bytes();
+        let _ = s2.qconv_bufs(10, 6);
+        let _ = s2.qconv_bwd_bufs(3, 10, 6, 5);
+        let _ = s2.fconv_bwd_bufs(2, 4, 1);
+        assert_eq!(s2.reserved_bytes(), before);
+    }
+
+    #[test]
+    fn memory_report_carries_planned_peak() {
+        let m = models::mnist_cnn(&[1, 28, 28], 10);
+        let tr = plan(&m, DnnConfig::Uint8, true);
+        let inf = plan(&m, DnnConfig::Uint8, false);
+        assert!(tr.planned_peak_bytes > 0);
+        assert!(tr.planned_peak_bytes > inf.planned_peak_bytes);
     }
 
     #[test]

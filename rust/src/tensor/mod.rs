@@ -9,12 +9,20 @@
 //! Three element types are used, mirroring the MCU memory layout:
 //! `u8` (quantized values), `i32` (accumulators / bias), `f32` (gradient
 //! buffers, float-config layers).
+//!
+//! Storage is shared copy-on-write (`Arc`-backed): `clone` and
+//! [`Tensor::reshape`] are O(1) and alias the same buffer — this is what
+//! makes `Flatten` a zero-copy view in the planned executor — while
+//! [`Tensor::data_mut`] unshares on first write, so value semantics are
+//! preserved exactly.
 
-/// A dense row-major tensor.
+use std::sync::Arc;
+
+/// A dense row-major tensor with shared copy-on-write storage.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor<T> {
     shape: Vec<usize>,
-    data: Vec<T>,
+    data: Arc<Vec<T>>,
 }
 
 pub type TensorU8 = Tensor<u8>;
@@ -25,7 +33,7 @@ impl<T: Copy + Default> Tensor<T> {
     /// Zero-filled tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![T::default(); n]) }
     }
 
     /// Build from existing data; length must match the shape product.
@@ -37,13 +45,13 @@ impl<T: Copy + Default> Tensor<T> {
             shape,
             data.len()
         );
-        Tensor { shape: shape.to_vec(), data }
+        Tensor { shape: shape.to_vec(), data: Arc::new(data) }
     }
 
     /// Tensor filled with a constant.
     pub fn full(shape: &[usize], v: T) -> Self {
         let n: usize = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+        Tensor { shape: shape.to_vec(), data: Arc::new(vec![v; n]) }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -59,21 +67,32 @@ impl<T: Copy + Default> Tensor<T> {
     }
 
     pub fn data(&self) -> &[T] {
-        &self.data
+        self.data.as_slice()
     }
 
+    /// Mutable view of the elements. Unshares the buffer first if it is
+    /// aliased by another tensor (copy-on-write), so mutation never
+    /// observes or affects an aliasing view.
     pub fn data_mut(&mut self) -> &mut [T] {
-        &mut self.data
+        Arc::make_mut(&mut self.data).as_mut_slice()
     }
 
     pub fn into_vec(self) -> Vec<T> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| shared.as_ref().clone())
     }
 
-    /// Reinterpret with a new shape of identical volume.
+    /// Reinterpret with a new shape of identical volume. Zero-copy: the
+    /// returned tensor aliases this tensor's buffer (copy-on-write applies
+    /// on the first mutation of either side).
     pub fn reshape(&self, shape: &[usize]) -> Tensor<T> {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
-        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+        Tensor { shape: shape.to_vec(), data: Arc::clone(&self.data) }
+    }
+
+    /// Whether two tensors alias the same underlying buffer (used by the
+    /// zero-copy regression tests; not a value comparison).
+    pub fn shares_data(&self, other: &Tensor<T>) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// Number of "structures" along axis 0 (out-channels for conv weights /
@@ -97,17 +116,21 @@ impl<T: Copy + Default> Tensor<T> {
         &self.data[i * inner..(i + 1) * inner]
     }
 
-    /// Mutable view of outer structure `i`.
+    /// Mutable view of outer structure `i` (unshares first, like
+    /// [`Tensor::data_mut`]).
     pub fn outer_mut(&mut self, i: usize) -> &mut [T] {
         let inner = self.inner_len();
-        &mut self.data[i * inner..(i + 1) * inner]
+        &mut Arc::make_mut(&mut self.data)[i * inner..(i + 1) * inner]
     }
 }
 
 impl Tensor<f32> {
     /// Elementwise map into a new tensor.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> TensorF32 {
-        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+        Tensor {
+            shape: self.shape.clone(),
+            data: Arc::new(self.data.iter().map(|&x| f(x)).collect()),
+        }
     }
 }
 
@@ -162,6 +185,25 @@ mod tests {
         let r = t.reshape(&[2, 2]);
         assert_eq!(r.shape(), &[2, 2]);
         assert_eq!(r.data(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reshape_is_zero_copy() {
+        let t = TensorF32::from_vec(&[4], vec![1., 2., 3., 4.]);
+        let r = t.reshape(&[2, 2]);
+        assert!(r.shares_data(&t), "reshape must alias the source buffer");
+        let c = t.clone();
+        assert!(c.shares_data(&t), "clone must alias until first mutation");
+    }
+
+    #[test]
+    fn copy_on_write_preserves_value_semantics() {
+        let a = TensorI32::from_vec(&[3], vec![1, 2, 3]);
+        let mut b = a.clone();
+        b.data_mut()[0] = 99;
+        assert_eq!(a.data(), &[1, 2, 3], "source must be unaffected by a clone's mutation");
+        assert_eq!(b.data(), &[99, 2, 3]);
+        assert!(!b.shares_data(&a), "mutation must unshare the buffer");
     }
 
     #[test]

@@ -5,7 +5,6 @@
 
 use crate::graph::exec::{DenseUpdates, NativeModel};
 use crate::kernels::{softmax, OpCounter};
-use crate::memplan::Scratch;
 use crate::tensor::TensorF32;
 use crate::train::sparse::DynamicSparse;
 use crate::train::Optimizer;
@@ -78,10 +77,10 @@ pub fn train(
     let mut bwd_ops = OpCounter::new();
     let mut epoch_stats = Vec::with_capacity(epochs);
     let mut samples_seen = 0u64;
-    // One scratch arena for the whole run: the im2col/GEMM buffers are
-    // sized for the largest conv once and reused by every forward and
-    // backward pass.
-    let mut scratch = Scratch::for_model(&model.def);
+    // One scratch arena for the whole run, pre-sized from the model's
+    // compiled execution plan (exact per-op requirements, all precisions)
+    // and reused by every forward and backward pass with zero growth.
+    let mut scratch = model.make_scratch();
 
     for _ in 0..epochs {
         let order = rng.permutation(train_split.len());

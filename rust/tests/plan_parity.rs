@@ -1,0 +1,216 @@
+//! Golden parity of the compiled layer-op plan against the straight-line
+//! reference executor, plus the arena contracts of the plan:
+//!
+//!  * all three models × all three DNN configurations, random inputs —
+//!    bit-identical logits, activations, argmaxes, gradients, sparse-mask
+//!    accounting, error-observer updates and `OpCounter` totals;
+//!  * a full training step performs zero scratch-arena growth after plan
+//!    construction (the arena-capacity assertion), for every
+//!    configuration;
+//!  * `Flatten` is a zero-copy view in the planned executor.
+
+use tinytrain::graph::exec::{calibrate, Act, DenseUpdates, FloatParams, NativeModel};
+use tinytrain::graph::reference::{backward_reference, forward_reference};
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::kernels::{softmax, OpCounter};
+use tinytrain::memplan::Scratch;
+use tinytrain::tensor::TensorF32;
+use tinytrain::train::sparse::DynamicSparse;
+use tinytrain::util::prng::Pcg32;
+
+const CASES: [(&str, [usize; 3], usize); 3] =
+    [("mnist_cnn", [1, 12, 12], 4), ("mbednet", [3, 16, 16], 5), ("mcunet5fps", [3, 32, 32], 4)];
+
+fn build(
+    name: &str,
+    shape: &[usize; 3],
+    classes: usize,
+    cfg: DnnConfig,
+    seed: u64,
+) -> (NativeModel, Vec<TensorF32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let def = models::by_name(name, shape, classes).expect("known model");
+    let fp = FloatParams::init(&def, &mut rng);
+    let xs: Vec<TensorF32> = (0..3)
+        .map(|_| {
+            let mut x = TensorF32::zeros(shape);
+            rng.fill_normal(x.data_mut(), 1.0);
+            x
+        })
+        .collect();
+    let calib = calibrate(&def, &fp, &xs[..2]);
+    (NativeModel::build(def, cfg, &fp, &calib), xs)
+}
+
+/// Bit-level fingerprint of an activation (payload bytes + qparams bits).
+fn act_bits(a: &Act) -> (Vec<u8>, Vec<u32>) {
+    match a {
+        Act::Q(t) => {
+            (t.values.data().to_vec(), vec![t.qp.scale.to_bits(), t.qp.zero_point as u32])
+        }
+        Act::F(t) => (Vec::new(), t.data().iter().map(|v| v.to_bits()).collect()),
+    }
+}
+
+fn assert_forward_parity(m: &NativeModel, x: &TensorF32, tag: &str) {
+    let mut s1 = Scratch::new();
+    let mut s2 = Scratch::new();
+    let mut o1 = OpCounter::new();
+    let mut o2 = OpCounter::new();
+    let t1 = m.forward_in(x, &mut s1, &mut o1);
+    let t2 = forward_reference(m, x, &mut s2, &mut o2);
+    assert_eq!(o1, o2, "{tag}: forward op counts diverged");
+    let l1: Vec<u32> = t1.logits.iter().map(|v| v.to_bits()).collect();
+    let l2: Vec<u32> = t2.logits.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(l1, l2, "{tag}: logits diverged");
+    assert_eq!(t1.acts.len(), t2.acts.len(), "{tag}");
+    assert_eq!(act_bits(&t1.input), act_bits(&t2.input), "{tag}: input act diverged");
+    for (i, (a, b)) in t1.acts.iter().zip(t2.acts.iter()).enumerate() {
+        assert_eq!(a.shape(), b.shape(), "{tag}: act {i} shape diverged");
+        assert_eq!(act_bits(a), act_bits(b), "{tag}: act {i} diverged");
+    }
+    assert_eq!(t1.argmax, t2.argmax, "{tag}: pool argmax diverged");
+}
+
+fn assert_backward_parity(m: &NativeModel, x: &TensorF32, sparse: bool, tag: &str) {
+    let mut s1 = Scratch::new();
+    let mut s2 = Scratch::new();
+    let mut o1 = OpCounter::new();
+    let mut o2 = OpCounter::new();
+    let t1 = m.forward_in(x, &mut s1, &mut o1);
+    let t2 = forward_reference(m, x, &mut s2, &mut o2);
+    let mut throwaway = OpCounter::new();
+    let (loss, _, err) = softmax::softmax_ce(&t1.logits, 0, &mut throwaway);
+    let mut obs1 = m.err_obs.clone();
+    let mut obs2 = m.err_obs.clone();
+    let (b1, b2) = if sparse {
+        // two identical deterministic controllers, identical call sequences
+        let mut ctl1 = DynamicSparse::new(0.4, 1.0);
+        let mut ctl2 = DynamicSparse::new(0.4, 1.0);
+        ctl1.seed_max_loss(loss * 4.0 + 1.0);
+        ctl2.seed_max_loss(loss * 4.0 + 1.0);
+        ctl1.begin_sample(loss);
+        ctl2.begin_sample(loss);
+        let b1 = m.backward_with(&t1, err.clone(), &mut ctl1, &mut obs1, &mut s1, &mut o1);
+        let b2 = backward_reference(m, &t2, err, &mut ctl2, &mut obs2, &mut s2, &mut o2);
+        assert_eq!(ctl1.kept, ctl2.kept, "{tag}: controller kept totals diverged");
+        assert_eq!(ctl1.total, ctl2.total, "{tag}: controller totals diverged");
+        (b1, b2)
+    } else {
+        let b1 = m.backward_with(&t1, err.clone(), &mut DenseUpdates, &mut obs1, &mut s1, &mut o1);
+        let b2 = backward_reference(m, &t2, err, &mut DenseUpdates, &mut obs2, &mut s2, &mut o2);
+        (b1, b2)
+    };
+    assert_eq!(o1, o2, "{tag}: fwd+bwd op counts diverged");
+    assert_eq!(b1.grads.len(), b2.grads.len(), "{tag}");
+    for (i, (ga, gb)) in b1.grads.iter().zip(b2.grads.iter()).enumerate() {
+        match (ga, gb) {
+            (Some(ga), Some(gb)) => {
+                let wa: Vec<u32> = ga.gw.data().iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u32> = gb.gw.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wa, wb, "{tag}: layer {i} weight grads diverged");
+                let ba: Vec<u32> = ga.gb.data().iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = gb.gb.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ba, bb, "{tag}: layer {i} bias grads diverged");
+                assert_eq!(ga.kept, gb.kept, "{tag}: layer {i} kept accounting diverged");
+            }
+            (None, None) => {}
+            _ => panic!("{tag}: layer {i} gradient presence diverged"),
+        }
+    }
+    for (i, (a, b)) in obs1.iter().zip(obs2.iter()).enumerate() {
+        assert_eq!(a.range(), b.range(), "{tag}: observer {i} diverged");
+    }
+}
+
+/// Golden-parity property test: every model × configuration, dense
+/// updates, random inputs — forward and backward bit-identical between the
+/// planned executor and the reference.
+#[test]
+fn plan_matches_reference_all_models_and_configs() {
+    for (name, shape, classes) in CASES {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let (m, xs) = build(name, &shape, classes, cfg, 0xA11CE);
+            for (k, x) in xs.iter().enumerate() {
+                let tag = format!("{name}/{cfg:?}/sample{k}");
+                assert_forward_parity(&m, x, &tag);
+                assert_backward_parity(&m, x, false, &tag);
+            }
+        }
+    }
+}
+
+/// Parity must also hold under §III-B sparse-update masks: the planned
+/// executor calls the controller with the same norms in the same order, so
+/// the masks — and everything downstream of them — stay bit-identical.
+#[test]
+fn plan_matches_reference_under_sparse_masks() {
+    for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+        let (m, xs) = build("mnist_cnn", &[1, 12, 12], 4, cfg, 0xB0B);
+        for (k, x) in xs.iter().enumerate() {
+            let tag = format!("mnist_cnn/{cfg:?}/sparse/sample{k}");
+            assert_backward_parity(&m, x, true, &tag);
+        }
+    }
+}
+
+/// The arena-capacity assertion: a full training step (forward with range
+/// adaptation, loss, backward) performs zero scratch-arena growth after
+/// plan construction — for every model and every configuration, because
+/// the plan pre-sizes the exact buffer set its ops request (float twins
+/// included).
+#[test]
+fn training_step_performs_zero_arena_growth_after_plan() {
+    for (name, shape, classes) in CASES {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let (mut m, xs) = build(name, &shape, classes, cfg, 0xC0DE);
+            let mut scratch = m.make_scratch();
+            let before = scratch.reserved_bytes();
+            assert!(before > 0, "{name}/{cfg:?}: plan must pre-size the arena");
+            let mut ops = OpCounter::new();
+            for x in &xs {
+                let trace = m.forward_adapt_in(x, &mut scratch, &mut ops);
+                let (_, _, err) = softmax::softmax_ce(&trace.logits, 0, &mut ops);
+                let _ = m.backward_in(&trace, err, &mut DenseUpdates, &mut scratch, &mut ops);
+            }
+            assert_eq!(
+                scratch.reserved_bytes(),
+                before,
+                "{name}/{cfg:?}: scratch arena grew during the training step"
+            );
+        }
+    }
+}
+
+/// Flatten in the planned executor is a zero-copy view: the flattened
+/// activation aliases its input's buffer and allocates nothing.
+#[test]
+fn flatten_is_allocation_free_view() {
+    let (m, xs) = build("mnist_cnn", &[1, 12, 12], 4, DnnConfig::Uint8, 0xF1A7);
+    let mut ops = OpCounter::new();
+    let t = m.forward(&xs[0], &mut ops);
+    let i = m
+        .def
+        .layers
+        .iter()
+        .position(|l| matches!(l.kind, tinytrain::graph::LayerKind::Flatten))
+        .expect("mnist_cnn has a flatten layer");
+    match (&t.acts[i - 1], &t.acts[i]) {
+        (Act::Q(a), Act::Q(b)) => {
+            assert!(b.values.shares_data(&a.values), "flatten must alias its input buffer");
+            assert_eq!(b.shape(), &[a.len()]);
+        }
+        _ => panic!("mnist_cnn uint8: expected quantized activations around flatten"),
+    }
+}
+
+/// The planned peak reported by the plan is consistent with the memory
+/// planner's report (same liveness lowering).
+#[test]
+fn planned_peak_consistent_between_plan_and_memplan() {
+    let def = models::mnist_cnn(&[1, 12, 12], 4);
+    let rep = tinytrain::memplan::plan(&def, DnnConfig::Uint8, true);
+    let plan = tinytrain::graph::plan::ExecPlan::compile(&def, DnnConfig::Uint8);
+    assert_eq!(rep.planned_peak_bytes, plan.planned_peak_bytes);
+    assert!(plan.planned_peak_bytes > 0);
+}
