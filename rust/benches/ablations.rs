@@ -1,4 +1,4 @@
-//! Ablations of the FQT optimizer's design choices (DESIGN.md §5 calls
+//! Ablations of the FQT optimizer's design choices (DESIGN.md §6 calls
 //! these out; the paper motivates them in §III-A):
 //!
 //!  * **gradient standardization** (Eq. 8) — off reproduces raw quantized
@@ -6,7 +6,7 @@
 //!  * **dynamic weight-range adaptation** (Eqs. 6–7) — off freezes the
 //!    deployed scale/zero-point, the naive-int8 failure mode of Tab. IV;
 //!  * **activation-range adaptation** (our Eqs. 6–7 analogue for
-//!    activations, DESIGN.md §6b) — exercised implicitly: it is part of
+//!    activations; see `NativeModel::forward_adapt`) — exercised implicitly: it is part of
 //!    `forward_adapt`, and the frozen-weight ablation shows the combined
 //!    stall.
 //!

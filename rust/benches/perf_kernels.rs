@@ -6,12 +6,15 @@
 //! Knobs: TT_PERF_REPS (default 10), TT_PERF_BATCH (default 8),
 //! TT_WORKERS (default: one per available core, capped at the batch).
 
+use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, NativeModel};
 use tinytrain::graph::plan::ExecPlan;
 use tinytrain::graph::{models, DnnConfig};
-use tinytrain::kernels::{fconv, qconv, qlinear, ConvGeom, OpCounter};
+use tinytrain::kernels::{fconv, gemm, qconv, qlinear, softmax, ConvGeom, OpCounter};
 use tinytrain::memplan::Scratch;
 use tinytrain::quant::{QParams, QTensor};
 use tinytrain::tensor::TensorF32;
+use tinytrain::train::fqt::FqtSgd;
+use tinytrain::train::Optimizer;
 use tinytrain::util::bench::{env_usize, fmt_duration, time_it, ResultSink, Table};
 use tinytrain::util::json::Json;
 use tinytrain::util::prng::Pcg32;
@@ -449,6 +452,99 @@ fn main() {
         ]));
     }
 
+    // §Tentpole: MR×NR register-blocked micro-kernel vs the retained
+    // PR 2/3 cache-blocked path, on MCUNet-style conv-as-GEMM shapes
+    // (m = Cout, k = Cin·Kh·Kw, n = Oh·Ow). Both paths are bit-exact with
+    // each other, so this isolates the schedule change; the acceptance
+    // bar is micro ≥ tiled on every row.
+    let mut micro_rows: Vec<Json> = Vec::new();
+    for &(label, mm, kdim, nsp) in &[
+        ("stem3x3 16x27x1024", 16usize, 27usize, 1024usize),
+        ("blk3x3 32x144x256", 32, 144, 256),
+        ("pw 96x16x256", 96, 16, 256),
+        ("pw 24x96x256", 24, 96, 256),
+        ("head1x1 128x64x64", 128, 64, 64),
+    ] {
+        let a: Vec<u8> = (0..mm * kdim).map(|_| rng.below(256) as u8).collect();
+        let bm: Vec<u8> = (0..kdim * nsp).map(|_| rng.below(256) as u8).collect();
+        let init = vec![0i32; mm];
+        let mut out = vec![0i32; mm * nsp];
+        let gmacs = (mm * kdim * nsp) as f64;
+        let (tm, _) = time_it(2, reps, || {
+            gemm::gemm_u8_i32(&a, 3, &bm, 5, &init, mm, kdim, nsp, &mut out);
+            std::hint::black_box(&out);
+        });
+        let (tt, _) = time_it(2, reps, || {
+            gemm::gemm_u8_i32_tiled(&a, 3, &bm, 5, &init, mm, kdim, nsp, &mut out);
+            std::hint::black_box(&out);
+        });
+        tab.row(&[
+            "gemm micro".into(),
+            label.into(),
+            fmt_duration(tm),
+            format!("{:.2}", gmacs / tm / 1e9),
+        ]);
+        tab.row(&[
+            "gemm tiled (PR2/3)".into(),
+            label.into(),
+            fmt_duration(tt),
+            format!("{:.2}", gmacs / tt / 1e9),
+        ]);
+        let row = Json::obj(vec![
+            ("kernel", Json::str("gemm_micro_vs_tiled")),
+            ("shape", Json::str(label)),
+            ("micro_seconds", Json::Num(tm)),
+            ("tiled_seconds", Json::Num(tt)),
+            ("micro_gmacs", Json::Num(gmacs / tm / 1e9)),
+            ("tiled_gmacs", Json::Num(gmacs / tt / 1e9)),
+            ("micro_speedup_vs_tiled", Json::Num(tt / tm)),
+        ]);
+        micro_rows.push(row.clone());
+        sink.push(row);
+        println!("gemm {label}: micro {:.2}x vs tiled", tt / tm);
+    }
+
+    // Pack-cache telemetry: a short uint8 training run (forward +
+    // backward + FQT updates). After deployment warming, every dense
+    // backward hits the plan-owned pack; each optimizer step invalidates
+    // exactly the touched layers, which the next pass re-packs once.
+    let def = models::mnist_cnn(&[1, 12, 12], 4);
+    let mut prng = Pcg32::seeded(7);
+    let fp = FloatParams::init(&def, &mut prng);
+    let mut xs_t: Vec<TensorF32> = Vec::new();
+    for _ in 0..4 {
+        let mut x = TensorF32::zeros(&[1, 12, 12]);
+        prng.fill_normal(x.data_mut(), 0.5);
+        xs_t.push(x);
+    }
+    let calib = calibrate(&def, &fp, &xs_t);
+    let mut model = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
+    let mut opt = FqtSgd::new(&model, 0.01, 2);
+    let mut mscratch = model.make_scratch();
+    let mut mops = OpCounter::new();
+    let (tstep, _) = time_it(1, reps.max(4), || {
+        for (i, x) in xs_t.iter().enumerate() {
+            let trace = model.forward_adapt_in(x, &mut mscratch, &mut mops);
+            let (_, _, err) = softmax::softmax_ce(&trace.logits, i % 4, &mut mops);
+            let bwd = model.backward_in(&trace, err, &mut DenseUpdates, &mut mscratch, &mut mops);
+            opt.accumulate(&mut model, &bwd, &mut mops);
+        }
+    });
+    let ps = model.pack_stats();
+    tab.row(&[
+        "pack_cache".into(),
+        format!("hits {} misses {} builds {}", ps.hits, ps.misses, ps.builds),
+        fmt_duration(tstep),
+        String::new(),
+    ]);
+    sink.push(Json::obj(vec![
+        ("kernel", Json::str("pack_cache")),
+        ("hits", Json::Num(ps.hits as f64)),
+        ("misses", Json::Num(ps.misses as f64)),
+        ("builds", Json::Num(ps.builds as f64)),
+        ("train_pass_seconds", Json::Num(tstep)),
+    ]));
+
     tab.print();
 
     // PJRT artifact step latency, if built with the pjrt feature and the
@@ -472,6 +568,33 @@ fn main() {
             ]));
         }
     }
+    // Machine-readable bench baseline at the repo root: the perf
+    // trajectory across PRs. `kernels` carries every JSON row of this run
+    // (GMAC/s per kernel variant, plan_build, pack-cache stats, the PJRT
+    // row when that feature ran); the focused micro-vs-tiled table is
+    // duplicated at the top level so the headline comparison is one jq
+    // away. CI uploads the file as an artifact next to
+    // rust/results/perf_kernels.json.
+    let baseline = Json::obj(vec![
+        ("bench", Json::str("perf_kernels")),
+        ("reps", Json::Num(reps as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("gemm_micro_vs_tiled", Json::Arr(micro_rows)),
+        (
+            "pack_cache",
+            Json::obj(vec![
+                ("hits", Json::Num(ps.hits as f64)),
+                ("misses", Json::Num(ps.misses as f64)),
+                ("builds", Json::Num(ps.builds as f64)),
+            ]),
+        ),
+        ("kernels", Json::Arr(sink.rows().to_vec())),
+    ]);
+    let bench_path = std::path::Path::new("../BENCH_kernels.json");
+    std::fs::write(bench_path, baseline.to_string()).expect("write BENCH_kernels.json");
+    println!("bench baseline -> {}", bench_path.display());
+
     let p = sink.flush().expect("write results");
     println!("results -> {}", p.display());
 }

@@ -107,6 +107,9 @@ impl<'a> Coordinator<'a> {
         seed: u64,
     ) -> Coordinator<'a> {
         let replay = ReplayBuffer::new(cfg.replay_capacity, seed ^ 0xBEEF);
+        // The run-long GEMM arena; the model's packed-weight cache needs
+        // no warming here — `NativeModel::build`/`reset_trainable` leave
+        // it warm and `backward_in` re-warms after every optimizer touch.
         let scratch = model.make_scratch();
         Coordinator {
             model,

@@ -1,13 +1,158 @@
-//! Batched/threaded execution engine: shard minibatch samples across
-//! `std::thread` workers against a frozen model snapshot, with a
+//! Batched/threaded execution engine: shard minibatch samples across a
+//! **persistent worker pool** against a frozen model snapshot, with a
 //! deterministic sample-order merge — bit-identical results for every
 //! worker count (the determinism contract; see DESIGN.md).
+//!
+//! PRs 1–3 spawned fresh `std::thread` workers for every minibatch; the
+//! spawn/join cost and the per-spawn scratch construction sat on the hot
+//! path. [`WorkerPool`] keeps the threads alive for the whole training
+//! run: each worker owns one persistent [`Scratch`] arena (grown to the
+//! plan's working set on its first batch, reused ever after), jobs arrive
+//! over per-worker channels, and the scoped dispatch
+//! [`WorkerPool::run_scope`] blocks until every job of the batch has
+//! acknowledged — which is what makes lending the workers non-`'static`
+//! borrows (the model snapshot, the batch's sample slices) sound.
+//!
+//! Determinism is untouched by pooling: each sample's pass depends only
+//! on the frozen model snapshot and its own inputs (scratch contents are
+//! fully overwritten per call), results land in per-sample slots of a
+//! pre-split output vector, and the merge folds them in sample order on
+//! the coordinating thread — so any sharding, any worker count, and any
+//! completion order produce bit-identical weights.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
 
 use crate::graph::exec::{BwdResult, DenseUpdates, NativeModel};
 use crate::kernels::{softmax, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::observer::MinMaxObserver;
 use crate::tensor::TensorF32;
+
+/// A unit of pool work, bounded by the dispatching scope's borrows. It
+/// runs against the executing worker's persistent scratch arena.
+pub type ScopedJob<'env> = Box<dyn FnOnce(&mut Scratch) + Send + 'env>;
+
+/// The `'static` form that actually crosses the channel (see the SAFETY
+/// argument in [`WorkerPool::run_scope`]).
+type Job = ScopedJob<'static>;
+
+/// A job's completion acknowledgement: `Err` carries a panic payload to
+/// re-raise on the coordinating thread.
+type Ack = Result<(), Box<dyn std::any::Any + Send + 'static>>;
+
+/// A persistent, channel-fed worker pool. Owned by the training loop (one
+/// pool per run — see `train::loop_::train_batched`) or any other batch
+/// driver; [`NativeModel::train_batch`] spins up a transient one for
+/// callers without a run-long pool.
+pub struct WorkerPool {
+    txs: Vec<Sender<Job>>,
+    done_rx: Receiver<Ack>,
+    handles: Vec<JoinHandle<()>>,
+    /// Persistent scratch for batches that use a single worker: those run
+    /// inline on the dispatching thread (no channel hop when there is no
+    /// parallelism to gain), against this arena instead of a pool
+    /// thread's.
+    inline: Scratch,
+}
+
+impl WorkerPool {
+    /// Spawn `workers.max(1)` pool threads, each owning a persistent
+    /// scratch arena that serves every job it ever runs.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let (done_tx, done_rx) = channel::<Ack>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                // The worker-lifetime arena: grows to the compiled plan's
+                // working set on the first batch, then serves every
+                // subsequent minibatch of the run with zero growth.
+                let mut scratch = Scratch::new();
+                while let Ok(job) = rx.recv() {
+                    let ack = catch_unwind(AssertUnwindSafe(|| job(&mut scratch)));
+                    if done.send(ack).is_err() {
+                        break;
+                    }
+                }
+            }));
+            txs.push(tx);
+        }
+        WorkerPool { txs, done_rx, handles, inline: Scratch::new() }
+    }
+
+    /// The dispatching-thread arena backing single-worker batches (see
+    /// the `inline` field).
+    fn inline_scratch(&mut self) -> &mut Scratch {
+        &mut self.inline
+    }
+
+    /// Number of pool threads.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Dispatch `jobs` round-robin across the pool and block until every
+    /// one has completed. Panics from jobs are re-raised here (after all
+    /// jobs finished, so no borrow outlives the scope).
+    ///
+    /// Takes `&mut self` deliberately: the soundness of the lifetime
+    /// erasure below requires that the acks drained here belong to *this*
+    /// dispatch — exclusive access makes overlapping dispatches (which
+    /// could steal each other's acks and return early) a compile error
+    /// rather than a convention.
+    pub fn run_scope(&mut self, jobs: Vec<ScopedJob<'_>>) {
+        let mut sent = 0usize;
+        let mut dispatch_failed = false;
+        for (wi, job) in jobs.into_iter().enumerate() {
+            // SAFETY: the job is only lengthened from 'env to 'static for
+            // the channel crossing (identical layout — both are boxed
+            // trait objects). Every borrow it captures stays valid until
+            // this function returns, and this function does not return
+            // until each sent job has either acknowledged completion or
+            // been dropped unexecuted (its worker exited, closing the ack
+            // channel) — so no job can run, or exist, after 'env ends.
+            // `&mut self` guarantees no concurrent dispatch interleaves
+            // its acks with ours.
+            let job: Job = unsafe { std::mem::transmute::<ScopedJob<'_>, Job>(job) };
+            if self.txs[wi % self.txs.len()].send(job).is_err() {
+                dispatch_failed = true;
+                break;
+            }
+            sent += 1;
+        }
+        let mut payload = None;
+        for _ in 0..sent {
+            match self.done_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(p)) => payload = payload.or(Some(p)),
+                // Disconnected: every worker exited, so no sent job is
+                // still running (undelivered ones were dropped with the
+                // queues) — safe to stop draining.
+                Err(_) => break,
+            }
+        }
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+        assert!(!dispatch_failed, "batch worker pool: a worker exited unexpectedly");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels ends the worker loops; join to make
+        // thread shutdown deterministic.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
 
 /// Result of one batched training pass ([`NativeModel::train_batch`]):
 /// per-sample outputs in sample order plus fwd/bwd op totals.
@@ -57,15 +202,18 @@ impl NativeModel {
         SamplePass { loss, pred, grads, err_obs, sat, fwd_ops, bwd_ops }
     }
 
-    /// Batched training pass: run forward+backward for every sample of a
-    /// minibatch, sharding samples across `workers` `std::thread` workers.
+    /// [`NativeModel::train_batch`] against a caller-owned persistent
+    /// [`WorkerPool`] — the hot-loop entry point: the training loop owns
+    /// one pool for the whole run, so no threads are spawned and no
+    /// scratch arenas are constructed per minibatch.
     ///
     /// Semantics (chosen so results are **bit-identical for every worker
     /// count**, including 1):
     ///
     ///  * every sample is evaluated against the same model snapshot — the
     ///    state at batch entry (activation ranges, error observers,
-    ///    weights);
+    ///    weights, packed-weight cache — warmed here, before sharding, so
+    ///    concurrent workers only ever read it);
     ///  * each sample's backward runs against a private copy of the error
     ///    observers taken at batch entry;
     ///  * after all samples finish, the per-sample observer ranges and
@@ -78,47 +226,53 @@ impl NativeModel {
     /// dynamic sparse controller is inherently sequential (its Eq. 9 state
     /// advances per sample), so the batch engine always computes dense
     /// gradients; sparse runs stay on [`NativeModel::train_sample`].
-    ///
-    /// Each worker builds its scratch arena at spawn — pre-sized from the
-    /// compiled plan, so it never grows — and reuses it across its samples.
-    pub fn train_batch(&mut self, xs: &[&TensorF32], ys: &[usize], workers: usize) -> BatchResult {
+    pub fn train_batch_pooled(
+        &mut self,
+        xs: &[&TensorF32],
+        ys: &[usize],
+        pool: &mut WorkerPool,
+    ) -> BatchResult {
         assert_eq!(xs.len(), ys.len(), "one label per sample");
         let n = xs.len();
-        let workers = workers.max(1).min(n.max(1));
-        let mut passes: Vec<Option<SamplePass>> = (0..n).map(|_| None).collect();
+        if n == 0 {
+            return BatchResult {
+                losses: Vec::new(),
+                preds: Vec::new(),
+                grads: Vec::new(),
+                fwd_ops: OpCounter::new(),
+                bwd_ops: OpCounter::new(),
+            };
+        }
+        // Re-pack any backward pack the optimizer invalidated since the
+        // last batch, while the model is still exclusively borrowed.
+        self.warm_packs();
 
-        if workers <= 1 {
-            let mut scratch = self.make_scratch();
-            for i in 0..n {
-                passes[i] = Some(self.batch_sample_pass(xs[i], ys[i], &mut scratch));
+        let used = pool.workers().min(n);
+        let chunk = n.div_ceil(used);
+        let mut passes: Vec<Option<SamplePass>> = (0..n).map(|_| None).collect();
+        if used <= 1 {
+            // No parallelism to gain: run inline on this thread against
+            // the pool's persistent inline arena (zero channel hops,
+            // identical per-sample results — determinism is per-sample).
+            let scratch = pool.inline_scratch();
+            for (i, (&x, &y)) in xs.iter().zip(ys.iter()).enumerate() {
+                passes[i] = Some(self.batch_sample_pass(x, y, scratch));
             }
         } else {
             let model: &NativeModel = self;
-            let chunk = n.div_ceil(workers);
-            let results: Vec<Vec<(usize, SamplePass)>> = std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                for wi in 0..workers {
-                    let lo = wi * chunk;
-                    let hi = ((wi + 1) * chunk).min(n);
-                    if lo >= hi {
-                        break;
-                    }
-                    let wxs = &xs[lo..hi];
-                    let wys = &ys[lo..hi];
-                    handles.push(s.spawn(move || {
-                        let mut scratch = model.make_scratch();
-                        let mut out = Vec::with_capacity(wxs.len());
-                        for (j, (&x, &y)) in wxs.iter().zip(wys.iter()).enumerate() {
-                            out.push((lo + j, model.batch_sample_pass(x, y, &mut scratch)));
+            let jobs: Vec<ScopedJob<'_>> = passes
+                .chunks_mut(chunk)
+                .zip(xs.chunks(chunk))
+                .zip(ys.chunks(chunk))
+                .map(|((pslice, wxs), wys)| {
+                    Box::new(move |scratch: &mut Scratch| {
+                        for ((p, &x), &y) in pslice.iter_mut().zip(wxs.iter()).zip(wys.iter()) {
+                            *p = Some(model.batch_sample_pass(x, y, scratch));
                         }
-                        out
-                    }));
-                }
-                handles.into_iter().map(|h| h.join().expect("batch worker panicked")).collect()
-            });
-            for (i, p) in results.into_iter().flatten() {
-                passes[i] = Some(p);
-            }
+                    }) as ScopedJob<'_>
+                })
+                .collect();
+            pool.run_scope(jobs);
         }
 
         // Deterministic merge, in sample order.
@@ -142,5 +296,76 @@ impl NativeModel {
             grads.push(p.grads);
         }
         BatchResult { losses, preds, grads, fwd_ops, bwd_ops }
+    }
+
+    /// Batched training pass over a transient pool of `workers` threads.
+    /// Convenience wrapper over [`NativeModel::train_batch_pooled`] for
+    /// callers without a run-long pool; hot loops should build one
+    /// [`WorkerPool`] per run and call the pooled variant directly.
+    pub fn train_batch(&mut self, xs: &[&TensorF32], ys: &[usize], workers: usize) -> BatchResult {
+        let mut pool = WorkerPool::new(workers.max(1).min(xs.len().max(1)));
+        self.train_batch_pooled(xs, ys, &mut pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_runs_jobs_against_persistent_scratch() {
+        let mut pool = WorkerPool::new(1);
+        // Two scoped dispatches on the same worker: the second observes
+        // the arena capacity the first one grew (persistence across
+        // batches).
+        let mut grew = 0usize;
+        {
+            let grew = &mut grew;
+            pool.run_scope(vec![Box::new(move |s: &mut Scratch| {
+                let _ = s.qconv_bufs(128, 64);
+                *grew = s.reserved_bytes();
+            })]);
+        }
+        assert!(grew > 0);
+        let mut still = 0usize;
+        {
+            let still = &mut still;
+            pool.run_scope(vec![Box::new(move |s: &mut Scratch| {
+                let bytes = s.reserved_bytes();
+                *still = bytes;
+            })]);
+        }
+        assert_eq!(still, grew, "worker scratch must persist across dispatches");
+    }
+
+    #[test]
+    fn pool_completes_all_jobs_across_workers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob<'_>> = (0..7)
+            .map(|_| {
+                let c = &counter;
+                Box::new(move |_: &mut Scratch| {
+                    let _ = c.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedJob<'_>
+            })
+            .collect();
+        pool.run_scope(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn pool_propagates_job_panics_after_the_batch() {
+        let mut pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scope(vec![
+                Box::new(|_: &mut Scratch| {}),
+                Box::new(|_: &mut Scratch| panic!("boom")),
+            ]);
+        }));
+        assert!(r.is_err(), "job panic must reach the dispatching thread");
+        // the pool survives a panicked job
+        pool.run_scope(vec![Box::new(|_: &mut Scratch| {})]);
     }
 }

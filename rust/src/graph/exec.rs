@@ -21,9 +21,10 @@ pub use crate::graph::act::{calibrate, structure_norms, Act, Calibration, FloatP
 pub use crate::graph::batch::BatchResult;
 
 use crate::graph::act::init_layer;
+use crate::graph::packs::{PackCache, PackStats};
 use crate::graph::plan::ExecPlan;
 use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
-use crate::kernels::{softmax, OpCounter};
+use crate::kernels::{gemm, softmax, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::observer::MinMaxObserver;
 use crate::quant::{QParams, QTensor};
@@ -79,6 +80,15 @@ pub struct NativeModel {
     pub act_qp: Vec<QParams>,
     pub err_obs: Vec<MinMaxObserver>,
     plan: ExecPlan,
+    /// Plan-owned dense backward weight packs (`graph::packs`), read by
+    /// the plan ops through a shared reference; re-packed by
+    /// [`NativeModel::warm_packs`] only for layers whose
+    /// [`NativeModel::touch_layer`] version moved.
+    packs: PackCache,
+    /// Per-layer parameter versions (start at 1). Every parameter write
+    /// must go through [`NativeModel::touch_layer`] so the pack cache can
+    /// tell fresh packs from stale ones.
+    param_versions: Vec<u64>,
 }
 
 impl NativeModel {
@@ -103,16 +113,21 @@ impl NativeModel {
             .collect();
         let err_obs = def.layers.iter().map(|_| MinMaxObserver::online()).collect();
         let plan = ExecPlan::compile(&def, cfg);
-        NativeModel {
+        let n = def.layers.len();
+        let mut model = NativeModel {
             prec,
             params,
             input_qp: calib.input_qp,
             act_qp: calib.act_qp.clone(),
             err_obs,
             plan,
+            packs: PackCache::new(n),
+            param_versions: vec![1; n],
             def,
             cfg,
-        }
+        };
+        model.warm_packs();
+        model
     }
 
     /// The execution plan compiled at deployment.
@@ -124,6 +139,68 @@ impl NativeModel {
     /// training step (any configuration) performs zero arena growth.
     pub fn make_scratch(&self) -> Scratch {
         self.plan.make_scratch()
+    }
+
+    /// The plan-owned packed-weight cache (read-only view; the plan ops
+    /// consult it on the backward hot path).
+    pub fn packs(&self) -> &PackCache {
+        &self.packs
+    }
+
+    /// Per-layer parameter versions (the pack cache's freshness key).
+    pub fn param_versions(&self) -> &[u64] {
+        &self.param_versions
+    }
+
+    /// Pack-cache telemetry (hits/misses/builds).
+    pub fn pack_stats(&self) -> PackStats {
+        self.packs.stats()
+    }
+
+    /// Record that layer `i`'s parameters changed. The optimizers call
+    /// this on every applied update (the dirty bit that invalidates the
+    /// layer's cached backward pack); any other code that writes
+    /// `self.params[i]` must do the same.
+    pub fn touch_layer(&mut self, i: usize) {
+        self.param_versions[i] += 1;
+    }
+
+    /// Re-pack the dense backward weight packs for every layer whose
+    /// parameter version moved since the last warm (a cheap per-layer
+    /// version compare when nothing changed). Covers exactly the layers
+    /// whose backward-input GEMM the plan can reach: non-depthwise convs
+    /// above the earliest trainable layer. Called at deployment, by
+    /// `backward_in` before each sequential backward pass, and by the
+    /// batch engine once per minibatch before sharding — so concurrent
+    /// workers only ever read a fresh cache.
+    pub fn warm_packs(&mut self) {
+        let n = self.def.layers.len();
+        let stop = self.def.first_trainable().unwrap_or(n);
+        for i in 0..n {
+            let geom = match self.def.layers[i].kind {
+                LayerKind::Conv { geom, .. } => geom,
+                _ => continue,
+            };
+            if geom.depthwise || i <= stop {
+                continue;
+            }
+            let v = self.param_versions[i];
+            match &self.params[i] {
+                LayerParams::Q { w, .. } => {
+                    self.packs.put_u8(i, v, |dst| {
+                        dst.resize(geom.cin * geom.cout * geom.kh * geom.kw, 0);
+                        gemm::pack_wt_flip_u8(w.values.data(), &geom, None, dst);
+                    });
+                }
+                LayerParams::F { w, .. } => {
+                    self.packs.put_f32(i, v, |dst| {
+                        dst.resize(geom.cin * geom.cout * geom.kh * geom.kw, 0.0);
+                        gemm::pack_wt_flip_f32(w.data(), &geom, None, dst);
+                    });
+                }
+                LayerParams::None => {}
+            }
+        }
     }
 
     /// Re-randomize the trainable layers (§IV-A: "we set the last five
@@ -139,8 +216,10 @@ impl NativeModel {
                     Precision::Uint8 => LayerParams::Q { w: QTensor::quantize(&w), bias: b },
                     Precision::Float32 => LayerParams::F { w, bias: b },
                 };
+                self.touch_layer(i);
             }
         }
+        self.warm_packs();
     }
 
     /// Extract float masters (only valid for `Float32` models; used to pull
@@ -325,6 +404,9 @@ impl NativeModel {
         scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> BwdResult {
+        // Refresh any backward pack the optimizer invalidated since the
+        // last pass (per-layer version compare; a no-op when clean).
+        self.warm_packs();
         let mut obs = std::mem::take(&mut self.err_obs);
         let r = self.backward_with(trace, head_err, masks, &mut obs, scratch, ops);
         self.err_obs = obs;

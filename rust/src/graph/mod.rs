@@ -21,6 +21,7 @@ pub mod exec;
 mod exec_tests;
 pub mod models;
 pub mod ops;
+pub mod packs;
 pub mod plan;
 pub mod reference;
 mod reference_bwd;

@@ -127,6 +127,15 @@ impl LayerOp for QConvOp {
         if l > ctx.stop {
             let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
             let out_qp = propagate_qp(&mut obs[l - 1], eq, ctx.ops);
+            // Dense backward reads the plan-owned flipped-weight pack when
+            // it is fresh for this layer's parameter version; sparse masks
+            // (per-sample row subsets) and stale entries fall back to
+            // packing into scratch — bit-identical either way.
+            let cached = if keep.is_none() && !self.geom.depthwise {
+                ctx.packs.wt_u8(l, ctx.param_versions[l])
+            } else {
+                None
+            };
             let next = if self.geom.depthwise {
                 Act::Q(qconv::qconv2d_bwd_input(
                     eq,
@@ -136,6 +145,18 @@ impl LayerOp for QConvOp {
                     self.in_w,
                     out_qp,
                     keep.as_deref(),
+                    ctx.ops,
+                ))
+            } else if let Some(pack) = cached {
+                Act::Q(qconv::qconv2d_bwd_input_gemm_packed(
+                    eq,
+                    w,
+                    pack,
+                    &self.geom,
+                    self.in_h,
+                    self.in_w,
+                    out_qp,
+                    ctx.scratch,
                     ctx.ops,
                 ))
             } else {
@@ -259,6 +280,12 @@ impl LayerOp for FConvOp {
             ctx.grads[l] = Some(LayerGrads { gw, gb, kept: (kept, total) });
         }
         if l > ctx.stop {
+            // Same pack-cache routing as the quantized op (see QConvOp).
+            let cached = if keep.is_none() && !self.geom.depthwise {
+                ctx.packs.wt_f32(l, ctx.param_versions[l])
+            } else {
+                None
+            };
             let next = if self.geom.depthwise {
                 Act::F(fconv::fconv2d_bwd_input(
                     ef,
@@ -267,6 +294,16 @@ impl LayerOp for FConvOp {
                     self.in_h,
                     self.in_w,
                     keep.as_deref(),
+                    ctx.ops,
+                ))
+            } else if let Some(pack) = cached {
+                Act::F(fconv::fconv2d_bwd_input_gemm_packed(
+                    ef,
+                    pack,
+                    &self.geom,
+                    self.in_h,
+                    self.in_w,
+                    ctx.scratch,
                     ctx.ops,
                 ))
             } else {

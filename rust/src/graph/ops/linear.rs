@@ -1,6 +1,12 @@
 //! Fully connected layer ops (quantized and float). Both route their
 //! backward GEMMs through the shared cores as degenerate cases, exactly as
 //! the pre-plan executor did.
+//!
+//! Unlike the conv ops, linear layers take no entry in the plan-owned
+//! pack cache (`graph::packs`): their backward-input GEMM consumes the
+//! `[Out, In]` weight matrix directly in its storage layout (`e_in =
+//! eᵀ·W`), so there is no per-sample packing to cache — the forward
+//! "pack" is a zero-cost view for linears and convs alike.
 
 use crate::graph::act::{observe_saturation, propagate_qp, Act, LayerParams};
 use crate::graph::exec::LayerGrads;

@@ -36,6 +36,7 @@ pub use shape::{FlattenOp, GlobalAvgPoolOp, MaxPoolOp};
 
 use crate::graph::act::{structure_norms, Act, LayerParams};
 use crate::graph::exec::{FwdTrace, LayerGrads, MaskProvider};
+use crate::graph::packs::PackCache;
 use crate::graph::{LayerDef, Precision};
 use crate::kernels::OpCounter;
 use crate::memplan::Scratch;
@@ -83,6 +84,11 @@ pub struct ExecCtx<'a> {
     pub stop: usize,
     /// GEMM scratch arena (im2col packings, accumulators).
     pub scratch: &'a mut Scratch,
+    /// Plan-owned dense backward weight packs (read-only — shared across
+    /// concurrent batch workers; see `graph::packs`).
+    pub packs: &'a PackCache,
+    /// Per-layer parameter versions, the pack cache's freshness key.
+    pub param_versions: &'a [u64],
     /// Arithmetic accounting.
     pub ops: &'a mut OpCounter,
     /// Forward: the precision-coerced network input.

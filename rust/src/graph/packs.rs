@@ -1,0 +1,235 @@
+//! Plan-owned packed-weight cache for the backward-input GEMM.
+//!
+//! PR 2 lowered `dX = wt_flip × colE`, but re-ran the flipped-transposed
+//! weight packing ([`crate::kernels::gemm::pack_wt_flip_u8`] /
+//! `pack_wt_flip_f32`) from scratch on *every sample* — a pure function of
+//! the layer weights, which only change when the optimizer steps. This
+//! module caches the **dense** pack (no sparse mask) per layer, owned by
+//! the deployed model next to its compiled plan:
+//!
+//!  * **ownership** — one [`PackCache`] per `NativeModel`, sized at build
+//!    to one slot per layer; slots are populated for non-depthwise conv
+//!    layers whose backward-input GEMM the plan can reach (`layer > stop`).
+//!  * **invalidation** — every layer carries a parameter *version*
+//!    (`NativeModel::touch_layer` bumps it; the optimizers call it on each
+//!    applied update, `reset_trainable` on re-init). A cache entry is
+//!    valid only while its recorded version matches; `warm_packs`
+//!    re-packs exactly the stale entries (a no-op when nothing changed).
+//!  * **sparse masks** — a `DynamicSparse` mask selects a *subset* of
+//!    GEMM rows, so a masked pack differs per sample; masked calls bypass
+//!    the cache entirely and pack into the scratch arena exactly as
+//!    before (bit-identical fallback). Dense calls that find a stale
+//!    entry (a missed `warm_packs`) take the same fallback, so staleness
+//!    can cost time but never correctness.
+//!  * **concurrency** — batch workers execute the plan over a shared
+//!    `&NativeModel`; they read the cache through a shared reference and
+//!    never write it (`train_batch` warms once, before sharding). The
+//!    hit/miss telemetry uses relaxed atomics so shared-reference readers
+//!    can count.
+//!
+//! The `ScratchSpec` of the compiled plan no longer pre-sizes the
+//! flipped-weight buffers (`wt_u8`/`wt_f32`): the dense packs live here,
+//! and the masked fallback grows its scratch buffer on first use only.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A cached dense backward pack, tagged by the precision it was built
+/// for. A layer is only ever one precision per deployment, but the tag
+/// makes serving a stale other-precision pack impossible even if a
+/// future schedule switches a layer's precision between warms: a
+/// version bump plus a re-pack of one precision can never revalidate
+/// leftover bytes of the other.
+enum PackBuf {
+    /// Never built.
+    Empty,
+    /// Flipped-transposed weights `[Cin, Cout·Kh·Kw]` (uint8 layers).
+    U8(Vec<u8>),
+    /// f32 twin (float32 layers).
+    F32(Vec<f32>),
+}
+
+/// One layer's cached dense backward pack plus the parameter version it
+/// was built from.
+struct PackEntry {
+    /// Parameter version at pack time; 0 = never built (versions start
+    /// at 1).
+    version: u64,
+    buf: PackBuf,
+}
+
+impl Default for PackEntry {
+    fn default() -> PackEntry {
+        PackEntry { version: 0, buf: PackBuf::Empty }
+    }
+}
+
+/// Cache telemetry: `hits`/`misses` count dense backward-input lookups,
+/// `builds` counts actual re-packs performed by warming.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PackStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub builds: u64,
+}
+
+/// Per-layer packed-weight cache (see the module docs).
+pub struct PackCache {
+    entries: Vec<PackEntry>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    builds: AtomicU64,
+}
+
+impl PackCache {
+    /// Empty cache with one slot per graph layer.
+    pub fn new(n_layers: usize) -> PackCache {
+        PackCache {
+            entries: (0..n_layers).map(|_| PackEntry::default()).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            builds: AtomicU64::new(0),
+        }
+    }
+
+    /// The dense u8 pack for layer `l`, if the cached one was built at
+    /// exactly `version`. Counts a hit or miss; a miss means the caller
+    /// falls back to packing into scratch (correct, just slower).
+    pub fn wt_u8(&self, l: usize, version: u64) -> Option<&[u8]> {
+        let e = &self.entries[l];
+        match &e.buf {
+            PackBuf::U8(b) if e.version == version && !b.is_empty() => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// f32 twin of [`PackCache::wt_u8`].
+    pub fn wt_f32(&self, l: usize, version: u64) -> Option<&[f32]> {
+        let e = &self.entries[l];
+        match &e.buf {
+            PackBuf::F32(b) if e.version == version && !b.is_empty() => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Install/refresh the dense u8 pack for layer `l` at `version`.
+    /// No-op when the entry is already fresh; otherwise `build` fills a
+    /// cleared buffer (reusing the allocation when the slot already held
+    /// a u8 pack).
+    pub fn put_u8(&mut self, l: usize, version: u64, build: impl FnOnce(&mut Vec<u8>)) {
+        let e = &mut self.entries[l];
+        if e.version == version && matches!(&e.buf, PackBuf::U8(b) if !b.is_empty()) {
+            return;
+        }
+        let mut buf = match std::mem::replace(&mut e.buf, PackBuf::Empty) {
+            PackBuf::U8(mut b) => {
+                b.clear();
+                b
+            }
+            _ => Vec::new(),
+        };
+        build(&mut buf);
+        e.buf = PackBuf::U8(buf);
+        e.version = version;
+        self.builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// f32 twin of [`PackCache::put_u8`].
+    pub fn put_f32(&mut self, l: usize, version: u64, build: impl FnOnce(&mut Vec<f32>)) {
+        let e = &mut self.entries[l];
+        if e.version == version && matches!(&e.buf, PackBuf::F32(b) if !b.is_empty()) {
+            return;
+        }
+        let mut buf = match std::mem::replace(&mut e.buf, PackBuf::Empty) {
+            PackBuf::F32(mut b) => {
+                b.clear();
+                b
+            }
+            _ => Vec::new(),
+        };
+        build(&mut buf);
+        e.buf = PackBuf::F32(buf);
+        e.version = version;
+        self.builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current telemetry snapshot.
+    pub fn stats(&self) -> PackStats {
+        PackStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            builds: self.builds.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bytes held by the cached packs (memory accounting).
+    pub fn reserved_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| match &e.buf {
+                PackBuf::Empty => 0,
+                PackBuf::U8(b) => b.len(),
+                PackBuf::F32(b) => b.len() * 4,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_entry_hits_and_stale_entry_misses() {
+        let mut c = PackCache::new(3);
+        assert!(c.wt_u8(1, 1).is_none(), "empty cache must miss");
+        c.put_u8(1, 1, |dst| dst.extend_from_slice(&[7, 8, 9]));
+        assert_eq!(c.wt_u8(1, 1), Some(&[7u8, 8, 9][..]));
+        // version bump invalidates; re-put rebuilds
+        assert!(c.wt_u8(1, 2).is_none());
+        c.put_u8(1, 2, |dst| dst.extend_from_slice(&[1]));
+        assert_eq!(c.wt_u8(1, 2), Some(&[1u8][..]));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.builds), (2, 2, 2));
+    }
+
+    #[test]
+    fn put_is_noop_when_fresh() {
+        let mut c = PackCache::new(1);
+        c.put_u8(0, 5, |dst| dst.push(42));
+        c.put_u8(0, 5, |_| panic!("fresh entry must not rebuild"));
+        assert_eq!(c.wt_u8(0, 5), Some(&[42u8][..]));
+        assert_eq!(c.stats().builds, 1);
+    }
+
+    #[test]
+    fn u8_and_f32_slots_are_independent_per_precision() {
+        let mut c = PackCache::new(2);
+        c.put_f32(0, 1, |dst| dst.extend_from_slice(&[1.5, 2.5]));
+        assert!(c.wt_u8(0, 1).is_none(), "u8 lookup must not see an f32 pack");
+        assert_eq!(c.wt_f32(0, 1), Some(&[1.5f32, 2.5][..]));
+        assert_eq!(c.reserved_bytes(), 8);
+    }
+
+    #[test]
+    fn precision_tag_prevents_cross_precision_staleness() {
+        let mut c = PackCache::new(1);
+        c.put_f32(0, 1, |dst| dst.extend_from_slice(&[1.0, 2.0]));
+        // Switching the slot to u8 at a newer version must not make the
+        // old f32 bytes look fresh again at that version.
+        c.put_u8(0, 2, |dst| dst.extend_from_slice(&[9]));
+        assert!(c.wt_f32(0, 2).is_none(), "stale f32 pack revalidated by a u8 re-pack");
+        assert_eq!(c.wt_u8(0, 2), Some(&[9u8][..]));
+    }
+}

@@ -98,18 +98,23 @@ impl ExecPlan {
                                 if l.trainable {
                                     spec.acc_i32 = spec.acc_i32.max(geom.cout * kdim);
                                 }
+                                // The flipped-weight pack (`wt_u8`) is NOT
+                                // sized here: the dense pack lives in the
+                                // plan-owned cache (`graph::packs`); only
+                                // the per-sample masked fallback packs into
+                                // scratch, growing once on first use.
                                 if i > stop {
                                     spec.col_u8 = spec.col_u8.max(krow * hw_in);
                                     spec.acc_i32 = spec.acc_i32.max(geom.cin * hw_in);
-                                    spec.wt_u8 = spec.wt_u8.max(geom.cin * krow);
                                     spec.zeros_i32 = spec.zeros_i32.max(geom.cin);
                                 }
                             }
                             Precision::Float32 => {
                                 spec.col_f32 = spec.col_f32.max(fwd_col);
+                                // `wt_f32` deliberately unsized — see the
+                                // uint8 branch (dense packs are plan-owned).
                                 if i > stop {
                                     spec.col_f32 = spec.col_f32.max(krow * hw_in);
-                                    spec.wt_f32 = spec.wt_f32.max(geom.cin * krow);
                                     spec.zeros_f32 = spec.zeros_f32.max(geom.cin);
                                 }
                             }
@@ -237,6 +242,8 @@ impl ExecPlan {
             layers: &model.def.layers,
             stop: 0,
             scratch,
+            packs: model.packs(),
+            param_versions: model.param_versions(),
             ops,
             input: Some(input),
             acts: Vec::with_capacity(n),
@@ -292,6 +299,8 @@ impl ExecPlan {
             layers: &model.def.layers,
             stop,
             scratch,
+            packs: model.packs(),
+            param_versions: model.param_versions(),
             ops,
             input: None,
             acts: Vec::new(),
@@ -484,13 +493,17 @@ mod tests {
         let def = models::mnist_cnn(&[1, 12, 12], 4);
         let plan = ExecPlan::compile(&def, DnnConfig::Uint8);
         let spec = plan.scratch_spec();
-        assert!(spec.col_u8 > 0 && spec.acc_i32 > 0 && spec.wt_u8 > 0 && spec.zeros_i32 > 0);
+        assert!(spec.col_u8 > 0 && spec.acc_i32 > 0 && spec.zeros_i32 > 0);
+        // dense flipped-weight packs are plan-owned (`graph::packs`), not
+        // scratch-sized — the spec shrank accordingly
+        assert_eq!(spec.wt_u8, 0);
         // the uint8 plan never touches the float twins
         assert_eq!(spec.col_f32, 0);
         assert_eq!(spec.wt_f32, 0);
         // a float32 plan sizes the float twins instead
         let fspec = ExecPlan::compile(&def, DnnConfig::Float32).scratch_spec().clone();
-        assert!(fspec.col_f32 > 0 && fspec.wt_f32 > 0 && fspec.zeros_f32 > 0);
+        assert!(fspec.col_f32 > 0 && fspec.zeros_f32 > 0);
+        assert_eq!(fspec.wt_f32, 0);
         assert_eq!(fspec.col_u8, 0);
     }
 

@@ -180,13 +180,50 @@ pub fn fconv2d_bwd_input_gemm(
     let n = in_h * in_w;
     let mut out = TensorF32::zeros(&[geom.cin, in_h, in_w]);
     {
-        let (wt_buf, col_buf, init) = scratch.fconv_bwd_bufs(geom.cin * krow, krow * n, geom.cin);
+        // Reserve the flipped-weight buffer at its dense bound so sparse
+        // runs grow the arena once, not per new high-water kept count
+        // (see the quantized twin).
+        let dense_wt = geom.cin * geom.cout * geom.kh * geom.kw;
+        let (wt_full, col_buf, init) = scratch.fconv_bwd_bufs(dense_wt, krow * n, geom.cin);
+        let wt_buf = &mut wt_full[..geom.cin * krow];
         gemm::pack_wt_flip_f32(w.data(), geom, keep, wt_buf);
         gemm::im2col_bwd_f32(e.data(), oh, ow, geom, in_h, in_w, keep, col_buf);
         gemm::gemm_f32(wt_buf, col_buf, init, geom.cin, krow, n, out.data_mut());
     }
     ops.float_macs += kc as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
     ops.bytes += ((e.len() + w.len() + geom.cin * n) * 4) as u64;
+    out
+}
+
+/// Dense float error backprop against a **pre-packed** flipped-transposed
+/// weight matrix `wt_pack[Cin, Cout·Kh·Kw]` (the plan-owned pack cache):
+/// value-identical to [`fconv2d_bwd_input_gemm`] at `keep == None` — same
+/// backward column matrix, same GEMM, and the cached pack is exactly what
+/// `pack_wt_flip_f32` would produce for the current weights (guaranteed by
+/// the cache's version check). Op accounting matches the unpacked dense
+/// call (`wt_pack.len() == w.len()` for dense convs).
+pub fn fconv2d_bwd_input_gemm_packed(
+    e: &TensorF32,
+    wt_pack: &[f32],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let krow = geom.cout * geom.kh * geom.kw;
+    assert_eq!(wt_pack.len(), geom.cin * krow, "packed weight size");
+    let n = in_h * in_w;
+    let mut out = TensorF32::zeros(&[geom.cin, in_h, in_w]);
+    {
+        let (_, col_buf, init) = scratch.fconv_bwd_bufs(0, krow * n, geom.cin);
+        gemm::im2col_bwd_f32(e.data(), oh, ow, geom, in_h, in_w, None, col_buf);
+        gemm::gemm_f32(wt_pack, col_buf, init, geom.cin, krow, n, out.data_mut());
+    }
+    ops.float_macs += geom.cout as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.bytes += ((e.len() + wt_pack.len() + geom.cin * n) * 4) as u64;
     out
 }
 

@@ -1,4 +1,4 @@
-//! im2col + cache-blocked GEMM: the batched execution engine's compute
+//! im2col + register-blocked GEMM: the batched execution engine's compute
 //! core.
 //!
 //! Non-depthwise convolutions are lowered to one matrix multiply per
@@ -12,21 +12,41 @@
 //! twin accumulates in ascending-k order, matching the scalar float
 //! kernel's `(ci, ky, kx)` nesting so results are value-identical.
 //!
-//! Blocking: the inner loop is an AXPY over a contiguous row of `col`
-//! (vectorizable u8→i32 widening multiply-add); the `k` and `n` loops are
-//! tiled so one output tile and the `col` rows feeding it stay cache
-//! resident. The scalar kernels remain in `qconv`/`fconv` as the
-//! MCU-faithful reference — this module is the host-side fast path.
+//! Blocking: the compute core is an **MR×NR register-blocked
+//! micro-kernel** ([`MR`]×[`NR`]): an MR×NR accumulator tile lives in a
+//! fixed-size local array (registers after unrolling) and the k-loop
+//! streams one A-column slice and one B-row slice per step — CMSIS-NN-
+//! style register tiling, host-sized. The integer tile is exact i32 (any
+//! accumulation order gives the bit-identical result); the float tile
+//! accumulates each output element in ascending-`k` order, preserving the
+//! value-identity contract with the scalar kernels' `(ci, ky, kx)`
+//! nesting. Edge tiles (M/N remainders) run the same loops with clamped
+//! bounds. The pre-micro-kernel cache-blocked path is retained as
+//! [`gemm_u8_i32_tiled`]/[`gemm_f32_tiled`] — the property-test oracle and
+//! the bench baseline the micro-kernels are measured against. The scalar
+//! kernels remain in `qconv`/`fconv` as the MCU-faithful reference — this
+//! module is the host-side fast path.
 //!
 //! Scratch buffers come from [`crate::memplan::Scratch`]: the sequential
 //! training loop allocates one arena per run, batch workers one per
 //! spawned worker (i.e. per minibatch × worker) — in both cases the
 //! buffers are reused across every layer and sample they serve.
 
-/// Columns per output tile (i32 accumulator row bytes ≈ 4·NC per m-row).
+/// Columns per output tile of the retained cache-blocked reference path
+/// (i32 accumulator row bytes ≈ 4·NC per m-row).
 const NC: usize = 256;
-/// Rows of `col` (reduction depth) per tile.
+/// Rows of `col` (reduction depth) per tile of the cache-blocked path.
 const KC: usize = 128;
+
+/// Micro-kernel tile rows: output rows whose accumulators are held
+/// simultaneously. 4 rows × 16 columns = 64 i32 accumulators — two
+/// AVX2 register files' worth, small enough that LLVM keeps the tile in
+/// registers after unrolling, large enough to amortize every B-element
+/// load across MR rows.
+pub const MR: usize = 4;
+/// Micro-kernel tile columns (contiguous along the B/output rows, so the
+/// inner loop is a unit-stride widening multiply-add).
+pub const NR: usize = 16;
 
 /// Pack a `[Cin, H, W]` feature map into `col[Cin·Kh·Kw, Oh·Ow]`.
 ///
@@ -54,6 +74,17 @@ fn im2col<T: Copy>(
         for ky in 0..geom.kh {
             for kx in 0..geom.kw {
                 let dst = &mut col[r * n..(r + 1) * n];
+                // At stride 1 the in-bounds ox range maps to a contiguous
+                // input span (ix = ox + kx − pad_w), so interior row
+                // segments are one memcpy; only the padded borders fall
+                // back to fills. Byte-identical to the per-element loop.
+                let (lo, hi) = if geom.stride == 1 {
+                    let lo = geom.pad_w.saturating_sub(kx).min(ow);
+                    let hi = (w + geom.pad_w).saturating_sub(kx).min(ow).max(lo);
+                    (lo, hi)
+                } else {
+                    (0, 0)
+                };
                 let mut p = 0usize;
                 for oy in 0..oh {
                     let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
@@ -63,6 +94,16 @@ fn im2col<T: Copy>(
                         continue;
                     }
                     let rowbase = iy as usize * w;
+                    if geom.stride == 1 {
+                        dst[p..p + lo].fill(pad);
+                        if hi > lo {
+                            let src = rowbase + lo + kx - geom.pad_w;
+                            dst[p + lo..p + hi].copy_from_slice(&plane[src..src + (hi - lo)]);
+                        }
+                        dst[p + hi..p + ow].fill(pad);
+                        p += ow;
+                        continue;
+                    }
                     for ox in 0..ow {
                         let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
                         dst[p] = if ix < 0 || ix >= w as isize {
@@ -308,22 +349,58 @@ pub fn gemm_abt_u8_i32(
         assert_eq!(k.len(), m, "keep mask length mismatch");
     }
     out.fill(0);
+    // Register-blocked over kept A-rows: up to MR rows share every B-value
+    // load, with MR independent i32 accumulators per output column. The
+    // k-loop is unit-stride in both operands; i32 sums are exact, so the
+    // blocking is bit-identical to the per-row dot products. Masked rows
+    // are never gathered into a block (whole-row skip).
+    let mut blk = [0usize; MR];
+    let mut bl = 0usize;
+    let mut run_block = |rows: &[usize]| {
+        let mut arows: [&[u8]; MR] = [&[]; MR];
+        for (ii, &row) in rows.iter().enumerate() {
+            arows[ii] = &a[row * kd..(row + 1) * kd];
+        }
+        for j in 0..n {
+            let brow = &b[j * kd..(j + 1) * kd];
+            let mut acc = [0i32; MR];
+            if rows.len() == MR {
+                // full tile: constant bounds, MR independent accumulator
+                // chains sharing every B load
+                for (kk, &bvq) in brow.iter().enumerate() {
+                    let bv = bvq as i32 - zb;
+                    for ii in 0..MR {
+                        acc[ii] += (arows[ii][kk] as i32 - za) * bv;
+                    }
+                }
+            } else {
+                for (kk, &bvq) in brow.iter().enumerate() {
+                    let bv = bvq as i32 - zb;
+                    for (ac, arow) in acc[..rows.len()].iter_mut().zip(arows.iter()) {
+                        *ac += (arow[kk] as i32 - za) * bv;
+                    }
+                }
+            }
+            for (ii, &row) in rows.iter().enumerate() {
+                out[row * n + j] = acc[ii];
+            }
+        }
+    };
     for i in 0..m {
         if let Some(k) = keep {
             if !k[i] {
                 continue;
             }
         }
-        let arow = &a[i * kd..(i + 1) * kd];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * kd..(j + 1) * kd];
-            let mut acc = 0i32;
-            for (&av, &bv) in arow.iter().zip(brow.iter()) {
-                acc += (av as i32 - za) * (bv as i32 - zb);
-            }
-            *o = acc;
+        blk[bl] = i;
+        bl += 1;
+        if bl == MR {
+            run_block(&blk);
+            bl = 0;
         }
+    }
+    if bl > 0 {
+        run_block(&blk[..bl]);
     }
 }
 
@@ -347,34 +424,137 @@ pub fn gemm_abt_f32(
         assert_eq!(k.len(), m, "keep mask length mismatch");
     }
     out.fill(0.0);
+    // Register-blocked like the integer twin. Each accumulator still sums
+    // its own dot product in ascending-k order (the blocking only shares
+    // B loads across rows, it never reassociates a single output's sum),
+    // so results are bit-identical to the per-row dots.
+    let mut blk = [0usize; MR];
+    let mut bl = 0usize;
+    let mut run_block = |rows: &[usize]| {
+        let mut arows: [&[f32]; MR] = [&[]; MR];
+        for (ii, &row) in rows.iter().enumerate() {
+            arows[ii] = &a[row * kd..(row + 1) * kd];
+        }
+        for j in 0..n {
+            let brow = &b[j * kd..(j + 1) * kd];
+            let mut acc = [0f32; MR];
+            if rows.len() == MR {
+                for (kk, &bv) in brow.iter().enumerate() {
+                    for ii in 0..MR {
+                        acc[ii] += arows[ii][kk] * bv;
+                    }
+                }
+            } else {
+                for (kk, &bv) in brow.iter().enumerate() {
+                    for (ac, arow) in acc[..rows.len()].iter_mut().zip(arows.iter()) {
+                        *ac += arow[kk] * bv;
+                    }
+                }
+            }
+            for (ii, &row) in rows.iter().enumerate() {
+                out[row * n + j] = acc[ii];
+            }
+        }
+    };
     for i in 0..m {
         if let Some(k) = keep {
             if !k[i] {
                 continue;
             }
         }
-        let arow = &a[i * kd..(i + 1) * kd];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * kd..(j + 1) * kd];
-            let mut acc = 0f32;
-            for (&av, &bv) in arow.iter().zip(brow.iter()) {
-                acc += av * bv;
-            }
-            *o = acc;
+        blk[bl] = i;
+        bl += 1;
+        if bl == MR {
+            run_block(&blk);
+            bl = 0;
         }
+    }
+    if bl > 0 {
+        run_block(&blk[..bl]);
     }
 }
 
-/// Tiled integer GEMM with per-operand zero points:
+/// Integer GEMM with per-operand zero points:
 /// `out[m·n] = row_init[m] + Σ_k (a[m·k] − za)·(b[k·n] − zb)`.
 ///
-/// Accumulation is i32 and exact, so the result is independent of the tile
-/// schedule — bit-identical to any naive triple loop over the same
-/// operands. The inner loop is an AXPY over a contiguous `b` row segment
-/// (the im2col layout makes the spatial dimension innermost), which the
-/// compiler vectorizes; rows of `a` equal to the zero point are skipped.
+/// The compute core is the MR×NR register-blocked micro-kernel (see the
+/// module docs): an [`MR`]×[`NR`] i32 accumulator tile held in a local
+/// array, k-loop streaming one A column slice (MR values) and one
+/// contiguous B row slice (NR values) per step. Accumulation is i32 and
+/// exact, so the result is independent of the tile schedule —
+/// bit-identical to any naive triple loop over the same operands
+/// (edge tiles included; property-tested around the tile boundaries).
 pub fn gemm_u8_i32(
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut mb = 0;
+    while mb < m {
+        let mrr = MR.min(m - mb);
+        let mut nb = 0;
+        while nb < n {
+            let nrr = NR.min(n - nb);
+            let mut acc = [[0i32; NR]; MR];
+            for (ii, row) in acc[..mrr].iter_mut().enumerate() {
+                row.fill(row_init[mb + ii]);
+            }
+            if mrr == MR && nrr == NR {
+                // full tile: constant loop bounds, fully unrollable
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + NR];
+                    for ii in 0..MR {
+                        let av = a[(mb + ii) * k + kk] as i32 - za;
+                        let ai = &mut acc[ii];
+                        for jj in 0..NR {
+                            ai[jj] += av * (brow[jj] as i32 - zb);
+                        }
+                    }
+                }
+            } else {
+                // edge tile: same loops with clamped bounds (i32 sums are
+                // order-independent, so numerics are unaffected)
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + nrr];
+                    for ii in 0..mrr {
+                        let av = a[(mb + ii) * k + kk] as i32 - za;
+                        let ai = &mut acc[ii][..nrr];
+                        for (aj, &bv) in ai.iter_mut().zip(brow.iter()) {
+                            *aj += av * (bv as i32 - zb);
+                        }
+                    }
+                }
+            }
+            for ii in 0..mrr {
+                let orow = &mut out[(mb + ii) * n + nb..(mb + ii) * n + nb + nrr];
+                orow.copy_from_slice(&acc[ii][..nrr]);
+            }
+            nb += nrr;
+        }
+        mb += mrr;
+    }
+}
+
+/// The pre-micro-kernel cache-blocked integer GEMM (PR 1–3 compute core),
+/// retained verbatim as the property-test oracle and the bench baseline
+/// the micro-kernel path is measured against: NC×KC tiles, AXPY inner
+/// loop over a contiguous `b` row segment, zero-point rows of `a` skipped.
+/// Bit-identical to [`gemm_u8_i32`] (exact i32 accumulation on both
+/// sides).
+pub fn gemm_u8_i32_tiled(
     a: &[u8],
     za: i32,
     b: &[u8],
@@ -421,13 +601,79 @@ pub fn gemm_u8_i32(
     }
 }
 
-/// Tiled f32 GEMM: `out[m·n] = row_init[m] + Σ_k a[m·k]·b[k·n]`.
+/// f32 GEMM: `out[m·n] = row_init[m] + Σ_k a[m·k]·b[k·n]`, on the MR×NR
+/// register-blocked micro-kernel.
 ///
-/// Per output element the products are added in ascending-`k` order
-/// (tiles ascend, `k` ascends within a tile), which matches the scalar
-/// float conv's `(ci, ky, kx)` loop nesting — results are value-identical
-/// to the reference kernel (padded entries add an exact `a·0.0`).
+/// Per output element the products are added in ascending-`k` order (the
+/// accumulator tile is initialized with `row_init`, then the k-loop
+/// ascends; the tile only shares loads across outputs, it never
+/// reassociates one output's sum), which matches the scalar float conv's
+/// `(ci, ky, kx)` loop nesting — results are value-identical to the
+/// reference kernel and to the retained [`gemm_f32_tiled`] path (padded
+/// entries add an exact `a·0.0`).
 pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    row_init: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut mb = 0;
+    while mb < m {
+        let mrr = MR.min(m - mb);
+        let mut nb = 0;
+        while nb < n {
+            let nrr = NR.min(n - nb);
+            let mut acc = [[0f32; NR]; MR];
+            for (ii, row) in acc[..mrr].iter_mut().enumerate() {
+                row.fill(row_init[mb + ii]);
+            }
+            if mrr == MR && nrr == NR {
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + NR];
+                    for ii in 0..MR {
+                        let av = a[(mb + ii) * k + kk];
+                        let ai = &mut acc[ii];
+                        for jj in 0..NR {
+                            ai[jj] += av * brow[jj];
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + nrr];
+                    for ii in 0..mrr {
+                        let av = a[(mb + ii) * k + kk];
+                        let ai = &mut acc[ii][..nrr];
+                        for (aj, &bv) in ai.iter_mut().zip(brow.iter()) {
+                            *aj += av * bv;
+                        }
+                    }
+                }
+            }
+            for ii in 0..mrr {
+                let orow = &mut out[(mb + ii) * n + nb..(mb + ii) * n + nb + nrr];
+                orow.copy_from_slice(&acc[ii][..nrr]);
+            }
+            nb += nrr;
+        }
+        mb += mrr;
+    }
+}
+
+/// The pre-micro-kernel cache-blocked f32 GEMM (PR 1–3 compute core),
+/// retained as oracle and bench baseline. Same ascending-`k` per-output
+/// accumulation order as [`gemm_f32`], so the two are bit-identical.
+pub fn gemm_f32_tiled(
     a: &[f32],
     b: &[f32],
     row_init: &[f32],
@@ -500,7 +746,7 @@ mod tests {
     }
 
     #[test]
-    fn prop_tiled_gemm_matches_naive_triple_loop() {
+    fn prop_microkernel_gemm_matches_naive_triple_loop() {
         Prop::new(48).check(
             |r: &mut Pcg32| {
                 // spans the tile boundaries: k and n around KC/NC
@@ -765,5 +1011,168 @@ mod tests {
         // k == 0: output is just row_init
         gemm_u8_i32(&[], 3, &[], 4, &[7, -7], 2, 0, 1, &mut out2);
         assert_eq!(out2, vec![7, -7]);
+    }
+
+    /// Deterministic sweep of M/N/K around the MR/NR tile boundaries
+    /// (±1, primes, 1×N, M×1): the micro-kernel must be bit-exact with
+    /// the retained tiled path and the naive triple loop (i32), and
+    /// bit-identical to the tiled path (f32 — same per-output ascending-k
+    /// accumulation order).
+    #[test]
+    fn microkernel_edge_tiles_bit_exact() {
+        let dims_m = [1usize, MR - 1, MR, MR + 1, 2 * MR + 1, 7];
+        let dims_n = [1usize, NR - 1, NR, NR + 1, 2 * NR + 3, 13];
+        let dims_k = [1usize, 2, 31];
+        let mut rng = Pcg32::seeded(77);
+        for &m in &dims_m {
+            for &n in &dims_n {
+                for &k in &dims_k {
+                    let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                    let b: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+                    let init: Vec<i32> = (0..m).map(|_| rng.below(1000) as i32 - 500).collect();
+                    let (za, zb) = (rng.below(256) as i32, rng.below(256) as i32);
+                    let mut micro = vec![0i32; m * n];
+                    let mut tiled = vec![0i32; m * n];
+                    gemm_u8_i32(&a, za, &b, zb, &init, m, k, n, &mut micro);
+                    gemm_u8_i32_tiled(&a, za, &b, zb, &init, m, k, n, &mut tiled);
+                    assert_eq!(micro, tiled, "i32 micro vs tiled at m={m} n={n} k={k}");
+                    let naive = naive_gemm_i32(&a, za, &b, zb, &init, m, k, n);
+                    assert_eq!(micro, naive, "i32 micro vs naive at m={m} n={n} k={k}");
+
+                    let mut af = vec![0f32; m * k];
+                    let mut bf = vec![0f32; k * n];
+                    rng.fill_normal(&mut af, 0.7);
+                    rng.fill_normal(&mut bf, 0.7);
+                    let initf: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+                    let mut fmicro = vec![0f32; m * n];
+                    let mut ftiled = vec![0f32; m * n];
+                    gemm_f32(&af, &bf, &initf, m, k, n, &mut fmicro);
+                    gemm_f32_tiled(&af, &bf, &initf, m, k, n, &mut ftiled);
+                    let mb: Vec<u32> = fmicro.iter().map(|v| v.to_bits()).collect();
+                    let tb: Vec<u32> = ftiled.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(mb, tb, "f32 micro vs tiled at m={m} n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    /// The A·Bᵀ row-blocking must stay bit-exact across kept-row counts
+    /// that land on every residue of the MR block size, dense and with
+    /// sparse `keep` masks (including masks that leave 1 or MR±1 rows).
+    #[test]
+    fn abt_row_blocking_edge_cases_bit_exact() {
+        let mut rng = Pcg32::seeded(78);
+        for &m in &[1usize, MR - 1, MR, MR + 1, 2 * MR, 11] {
+            for &(n, kd) in &[(1usize, 7usize), (5, 1), (17, 64)] {
+                let a: Vec<u8> = (0..m * kd).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..n * kd).map(|_| rng.below(256) as u8).collect();
+                let mut af = vec![0f32; m * kd];
+                let mut bf = vec![0f32; n * kd];
+                rng.fill_normal(&mut af, 1.0);
+                rng.fill_normal(&mut bf, 1.0);
+                let (za, zb) = (rng.below(256) as i32, rng.below(256) as i32);
+                let masks: [Option<Vec<bool>>; 3] = [
+                    None,
+                    Some((0..m).map(|i| i % 2 == 0).collect()),
+                    Some((0..m).map(|_| rng.below(2) == 1).collect()),
+                ];
+                for keep in masks.iter().map(|k| k.as_deref()) {
+                    let mut got = vec![-1i32; m * n];
+                    gemm_abt_u8_i32(&a, za, &b, zb, m, n, kd, keep, &mut got);
+                    for i in 0..m {
+                        for j in 0..n {
+                            let kept = match keep {
+                                Some(k) => k[i],
+                                None => true,
+                            };
+                            let mut want = 0i32;
+                            if kept {
+                                for t in 0..kd {
+                                    want += (a[i * kd + t] as i32 - za)
+                                        * (b[j * kd + t] as i32 - zb);
+                                }
+                            }
+                            assert_eq!(got[i * n + j], want, "i32 abt m={m} ({i},{j})");
+                        }
+                    }
+                    let mut gotf = vec![9f32; m * n];
+                    gemm_abt_f32(&af, &bf, m, n, kd, keep, &mut gotf);
+                    for i in 0..m {
+                        for j in 0..n {
+                            let kept = match keep {
+                                Some(k) => k[i],
+                                None => true,
+                            };
+                            let mut want = 0f32;
+                            if kept {
+                                for t in 0..kd {
+                                    want += af[i * kd + t] * bf[j * kd + t];
+                                }
+                            }
+                            assert_eq!(
+                                gotf[i * n + j].to_bits(),
+                                want.to_bits(),
+                                "f32 abt m={m} ({i},{j})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The stride-1 im2col fast path (contiguous interior `copy_from_slice`
+    /// rows) must stay byte-identical to the per-element packing rule,
+    /// including pads wider than the kernel offset and tiny maps.
+    #[test]
+    fn im2col_stride1_fast_path_matches_reference() {
+        for &(cin, k, pad, h, w) in &[
+            (2usize, 3usize, 1usize, 5usize, 7usize),
+            (1, 3, 0, 4, 4),
+            (3, 5, 2, 6, 5),
+            (1, 1, 0, 3, 3),
+            (2, 3, 2, 3, 3), // pad wider than some kernel offsets
+        ] {
+            let g = ConvGeom {
+                cin,
+                cout: 1,
+                kh: k,
+                kw: k,
+                stride: 1,
+                pad_h: pad,
+                pad_w: pad,
+                depthwise: false,
+            };
+            let (oh, ow) = g.out_hw(h, w);
+            let xd: Vec<u8> = (0..cin * h * w).map(|i| (i * 7 + 3) as u8).collect();
+            let mut col = vec![0u8; cin * k * k * oh * ow];
+            im2col_u8(&xd, h, w, &g, oh, ow, 211, &mut col);
+            let nsp = oh * ow;
+            let mut r = 0usize;
+            for ci in 0..cin {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let iy = (oy + ky) as isize - pad as isize;
+                                let ix = (ox + kx) as isize - pad as isize;
+                                let oob = iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize;
+                                let want = if oob {
+                                    211
+                                } else {
+                                    xd[(ci * h + iy as usize) * w + ix as usize]
+                                };
+                                assert_eq!(
+                                    col[r * nsp + oy * ow + ox],
+                                    want,
+                                    "ci={ci} ky={ky} kx={kx} oy={oy} ox={ox}"
+                                );
+                            }
+                        }
+                        r += 1;
+                    }
+                }
+            }
+        }
     }
 }

@@ -324,12 +324,18 @@ pub fn qconv2d_bwd_input_gemm(
 
     let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
     {
-        let (wt_buf, col_buf, acc, init) = scratch.qconv_bwd_bufs(
-            geom.cin * krow,
+        // The flipped-weight buffer is reserved at its dense bound (the
+        // kc == cout size) no matter how many channels the mask keeps, so
+        // a sparse run grows the scratch arena exactly once — on its
+        // first masked pack — instead of re-growing at every new
+        // high-water kept count.
+        let (wt_full, col_buf, acc, init) = scratch.qconv_bwd_bufs(
+            geom.cin * geom.cout * geom.kh * geom.kw,
             if pointwise_dense { 0 } else { krow * n },
             geom.cin * n,
             geom.cin,
         );
+        let wt_buf = &mut wt_full[..geom.cin * krow];
         gemm::pack_wt_flip_u8(w.values.data(), geom, keep, wt_buf);
         let col: &[u8] = if pointwise_dense {
             e.values.data()
@@ -354,6 +360,72 @@ pub fn qconv2d_bwd_input_gemm(
     }
 
     ops.int_macs += kc as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + w.len() + geom.cin * n) as u64;
+    out
+}
+
+/// Dense error backprop against a **pre-packed** flipped-transposed weight
+/// matrix `wt_pack[Cin, Cout·Kh·Kw]` (the plan-owned pack cache,
+/// `graph::packs`): bit-exact with [`qconv2d_bwd_input_gemm`] at
+/// `keep == None`, with the per-sample `pack_wt_flip_u8` step skipped
+/// entirely. `w` supplies the quantization parameters and byte accounting
+/// only; `wt_pack` must be the dense packing of exactly those weights —
+/// the cache's version check guarantees it. Op accounting is identical to
+/// the unpacked dense call (the packing was never counted as MACs).
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_packed(
+    e: &QTensor,
+    w: &QTensor,
+    wt_pack: &[u8],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale);
+    let krow = geom.cout * geom.kh * geom.kw;
+    assert_eq!(wt_pack.len(), geom.cin * krow, "packed weight size");
+    let n = in_h * in_w;
+    let pointwise_dense = geom.is_pointwise();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (_, col_buf, acc, init) = scratch.qconv_bwd_bufs(
+            0,
+            if pointwise_dense { 0 } else { krow * n },
+            geom.cin * n,
+            geom.cin,
+        );
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                None,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32(wt_pack, zw, col, ze, init, geom.cin, krow, n, acc);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, false);
+        }
+    }
+
+    ops.int_macs += geom.cout as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
     ops.int_ops += (geom.cin * n) as u64;
     ops.bytes += (e.len() + w.len() + geom.cin * n) as u64;
     out

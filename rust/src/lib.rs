@@ -24,9 +24,12 @@
 //!    the MCU-faithful reference — the Rust port of what the paper's C
 //!    framework executes on a Cortex-M;
 //!  * the **batched im2col/GEMM engine** (`kernels::gemm`, backed by the
-//!    [`memplan::Scratch`] arena) lowers non-depthwise convolutions to a
-//!    tiled integer GEMM and shards minibatch samples across threads via
-//!    [`graph::exec::NativeModel::train_batch`] /
+//!    [`memplan::Scratch`] arena) lowers non-depthwise convolutions onto
+//!    MR×NR register-blocked integer micro-kernels, caches the dense
+//!    backward weight packs in the plan ([`graph::packs`], invalidated by
+//!    the optimizers' dirty bits) and shards minibatch samples across a
+//!    persistent worker pool ([`graph::batch::WorkerPool`]) via
+//!    [`graph::exec::NativeModel::train_batch_pooled`] /
 //!    [`train::loop_::train_batched`] (`TT_WORKERS` knob). Integer
 //!    accumulation is exact, per-sample work runs against a frozen model
 //!    snapshot, and all state updates are merged in sample order — so the

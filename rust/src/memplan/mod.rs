@@ -30,7 +30,10 @@ use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
 /// every buffer request the plan's ops can make, per backing buffer.
 /// Computed by `graph::plan::ExecPlan::compile` (which knows each layer's
 /// precision, so float models get their f32 twins pre-sized too) and
-/// consumed by [`Scratch::for_spec`].
+/// consumed by [`Scratch::for_spec`]. The flipped-weight fields
+/// (`wt_u8`/`wt_f32`) stay 0 in compiled specs: dense backward packs are
+/// owned by the plan's pack cache (`graph::packs`), and only the sparse
+/// masked fallback packs into scratch (growing on first use).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ScratchSpec {
     pub col_u8: usize,
@@ -54,7 +57,10 @@ pub struct Scratch {
     col_u8: Vec<u8>,
     col_f32: Vec<f32>,
     acc_i32: Vec<i32>,
-    /// Flipped-transposed weight packing for the backward-input GEMM.
+    /// Flipped-transposed weight packing for the backward-input GEMM —
+    /// the **masked fallback only**: dense packs are plan-owned
+    /// (`graph::packs`), so these buffers stay empty on dense runs and
+    /// grow once on a sparse run's first masked pack.
     wt_u8: Vec<u8>,
     wt_f32: Vec<f32>,
     /// Zero-filled `row_init` vectors for backward GEMMs (read-only; kept
@@ -523,12 +529,14 @@ mod tests {
             assert_eq!((wt.len(), col.len(), init.len()), (5, 6, 3));
             assert!(init.iter().all(|&v| v == 0.0));
         }
-        // for_model pre-reserves the backward buffers of the model's own
-        // convs: serving a smaller backward call must not grow the arena.
+        // for_model pre-reserves the backward col/acc/init buffers of the
+        // model's own convs (the flipped-weight pack is plan-owned, so a
+        // dense backward call requests wt_len == 0): serving a smaller
+        // backward call must not grow the arena.
         let m = models::mnist_cnn(&[1, 12, 12], 4);
         let mut s2 = Scratch::for_model(&m);
         let before = s2.reserved_bytes();
-        let _ = s2.qconv_bwd_bufs(4, 9, 16, 1);
+        let _ = s2.qconv_bwd_bufs(0, 9, 16, 1);
         assert_eq!(s2.reserved_bytes(), before);
     }
 

@@ -172,6 +172,10 @@ impl FqtSgd {
                 }
                 _ => {}
             }
+            // Dirty bit: the update invalidates this layer's cached
+            // backward weight pack (see `graph::packs`); the next
+            // `warm_packs` re-packs exactly the touched layers.
+            model.touch_layer(i);
             buf.clear_batch();
         }
         self.count = 0;

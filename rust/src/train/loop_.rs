@@ -3,6 +3,7 @@
 //! per-epoch metrics and fwd/bwd op accounting (the split behind
 //! Figs. 4b/7b).
 
+use crate::graph::batch::WorkerPool;
 use crate::graph::exec::{DenseUpdates, NativeModel};
 use crate::kernels::{softmax, OpCounter};
 use crate::tensor::TensorF32;
@@ -123,14 +124,16 @@ pub fn train(
 }
 
 /// Batched/threaded variant of [`train`]: each shuffled epoch is processed
-/// in `batch`-sized slices through [`NativeModel::train_batch`], with
-/// samples sharded across `workers` `std::thread` workers.
+/// in `batch`-sized slices through [`NativeModel::train_batch_pooled`],
+/// with samples sharded across a **persistent worker pool** owned by this
+/// loop — one [`WorkerPool`] (and thus one thread set plus one
+/// per-worker scratch arena) for the whole run, not per minibatch.
 ///
 /// Within a slice every sample sees the same model snapshot and the
 /// activation-range / error-observer updates are folded in afterwards in
 /// sample order, so the resulting weights are **bit-identical for every
 /// worker count** (the determinism contract of the batch engine; see
-/// `NativeModel::train_batch`). The dynamic sparse controller is
+/// `NativeModel::train_batch_pooled`). The dynamic sparse controller is
 /// inherently per-sample-sequential, so this path always runs dense
 /// updates — sparse experiments stay on [`train`].
 #[allow(clippy::too_many_arguments)]
@@ -149,6 +152,9 @@ pub fn train_batched(
     let mut epoch_stats = Vec::with_capacity(epochs);
     let mut samples_seen = 0u64;
     let batch = batch.max(1);
+    // The run-long worker pool (TT_WORKERS semantics unchanged: `workers`
+    // threads, each batch uses at most one per sample).
+    let mut pool = WorkerPool::new(workers.max(1));
 
     for _ in 0..epochs {
         let order = rng.permutation(train_split.len());
@@ -157,7 +163,7 @@ pub fn train_batched(
         for chunk in order.chunks(batch) {
             let xs: Vec<&TensorF32> = chunk.iter().map(|&i| &train_split.xs[i]).collect();
             let ys: Vec<usize> = chunk.iter().map(|&i| train_split.ys[i]).collect();
-            let res = model.train_batch(&xs, &ys, workers);
+            let res = model.train_batch_pooled(&xs, &ys, &mut pool);
             fwd_ops.add(&res.fwd_ops);
             bwd_ops.add(&res.bwd_ops);
             for (k, bwd) in res.grads.iter().enumerate() {

@@ -126,6 +126,9 @@ impl QOptimizer {
                 }
                 LayerParams::None => {}
             }
+            // Dirty bit: the write above invalidates this layer's cached
+            // backward weight pack (see `graph::packs`).
+            model.touch_layer(i);
             ga.data_mut().fill(0.0);
             gba.data_mut().fill(0.0);
         }

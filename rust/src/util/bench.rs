@@ -84,6 +84,12 @@ impl ResultSink {
         self.rows.push(row);
     }
 
+    /// The rows accumulated so far (e.g. for embedding into a secondary
+    /// machine-readable artifact such as `BENCH_kernels.json`).
+    pub fn rows(&self) -> &[Json] {
+        &self.rows
+    }
+
     /// Write all accumulated rows. Creates `results/` if needed.
     pub fn flush(&self) -> std::io::Result<std::path::PathBuf> {
         let dir = std::path::Path::new("results");

@@ -153,23 +153,48 @@ fn quantized_weight_snapshot(m: &tinytrain::graph::exec::NativeModel) -> (Vec<u8
     (wbits, bbits)
 }
 
-/// End-to-end determinism through the harness: a full batched training run
-/// must produce bit-identical weights for 1 vs 4 workers on a fixed seed.
-#[test]
-fn batched_pipeline_bit_identical_across_worker_counts() {
+/// One full batched kmnist training run: per-epoch loss bits plus the
+/// final weight snapshot — the fingerprint both determinism tests below
+/// compare across worker counts.
+fn batched_run_fingerprint(
+    workers: usize,
+    epochs: usize,
+    seed: u64,
+) -> (Vec<u32>, (Vec<u8>, Vec<u32>)) {
     let mut spec = tinytrain::data::spec_by_name("kmnist").unwrap();
     spec.reduced_shape = [1, 12, 12];
-    let run = |workers: usize| {
-        let knobs = Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1, workers };
-        let (rep, m) = run_full_training_batched(&spec, DnnConfig::Uint8, &knobs, 11);
-        (rep, quantized_weight_snapshot(&m))
-    };
-    let (rep1, snap1) = run(1);
-    let (rep4, snap4) = run(4);
+    let knobs = Knobs { epochs, runs: 1, train_pc: 2, test_pc: 1, workers };
+    let (rep, m) = run_full_training_batched(&spec, DnnConfig::Uint8, &knobs, seed);
+    let losses: Vec<u32> = rep.epochs.iter().map(|e| e.train_loss.to_bits()).collect();
+    (losses, quantized_weight_snapshot(&m))
+}
+
+/// End-to-end determinism through the harness: a full batched training run
+/// must produce bit-identical weights and losses for 1 vs 4 workers on a
+/// fixed seed.
+#[test]
+fn batched_pipeline_bit_identical_across_worker_counts() {
+    let (l1, snap1) = batched_run_fingerprint(1, 2, 11);
+    let (l4, snap4) = batched_run_fingerprint(4, 2, 11);
     assert_eq!(snap1, snap4, "weights diverged across worker counts");
-    let l1: Vec<f32> = rep1.epochs.iter().map(|e| e.train_loss).collect();
-    let l4: Vec<f32> = rep4.epochs.iter().map(|e| e.train_loss).collect();
     assert_eq!(l1, l4, "per-epoch losses diverged across worker counts");
+}
+
+/// CI worker-pool sanity matrix entry: the same harness run must be
+/// bit-identical between one worker and whatever `TT_WORKERS` the
+/// environment requests (defaults to 2 when unset, so the test is
+/// meaningful locally too; a request of 1 is lifted to a 1-vs-3
+/// comparison so no matrix leg degenerates to comparing a run against
+/// itself). The CI test job runs this at `TT_WORKERS=1,2,4` so
+/// persistent-pool regressions can't land silently.
+#[test]
+fn batched_training_matches_tt_workers_env() {
+    let requested: usize =
+        std::env::var("TT_WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let workers = if requested <= 1 { 3 } else { requested };
+    let base = batched_run_fingerprint(1, 1, 23);
+    let multi = batched_run_fingerprint(workers, 1, 23);
+    assert_eq!(base, multi, "{workers} workers diverged from the one-worker run");
 }
 
 /// The sequential reference path must still work next to the batched one

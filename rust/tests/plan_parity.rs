@@ -182,6 +182,85 @@ fn training_step_performs_zero_arena_growth_after_plan() {
     }
 }
 
+/// Pack-cache invalidation (stale-pack regression): optimizer steps dirty
+/// the plan-owned backward weight packs, and sparse-mask flips bypass
+/// them — in every one of those states a forward+backward step through
+/// the planned executor must stay bit-identical to the straight-line
+/// reference executor, which never uses the cache (i.e. behaves like a
+/// freshly compiled deployment of the current weights). A stale pack
+/// served after an update would diverge here.
+#[test]
+fn pack_cache_invalidation_stays_bit_identical() {
+    use tinytrain::train::fqt::FqtSgd;
+    use tinytrain::train::Optimizer;
+
+    let (mut m, xs) = build("mnist_cnn", &[1, 12, 12], 4, DnnConfig::Uint8, 0xD1);
+    // Drive optimizer steps so every trainable layer is touched and the
+    // deployment-time packs go stale.
+    let mut opt = FqtSgd::new(&m, 0.05, 2);
+    let mut scratch = m.make_scratch();
+    let mut ops = OpCounter::new();
+    for (k, x) in xs.iter().enumerate() {
+        let trace = m.forward_adapt_in(x, &mut scratch, &mut ops);
+        let (_, _, err) = softmax::softmax_ce(&trace.logits, k % 4, &mut ops);
+        let bwd = m.backward_in(&trace, err, &mut DenseUpdates, &mut scratch, &mut ops);
+        opt.accumulate(&mut m, &bwd, &mut ops);
+    }
+    opt.finish(&mut m, &mut ops);
+
+    // (a) stale cache, no warm: the dense backward must bypass the stale
+    // entry (counted as a miss) and still match the reference bit-for-bit.
+    let s0 = m.pack_stats();
+    assert_backward_parity(&m, &xs[0], false, "stale-pack/stale-fallback");
+    let s1 = m.pack_stats();
+    assert!(s1.misses > s0.misses, "stale pack must be bypassed, not served");
+
+    // (b) after re-warming, the dense backward must hit the fresh pack —
+    // and remain bit-identical to the cache-free reference.
+    m.warm_packs();
+    let h0 = m.pack_stats().hits;
+    assert_forward_parity(&m, &xs[0], "stale-pack/warmed");
+    assert_backward_parity(&m, &xs[0], false, "stale-pack/warmed");
+    assert!(m.pack_stats().hits > h0, "dense backward must hit the warmed pack");
+
+    // (c) a DynamicSparse mask flip bypasses the cache per sample; parity
+    // must hold under the mask, and the following dense step must hit the
+    // (still fresh) packs bit-identically again.
+    assert_backward_parity(&m, &xs[1], true, "stale-pack/sparse-flip");
+    assert_backward_parity(&m, &xs[2], false, "stale-pack/dense-after-sparse");
+}
+
+/// Sparse scratch-growth contract: dense steps perform zero growth (the
+/// plan-owned pack cache serves them); a sparse run's masked fallback
+/// reserves the flipped-weight buffer at its **dense bound** on the first
+/// masked pack, so the arena grows at most once and is stable afterwards
+/// — regardless of how the per-sample kept counts fluctuate.
+#[test]
+fn sparse_training_scratch_growth_is_one_shot() {
+    let (m, xs) = build("mnist_cnn", &[1, 12, 12], 4, DnnConfig::Uint8, 0xE2);
+    let mut scratch = m.make_scratch();
+    let mut ops = OpCounter::new();
+    let run_sparse = |x: &TensorF32, scratch: &mut Scratch, ops: &mut OpCounter| {
+        let trace = m.forward_in(x, scratch, ops);
+        let (loss, _, err) = softmax::softmax_ce(&trace.logits, 0, ops);
+        let mut ctl = DynamicSparse::new(0.4, 1.0);
+        ctl.seed_max_loss(loss * 4.0 + 1.0);
+        ctl.begin_sample(loss);
+        let mut obs = m.err_obs.clone();
+        let _ = m.backward_with(&trace, err, &mut ctl, &mut obs, scratch, ops);
+    };
+    run_sparse(&xs[0], &mut scratch, &mut ops);
+    let after_first = scratch.reserved_bytes();
+    for x in &xs {
+        run_sparse(x, &mut scratch, &mut ops);
+    }
+    assert_eq!(
+        scratch.reserved_bytes(),
+        after_first,
+        "masked fallback must reserve its dense bound once, then stay stable"
+    );
+}
+
 /// Flatten in the planned executor is a zero-copy view: the flattened
 /// activation aliases its input's buffer and allocates nothing.
 #[test]
