@@ -9,13 +9,13 @@
 use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, NativeModel};
 use tinytrain::graph::plan::ExecPlan;
 use tinytrain::graph::{models, DnnConfig};
-use tinytrain::kernels::{fconv, gemm, qconv, qlinear, softmax, ConvGeom, OpCounter};
+use tinytrain::kernels::{dwconv, fconv, gemm, qconv, qlinear, softmax, ConvGeom, OpCounter};
 use tinytrain::memplan::Scratch;
 use tinytrain::quant::{QParams, QTensor};
 use tinytrain::tensor::TensorF32;
 use tinytrain::train::fqt::FqtSgd;
 use tinytrain::train::Optimizer;
-use tinytrain::util::bench::{env_usize, fmt_duration, time_it, ResultSink, Table};
+use tinytrain::util::bench::{check_perf_rows, env_usize, fmt_duration, time_it, ResultSink, Table};
 use tinytrain::util::json::Json;
 use tinytrain::util::prng::Pcg32;
 
@@ -504,6 +504,192 @@ fn main() {
         println!("gemm {label}: micro {:.2}x vs tiled", tt / tm);
     }
 
+    // §Tentpole (PR 5): the register-blocked depthwise engine vs the
+    // scalar MCU-faithful kernels, on the MbedNet/MCUNet block shape that
+    // dominates the paper's depthwise-separable backbones. Forward (u8 +
+    // f32), then both backward kernels at the §III-B sparsity levels —
+    // for depthwise a masked out-channel is a masked in-channel, so the
+    // kept ratio should map ~linearly onto both backward times.
+    let gd = ConvGeom {
+        cin: 64,
+        cout: 64,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad_h: 1,
+        pad_w: 1,
+        depthwise: true,
+    };
+    let xd = rand_q(&mut rng, &[64, 32, 32]);
+    let wd = rand_q(&mut rng, &[64, 1, 3, 3]);
+    let biasd = vec![0i32; 64];
+    let macsd = gd.fwd_macs(32, 32) as f64;
+    let mut dw_rows: Vec<Json> = Vec::new();
+    let (td_s, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(qconv::qconv2d_fwd(&xd, &wd, &biasd, &gd, oqp, true, &mut ops));
+    });
+    let (td_b, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(dwconv::qdwconv2d_fwd(&xd, &wd, &biasd, &gd, oqp, true, &mut ops));
+    });
+    tab.row(&[
+        "qdwconv fwd scalar".into(),
+        "64x32x32 dw, k3".into(),
+        fmt_duration(td_s),
+        format!("{:.2}", macsd / td_s / 1e9),
+    ]);
+    tab.row(&[
+        "qdwconv fwd blocked".into(),
+        "64x32x32 dw, k3".into(),
+        fmt_duration(td_b),
+        format!("{:.2}", macsd / td_b / 1e9),
+    ]);
+    let row = Json::obj(vec![
+        ("kernel", Json::str("qdwconv2d_fwd")),
+        ("shape", Json::str("64x32x32 dw k3")),
+        ("scalar_seconds", Json::Num(td_s)),
+        ("blocked_seconds", Json::Num(td_b)),
+        ("blocked_gmacs", Json::Num(macsd / td_b / 1e9)),
+        ("blocked_speedup_vs_scalar", Json::Num(td_s / td_b)),
+    ]);
+    dw_rows.push(row.clone());
+    sink.push(row);
+    println!("dwconv fwd: blocked {:.2}x vs scalar", td_s / td_b);
+
+    // float depthwise forward pair (the float32/mixed configurations)
+    let mut xdf = TensorF32::zeros(&[64, 32, 32]);
+    rng.fill_normal(xdf.data_mut(), 1.0);
+    let mut wdf = TensorF32::zeros(&[64, 1, 3, 3]);
+    rng.fill_normal(wdf.data_mut(), 0.3);
+    let bdf = vec![0f32; 64];
+    let (tdf_s, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(fconv::fconv2d_fwd(&xdf, &wdf, &bdf, &gd, true, &mut ops));
+    });
+    let (tdf_b, _) = time_it(2, reps, || {
+        let mut ops = OpCounter::new();
+        std::hint::black_box(dwconv::fdwconv2d_fwd(&xdf, &wdf, &bdf, &gd, true, &mut ops));
+    });
+    tab.row(&[
+        "fdwconv fwd scalar".into(),
+        "64x32x32 dw, k3".into(),
+        fmt_duration(tdf_s),
+        format!("{:.2}", macsd / tdf_s / 1e9),
+    ]);
+    tab.row(&[
+        "fdwconv fwd blocked".into(),
+        "64x32x32 dw, k3".into(),
+        fmt_duration(tdf_b),
+        format!("{:.2}", macsd / tdf_b / 1e9),
+    ]);
+    let row = Json::obj(vec![
+        ("kernel", Json::str("fdwconv2d_fwd")),
+        ("shape", Json::str("64x32x32 dw k3")),
+        ("scalar_seconds", Json::Num(tdf_s)),
+        ("blocked_seconds", Json::Num(tdf_b)),
+        ("blocked_speedup_vs_scalar", Json::Num(tdf_s / tdf_b)),
+    ]);
+    dw_rows.push(row.clone());
+    sink.push(row);
+
+    // depthwise backward at kept = 100/50/25%: scalar vs blocked (the
+    // blocked path consumes the flipped pack exactly as the plan does)
+    let edq = rand_q(&mut rng, &[64, 32, 32]);
+    let mut dw_pack = vec![0u8; 64 * 9];
+    dwconv::pack_dw_flip_u8(wd.values.data(), &gd, &mut dw_pack);
+    for &kept_frac in &[1.0f64, 0.5, 0.25] {
+        let kept_n = ((gd.cout as f64 * kept_frac).round() as usize).clamp(1, gd.cout);
+        let mask: Vec<bool> = {
+            let mut m = vec![false; gd.cout];
+            for j in 0..kept_n {
+                m[j * gd.cout / kept_n] = true;
+            }
+            m
+        };
+        let keep = if kept_frac >= 1.0 { None } else { Some(&mask[..]) };
+        let kmacs = macsd * kept_frac;
+        let label = format!("kept={:.0}%", kept_frac * 100.0);
+
+        let (tdi_s, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(qconv::qconv2d_bwd_input(
+                &edq,
+                &wd,
+                &gd,
+                32,
+                32,
+                oqp,
+                keep,
+                &mut ops,
+            ));
+        });
+        let (tdi_b, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(dwconv::qdwconv2d_bwd_input_packed(
+                &edq,
+                &wd,
+                &dw_pack,
+                &gd,
+                32,
+                32,
+                oqp,
+                keep,
+                &mut ops,
+            ));
+        });
+        let (tdw_s, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(qconv::qconv2d_bwd_weight(&edq, &xd, &gd, keep, &mut ops));
+        });
+        let (tdw_b, _) = time_it(1, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(dwconv::qdwconv2d_bwd_weight(&edq, &xd, &gd, keep, &mut ops));
+        });
+        tab.row(&[
+            format!("qdwconv bwd_input scalar {label}"),
+            "64x32x32 dw".into(),
+            fmt_duration(tdi_s),
+            format!("{:.2}", kmacs / tdi_s / 1e9),
+        ]);
+        tab.row(&[
+            format!("qdwconv bwd_input blocked {label}"),
+            "64x32x32 dw".into(),
+            fmt_duration(tdi_b),
+            format!("{:.2}", kmacs / tdi_b / 1e9),
+        ]);
+        tab.row(&[
+            format!("qdwconv bwd_weight scalar {label}"),
+            "64x32x32 dw".into(),
+            fmt_duration(tdw_s),
+            format!("{:.2}", kmacs / tdw_s / 1e9),
+        ]);
+        tab.row(&[
+            format!("qdwconv bwd_weight blocked {label}"),
+            "64x32x32 dw".into(),
+            fmt_duration(tdw_b),
+            format!("{:.2}", kmacs / tdw_b / 1e9),
+        ]);
+        let row = Json::obj(vec![
+            ("kernel", Json::str("qdwconv2d_bwd_sparsity")),
+            ("shape", Json::str("64x32x32 dw k3")),
+            ("kept_fraction", Json::Num(kept_frac)),
+            ("bwd_input_scalar_seconds", Json::Num(tdi_s)),
+            ("bwd_input_blocked_seconds", Json::Num(tdi_b)),
+            ("bwd_input_blocked_speedup", Json::Num(tdi_s / tdi_b)),
+            ("bwd_weight_scalar_seconds", Json::Num(tdw_s)),
+            ("bwd_weight_blocked_seconds", Json::Num(tdw_b)),
+            ("bwd_weight_blocked_speedup", Json::Num(tdw_s / tdw_b)),
+        ]);
+        dw_rows.push(row.clone());
+        sink.push(row);
+        println!(
+            "dwconv bwd {label}: input blocked {:.2}x, weight blocked {:.2}x vs scalar",
+            tdi_s / tdi_b,
+            tdw_s / tdw_b
+        );
+    }
+
     // Pack-cache telemetry: a short uint8 training run (forward +
     // backward + FQT updates). After deployment warming, every dense
     // backward hits the plan-owned pack; each optimizer step invalidates
@@ -571,16 +757,22 @@ fn main() {
     // Machine-readable bench baseline at the repo root: the perf
     // trajectory across PRs. `kernels` carries every JSON row of this run
     // (GMAC/s per kernel variant, plan_build, pack-cache stats, the PJRT
-    // row when that feature ran); the focused micro-vs-tiled table is
-    // duplicated at the top level so the headline comparison is one jq
-    // away. CI uploads the file as an artifact next to
-    // rust/results/perf_kernels.json.
+    // row when that feature ran); the focused micro-vs-tiled and
+    // depthwise scalar-vs-blocked tables are duplicated at the top level
+    // so the headline comparisons are one jq away. CI diffs this file
+    // against the checked-in baseline (`bench_gate`) and uploads it as an
+    // artifact next to rust/results/perf_kernels.json.
+    // Schema gate: the CI perf-regression gate (`bench_gate`) diffs these
+    // rows against the checked-in baseline, so they must be well-formed
+    // (named, numeric, finite) before they are allowed to leave the bench.
+    check_perf_rows(sink.rows()).expect("perf_kernels rows must be schema-stable");
     let baseline = Json::obj(vec![
         ("bench", Json::str("perf_kernels")),
         ("reps", Json::Num(reps as f64)),
         ("batch", Json::Num(batch as f64)),
         ("workers", Json::Num(workers as f64)),
         ("gemm_micro_vs_tiled", Json::Arr(micro_rows)),
+        ("dwconv_scalar_vs_blocked", Json::Arr(dw_rows)),
         (
             "pack_cache",
             Json::obj(vec![

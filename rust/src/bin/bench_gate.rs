@@ -1,0 +1,206 @@
+//! CI perf-regression gate: diff a fresh quick-mode `perf_kernels` output
+//! against the checked-in `BENCH_kernels.json` baseline and fail the job
+//! when any row regresses beyond a generous noise tolerance.
+//!
+//! Usage: `bench_gate <baseline.json> <fresh.json>`
+//!
+//! Both files may be either the repo-root `BENCH_kernels.json` shape (an
+//! object whose `"kernels"` field holds the row array) or the raw
+//! `rust/results/perf_kernels.json` row array. The gate applies three
+//! layers of checks, strictest first:
+//!
+//!  1. **schema** — the fresh rows must pass
+//!     [`check_perf_rows`](tinytrain::util::bench::check_perf_rows)
+//!     (every row an object with a `"kernel"` name, all numbers finite);
+//!     malformed input fails the gate outright.
+//!  2. **internal ratio floors** — machine-independent: every `*speedup*`
+//!     field of the fresh run must be ≥ `1/tol` (a fast path falling to
+//!     less than half its reference at the default tolerance means the
+//!     engine regressed, whatever the hardware).
+//!  3. **baseline diff** — per matching row key, `*seconds*` fields may
+//!     grow at most `tol`× over the baseline and `*speedup*` fields may
+//!     shrink at most `tol`× under it. Rows present on only one side are
+//!     reported but do not fail (the bench grows across PRs).
+//!
+//! A missing baseline file is not a failure: the gate prints how to seed
+//! it and passes on the internal checks alone (first-PR bootstrap).
+//!
+//! Knobs: `TT_BENCH_GATE_TOL` (default 2.0 — generous; CI runners are
+//! noisy) and `TT_BENCH_GATE_ABS=0` to skip the absolute `*seconds*`
+//! comparisons when diffing runs from incomparable hardware.
+//!
+//! Refreshing the baseline: run the bench in quick mode exactly as CI
+//! does (`cd rust && TT_PERF_REPS=3 TT_PERF_BATCH=4 TT_WORKERS=2 cargo
+//! bench --bench perf_kernels`), inspect the regenerated repo-root
+//! `BENCH_kernels.json`, and commit it.
+
+use std::process::ExitCode;
+
+use tinytrain::util::bench::check_perf_rows;
+use tinytrain::util::json::Json;
+
+fn tolerance() -> f64 {
+    std::env::var("TT_BENCH_GATE_TOL")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(2.0)
+        .max(1.0)
+}
+
+/// Extract the row array from either supported file shape.
+fn rows_of(doc: &Json) -> Option<&[Json]> {
+    if let Some(a) = doc.as_arr() {
+        return Some(a);
+    }
+    doc.get("kernels").as_arr()
+}
+
+/// Stable identity of a row: the kernel name plus every identifying
+/// discriminator field the bench emits next to its metrics.
+fn row_key(row: &Json) -> String {
+    let mut key = row.get("kernel").as_str().unwrap_or("?").to_string();
+    for field in ["shape", "model"] {
+        if let Some(s) = row.get(field).as_str() {
+            key.push_str(&format!(" {field}={s}"));
+        }
+    }
+    for field in ["kept_fraction", "batch", "workers", "layers"] {
+        if let Some(n) = row.get(field).as_f64() {
+            key.push_str(&format!(" {field}={n}"));
+        }
+    }
+    key
+}
+
+fn load_rows(path: &str) -> Result<Vec<Json>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))?;
+    let rows = rows_of(&doc).ok_or_else(|| format!("{path}: no bench row array found"))?;
+    Ok(rows.to_vec())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() != 3 {
+        eprintln!("usage: bench_gate <baseline.json> <fresh.json>");
+        return ExitCode::from(2);
+    }
+    let (baseline_path, fresh_path) = (&args[1], &args[2]);
+    let tol = tolerance();
+    let compare_abs = std::env::var("TT_BENCH_GATE_ABS").ok().as_deref() != Some("0");
+
+    let fresh = match load_rows(fresh_path) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut failures: Vec<String> = Vec::new();
+
+    // 1. schema: the gate refuses to reason about malformed rows.
+    if let Err(e) = check_perf_rows(&fresh) {
+        eprintln!("bench_gate: fresh rows failed the schema check: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!("bench_gate: {} fresh rows, schema OK (tolerance {tol}x)", fresh.len());
+
+    // 2. internal ratio floors (machine-independent).
+    for row in &fresh {
+        let key = row_key(row);
+        if let Some(obj) = row.as_obj() {
+            for (name, v) in obj {
+                if !name.contains("speedup") {
+                    continue;
+                }
+                if let Some(ratio) = v.as_f64() {
+                    if ratio < 1.0 / tol {
+                        failures.push(format!(
+                            "[{key}] {name} = {ratio:.3} below the {:.3} internal floor",
+                            1.0 / tol
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // 3. baseline diff, when a baseline exists.
+    match load_rows(baseline_path) {
+        Err(e) => {
+            println!(
+                "bench_gate: no usable baseline ({e}); internal checks only.\n\
+                 To seed the gate, run the quick-mode bench (TT_PERF_REPS=3 TT_PERF_BATCH=4 \
+                 TT_WORKERS=2 cargo bench --bench perf_kernels) and commit the repo-root \
+                 BENCH_kernels.json."
+            );
+        }
+        Ok(base_rows) => {
+            let mut base: std::collections::BTreeMap<String, &Json> =
+                std::collections::BTreeMap::new();
+            for row in &base_rows {
+                base.insert(row_key(row), row);
+            }
+            let mut compared = 0usize;
+            let mut unmatched = 0usize;
+            let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+            for row in &fresh {
+                let key = row_key(row);
+                seen.insert(key.clone());
+                let Some(brow) = base.get(&key) else {
+                    unmatched += 1;
+                    continue;
+                };
+                let Some(obj) = row.as_obj() else { continue };
+                for (name, v) in obj {
+                    let (Some(f), Some(b)) = (v.as_f64(), brow.get(name).as_f64()) else {
+                        continue;
+                    };
+                    if name.contains("seconds") && compare_abs && b > 1e-7 && f > b * tol {
+                        failures.push(format!(
+                            "[{key}] {name} regressed {f:.3e}s vs baseline {b:.3e}s (> {tol}x)"
+                        ));
+                        compared += 1;
+                    } else if name.contains("seconds") {
+                        compared += 1;
+                    }
+                    if name.contains("speedup") && f < b / tol {
+                        failures.push(format!(
+                            "[{key}] {name} fell to {f:.3} vs baseline {b:.3} (> {tol}x drop)"
+                        ));
+                    }
+                }
+            }
+            println!(
+                "bench_gate: compared {compared} timing fields against {} baseline rows \
+                 ({unmatched} fresh rows without a baseline counterpart)",
+                base_rows.len()
+            );
+            // Baseline rows the fresh run no longer produces: reported so
+            // silently dropped coverage is visible, but not a failure —
+            // the bench legitimately reshuffles across PRs (refresh the
+            // baseline to clear the notice).
+            for key in base.keys() {
+                if !seen.contains(key) {
+                    println!("bench_gate: note — baseline row [{key}] missing from fresh run");
+                }
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!("bench_gate: PASS");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("bench_gate: FAIL — {} regression(s):", failures.len());
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        eprintln!(
+            "If this is expected (bench reshuffle, intentional trade-off), refresh the \
+             baseline: re-run the quick-mode bench and commit BENCH_kernels.json; to loosen \
+             or tighten the gate set TT_BENCH_GATE_TOL (current: {tol})."
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -24,7 +24,7 @@ use crate::graph::act::init_layer;
 use crate::graph::packs::{PackCache, PackStats};
 use crate::graph::plan::ExecPlan;
 use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
-use crate::kernels::{gemm, softmax, OpCounter};
+use crate::kernels::{dwconv, gemm, softmax, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::observer::MinMaxObserver;
 use crate::quant::{QParams, QTensor};
@@ -165,14 +165,16 @@ impl NativeModel {
         self.param_versions[i] += 1;
     }
 
-    /// Re-pack the dense backward weight packs for every layer whose
-    /// parameter version moved since the last warm (a cheap per-layer
-    /// version compare when nothing changed). Covers exactly the layers
-    /// whose backward-input GEMM the plan can reach: non-depthwise convs
-    /// above the earliest trainable layer. Called at deployment, by
-    /// `backward_in` before each sequential backward pass, and by the
-    /// batch engine once per minibatch before sharding — so concurrent
-    /// workers only ever read a fresh cache.
+    /// Re-pack the backward weight packs for every layer whose parameter
+    /// version moved since the last warm (a cheap per-layer version
+    /// compare when nothing changed). Covers exactly the layers whose
+    /// backward-input kernel the plan can reach (`layer > stop`): dense
+    /// convs get the flipped-transposed GEMM pack, depthwise convs the
+    /// 180°-flipped per-channel pack of the depthwise engine
+    /// (`kernels::dwconv`). Called at deployment, by `backward_in` before
+    /// each sequential backward pass, and by the batch engine once per
+    /// minibatch before sharding — so concurrent workers only ever read a
+    /// fresh cache.
     pub fn warm_packs(&mut self) {
         let n = self.def.layers.len();
         let stop = self.def.first_trainable().unwrap_or(n);
@@ -181,10 +183,28 @@ impl NativeModel {
                 LayerKind::Conv { geom, .. } => geom,
                 _ => continue,
             };
-            if geom.depthwise || i <= stop {
+            if i <= stop {
                 continue;
             }
             let v = self.param_versions[i];
+            if geom.depthwise {
+                match &self.params[i] {
+                    LayerParams::Q { w, .. } => {
+                        self.packs.put_dw_u8(i, v, |dst| {
+                            dst.resize(geom.cout * geom.kh * geom.kw, 0);
+                            dwconv::pack_dw_flip_u8(w.values.data(), &geom, dst);
+                        });
+                    }
+                    LayerParams::F { w, .. } => {
+                        self.packs.put_dw_f32(i, v, |dst| {
+                            dst.resize(geom.cout * geom.kh * geom.kw, 0.0);
+                            dwconv::pack_dw_flip_f32(w.data(), &geom, dst);
+                        });
+                    }
+                    LayerParams::None => {}
+                }
+                continue;
+            }
             match &self.params[i] {
                 LayerParams::Q { w, .. } => {
                     self.packs.put_u8(i, v, |dst| {
@@ -250,9 +270,10 @@ impl NativeModel {
 
     /// Forward pass with an explicit scratch arena, executing the compiled
     /// plan: non-depthwise convs route through the im2col/GEMM engine
-    /// (`kernels::gemm`), bit-exact with the scalar reference kernels;
-    /// depthwise convs, linears and pools use the MCU-faithful kernels
-    /// directly. `Flatten` is a zero-copy view.
+    /// (`kernels::gemm`) and depthwise convs through the register-blocked
+    /// depthwise engine (`kernels::dwconv`) — both bit-exact with the
+    /// scalar reference kernels; linears and pools use the MCU-faithful
+    /// kernels directly. `Flatten` is a zero-copy view.
     pub fn forward_in(
         &self,
         x: &TensorF32,
@@ -419,11 +440,13 @@ impl NativeModel {
     /// observer copies (and their own scratch arenas) and merge the
     /// observations deterministically afterwards.
     ///
-    /// Backward compute is GEMM-routed like the forward pass: non-depthwise
-    /// convs lower `dW` onto an error × im2col A·Bᵀ GEMM and `dX` onto a
-    /// flipped-weights × backward-im2col GEMM; linear layers use the shared
-    /// GEMM cores as degenerate cases. Sparse-update masks skip whole GEMM
-    /// rows (see DESIGN.md §2). Depthwise convs stay on the scalar kernels.
+    /// Backward compute is engine-routed like the forward pass:
+    /// non-depthwise convs lower `dW` onto an error × im2col A·Bᵀ GEMM and
+    /// `dX` onto a flipped-weights × backward-im2col GEMM; depthwise convs
+    /// run the register-blocked depthwise kernels (`kernels::dwconv`);
+    /// linear layers use the shared GEMM cores as degenerate cases.
+    /// Sparse-update masks skip whole GEMM rows — for depthwise, whole
+    /// channel planes (see DESIGN.md §2 and §5).
     pub fn backward_with(
         &self,
         trace: &FwdTrace,

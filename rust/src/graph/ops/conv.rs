@@ -1,11 +1,13 @@
 //! Convolution layer ops (quantized and float). Non-depthwise convolutions
 //! route through the im2col/GEMM engine exactly as the pre-plan executor
-//! did; depthwise convolutions stay on the scalar MCU-faithful kernels.
+//! did; depthwise convolutions route through the register-blocked
+//! depthwise engine (`kernels::dwconv`) — both bit-exact with the scalar
+//! MCU-faithful kernels the reference executor retains.
 
 use crate::graph::act::{observe_saturation, propagate_qp, Act, LayerParams};
 use crate::graph::exec::LayerGrads;
 use crate::graph::ops::{fwd_input, sparse_keep, ExecCtx, LayerOp, QpSlot};
-use crate::kernels::{fconv, kept_count, qconv, ConvGeom};
+use crate::kernels::{dwconv, fconv, kept_count, qconv, ConvGeom};
 use crate::quant::{quantize_bias, QTensor};
 
 /// Quantized (uint8) convolution, with pre-resolved geometry, input spatial
@@ -51,7 +53,7 @@ impl LayerOp for QConvOp {
         let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
         let out_qp = ctx.act_qp[l];
         let y = if self.geom.depthwise {
-            qconv::qconv2d_fwd(xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops)
+            dwconv::qdwconv2d_fwd(xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops)
         } else {
             qconv::qconv2d_fwd_gemm(
                 xq,
@@ -109,7 +111,7 @@ impl LayerOp for QConvOp {
         };
         if trainable {
             let (gw, gb) = if self.geom.depthwise {
-                qconv::qconv2d_bwd_weight(eq, xq, &self.geom, keep.as_deref(), ctx.ops)
+                dwconv::qdwconv2d_bwd_weight(eq, xq, &self.geom, keep.as_deref(), ctx.ops)
             } else {
                 qconv::qconv2d_bwd_weight_gemm(
                     eq,
@@ -130,23 +132,41 @@ impl LayerOp for QConvOp {
             // Dense backward reads the plan-owned flipped-weight pack when
             // it is fresh for this layer's parameter version; sparse masks
             // (per-sample row subsets) and stale entries fall back to
-            // packing into scratch — bit-identical either way.
+            // packing into scratch — bit-identical either way. Depthwise
+            // packs are per-channel, so the cached pack also serves masked
+            // calls (a mask skips whole planes); only a stale entry takes
+            // the scratch-packing bypass.
             let cached = if keep.is_none() && !self.geom.depthwise {
                 ctx.packs.wt_u8(l, ctx.param_versions[l])
             } else {
                 None
             };
             let next = if self.geom.depthwise {
-                Act::Q(qconv::qconv2d_bwd_input(
-                    eq,
-                    w,
-                    &self.geom,
-                    self.in_h,
-                    self.in_w,
-                    out_qp,
-                    keep.as_deref(),
-                    ctx.ops,
-                ))
+                let dw_pack = ctx.packs.dw_u8(l, ctx.param_versions[l]);
+                Act::Q(match dw_pack {
+                    Some(pack) => dwconv::qdwconv2d_bwd_input_packed(
+                        eq,
+                        w,
+                        pack,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.ops,
+                    ),
+                    None => dwconv::qdwconv2d_bwd_input(
+                        eq,
+                        w,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    ),
+                })
             } else if let Some(pack) = cached {
                 Act::Q(qconv::qconv2d_bwd_input_gemm_packed(
                     eq,
@@ -217,7 +237,7 @@ impl LayerOp for FConvOp {
             ),
         };
         let y = if self.geom.depthwise {
-            fconv::fconv2d_fwd(xf, w, bias, &self.geom, self.relu, ctx.ops)
+            dwconv::fdwconv2d_fwd(xf, w, bias, &self.geom, self.relu, ctx.ops)
         } else {
             fconv::fconv2d_fwd_gemm(xf, w, bias, &self.geom, self.relu, ctx.scratch, ctx.ops)
         };
@@ -264,7 +284,7 @@ impl LayerOp for FConvOp {
         };
         if trainable {
             let (gw, gb) = if self.geom.depthwise {
-                fconv::fconv2d_bwd_weight(ef, xf, &self.geom, keep.as_deref(), ctx.ops)
+                dwconv::fdwconv2d_bwd_weight(ef, xf, &self.geom, keep.as_deref(), ctx.ops)
             } else {
                 fconv::fconv2d_bwd_weight_gemm(
                     ef,
@@ -287,15 +307,28 @@ impl LayerOp for FConvOp {
                 None
             };
             let next = if self.geom.depthwise {
-                Act::F(fconv::fconv2d_bwd_input(
-                    ef,
-                    w,
-                    &self.geom,
-                    self.in_h,
-                    self.in_w,
-                    keep.as_deref(),
-                    ctx.ops,
-                ))
+                let dw_pack = ctx.packs.dw_f32(l, ctx.param_versions[l]);
+                Act::F(match dw_pack {
+                    Some(pack) => dwconv::fdwconv2d_bwd_input_packed(
+                        ef,
+                        pack,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        keep.as_deref(),
+                        ctx.ops,
+                    ),
+                    None => dwconv::fdwconv2d_bwd_input(
+                        ef,
+                        w,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    ),
+                })
             } else if let Some(pack) = cached {
                 Act::F(fconv::fconv2d_bwd_input_gemm_packed(
                     ef,

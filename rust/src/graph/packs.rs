@@ -8,8 +8,13 @@
 //! the deployed model next to its compiled plan:
 //!
 //!  * **ownership** — one [`PackCache`] per `NativeModel`, sized at build
-//!    to one slot per layer; slots are populated for non-depthwise conv
-//!    layers whose backward-input GEMM the plan can reach (`layer > stop`).
+//!    to one slot per layer; slots are populated for every conv layer
+//!    whose backward-input kernel the plan can reach (`layer > stop`):
+//!    dense convs hold the flipped-transposed GEMM pack, depthwise convs
+//!    the 180°-flipped per-channel pack consumed by the depthwise engine
+//!    (`kernels::dwconv`). Depthwise packs are per-channel, so — unlike
+//!    the dense packs — they also serve *masked* calls: a `DynamicSparse`
+//!    mask skips whole planes of the same cached pack.
 //!  * **invalidation** — every layer carries a parameter *version*
 //!    (`NativeModel::touch_layer` bumps it; the optimizers call it on each
 //!    applied update, `reset_trainable` on re-init). A cache entry is
@@ -42,10 +47,17 @@ use std::sync::atomic::{AtomicU64, Ordering};
 enum PackBuf {
     /// Never built.
     Empty,
-    /// Flipped-transposed weights `[Cin, Cout·Kh·Kw]` (uint8 layers).
+    /// Flipped-transposed weights `[Cin, Cout·Kh·Kw]` (uint8 dense convs).
     U8(Vec<u8>),
-    /// f32 twin (float32 layers).
+    /// f32 twin (float32 dense convs).
     F32(Vec<f32>),
+    /// 180°-flipped per-channel depthwise kernels `[C, Kh·Kw]`
+    /// (`kernels::dwconv::pack_dw_flip_u8`, uint8 depthwise convs).
+    /// Distinct from [`PackBuf::U8`] so a dense pack can never be served
+    /// to the depthwise engine or vice versa, even across re-warms.
+    DwU8(Vec<u8>),
+    /// f32 twin of [`PackBuf::DwU8`] (float32 depthwise convs).
+    DwF32(Vec<f32>),
 }
 
 /// One layer's cached dense backward pack plus the parameter version it
@@ -164,6 +176,79 @@ impl PackCache {
         self.builds.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The flipped depthwise pack for layer `l`, if the cached one was
+    /// built at exactly `version`. Unlike the dense packs, the depthwise
+    /// pack is consulted for masked calls too: channels are independent,
+    /// so a `DynamicSparse` mask skips whole planes of the *same* dense
+    /// pack rather than needing a per-sample re-pack.
+    pub fn dw_u8(&self, l: usize, version: u64) -> Option<&[u8]> {
+        let e = &self.entries[l];
+        match &e.buf {
+            PackBuf::DwU8(b) if e.version == version && !b.is_empty() => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// f32 twin of [`PackCache::dw_u8`].
+    pub fn dw_f32(&self, l: usize, version: u64) -> Option<&[f32]> {
+        let e = &self.entries[l];
+        match &e.buf {
+            PackBuf::DwF32(b) if e.version == version && !b.is_empty() => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Install/refresh the flipped depthwise u8 pack for layer `l` at
+    /// `version` (see [`PackCache::put_u8`] for the rebuild contract).
+    pub fn put_dw_u8(&mut self, l: usize, version: u64, build: impl FnOnce(&mut Vec<u8>)) {
+        let e = &mut self.entries[l];
+        if e.version == version && matches!(&e.buf, PackBuf::DwU8(b) if !b.is_empty()) {
+            return;
+        }
+        let mut buf = match std::mem::replace(&mut e.buf, PackBuf::Empty) {
+            PackBuf::DwU8(mut b) => {
+                b.clear();
+                b
+            }
+            _ => Vec::new(),
+        };
+        build(&mut buf);
+        e.buf = PackBuf::DwU8(buf);
+        e.version = version;
+        self.builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// f32 twin of [`PackCache::put_dw_u8`].
+    pub fn put_dw_f32(&mut self, l: usize, version: u64, build: impl FnOnce(&mut Vec<f32>)) {
+        let e = &mut self.entries[l];
+        if e.version == version && matches!(&e.buf, PackBuf::DwF32(b) if !b.is_empty()) {
+            return;
+        }
+        let mut buf = match std::mem::replace(&mut e.buf, PackBuf::Empty) {
+            PackBuf::DwF32(mut b) => {
+                b.clear();
+                b
+            }
+            _ => Vec::new(),
+        };
+        build(&mut buf);
+        e.buf = PackBuf::DwF32(buf);
+        e.version = version;
+        self.builds.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Current telemetry snapshot.
     pub fn stats(&self) -> PackStats {
         PackStats {
@@ -179,8 +264,8 @@ impl PackCache {
             .iter()
             .map(|e| match &e.buf {
                 PackBuf::Empty => 0,
-                PackBuf::U8(b) => b.len(),
-                PackBuf::F32(b) => b.len() * 4,
+                PackBuf::U8(b) | PackBuf::DwU8(b) => b.len(),
+                PackBuf::F32(b) | PackBuf::DwF32(b) => b.len() * 4,
             })
             .sum()
     }
@@ -219,6 +304,32 @@ mod tests {
         c.put_f32(0, 1, |dst| dst.extend_from_slice(&[1.5, 2.5]));
         assert!(c.wt_u8(0, 1).is_none(), "u8 lookup must not see an f32 pack");
         assert_eq!(c.wt_f32(0, 1), Some(&[1.5f32, 2.5][..]));
+        assert_eq!(c.reserved_bytes(), 8);
+    }
+
+    #[test]
+    fn depthwise_and_dense_slots_never_cross_serve() {
+        let mut c = PackCache::new(2);
+        c.put_dw_u8(0, 1, |dst| dst.extend_from_slice(&[4, 5]));
+        // a dense lookup must not see the depthwise pack (and vice versa)
+        assert!(c.wt_u8(0, 1).is_none(), "dense lookup served a depthwise pack");
+        assert_eq!(c.dw_u8(0, 1), Some(&[4u8, 5][..]));
+        c.put_u8(1, 1, |dst| dst.push(9));
+        assert!(c.dw_u8(1, 1).is_none(), "depthwise lookup served a dense pack");
+        // version bumps invalidate depthwise entries exactly like dense ones
+        assert!(c.dw_u8(0, 2).is_none());
+        c.put_dw_u8(0, 2, |dst| dst.push(7));
+        assert_eq!(c.dw_u8(0, 2), Some(&[7u8][..]));
+        assert_eq!(c.reserved_bytes(), 2);
+    }
+
+    #[test]
+    fn depthwise_f32_slot_roundtrips_and_is_noop_when_fresh() {
+        let mut c = PackCache::new(1);
+        c.put_dw_f32(0, 3, |dst| dst.extend_from_slice(&[1.0, 2.0]));
+        c.put_dw_f32(0, 3, |_| panic!("fresh depthwise entry must not rebuild"));
+        assert_eq!(c.dw_f32(0, 3), Some(&[1.0f32, 2.0][..]));
+        assert!(c.wt_f32(0, 3).is_none());
         assert_eq!(c.reserved_bytes(), 8);
     }
 

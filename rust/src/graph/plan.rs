@@ -85,6 +85,21 @@ impl ExecPlan {
             }
             match &l.kind {
                 LayerKind::Conv { geom, relu } => {
+                    if geom.depthwise {
+                        // Depthwise engine (`kernels::dwconv`): forward and
+                        // backward tiles live in fixed-size local arrays, so
+                        // the only scratch the kernels can request is the
+                        // flipped-weight fallback of a stale-pack bypass —
+                        // `Cout·Kh·Kw`, pre-sized so even that path never
+                        // grows the arena.
+                        let dw = geom.cout * geom.kh * geom.kw;
+                        if i > stop {
+                            match prec[i] {
+                                Precision::Uint8 => spec.wt_u8 = spec.wt_u8.max(dw),
+                                Precision::Float32 => spec.wt_f32 = spec.wt_f32.max(dw),
+                            }
+                        }
+                    }
                     if !geom.depthwise {
                         let n_hw = shapes[i][1] * shapes[i][2];
                         let kdim = geom.cin * geom.kh * geom.kw;
@@ -505,6 +520,20 @@ mod tests {
         assert!(fspec.col_f32 > 0 && fspec.zeros_f32 > 0);
         assert_eq!(fspec.wt_f32, 0);
         assert_eq!(fspec.col_u8, 0);
+    }
+
+    #[test]
+    fn depthwise_fallback_pack_is_presized() {
+        // Depthwise-separable models pre-size the (tiny) flipped-weight
+        // fallback of the depthwise engine's stale-pack bypass, in the
+        // precision the deployment actually uses.
+        let def = models::mbednet(&[3, 16, 16], 5);
+        let spec = ExecPlan::compile(&def, DnnConfig::Uint8).scratch_spec().clone();
+        assert!(spec.wt_u8 > 0, "uint8 depthwise fallback must be pre-sized");
+        assert_eq!(spec.wt_f32, 0);
+        let fspec = ExecPlan::compile(&def, DnnConfig::Float32).scratch_spec().clone();
+        assert!(fspec.wt_f32 > 0, "float depthwise fallback must be pre-sized");
+        assert_eq!(fspec.wt_u8, 0);
     }
 
     #[test]

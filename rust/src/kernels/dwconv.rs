@@ -1,0 +1,996 @@
+//! Register-blocked depthwise convolution engine: forward, error backprop
+//! (dX) and weight gradient (dW), quantized (u8/i32) and float.
+//!
+//! Depthwise convolutions have no useful im2col lowering (the GEMM engine's
+//! reduction dimension collapses to `Kh·Kw` per channel), so since PR 1
+//! they fell back to the scalar per-element kernels in `qconv`/`fconv` —
+//! dropping the paper's headline MCUNet-style workloads off the fast path.
+//! This module is their dedicated engine, mirroring the PR 4 micro-kernel
+//! architecture:
+//!
+//!  * **register blocking** — each output row is processed in [`NR`]-wide
+//!    column tiles whose accumulators live in a fixed-size local array
+//!    (registers after unrolling); every weight tap is broadcast across
+//!    the tile and the input/error streams are unit-stride slices.
+//!  * **stride-1 interior fast path** — at stride 1 the in-bounds tap
+//!    span of a tile is contiguous in both the tile and the source row,
+//!    so the inner loop is a bounds-check-free AXPY; only the padded
+//!    borders clamp the span (out-of-bounds taps are *skipped*, exactly
+//!    like the scalar kernels).
+//!  * **numerics contract** — integer paths accumulate in i32 (exact:
+//!    `255²·Kh·Kw` is far below 2³¹), so any tile schedule is
+//!    **bit-exact** with the scalar reference kernels. The float paths
+//!    add each output element's in-bounds taps in the scalar kernels'
+//!    ascending `(ky, kx)` order (forward, dW over `(oy, ox)`) resp. the
+//!    scatter-equivalent ascending `(oy, ox)` order (dX via the flipped
+//!    kernel), so they are value-identical to the scalar kernels.
+//!  * **sparse masks** — for a depthwise conv a masked *out*-channel is a
+//!    masked *in*-channel: both backward kernels skip masked channels as
+//!    whole per-channel planes, so the Eq. 9 controller's `kept/total`
+//!    ratio maps directly onto proportional FLOPs in both backward
+//!    directions (the depthwise twin of the GEMM row-skip contract).
+//!  * **weight packs** — dX consumes the 180°-flipped per-channel kernel
+//!    (`pack_dw_flip_*`, layout `[C, Kh·Kw]`). The dense flipped pack is
+//!    a pure function of the layer weights and is plan-owned
+//!    (`graph::packs`, version-keyed like the dense GEMM packs); because
+//!    channels are independent, the *same* cached pack also serves masked
+//!    calls — only a stale entry falls back to packing into scratch.
+//!
+//! The scalar kernels in `qconv`/`fconv` remain the MCU-faithful oracle;
+//! op accounting here is identical to theirs, so the device cost model is
+//! unaffected by the routing choice. Property tests at the bottom enforce
+//! bit-exactness over random shapes, strides, paddings and masks.
+
+use crate::kernels::gemm::NR;
+use crate::kernels::{ConvGeom, OpCounter};
+use crate::memplan::Scratch;
+use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
+use crate::tensor::TensorF32;
+
+/// Pack depthwise weights `[C, 1, Kh, Kw]` into the 180°-flipped layout
+/// `[C, Kh·Kw]` consumed by the backward-input kernels: entry
+/// `c·Kh·Kw + kyf·Kw + kxf` holds `w[c, Kh−1−kyf, Kw−1−kxf]`. The flip
+/// makes the gather loop visit contributions in the scalar scatter
+/// kernel's ascending `(oy, ox)` order (see the module docs).
+fn pack_dw_flip<T: Copy>(wdat: &[T], geom: &ConvGeom, dst: &mut [T]) {
+    assert!(geom.depthwise, "flipped depthwise packing requires depthwise geometry");
+    let khw = geom.kh * geom.kw;
+    assert_eq!(wdat.len(), geom.cout * khw, "weight size");
+    assert_eq!(dst.len(), geom.cout * khw, "packed buffer size");
+    for c in 0..geom.cout {
+        for kyf in 0..geom.kh {
+            let ky = geom.kh - 1 - kyf;
+            for kxf in 0..geom.kw {
+                let kx = geom.kw - 1 - kxf;
+                dst[c * khw + kyf * geom.kw + kxf] = wdat[c * khw + ky * geom.kw + kx];
+            }
+        }
+    }
+}
+
+/// u8 flipped depthwise weight packing (see [`pack_dw_flip`]).
+pub fn pack_dw_flip_u8(wdat: &[u8], geom: &ConvGeom, dst: &mut [u8]) {
+    pack_dw_flip(wdat, geom, dst);
+}
+
+/// f32 twin of [`pack_dw_flip_u8`].
+pub fn pack_dw_flip_f32(wdat: &[f32], geom: &ConvGeom, dst: &mut [f32]) {
+    pack_dw_flip(wdat, geom, dst);
+}
+
+/// Blocked quantized depthwise forward, **bit-exact** with
+/// [`crate::kernels::qconv::qconv2d_fwd`] on depthwise geometry (exact
+/// order-independent i32 sums; out-of-bounds taps skipped on both paths).
+/// Op accounting is identical to the scalar kernel.
+pub fn qdwconv2d_fwd(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
+    assert_eq!(geom.cin, geom.cout, "depthwise conv has one filter per channel");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+    let khw = geom.kh * geom.kw;
+    let zx = x.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale);
+    let xd = x.values.data();
+    let wdat = w.values.data();
+    assert_eq!(wdat.len(), geom.cout * khw, "weight size");
+
+    let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
+    let od = out.values.data_mut();
+    for c in 0..geom.cout {
+        let plane = &xd[c * h * wd..(c + 1) * h * wd];
+        let wch = &wdat[c * khw..(c + 1) * khw];
+        let obase = c * oh * ow;
+        for oy in 0..oh {
+            let mut ox0 = 0usize;
+            while ox0 < ow {
+                let nrr = NR.min(ow - ox0);
+                // NR i32 accumulators in a fixed-size local array — the
+                // register tile; i32 sums are exact, so the tiling is
+                // bit-identical to the scalar per-element loop.
+                let mut acc = [0i32; NR];
+                acc[..nrr].fill(bias[c]);
+                for ky in 0..geom.kh {
+                    let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let xrow = &plane[iy as usize * wd..(iy as usize + 1) * wd];
+                    for kx in 0..geom.kw {
+                        let wv = wch[ky * geom.kw + kx] as i32 - zw;
+                        if geom.stride == 1 {
+                            // ix(jj) = ox0 + jj + kx − pad_w: the in-bounds
+                            // jj span is contiguous — a unit-stride AXPY.
+                            let lo = geom.pad_w.saturating_sub(ox0 + kx).min(nrr);
+                            let hi = (wd + geom.pad_w).saturating_sub(ox0 + kx).min(nrr).max(lo);
+                            if hi > lo {
+                                let src = ox0 + lo + kx - geom.pad_w;
+                                let xs = &xrow[src..src + (hi - lo)];
+                                for (a, &xv) in acc[lo..hi].iter_mut().zip(xs.iter()) {
+                                    *a += wv * (xv as i32 - zx);
+                                }
+                            }
+                        } else {
+                            for (jj, a) in acc[..nrr].iter_mut().enumerate() {
+                                let ix = ((ox0 + jj) * geom.stride + kx) as isize
+                                    - geom.pad_w as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                *a += wv * (xrow[ix as usize] as i32 - zx);
+                            }
+                        }
+                    }
+                }
+                let orow = &mut od[obase + oy * ow + ox0..obase + oy * ow + ox0 + nrr];
+                for (o, &a) in orow.iter_mut().zip(acc[..nrr].iter()) {
+                    *o = requantize(a, mult, out_qp.zero_point, relu);
+                }
+                ox0 += nrr;
+            }
+        }
+    }
+
+    ops.int_macs += geom.fwd_macs(h, wd);
+    ops.int_ops += (geom.cout * oh * ow) as u64;
+    ops.bytes += (x.len() + w.len() + geom.cout * oh * ow) as u64;
+    out
+}
+
+/// Blocked float depthwise forward, value-identical to
+/// [`crate::kernels::fconv::fconv2d_fwd`] on depthwise geometry: each
+/// output element's in-bounds taps are added in the scalar kernel's
+/// ascending `(ky, kx)` order and out-of-bounds taps are skipped, so the
+/// per-element sums are bit-for-bit the same.
+pub fn fdwconv2d_fwd(
+    x: &TensorF32,
+    w: &TensorF32,
+    bias: &[f32],
+    geom: &ConvGeom,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
+    assert_eq!(geom.cin, geom.cout, "depthwise conv has one filter per channel");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+    let khw = geom.kh * geom.kw;
+    let xd = x.data();
+    let wdat = w.data();
+    assert_eq!(wdat.len(), geom.cout * khw, "weight size");
+
+    let mut out = TensorF32::zeros(&[geom.cout, oh, ow]);
+    let od = out.data_mut();
+    for c in 0..geom.cout {
+        let plane = &xd[c * h * wd..(c + 1) * h * wd];
+        let wch = &wdat[c * khw..(c + 1) * khw];
+        let obase = c * oh * ow;
+        for oy in 0..oh {
+            let mut ox0 = 0usize;
+            while ox0 < ow {
+                let nrr = NR.min(ow - ox0);
+                let mut acc = [0f32; NR];
+                acc[..nrr].fill(bias[c]);
+                for ky in 0..geom.kh {
+                    let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let xrow = &plane[iy as usize * wd..(iy as usize + 1) * wd];
+                    for kx in 0..geom.kw {
+                        let wv = wch[ky * geom.kw + kx];
+                        if geom.stride == 1 {
+                            let lo = geom.pad_w.saturating_sub(ox0 + kx).min(nrr);
+                            let hi = (wd + geom.pad_w).saturating_sub(ox0 + kx).min(nrr).max(lo);
+                            if hi > lo {
+                                let src = ox0 + lo + kx - geom.pad_w;
+                                let xs = &xrow[src..src + (hi - lo)];
+                                for (a, &xv) in acc[lo..hi].iter_mut().zip(xs.iter()) {
+                                    *a += wv * xv;
+                                }
+                            }
+                        } else {
+                            for (jj, a) in acc[..nrr].iter_mut().enumerate() {
+                                let ix = ((ox0 + jj) * geom.stride + kx) as isize
+                                    - geom.pad_w as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                *a += wv * xrow[ix as usize];
+                            }
+                        }
+                    }
+                }
+                let orow = &mut od[obase + oy * ow + ox0..obase + oy * ow + ox0 + nrr];
+                for (o, &a) in orow.iter_mut().zip(acc[..nrr].iter()) {
+                    *o = if relu { a.max(0.0) } else { a };
+                }
+                ox0 += nrr;
+            }
+        }
+    }
+
+    ops.float_macs += geom.fwd_macs(h, wd);
+    ops.bytes += ((x.len() + w.len() + geom.cout * oh * ow) * 4) as u64;
+    out
+}
+
+/// Blocked quantized depthwise error backprop against a **pre-packed**
+/// flipped kernel `wt_pack[C, Kh·Kw]` ([`pack_dw_flip_u8`] — typically the
+/// plan-owned cache entry, `graph::packs`). **Bit-exact** with
+/// [`crate::kernels::qconv::qconv2d_bwd_input`] on depthwise geometry for
+/// any `keep` mask: i32 sums are exact, and masked channels produce the
+/// same all-zero accumulator planes the scalar kernel requantizes.
+///
+/// Because depthwise channels are independent, a masked call consumes the
+/// *dense* pack and simply skips masked planes — kept/total maps directly
+/// to proportional FLOPs, and the cache stays valid under every mask. `w`
+/// supplies the quantization parameters and byte accounting only; op
+/// accounting is identical to the scalar kernel.
+pub fn qdwconv2d_bwd_input_packed(
+    e: &QTensor,
+    w: &QTensor,
+    wt_pack: &[u8],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let khw = geom.kh * geom.kw;
+    assert_eq!(wt_pack.len(), geom.cout * khw, "packed weight size");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), geom.cout, "keep mask length");
+    }
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale);
+    let ed = e.values.data();
+    let s = geom.stride as isize;
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    let od = out.values.data_mut();
+    // What the scalar kernel writes for a skipped channel's plane: the
+    // requantization of an untouched (all-zero) accumulator.
+    let zero_out = requantize(0, mult, out_qp.zero_point, false);
+    let mut kept_channels = 0u64;
+    for c in 0..geom.cout {
+        let oplane = &mut od[c * in_h * in_w..(c + 1) * in_h * in_w];
+        if let Some(k) = keep {
+            if !k[c] {
+                oplane.fill(zero_out);
+                continue;
+            }
+        }
+        kept_channels += 1;
+        let eplane = &ed[c * oh * ow..(c + 1) * oh * ow];
+        let wch = &wt_pack[c * khw..(c + 1) * khw];
+        for iy in 0..in_h {
+            let mut ix0 = 0usize;
+            while ix0 < in_w {
+                let nrr = NR.min(in_w - ix0);
+                let mut acc = [0i32; NR];
+                for kyf in 0..geom.kh {
+                    let ky = geom.kh - 1 - kyf;
+                    let ty = iy as isize + geom.pad_h as isize - ky as isize;
+                    if ty < 0 || ty % s != 0 || ty / s >= oh as isize {
+                        continue;
+                    }
+                    let erow = &eplane[(ty / s) as usize * ow..((ty / s) as usize + 1) * ow];
+                    for kxf in 0..geom.kw {
+                        let kx = geom.kw - 1 - kxf;
+                        let wv = wch[kyf * geom.kw + kxf] as i32 - zw;
+                        if geom.stride == 1 {
+                            // ox(jj) = ix0 + jj + pad_w − kx: contiguous
+                            // in-bounds span — a unit-stride AXPY.
+                            let lo = kx.saturating_sub(geom.pad_w + ix0).min(nrr);
+                            let hi = (ow + kx).saturating_sub(geom.pad_w + ix0).min(nrr).max(lo);
+                            if hi > lo {
+                                let src = ix0 + lo + geom.pad_w - kx;
+                                let es = &erow[src..src + (hi - lo)];
+                                for (a, &ev) in acc[lo..hi].iter_mut().zip(es.iter()) {
+                                    *a += wv * (ev as i32 - ze);
+                                }
+                            }
+                        } else {
+                            for (jj, a) in acc[..nrr].iter_mut().enumerate() {
+                                let tx = (ix0 + jj) as isize + geom.pad_w as isize - kx as isize;
+                                if tx < 0 || tx % s != 0 || tx / s >= ow as isize {
+                                    continue;
+                                }
+                                *a += wv * (erow[(tx / s) as usize] as i32 - ze);
+                            }
+                        }
+                    }
+                }
+                let orow = &mut oplane[iy * in_w + ix0..iy * in_w + ix0 + nrr];
+                for (o, &a) in orow.iter_mut().zip(acc[..nrr].iter()) {
+                    *o = requantize(a, mult, out_qp.zero_point, false);
+                }
+                ix0 += nrr;
+            }
+        }
+    }
+
+    ops.int_macs += kept_channels * (oh * ow * khw) as u64;
+    ops.int_ops += (geom.cin * in_h * in_w) as u64;
+    ops.bytes += (e.len() + w.len() + geom.cin * in_h * in_w) as u64;
+    out
+}
+
+/// [`qdwconv2d_bwd_input_packed`] without a plan-owned pack: flips the
+/// weights into the scratch arena first (the stale-cache bypass path —
+/// correct, just slower). Bit-exact with the scalar kernel either way.
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_bwd_input(
+    e: &QTensor,
+    w: &QTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let wt = scratch.dw_wt_u8(geom.cout * geom.kh * geom.kw);
+    pack_dw_flip_u8(w.values.data(), geom, wt);
+    qdwconv2d_bwd_input_packed(e, w, wt, geom, in_h, in_w, out_qp, keep, ops)
+}
+
+/// Blocked float depthwise error backprop against a pre-packed flipped
+/// kernel, value-identical to
+/// [`crate::kernels::fconv::fconv2d_bwd_input`] on depthwise geometry:
+/// per input element the flipped gather visits contributions in the
+/// scalar scatter's ascending `(oy, ox)` order, and skipped channels keep
+/// their all-zero planes. `wt_pack.len() == w.len()` for depthwise convs,
+/// so byte accounting matches the scalar kernel.
+pub fn fdwconv2d_bwd_input_packed(
+    e: &TensorF32,
+    wt_pack: &[f32],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let khw = geom.kh * geom.kw;
+    assert_eq!(wt_pack.len(), geom.cout * khw, "packed weight size");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), geom.cout, "keep mask length");
+    }
+    let ed = e.data();
+    let s = geom.stride as isize;
+
+    let mut out = TensorF32::zeros(&[geom.cin, in_h, in_w]);
+    let od = out.data_mut();
+    let mut kept_channels = 0u64;
+    for c in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[c] {
+                continue; // plane stays zero, as in the scalar kernel
+            }
+        }
+        kept_channels += 1;
+        let eplane = &ed[c * oh * ow..(c + 1) * oh * ow];
+        let wch = &wt_pack[c * khw..(c + 1) * khw];
+        let oplane = &mut od[c * in_h * in_w..(c + 1) * in_h * in_w];
+        for iy in 0..in_h {
+            let mut ix0 = 0usize;
+            while ix0 < in_w {
+                let nrr = NR.min(in_w - ix0);
+                let mut acc = [0f32; NR];
+                for kyf in 0..geom.kh {
+                    let ky = geom.kh - 1 - kyf;
+                    let ty = iy as isize + geom.pad_h as isize - ky as isize;
+                    if ty < 0 || ty % s != 0 || ty / s >= oh as isize {
+                        continue;
+                    }
+                    let erow = &eplane[(ty / s) as usize * ow..((ty / s) as usize + 1) * ow];
+                    for kxf in 0..geom.kw {
+                        let kx = geom.kw - 1 - kxf;
+                        let wv = wch[kyf * geom.kw + kxf];
+                        if geom.stride == 1 {
+                            let lo = kx.saturating_sub(geom.pad_w + ix0).min(nrr);
+                            let hi = (ow + kx).saturating_sub(geom.pad_w + ix0).min(nrr).max(lo);
+                            if hi > lo {
+                                let src = ix0 + lo + geom.pad_w - kx;
+                                let es = &erow[src..src + (hi - lo)];
+                                for (a, &ev) in acc[lo..hi].iter_mut().zip(es.iter()) {
+                                    *a += wv * ev;
+                                }
+                            }
+                        } else {
+                            for (jj, a) in acc[..nrr].iter_mut().enumerate() {
+                                let tx = (ix0 + jj) as isize + geom.pad_w as isize - kx as isize;
+                                if tx < 0 || tx % s != 0 || tx / s >= ow as isize {
+                                    continue;
+                                }
+                                *a += wv * erow[(tx / s) as usize];
+                            }
+                        }
+                    }
+                }
+                let orow = &mut oplane[iy * in_w + ix0..iy * in_w + ix0 + nrr];
+                orow.copy_from_slice(&acc[..nrr]);
+                ix0 += nrr;
+            }
+        }
+    }
+
+    ops.float_macs += kept_channels * (oh * ow * khw) as u64;
+    ops.bytes += ((e.len() + wt_pack.len() + geom.cin * in_h * in_w) * 4) as u64;
+    out
+}
+
+/// [`fdwconv2d_bwd_input_packed`] without a plan-owned pack: flips the
+/// weights into the scratch arena first (the stale-cache bypass path).
+#[allow(clippy::too_many_arguments)]
+pub fn fdwconv2d_bwd_input(
+    e: &TensorF32,
+    w: &TensorF32,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> TensorF32 {
+    let wt = scratch.dw_wt_f32(geom.cout * geom.kh * geom.kw);
+    pack_dw_flip_f32(w.data(), geom, wt);
+    fdwconv2d_bwd_input_packed(e, wt, geom, in_h, in_w, keep, ops)
+}
+
+/// Blocked quantized depthwise weight gradient, **bit-exact** with
+/// [`crate::kernels::qconv::qconv2d_bwd_weight`] on depthwise geometry:
+/// each `∇W[c, ky, kx]` is one exact-i32 dot of the channel's error plane
+/// with the matching strided input window (unit-stride on both sides at
+/// stride 1); masked channels are skipped whole, their `∇W` rows and `∇b`
+/// entries staying exactly zero. Op accounting matches the scalar kernel.
+pub fn qdwconv2d_bwd_weight(
+    e: &QTensor,
+    x: &QTensor,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zx = x.qp.zero_point;
+    let sc = e.qp.scale * x.qp.scale;
+    let khw = geom.kh * geom.kw;
+    let ed = e.values.data();
+    let xd = x.values.data();
+    if let Some(k) = keep {
+        assert_eq!(k.len(), geom.cout, "keep mask length");
+    }
+
+    let mut gw = TensorF32::zeros(&[geom.cout, 1, geom.kh, geom.kw]);
+    let mut gb = TensorF32::zeros(&[geom.cout]);
+    let gwd = gw.data_mut();
+    let gbd = gb.data_mut();
+    let mut kept_channels = 0u64;
+    for c in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[c] {
+                continue;
+            }
+        }
+        kept_channels += 1;
+        let eplane = &ed[c * oh * ow..(c + 1) * oh * ow];
+        let xplane = &xd[c * h * wd..(c + 1) * h * wd];
+        let mut bacc: i32 = 0;
+        for &evq in eplane {
+            bacc += evq as i32 - ze;
+        }
+        gbd[c] = bacc as f32 * e.qp.scale;
+        for ky in 0..geom.kh {
+            for kx in 0..geom.kw {
+                let mut acc: i32 = 0;
+                for oy in 0..oh {
+                    let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let xrow = &xplane[iy as usize * wd..(iy as usize + 1) * wd];
+                    let erow = &eplane[oy * ow..(oy + 1) * ow];
+                    if geom.stride == 1 {
+                        let lo = geom.pad_w.saturating_sub(kx).min(ow);
+                        let hi = (wd + geom.pad_w).saturating_sub(kx).min(ow).max(lo);
+                        if hi > lo {
+                            let src = lo + kx - geom.pad_w;
+                            let xs = &xrow[src..src + (hi - lo)];
+                            for (&evq, &xvq) in erow[lo..hi].iter().zip(xs.iter()) {
+                                acc += (evq as i32 - ze) * (xvq as i32 - zx);
+                            }
+                        }
+                    } else {
+                        for (ox, &evq) in erow.iter().enumerate() {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            acc += (evq as i32 - ze) * (xrow[ix as usize] as i32 - zx);
+                        }
+                    }
+                }
+                gwd[c * khw + ky * geom.kw + kx] = acc as f32 * sc;
+            }
+        }
+    }
+
+    ops.int_macs += kept_channels * (oh * ow * khw) as u64;
+    ops.float_ops += gw.len() as u64;
+    ops.bytes += (e.len() + x.len() + gw.len() * 4) as u64;
+    (gw, gb)
+}
+
+/// Blocked float depthwise weight gradient, value-identical to
+/// [`crate::kernels::fconv::fconv2d_bwd_weight`] on depthwise geometry:
+/// per `∇W` element the in-bounds products are added in the scalar
+/// kernel's ascending `(oy, ox)` order, and the bias gradient accumulates
+/// the error plane in the same row-major order.
+pub fn fdwconv2d_bwd_weight(
+    e: &TensorF32,
+    x: &TensorF32,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
+    assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let khw = geom.kh * geom.kw;
+    let ed = e.data();
+    let xd = x.data();
+    if let Some(k) = keep {
+        assert_eq!(k.len(), geom.cout, "keep mask length");
+    }
+
+    let mut gw = TensorF32::zeros(&[geom.cout, 1, geom.kh, geom.kw]);
+    let mut gb = TensorF32::zeros(&[geom.cout]);
+    let gwd = gw.data_mut();
+    let gbd = gb.data_mut();
+    let mut kept_channels = 0u64;
+    for c in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[c] {
+                continue;
+            }
+        }
+        kept_channels += 1;
+        let eplane = &ed[c * oh * ow..(c + 1) * oh * ow];
+        let xplane = &xd[c * h * wd..(c + 1) * h * wd];
+        let mut bacc = 0f32;
+        for &ev in eplane {
+            bacc += ev;
+        }
+        gbd[c] = bacc;
+        for ky in 0..geom.kh {
+            for kx in 0..geom.kw {
+                let mut acc = 0f32;
+                for oy in 0..oh {
+                    let iy = (oy * geom.stride + ky) as isize - geom.pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let xrow = &xplane[iy as usize * wd..(iy as usize + 1) * wd];
+                    let erow = &eplane[oy * ow..(oy + 1) * ow];
+                    if geom.stride == 1 {
+                        let lo = geom.pad_w.saturating_sub(kx).min(ow);
+                        let hi = (wd + geom.pad_w).saturating_sub(kx).min(ow).max(lo);
+                        if hi > lo {
+                            let src = lo + kx - geom.pad_w;
+                            let xs = &xrow[src..src + (hi - lo)];
+                            for (&ev, &xv) in erow[lo..hi].iter().zip(xs.iter()) {
+                                acc += ev * xv;
+                            }
+                        }
+                    } else {
+                        for (ox, &ev) in erow.iter().enumerate() {
+                            let ix = (ox * geom.stride + kx) as isize - geom.pad_w as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            acc += ev * xrow[ix as usize];
+                        }
+                    }
+                }
+                gwd[c * khw + ky * geom.kw + kx] = acc;
+            }
+        }
+    }
+
+    ops.float_macs += kept_channels * (oh * ow * khw) as u64;
+    ops.bytes += ((e.len() + x.len() + gw.len()) * 4) as u64;
+    (gw, gb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::qconv;
+    use crate::kernels::{fconv, OpCounter};
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::{shrink_dim, Prop};
+
+    fn dw_geom(c: usize, k: usize, stride: usize, pad: usize) -> ConvGeom {
+        ConvGeom {
+            cin: c,
+            cout: c,
+            kh: k,
+            kw: k,
+            stride,
+            pad_h: pad,
+            pad_w: pad,
+            depthwise: true,
+        }
+    }
+
+    fn rand_dw_setup(
+        rng: &mut Pcg32,
+        g: &ConvGeom,
+        h: usize,
+        w: usize,
+    ) -> (TensorF32, TensorF32, Vec<f32>) {
+        let mut x = TensorF32::zeros(&[g.cin, h, w]);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut wt = TensorF32::zeros(&[g.cout, 1, g.kh, g.kw]);
+        rng.fill_normal(wt.data_mut(), 0.3);
+        let b: Vec<f32> = (0..g.cout).map(|_| rng.normal() * 0.1).collect();
+        (x, wt, b)
+    }
+
+    fn rand_mask(rng: &mut Pcg32, n: usize, kind: u64) -> Option<Vec<bool>> {
+        match kind % 3 {
+            0 => None,
+            1 => Some((0..n).map(|_| rng.below(2) == 1).collect()),
+            _ => Some(vec![false; n]),
+        }
+    }
+
+    #[test]
+    fn pack_dw_flip_rotates_each_channel() {
+        // C=2, 2x2 kernels with recognizable values c*100 + ky*10 + kx.
+        let g = dw_geom(2, 2, 1, 1);
+        let w: Vec<u8> = vec![0, 1, 10, 11, 100, 101, 110, 111];
+        let mut dst = vec![0u8; 8];
+        pack_dw_flip_u8(&w, &g, &mut dst);
+        assert_eq!(dst, vec![11, 10, 1, 0, 111, 110, 101, 100]);
+    }
+
+    /// Property: the blocked quantized forward is bit-exact with the
+    /// scalar depthwise reference across random channel counts, kernel
+    /// sizes, strides, paddings and relu on/off, with identical op
+    /// accounting.
+    #[test]
+    fn prop_blocked_fwd_bit_exact_with_scalar() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| {
+                let c = 1 + r.below(6) as usize;
+                let k = 1 + 2 * r.below(2) as usize; // 1 or 3
+                let stride = 1 + r.below(2) as usize;
+                let pad = r.below(3) as usize;
+                let h = k.max(2) + r.below(22) as usize; // crosses the NR tile
+                (c, k, stride, pad, h, r.next_u64())
+            },
+            |&(c, k, stride, pad, h, s)| {
+                shrink_dim(h, k).into_iter().map(|h2| (c, k, stride, pad, h2, s)).collect()
+            },
+            |&(c, k, stride, pad, h, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let g = dw_geom(c, k, stride, pad);
+                let (x, wt, b) = rand_dw_setup(&mut rng, &g, h, h);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&wt);
+                let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+                let oqp = QParams::from_min_max(-2.0, 2.0);
+                let relu = seed % 2 == 0;
+                let mut ops_s = OpCounter::new();
+                let mut ops_b = OpCounter::new();
+                let ys = qconv::qconv2d_fwd(&xq, &wq, &bq, &g, oqp, relu, &mut ops_s);
+                let yb = qdwconv2d_fwd(&xq, &wq, &bq, &g, oqp, relu, &mut ops_b);
+                if ys.values.data() != yb.values.data() {
+                    return Err("blocked depthwise forward differs from scalar".into());
+                }
+                if ops_s != ops_b {
+                    return Err("fwd op accounting differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: both blocked backward kernels (packed route and the
+    /// scratch-packing bypass) are bit-exact with the scalar depthwise
+    /// references across random geometries and masks, with identical op
+    /// accounting.
+    #[test]
+    fn prop_blocked_bwd_bit_exact_with_scalar() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| {
+                let c = 1 + r.below(6) as usize;
+                let k = 1 + 2 * r.below(2) as usize;
+                let stride = 1 + r.below(2) as usize;
+                let pad = r.below(2) as usize;
+                let h = k.max(2) + r.below(22) as usize;
+                (c, k, stride, pad, h, r.next_u64())
+            },
+            |&(c, k, stride, pad, h, s)| {
+                shrink_dim(h, k).into_iter().map(|h2| (c, k, stride, pad, h2, s)).collect()
+            },
+            |&(c, k, stride, pad, h, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let g = dw_geom(c, k, stride, pad);
+                let (oh, ow) = g.out_hw(h, h);
+                let mut e = TensorF32::zeros(&[c, oh, ow]);
+                rng.fill_normal(e.data_mut(), 1.0);
+                let (x, wt, _) = rand_dw_setup(&mut rng, &g, h, h);
+                let eq = QTensor::quantize(&e);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&wt);
+                let keep = rand_mask(&mut rng, c, seed);
+                let keep = keep.as_deref();
+
+                let mut ops_s = OpCounter::new();
+                let mut ops_b = OpCounter::new();
+                let (gws, gbs) = qconv::qconv2d_bwd_weight(&eq, &xq, &g, keep, &mut ops_s);
+                let (gwb, gbb) = qdwconv2d_bwd_weight(&eq, &xq, &g, keep, &mut ops_b);
+                if gws.data() != gwb.data() || gbs.data() != gbb.data() {
+                    return Err("blocked depthwise weight gradient differs from scalar".into());
+                }
+                if ops_s != ops_b {
+                    return Err("bwd_weight op accounting differs".into());
+                }
+
+                let oqp = QParams::from_min_max(-2.0, 2.0);
+                let mut ops_s2 = OpCounter::new();
+                let mut ops_p = OpCounter::new();
+                let mut ops_u = OpCounter::new();
+                let es = qconv::qconv2d_bwd_input(&eq, &wq, &g, h, h, oqp, keep, &mut ops_s2);
+                let mut pack = vec![0u8; c * k * k];
+                pack_dw_flip_u8(wq.values.data(), &g, &mut pack);
+                let ep = qdwconv2d_bwd_input_packed(
+                    &eq,
+                    &wq,
+                    &pack,
+                    &g,
+                    h,
+                    h,
+                    oqp,
+                    keep,
+                    &mut ops_p,
+                );
+                let mut scratch = Scratch::new();
+                let eu = qdwconv2d_bwd_input(
+                    &eq,
+                    &wq,
+                    &g,
+                    h,
+                    h,
+                    oqp,
+                    keep,
+                    &mut scratch,
+                    &mut ops_u,
+                );
+                if es.values.data() != ep.values.data() {
+                    return Err("packed depthwise input gradient differs from scalar".into());
+                }
+                if es.values.data() != eu.values.data() {
+                    return Err("bypass depthwise input gradient differs from scalar".into());
+                }
+                if ops_s2 != ops_p || ops_s2 != ops_u {
+                    return Err("bwd_input op accounting differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Deterministic sweep over widths around the NR tile boundary (±1,
+    /// 1, 2·NR+3): the quantized engine must stay bit-exact with the
+    /// scalar reference on full tiles, edge tiles and single-column maps.
+    #[test]
+    fn blocked_edge_tiles_bit_exact() {
+        let mut rng = Pcg32::seeded(91);
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        for &w in &[1usize, NR - 1, NR, NR + 1, 2 * NR + 3] {
+            let h = 5usize;
+            for &(k, stride, pad) in &[(3usize, 1usize, 1usize), (3, 2, 1), (1, 1, 0)] {
+                if k > h + 2 * pad || k > w + 2 * pad {
+                    continue;
+                }
+                let g = ConvGeom {
+                    cin: 3,
+                    cout: 3,
+                    kh: k,
+                    kw: k,
+                    stride,
+                    pad_h: pad,
+                    pad_w: pad,
+                    depthwise: true,
+                };
+                let (x, wt, b) = rand_dw_setup(&mut rng, &g, h, w);
+                let xq = QTensor::quantize(&x);
+                let wq = QTensor::quantize(&wt);
+                let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+                let mut ops = OpCounter::new();
+                let ys = qconv::qconv2d_fwd(&xq, &wq, &bq, &g, oqp, true, &mut ops);
+                let yb = qdwconv2d_fwd(&xq, &wq, &bq, &g, oqp, true, &mut ops);
+                assert_eq!(ys.values.data(), yb.values.data(), "fwd w={w} k{k} s{stride}");
+
+                let (oh, ow) = g.out_hw(h, w);
+                let mut e = TensorF32::zeros(&[3, oh, ow]);
+                rng.fill_normal(e.data_mut(), 1.0);
+                let eq = QTensor::quantize(&e);
+                let es = qconv::qconv2d_bwd_input(&eq, &wq, &g, h, w, oqp, None, &mut ops);
+                let mut scratch = Scratch::new();
+                let eb = qdwconv2d_bwd_input(
+                    &eq,
+                    &wq,
+                    &g,
+                    h,
+                    w,
+                    oqp,
+                    None,
+                    &mut scratch,
+                    &mut ops,
+                );
+                assert_eq!(es.values.data(), eb.values.data(), "dx w={w} k{k} s{stride}");
+            }
+        }
+    }
+
+    /// The float engine must equal the scalar float kernels exactly (same
+    /// per-element accumulation order — see the module docs), across
+    /// geometries, relu masking zeros in the error, and sparse masks.
+    #[test]
+    fn float_engine_equals_scalar_reference() {
+        let mut rng = Pcg32::seeded(92);
+        for &(c, k, stride, pad, h) in &[
+            (3usize, 3usize, 1usize, 1usize, 7usize),
+            (4, 3, 2, 1, 9),
+            (2, 3, 1, 0, 19), // crosses the NR tile at stride 1
+            (5, 1, 1, 0, 6),
+            (3, 3, 2, 0, 8),
+        ] {
+            let g = dw_geom(c, k, stride, pad);
+            let (x, wt, b) = rand_dw_setup(&mut rng, &g, h, h);
+            let mut ops = OpCounter::new();
+            let ys = fconv::fconv2d_fwd(&x, &wt, &b, &g, true, &mut ops);
+            let yb = fdwconv2d_fwd(&x, &wt, &b, &g, true, &mut ops);
+            assert_eq!(ys.data(), yb.data(), "fwd {c}ch k{k} s{stride}");
+
+            let (oh, ow) = g.out_hw(h, h);
+            let mut e = TensorF32::zeros(&[c, oh, ow]);
+            rng.fill_normal(e.data_mut(), 1.0);
+            // ReLU-masked errors carry exact zeros — the case the scalar
+            // kernels' `ev == 0.0` skip special-cases.
+            fconv::relu_bwd_mask_f(&mut e, &ys, &mut ops);
+            let mask: Vec<bool> = (0..c).map(|i| i % 2 == 0).collect();
+            for keep in [None, Some(&mask[..])] {
+                let mut ops_s = OpCounter::new();
+                let mut ops_b = OpCounter::new();
+                let (gws, gbs) = fconv::fconv2d_bwd_weight(&e, &x, &g, keep, &mut ops_s);
+                let (gwb, gbb) = fdwconv2d_bwd_weight(&e, &x, &g, keep, &mut ops_b);
+                assert_eq!(gws.data(), gwb.data(), "gw {c}ch k{k} s{stride}");
+                assert_eq!(gbs.data(), gbb.data(), "gb {c}ch k{k} s{stride}");
+                assert_eq!(ops_s, ops_b, "bwd_weight ops {c}ch k{k} s{stride}");
+
+                let mut ops_s2 = OpCounter::new();
+                let mut ops_b2 = OpCounter::new();
+                let es = fconv::fconv2d_bwd_input(&e, &wt, &g, h, h, keep, &mut ops_s2);
+                let mut scratch = Scratch::new();
+                let eb = fdwconv2d_bwd_input(&e, &wt, &g, h, h, keep, &mut scratch, &mut ops_b2);
+                assert_eq!(es.data(), eb.data(), "dx {c}ch k{k} s{stride}");
+                assert_eq!(ops_s2, ops_b2, "bwd_input ops {c}ch k{k} s{stride}");
+            }
+        }
+    }
+
+    /// Masked channels must cost proportionally fewer counted MACs and
+    /// leave exactly-zero gradient planes (the depthwise sparse contract:
+    /// masked out-channel == masked in-channel).
+    #[test]
+    fn mask_skips_whole_channels_proportionally() {
+        let mut rng = Pcg32::seeded(93);
+        let g = dw_geom(8, 3, 1, 1);
+        let (h, w) = (10, 10);
+        let (x, wt, _) = rand_dw_setup(&mut rng, &g, h, w);
+        let (oh, ow) = g.out_hw(h, w);
+        let mut e = TensorF32::zeros(&[8, oh, ow]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let eq = QTensor::quantize(&e);
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&wt);
+        let keep = vec![true, false, true, false, true, false, true, false];
+
+        let mut ops_m = OpCounter::new();
+        let mut ops_d = OpCounter::new();
+        let (gw, gb) = qdwconv2d_bwd_weight(&eq, &xq, &g, Some(&keep), &mut ops_m);
+        let _ = qdwconv2d_bwd_weight(&eq, &xq, &g, None, &mut ops_d);
+        assert_eq!(ops_m.int_macs * 2, ops_d.int_macs, "kept=50% must halve dW MACs");
+        for c in 0..8 {
+            let z = gw.outer(c).iter().all(|&v| v == 0.0);
+            assert_eq!(z, !keep[c], "channel {c}");
+            if !keep[c] {
+                assert_eq!(gb.data()[c], 0.0);
+            }
+        }
+
+        let oqp = QParams::from_min_max(-1.0, 1.0);
+        let mut ops_m2 = OpCounter::new();
+        let mut ops_d2 = OpCounter::new();
+        let mut scratch = Scratch::new();
+        let km = Some(&keep[..]);
+        let _ = qdwconv2d_bwd_input(&eq, &wq, &g, h, w, oqp, km, &mut scratch, &mut ops_m2);
+        let _ = qdwconv2d_bwd_input(&eq, &wq, &g, h, w, oqp, None, &mut scratch, &mut ops_d2);
+        assert_eq!(ops_m2.int_macs * 2, ops_d2.int_macs, "kept=50% must halve dX MACs");
+    }
+
+    /// Non-square depthwise kernels (the 1×k time-series mapping) run the
+    /// same engine; spot-check bit-exactness against the scalar kernel.
+    #[test]
+    fn time_series_1xk_geometry_bit_exact() {
+        let mut rng = Pcg32::seeded(94);
+        let g = ConvGeom {
+            cin: 4,
+            cout: 4,
+            kh: 1,
+            kw: 3,
+            stride: 1,
+            pad_h: 0,
+            pad_w: 1,
+            depthwise: true,
+        };
+        let (h, w) = (1, 40);
+        let (x, wt, b) = rand_dw_setup(&mut rng, &g, h, w);
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&wt);
+        let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        let mut ops = OpCounter::new();
+        let ys = qconv::qconv2d_fwd(&xq, &wq, &bq, &g, oqp, false, &mut ops);
+        let yb = qdwconv2d_fwd(&xq, &wq, &bq, &g, oqp, false, &mut ops);
+        assert_eq!(ys.values.data(), yb.values.data());
+    }
+}

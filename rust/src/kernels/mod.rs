@@ -9,13 +9,14 @@
 //! Every kernel accounts its arithmetic into an [`OpCounter`]; the device
 //! model (`crate::device`) converts op counts into per-MCU cycles and energy
 //! (that is how the hardware study of Figs. 4b/5/6d/7b is simulated — see
-//! DESIGN.md §5).
+//! DESIGN.md §6).
 //!
 //! Numerics contract: the integer paths here are **bit-exact** with the
 //! Pallas kernels in `python/compile/kernels/` (same round-half-away-from-
 //! zero, same i32 accumulation), verified end-to-end through PJRT in
 //! `rust/tests/xla_cross_validation.rs`.
 
+pub mod dwconv;
 pub mod fconv;
 pub mod flinear;
 pub mod gemm;

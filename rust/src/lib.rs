@@ -18,11 +18,16 @@
 //!
 //! ## Execution engines
 //!
-//! Two native execution paths share one numerics contract:
+//! Three native execution paths share one numerics contract:
 //!
 //!  * the **scalar kernels** (`kernels::{qconv, fconv, qlinear, …}`) are
 //!    the MCU-faithful reference — the Rust port of what the paper's C
 //!    framework executes on a Cortex-M;
+//!  * the **depthwise engine** ([`kernels::dwconv`]) runs depthwise
+//!    convolutions — the op mix dominating the paper's MCUNet-style
+//!    backbones — on register-blocked per-channel tiles (forward, dW and
+//!    dX, with whole-channel sparse skipping and plan-cached flipped
+//!    weight packs), bit-exact with the scalar kernels;
 //!  * the **batched im2col/GEMM engine** (`kernels::gemm`, backed by the
 //!    [`memplan::Scratch`] arena) lowers non-depthwise convolutions onto
 //!    MR×NR register-blocked integer micro-kernels, caches the dense

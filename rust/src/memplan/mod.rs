@@ -31,9 +31,11 @@ use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
 /// Computed by `graph::plan::ExecPlan::compile` (which knows each layer's
 /// precision, so float models get their f32 twins pre-sized too) and
 /// consumed by [`Scratch::for_spec`]. The flipped-weight fields
-/// (`wt_u8`/`wt_f32`) stay 0 in compiled specs: dense backward packs are
-/// owned by the plan's pack cache (`graph::packs`), and only the sparse
-/// masked fallback packs into scratch (growing on first use).
+/// (`wt_u8`/`wt_f32`) hold only the *depthwise* stale-pack fallback bound
+/// (`Cout·Kh·Kw` per reachable depthwise layer — tiny, see
+/// `kernels::dwconv`): dense backward packs are owned by the plan's pack
+/// cache (`graph::packs`), and the dense conv masked fallback packs into
+/// scratch at its dense bound, growing once on first use.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ScratchSpec {
     pub col_u8: usize,
@@ -175,6 +177,26 @@ impl Scratch {
             self.zeros_f32.resize(init_len, 0.0);
         }
         (&mut self.wt_f32[..wt_len], &mut self.col_f32[..col_len], &self.zeros_f32[..init_len])
+    }
+
+    /// Borrow the 180°-flipped depthwise weight buffer for one
+    /// backward-input call that could not use the plan-owned pack (the
+    /// stale-cache bypass of `kernels::dwconv`). Reuses the `wt_u8`
+    /// backing store — both users are transient within a single kernel
+    /// call. Contents are unspecified; callers fully overwrite.
+    pub fn dw_wt_u8(&mut self, len: usize) -> &mut [u8] {
+        if self.wt_u8.len() < len {
+            self.wt_u8.resize(len, 0);
+        }
+        &mut self.wt_u8[..len]
+    }
+
+    /// f32 twin of [`Scratch::dw_wt_u8`].
+    pub fn dw_wt_f32(&mut self, len: usize) -> &mut [f32] {
+        if self.wt_f32.len() < len {
+            self.wt_f32.resize(len, 0.0);
+        }
+        &mut self.wt_f32[..len]
     }
 
     /// Currently reserved bytes across all buffers (diagnostics / memory

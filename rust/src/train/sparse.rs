@@ -16,13 +16,24 @@
 //! observed over the whole training so far — as the loss converges toward
 //! zero, the update rate converges toward `λ_min` (fewer structures worth
 //! updating late in training, Fig. 3's third observation).
+//!
+//! **No-history fallback (λ_max):** before any loss has been observed the
+//! normalizer `max_loss` is zero, so `|ε| = loss / max_loss` is undefined.
+//! The controller defines `|ε| = 1` in that state — the *conservative*
+//! choice: the very first sample (and any zero-loss sample before real
+//! history exists) trains at the full `λ_max` rate rather than risking a
+//! spuriously sparse update off an empty normalizer. Once history exists,
+//! a zero loss pins the rate at `λ_min` as Eq. 9 prescribes. See
+//! DESIGN.md §2 ("sparse row-skip contract") for how the resulting masks
+//! reach the backward kernels.
 
 use crate::graph::exec::MaskProvider;
 use crate::util::stats::top_k_indices;
 
-/// The Eq. 9 controller. Create once per training run; call
-/// [`DynamicSparse::begin_sample`] with the sample's loss before the
-/// backward pass (the training loop does this).
+/// The Eq. 9 controller — the shipping [`MaskProvider`] implementation.
+/// Create once per training run; call [`DynamicSparse::begin_sample`]
+/// with the sample's loss before the backward pass (the training loop
+/// does this).
 #[derive(Clone, Debug)]
 pub struct DynamicSparse {
     pub lambda_min: f32,
@@ -51,7 +62,10 @@ impl DynamicSparse {
     }
 
     /// Register the sample's loss; updates the running maximum and computes
-    /// `|ε| = loss / max_loss ∈ [0, 1]`.
+    /// `|ε| = loss / max_loss ∈ [0, 1]`. With no history (`max_loss` still
+    /// zero — e.g. an exactly-zero first loss) `|ε|` falls back to 1, so
+    /// [`DynamicSparse::rate`] returns the conservative λ_max full rate
+    /// instead of dividing by zero (see the module docs).
     pub fn begin_sample(&mut self, loss: f32) {
         self.max_loss = self.max_loss.max(loss.abs());
         self.cur_eps =

@@ -100,6 +100,46 @@ impl ResultSink {
     }
 }
 
+/// Schema check for `perf_kernels` JSON rows, shared by the bench itself
+/// (which asserts it before writing `BENCH_kernels.json`) and the CI
+/// perf-regression gate (`bench_gate`, which refuses malformed input):
+/// every row must be an object carrying a non-empty `"kernel"` string and
+/// at least one numeric metric, and every number anywhere in the row must
+/// be finite — a NaN or infinity would silently poison the gate's
+/// baseline comparisons.
+pub fn check_perf_rows(rows: &[Json]) -> Result<(), String> {
+    fn all_finite(v: &Json, path: &str) -> Result<(), String> {
+        match v {
+            Json::Num(n) if !n.is_finite() => Err(format!("non-finite number at {path}: {n}")),
+            Json::Arr(a) => {
+                for (i, item) in a.iter().enumerate() {
+                    all_finite(item, &format!("{path}[{i}]"))?;
+                }
+                Ok(())
+            }
+            Json::Obj(o) => {
+                for (k, item) in o {
+                    all_finite(item, &format!("{path}.{k}"))?;
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let obj = row.as_obj().ok_or_else(|| format!("row {i} is not an object"))?;
+        match row.get("kernel").as_str() {
+            Some(k) if !k.is_empty() => {}
+            _ => return Err(format!("row {i} is missing a non-empty \"kernel\" string")),
+        }
+        if !obj.values().any(|v| matches!(v, Json::Num(_))) {
+            return Err(format!("row {i} carries no numeric metric"));
+        }
+        all_finite(row, &format!("row {i}"))?;
+    }
+    Ok(())
+}
+
 /// Read a bench-scaling knob from the environment (e.g. TT_EPOCHS, TT_RUNS)
 /// so recorded runs can trade fidelity for wall-clock.
 pub fn env_usize(name: &str, default: usize) -> usize {
@@ -139,6 +179,54 @@ mod tests {
             t.row(&["only-one".into()])
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn perf_row_schema_accepts_well_formed_rows() {
+        // Representative of what perf_kernels actually emits: flat metric
+        // rows and rows with nested structure.
+        let rows = vec![
+            Json::obj(vec![
+                ("kernel", Json::str("qdwconv2d_fwd")),
+                ("seconds", Json::Num(1.5e-4)),
+                ("gmacs", Json::Num(3.2)),
+            ]),
+            Json::obj(vec![
+                ("kernel", Json::str("qdwconv2d_bwd_sparsity")),
+                ("kept_fraction", Json::Num(0.5)),
+                ("bwd_input_blocked_speedup", Json::Num(2.0)),
+                ("shape", Json::str("32x32x32")),
+            ]),
+        ];
+        assert!(check_perf_rows(&rows).is_ok());
+        assert!(check_perf_rows(&[]).is_ok());
+    }
+
+    #[test]
+    fn perf_row_schema_rejects_malformed_rows() {
+        // NaN metric
+        let nan = vec![Json::obj(vec![
+            ("kernel", Json::str("x")),
+            ("seconds", Json::Num(f64::NAN)),
+        ])];
+        assert!(check_perf_rows(&nan).unwrap_err().contains("non-finite"));
+        // infinity nested inside an array
+        let inf = vec![Json::obj(vec![
+            ("kernel", Json::str("x")),
+            ("n", Json::Num(1.0)),
+            ("samples", Json::Arr(vec![Json::Num(f64::INFINITY)])),
+        ])];
+        assert!(check_perf_rows(&inf).unwrap_err().contains("non-finite"));
+        // missing / empty kernel name
+        let unnamed = vec![Json::obj(vec![("seconds", Json::Num(1.0))])];
+        assert!(check_perf_rows(&unnamed).unwrap_err().contains("kernel"));
+        let empty = vec![Json::obj(vec![("kernel", Json::str("")), ("s", Json::Num(1.0))])];
+        assert!(check_perf_rows(&empty).unwrap_err().contains("kernel"));
+        // no numeric metric at all
+        let nometric = vec![Json::obj(vec![("kernel", Json::str("x"))])];
+        assert!(check_perf_rows(&nometric).unwrap_err().contains("numeric"));
+        // not an object
+        assert!(check_perf_rows(&[Json::Num(3.0)]).unwrap_err().contains("object"));
     }
 
     #[test]

@@ -197,6 +197,46 @@ fn batched_training_matches_tt_workers_env() {
     assert_eq!(base, multi, "{workers} workers diverged from the one-worker run");
 }
 
+/// Depthwise-separable fingerprint for the TT_WORKERS matrix: a fully
+/// trainable MbedNet (depthwise + pointwise blocks) batch-trained through
+/// the worker pool, so the depthwise engine's forward, dW and dX kernels
+/// all sit on the determinism contract.
+fn batched_dw_run_fingerprint(workers: usize, seed: u64) -> (Vec<u32>, (Vec<u8>, Vec<u32>)) {
+    use tinytrain::graph::exec::{calibrate, FloatParams, NativeModel};
+    use tinytrain::train::fqt::FqtSgd;
+    use tinytrain::train::loop_;
+
+    let mut spec = tinytrain::data::spec_by_name("cifar10").unwrap();
+    spec.reduced_shape = [3, 16, 16];
+    let shape = spec.reduced_shape;
+    let mut rng = Pcg32::new(seed, 0x77);
+    let mut def = tinytrain::graph::models::mbednet(&shape, spec.classes);
+    def.set_all_trainable();
+    let dom = tinytrain::data::Domain::new(&spec, shape, seed ^ 0x5A5A);
+    let (tr, te) = dom.splits(2, 1, &mut rng);
+    let fp = FloatParams::init(&def, &mut rng);
+    let calib = calibrate(&def, &fp, &tr.xs[..tr.len().min(4)]);
+    let mut m = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
+    let mut opt = FqtSgd::new(&m, 0.01, 4);
+    let rep = loop_::train_batched(&mut m, &mut opt, &tr, &te, 1, 4, workers, &mut rng);
+    let losses: Vec<u32> = rep.epochs.iter().map(|e| e.train_loss.to_bits()).collect();
+    (losses, quantized_weight_snapshot(&m))
+}
+
+/// The CI TT_WORKERS matrix leg for the depthwise-separable workload: the
+/// batched run over a fully trainable MbedNet must be bit-identical
+/// between one worker and the environment's worker count (same lifting
+/// rule as [`batched_training_matches_tt_workers_env`]).
+#[test]
+fn batched_training_matches_tt_workers_depthwise() {
+    let requested: usize =
+        std::env::var("TT_WORKERS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let workers = if requested <= 1 { 3 } else { requested };
+    let base = batched_dw_run_fingerprint(1, 31);
+    let multi = batched_dw_run_fingerprint(workers, 31);
+    assert_eq!(base, multi, "{workers} workers diverged on the depthwise-separable model");
+}
+
 /// The sequential reference path must still work next to the batched one
 /// (same harness, same spec) — guarding against accidental coupling.
 #[test]

@@ -143,13 +143,19 @@ fn plan_matches_reference_all_models_and_configs() {
 /// Parity must also hold under §III-B sparse-update masks: the planned
 /// executor calls the controller with the same norms in the same order, so
 /// the masks — and everything downstream of them — stay bit-identical.
+/// `mbednet` puts the depthwise engine's whole-channel skip (and its
+/// masked consumption of the cached flipped pack) under the same contract.
 #[test]
 fn plan_matches_reference_under_sparse_masks() {
-    for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
-        let (m, xs) = build("mnist_cnn", &[1, 12, 12], 4, cfg, 0xB0B);
-        for (k, x) in xs.iter().enumerate() {
-            let tag = format!("mnist_cnn/{cfg:?}/sparse/sample{k}");
-            assert_backward_parity(&m, x, true, &tag);
+    for (name, shape, classes) in
+        [("mnist_cnn", [1usize, 12, 12], 4usize), ("mbednet", [3, 16, 16], 5)]
+    {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let (m, xs) = build(name, &shape, classes, cfg, 0xB0B);
+            for (k, x) in xs.iter().enumerate() {
+                let tag = format!("{name}/{cfg:?}/sparse/sample{k}");
+                assert_backward_parity(&m, x, true, &tag);
+            }
         }
     }
 }
