@@ -1,4 +1,4 @@
-//! Ablations of the FQT optimizer's design choices (DESIGN.md §7 calls
+//! Ablations of the FQT optimizer's design choices (DESIGN.md §8 calls
 //! these out; the paper motivates them in §III-A):
 //!
 //!  * **gradient standardization** (Eq. 8) — off reproduces raw quantized

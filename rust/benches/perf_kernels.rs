@@ -11,7 +11,7 @@ use tinytrain::graph::plan::ExecPlan;
 use tinytrain::graph::{models, DnnConfig};
 use tinytrain::kernels::{dwconv, fconv, gemm, qconv, qlinear, softmax, ConvGeom, OpCounter};
 use tinytrain::memplan::Scratch;
-use tinytrain::quant::{QParams, QTensor};
+use tinytrain::quant::{requantize, QParams, QTensor};
 use tinytrain::tensor::TensorF32;
 use tinytrain::train::fqt::FqtSgd;
 use tinytrain::train::Optimizer;
@@ -504,6 +504,67 @@ fn main() {
         println!("gemm {label}: micro {:.2}x vs tiled", tt / tm);
     }
 
+    // §Tentpole (PR 6): the fused quantized epilogue vs the retained
+    // two-pass sequence (micro-kernel GEMM into an m·n i32 strip, then a
+    // separate requantization sweep over it), on the same MCUNet
+    // conv-as-GEMM shapes. Both paths are bit-exact, so the delta is
+    // purely the skipped i32 round-trip through memory; `bench_gate`
+    // holds the geometric mean of `fused_speedup_vs_unfused` over these
+    // rows above a machine-independent floor (TT_BENCH_GATE_FUSED_FLOOR).
+    let mut fused_rows: Vec<Json> = Vec::new();
+    let epi = gemm::QEpilogue { mult: 0.01375, qp: oqp, relu: true };
+    for &(label, mm, kdim, nsp) in &[
+        ("stem3x3 16x27x1024", 16usize, 27usize, 1024usize),
+        ("blk3x3 32x144x256", 32, 144, 256),
+        ("pw 96x16x256", 96, 16, 256),
+        ("pw 24x96x256", 24, 96, 256),
+        ("head1x1 128x64x64", 128, 64, 64),
+    ] {
+        let a: Vec<u8> = (0..mm * kdim).map(|_| rng.below(256) as u8).collect();
+        let bm: Vec<u8> = (0..kdim * nsp).map(|_| rng.below(256) as u8).collect();
+        let init = vec![0i32; mm];
+        let mut acc = vec![0i32; mm * nsp];
+        let mut outq = vec![0u8; mm * nsp];
+        let gmacs = (mm * kdim * nsp) as f64;
+        let (tu, _) = time_it(2, reps, || {
+            gemm::gemm_u8_i32(&a, 3, &bm, 5, &init, mm, kdim, nsp, &mut acc);
+            for (q, &v) in outq.iter_mut().zip(acc.iter()) {
+                *q = requantize(v, epi.mult, epi.qp.zero_point, epi.relu);
+            }
+            std::hint::black_box(&outq);
+        });
+        let (tf, _) = time_it(2, reps, || {
+            std::hint::black_box(gemm::gemm_u8_i32_fused(
+                &a, 3, &bm, 5, &init, mm, kdim, nsp, &epi, &mut outq, None,
+            ));
+            std::hint::black_box(&outq);
+        });
+        tab.row(&[
+            "gemm fused epilogue".into(),
+            label.into(),
+            fmt_duration(tf),
+            format!("{:.2}", gmacs / tf / 1e9),
+        ]);
+        tab.row(&[
+            "gemm + requant pass".into(),
+            label.into(),
+            fmt_duration(tu),
+            format!("{:.2}", gmacs / tu / 1e9),
+        ]);
+        let row = Json::obj(vec![
+            ("kernel", Json::str("gemm_fused_epilogue")),
+            ("shape", Json::str(label)),
+            ("fused_seconds", Json::Num(tf)),
+            ("unfused_seconds", Json::Num(tu)),
+            ("fused_gmacs", Json::Num(gmacs / tf / 1e9)),
+            ("unfused_gmacs", Json::Num(gmacs / tu / 1e9)),
+            ("fused_speedup_vs_unfused", Json::Num(tu / tf)),
+        ]);
+        fused_rows.push(row.clone());
+        sink.push(row);
+        println!("gemm {label}: fused epilogue {:.2}x vs gemm+requant", tu / tf);
+    }
+
     // §Tentpole (PR 5): the register-blocked depthwise engine vs the
     // scalar MCU-faithful kernels, on the MbedNet/MCUNet block shape that
     // dominates the paper's depthwise-separable backbones. Forward (u8 +
@@ -772,6 +833,7 @@ fn main() {
         ("batch", Json::Num(batch as f64)),
         ("workers", Json::Num(workers as f64)),
         ("gemm_micro_vs_tiled", Json::Arr(micro_rows)),
+        ("gemm_fused_epilogue", Json::Arr(fused_rows)),
         ("dwconv_scalar_vs_blocked", Json::Arr(dw_rows)),
         (
             "pack_cache",

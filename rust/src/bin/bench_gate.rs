@@ -17,7 +17,13 @@
 //!     field of the fresh run must be ≥ `1/tol` (a fast path falling to
 //!     less than half its reference at the default tolerance means the
 //!     engine regressed, whatever the hardware).
-//!  3. **baseline diff** — per matching row key, `*seconds*` fields may
+//!  3. **fused-epilogue floor** — machine-independent: the geometric mean
+//!     of `fused_speedup_vs_unfused` over the `gemm_fused_epilogue` rows
+//!     must be ≥ `TT_BENCH_GATE_FUSED_FLOOR` (default 1.0). The fused
+//!     tile writeout does strictly less memory traffic than the retained
+//!     GEMM + requantization sweep, so parity-on-average is the floor on
+//!     any hardware; no absolute times are involved.
+//!  4. **baseline diff** — per matching row key, `*seconds*` fields may
 //!     grow at most `tol`× over the baseline and `*speedup*` fields may
 //!     shrink at most `tol`× under it. Rows present on only one side are
 //!     reported but do not fail (the bench grows across PRs).
@@ -26,8 +32,10 @@
 //! it and passes on the internal checks alone (first-PR bootstrap).
 //!
 //! Knobs: `TT_BENCH_GATE_TOL` (default 2.0 — generous; CI runners are
-//! noisy) and `TT_BENCH_GATE_ABS=0` to skip the absolute `*seconds*`
-//! comparisons when diffing runs from incomparable hardware.
+//! noisy), `TT_BENCH_GATE_FUSED_FLOOR` (default 1.0) for the
+//! fused-epilogue geometric-mean floor, and `TT_BENCH_GATE_ABS=0` to skip
+//! the absolute `*seconds*` comparisons when diffing runs from
+//! incomparable hardware.
 //!
 //! Refreshing the baseline: run the bench in quick mode exactly as CI
 //! does (`cd rust && TT_PERF_REPS=3 TT_PERF_BATCH=4 TT_WORKERS=2 cargo
@@ -45,6 +53,17 @@ fn tolerance() -> f64 {
         .and_then(|v| v.parse::<f64>().ok())
         .unwrap_or(2.0)
         .max(1.0)
+}
+
+/// Floor on the geometric mean of `fused_speedup_vs_unfused` across the
+/// `gemm_fused_epilogue` rows (machine-independent: both arms of each
+/// ratio ran on the same machine in the same process).
+fn fused_floor() -> f64 {
+    std::env::var("TT_BENCH_GATE_FUSED_FLOOR")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1.0)
+        .max(0.0)
 }
 
 /// Extract the row array from either supported file shape.
@@ -125,7 +144,34 @@ fn main() -> ExitCode {
         }
     }
 
-    // 3. baseline diff, when a baseline exists.
+    // 3. fused-epilogue floor: the fused tile writeout must hold at
+    // least geomean parity with the retained GEMM + requantization
+    // sweep. A per-row dip rides on the generic 1/tol floor above; the
+    // geometric mean smooths single-shape noise while still refusing a
+    // systematically slower fused path.
+    let fused_speedups: Vec<f64> = fresh
+        .iter()
+        .filter(|row| row.get("kernel").as_str() == Some("gemm_fused_epilogue"))
+        .filter_map(|row| row.get("fused_speedup_vs_unfused").as_f64())
+        .collect();
+    if !fused_speedups.is_empty() {
+        let floor = fused_floor();
+        let geomean =
+            (fused_speedups.iter().map(|s| s.ln()).sum::<f64>() / fused_speedups.len() as f64)
+                .exp();
+        println!(
+            "bench_gate: fused-epilogue geomean speedup {geomean:.3} over {} rows (floor {floor})",
+            fused_speedups.len()
+        );
+        if geomean < floor {
+            failures.push(format!(
+                "fused-epilogue geomean speedup {geomean:.3} below the {floor} floor \
+                 (TT_BENCH_GATE_FUSED_FLOOR)"
+            ));
+        }
+    }
+
+    // 4. baseline diff, when a baseline exists.
     match load_rows(baseline_path) {
         Err(e) => {
             println!(

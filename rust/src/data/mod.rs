@@ -4,7 +4,7 @@
 //! MCUNet transfer-learning datasets of Tab. IV. None are redistributable
 //! inside this offline harness, so each is replaced by a *class-conditional
 //! generator* matched in class count, input shape, and modality
-//! (DESIGN.md §6). The generators exercise the identical code paths —
+//! (DESIGN.md §7). The generators exercise the identical code paths —
 //! shapes, memory plan, layer schedule, quantized numerics — and preserve
 //! the orderings the paper's claims rest on (fp32 ≥ mixed ≥ uint8, etc.),
 //! which are properties of the optimizer rather than of the data.
@@ -33,7 +33,7 @@ pub enum Kind {
 
 /// One dataset of the evaluation, with both the paper's native shape (used
 /// for memory/latency analysis) and the reduced shape used for the
-/// accuracy simulations (DESIGN.md §6: the two are decoupled — memory and
+/// accuracy simulations (DESIGN.md §7: the two are decoupled — memory and
 /// latency come from the analytic planner/cost model at full shape).
 #[derive(Clone, Debug)]
 pub struct DatasetSpec {

@@ -1,4 +1,4 @@
-//! MCU device models — the simulated hardware substrate (DESIGN.md §6).
+//! MCU device models — the simulated hardware substrate (DESIGN.md §7).
 //!
 //! The paper measures latency and energy on three physical boards (Tab. II:
 //! RP2040/Cortex-M0+, nrf52840/Cortex-M4, IMXRT1062/Cortex-M7). We replace

@@ -37,6 +37,13 @@ pub struct FwdTrace {
     pub input: Act,
     pub acts: Vec<Act>,
     pub argmax: Vec<Option<Vec<u32>>>,
+    /// Per-layer `(saturated, total)` output-range saturation counts the
+    /// fused kernel epilogues record while requantizing the register tile
+    /// (`None` for float layers, unfused plans, and the reference
+    /// executor). The saturation-telemetry pass behind
+    /// [`NativeModel::forward_adapt`] consumes these instead of
+    /// re-sweeping the activation when present.
+    pub sat: Vec<Option<(usize, usize)>>,
     pub logits: Vec<f32>,
 }
 
@@ -96,6 +103,20 @@ impl NativeModel {
     /// PTQ calibration ranges for activations, and compile the execution
     /// plan (`O(layers)`, once).
     pub fn build(def: ModelDef, cfg: DnnConfig, fp: &FloatParams, calib: &Calibration) -> Self {
+        Self::build_with_fusion(def, cfg, fp, calib, crate::graph::plan::fuse_default())
+    }
+
+    /// [`NativeModel::build`] with an explicit plan-fusion mode (see
+    /// [`ExecPlan::compile_with`]); `build` follows the `TT_NO_FUSE`
+    /// environment default. The parity suite deploys one model per mode
+    /// from the same float masters and asserts bit-identical behavior.
+    pub fn build_with_fusion(
+        def: ModelDef,
+        cfg: DnnConfig,
+        fp: &FloatParams,
+        calib: &Calibration,
+        fused: bool,
+    ) -> Self {
         let prec = def.precisions(cfg);
         let params = def
             .layers
@@ -112,7 +133,7 @@ impl NativeModel {
             })
             .collect();
         let err_obs = def.layers.iter().map(|_| MinMaxObserver::online()).collect();
-        let plan = ExecPlan::compile(&def, cfg);
+        let plan = ExecPlan::compile_with(&def, cfg, fused);
         let n = def.layers.len();
         let mut model = NativeModel {
             prec,
@@ -327,6 +348,15 @@ impl NativeModel {
             .map(|(i, l)| {
                 if !l.trainable || self.prec[i] != Precision::Uint8 {
                     return None;
+                }
+                // The fused epilogues already counted saturation while
+                // requantizing the register tile — consume the recorded
+                // count instead of re-sweeping the activation. The op
+                // accounting matches the sweep it replaces, so fused and
+                // unfused telemetry report identical `OpCounter` totals.
+                if let Some(s) = trace.sat[i] {
+                    ops.int_ops += s.1 as u64;
+                    return Some(s);
                 }
                 let relu = matches!(
                     l.kind,

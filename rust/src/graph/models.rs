@@ -131,7 +131,7 @@ mod tests {
         let params = m.total_params();
         let macs = m.total_fwd_macs();
         // paper: 23M MACs, 0.48M params — allow a generous band for the
-        // stand-in (DESIGN.md §6)
+        // stand-in (DESIGN.md §7)
         assert!((300_000..700_000).contains(&params), "params={params}");
         assert!((15_000_000..35_000_000).contains(&macs), "macs={macs}");
     }

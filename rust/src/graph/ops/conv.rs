@@ -9,6 +9,7 @@ use crate::graph::exec::LayerGrads;
 use crate::graph::ops::{fwd_input, sparse_keep, ExecCtx, LayerOp, QpSlot};
 use crate::kernels::{dwconv, fconv, kept_count, qconv, ConvGeom};
 use crate::quant::{quantize_bias, QTensor};
+use crate::tensor::TensorF32;
 
 /// Quantized (uint8) convolution, with pre-resolved geometry, input spatial
 /// extent and input-quantization slot.
@@ -20,6 +21,13 @@ pub struct QConvOp {
     pub in_qp: QpSlot,
     pub in_h: usize,
     pub in_w: usize,
+    /// Route through the fused-epilogue kernel twins (requantize the
+    /// register tile, count saturation) instead of the two-pass oracle.
+    pub fused: bool,
+    /// The dequantize boundary that followed this layer was folded into its
+    /// epilogue: forward emits the float staging tensor directly, backward
+    /// absorbs the boundary's error quantization.
+    pub fold_dequant: bool,
 }
 
 impl LayerOp for QConvOp {
@@ -53,7 +61,37 @@ impl LayerOp for QConvOp {
         let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
         let out_qp = ctx.act_qp[l];
         let y = if self.geom.depthwise {
-            dwconv::qdwconv2d_fwd(xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops)
+            if self.fused {
+                let (y, sat) =
+                    dwconv::qdwconv2d_fwd_fused(xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops);
+                ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+                y
+            } else {
+                dwconv::qdwconv2d_fwd(xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops)
+            }
+        } else if self.fused {
+            // A folded dequantize boundary is emitted here: the epilogue
+            // fills the float staging tensor from the register tile while
+            // requantizing, so the consumer finds it pre-staged and the
+            // boundary op never runs.
+            let (oh, ow) = self.geom.out_hw(self.in_h, self.in_w);
+            let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[self.geom.cout, oh, ow]));
+            let (y, sat) = qconv::qconv2d_fwd_gemm_fused(
+                xq,
+                w,
+                &bq,
+                &self.geom,
+                out_qp,
+                self.relu,
+                deq.as_mut().map(|t| t.data_mut()),
+                ctx.scratch,
+                ctx.ops,
+            );
+            ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+            if let Some(d) = deq {
+                ctx.staged = Some(Act::F(d));
+            }
+            y
         } else {
             qconv::qconv2d_fwd_gemm(
                 xq,
@@ -73,6 +111,22 @@ impl LayerOp for QConvOp {
         let l = self.layer;
         let trace = ctx.trace.expect("backward needs a forward trace");
         let mut err = ctx.err.take().expect("backward error not set");
+        // A folded dequantize boundary's backward is absorbed here: observe
+        // the incoming float error into this layer's error observer and
+        // quantize it with the freshened parameters — exactly what the
+        // deleted `DequantizeOp` did one schedule step earlier, before any
+        // mask or ReLU processing sees the error.
+        if self.fold_dequant {
+            err = match err {
+                Act::F(t) => {
+                    let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
+                    let o = &mut obs[l];
+                    o.observe(t.data());
+                    Act::Q(QTensor::quantize_with(&t, o.qparams()))
+                }
+                q => q,
+            };
+        }
         let trainable = ctx.layers[l].trainable;
         let keep = sparse_keep(ctx, l, trainable, &err);
         // Layer input from the trace, coerced into this layer's precision
@@ -168,29 +222,57 @@ impl LayerOp for QConvOp {
                     ),
                 })
             } else if let Some(pack) = cached {
-                Act::Q(qconv::qconv2d_bwd_input_gemm_packed(
-                    eq,
-                    w,
-                    pack,
-                    &self.geom,
-                    self.in_h,
-                    self.in_w,
-                    out_qp,
-                    ctx.scratch,
-                    ctx.ops,
-                ))
+                Act::Q(if self.fused {
+                    qconv::qconv2d_bwd_input_gemm_packed_fused(
+                        eq,
+                        w,
+                        pack,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        out_qp,
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                } else {
+                    qconv::qconv2d_bwd_input_gemm_packed(
+                        eq,
+                        w,
+                        pack,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        out_qp,
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                })
             } else {
-                Act::Q(qconv::qconv2d_bwd_input_gemm(
-                    eq,
-                    w,
-                    &self.geom,
-                    self.in_h,
-                    self.in_w,
-                    out_qp,
-                    keep.as_deref(),
-                    ctx.scratch,
-                    ctx.ops,
-                ))
+                Act::Q(if self.fused {
+                    qconv::qconv2d_bwd_input_gemm_fused(
+                        eq,
+                        w,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                } else {
+                    qconv::qconv2d_bwd_input_gemm(
+                        eq,
+                        w,
+                        &self.geom,
+                        self.in_h,
+                        self.in_w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                })
             };
             observe_saturation(&mut obs[l - 1], &next);
             ctx.err = Some(next);

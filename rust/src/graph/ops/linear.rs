@@ -13,6 +13,7 @@ use crate::graph::exec::LayerGrads;
 use crate::graph::ops::{fwd_input, sparse_keep, ExecCtx, LayerOp, QpSlot};
 use crate::kernels::{fconv, flinear, kept_count, qconv, qlinear};
 use crate::quant::{quantize_bias, QTensor};
+use crate::tensor::TensorF32;
 
 /// Quantized (uint8) fully connected layer.
 pub struct QLinearOp {
@@ -20,6 +21,12 @@ pub struct QLinearOp {
     pub name: String,
     pub relu: bool,
     pub in_qp: QpSlot,
+    /// Route through the fused-epilogue kernel twins (see
+    /// [`QConvOp`](crate::graph::ops::QConvOp)).
+    pub fused: bool,
+    /// The dequantize boundary that followed this layer was folded into its
+    /// epilogue (see [`QConvOp`](crate::graph::ops::QConvOp)).
+    pub fold_dequant: bool,
 }
 
 impl LayerOp for QLinearOp {
@@ -51,7 +58,28 @@ impl LayerOp for QLinearOp {
             ),
         };
         let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
-        let y = qlinear::qlinear_fwd(xq, w, &bq, ctx.act_qp[l], self.relu, ctx.ops);
+        let y = if self.fused {
+            // A folded dequantize boundary is emitted here, straight from
+            // the register tile (see QConvOp::forward).
+            let n_out = w.shape()[0];
+            let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[n_out]));
+            let (y, sat) = qlinear::qlinear_fwd_fused(
+                xq,
+                w,
+                &bq,
+                ctx.act_qp[l],
+                self.relu,
+                deq.as_mut().map(|t| t.data_mut()),
+                ctx.ops,
+            );
+            ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+            if let Some(d) = deq {
+                ctx.staged = Some(Act::F(d));
+            }
+            y
+        } else {
+            qlinear::qlinear_fwd(xq, w, &bq, ctx.act_qp[l], self.relu, ctx.ops)
+        };
         ctx.acts.push(Act::Q(y));
     }
 
@@ -59,6 +87,19 @@ impl LayerOp for QLinearOp {
         let l = self.layer;
         let trace = ctx.trace.expect("backward needs a forward trace");
         let mut err = ctx.err.take().expect("backward error not set");
+        // Absorb the folded boundary's error quantization (see
+        // QConvOp::backward).
+        if self.fold_dequant {
+            err = match err {
+                Act::F(t) => {
+                    let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
+                    let o = &mut obs[l];
+                    o.observe(t.data());
+                    Act::Q(QTensor::quantize_with(&t, o.qparams()))
+                }
+                q => q,
+            };
+        }
         let trainable = ctx.layers[l].trainable;
         let keep = sparse_keep(ctx, l, trainable, &err);
         let lin_raw: &Act = if l == 0 { &trace.input } else { &trace.acts[l - 1] };
@@ -103,14 +144,25 @@ impl LayerOp for QLinearOp {
         if l > ctx.stop {
             let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
             let out_qp = propagate_qp(&mut obs[l - 1], eq, ctx.ops);
-            let next = Act::Q(qlinear::qlinear_bwd_input_gemm(
-                eq,
-                w,
-                out_qp,
-                keep.as_deref(),
-                ctx.scratch,
-                ctx.ops,
-            ));
+            let next = Act::Q(if self.fused {
+                qlinear::qlinear_bwd_input_gemm_fused(
+                    eq,
+                    w,
+                    out_qp,
+                    keep.as_deref(),
+                    ctx.scratch,
+                    ctx.ops,
+                )
+            } else {
+                qlinear::qlinear_bwd_input_gemm(
+                    eq,
+                    w,
+                    out_qp,
+                    keep.as_deref(),
+                    ctx.scratch,
+                    ctx.ops,
+                )
+            });
             observe_saturation(&mut obs[l - 1], &next);
             ctx.err = Some(next);
         }

@@ -97,6 +97,11 @@ pub struct ExecCtx<'a> {
     pub acts: Vec<Act>,
     /// Forward: max-pool argmax routes.
     pub argmax: Vec<Option<Vec<u32>>>,
+    /// Forward: per-layer `(saturated, total)` output-range saturation
+    /// counts, recorded by the fused kernel epilogues as they requantize
+    /// the register tile. `None` for layers the fused path did not visit
+    /// (float layers, depthwise-boundary cases, or unfused plans).
+    pub sat: Vec<Option<(usize, usize)>>,
     /// Forward: output of a boundary op awaiting the next compute op.
     pub staged: Option<Act>,
     /// Backward: the forward trace being differentiated.

@@ -56,12 +56,87 @@ pub struct ExecPlan {
     spec: ScratchSpec,
     /// The configuration this plan was compiled for.
     pub cfg: DnnConfig,
+    /// Whether this plan runs the fused-epilogue kernels and folds legal
+    /// precision boundaries into their producers (see
+    /// [`ExecPlan::compile_with`]).
+    fused: bool,
+}
+
+/// Whether plans compile in fused-epilogue mode by default: `true` unless
+/// the `TT_NO_FUSE` environment variable is set to `1`/`true`, which forces
+/// the unfused op sequence — the bit-for-bit parity oracle the fused path
+/// is tested against (`tests/plan_parity.rs`, and a dedicated CI leg runs
+/// the whole tier-1 suite under `TT_NO_FUSE=1`).
+pub fn fuse_default() -> bool {
+    !matches!(std::env::var("TT_NO_FUSE").ok().as_deref(), Some("1") | Some("true"))
+}
+
+/// Plan-fusion legality: can the `DequantizeOp` boundary *after* layer `l`
+/// be folded into layer `l`'s own kernel epilogue?
+///
+/// Legal iff layer `l` is a **quantized dense (non-depthwise) conv or
+/// linear** and layer `l+1` runs in float: those producers route through
+/// the GEMM micro-kernel, whose fused epilogue
+/// ([`crate::kernels::gemm::gemm_u8_i32_fused`]) can emit the dequantized
+/// float copy from the register tile while requantizing. Everything else
+/// keeps its explicit boundary op:
+///
+///  * **depthwise convs** — the depthwise engine fuses requantization but
+///    has no dequant-emitting write-out (its tile loop is per-channel, not
+///    GEMM-shaped), so the boundary stays explicit;
+///  * **pools / flatten** — never produce a precision crossing themselves
+///    (they pass precision through);
+///  * **`QuantizeOp` boundaries (float → uint8)** — never folded: the
+///    float producer's epilogue has no quantization parameters of its own
+///    to target, and no shipping configuration produces this crossing
+///    (`Mixed` crosses uint8 → float exactly once).
+pub fn folds_dequant(def: &ModelDef, prec: &[Precision], l: usize) -> bool {
+    l + 1 < def.layers.len()
+        && prec[l] == Precision::Uint8
+        && prec[l + 1] == Precision::Float32
+        && match def.layers[l].kind {
+            LayerKind::Conv { geom, .. } => !geom.depthwise,
+            LayerKind::Linear { .. } => true,
+            _ => false,
+        }
 }
 
 impl ExecPlan {
-    /// Compile the plan for `def` under `cfg`. `O(layers)`: pure shape and
-    /// precision arithmetic, no per-sample work.
+    /// Compile the plan for `def` under `cfg` in the default fusion mode
+    /// ([`fuse_default`]: fused unless `TT_NO_FUSE=1`). `O(layers)`: pure
+    /// shape and precision arithmetic, no per-sample work.
     pub fn compile(def: &ModelDef, cfg: DnnConfig) -> ExecPlan {
+        Self::compile_with(def, cfg, fuse_default())
+    }
+
+    /// Compile the plan with an explicit fusion mode.
+    ///
+    /// `fused = false` emits the PR 3 op sequence unchanged: one compute op
+    /// per layer, explicit `QuantizeOp`/`DequantizeOp` boundary steps, and
+    /// kernels that run requantization as a separate pass over an i32
+    /// accumulator strip. This is the retained bit-for-bit parity oracle.
+    ///
+    /// `fused = true` applies two plan-level transformations, both
+    /// bit-identical to the oracle by construction (asserted over every
+    /// model × precision × mask configuration in `tests/plan_parity.rs`):
+    ///
+    ///  * **epilogue fusion** — quantized conv/linear ops route through the
+    ///    `_fused` kernel twins, which requantize (bias add, ReLU clamp)
+    ///    the MR×NR accumulator tile in registers and count range
+    ///    saturation on the way out, so the i32 accumulator strips of the
+    ///    forward and backward-input GEMMs never materialize. The
+    ///    [`ScratchSpec`] shrinks accordingly, and the unfused plan's
+    ///    liveness timeline models the dropped strips explicitly (see
+    ///    [`arena_items_with`]) so `planned_peak_bytes` reflects the
+    ///    saving;
+    ///  * **boundary folding** — `DequantizeOp` steps whose producer
+    ///    passes [`folds_dequant`] are deleted from the schedule; the
+    ///    producer's fused kernel emits the dequantized float staging
+    ///    tensor directly from the register tile, and the producer's
+    ///    backward absorbs the boundary's error-quantization step
+    ///    (observing into the same per-layer error observer, in the same
+    ///    order).
+    pub fn compile_with(def: &ModelDef, cfg: DnnConfig, fused: bool) -> ExecPlan {
         let prec = def.precisions(cfg);
         let shapes = def.shapes();
         // Backward scratch is sized only for the layers the backward pass
@@ -80,7 +155,15 @@ impl ExecPlan {
                     Precision::Uint8 => {
                         ops.push(Box::new(QuantizeOp { layer: i, qp: in_qp_slot(def, i) }))
                     }
-                    Precision::Float32 => ops.push(Box::new(DequantizeOp { layer: i })),
+                    // A foldable dequantize boundary is deleted from the
+                    // fused schedule: its producer emits the float staging
+                    // tensor itself (forward) and absorbs the error
+                    // quantization (backward).
+                    Precision::Float32 => {
+                        if !(fused && i > 0 && folds_dequant(def, &prec, i - 1)) {
+                            ops.push(Box::new(DequantizeOp { layer: i }))
+                        }
+                    }
                 }
             }
             match &l.kind {
@@ -109,7 +192,15 @@ impl ExecPlan {
                         match prec[i] {
                             Precision::Uint8 => {
                                 spec.col_u8 = spec.col_u8.max(fwd_col);
-                                spec.acc_i32 = spec.acc_i32.max(geom.cout * n_hw);
+                                // Fused plans requantize the accumulator
+                                // tile in registers: the forward and
+                                // backward-input i32 strips exist only on
+                                // the unfused oracle path. The trainable
+                                // weight-gradient accumulator stays in both
+                                // modes (dW is emitted in float either way).
+                                if !fused {
+                                    spec.acc_i32 = spec.acc_i32.max(geom.cout * n_hw);
+                                }
                                 if l.trainable {
                                     spec.acc_i32 = spec.acc_i32.max(geom.cout * kdim);
                                 }
@@ -120,7 +211,9 @@ impl ExecPlan {
                                 // scratch, growing once on first use.
                                 if i > stop {
                                     spec.col_u8 = spec.col_u8.max(krow * hw_in);
-                                    spec.acc_i32 = spec.acc_i32.max(geom.cin * hw_in);
+                                    if !fused {
+                                        spec.acc_i32 = spec.acc_i32.max(geom.cin * hw_in);
+                                    }
                                     spec.zeros_i32 = spec.zeros_i32.max(geom.cin);
                                 }
                             }
@@ -144,6 +237,8 @@ impl ExecPlan {
                             in_qp: in_qp_slot(def, i),
                             in_h: in_shape[1],
                             in_w: in_shape[2],
+                            fused,
+                            fold_dequant: fused && folds_dequant(def, &prec, i),
                         })),
                         Precision::Float32 => ops.push(Box::new(FConvOp {
                             layer: i,
@@ -163,7 +258,11 @@ impl ExecPlan {
                             }
                             if i > stop {
                                 spec.col_u8 = spec.col_u8.max(*n_out);
-                                spec.acc_i32 = spec.acc_i32.max(*n_in);
+                                // Fused: the bwd-input GEMM requantizes in
+                                // registers, no i32 strip (see the conv arm).
+                                if !fused {
+                                    spec.acc_i32 = spec.acc_i32.max(*n_in);
+                                }
                                 spec.zeros_i32 = spec.zeros_i32.max(1);
                             }
                         }
@@ -180,6 +279,8 @@ impl ExecPlan {
                             name: l.name.clone(),
                             relu: *relu,
                             in_qp: in_qp_slot(def, i),
+                            fused,
+                            fold_dequant: fused && folds_dequant(def, &prec, i),
                         })),
                         Precision::Float32 => ops.push(Box::new(FLinearOp {
                             layer: i,
@@ -200,8 +301,14 @@ impl ExecPlan {
                 }
             }
         }
-        let arena = planned_arena(def, cfg, true);
-        ExecPlan { planned_peak_bytes: arena.total_bytes, arena, ops, spec, cfg }
+        let arena = planned_arena_with(def, cfg, true, fused);
+        ExecPlan { planned_peak_bytes: arena.total_bytes, arena, ops, spec, cfg, fused }
+    }
+
+    /// Whether this plan was compiled in fused-epilogue mode (see
+    /// [`ExecPlan::compile_with`]).
+    pub fn fused(&self) -> bool {
+        self.fused
     }
 
     /// The compiled schedule, in forward execution order.
@@ -263,6 +370,7 @@ impl ExecPlan {
             input: Some(input),
             acts: Vec::with_capacity(n),
             argmax: vec![None; n],
+            sat: vec![None; n],
             staged: None,
             trace: None,
             err: None,
@@ -278,6 +386,7 @@ impl ExecPlan {
             input: ctx.input.take().expect("forward input survives the pass"),
             acts: ctx.acts,
             argmax: ctx.argmax,
+            sat: ctx.sat,
             logits: logits.into_vec(),
         }
     }
@@ -320,6 +429,7 @@ impl ExecPlan {
             input: None,
             acts: Vec::new(),
             argmax: Vec::new(),
+            sat: Vec::new(),
             staged: None,
             trace: Some(trace),
             err: Some(err),
@@ -360,13 +470,42 @@ fn act_bytes(shape: &[usize], prec: Precision) -> usize {
     }
 }
 
+/// Liveness items of the *planned* schedule in the default fusion mode
+/// ([`fuse_default`]). See [`arena_items_with`].
+pub fn arena_items(def: &ModelDef, cfg: DnnConfig, training: bool) -> Vec<ArenaItem> {
+    arena_items_with(def, cfg, training, fuse_default())
+}
+
 /// Liveness items of the *planned* schedule: the analytic fwd/bwd timeline
 /// refined with what the compiled ops actually allocate — `Flatten` outputs
 /// alias their input buffer (zero-copy view, so they add no arena item,
 /// only extend the aliased buffer's lifetime), and precision boundaries add
 /// transient staging buffers. Timeline: forward step of layer `i` is time
 /// `i`; its backward step is time `2n−1−i`.
-pub fn arena_items(def: &ModelDef, cfg: DnnConfig, training: bool) -> Vec<ArenaItem> {
+///
+/// The fusion mode changes the timeline in two ways, mirroring
+/// [`ExecPlan::compile_with`]:
+///
+///  * **accumulator strips** — the unfused GEMM path materializes an i32
+///    accumulator strip per quantized dense conv/linear: `facc{i}`
+///    (`out_elems × 4` bytes, transient at forward step `i`) and, when the
+///    backward-input GEMM runs, `bacc{i}` (`in_elems × 4` bytes, transient
+///    at backward step `2n−1−i`). Fused plans requantize the register tile
+///    directly, so these items vanish from the timeline. (The trainable
+///    weight-gradient accumulator — `cout × kdim` i32 — is scratch-pooled
+///    in both modes and deliberately not modeled here.)
+///  * **folded boundary staging** — a `DequantizeOp` whose producer passes
+///    [`folds_dequant`] has its float staging tensor emitted by the
+///    producer's fused epilogue one step earlier, so `stage{i}`'s birth
+///    moves from `i` to `i − 1`. At that step the stage buffer is exactly
+///    the size of the producer's dropped `facc{i−1}` strip (`out_elems ×
+///    4`), so fused liveness never exceeds unfused liveness at any step.
+pub fn arena_items_with(
+    def: &ModelDef,
+    cfg: DnnConfig,
+    training: bool,
+    fused: bool,
+) -> Vec<ArenaItem> {
     let n = def.layers.len();
     let prec = def.precisions(cfg);
     let shapes = def.shapes();
@@ -425,14 +564,51 @@ pub fn arena_items(def: &ModelDef, cfg: DnnConfig, training: bool) -> Vec<ArenaI
         let prev_prec = if i == 0 { prec[0] } else { prec[i - 1] };
         let crosses = prec[i] != prev_prec;
         if crosses {
-            // forward boundary staging buffer, transient within step i
+            // Forward boundary staging buffer, transient within step i. A
+            // folded dequantize boundary's float staging tensor is emitted
+            // by the producer's fused epilogue one step earlier, so its
+            // birth moves to the producer's step.
             let in_shape = if i == 0 { &def.input_shape } else { &shapes[i - 1] };
+            let folded = fused
+                && i > 0
+                && prec[i] == Precision::Float32
+                && folds_dequant(def, &prec, i - 1);
             items.push(ArenaItem {
                 name: format!("stage{i}"),
                 bytes: act_bytes(in_shape, prec[i]),
+                birth: if folded { i - 1 } else { i },
+                death: i,
+            });
+        }
+        // i32 accumulator strips of the unfused GEMM path: the forward
+        // requantize pass reads a `out_elems × 4`-byte strip at step i,
+        // and the backward-input pass (when it runs) an `in_elems × 4`-
+        // byte strip at bwd(i). Fused kernels requantize the register
+        // tile directly — no strip ever materializes.
+        let quant_gemm = prec[i] == Precision::Uint8
+            && match def.layers[i].kind {
+                LayerKind::Conv { geom, .. } => !geom.depthwise,
+                LayerKind::Linear { .. } => true,
+                _ => false,
+            };
+        if !fused && quant_gemm {
+            let out_elems: usize = shapes[i].iter().product();
+            items.push(ArenaItem {
+                name: format!("facc{i}"),
+                bytes: out_elems * 4,
                 birth: i,
                 death: i,
             });
+            if training && i > stop {
+                let in_elems: usize =
+                    (if i == 0 { &def.input_shape } else { &shapes[i - 1] }).iter().product();
+                items.push(ArenaItem {
+                    name: format!("bacc{i}"),
+                    bytes: in_elems * 4,
+                    birth: bwd_t(i),
+                    death: bwd_t(i),
+                });
+            }
         }
         if training {
             if matches!(def.layers[i].kind, LayerKind::MaxPool { .. }) && i >= stop {
@@ -482,9 +658,21 @@ pub fn arena_items(def: &ModelDef, cfg: DnnConfig, training: bool) -> Vec<ArenaI
     items
 }
 
-/// Arena placement of the planned schedule (see [`arena_items`]).
+/// Arena placement of the planned schedule in the default fusion mode
+/// (see [`arena_items`]).
 pub fn planned_arena(def: &ModelDef, cfg: DnnConfig, training: bool) -> ArenaPlan {
     allocate_arena(arena_items(def, cfg, training))
+}
+
+/// Arena placement of the planned schedule with an explicit fusion mode
+/// (see [`arena_items_with`]).
+pub fn planned_arena_with(
+    def: &ModelDef,
+    cfg: DnnConfig,
+    training: bool,
+    fused: bool,
+) -> ArenaPlan {
+    allocate_arena(arena_items_with(def, cfg, training, fused))
 }
 
 #[cfg(test)]
@@ -496,11 +684,51 @@ mod tests {
     fn plan_has_one_op_per_layer_plus_boundaries() {
         let def = models::mnist_cnn(&[1, 12, 12], 4);
         let n = def.layers.len();
-        assert_eq!(ExecPlan::compile(&def, DnnConfig::Uint8).num_ops(), n);
-        assert_eq!(ExecPlan::compile(&def, DnnConfig::Float32).num_ops(), n);
+        for fused in [false, true] {
+            assert_eq!(ExecPlan::compile_with(&def, DnnConfig::Uint8, fused).num_ops(), n);
+            assert_eq!(ExecPlan::compile_with(&def, DnnConfig::Float32, fused).num_ops(), n);
+        }
         // mixed crosses the precision boundary exactly once (after the
-        // last conv), adding exactly one dequantize boundary op
-        assert_eq!(ExecPlan::compile(&def, DnnConfig::Mixed).num_ops(), n + 1);
+        // last conv), adding exactly one dequantize boundary op — which
+        // the fusion pass folds into its (dense, quantized) producer
+        assert_eq!(ExecPlan::compile_with(&def, DnnConfig::Mixed, false).num_ops(), n + 1);
+        assert_eq!(ExecPlan::compile_with(&def, DnnConfig::Mixed, true).num_ops(), n);
+    }
+
+    #[test]
+    fn fused_plan_drops_gemm_accumulator_scratch() {
+        // The fused plan never materializes the fwd / bwd-input i32 GEMM
+        // strips; only the (smaller) trainable weight-gradient accumulator
+        // remains in scratch.
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let unfused = ExecPlan::compile_with(&def, DnnConfig::Uint8, false);
+        let fused = ExecPlan::compile_with(&def, DnnConfig::Uint8, true);
+        assert!(fused.scratch_spec().acc_i32 < unfused.scratch_spec().acc_i32);
+        assert!(fused.fused() && !unfused.fused());
+        // everything else is shared between the two modes
+        assert_eq!(fused.scratch_spec().col_u8, unfused.scratch_spec().col_u8);
+        assert_eq!(fused.scratch_spec().zeros_i32, unfused.scratch_spec().zeros_i32);
+    }
+
+    #[test]
+    fn fused_arena_drops_accumulator_strips() {
+        for def in [
+            models::mnist_cnn(&[1, 12, 12], 4),
+            models::mbednet(&[3, 16, 16], 5),
+            models::mcunet5fps(&[3, 32, 32], 4),
+        ] {
+            for cfg in [DnnConfig::Uint8, DnnConfig::Mixed] {
+                let uf = arena_items_with(&def, cfg, true, false);
+                let f = arena_items_with(&def, cfg, true, true);
+                assert!(uf.iter().any(|it| it.name.starts_with("facc")), "{} {cfg:?}", def.name);
+                assert!(f.iter().all(|it| !it.name.starts_with("facc")), "{} {cfg:?}", def.name);
+                assert!(f.iter().all(|it| !it.name.starts_with("bacc")), "{} {cfg:?}", def.name);
+            }
+            // float32 plans have no quantized GEMMs: identical timelines
+            let uf = arena_items_with(&def, DnnConfig::Float32, true, false);
+            let f = arena_items_with(&def, DnnConfig::Float32, true, true);
+            assert_eq!(uf.len(), f.len(), "{}", def.name);
+        }
     }
 
     #[test]

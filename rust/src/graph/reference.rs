@@ -144,5 +144,8 @@ pub fn forward_reference(
     }
 
     let logits = acts.last().unwrap().to_float().into_vec();
-    FwdTrace { input, acts, argmax, logits }
+    // The reference executor never records fused saturation counts —
+    // `measure_saturation` falls back to its activation sweep.
+    let sat = vec![None; acts.len()];
+    FwdTrace { input, acts, argmax, sat, logits }
 }

@@ -11,7 +11,7 @@
 //!
 //! Accuracy runs use each dataset's *reduced* shape; memory/latency/energy
 //! come from the memory planner and device cost model at the *paper*
-//! shape (DESIGN.md §6).
+//! shape (DESIGN.md §7).
 
 use crate::data::{DatasetSpec, Domain};
 use crate::device::{Cost, DeviceModel};

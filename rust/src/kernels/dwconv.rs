@@ -91,6 +91,38 @@ pub fn qdwconv2d_fwd(
     relu: bool,
     ops: &mut OpCounter,
 ) -> QTensor {
+    qdwconv2d_fwd_impl(x, w, bias, geom, out_qp, relu, ops).0
+}
+
+/// [`qdwconv2d_fwd`] that also returns the saturated-value count of the
+/// output (`q == 255`, plus `q == 0` when `relu` is off — the clipped-range
+/// telemetry the executor's range-adaptation sweep otherwise recomputes
+/// with a separate pass over the tensor). The depthwise engine has fused
+/// its requantize epilogue into the register tile since PR 5; this entry
+/// point exposes the tile-resident saturation count to the fused `ExecPlan`
+/// path. Output bytes and op accounting are identical to
+/// [`qdwconv2d_fwd`].
+pub fn qdwconv2d_fwd_fused(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
+    qdwconv2d_fwd_impl(x, w, bias, geom, out_qp, relu, ops)
+}
+
+fn qdwconv2d_fwd_impl(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
     assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
     assert_eq!(geom.cin, geom.cout, "depthwise conv has one filter per channel");
     let (h, wd) = (x.shape()[1], x.shape()[2]);
@@ -107,6 +139,8 @@ pub fn qdwconv2d_fwd(
 
     let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
     let od = out.values.data_mut();
+    let count_lo = !relu;
+    let mut sat = 0u64;
     for c in 0..geom.cout {
         let plane = &xd[c * h * wd..(c + 1) * h * wd];
         let wch = &wdat[c * khw..(c + 1) * khw];
@@ -154,7 +188,9 @@ pub fn qdwconv2d_fwd(
                 }
                 let orow = &mut od[obase + oy * ow + ox0..obase + oy * ow + ox0 + nrr];
                 for (o, &a) in orow.iter_mut().zip(acc[..nrr].iter()) {
-                    *o = requantize(a, mult, out_qp.zero_point, relu);
+                    let q = requantize(a, mult, out_qp.zero_point, relu);
+                    *o = q;
+                    sat += (q == 255 || (count_lo && q == 0)) as u64;
                 }
                 ox0 += nrr;
             }
@@ -164,7 +200,7 @@ pub fn qdwconv2d_fwd(
     ops.int_macs += geom.fwd_macs(h, wd);
     ops.int_ops += (geom.cout * oh * ow) as u64;
     ops.bytes += (x.len() + w.len() + geom.cout * oh * ow) as u64;
-    out
+    (out, sat)
 }
 
 /// Blocked float depthwise forward, value-identical to
@@ -965,6 +1001,37 @@ mod tests {
         let _ = qdwconv2d_bwd_input(&eq, &wq, &g, h, w, oqp, km, &mut scratch, &mut ops_m2);
         let _ = qdwconv2d_bwd_input(&eq, &wq, &g, h, w, oqp, None, &mut scratch, &mut ops_d2);
         assert_eq!(ops_m2.int_macs * 2, ops_d2.int_macs, "kept=50% must halve dX MACs");
+    }
+
+    /// The fused entry returns the same tensor as the plain forward plus a
+    /// saturation count matching a post-hoc sweep, for relu on and off.
+    #[test]
+    fn fused_fwd_saturation_count_matches_sweep() {
+        let mut rng = Pcg32::seeded(95);
+        let g = dw_geom(4, 3, 1, 1);
+        let (h, w) = (9, 9);
+        let (x, wt, b) = rand_dw_setup(&mut rng, &g, h, w);
+        let xq = QTensor::quantize(&x);
+        let wq = QTensor::quantize(&wt);
+        let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+        // Narrow range so saturation actually happens.
+        let oqp = QParams::from_min_max(-0.05, 0.05);
+        for relu in [false, true] {
+            let mut ops_u = OpCounter::new();
+            let mut ops_f = OpCounter::new();
+            let yu = qdwconv2d_fwd(&xq, &wq, &bq, &g, oqp, relu, &mut ops_u);
+            let (yf, sat) = qdwconv2d_fwd_fused(&xq, &wq, &bq, &g, oqp, relu, &mut ops_f);
+            assert_eq!(yu.values.data(), yf.values.data());
+            assert_eq!(ops_u, ops_f);
+            let want = yu
+                .values
+                .data()
+                .iter()
+                .filter(|&&v| v == 255 || (!relu && v == 0))
+                .count() as u64;
+            assert_eq!(sat, want, "relu={relu}");
+            assert!(sat > 0, "narrow range should saturate (relu={relu})");
+        }
     }
 
     /// Non-square depthwise kernels (the 1×k time-series mapping) run the

@@ -32,6 +32,8 @@
 //! spawned worker (i.e. per minibatch × worker) — in both cases the
 //! buffers are reused across every layer and sample they serve.
 
+use crate::quant::{requantize, QParams};
+
 /// Columns per output tile of the retained cache-blocked reference path
 /// (i32 accumulator row bytes ≈ 4·NC per m-row).
 const NC: usize = 256;
@@ -548,6 +550,138 @@ pub fn gemm_u8_i32(
     }
 }
 
+/// The fused quantized epilogue descriptor: everything a micro-kernel needs
+/// to map its i32 accumulator tile straight to uint8 output while the tile
+/// is still in registers — the requantization multiplier (Eq. 4), the
+/// output quantization parameters, and whether the layer's ReLU is folded
+/// into the clamp (Fig. 2b's monolithic QConv block).
+///
+/// Built once per kernel call by the layer ops; applying it per tile is
+/// bit-identical to running [`gemm_u8_i32`] into an i32 buffer followed by
+/// a separate [`requantize`] sweep (the retained unfused oracle path),
+/// because [`requantize`] is a pure per-element map.
+#[derive(Clone, Copy, Debug)]
+pub struct QEpilogue {
+    /// Requantization multiplier `s_a·s_b/s_out` (see
+    /// [`crate::quant::requant_multiplier`]).
+    pub mult: f32,
+    /// Output quantization parameters; the zero point anchors the folded
+    /// ReLU clamp.
+    pub qp: QParams,
+    /// Fold the layer's ReLU into the requantization clamp.
+    pub relu: bool,
+}
+
+/// [`gemm_u8_i32`] with the quantized epilogue fused into the tile
+/// writeout: each MR×NR accumulator tile is requantized to uint8 (bias add
+/// via `row_init`, ReLU clamp via `epi.relu`) while still in registers,
+/// so no `m·n` i32 intermediate ever materializes.
+///
+/// Two optional extras ride along on the same register tile:
+///
+///  * `dequant` — when `Some`, the float dequantization of every output
+///    byte is emitted alongside it (`epi.qp.dequantize(q)`), which is what
+///    lets the plan fold a following `DequantizeOp` into this kernel call
+///    (the fused producer stages the float activation directly);
+///  * the return value — the number of output values saturating the uint8
+///    range (always counting 255; counting 0 only for non-ReLU epilogues,
+///    whose lower clamp is a real saturation rather than the folded ReLU),
+///    exactly the per-layer telemetry `NativeModel::forward_adapt`
+///    otherwise gathers with a separate sweep.
+///
+/// Bit-identical to [`gemm_u8_i32`] + a separate [`requantize`] pass over
+/// the i32 result (property-tested), since i32 accumulation is exact and
+/// the epilogue is a pure per-element map.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_u8_i32_fused(
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &QEpilogue,
+    out: &mut [u8],
+    mut dequant: Option<&mut [f32]>,
+) -> u64 {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if let Some(d) = dequant.as_deref() {
+        assert_eq!(d.len(), m * n, "dequant emit shape mismatch");
+    }
+    if m == 0 || n == 0 {
+        return 0;
+    }
+    let count_lo = !epi.relu;
+    let mut sat = 0u64;
+    let mut mb = 0;
+    while mb < m {
+        let mrr = MR.min(m - mb);
+        let mut nb = 0;
+        while nb < n {
+            let nrr = NR.min(n - nb);
+            let mut acc = [[0i32; NR]; MR];
+            for (ii, row) in acc[..mrr].iter_mut().enumerate() {
+                row.fill(row_init[mb + ii]);
+            }
+            if mrr == MR && nrr == NR {
+                // full tile: constant loop bounds, fully unrollable
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + NR];
+                    for ii in 0..MR {
+                        let av = a[(mb + ii) * k + kk] as i32 - za;
+                        let ai = &mut acc[ii];
+                        for jj in 0..NR {
+                            ai[jj] += av * (brow[jj] as i32 - zb);
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + nrr];
+                    for ii in 0..mrr {
+                        let av = a[(mb + ii) * k + kk] as i32 - za;
+                        let ai = &mut acc[ii][..nrr];
+                        for (aj, &bv) in ai.iter_mut().zip(brow.iter()) {
+                            *aj += av * (bv as i32 - zb);
+                        }
+                    }
+                }
+            }
+            // epilogue on the register tile: requantize, optional dequant
+            // emit, saturation count — no i32 writeback
+            for ii in 0..mrr {
+                let base = (mb + ii) * n + nb;
+                let arow = &acc[ii][..nrr];
+                match dequant.as_deref_mut() {
+                    Some(d) => {
+                        for (jj, &av) in arow.iter().enumerate() {
+                            let q = requantize(av, epi.mult, epi.qp.zero_point, epi.relu);
+                            out[base + jj] = q;
+                            d[base + jj] = epi.qp.dequantize(q);
+                            sat += (q == 255 || (count_lo && q == 0)) as u64;
+                        }
+                    }
+                    None => {
+                        for (jj, &av) in arow.iter().enumerate() {
+                            let q = requantize(av, epi.mult, epi.qp.zero_point, epi.relu);
+                            out[base + jj] = q;
+                            sat += (q == 255 || (count_lo && q == 0)) as u64;
+                        }
+                    }
+                }
+            }
+            nb += nrr;
+        }
+        mb += mrr;
+    }
+    sat
+}
+
 /// The pre-micro-kernel cache-blocked integer GEMM (PR 1–3 compute core),
 /// retained verbatim as the property-test oracle and the bench baseline
 /// the micro-kernel path is measured against: NC×KC tiles, AXPY inner
@@ -779,6 +913,80 @@ mod tests {
                 let want = naive_gemm_i32(&a, za, &b, zb, &init, m, k, n);
                 if out != want {
                     return Err("tiled result differs from naive triple loop".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The fused epilogue must be bit-identical to the unfused sequence
+    /// (GEMM into i32, then a separate requantize sweep), its dequant emit
+    /// must equal `QParams::dequantize` of every output byte, and its
+    /// saturation count must match the separate telemetry sweep — for ReLU
+    /// and non-ReLU epilogues across tile-edge shapes.
+    #[test]
+    fn prop_fused_epilogue_matches_unfused_sequence() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| {
+                let m = 1 + r.below(9) as usize;
+                let k = 1 + r.below(100) as usize;
+                let n = 1 + r.below(80) as usize;
+                (m, k, n, r.next_u64())
+            },
+            |&(m, k, n, s)| {
+                let mut v = Vec::new();
+                for m2 in shrink_dim(m, 1) {
+                    v.push((m2, k, n, s));
+                }
+                for n2 in shrink_dim(n, 1) {
+                    v.push((m, k, n2, s));
+                }
+                v
+            },
+            |&(m, k, n, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+                let init: Vec<i32> = (0..m).map(|_| rng.below(1000) as i32 - 500).collect();
+                let (za, zb) = (rng.below(256) as i32, rng.below(256) as i32);
+                let qp = QParams::from_min_max(rng.uniform(-6.0, -0.1), rng.uniform(0.1, 6.0));
+                let epi = QEpilogue {
+                    mult: rng.uniform(1e-4, 0.5),
+                    qp,
+                    relu: rng.below(2) == 1,
+                };
+                // unfused oracle: plain GEMM then a separate requantize
+                // sweep and a separate saturation sweep
+                let mut acc = vec![0i32; m * n];
+                gemm_u8_i32(&a, za, &b, zb, &init, m, k, n, &mut acc);
+                let want: Vec<u8> =
+                    acc.iter().map(|&v| requantize(v, epi.mult, qp.zero_point, epi.relu)).collect();
+                let want_sat = want
+                    .iter()
+                    .filter(|&&q| q == 255 || (!epi.relu && q == 0))
+                    .count() as u64;
+
+                let mut out = vec![0u8; m * n];
+                let sat = gemm_u8_i32_fused(&a, za, &b, zb, &init, m, k, n, &epi, &mut out, None);
+                if out != want {
+                    return Err("fused output differs from unfused sequence".into());
+                }
+                if sat != want_sat {
+                    return Err(format!("fused sat {sat} != swept sat {want_sat}"));
+                }
+
+                let mut out2 = vec![0u8; m * n];
+                let mut deq = vec![0f32; m * n];
+                let sat2 = gemm_u8_i32_fused(
+                    &a, za, &b, zb, &init, m, k, n, &epi, &mut out2, Some(&mut deq),
+                );
+                if out2 != want || sat2 != want_sat {
+                    return Err("dequant-emitting variant diverged".into());
+                }
+                for (d, &q) in deq.iter().zip(out2.iter()) {
+                    if d.to_bits() != qp.dequantize(q).to_bits() {
+                        return Err("dequant emit differs from QParams::dequantize".into());
+                    }
                 }
                 Ok(())
             },

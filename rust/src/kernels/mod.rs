@@ -9,7 +9,7 @@
 //! Every kernel accounts its arithmetic into an [`OpCounter`]; the device
 //! model (`crate::device`) converts op counts into per-MCU cycles and energy
 //! (that is how the hardware study of Figs. 4b/5/6d/7b is simulated — see
-//! DESIGN.md §6).
+//! DESIGN.md §7).
 //!
 //! Numerics contract: the integer paths here are **bit-exact** with the
 //! Pallas kernels in `python/compile/kernels/` (same round-half-away-from-

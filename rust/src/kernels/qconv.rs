@@ -175,6 +175,83 @@ pub fn qconv2d_fwd_gemm(
     out
 }
 
+/// [`qconv2d_fwd_gemm`] with the quantized epilogue fused into the GEMM
+/// micro-kernel ([`gemm::gemm_u8_i32_fused`]): requantization, bias add and
+/// the folded ReLU run on the MR×NR accumulator tile while it is still in
+/// registers, so the `Cout·Oh·Ow` i32 accumulator buffer of the unfused
+/// path never materializes (the scratch request drops to the im2col packing
+/// alone).
+///
+/// `dequant`: when `Some`, the float dequantization of the output is
+/// emitted alongside it — the staging buffer of a `DequantizeOp` the plan
+/// folded into this producer. Returns the output plus the count of
+/// saturated output values (the telemetry `NativeModel::forward_adapt`
+/// otherwise gathers with a separate sweep; see
+/// [`gemm::gemm_u8_i32_fused`]).
+///
+/// Bit-identical to [`qconv2d_fwd_gemm`] (same GEMM core, same per-element
+/// epilogue map) with identical op accounting — the unfused kernel is
+/// retained as the parity oracle behind `TT_NO_FUSE=1`.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_fwd_gemm_fused(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    dequant: Option<&mut [f32]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+
+    let n = oh * ow;
+    let kdim = geom.cin * geom.kh * geom.kw;
+    let zx = x.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu,
+    };
+    let pointwise = geom.is_pointwise();
+
+    let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
+    let sat;
+    {
+        let (col_buf, _) = scratch.qconv_bufs(if pointwise { 0 } else { kdim * n }, 0);
+        let col: &[u8] = if pointwise {
+            x.values.data()
+        } else {
+            gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
+            col_buf
+        };
+        sat = gemm::gemm_u8_i32_fused(
+            w.values.data(),
+            zw,
+            col,
+            zx,
+            bias,
+            geom.cout,
+            kdim,
+            n,
+            &epi,
+            out.values.data_mut(),
+            dequant,
+        );
+    }
+
+    ops.int_macs += geom.fwd_macs(h, wd);
+    ops.int_ops += (geom.cout * n) as u64; // requantization
+    ops.bytes += (x.len() + w.len() + geom.cout * n) as u64;
+    (out, sat)
+}
+
 /// Error backprop through the conv (Eq. 1, quantized per Eq. 4): given the
 /// error `e` w.r.t. this layer's output (already ReLU-masked by the caller,
 /// see [`relu_bwd_mask_q`]), produce the quantized error w.r.t. its input.
@@ -365,6 +442,83 @@ pub fn qconv2d_bwd_input_gemm(
     out
 }
 
+/// [`qconv2d_bwd_input_gemm`] with the requantization epilogue fused into
+/// the GEMM micro-kernel: the `Cin·H·W` i32 accumulator of the unfused path
+/// never materializes. Bit-identical to the unfused kernel with identical
+/// op accounting (same GEMM core, same per-element epilogue map).
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_fused(
+    e: &QTensor,
+    w: &QTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu: false,
+    };
+    let kc = kept_count(keep, geom.cout);
+    let krow = kc * geom.kh * geom.kw;
+    let n = in_h * in_w;
+    let pointwise_dense = geom.is_pointwise() && keep.is_none();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (wt_full, col_buf, _, init) = scratch.qconv_bwd_bufs(
+            geom.cin * geom.cout * geom.kh * geom.kw,
+            if pointwise_dense { 0 } else { krow * n },
+            0,
+            geom.cin,
+        );
+        let wt_buf = &mut wt_full[..geom.cin * krow];
+        gemm::pack_wt_flip_u8(w.values.data(), geom, keep, wt_buf);
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                keep,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32_fused(
+            wt_buf,
+            zw,
+            col,
+            ze,
+            init,
+            geom.cin,
+            krow,
+            n,
+            &epi,
+            out.values.data_mut(),
+            None,
+        );
+    }
+
+    ops.int_macs += kc as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + w.len() + geom.cin * n) as u64;
+    out
+}
+
 /// Dense error backprop against a **pre-packed** flipped-transposed weight
 /// matrix `wt_pack[Cin, Cout·Kh·Kw]` (the plan-owned pack cache,
 /// `graph::packs`): bit-exact with [`qconv2d_bwd_input_gemm`] at
@@ -423,6 +577,80 @@ pub fn qconv2d_bwd_input_gemm_packed(
         for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
             *o = requantize(a, mult, out_qp.zero_point, false);
         }
+    }
+
+    ops.int_macs += geom.cout as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + w.len() + geom.cin * n) as u64;
+    out
+}
+
+/// [`qconv2d_bwd_input_gemm_packed`] with the requantization epilogue fused
+/// into the GEMM micro-kernel (see [`qconv2d_bwd_input_gemm_fused`]).
+/// Bit-identical to the unfused packed kernel with identical op accounting.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_packed_fused(
+    e: &QTensor,
+    w: &QTensor,
+    wt_pack: &[u8],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu: false,
+    };
+    let krow = geom.cout * geom.kh * geom.kw;
+    assert_eq!(wt_pack.len(), geom.cin * krow, "packed weight size");
+    let n = in_h * in_w;
+    let pointwise_dense = geom.is_pointwise();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (_, col_buf, _, init) = scratch.qconv_bwd_bufs(
+            0,
+            if pointwise_dense { 0 } else { krow * n },
+            0,
+            geom.cin,
+        );
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                None,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32_fused(
+            wt_pack,
+            zw,
+            col,
+            ze,
+            init,
+            geom.cin,
+            krow,
+            n,
+            &epi,
+            out.values.data_mut(),
+            None,
+        );
     }
 
     ops.int_macs += geom.cout as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
@@ -1109,6 +1337,98 @@ mod tests {
             let ys = qconv2d_fwd(&xq, &wq, &bq, &g, oqp, true, &mut ops);
             let yg = qconv2d_fwd_gemm(&xq, &wq, &bq, &g, oqp, true, &mut scratch, &mut ops);
             assert_eq!(ys.values.data(), yg.values.data(), "{cin}x{h}x{h} k{k}");
+        }
+    }
+
+    /// The fused forward / backward-input kernels must be bit-identical to
+    /// their unfused twins (values, op accounting), the fused forward's
+    /// dequant emit must equal a full `dequantize()` of the output, and the
+    /// returned saturation count must match a separate telemetry sweep.
+    #[test]
+    fn fused_kernels_bit_exact_with_unfused() {
+        let mut rng = Pcg32::seeded(21);
+        let mut scratch = crate::memplan::Scratch::new();
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        for &(cin, cout, k, stride, h, relu) in &[
+            (3usize, 5usize, 3usize, 1usize, 7usize, true),
+            (8, 6, 1, 1, 6, false),
+            (2, 4, 3, 2, 9, false),
+        ] {
+            let g = ConvGeom {
+                cin,
+                cout,
+                kh: k,
+                kw: k,
+                stride,
+                pad_h: k / 2,
+                pad_w: k / 2,
+                depthwise: false,
+            };
+            let (x, wt, b) = rand_setup(&mut rng, &g, h, h);
+            let xq = QTensor::quantize(&x);
+            let wq = QTensor::quantize(&wt);
+            let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+
+            let mut ops_u = OpCounter::new();
+            let mut ops_f = OpCounter::new();
+            let yu = qconv2d_fwd_gemm(&xq, &wq, &bq, &g, oqp, relu, &mut scratch, &mut ops_u);
+            let mut deq = vec![0f32; yu.len()];
+            let (yf, sat) = qconv2d_fwd_gemm_fused(
+                &xq,
+                &wq,
+                &bq,
+                &g,
+                oqp,
+                relu,
+                Some(&mut deq),
+                &mut scratch,
+                &mut ops_f,
+            );
+            assert_eq!(yu.values.data(), yf.values.data(), "fwd values");
+            assert_eq!(ops_u, ops_f, "fwd op accounting");
+            let want_deq = yu.dequantize();
+            for (d, w) in deq.iter().zip(want_deq.data()) {
+                assert_eq!(d.to_bits(), w.to_bits(), "dequant emit");
+            }
+            let want_sat = yu
+                .values
+                .data()
+                .iter()
+                .filter(|&&v| v == 255 || (!relu && v == 0))
+                .count() as u64;
+            assert_eq!(sat, want_sat, "saturation count");
+
+            let (oh, ow) = g.out_hw(h, h);
+            let mut e = TensorF32::zeros(&[cout, oh, ow]);
+            rng.fill_normal(e.data_mut(), 1.0);
+            let eq = QTensor::quantize(&e);
+            for keep in [None, Some((0..cout).map(|i| i % 2 == 0).collect::<Vec<bool>>())] {
+                let keep = keep.as_deref();
+                let mut ops_bu = OpCounter::new();
+                let mut ops_bf = OpCounter::new();
+                let eu = qconv2d_bwd_input_gemm(
+                    &eq, &wq, &g, h, h, oqp, keep, &mut scratch, &mut ops_bu,
+                );
+                let ef = qconv2d_bwd_input_gemm_fused(
+                    &eq, &wq, &g, h, h, oqp, keep, &mut scratch, &mut ops_bf,
+                );
+                assert_eq!(eu.values.data(), ef.values.data(), "bwd_input values");
+                assert_eq!(ops_bu, ops_bf, "bwd_input op accounting");
+            }
+
+            let krow = cout * k * k;
+            let mut pack = vec![0u8; cin * krow];
+            gemm::pack_wt_flip_u8(wq.values.data(), &g, None, &mut pack);
+            let mut ops_pu = OpCounter::new();
+            let mut ops_pf = OpCounter::new();
+            let pu = qconv2d_bwd_input_gemm_packed(
+                &eq, &wq, &pack, &g, h, h, oqp, &mut scratch, &mut ops_pu,
+            );
+            let pf = qconv2d_bwd_input_gemm_packed_fused(
+                &eq, &wq, &pack, &g, h, h, oqp, &mut scratch, &mut ops_pf,
+            );
+            assert_eq!(pu.values.data(), pf.values.data(), "packed bwd_input values");
+            assert_eq!(ops_pu, ops_pf, "packed bwd_input op accounting");
         }
     }
 

@@ -51,6 +51,62 @@ pub fn qlinear_fwd(
     out
 }
 
+/// [`qlinear_fwd`] with the quantized epilogue fused into the GEMM
+/// micro-kernel ([`gemm::gemm_u8_i32_fused`]): requantization, bias add and
+/// the folded ReLU run on the accumulator tile in registers, so the unfused
+/// path's heap-allocated `[Out]` i32 accumulator disappears entirely.
+///
+/// `dequant`: when `Some`, the float dequantization of the output is
+/// emitted alongside it (a plan-folded `DequantizeOp`'s staging buffer).
+/// Returns the output plus the saturated-value count (see
+/// [`gemm::gemm_u8_i32_fused`]). Bit-identical to [`qlinear_fwd`] with
+/// identical op accounting — the unfused kernel is the `TT_NO_FUSE=1`
+/// parity oracle.
+pub fn qlinear_fwd_fused(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    out_qp: QParams,
+    relu: bool,
+    dequant: Option<&mut [f32]>,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
+    let n_in = x.len();
+    let n_out = w.shape()[0];
+    assert_eq!(w.shape()[1], n_in, "weight/input dims mismatch");
+    assert_eq!(bias.len(), n_out);
+
+    let zx = x.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu,
+    };
+    let xd = x.values.data();
+    let wd = w.values.data();
+
+    let mut out = QTensor::zeros(&[n_out], out_qp);
+    let sat = gemm::gemm_u8_i32_fused(
+        wd,
+        zw,
+        xd,
+        zx,
+        bias,
+        n_out,
+        n_in,
+        1,
+        &epi,
+        out.values.data_mut(),
+        dequant,
+    );
+
+    ops.int_macs += (n_out * n_in) as u64;
+    ops.int_ops += n_out as u64;
+    ops.bytes += (n_in + n_out * n_in + n_out) as u64;
+    (out, sat)
+}
+
 /// Error backprop: `e_in = Wᵀ · e_out`, quantized (Eq. 4). `keep` masks
 /// output rows (sparse updates).
 pub fn qlinear_bwd_input(
@@ -135,6 +191,61 @@ pub fn qlinear_bwd_input_gemm(
         for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
             *o = requantize(a, mult, out_qp.zero_point, false);
         }
+    }
+
+    ops.int_macs += kept * n_in as u64;
+    ops.int_ops += n_in as u64;
+    ops.bytes += (n_out + n_out * n_in + n_in) as u64;
+    out
+}
+
+/// [`qlinear_bwd_input_gemm`] with the requantize epilogue fused into the
+/// GEMM micro-kernel: the `[In]` i32 accumulator strip never materializes
+/// (only the masked `e` scratch copy remains). Bit-exact with both unfused
+/// backward kernels, with identical op accounting.
+pub fn qlinear_bwd_input_gemm_fused(
+    e: &QTensor,
+    w: &QTensor,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let n_out = e.len();
+    let n_in = w.shape()[1];
+    assert_eq!(w.shape()[0], n_out);
+    let ze = e.qp.zero_point;
+    let zw = w.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu: false,
+    };
+    let kept = kept_count(keep, n_out) as u64;
+
+    let mut out = QTensor::zeros(&[n_in], out_qp);
+    {
+        let (_, ecopy, _, init) = scratch.qconv_bwd_bufs(0, n_out, 0, 1);
+        let zq = e.qp.qzero();
+        for (dst, (i, &src)) in ecopy.iter_mut().zip(e.values.data().iter().enumerate()) {
+            *dst = match keep {
+                Some(k) if !k[i] => zq,
+                _ => src,
+            };
+        }
+        gemm::gemm_u8_i32_fused(
+            ecopy,
+            ze,
+            w.values.data(),
+            zw,
+            init,
+            1,
+            n_out,
+            n_in,
+            &epi,
+            out.values.data_mut(),
+            None,
+        );
     }
 
     ops.int_macs += kept * n_in as u64;
@@ -391,6 +502,53 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The fused kernels are bit-exact with the unfused oracles: output
+    /// bytes, op accounting, the emitted dequantization and the saturation
+    /// count all match a post-hoc sweep over the unfused result.
+    #[test]
+    fn fused_kernels_bit_exact_with_unfused() {
+        let mut rng = Pcg32::seeded(77);
+        for &(n_in, n_out, relu) in &[(32usize, 10usize, true), (17, 23, false), (1, 1, true)] {
+            let (x, w, b) = rand_case(&mut rng, n_in, n_out);
+            let xq = QTensor::quantize(&x);
+            let wq = QTensor::quantize(&w);
+            let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+            let oqp = QParams::from_min_max(-2.0, 2.0);
+
+            let mut ops_u = OpCounter::new();
+            let mut ops_f = OpCounter::new();
+            let yu = qlinear_fwd(&xq, &wq, &bq, oqp, relu, &mut ops_u);
+            let mut deq = vec![0f32; n_out];
+            let (yf, sat) =
+                qlinear_fwd_fused(&xq, &wq, &bq, oqp, relu, Some(&mut deq), &mut ops_f);
+            assert_eq!(yu.values.data(), yf.values.data());
+            assert_eq!(ops_u, ops_f);
+            assert_eq!(deq, yu.dequantize().data());
+            let want_sat = yu
+                .values
+                .data()
+                .iter()
+                .filter(|&&v| v == 255 || (!relu && v == 0))
+                .count() as u64;
+            assert_eq!(sat, want_sat);
+
+            let mut e = TensorF32::zeros(&[n_out]);
+            rng.fill_normal(e.data_mut(), 1.0);
+            let eq = QTensor::quantize(&e);
+            let mut scratch = crate::memplan::Scratch::new();
+            for keep in [None, Some((0..n_out).map(|i| i % 2 == 0).collect::<Vec<_>>())] {
+                let keep = keep.as_deref();
+                let mut ops_u = OpCounter::new();
+                let mut ops_f = OpCounter::new();
+                let eu = qlinear_bwd_input_gemm(&eq, &wq, oqp, keep, &mut scratch, &mut ops_u);
+                let ef =
+                    qlinear_bwd_input_gemm_fused(&eq, &wq, oqp, keep, &mut scratch, &mut ops_f);
+                assert_eq!(eu.values.data(), ef.values.data());
+                assert_eq!(ops_u, ops_f);
+            }
+        }
     }
 
     #[test]

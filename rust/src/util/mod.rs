@@ -1,6 +1,6 @@
 //! Shared utilities: PRNG, statistics, JSON, CLI parsing, a property-test
 //! driver and the bench harness. All hand-rolled — the offline build
-//! environment only ships the vendored crate set (see DESIGN.md §6).
+//! environment only ships the vendored crate set (see DESIGN.md §7).
 
 pub mod argparse;
 pub mod bench;

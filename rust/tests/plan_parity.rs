@@ -299,3 +299,197 @@ fn planned_peak_consistent_between_plan_and_memplan() {
     assert_eq!(rep.planned_peak_bytes, plan.planned_peak_bytes);
     assert!(plan.planned_peak_bytes > 0);
 }
+
+// ---------------------------------------------------------------------------
+// Fused-epilogue plan vs the retained unfused oracle
+// ---------------------------------------------------------------------------
+
+/// Deploy the same float masters twice — once with the fused-epilogue plan,
+/// once with the unfused oracle plan — from one calibration.
+fn build_pair(
+    name: &str,
+    shape: &[usize; 3],
+    classes: usize,
+    cfg: DnnConfig,
+    seed: u64,
+) -> (NativeModel, NativeModel, Vec<TensorF32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let def = models::by_name(name, shape, classes).expect("known model");
+    let fp = FloatParams::init(&def, &mut rng);
+    let xs: Vec<TensorF32> = (0..3)
+        .map(|_| {
+            let mut x = TensorF32::zeros(shape);
+            rng.fill_normal(x.data_mut(), 1.0);
+            x
+        })
+        .collect();
+    let calib = calibrate(&def, &fp, &xs[..2]);
+    let fused = NativeModel::build_with_fusion(def.clone(), cfg, &fp, &calib, true);
+    let unfused = NativeModel::build_with_fusion(def, cfg, &fp, &calib, false);
+    (fused, unfused, xs)
+}
+
+fn assert_pair_forward(mf: &NativeModel, mu: &NativeModel, x: &TensorF32, tag: &str) {
+    let mut s1 = Scratch::new();
+    let mut s2 = Scratch::new();
+    let mut o1 = OpCounter::new();
+    let mut o2 = OpCounter::new();
+    let t1 = mf.forward_in(x, &mut s1, &mut o1);
+    let t2 = mu.forward_in(x, &mut s2, &mut o2);
+    assert_eq!(o1, o2, "{tag}: fused forward op counts diverged from oracle");
+    let l1: Vec<u32> = t1.logits.iter().map(|v| v.to_bits()).collect();
+    let l2: Vec<u32> = t2.logits.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(l1, l2, "{tag}: fused logits diverged from oracle");
+    assert_eq!(act_bits(&t1.input), act_bits(&t2.input), "{tag}: input act diverged");
+    for (i, (a, b)) in t1.acts.iter().zip(t2.acts.iter()).enumerate() {
+        assert_eq!(a.shape(), b.shape(), "{tag}: act {i} shape diverged");
+        assert_eq!(act_bits(a), act_bits(b), "{tag}: act {i} diverged");
+    }
+    assert_eq!(t1.argmax, t2.argmax, "{tag}: pool argmax diverged");
+    // The oracle plan never records kernel saturation counts.
+    assert!(t2.sat.iter().all(|s| s.is_none()), "{tag}: oracle trace must carry no sat counts");
+}
+
+fn assert_pair_backward(
+    mf: &NativeModel,
+    mu: &NativeModel,
+    x: &TensorF32,
+    sparse: bool,
+    tag: &str,
+) {
+    let mut s1 = Scratch::new();
+    let mut s2 = Scratch::new();
+    let mut o1 = OpCounter::new();
+    let mut o2 = OpCounter::new();
+    let t1 = mf.forward_in(x, &mut s1, &mut o1);
+    let t2 = mu.forward_in(x, &mut s2, &mut o2);
+    let mut throwaway = OpCounter::new();
+    let (loss, _, err) = softmax::softmax_ce(&t1.logits, 0, &mut throwaway);
+    let mut obs1 = mf.err_obs.clone();
+    let mut obs2 = mu.err_obs.clone();
+    let (b1, b2) = if sparse {
+        let mut ctl1 = DynamicSparse::new(0.4, 1.0);
+        let mut ctl2 = DynamicSparse::new(0.4, 1.0);
+        ctl1.seed_max_loss(loss * 4.0 + 1.0);
+        ctl2.seed_max_loss(loss * 4.0 + 1.0);
+        ctl1.begin_sample(loss);
+        ctl2.begin_sample(loss);
+        let b1 = mf.backward_with(&t1, err.clone(), &mut ctl1, &mut obs1, &mut s1, &mut o1);
+        let b2 = mu.backward_with(&t2, err, &mut ctl2, &mut obs2, &mut s2, &mut o2);
+        assert_eq!(ctl1.kept, ctl2.kept, "{tag}: controller kept totals diverged");
+        assert_eq!(ctl1.total, ctl2.total, "{tag}: controller totals diverged");
+        (b1, b2)
+    } else {
+        let b1 = mf.backward_with(&t1, err.clone(), &mut DenseUpdates, &mut obs1, &mut s1, &mut o1);
+        let b2 = mu.backward_with(&t2, err, &mut DenseUpdates, &mut obs2, &mut s2, &mut o2);
+        (b1, b2)
+    };
+    assert_eq!(o1, o2, "{tag}: fused fwd+bwd op counts diverged from oracle");
+    assert_eq!(b1.grads.len(), b2.grads.len(), "{tag}");
+    for (i, (ga, gb)) in b1.grads.iter().zip(b2.grads.iter()).enumerate() {
+        match (ga, gb) {
+            (Some(ga), Some(gb)) => {
+                let wa: Vec<u32> = ga.gw.data().iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u32> = gb.gw.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(wa, wb, "{tag}: layer {i} weight grads diverged");
+                let ba: Vec<u32> = ga.gb.data().iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = gb.gb.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ba, bb, "{tag}: layer {i} bias grads diverged");
+                assert_eq!(ga.kept, gb.kept, "{tag}: layer {i} kept accounting diverged");
+            }
+            (None, None) => {}
+            _ => panic!("{tag}: layer {i} gradient presence diverged"),
+        }
+    }
+    for (i, (a, b)) in obs1.iter().zip(obs2.iter()).enumerate() {
+        assert_eq!(a.range(), b.range(), "{tag}: observer {i} diverged");
+    }
+}
+
+/// The fused-epilogue plan is bit-identical to the retained unfused oracle:
+/// every model × configuration, dense updates and §III-B sparse masks —
+/// logits, activations, argmaxes, gradients, observer states and
+/// `OpCounter` totals all match exactly.
+#[test]
+fn fused_plan_matches_unfused_oracle() {
+    for (name, shape, classes) in CASES {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let (mf, mu, xs) = build_pair(name, &shape, classes, cfg, 0xF00D);
+            assert!(mf.plan().fused(), "{name}/{cfg:?}: pair must compile one fused plan");
+            assert!(!mu.plan().fused(), "{name}/{cfg:?}: pair must compile one oracle plan");
+            for (k, x) in xs.iter().enumerate() {
+                let tag = format!("{name}/{cfg:?}/fused-vs-oracle/sample{k}");
+                assert_pair_forward(&mf, &mu, x, &tag);
+                assert_pair_backward(&mf, &mu, x, false, &tag);
+                assert_pair_backward(&mf, &mu, x, true, &tag);
+            }
+        }
+    }
+}
+
+/// Folding the boundary ops and dropping the i32 accumulator strips
+/// shrinks the liveness-planned arena: the fused plan's
+/// `planned_peak_bytes` is strictly smaller for every quantized
+/// configuration, and exactly equal for the float32 configuration (which
+/// has no quantized GEMMs to fuse).
+#[test]
+fn fused_plan_shrinks_planned_peak() {
+    for (name, shape, classes) in CASES {
+        let def = models::by_name(name, &shape, classes).expect("known model");
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed] {
+            let uf = tinytrain::graph::plan::ExecPlan::compile_with(&def, cfg, false);
+            let f = tinytrain::graph::plan::ExecPlan::compile_with(&def, cfg, true);
+            assert!(
+                f.planned_peak_bytes < uf.planned_peak_bytes,
+                "{name}/{cfg:?}: fused peak {} must be strictly below unfused peak {}",
+                f.planned_peak_bytes,
+                uf.planned_peak_bytes
+            );
+        }
+        let uf = tinytrain::graph::plan::ExecPlan::compile_with(&def, DnnConfig::Float32, false);
+        let f = tinytrain::graph::plan::ExecPlan::compile_with(&def, DnnConfig::Float32, true);
+        assert_eq!(
+            f.planned_peak_bytes, uf.planned_peak_bytes,
+            "{name}/Float32: fusion must not change the float arena"
+        );
+    }
+}
+
+/// Telemetry parity (op-count regression): the training-path forward with
+/// activation-range adaptation consumes the fused kernels' saturation
+/// counts instead of re-sweeping activations, and must report the same
+/// `OpCounter` totals, the same adapted quantization parameters and the
+/// same logits as the unfused oracle across a drifting multi-sample run.
+#[test]
+fn fused_telemetry_matches_unfused_oracle() {
+    for (name, shape, classes) in CASES {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed] {
+            let (mut mf, mut mu, xs) = build_pair(name, &shape, classes, cfg, 0xADA7);
+            let mut of = OpCounter::new();
+            let mut ou = OpCounter::new();
+            for (k, x) in xs.iter().enumerate() {
+                let tf = mf.forward_adapt(x, &mut of);
+                let tu = mu.forward_adapt(x, &mut ou);
+                let lf: Vec<u32> = tf.logits.iter().map(|v| v.to_bits()).collect();
+                let lu: Vec<u32> = tu.logits.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(lf, lu, "{name}/{cfg:?}/adapt/sample{k}: logits diverged");
+                assert!(
+                    tf.sat.iter().any(|s| s.is_some()),
+                    "{name}/{cfg:?}: fused trace must record kernel saturation counts"
+                );
+            }
+            assert_eq!(of, ou, "{name}/{cfg:?}: adaptation op totals diverged");
+            for (i, (a, b)) in mf.act_qp.iter().zip(mu.act_qp.iter()).enumerate() {
+                assert_eq!(
+                    a.scale.to_bits(),
+                    b.scale.to_bits(),
+                    "{name}/{cfg:?}: adapted scale {i} diverged"
+                );
+                assert_eq!(
+                    a.zero_point, b.zero_point,
+                    "{name}/{cfg:?}: adapted zero point {i} diverged"
+                );
+            }
+        }
+    }
+}
