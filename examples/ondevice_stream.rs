@@ -34,14 +34,17 @@ fn main() {
 
     let mut opt = FqtSgd::new(&model, 0.01, 8);
     let sparsity = Sparsity::Dynamic(DynamicSparse::new(0.5, 1.0));
-    let mut coord = Coordinator::new(
-        model,
-        device::imxrt1062(),
-        &mut opt,
-        sparsity,
-        CoordinatorConfig { replay_capacity: 48, max_steps_per_gap: 3, warmup_samples: 8 },
-        seed,
-    );
+    let mut coord = Coordinator::builder(model, device::imxrt1062(), &mut opt)
+        .sparsity(sparsity)
+        .config(
+            CoordinatorConfig::builder()
+                .replay_capacity(48)
+                .max_steps_per_gap(3)
+                .warmup_samples(8)
+                .build(),
+        )
+        .seed(seed)
+        .build();
 
     // phase 1: domain A only
     println!("phase 1: {} arrivals from domain A @10 Hz", n / 2);

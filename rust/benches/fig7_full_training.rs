@@ -54,7 +54,7 @@ fn main() {
         let mut rng = tinytrain::util::prng::Pcg32::seeded(9);
         let dom = tinytrain::data::Domain::new(&spec, spec.reduced_shape, 9);
         let (split, _): (Split, Split) = dom.splits(2, 0, &mut rng);
-        let mem = tinytrain::memplan::plan(&model.def.clone(), cfg, true);
+        let mem = tinytrain::memplan::plan(&model.shared.def.clone(), cfg, true);
         for dev in device::all_devices() {
             let (f, b) = harness::step_costs(&mut model, &split, &dev, 1.0);
             let fits = dev.fits(mem.total_ram(), mem.flash);

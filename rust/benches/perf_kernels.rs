@@ -6,7 +6,14 @@
 //! Knobs: TT_PERF_REPS (default 10), TT_PERF_BATCH (default 8),
 //! TT_WORKERS (default: one per available core, capped at the batch).
 
-use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, NativeModel};
+use std::sync::Arc;
+
+use tinytrain::config::RunConfig;
+use tinytrain::coordinator::fleet::{FleetConfig, FleetCoordinator};
+use tinytrain::coordinator::CoordinatorConfig;
+use tinytrain::data::{spec_by_name, Domain};
+use tinytrain::device;
+use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, ModelArtifacts, NativeModel};
 use tinytrain::graph::plan::ExecPlan;
 use tinytrain::graph::{models, DnnConfig};
 use tinytrain::kernels::{dwconv, fconv, gemm, qconv, qlinear, softmax, ConvGeom, OpCounter};
@@ -792,6 +799,89 @@ fn main() {
         ("train_pass_seconds", Json::Num(tstep)),
     ]));
 
+    // §Tentpole (PR 7): fleet-scale multi-tenant training — N independent
+    // tenant sessions adapting over one shared deployment
+    // (`coordinator::fleet`). MbedNet with its trainable tail, so the
+    // shared artifacts (full weights + activation plan) dominate what an
+    // independent per-device deployment would replicate. Each tenant's
+    // stream shifts domain mid-way; the rows carry fleet throughput
+    // (tenants/s, steps/s), the per-tenant session overhead (CoW deltas +
+    // replay — asserted against N× full-model cost by the
+    // `memory_ratio_vs_independent` floor in `bench_gate`,
+    // TT_BENCH_GATE_FLEET_FLOOR) and the aggregate online accuracy under
+    // per-tenant drift.
+    let fspec = spec_by_name("cifar10").expect("dataset registry");
+    let mut frng = Pcg32::seeded(21);
+    let fdef = models::mbednet(&[3, 12, 12], fspec.classes);
+    let ffp = FloatParams::init(&fdef, &mut frng);
+    let fcal = Domain::new(&fspec, [3, 12, 12], 21).splits(1, 0, &mut frng).0;
+    let fcalib = calibrate(&fdef, &ffp, &fcal.xs);
+    let fshared = Arc::new(ModelArtifacts::deploy(fdef, DnnConfig::Uint8, &ffp, &fcalib));
+    let fleet_max = env_usize("TT_FLEET_TENANTS", 10_000).max(1);
+    let mut fleet_rows: Vec<Json> = Vec::new();
+    for &(n, arrivals) in &[(1usize, 40usize), (100, 6), (fleet_max, 2)] {
+        let cfg = FleetConfig::builder()
+            .tenants(n)
+            .arrivals_per_tenant(arrivals)
+            .mean_gap_s(0.05)
+            .shift_at(arrivals.div_ceil(2))
+            .session(
+                CoordinatorConfig::builder()
+                    .replay_capacity(4)
+                    .max_steps_per_gap(1)
+                    .warmup_samples(1)
+                    .build(),
+            )
+            .seed(23)
+            .build();
+        let run_cfg = RunConfig::builder().workers(workers).build();
+        let dom = Domain::new(&fspec, [3, 12, 12], 21);
+        let mut fleet =
+            FleetCoordinator::new(Arc::clone(&fshared), device::imxrt1062(), dom, run_cfg, cfg);
+        let t0 = std::time::Instant::now();
+        let rep = fleet.run();
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let steps_per_sec = rep.aggregate.train_steps as f64 / wall;
+        let tenants_per_sec = n as f64 / wall;
+        tab.row(&[
+            format!("fleet {n} tenants x{workers} thr"),
+            format!("mbednet 3x12x12, {arrivals} arrivals"),
+            fmt_duration(wall),
+            String::new(),
+        ]);
+        let row = Json::obj(vec![
+            ("kernel", Json::str("fleet_session")),
+            ("shape", Json::str(&format!("tenants={n}"))),
+            ("tenants", Json::Num(n as f64)),
+            ("arrivals_per_tenant", Json::Num(arrivals as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("wall_seconds", Json::Num(wall)),
+            ("steps_per_sec", Json::Num(steps_per_sec)),
+            ("tenants_per_sec", Json::Num(tenants_per_sec)),
+            ("train_steps", Json::Num(rep.aggregate.train_steps as f64)),
+            ("online_accuracy", Json::Num(rep.aggregate.online_accuracy() as f64)),
+            ("shared_bytes", Json::Num(rep.shared_bytes as f64)),
+            ("per_tenant_bytes", Json::Num(rep.per_tenant_bytes() as f64)),
+            (
+                "optimizer_bytes_per_tenant",
+                Json::Num(rep.optimizer_bytes as f64 / n as f64),
+            ),
+            ("memory_ratio_vs_independent", Json::Num(rep.memory_ratio())),
+        ]);
+        fleet_rows.push(row.clone());
+        sink.push(row);
+        println!(
+            "fleet {n} tenants: {:.0} steps/s, {:.1} tenants/s, {}B/tenant (shared {}B), \
+             {:.2}x vs independent, online acc {:.3}",
+            steps_per_sec,
+            tenants_per_sec,
+            rep.per_tenant_bytes(),
+            rep.shared_bytes,
+            rep.memory_ratio(),
+            rep.aggregate.online_accuracy()
+        );
+    }
+
     tab.print();
 
     // PJRT artifact step latency, if built with the pjrt feature and the
@@ -835,6 +925,7 @@ fn main() {
         ("gemm_micro_vs_tiled", Json::Arr(micro_rows)),
         ("gemm_fused_epilogue", Json::Arr(fused_rows)),
         ("dwconv_scalar_vs_blocked", Json::Arr(dw_rows)),
+        ("fleet_sessions", Json::Arr(fleet_rows)),
         (
             "pack_cache",
             Json::obj(vec![

@@ -23,6 +23,12 @@
 //!     tile writeout does strictly less memory traffic than the retained
 //!     GEMM + requantization sweep, so parity-on-average is the floor on
 //!     any hardware; no absolute times are involved.
+//!     Likewise **fleet sharing floor** — every `fleet_session` row with
+//!     ≥ 100 tenants must report `memory_ratio_vs_independent` ≥
+//!     `TT_BENCH_GATE_FLEET_FLOOR` (default 1.5): per-tenant memory is
+//!     session deltas + replay, so N independent deployments must cost a
+//!     healthy multiple of the shared-artifact fleet (byte accounting,
+//!     no wall clock).
 //!  4. **baseline diff** — per matching row key, `*seconds*` fields may
 //!     grow at most `tol`× over the baseline and `*speedup*` fields may
 //!     shrink at most `tol`× under it. Rows present on only one side are
@@ -33,7 +39,8 @@
 //!
 //! Knobs: `TT_BENCH_GATE_TOL` (default 2.0 — generous; CI runners are
 //! noisy), `TT_BENCH_GATE_FUSED_FLOOR` (default 1.0) for the
-//! fused-epilogue geometric-mean floor, and `TT_BENCH_GATE_ABS=0` to skip
+//! fused-epilogue geometric-mean floor, `TT_BENCH_GATE_FLEET_FLOOR`
+//! (default 1.5) for the fleet sharing floor, and `TT_BENCH_GATE_ABS=0` to skip
 //! the absolute `*seconds*` comparisons when diffing runs from
 //! incomparable hardware.
 //!
@@ -63,6 +70,20 @@ fn fused_floor() -> f64 {
         .ok()
         .and_then(|v| v.parse::<f64>().ok())
         .unwrap_or(1.0)
+        .max(0.0)
+}
+
+/// Floor on `memory_ratio_vs_independent` for every `fleet_session` row
+/// with ≥ 100 tenants (machine-independent: the ratio is pure byte
+/// accounting — N independent deployments over the shared-artifact
+/// fleet). At scale the shared weights + activation plan must be
+/// amortized, so the ratio sits well above 1; a collapse toward 1 means
+/// per-tenant sessions started duplicating shared deployment state.
+fn fleet_floor() -> f64 {
+    std::env::var("TT_BENCH_GATE_FLEET_FLOOR")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1.5)
         .max(0.0)
 }
 
@@ -168,6 +189,35 @@ fn main() -> ExitCode {
                 "fused-epilogue geomean speedup {geomean:.3} below the {floor} floor \
                  (TT_BENCH_GATE_FUSED_FLOOR)"
             ));
+        }
+    }
+
+    // 3b. fleet per-tenant-overhead floor: at ≥ 100 tenants the shared
+    // deployment must actually be shared — per-tenant memory is session
+    // deltas + replay, so N independent full deployments have to cost a
+    // healthy multiple of the fleet. Byte accounting, no wall clock.
+    let fleet_ratios: Vec<(f64, f64)> = fresh
+        .iter()
+        .filter(|row| row.get("kernel").as_str() == Some("fleet_session"))
+        .filter_map(|row| {
+            let tenants = row.get("tenants").as_f64()?;
+            let ratio = row.get("memory_ratio_vs_independent").as_f64()?;
+            (tenants >= 100.0).then_some((tenants, ratio))
+        })
+        .collect();
+    if !fleet_ratios.is_empty() {
+        let floor = fleet_floor();
+        for &(tenants, ratio) in &fleet_ratios {
+            println!(
+                "bench_gate: fleet {tenants:.0} tenants — memory ratio {ratio:.3} vs \
+                 independent (floor {floor})"
+            );
+            if ratio < floor {
+                failures.push(format!(
+                    "fleet_session tenants={tenants:.0}: memory_ratio_vs_independent \
+                     {ratio:.3} below the {floor} floor (TT_BENCH_GATE_FLEET_FLOOR)"
+                ));
+            }
         }
     }
 

@@ -1,0 +1,120 @@
+//! Typed run configuration for the training/coordinator path.
+//!
+//! Every scaling knob the harness, the benches and the fleet coordinator
+//! consume lives in [`RunConfig`]. The environment (`TT_EPOCHS`,
+//! `TT_RUNS`, `TT_TRAIN_PC`, `TT_TEST_PC`, `TT_WORKERS`) is parsed in
+//! exactly one place — [`RunConfig::from_env`] — and feeds the same
+//! builder any programmatic caller uses, so CLI behavior and in-process
+//! construction can never drift apart. `harness::Knobs` is a re-export of
+//! this type, so existing call sites keep compiling unchanged.
+
+use crate::util::bench::env_usize;
+
+/// Scaling knobs for a training run (the harness) or a fleet run (the
+/// multi-tenant coordinator). Construct via [`RunConfig::builder`] or
+/// [`RunConfig::from_env`]; a literal works too, since the benches build
+/// reduced-scale variants with struct-update syntax.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunConfig {
+    /// On-device training epochs (default 5; paper: 20/50).
+    pub epochs: usize,
+    /// Independent repetitions (default 2; paper: 5).
+    pub runs: usize,
+    /// Train samples per class (default 3).
+    pub train_pc: usize,
+    /// Test samples per class (default 2).
+    pub test_pc: usize,
+    /// Worker threads for the batched execution engine and the fleet
+    /// coordinator (1 = sequential; any value yields bit-identical
+    /// results by the determinism contract — see `train_batched` and
+    /// `coordinator::fleet`).
+    pub workers: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig { epochs: 5, runs: 2, train_pc: 3, test_pc: 2, workers: 1 }
+    }
+}
+
+impl RunConfig {
+    pub fn builder() -> RunConfigBuilder {
+        RunConfigBuilder { cfg: RunConfig::default() }
+    }
+
+    /// The single environment parse site: read every `TT_*` scaling knob
+    /// and feed it through the validated builder.
+    pub fn from_env() -> RunConfig {
+        RunConfig::builder()
+            .epochs(env_usize("TT_EPOCHS", 5))
+            .runs(env_usize("TT_RUNS", 2))
+            .train_pc(env_usize("TT_TRAIN_PC", 3))
+            .test_pc(env_usize("TT_TEST_PC", 2))
+            .workers(env_usize("TT_WORKERS", 1))
+            .build()
+    }
+}
+
+/// Builder for [`RunConfig`] with validated defaults ([`build`] clamps
+/// `workers` to at least 1, matching the historical `TT_WORKERS`
+/// handling).
+///
+/// [`build`]: RunConfigBuilder::build
+#[derive(Clone, Debug)]
+pub struct RunConfigBuilder {
+    cfg: RunConfig,
+}
+
+impl RunConfigBuilder {
+    pub fn epochs(mut self, v: usize) -> Self {
+        self.cfg.epochs = v;
+        self
+    }
+
+    pub fn runs(mut self, v: usize) -> Self {
+        self.cfg.runs = v;
+        self
+    }
+
+    pub fn train_pc(mut self, v: usize) -> Self {
+        self.cfg.train_pc = v;
+        self
+    }
+
+    pub fn test_pc(mut self, v: usize) -> Self {
+        self.cfg.test_pc = v;
+        self
+    }
+
+    pub fn workers(mut self, v: usize) -> Self {
+        self.cfg.workers = v;
+        self
+    }
+
+    pub fn build(self) -> RunConfig {
+        let mut cfg = self.cfg;
+        cfg.workers = cfg.workers.max(1);
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_applies_defaults_and_overrides() {
+        let d = RunConfig::default();
+        assert_eq!(d, RunConfig { epochs: 5, runs: 2, train_pc: 3, test_pc: 2, workers: 1 });
+        let c = RunConfig::builder().epochs(9).workers(4).build();
+        assert_eq!(c.epochs, 9);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.runs, d.runs);
+    }
+
+    #[test]
+    fn build_clamps_workers_to_at_least_one() {
+        let c = RunConfig::builder().workers(0).build();
+        assert_eq!(c.workers, 1);
+    }
+}

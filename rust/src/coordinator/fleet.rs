@@ -1,0 +1,568 @@
+//! Fleet-scale multi-tenant coordinator: N independent device sessions
+//! driven concurrently over the persistent [`WorkerPool`].
+//!
+//! The paper's motivating scenario (§I) — and the "millions of devices"
+//! framing of Lin et al.'s 256KB on-device training work — is a *fleet*
+//! of deployed MCUs, each adapting in place to its own drifting sensor
+//! stream. [`super::Coordinator`] simulates one such device; this module
+//! scales the simulation out:
+//!
+//!  * one [`ModelArtifacts`] deployment is shared behind an `Arc` by
+//!    every tenant — definition, compiled plan, PTQ calibration and base
+//!    weights are paid for once, fleet-wide;
+//!  * each [`TenantSession`] owns only its mutable per-device state: the
+//!    Arc-CoW parameter clones (aliasing the base until the optimizer's
+//!    first write), adapted activation ranges, error observers, pack
+//!    cache, replay buffer, sparse-update controller, RNGs and telemetry
+//!    — so per-tenant memory is deltas + replay, not a model copy;
+//!  * [`FleetCoordinator::run`] shards whole tenants across the worker
+//!    pool. Every tenant's trajectory depends only on the shared
+//!    artifacts and its own seeds (worker scratch arenas are fully
+//!    overwritten per pass), so per-tenant results are **bit-identical
+//!    for every worker count and sharding** — the PR 1/4 `TT_WORKERS`
+//!    determinism contract, generalized from batch samples to tenants.
+//!
+//! Per-tenant domain shift: each tenant's stream switches, at
+//! [`FleetConfig::shift_at`], from the fleet's base domain to one of a
+//! small pool of shifted variants ([`FleetConfig::shift_pool`], assigned
+//! round-robin by tenant id) — distinct drift per tenant without paying
+//! for 10k distinct domain prototype sets.
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::replay::ReplayBuffer;
+use crate::coordinator::stream::SampleStream;
+use crate::coordinator::{CoordinatorConfig, Telemetry};
+use crate::data::Domain;
+use crate::device::DeviceModel;
+use crate::graph::batch::{ScopedJob, WorkerPool};
+use crate::graph::exec::{DenseUpdates, ModelArtifacts, NativeModel};
+use crate::kernels::{softmax, OpCounter};
+use crate::memplan::Scratch;
+use crate::tensor::TensorF32;
+use crate::train::fqt::FqtSgd;
+use crate::train::loop_::Sparsity;
+use crate::train::sparse::DynamicSparse;
+use crate::train::Optimizer;
+use crate::util::prng::Pcg32;
+
+/// Per-tenant seed derivation: every tenant RNG stream is a pure function
+/// of the fleet seed and the tenant id, so a tenant's trajectory is
+/// reproducible standalone (the determinism tests re-run single tenants
+/// and demand bit-identical weights).
+fn tenant_seed(fleet_seed: u64, id: usize) -> u64 {
+    fleet_seed.wrapping_add((id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Fleet policy knobs. `#[non_exhaustive]`; construct via
+/// [`FleetConfig::builder`].
+#[derive(Clone, Debug)]
+#[non_exhaustive]
+pub struct FleetConfig {
+    /// Number of tenant sessions.
+    pub tenants: usize,
+    /// Stream length per tenant.
+    pub arrivals_per_tenant: usize,
+    /// Mean inter-arrival gap per tenant stream, seconds (simulated).
+    pub mean_gap_s: f64,
+    /// Arrival index at which a tenant's domain shifts (`usize::MAX` =
+    /// no shift).
+    pub shift_at: usize,
+    /// Number of distinct shifted-domain variants shared across the
+    /// fleet (tenant `id` drifts to variant `id % shift_pool`).
+    pub shift_pool: usize,
+    /// Per-tenant optimizer learning rate.
+    pub lr: f32,
+    /// Per-tenant optimizer minibatch size.
+    pub batch: usize,
+    /// Sparse-update floor (λ_min; ≥ 1.0 = dense updates).
+    pub lambda_min: f32,
+    /// Per-tenant coordinator lifecycle knobs (replay capacity, steps
+    /// per gap, warmup).
+    pub session: CoordinatorConfig,
+    /// Fleet seed; every tenant seed derives from it and the tenant id.
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            tenants: 1,
+            arrivals_per_tenant: 50,
+            mean_gap_s: 0.05,
+            shift_at: usize::MAX,
+            shift_pool: 8,
+            lr: 0.01,
+            batch: 8,
+            lambda_min: 1.0,
+            session: CoordinatorConfig::default(),
+            seed: 1,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn builder() -> FleetConfigBuilder {
+        FleetConfigBuilder { cfg: FleetConfig::default() }
+    }
+}
+
+/// Builder for [`FleetConfig`] with validated defaults.
+#[derive(Clone, Debug)]
+pub struct FleetConfigBuilder {
+    cfg: FleetConfig,
+}
+
+impl FleetConfigBuilder {
+    pub fn tenants(mut self, v: usize) -> Self {
+        self.cfg.tenants = v;
+        self
+    }
+
+    pub fn arrivals_per_tenant(mut self, v: usize) -> Self {
+        self.cfg.arrivals_per_tenant = v;
+        self
+    }
+
+    pub fn mean_gap_s(mut self, v: f64) -> Self {
+        self.cfg.mean_gap_s = v;
+        self
+    }
+
+    pub fn shift_at(mut self, v: usize) -> Self {
+        self.cfg.shift_at = v;
+        self
+    }
+
+    pub fn shift_pool(mut self, v: usize) -> Self {
+        self.cfg.shift_pool = v;
+        self
+    }
+
+    pub fn lr(mut self, v: f32) -> Self {
+        self.cfg.lr = v;
+        self
+    }
+
+    pub fn batch(mut self, v: usize) -> Self {
+        self.cfg.batch = v;
+        self
+    }
+
+    pub fn lambda_min(mut self, v: f32) -> Self {
+        self.cfg.lambda_min = v;
+        self
+    }
+
+    pub fn session(mut self, v: CoordinatorConfig) -> Self {
+        self.cfg.session = v;
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.cfg.seed = v;
+        self
+    }
+
+    pub fn build(self) -> FleetConfig {
+        let mut cfg = self.cfg;
+        cfg.shift_pool = cfg.shift_pool.max(1);
+        cfg.batch = cfg.batch.max(1);
+        cfg.session = cfg.session.validated();
+        cfg
+    }
+}
+
+/// One simulated device: the per-tenant session state plus its lifecycle
+/// driver — the exact per-arrival loop of [`super::Coordinator::run`]
+/// (immediate inference, replay admission, idle-gap training), run
+/// against a caller-provided scratch arena so ten thousand tenants share
+/// a handful of worker arenas instead of owning one each.
+pub struct TenantSession {
+    pub id: usize,
+    /// The tenant's session bound to the shared artifacts
+    /// (`model.shared` is the fleet-wide `Arc`; `model.state` is this
+    /// tenant's own).
+    pub model: NativeModel,
+    opt: FqtSgd,
+    sparsity: Sparsity,
+    replay: ReplayBuffer,
+    rng: Pcg32,
+    /// Which shifted-domain variant this tenant drifts to.
+    shift_idx: usize,
+    stream_seed: u64,
+    pub telemetry: Telemetry,
+}
+
+impl TenantSession {
+    /// Spawn a tenant off the shared deployment. Cheap: the session's
+    /// parameters are Arc-CoW clones of the base weights and its pack
+    /// cache starts cold (the first backward pass warms it).
+    pub fn spawn(shared: &Arc<ModelArtifacts>, id: usize, cfg: &FleetConfig) -> TenantSession {
+        let model = NativeModel::from_artifacts(Arc::clone(shared));
+        let opt = FqtSgd::new(&model, cfg.lr, cfg.batch);
+        let seed = tenant_seed(cfg.seed, id);
+        TenantSession {
+            id,
+            opt,
+            sparsity: if cfg.lambda_min >= 1.0 {
+                Sparsity::Dense
+            } else {
+                Sparsity::Dynamic(DynamicSparse::new(cfg.lambda_min, 1.0))
+            },
+            replay: ReplayBuffer::new(cfg.session.replay_capacity, seed ^ 0xBEEF),
+            rng: Pcg32::new(seed, 0xC0),
+            shift_idx: id % cfg.shift_pool.max(1),
+            stream_seed: seed ^ 0x51AE,
+            telemetry: Telemetry::default(),
+            model,
+        }
+    }
+
+    /// Bytes this tenant owns beyond the shared artifacts: CoW-diverged
+    /// weights, adapted ranges, observers, versions, pack cache
+    /// ([`crate::graph::exec::SessionState::delta_bytes`]) plus the
+    /// replay buffer's sample storage. Optimizer gradient buffers are
+    /// reported separately ([`TenantSession::optimizer_bytes`]) — they
+    /// are per-tenant too, but sized by the trainable tail and identical
+    /// under shared-artifact and independent deployment alike, so they
+    /// stay out of the sharing-ratio accounting.
+    pub fn session_bytes(&self) -> usize {
+        self.model.state.delta_bytes(&self.model.shared) + self.replay.bytes()
+    }
+
+    /// Bytes of this tenant's optimizer state (gradient buffers over the
+    /// trainable tail).
+    pub fn optimizer_bytes(&self) -> usize {
+        self.opt.state_bytes()
+    }
+
+    /// Drive this tenant over its whole stream (base domain, shifting to
+    /// its pool variant at `cfg.shift_at`). Mirrors
+    /// [`super::Coordinator::run`] per arrival: classify immediately,
+    /// admit to replay, then spend the idle gap on training steps drawn
+    /// from the buffer, bounded by `max_steps_per_gap` and the simulated
+    /// time budget.
+    pub fn run_stream(
+        &mut self,
+        base: &Domain,
+        shift_pool: &[Domain],
+        device: &DeviceModel,
+        cfg: &FleetConfig,
+        scratch: &mut Scratch,
+    ) {
+        let shifted = if shift_pool.is_empty() {
+            base
+        } else {
+            &shift_pool[self.shift_idx % shift_pool.len()]
+        };
+        let mut stream = SampleStream::with_shift(
+            base,
+            shifted,
+            cfg.arrivals_per_tenant,
+            cfg.shift_at,
+            cfg.mean_gap_s,
+            self.stream_seed,
+        );
+        while let Some(arrival) = stream.next_sample() {
+            self.telemetry.arrivals += 1;
+
+            // 1. immediate inference (never blocked by training)
+            let mut fwd = OpCounter::new();
+            let trace = self.model.forward_in(&arrival.x, scratch, &mut fwd);
+            let pred = softmax::predict(&trace.logits);
+            self.telemetry.inferences += 1;
+            if pred == arrival.y {
+                self.telemetry.correct_online += 1;
+            }
+            let infer_cost = device.cost(&fwd);
+            self.telemetry.busy_s += infer_cost.seconds;
+            self.telemetry.fwd_ops.add(&fwd);
+
+            // 2. retain
+            self.replay.push(arrival.x.clone(), arrival.y);
+
+            // 3. train in the gap
+            let mut budget = (arrival.gap_s - infer_cost.seconds).max(0.0);
+            if self.replay.len() >= cfg.session.warmup_samples {
+                for _ in 0..cfg.session.max_steps_per_gap {
+                    let Some((x, y)) = self.replay.draw(&mut self.rng) else { break };
+                    let (step_s, fwd_ops, bwd_ops) = self.train_one(&x, y, device, scratch);
+                    self.telemetry.busy_s += step_s;
+                    self.telemetry.fwd_ops.add(&fwd_ops);
+                    self.telemetry.bwd_ops.add(&bwd_ops);
+                    self.telemetry.train_steps += 1;
+                    if step_s > budget {
+                        // overruns the gap: the step still completes, but
+                        // stop training until the next arrival
+                        budget = 0.0;
+                        break;
+                    }
+                    budget -= step_s;
+                }
+            }
+            self.telemetry.elapsed_s += arrival.gap_s.max(infer_cost.seconds);
+        }
+        self.opt.finish(&mut self.model, &mut self.telemetry.bwd_ops);
+        // energy: active during busy time, idle otherwise
+        let idle = (self.telemetry.elapsed_s - self.telemetry.busy_s).max(0.0);
+        self.telemetry.energy_j = (device.idle_a + device.active_delta_a)
+            * device.volts
+            * self.telemetry.busy_s
+            + device.idle_a * device.volts * idle;
+    }
+
+    fn train_one(
+        &mut self,
+        x: &TensorF32,
+        y: usize,
+        device: &DeviceModel,
+        scratch: &mut Scratch,
+    ) -> (f64, OpCounter, OpCounter) {
+        let mut fwd = OpCounter::new();
+        let mut bwd = OpCounter::new();
+        let trace = self.model.forward_adapt_in(x, scratch, &mut fwd);
+        let (loss, _, err) = softmax::softmax_ce(&trace.logits, y, &mut bwd);
+        let res = match &mut self.sparsity {
+            Sparsity::Dense => {
+                self.model.backward_in(&trace, err, &mut DenseUpdates, scratch, &mut bwd)
+            }
+            Sparsity::Dynamic(ctl) => {
+                ctl.begin_sample(loss);
+                self.model.backward_in(&trace, err, ctl, scratch, &mut bwd)
+            }
+        };
+        self.opt.accumulate(&mut self.model, &res, &mut bwd);
+        let secs = device.cost(&fwd).seconds + device.cost(&bwd).seconds;
+        (secs, fwd, bwd)
+    }
+}
+
+/// Aggregate result of one fleet run: merged telemetry plus the memory
+/// accounting behind the "per-tenant memory is deltas + replay" claim.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub tenants: usize,
+    /// All tenant telemetry merged ([`Telemetry::merge`]): totals over
+    /// the fleet; `online_accuracy` is the fleet-aggregate online
+    /// accuracy under per-tenant domain shift.
+    pub aggregate: Telemetry,
+    /// Bytes of deployment state shared fleet-wide (base weights + the
+    /// plan's activation arena requirement).
+    pub shared_bytes: usize,
+    /// Σ per-tenant session bytes (CoW deltas + replay buffers).
+    pub session_bytes: usize,
+    /// Σ per-tenant optimizer gradient-buffer bytes (trainable tail
+    /// only). Identical under shared and independent deployment, so
+    /// reported alongside the ratio rather than inside it.
+    pub optimizer_bytes: usize,
+    /// What this fleet actually costs: `shared_bytes + session_bytes`.
+    pub fleet_bytes: usize,
+    /// What N independent single-tenant deployments would cost:
+    /// `tenants × shared_bytes + session_bytes`.
+    pub independent_bytes: usize,
+}
+
+impl FleetReport {
+    /// Mean per-tenant session overhead, bytes.
+    pub fn per_tenant_bytes(&self) -> usize {
+        self.session_bytes / self.tenants.max(1)
+    }
+
+    /// Memory ratio of N independent deployments over the shared-plan
+    /// fleet (machine-independent: pure byte accounting). > 1 whenever
+    /// sharing saves anything; grows with N as the shared artifacts
+    /// amortize.
+    pub fn memory_ratio(&self) -> f64 {
+        self.independent_bytes as f64 / self.fleet_bytes.max(1) as f64
+    }
+}
+
+/// Drives N tenant sessions over one shared deployment. Consumes the
+/// typed [`RunConfig`] (worker count) plus the fleet policy knobs.
+pub struct FleetCoordinator {
+    shared: Arc<ModelArtifacts>,
+    device: DeviceModel,
+    base: Domain,
+    shift_domains: Vec<Domain>,
+    run_cfg: RunConfig,
+    cfg: FleetConfig,
+    pub tenants: Vec<TenantSession>,
+}
+
+impl FleetCoordinator {
+    /// Build the fleet: derive the shifted-domain pool from the base
+    /// domain and spawn `cfg.tenants` sessions off the shared artifacts.
+    pub fn new(
+        shared: Arc<ModelArtifacts>,
+        device: DeviceModel,
+        base: Domain,
+        run_cfg: RunConfig,
+        cfg: FleetConfig,
+    ) -> FleetCoordinator {
+        let pool_n = cfg.shift_pool.max(1).min(cfg.tenants.max(1));
+        let shift_domains: Vec<Domain> =
+            (0..pool_n).map(|i| base.shifted(cfg.seed ^ 0x5157_0000 ^ i as u64)).collect();
+        let tenants: Vec<TenantSession> =
+            (0..cfg.tenants).map(|id| TenantSession::spawn(&shared, id, &cfg)).collect();
+        FleetCoordinator { shared, device, base, shift_domains, run_cfg, cfg, tenants }
+    }
+
+    pub fn shared(&self) -> &Arc<ModelArtifacts> {
+        &self.shared
+    }
+
+    pub fn device(&self) -> &DeviceModel {
+        &self.device
+    }
+
+    pub fn base(&self) -> &Domain {
+        &self.base
+    }
+
+    pub fn shift_domains(&self) -> &[Domain] {
+        &self.shift_domains
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Run every tenant's stream to exhaustion, sharding whole tenants
+    /// across `run_cfg.workers` pool threads (1 = inline on this
+    /// thread). Tenants are mutually independent and worker scratch is
+    /// fully overwritten per pass, so per-tenant results are
+    /// bit-identical for every worker count.
+    pub fn run(&mut self) -> FleetReport {
+        let workers = self.run_cfg.workers.max(1);
+        let base = &self.base;
+        let doms = &self.shift_domains[..];
+        let device = &self.device;
+        let cfg = &self.cfg;
+        if workers <= 1 || self.tenants.len() <= 1 {
+            let mut scratch = self.shared.make_scratch();
+            for t in self.tenants.iter_mut() {
+                t.run_stream(base, doms, device, cfg, &mut scratch);
+            }
+        } else {
+            let mut pool = WorkerPool::new(workers);
+            let chunk = self.tenants.len().div_ceil(workers).max(1);
+            let jobs: Vec<ScopedJob<'_>> = self
+                .tenants
+                .chunks_mut(chunk)
+                .map(|slice| {
+                    Box::new(move |scratch: &mut Scratch| {
+                        for t in slice.iter_mut() {
+                            t.run_stream(base, doms, device, cfg, scratch);
+                        }
+                    }) as ScopedJob<'_>
+                })
+                .collect();
+            pool.run_scope(jobs);
+        }
+        self.report()
+    }
+
+    /// Aggregate telemetry and memory accounting over the current tenant
+    /// state (called by [`FleetCoordinator::run`]; callable standalone
+    /// after partial runs).
+    pub fn report(&self) -> FleetReport {
+        let mut aggregate = Telemetry::default();
+        let mut session_bytes = 0usize;
+        let mut optimizer_bytes = 0usize;
+        for t in &self.tenants {
+            aggregate.merge(&t.telemetry);
+            session_bytes += t.session_bytes();
+            optimizer_bytes += t.optimizer_bytes();
+        }
+        let shared_bytes = self.shared.shared_bytes();
+        FleetReport {
+            tenants: self.tenants.len(),
+            aggregate,
+            shared_bytes,
+            session_bytes,
+            optimizer_bytes,
+            fleet_bytes: shared_bytes + session_bytes,
+            independent_bytes: self.tenants.len() * shared_bytes + session_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec_by_name;
+    use crate::device;
+    use crate::graph::exec::{calibrate, FloatParams};
+    use crate::graph::{models, DnnConfig};
+
+    fn deploy() -> (Arc<ModelArtifacts>, Domain) {
+        let spec = spec_by_name("cifar10").unwrap();
+        let dom = Domain::new(&spec, [3, 12, 12], 5);
+        let mut rng = Pcg32::seeded(17);
+        let def = models::mnist_cnn(&[3, 12, 12], 10);
+        let fp = FloatParams::init(&def, &mut rng);
+        let (cal, _) = dom.splits(1, 0, &mut rng);
+        let calib = calibrate(&def, &fp, &cal.xs);
+        (Arc::new(ModelArtifacts::deploy(def, DnnConfig::Uint8, &fp, &calib)), dom)
+    }
+
+    #[test]
+    fn fleet_processes_every_tenant_stream() {
+        let (shared, dom) = deploy();
+        let cfg = FleetConfig::builder()
+            .tenants(4)
+            .arrivals_per_tenant(12)
+            .shift_at(6)
+            .session(CoordinatorConfig::builder().warmup_samples(2).build())
+            .build();
+        let run_cfg = RunConfig::builder().workers(2).build();
+        let mut fleet = FleetCoordinator::new(shared, device::imxrt1062(), dom, run_cfg, cfg);
+        let rep = fleet.run();
+        assert_eq!(rep.tenants, 4);
+        assert_eq!(rep.aggregate.arrivals, 48);
+        assert_eq!(rep.aggregate.inferences, 48);
+        assert!(rep.aggregate.train_steps > 0, "idle gaps must be used for training");
+        assert!(rep.aggregate.utilization() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn shared_plan_fleet_is_cheaper_than_independent_models() {
+        let (shared, dom) = deploy();
+        let cfg = FleetConfig::builder()
+            .tenants(8)
+            .arrivals_per_tenant(6)
+            .session(CoordinatorConfig::builder().warmup_samples(2).replay_capacity(4).build())
+            .build();
+        let mut fleet =
+            FleetCoordinator::new(shared, device::imxrt1062(), dom, RunConfig::default(), cfg);
+        let rep = fleet.run();
+        assert!(rep.fleet_bytes < rep.independent_bytes);
+        assert!(rep.memory_ratio() > 1.0, "ratio={}", rep.memory_ratio());
+        // every tenant owns deltas + replay, not a model copy
+        assert!(
+            rep.per_tenant_bytes() < rep.shared_bytes,
+            "per-tenant state must stay below a full model copy"
+        );
+    }
+
+    #[test]
+    fn spawning_a_session_is_deltas_only() {
+        let (shared, _) = deploy();
+        let cfg = FleetConfig::default();
+        let t = TenantSession::spawn(&shared, 0, &cfg);
+        // Fresh session: every weight tensor still aliases the base
+        // image, the pack cache is cold, the replay buffer empty — the
+        // SessionState's own bytes are ranges/observers/version
+        // bookkeeping only (optimizer gradient buffers are accounted
+        // separately from session_bytes).
+        let state_only = t.model.state.delta_bytes(&t.model.shared);
+        assert!(
+            state_only < 2048,
+            "fresh session state owns {state_only} bytes, expected bookkeeping only"
+        );
+        assert_eq!(t.session_bytes(), state_only, "empty replay adds nothing");
+        assert!(t.optimizer_bytes() > 0, "trainable model must carry gradient buffers");
+    }
+}

@@ -14,6 +14,7 @@
 //! the device model's cost for every pass, so utilization and energy
 //! reports are consistent with the hardware study.
 
+pub mod fleet;
 pub mod replay;
 pub mod stream;
 
@@ -61,10 +62,31 @@ impl Telemetry {
             self.busy_s / self.elapsed_s
         }
     }
+
+    /// Fold another run's telemetry into this one (fleet aggregation —
+    /// see [`fleet::FleetCoordinator`]). Counters and op totals sum;
+    /// simulated times and energy sum too, so `elapsed_s` becomes total
+    /// simulated device-seconds and [`Telemetry::utilization`] the
+    /// fleet-average duty cycle.
+    pub fn merge(&mut self, other: &Telemetry) {
+        self.arrivals += other.arrivals;
+        self.inferences += other.inferences;
+        self.correct_online += other.correct_online;
+        self.train_steps += other.train_steps;
+        self.busy_s += other.busy_s;
+        self.elapsed_s += other.elapsed_s;
+        self.energy_j += other.energy_j;
+        self.fwd_ops.add(&other.fwd_ops);
+        self.bwd_ops.add(&other.bwd_ops);
+    }
 }
 
-/// Policy knobs for the coordinator.
+/// Policy knobs for the coordinator. `#[non_exhaustive]` so fleet-era
+/// knobs can land without breaking downstream literals — construct via
+/// [`CoordinatorConfig::builder`] (or start from `default()` with
+/// struct-update syntax inside this crate).
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct CoordinatorConfig {
     /// Replay-buffer capacity (samples).
     pub replay_capacity: usize,
@@ -77,6 +99,49 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig { replay_capacity: 64, max_steps_per_gap: 4, warmup_samples: 8 }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn builder() -> CoordinatorConfigBuilder {
+        CoordinatorConfigBuilder { cfg: CoordinatorConfig::default() }
+    }
+
+    /// Clamp the knobs to a self-consistent state: a replay buffer of at
+    /// least one slot, and a warmup threshold the buffer can actually
+    /// reach (a warmup above capacity would disable training forever).
+    pub(crate) fn validated(mut self) -> CoordinatorConfig {
+        self.replay_capacity = self.replay_capacity.max(1);
+        self.warmup_samples = self.warmup_samples.min(self.replay_capacity);
+        self
+    }
+}
+
+/// Builder for [`CoordinatorConfig`] with validated defaults (see
+/// [`CoordinatorConfig::validated`]).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfigBuilder {
+    cfg: CoordinatorConfig,
+}
+
+impl CoordinatorConfigBuilder {
+    pub fn replay_capacity(mut self, v: usize) -> Self {
+        self.cfg.replay_capacity = v;
+        self
+    }
+
+    pub fn max_steps_per_gap(mut self, v: usize) -> Self {
+        self.cfg.max_steps_per_gap = v;
+        self
+    }
+
+    pub fn warmup_samples(mut self, v: usize) -> Self {
+        self.cfg.warmup_samples = v;
+        self
+    }
+
+    pub fn build(self) -> CoordinatorConfig {
+        self.cfg.validated()
     }
 }
 
@@ -97,7 +162,73 @@ pub struct Coordinator<'a> {
     pub telemetry: Telemetry,
 }
 
+/// Builder for [`Coordinator`]: model, device and optimizer are the
+/// required inputs; sparsity (default dense), config (validated defaults)
+/// and seed (default 0) are optional knobs.
+pub struct CoordinatorBuilder<'a> {
+    model: NativeModel,
+    device: DeviceModel,
+    opt: &'a mut dyn Optimizer,
+    sparsity: Sparsity,
+    cfg: CoordinatorConfig,
+    seed: u64,
+}
+
+impl<'a> CoordinatorBuilder<'a> {
+    pub fn sparsity(mut self, s: Sparsity) -> Self {
+        self.sparsity = s;
+        self
+    }
+
+    pub fn config(mut self, cfg: CoordinatorConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Coordinator<'a> {
+        let cfg = self.cfg.validated();
+        let replay = ReplayBuffer::new(cfg.replay_capacity, self.seed ^ 0xBEEF);
+        // The run-long GEMM arena; the model's packed-weight cache needs
+        // no warming here — `NativeModel::build`/`reset_trainable` leave
+        // it warm and `backward_in` re-warms after every optimizer touch.
+        let scratch = self.model.make_scratch();
+        Coordinator {
+            model: self.model,
+            device: self.device,
+            cfg,
+            opt: self.opt,
+            sparsity: self.sparsity,
+            replay,
+            rng: Pcg32::new(self.seed, 0xC0),
+            scratch,
+            telemetry: Telemetry::default(),
+        }
+    }
+}
+
 impl<'a> Coordinator<'a> {
+    pub fn builder(
+        model: NativeModel,
+        device: DeviceModel,
+        opt: &'a mut dyn Optimizer,
+    ) -> CoordinatorBuilder<'a> {
+        CoordinatorBuilder {
+            model,
+            device,
+            opt,
+            sparsity: Sparsity::Dense,
+            cfg: CoordinatorConfig::default(),
+            seed: 0,
+        }
+    }
+
+    /// Thin shim over [`Coordinator::builder`] kept for older callers.
+    #[deprecated(note = "use Coordinator::builder(model, device, opt)…build()")]
     pub fn new(
         model: NativeModel,
         device: DeviceModel,
@@ -106,22 +237,7 @@ impl<'a> Coordinator<'a> {
         cfg: CoordinatorConfig,
         seed: u64,
     ) -> Coordinator<'a> {
-        let replay = ReplayBuffer::new(cfg.replay_capacity, seed ^ 0xBEEF);
-        // The run-long GEMM arena; the model's packed-weight cache needs
-        // no warming here — `NativeModel::build`/`reset_trainable` leave
-        // it warm and `backward_in` re-warms after every optimizer touch.
-        let scratch = model.make_scratch();
-        Coordinator {
-            model,
-            device,
-            cfg,
-            opt,
-            sparsity,
-            replay,
-            rng: Pcg32::new(seed, 0xC0),
-            scratch,
-            telemetry: Telemetry::default(),
-        }
+        Coordinator::builder(model, device, opt).sparsity(sparsity).config(cfg).seed(seed).build()
     }
 
     /// Drive the coordinator over a stream until it is exhausted.
@@ -233,14 +349,7 @@ mod tests {
     fn coordinator_processes_all_arrivals() {
         let (m, dom) = deployed();
         let mut opt = FqtSgd::new(&m, 0.01, 4);
-        let mut coord = Coordinator::new(
-            m,
-            device::imxrt1062(),
-            &mut opt,
-            Sparsity::Dense,
-            CoordinatorConfig::default(),
-            1,
-        );
+        let mut coord = Coordinator::builder(m, device::imxrt1062(), &mut opt).seed(1).build();
         let mut stream = SampleStream::new(&dom, 60, 0.05, 2);
         let t = coord.run(&mut stream);
         assert_eq!(t.arrivals, 60);
@@ -255,14 +364,10 @@ mod tests {
     fn online_accuracy_improves_over_stream() {
         let (m, dom) = deployed();
         let mut opt = FqtSgd::new(&m, 0.01, 4);
-        let mut coord = Coordinator::new(
-            m,
-            device::imxrt1062(),
-            &mut opt,
-            Sparsity::Dense,
-            CoordinatorConfig { warmup_samples: 4, ..Default::default() },
-            2,
-        );
+        let mut coord = Coordinator::builder(m, device::imxrt1062(), &mut opt)
+            .config(CoordinatorConfig::builder().warmup_samples(4).build())
+            .seed(2)
+            .build();
         // first half of the stream
         let mut s1 = SampleStream::new(&dom, 150, 0.05, 3);
         coord.run(&mut s1);
@@ -284,9 +389,9 @@ mod tests {
     fn slow_arrival_rate_caps_training_steps() {
         let (m, dom) = deployed();
         let mut opt = FqtSgd::new(&m, 0.01, 4);
-        let cfg = CoordinatorConfig { max_steps_per_gap: 2, ..Default::default() };
+        let cfg = CoordinatorConfig::builder().max_steps_per_gap(2).build();
         let mut coord =
-            Coordinator::new(m, device::imxrt1062(), &mut opt, Sparsity::Dense, cfg, 3);
+            Coordinator::builder(m, device::imxrt1062(), &mut opt).config(cfg).seed(3).build();
         let mut stream = SampleStream::new(&dom, 40, 1.0, 5);
         let t = coord.run(&mut stream);
         assert!(t.train_steps <= 2 * t.arrivals);
@@ -298,12 +403,93 @@ mod tests {
     fn tight_gaps_throttle_training() {
         let (m, dom) = deployed();
         let mut opt = FqtSgd::new(&m, 0.01, 4);
-        let cfg = CoordinatorConfig { max_steps_per_gap: 8, ..Default::default() };
+        let cfg = CoordinatorConfig::builder().max_steps_per_gap(8).build();
         // RP2040 is slow; near-zero gaps leave no idle budget
-        let mut coord = Coordinator::new(m, device::rp2040(), &mut opt, Sparsity::Dense, cfg, 4);
+        let mut coord =
+            Coordinator::builder(m, device::rp2040(), &mut opt).config(cfg).seed(4).build();
         let mut stream = SampleStream::new(&dom, 30, 1e-6, 6);
         let t = coord.run(&mut stream);
         // at most one (overrunning) step per gap once warm
         assert!(t.train_steps <= t.arrivals, "steps={} arrivals={}", t.train_steps, t.arrivals);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructor_still_builds() {
+        let (m, dom) = deployed();
+        let mut opt = FqtSgd::new(&m, 0.01, 4);
+        let mut coord = Coordinator::new(
+            m,
+            device::imxrt1062(),
+            &mut opt,
+            Sparsity::Dense,
+            CoordinatorConfig::default(),
+            1,
+        );
+        let mut stream = SampleStream::new(&dom, 5, 0.05, 2);
+        let t = coord.run(&mut stream);
+        assert_eq!(t.arrivals, 5);
+    }
+
+    #[test]
+    fn telemetry_guards_zero_samples() {
+        let t = Telemetry::default();
+        assert_eq!(t.online_accuracy(), 0.0);
+        assert_eq!(t.utilization(), 0.0);
+    }
+
+    #[test]
+    fn telemetry_accuracy_and_utilization_accounting() {
+        let mut t = Telemetry { inferences: 8, correct_online: 6, ..Default::default() };
+        t.busy_s = 1.0;
+        t.elapsed_s = 4.0;
+        assert!((t.online_accuracy() - 0.75).abs() < 1e-6);
+        assert!((t.utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn telemetry_merge_sums_fields() {
+        let mut a = Telemetry {
+            arrivals: 3,
+            inferences: 3,
+            correct_online: 2,
+            train_steps: 5,
+            busy_s: 1.0,
+            elapsed_s: 2.0,
+            energy_j: 0.5,
+            ..Default::default()
+        };
+        a.fwd_ops.int_macs = 100;
+        let mut b = Telemetry {
+            arrivals: 1,
+            inferences: 1,
+            correct_online: 1,
+            train_steps: 2,
+            busy_s: 0.5,
+            elapsed_s: 2.0,
+            energy_j: 0.25,
+            ..Default::default()
+        };
+        b.fwd_ops.int_macs = 40;
+        b.bwd_ops.int_macs = 7;
+        a.merge(&b);
+        assert_eq!(a.arrivals, 4);
+        assert_eq!(a.inferences, 4);
+        assert_eq!(a.correct_online, 3);
+        assert_eq!(a.train_steps, 7);
+        assert!((a.busy_s - 1.5).abs() < 1e-12);
+        assert!((a.elapsed_s - 4.0).abs() < 1e-12);
+        assert!((a.energy_j - 0.75).abs() < 1e-12);
+        assert_eq!(a.fwd_ops.int_macs, 140);
+        assert_eq!(a.bwd_ops.int_macs, 7);
+        // merged utilization = fleet-average duty cycle
+        assert!((a.utilization() - 1.5 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_builder_validates() {
+        let c = CoordinatorConfig::builder().replay_capacity(0).warmup_samples(99).build();
+        assert_eq!(c.replay_capacity, 1);
+        assert_eq!(c.warmup_samples, 1, "warmup must be reachable within capacity");
     }
 }

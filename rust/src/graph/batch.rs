@@ -190,7 +190,7 @@ impl NativeModel {
         let sat = self.measure_saturation(&trace, &mut fwd_ops);
         let (loss, probs, err) = softmax::softmax_ce(&trace.logits, label, &mut bwd_ops);
         let pred = softmax::predict(&probs);
-        let mut err_obs = self.err_obs.clone();
+        let mut err_obs = self.state.err_obs.clone();
         let grads = self.backward_with(
             &trace,
             err,
@@ -284,7 +284,7 @@ impl NativeModel {
         for p in passes.into_iter() {
             let p = p.expect("every batch sample must produce a pass");
             self.apply_range_adaptation(&p.sat);
-            for (obs, local) in self.err_obs.iter_mut().zip(p.err_obs.iter()) {
+            for (obs, local) in self.state.err_obs.iter_mut().zip(p.err_obs.iter()) {
                 if let Some((lo, hi)) = local.range() {
                     obs.observe_range(lo, hi);
                 }

@@ -1,24 +1,37 @@
 //! Native model executor: deployed model state plus the forward and
 //! backward entry points, lowered onto the compiled layer-op plan.
 //!
-//! A [`NativeModel`] owns the deployed state exactly as the MCU would hold
-//! it: quantized weight tensors (uint8 + per-tensor params) for quantized
-//! layers, float weights for float layers, fixed activation quantization
-//! parameters from PTQ calibration, and online min/max observers for the
-//! backpropagated error tensors (see `quant::observer`) — plus the
-//! [`ExecPlan`] compiled once at deployment (`graph::plan`), which carries
-//! the trait-based layer ops, the liveness-planned activation arena and
-//! the exact scratch requirements of a training step.
+//! The deployed state is split along the fleet axis (DESIGN.md §9):
 //!
-//! The forward pass doubles as inference (the paper's in-place property:
-//! the same representation serves both, §III-A); the backward pass
-//! implements Eqs. 1–4 with optional per-structure masks from the dynamic
-//! sparse update controller (§III-B). Both are pure dispatch over the
-//! plan's op list; the straight-line pre-plan implementation is retained
-//! in [`crate::graph::reference`] as the golden parity reference.
+//!  * [`ModelArtifacts`] — everything produced once at deployment and
+//!    immutable afterwards: the model definition and configuration, the
+//!    per-layer precisions, PTQ calibration output (input quantization
+//!    parameters plus the *base* activation ranges and quantized weights),
+//!    and the [`ExecPlan`] compiled for the configuration (`graph::plan`),
+//!    which carries the trait-based layer ops, the liveness-planned
+//!    activation arena and the exact scratch requirements of a training
+//!    step. Artifacts are shared across tenants behind an `Arc` — the
+//!    fleet coordinator deploys one and spawns thousands of sessions off
+//!    it.
+//!  * [`SessionState`] — the per-tenant mutable training state: the live
+//!    parameters (Arc-CoW clones of the base weights, so an untouched
+//!    layer costs nothing), the adapted activation ranges, the online
+//!    error observers (`quant::observer`), the per-layer parameter
+//!    versions and the plan-owned packed-weight cache keyed by them.
+//!
+//! A [`NativeModel`] is one session bound to its artifacts — exactly what
+//! a single MCU holds in RAM/Flash. The forward pass doubles as inference
+//! (the paper's in-place property: the same representation serves both,
+//! §III-A); the backward pass implements Eqs. 1–4 with optional
+//! per-structure masks from the dynamic sparse update controller (§III-B).
+//! Both are pure dispatch over the plan's op list; the straight-line
+//! pre-plan implementation is retained in [`crate::graph::reference`] as
+//! the golden parity reference.
 
 pub use crate::graph::act::{calibrate, structure_norms, Act, Calibration, FloatParams, LayerParams};
 pub use crate::graph::batch::BatchResult;
+
+use std::sync::Arc;
 
 use crate::graph::act::init_layer;
 use crate::graph::packs::{PackCache, PackStats};
@@ -76,41 +89,39 @@ impl MaskProvider for DenseUpdates {
     }
 }
 
-/// A deployed model: the exact state the MCU holds in RAM/Flash, plus the
-/// execution plan compiled for its configuration.
-pub struct NativeModel {
+/// The immutable output of deployment: definition, configuration,
+/// compiled execution plan and PTQ base state. One `ModelArtifacts` is
+/// shared (behind an [`Arc`]) by every tenant session spawned from it —
+/// tenants never write any of this, so per-tenant memory starts at zero
+/// and grows only with what each tenant's training actually diverges
+/// (see [`SessionState::delta_bytes`]).
+pub struct ModelArtifacts {
     pub def: ModelDef,
     pub cfg: DnnConfig,
     pub prec: Vec<Precision>,
-    pub params: Vec<LayerParams>,
+    /// PTQ input quantization parameters (calibration output; fixed).
     pub input_qp: QParams,
-    pub act_qp: Vec<QParams>,
-    pub err_obs: Vec<MinMaxObserver>,
+    /// Quantized (or float, per precision) deployed base weights — the
+    /// flash image. Sessions CoW-clone these; an untrained layer aliases
+    /// this storage byte-for-byte.
+    pub base_params: Vec<LayerParams>,
+    /// PTQ activation ranges sessions start from (they adapt per tenant).
+    pub base_act_qp: Vec<QParams>,
     plan: ExecPlan,
-    /// Plan-owned dense backward weight packs (`graph::packs`), read by
-    /// the plan ops through a shared reference; re-packed by
-    /// [`NativeModel::warm_packs`] only for layers whose
-    /// [`NativeModel::touch_layer`] version moved.
-    packs: PackCache,
-    /// Per-layer parameter versions (start at 1). Every parameter write
-    /// must go through [`NativeModel::touch_layer`] so the pack cache can
-    /// tell fresh packs from stale ones.
-    param_versions: Vec<u64>,
 }
 
-impl NativeModel {
+impl ModelArtifacts {
     /// Deploy: quantize float master weights per the configuration, using
     /// PTQ calibration ranges for activations, and compile the execution
     /// plan (`O(layers)`, once).
-    pub fn build(def: ModelDef, cfg: DnnConfig, fp: &FloatParams, calib: &Calibration) -> Self {
-        Self::build_with_fusion(def, cfg, fp, calib, crate::graph::plan::fuse_default())
+    pub fn deploy(def: ModelDef, cfg: DnnConfig, fp: &FloatParams, calib: &Calibration) -> Self {
+        Self::deploy_with_fusion(def, cfg, fp, calib, crate::graph::plan::fuse_default())
     }
 
-    /// [`NativeModel::build`] with an explicit plan-fusion mode (see
-    /// [`ExecPlan::compile_with`]); `build` follows the `TT_NO_FUSE`
-    /// environment default. The parity suite deploys one model per mode
-    /// from the same float masters and asserts bit-identical behavior.
-    pub fn build_with_fusion(
+    /// [`ModelArtifacts::deploy`] with an explicit plan-fusion mode (see
+    /// [`ExecPlan::compile_with`]); `deploy` follows the `TT_NO_FUSE`
+    /// environment default.
+    pub fn deploy_with_fusion(
         def: ModelDef,
         cfg: DnnConfig,
         fp: &FloatParams,
@@ -118,7 +129,7 @@ impl NativeModel {
         fused: bool,
     ) -> Self {
         let prec = def.precisions(cfg);
-        let params = def
+        let base_params = def
             .layers
             .iter()
             .enumerate()
@@ -132,23 +143,16 @@ impl NativeModel {
                 _ => LayerParams::None,
             })
             .collect();
-        let err_obs = def.layers.iter().map(|_| MinMaxObserver::online()).collect();
         let plan = ExecPlan::compile_with(&def, cfg, fused);
-        let n = def.layers.len();
-        let mut model = NativeModel {
+        ModelArtifacts {
             prec,
-            params,
             input_qp: calib.input_qp,
-            act_qp: calib.act_qp.clone(),
-            err_obs,
+            base_params,
+            base_act_qp: calib.act_qp.clone(),
             plan,
-            packs: PackCache::new(n),
-            param_versions: vec![1; n],
             def,
             cfg,
-        };
-        model.warm_packs();
-        model
+        }
     }
 
     /// The execution plan compiled at deployment.
@@ -162,7 +166,52 @@ impl NativeModel {
         self.plan.make_scratch()
     }
 
-    /// The plan-owned packed-weight cache (read-only view; the plan ops
+    /// Bytes of deployment state every tenant shares instead of owning:
+    /// the base weights plus the plan's activation arena requirement (the
+    /// dominant shared-infrastructure cost; per-worker scratch arenas are
+    /// pool property, also not per-tenant).
+    pub fn shared_bytes(&self) -> usize {
+        let weights: usize = self.base_params.iter().map(|p| p.byte_size()).sum();
+        weights + self.plan.planned_peak_bytes
+    }
+}
+
+/// Per-tenant mutable training state: what one adapting device owns
+/// beyond the shared [`ModelArtifacts`]. Spawned cheap — parameters are
+/// Arc-CoW clones of the base weights (alias until the optimizer's first
+/// write to a layer), the pack cache starts cold and fills lazily on the
+/// first backward pass (`warm_packs`; a cold entry falls back to scratch
+/// packing, bit-identical either way).
+pub struct SessionState {
+    pub params: Vec<LayerParams>,
+    pub act_qp: Vec<QParams>,
+    pub err_obs: Vec<MinMaxObserver>,
+    /// Plan-owned dense backward weight packs (`graph::packs`), read by
+    /// the plan ops through a shared reference; re-packed by
+    /// [`SessionState::warm_packs`] only for layers whose
+    /// [`SessionState::touch_layer`] version moved.
+    packs: PackCache,
+    /// Per-layer parameter versions (start at 1). Every parameter write
+    /// must go through [`SessionState::touch_layer`] so the pack cache can
+    /// tell fresh packs from stale ones.
+    param_versions: Vec<u64>,
+}
+
+impl SessionState {
+    /// A fresh session off the shared artifacts: CoW parameter clones,
+    /// base activation ranges, pristine observers, cold pack cache.
+    pub fn fresh(shared: &ModelArtifacts) -> SessionState {
+        let n = shared.def.layers.len();
+        SessionState {
+            params: shared.base_params.clone(),
+            act_qp: shared.base_act_qp.clone(),
+            err_obs: shared.def.layers.iter().map(|_| MinMaxObserver::online()).collect(),
+            packs: PackCache::new(n),
+            param_versions: vec![1; n],
+        }
+    }
+
+    /// The session's packed-weight cache (read-only view; the plan ops
     /// consult it on the backward hot path).
     pub fn packs(&self) -> &PackCache {
         &self.packs
@@ -171,11 +220,6 @@ impl NativeModel {
     /// Per-layer parameter versions (the pack cache's freshness key).
     pub fn param_versions(&self) -> &[u64] {
         &self.param_versions
-    }
-
-    /// Pack-cache telemetry (hits/misses/builds).
-    pub fn pack_stats(&self) -> PackStats {
-        self.packs.stats()
     }
 
     /// Record that layer `i`'s parameters changed. The optimizers call
@@ -196,11 +240,11 @@ impl NativeModel {
     /// each sequential backward pass, and by the batch engine once per
     /// minibatch before sharding — so concurrent workers only ever read a
     /// fresh cache.
-    pub fn warm_packs(&mut self) {
-        let n = self.def.layers.len();
-        let stop = self.def.first_trainable().unwrap_or(n);
+    pub fn warm_packs(&mut self, def: &ModelDef) {
+        let n = def.layers.len();
+        let stop = def.first_trainable().unwrap_or(n);
         for i in 0..n {
-            let geom = match self.def.layers[i].kind {
+            let geom = match def.layers[i].kind {
                 LayerKind::Conv { geom, .. } => geom,
                 _ => continue,
             };
@@ -244,16 +288,135 @@ impl NativeModel {
         }
     }
 
+    /// Bytes this session owns beyond the shared artifacts: weight storage
+    /// that has CoW-diverged from the base (an untouched layer's tensor
+    /// still aliases the shared buffer and counts zero), per-tenant bias
+    /// vectors, adapted activation ranges, error observers, parameter
+    /// versions and the session's pack cache. This is the "per-tenant
+    /// memory is deltas only" number the fleet benchmark reports.
+    pub fn delta_bytes(&self, shared: &ModelArtifacts) -> usize {
+        let mut bytes = 0usize;
+        for (mine, base) in self.params.iter().zip(shared.base_params.iter()) {
+            bytes += match (mine, base) {
+                (LayerParams::Q { w, bias }, LayerParams::Q { w: bw, .. }) => {
+                    let wb = if w.values.shares_data(&bw.values) { 0 } else { w.values.len() };
+                    wb + std::mem::size_of::<QParams>() + bias.len() * 4
+                }
+                (LayerParams::F { w, bias }, LayerParams::F { w: bw, .. }) => {
+                    let wb = if w.shares_data(bw) { 0 } else { w.len() * 4 };
+                    wb + bias.len() * 4
+                }
+                _ => mine.byte_size(),
+            };
+        }
+        bytes += self.act_qp.len() * std::mem::size_of::<QParams>();
+        bytes += self.err_obs.len() * std::mem::size_of::<MinMaxObserver>();
+        bytes += self.param_versions.len() * std::mem::size_of::<u64>();
+        bytes + self.packs.reserved_bytes()
+    }
+}
+
+/// A deployed model: one session bound to its (shareable) deployment
+/// artifacts — the exact state a single MCU holds in RAM/Flash, plus the
+/// execution plan compiled for its configuration.
+pub struct NativeModel {
+    /// Immutable deployment artifacts, shared across every session
+    /// spawned from the same deployment ([`NativeModel::from_artifacts`]).
+    pub shared: Arc<ModelArtifacts>,
+    /// This session's mutable training state.
+    pub state: SessionState,
+}
+
+impl NativeModel {
+    /// Deploy a standalone model: artifacts plus one warm session. See
+    /// [`ModelArtifacts::deploy`]; fleet callers deploy artifacts once and
+    /// spawn sessions with [`NativeModel::from_artifacts`].
+    pub fn build(def: ModelDef, cfg: DnnConfig, fp: &FloatParams, calib: &Calibration) -> Self {
+        Self::build_with_fusion(def, cfg, fp, calib, crate::graph::plan::fuse_default())
+    }
+
+    /// [`NativeModel::build`] with an explicit plan-fusion mode (see
+    /// [`ExecPlan::compile_with`]); `build` follows the `TT_NO_FUSE`
+    /// environment default. The parity suite deploys one model per mode
+    /// from the same float masters and asserts bit-identical behavior.
+    pub fn build_with_fusion(
+        def: ModelDef,
+        cfg: DnnConfig,
+        fp: &FloatParams,
+        calib: &Calibration,
+        fused: bool,
+    ) -> Self {
+        let shared = Arc::new(ModelArtifacts::deploy_with_fusion(def, cfg, fp, calib, fused));
+        let mut model = Self::from_artifacts(shared);
+        model.warm_packs();
+        model
+    }
+
+    /// Spawn a session off shared deployment artifacts. Cheap by design:
+    /// parameters are Arc-CoW clones of the base weights and the pack
+    /// cache starts cold (filled lazily by the first backward pass), so a
+    /// fresh tenant owns kilobytes, not a model copy — the fleet
+    /// coordinator's per-tenant memory story.
+    pub fn from_artifacts(shared: Arc<ModelArtifacts>) -> Self {
+        let state = SessionState::fresh(&shared);
+        NativeModel { shared, state }
+    }
+
+    /// The shared deployment artifacts (clone the `Arc` to spawn sibling
+    /// sessions off the same deployment).
+    pub fn artifacts(&self) -> &Arc<ModelArtifacts> {
+        &self.shared
+    }
+
+    /// The execution plan compiled at deployment.
+    pub fn plan(&self) -> &ExecPlan {
+        self.shared.plan()
+    }
+
+    /// Scratch arena pre-sized from the plan's exact requirements: a full
+    /// training step (any configuration) performs zero arena growth.
+    pub fn make_scratch(&self) -> Scratch {
+        self.shared.make_scratch()
+    }
+
+    /// The session's packed-weight cache (read-only view; the plan ops
+    /// consult it on the backward hot path).
+    pub fn packs(&self) -> &PackCache {
+        self.state.packs()
+    }
+
+    /// Per-layer parameter versions (the pack cache's freshness key).
+    pub fn param_versions(&self) -> &[u64] {
+        self.state.param_versions()
+    }
+
+    /// Pack-cache telemetry (hits/misses/builds).
+    pub fn pack_stats(&self) -> PackStats {
+        self.state.packs.stats()
+    }
+
+    /// Record that layer `i`'s parameters changed (see
+    /// [`SessionState::touch_layer`]).
+    pub fn touch_layer(&mut self, i: usize) {
+        self.state.touch_layer(i);
+    }
+
+    /// Re-pack stale backward weight packs (see
+    /// [`SessionState::warm_packs`]).
+    pub fn warm_packs(&mut self) {
+        self.state.warm_packs(&self.shared.def);
+    }
+
     /// Re-randomize the trainable layers (§IV-A: "we set the last five
     /// layers of each DNN to random values, thereby resetting its
     /// classification capabilities").
     pub fn reset_trainable(&mut self, rng: &mut Pcg32) {
-        for i in 0..self.def.layers.len() {
-            if !self.def.layers[i].trainable {
+        for i in 0..self.shared.def.layers.len() {
+            if !self.shared.def.layers[i].trainable {
                 continue;
             }
-            if let Some((w, b)) = init_layer(&self.def.layers[i], rng) {
-                self.params[i] = match self.prec[i] {
+            if let Some((w, b)) = init_layer(&self.shared.def.layers[i], rng) {
+                self.state.params[i] = match self.shared.prec[i] {
                     Precision::Uint8 => LayerParams::Q { w: QTensor::quantize(&w), bias: b },
                     Precision::Float32 => LayerParams::F { w, bias: b },
                 };
@@ -267,6 +430,7 @@ impl NativeModel {
     /// pretrained weights out for deployment under other configs).
     pub fn to_float_params(&self) -> FloatParams {
         let layers = self
+            .state
             .params
             .iter()
             .map(|p| match p {
@@ -301,7 +465,7 @@ impl NativeModel {
         scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> FwdTrace {
-        self.plan.run_forward(self, x, scratch, ops)
+        self.shared.plan.run_forward(self, x, scratch, ops)
     }
 
     /// Training-path forward: run the regular forward pass, then let the
@@ -341,12 +505,13 @@ impl NativeModel {
         trace: &FwdTrace,
         ops: &mut OpCounter,
     ) -> Vec<Option<(usize, usize)>> {
-        self.def
+        self.shared
+            .def
             .layers
             .iter()
             .enumerate()
             .map(|(i, l)| {
-                if !l.trainable || self.prec[i] != Precision::Uint8 {
+                if !l.trainable || self.shared.prec[i] != Precision::Uint8 {
                     return None;
                 }
                 // The fused epilogues already counted saturation while
@@ -390,10 +555,10 @@ impl NativeModel {
             let Some(&(sat, n)) = s.as_ref() else { continue };
             if sat * 100 > n {
                 let relu = matches!(
-                    self.def.layers[i].kind,
+                    self.shared.def.layers[i].kind,
                     LayerKind::Conv { relu: true, .. } | LayerKind::Linear { relu: true, .. }
                 );
-                let qp = self.act_qp[i];
+                let qp = self.state.act_qp[i];
                 let lo = (0 - qp.zero_point) as f32 * qp.scale;
                 let hi = (255 - qp.zero_point) as f32 * qp.scale;
                 let (nlo, nhi) = if relu {
@@ -402,7 +567,7 @@ impl NativeModel {
                     let span = hi - lo;
                     (lo - 0.25 * span, hi + 0.25 * span)
                 };
-                self.act_qp[i] = QParams::from_min_max(nlo, nhi);
+                self.state.act_qp[i] = QParams::from_min_max(nlo, nhi);
             }
         }
     }
@@ -458,9 +623,9 @@ impl NativeModel {
         // Refresh any backward pack the optimizer invalidated since the
         // last pass (per-layer version compare; a no-op when clean).
         self.warm_packs();
-        let mut obs = std::mem::take(&mut self.err_obs);
+        let mut obs = std::mem::take(&mut self.state.err_obs);
         let r = self.backward_with(trace, head_err, masks, &mut obs, scratch, ops);
-        self.err_obs = obs;
+        self.state.err_obs = obs;
         r
     }
 
@@ -486,7 +651,7 @@ impl NativeModel {
         scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> BwdResult {
-        self.plan.run_backward(self, trace, head_err, masks, err_obs, scratch, ops)
+        self.shared.plan.run_backward(self, trace, head_err, masks, err_obs, scratch, ops)
     }
 
     /// Plain inference: predicted class for one sample.

@@ -48,7 +48,7 @@ fn forward_shapes_all_configs() {
         let mut ops = OpCounter::new();
         let t = m.forward(&xs[0], &mut ops);
         assert_eq!(t.logits.len(), 3, "{cfg:?}");
-        assert_eq!(t.acts.len(), m.def.layers.len());
+        assert_eq!(t.acts.len(), m.shared.def.layers.len());
         assert!(ops.total_macs() > 0);
     }
 }
@@ -99,7 +99,7 @@ fn backward_produces_grads_for_trainable_layers_only() {
         let (mut m, xs, ys) = deployed(cfg, 65);
         let mut ops = OpCounter::new();
         let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
-        for (i, l) in m.def.layers.iter().enumerate() {
+        for (i, l) in m.shared.def.layers.iter().enumerate() {
             assert_eq!(bwd.grads[i].is_some(), l.trainable, "layer {i} {cfg:?}");
         }
     }
@@ -112,7 +112,7 @@ fn grad_shapes_match_weights() {
     let (_, _, bwd) = m.train_sample(&xs[0], ys[0], &mut DenseUpdates, &mut ops);
     for (i, g) in bwd.grads.iter().enumerate() {
         if let Some(g) = g {
-            match &m.params[i] {
+            match &m.state.params[i] {
                 LayerParams::Q { w, bias } => {
                     assert_eq!(g.gw.shape(), w.shape());
                     assert_eq!(g.gb.len(), bias.len());
@@ -188,10 +188,10 @@ fn train_batch_is_worker_count_invariant() {
             }
         }
     }
-    for (a, b) in m1.act_qp.iter().zip(m2.act_qp.iter()) {
+    for (a, b) in m1.state.act_qp.iter().zip(m2.state.act_qp.iter()) {
         assert_eq!(a, b, "adapted activation ranges must match");
     }
-    for (a, b) in m1.err_obs.iter().zip(m2.err_obs.iter()) {
+    for (a, b) in m1.state.err_obs.iter().zip(m2.state.err_obs.iter()) {
         assert_eq!(a.range(), b.range(), "merged observer state must match");
     }
 }
@@ -250,6 +250,7 @@ fn flatten_activation_aliases_its_input() {
     let mut ops = OpCounter::new();
     let t = m.forward(&xs[0], &mut ops);
     let i = m
+        .shared
         .def
         .layers
         .iter()

@@ -351,17 +351,17 @@ impl ExecPlan {
         scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> FwdTrace {
-        let n = model.def.layers.len();
-        let input = match model.prec[0] {
-            Precision::Uint8 => Act::Q(QTensor::quantize_with(x, model.input_qp)),
+        let n = model.shared.def.layers.len();
+        let input = match model.shared.prec[0] {
+            Precision::Uint8 => Act::Q(QTensor::quantize_with(x, model.shared.input_qp)),
             Precision::Float32 => Act::F(x.clone()),
         };
         let mut ctx = ExecCtx {
-            params: &model.params,
-            prec: &model.prec,
-            act_qp: &model.act_qp,
-            input_qp: model.input_qp,
-            layers: &model.def.layers,
+            params: &model.state.params,
+            prec: &model.shared.prec,
+            act_qp: &model.state.act_qp,
+            input_qp: model.shared.input_qp,
+            layers: &model.shared.def.layers,
             stop: 0,
             scratch,
             packs: model.packs(),
@@ -404,10 +404,10 @@ impl ExecPlan {
         scratch: &mut Scratch,
         ops: &mut OpCounter,
     ) -> BwdResult {
-        let n = model.def.layers.len();
+        let n = model.shared.def.layers.len();
         assert_eq!(err_obs.len(), n, "one error observer per layer");
-        let stop = model.def.first_trainable().unwrap_or(n);
-        let err = match model.prec[n - 1] {
+        let stop = model.shared.def.first_trainable().unwrap_or(n);
+        let err = match model.shared.prec[n - 1] {
             Precision::Float32 => Act::F(head_err),
             Precision::Uint8 => {
                 let obs = &mut err_obs[n - 1];
@@ -416,11 +416,11 @@ impl ExecPlan {
             }
         };
         let mut ctx = ExecCtx {
-            params: &model.params,
-            prec: &model.prec,
-            act_qp: &model.act_qp,
-            input_qp: model.input_qp,
-            layers: &model.def.layers,
+            params: &model.state.params,
+            prec: &model.shared.prec,
+            act_qp: &model.state.act_qp,
+            input_qp: model.shared.input_qp,
+            layers: &model.shared.def.layers,
             stop,
             scratch,
             packs: model.packs(),

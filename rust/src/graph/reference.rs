@@ -24,19 +24,19 @@ pub use crate::graph::reference_bwd::backward_reference;
 /// qparams through).
 pub(crate) fn in_qp(m: &NativeModel, i: usize) -> crate::quant::QParams {
     if i == 0 {
-        m.input_qp
+        m.shared.input_qp
     } else {
         let mut j = i;
         while j > 0 {
             j -= 1;
-            match m.def.layers[j].kind {
+            match m.shared.def.layers[j].kind {
                 LayerKind::Conv { .. } | LayerKind::Linear { .. } | LayerKind::GlobalAvgPool => {
-                    return m.act_qp[j];
+                    return m.state.act_qp[j];
                 }
                 _ => {}
             }
         }
-        m.input_qp
+        m.shared.input_qp
     }
 }
 
@@ -47,26 +47,26 @@ pub fn forward_reference(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> FwdTrace {
-    let n = m.def.layers.len();
+    let n = m.shared.def.layers.len();
     let mut acts: Vec<Act> = Vec::with_capacity(n);
     let mut argmax: Vec<Option<Vec<u32>>> = vec![None; n];
 
-    let input = match m.prec[0] {
-        Precision::Uint8 => Act::Q(QTensor::quantize_with(x, m.input_qp)),
+    let input = match m.shared.prec[0] {
+        Precision::Uint8 => Act::Q(QTensor::quantize_with(x, m.shared.input_qp)),
         Precision::Float32 => Act::F(x.clone()),
     };
 
     let mut cur = input.clone();
-    for (i, l) in m.def.layers.iter().enumerate() {
+    for (i, l) in m.shared.def.layers.iter().enumerate() {
         // coerce the running activation into this layer's precision
-        cur = match (m.prec[i], cur) {
+        cur = match (m.shared.prec[i], cur) {
             (Precision::Uint8, Act::F(t)) => Act::Q(QTensor::quantize_with(&t, in_qp(m, i))),
             (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
             (_, c) => c,
         };
         cur = match (&l.kind, &cur) {
             (LayerKind::Conv { geom, relu }, Act::Q(xq)) => {
-                let (w, bias) = match &m.params[i] {
+                let (w, bias) = match &m.state.params[i] {
                     LayerParams::Q { w, bias } => (w, bias),
                     other => panic!(
                         "layer {i} ({}): expected quantized (uint8) conv params, found {}",
@@ -76,14 +76,23 @@ pub fn forward_reference(
                 };
                 let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
                 let y = if geom.depthwise {
-                    qconv::qconv2d_fwd(xq, w, &bq, geom, m.act_qp[i], *relu, ops)
+                    qconv::qconv2d_fwd(xq, w, &bq, geom, m.state.act_qp[i], *relu, ops)
                 } else {
-                    qconv::qconv2d_fwd_gemm(xq, w, &bq, geom, m.act_qp[i], *relu, scratch, ops)
+                    qconv::qconv2d_fwd_gemm(
+                        xq,
+                        w,
+                        &bq,
+                        geom,
+                        m.state.act_qp[i],
+                        *relu,
+                        scratch,
+                        ops,
+                    )
                 };
                 Act::Q(y)
             }
             (LayerKind::Conv { geom, relu }, Act::F(xf)) => {
-                let (w, bias) = match &m.params[i] {
+                let (w, bias) = match &m.state.params[i] {
                     LayerParams::F { w, bias } => (w, bias),
                     other => panic!(
                         "layer {i} ({}): expected float32 conv params, found {}",
@@ -99,7 +108,7 @@ pub fn forward_reference(
                 Act::F(y)
             }
             (LayerKind::Linear { relu, .. }, Act::Q(xq)) => {
-                let (w, bias) = match &m.params[i] {
+                let (w, bias) = match &m.state.params[i] {
                     LayerParams::Q { w, bias } => (w, bias),
                     other => panic!(
                         "layer {i} ({}): expected quantized (uint8) linear params, found {}",
@@ -108,10 +117,10 @@ pub fn forward_reference(
                     ),
                 };
                 let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
-                Act::Q(qlinear::qlinear_fwd(xq, w, &bq, m.act_qp[i], *relu, ops))
+                Act::Q(qlinear::qlinear_fwd(xq, w, &bq, m.state.act_qp[i], *relu, ops))
             }
             (LayerKind::Linear { relu, .. }, Act::F(xf)) => {
-                let (w, bias) = match &m.params[i] {
+                let (w, bias) = match &m.state.params[i] {
                     LayerParams::F { w, bias } => (w, bias),
                     other => panic!(
                         "layer {i} ({}): expected float32 linear params, found {}",
@@ -132,7 +141,7 @@ pub fn forward_reference(
                 Act::F(o.y)
             }
             (LayerKind::GlobalAvgPool, Act::Q(xq)) => {
-                Act::Q(pool::qgap_fwd(xq, m.act_qp[i], ops))
+                Act::Q(pool::qgap_fwd(xq, m.state.act_qp[i], ops))
             }
             (LayerKind::GlobalAvgPool, Act::F(xf)) => Act::F(pool::fgap_fwd(xf, ops)),
             (LayerKind::Flatten, a) => {

@@ -24,13 +24,13 @@ pub fn backward_reference(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> BwdResult {
-    let n = m.def.layers.len();
+    let n = m.shared.def.layers.len();
     assert_eq!(err_obs.len(), n, "one error observer per layer");
-    let stop = m.def.first_trainable().unwrap_or(n);
+    let stop = m.shared.def.first_trainable().unwrap_or(n);
     let mut grads: Vec<Option<LayerGrads>> = (0..n).map(|_| None).collect();
 
     // Error w.r.t. the output of layer `i`, in layer i's precision.
-    let mut err: Act = match m.prec[n - 1] {
+    let mut err: Act = match m.shared.prec[n - 1] {
         Precision::Float32 => Act::F(head_err),
         Precision::Uint8 => {
             let obs = &mut err_obs[n - 1];
@@ -40,9 +40,9 @@ pub fn backward_reference(
     };
 
     for i in (stop..n).rev() {
-        let l = m.def.layers[i].clone();
+        let l = m.shared.def.layers[i].clone();
         // Coerce error into this layer's precision (mixed boundary).
-        err = match (m.prec[i], err) {
+        err = match (m.shared.prec[i], err) {
             (Precision::Uint8, Act::F(t)) => {
                 let obs = &mut err_obs[i];
                 obs.observe(t.data());
@@ -54,7 +54,7 @@ pub fn backward_reference(
 
         let layer_in: Act = if i == 0 { trace.input.clone() } else { trace.acts[i - 1].clone() };
         // Input act coerced to this layer's precision (as in forward).
-        let layer_in = match (m.prec[i], layer_in) {
+        let layer_in = match (m.shared.prec[i], layer_in) {
             (Precision::Uint8, Act::F(t)) => Act::Q(QTensor::quantize_with(&t, in_qp(m, i))),
             (Precision::Float32, Act::Q(t)) => Act::F(t.dequantize()),
             (_, a) => a,
@@ -75,7 +75,7 @@ pub fn backward_reference(
                                 qconv::relu_bwd_mask_q(eq, y, ops);
                             }
                         }
-                        let (w, _) = match &m.params[i] {
+                        let (w, _) = match &m.state.params[i] {
                             LayerParams::Q { w, bias } => (w, bias),
                             other => panic!(
                                 "layer {i} ({}): backward expected quantized (uint8) conv \
@@ -146,7 +146,7 @@ pub fn backward_reference(
                                 fconv::relu_bwd_mask_f(ef, y, ops);
                             }
                         }
-                        let (w, _) = match &m.params[i] {
+                        let (w, _) = match &m.state.params[i] {
                             LayerParams::F { w, bias } => (w, bias),
                             other => panic!(
                                 "layer {i} ({}): backward expected float32 conv params, \
@@ -223,7 +223,7 @@ pub fn backward_reference(
                                 qconv::relu_bwd_mask_q(eq, y, ops);
                             }
                         }
-                        let (w, _) = match &m.params[i] {
+                        let (w, _) = match &m.state.params[i] {
                             LayerParams::Q { w, bias } => (w, bias),
                             other => panic!(
                                 "layer {i} ({}): backward expected quantized (uint8) linear \
@@ -272,7 +272,7 @@ pub fn backward_reference(
                                 fconv::relu_bwd_mask_f(ef, y, ops);
                             }
                         }
-                        let (w, _) = match &m.params[i] {
+                        let (w, _) = match &m.state.params[i] {
                             LayerParams::F { w, bias } => (w, bias),
                             other => panic!(
                                 "layer {i} ({}): backward expected float32 linear params, \

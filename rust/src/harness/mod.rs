@@ -23,34 +23,14 @@ use crate::memplan::{self, MemoryReport};
 use crate::train::fqt::FqtSgd;
 use crate::train::loop_::{self, Sparsity, Split, TrainReport};
 use crate::train::sparse::DynamicSparse;
-use crate::util::bench::env_usize;
 use crate::util::json::Json;
 use crate::util::prng::Pcg32;
 
-/// Scaling knobs from the environment.
-#[derive(Clone, Copy, Debug)]
-pub struct Knobs {
-    pub epochs: usize,
-    pub runs: usize,
-    pub train_pc: usize,
-    pub test_pc: usize,
-    /// Worker threads for the batched execution engine (1 = sequential;
-    /// any value yields bit-identical results by the batch-engine
-    /// determinism contract).
-    pub workers: usize,
-}
-
-impl Knobs {
-    pub fn from_env() -> Knobs {
-        Knobs {
-            epochs: env_usize("TT_EPOCHS", 5),
-            runs: env_usize("TT_RUNS", 2),
-            train_pc: env_usize("TT_TRAIN_PC", 3),
-            test_pc: env_usize("TT_TEST_PC", 2),
-            workers: env_usize("TT_WORKERS", 1).max(1),
-        }
-    }
-}
+/// Scaling knobs — the typed [`crate::config::RunConfig`], re-exported
+/// under the name the harness and benches have always used. The `TT_*`
+/// environment variables are parsed in exactly one place
+/// ([`crate::config::RunConfig::from_env`]).
+pub use crate::config::{RunConfig, RunConfig as Knobs};
 
 /// Paper hyperparameters (§IV-A): lr 0.001, batch 48. The reduced-scale
 /// simulations use a slightly larger lr to compensate for the much smaller

@@ -59,6 +59,7 @@
 //!    `Cargo.toml`); the default build is fully offline and
 //!    dependency-free.
 
+pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod device;

@@ -221,8 +221,11 @@ fn cmd_stream(args: &Args) -> i32 {
     let calib = tinytrain::graph::exec::calibrate(&def, &fp, &cal.xs);
     let model = tinytrain::graph::exec::NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
     let mut opt = FqtSgd::new(&model, harness::LR, harness::BATCH);
-    let mut coord =
-        Coordinator::new(model, dev, &mut opt, Sparsity::Dense, CoordinatorConfig::default(), seed);
+    let mut coord = Coordinator::builder(model, dev, &mut opt)
+        .sparsity(Sparsity::Dense)
+        .config(CoordinatorConfig::default())
+        .seed(seed)
+        .build();
     let shifted = dom.shifted(seed ^ 42);
     let mut stream =
         SampleStream::with_shift(&dom, &shifted, samples, samples / 2, 1.0 / rate, seed);

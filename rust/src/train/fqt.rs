@@ -126,9 +126,10 @@ pub struct FqtSgd {
 impl FqtSgd {
     pub fn new(model: &NativeModel, lr: f32, batch: usize) -> FqtSgd {
         let bufs = model
+            .state
             .params
             .iter()
-            .zip(&model.def.layers)
+            .zip(&model.shared.def.layers)
             .map(|(p, l)| {
                 if !l.trainable {
                     return None;
@@ -154,7 +155,7 @@ impl FqtSgd {
             if !buf.touched.iter().any(|&t| t) {
                 continue;
             }
-            match (&mut model.params[i], model.prec[i]) {
+            match (&mut model.state.params[i], model.shared.prec[i]) {
                 (LayerParams::Q { w, bias }, _) => {
                     update_quantized(
                         w,
@@ -315,8 +316,8 @@ mod tests {
     #[test]
     fn weight_scale_adapts_during_training() {
         let (mut m, xs, ys) = setup(DnnConfig::Uint8);
-        let head = m.def.layers.len() - 1;
-        let qp_before = match &m.params[head] {
+        let head = m.shared.def.layers.len() - 1;
+        let qp_before = match &m.state.params[head] {
             LayerParams::Q { w, .. } => w.qp,
             other => panic!(
                 "head layer of the uint8 config must hold quantized params, found {}",
@@ -331,7 +332,7 @@ mod tests {
                 opt.accumulate(&mut m, &bwd, &mut ops);
             }
         }
-        let qp_after = match &m.params[head] {
+        let qp_after = match &m.state.params[head] {
             LayerParams::Q { w, .. } => w.qp,
             other => panic!(
                 "head layer of the uint8 config must hold quantized params, found {}",
@@ -365,7 +366,7 @@ mod tests {
         let (mut m, xs, ys) = setup(DnnConfig::Uint8);
         let mut opt = FqtSgd::new(&m, 0.05, 4);
         let snapshot = |m: &NativeModel| -> Vec<u8> {
-            m.params
+            m.state.params
                 .iter()
                 .filter_map(|p| match p {
                     LayerParams::Q { w, .. } => Some(w.values.data().to_vec()),
@@ -391,7 +392,7 @@ mod tests {
     fn state_bytes_counts_trainable_layers_only() {
         let (m, _, _) = setup(DnnConfig::Uint8);
         let opt_full = FqtSgd::new(&m, 0.01, 8);
-        let mut def2 = m.def.clone();
+        let mut def2 = m.shared.def.clone();
         def2.set_trainable_tail(1);
         let mut rng = Pcg32::seeded(5);
         let fp = FloatParams::init(&def2, &mut rng);

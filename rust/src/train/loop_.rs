@@ -296,7 +296,7 @@ mod tests {
             let _ = train_batched(&mut m, &mut opt, &tr, &te, 3, 4, workers, &mut rng);
             let mut wbits = Vec::new();
             let mut bbits = Vec::new();
-            for p in &m.params {
+            for p in &m.state.params {
                 if let LayerParams::Q { w, bias } = p {
                     wbits.extend_from_slice(w.values.data());
                     bbits.extend(bias.iter().map(|b| b.to_bits()));

@@ -70,9 +70,10 @@ impl QOptimizer {
             }
         };
         let acc: Vec<_> = model
+            .state
             .params
             .iter()
-            .zip(&model.def.layers)
+            .zip(&model.shared.def.layers)
             .map(|(p, l)| mk(p, l.trainable))
             .collect();
         let vel = acc.clone();
@@ -87,7 +88,7 @@ impl QOptimizer {
         for i in 0..self.acc.len() {
             let Some((ga, gba)) = self.acc[i].as_mut() else { continue };
             let (gv, gbv) = self.vel[i].as_mut().unwrap();
-            match &mut model.params[i] {
+            match &mut model.state.params[i] {
                 LayerParams::Q { w, bias } => {
                     // dequantize, momentum step (optionally QAS-scaled),
                     // requantize at the ORIGINAL frozen parameters.
@@ -275,8 +276,8 @@ mod tests {
     #[test]
     fn naive_keeps_quant_params_frozen() {
         let (mut m, xs, ys) = setup(DnnConfig::Uint8, 83);
-        let head = m.def.layers.len() - 1;
-        let qp0 = match &m.params[head] {
+        let head = m.shared.def.layers.len() - 1;
+        let qp0 = match &m.state.params[head] {
             LayerParams::Q { w, .. } => w.qp,
             other => panic!(
                 "head layer of the uint8 config must hold quantized params, found {}",
@@ -285,7 +286,7 @@ mod tests {
         };
         let mut opt = NaiveQSgdM::new(&m, 0.05, 4);
         train(&mut m, &mut opt, &xs, &ys, 5);
-        let qp1 = match &m.params[head] {
+        let qp1 = match &m.state.params[head] {
             LayerParams::Q { w, .. } => w.qp,
             other => panic!(
                 "head layer of the uint8 config must hold quantized params, found {}",

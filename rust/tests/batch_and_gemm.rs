@@ -137,7 +137,7 @@ fn gemm_backward_bit_exact_across_model_geometries() {
 fn quantized_weight_snapshot(m: &tinytrain::graph::exec::NativeModel) -> (Vec<u8>, Vec<u32>) {
     let mut wbits = Vec::new();
     let mut bbits = Vec::new();
-    for p in &m.params {
+    for p in &m.state.params {
         match p {
             LayerParams::Q { w, bias } => {
                 wbits.extend_from_slice(w.values.data());

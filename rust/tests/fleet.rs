@@ -1,0 +1,166 @@
+//! Fleet coordinator invariants (integration surface):
+//!
+//!  1. **Tenant determinism** — a fleet of N tenants produces
+//!     bit-identical per-tenant weights for every `workers` setting, and
+//!     those weights match N standalone single-tenant runs driven
+//!     sequentially off the same shared artifacts. Tenants only depend
+//!     on the shared deployment and their own derived seeds, so the
+//!     worker count and sharding must be unobservable.
+//!  2. **Session isolation** — sessions spawned off one `ModelArtifacts`
+//!     share nothing mutable: training or touching tenant A never moves
+//!     tenant B's parameter versions, packs or weights.
+
+use std::sync::Arc;
+
+use tinytrain::config::RunConfig;
+use tinytrain::coordinator::fleet::{FleetConfig, FleetCoordinator, TenantSession};
+use tinytrain::coordinator::CoordinatorConfig;
+use tinytrain::data::{spec_by_name, Domain};
+use tinytrain::device;
+use tinytrain::graph::exec::{calibrate, FloatParams, LayerParams, ModelArtifacts, NativeModel};
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::util::prng::Pcg32;
+
+fn deploy_artifacts() -> (Arc<ModelArtifacts>, Domain) {
+    let spec = spec_by_name("cifar10").unwrap();
+    let dom = Domain::new(&spec, [3, 12, 12], 5);
+    let mut rng = Pcg32::seeded(17);
+    let def = models::mnist_cnn(&[3, 12, 12], 10);
+    let fp = FloatParams::init(&def, &mut rng);
+    let (cal, _) = dom.splits(1, 0, &mut rng);
+    let calib = calibrate(&def, &fp, &cal.xs);
+    (Arc::new(ModelArtifacts::deploy(def, DnnConfig::Uint8, &fp, &calib)), dom)
+}
+
+fn fleet_cfg(tenants: usize) -> FleetConfig {
+    FleetConfig::builder()
+        .tenants(tenants)
+        .arrivals_per_tenant(20)
+        .shift_at(10)
+        .mean_gap_s(0.05)
+        .session(CoordinatorConfig::builder().replay_capacity(16).warmup_samples(3).build())
+        .seed(9)
+        .build()
+}
+
+/// Bit-level fingerprint of one tenant's weights (quantized values plus
+/// float bias/weight bit patterns).
+fn weight_snapshot(m: &NativeModel) -> (Vec<u8>, Vec<u32>) {
+    let mut wbits = Vec::new();
+    let mut bbits = Vec::new();
+    for p in &m.state.params {
+        match p {
+            LayerParams::Q { w, bias } => {
+                wbits.extend_from_slice(w.values.data());
+                bbits.extend(bias.iter().map(|b| b.to_bits()));
+            }
+            LayerParams::F { w, bias } => {
+                bbits.extend(w.data().iter().map(|v| v.to_bits()));
+                bbits.extend(bias.iter().map(|b| b.to_bits()));
+            }
+            LayerParams::None => {}
+        }
+    }
+    (wbits, bbits)
+}
+
+/// Run a fresh fleet (same artifacts, same config) at the given worker
+/// count and return every tenant's final weight fingerprint.
+fn run_fleet(workers: usize) -> Vec<(Vec<u8>, Vec<u32>)> {
+    let (shared, dom) = deploy_artifacts();
+    let run_cfg = RunConfig::builder().workers(workers).build();
+    let mut fleet =
+        FleetCoordinator::new(shared, device::imxrt1062(), dom, run_cfg, fleet_cfg(3));
+    let rep = fleet.run();
+    assert_eq!(rep.aggregate.arrivals, 60);
+    assert!(rep.aggregate.train_steps > 0, "workers={workers}: fleet must train");
+    fleet.tenants.iter().map(|t| weight_snapshot(&t.model)).collect()
+}
+
+#[test]
+fn per_tenant_weights_are_bit_identical_for_any_worker_count() {
+    let base = run_fleet(1);
+    for workers in [2usize, 4] {
+        let got = run_fleet(workers);
+        assert_eq!(base.len(), got.len());
+        for (id, (want, have)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(want, have, "tenant {id} diverged at workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn fleet_tenants_match_sequential_standalone_runs() {
+    let fleet_snaps = run_fleet(4);
+
+    // The same tenants, spawned and driven one at a time with a private
+    // scratch arena — no fleet, no pool.
+    let (shared, dom) = deploy_artifacts();
+    let cfg = fleet_cfg(3);
+    let coord = FleetCoordinator::new(
+        Arc::clone(&shared),
+        device::imxrt1062(),
+        dom,
+        RunConfig::default(),
+        cfg.clone(),
+    );
+    let mut scratch = shared.make_scratch();
+    for (id, want) in fleet_snaps.iter().enumerate() {
+        let mut t = TenantSession::spawn(&shared, id, &cfg);
+        t.run_stream(coord.base(), coord.shift_domains(), coord.device(), &cfg, &mut scratch);
+        assert_eq!(
+            want,
+            &weight_snapshot(&t.model),
+            "tenant {id}: fleet result differs from a standalone sequential run"
+        );
+    }
+}
+
+#[test]
+fn touching_one_session_never_invalidates_another() {
+    let (shared, _) = deploy_artifacts();
+    let mut a = NativeModel::from_artifacts(Arc::clone(&shared));
+    let b = NativeModel::from_artifacts(Arc::clone(&shared));
+
+    let b_versions_before = b.state.param_versions().to_vec();
+    for i in 0..a.state.param_versions().len() {
+        a.state.touch_layer(i);
+    }
+    a.state.warm_packs(&shared.def);
+
+    assert_eq!(
+        b.state.param_versions(),
+        &b_versions_before[..],
+        "tenant A's touches must not move tenant B's versions"
+    );
+    // B's weights still alias the shared base image: zero CoW divergence.
+    assert_eq!(
+        weight_snapshot(&b),
+        weight_snapshot(&NativeModel::from_artifacts(Arc::clone(&shared))),
+        "tenant B's weights must still equal the base deployment"
+    );
+}
+
+#[test]
+fn training_one_tenant_leaves_siblings_at_base_cost() {
+    let (shared, dom) = deploy_artifacts();
+    let cfg = fleet_cfg(2);
+    let mut a = TenantSession::spawn(&shared, 0, &cfg);
+    let b = TenantSession::spawn(&shared, 1, &cfg);
+    let b_fresh_bytes = b.session_bytes();
+
+    let pool: Vec<Domain> = vec![dom.shifted(99)];
+    let mut scratch = shared.make_scratch();
+    a.run_stream(&dom, &pool, &device::imxrt1062(), &cfg, &mut scratch);
+
+    assert!(a.telemetry.train_steps > 0, "tenant A must actually train");
+    assert!(
+        a.session_bytes() > b_fresh_bytes,
+        "training must CoW-diverge A's weights from the base"
+    );
+    assert_eq!(
+        b.session_bytes(),
+        b_fresh_bytes,
+        "tenant A's training must not grow tenant B's session"
+    );
+}

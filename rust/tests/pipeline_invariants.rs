@@ -32,7 +32,7 @@ fn training_preserves_inference_representation() {
     let calib = calibrate(&def, &fp, &tr.xs[..2]);
     let mut m = NativeModel::build(def, DnnConfig::Uint8, &fp, &calib);
 
-    let bytes_before: usize = m.params.iter().map(|p| p.byte_size()).sum();
+    let bytes_before: usize = m.state.params.iter().map(|p| p.byte_size()).sum();
     let mut opt = FqtSgd::new(&m, 0.01, 2);
     let mut ops = OpCounter::new();
     for (x, &y) in tr.xs.iter().zip(&tr.ys) {
@@ -40,7 +40,7 @@ fn training_preserves_inference_representation() {
         opt.accumulate(&mut m, &bwd, &mut ops);
     }
     opt.finish(&mut m, &mut ops);
-    let bytes_after: usize = m.params.iter().map(|p| p.byte_size()).sum();
+    let bytes_after: usize = m.state.params.iter().map(|p| p.byte_size()).sum();
     assert_eq!(bytes_before, bytes_after, "weight memory layout must be stable");
     // inference still works on the same object
     let _ = m.predict(&tr.xs[0], &mut ops);

@@ -81,8 +81,8 @@ fn assert_backward_parity(m: &NativeModel, x: &TensorF32, sparse: bool, tag: &st
     let t2 = forward_reference(m, x, &mut s2, &mut o2);
     let mut throwaway = OpCounter::new();
     let (loss, _, err) = softmax::softmax_ce(&t1.logits, 0, &mut throwaway);
-    let mut obs1 = m.err_obs.clone();
-    let mut obs2 = m.err_obs.clone();
+    let mut obs1 = m.state.err_obs.clone();
+    let mut obs2 = m.state.err_obs.clone();
     let (b1, b2) = if sparse {
         // two identical deterministic controllers, identical call sequences
         let mut ctl1 = DynamicSparse::new(0.4, 1.0);
@@ -252,7 +252,7 @@ fn sparse_training_scratch_growth_is_one_shot() {
         let mut ctl = DynamicSparse::new(0.4, 1.0);
         ctl.seed_max_loss(loss * 4.0 + 1.0);
         ctl.begin_sample(loss);
-        let mut obs = m.err_obs.clone();
+        let mut obs = m.state.err_obs.clone();
         let _ = m.backward_with(&trace, err, &mut ctl, &mut obs, scratch, ops);
     };
     run_sparse(&xs[0], &mut scratch, &mut ops);
@@ -275,6 +275,7 @@ fn flatten_is_allocation_free_view() {
     let mut ops = OpCounter::new();
     let t = m.forward(&xs[0], &mut ops);
     let i = m
+        .shared
         .def
         .layers
         .iter()
@@ -365,8 +366,8 @@ fn assert_pair_backward(
     let t2 = mu.forward_in(x, &mut s2, &mut o2);
     let mut throwaway = OpCounter::new();
     let (loss, _, err) = softmax::softmax_ce(&t1.logits, 0, &mut throwaway);
-    let mut obs1 = mf.err_obs.clone();
-    let mut obs2 = mu.err_obs.clone();
+    let mut obs1 = mf.state.err_obs.clone();
+    let mut obs2 = mu.state.err_obs.clone();
     let (b1, b2) = if sparse {
         let mut ctl1 = DynamicSparse::new(0.4, 1.0);
         let mut ctl2 = DynamicSparse::new(0.4, 1.0);
@@ -479,7 +480,7 @@ fn fused_telemetry_matches_unfused_oracle() {
                 );
             }
             assert_eq!(of, ou, "{name}/{cfg:?}: adaptation op totals diverged");
-            for (i, (a, b)) in mf.act_qp.iter().zip(mu.act_qp.iter()).enumerate() {
+            for (i, (a, b)) in mf.state.act_qp.iter().zip(mu.state.act_qp.iter()).enumerate() {
                 assert_eq!(
                     a.scale.to_bits(),
                     b.scale.to_bits(),
