@@ -16,13 +16,16 @@ use tinytrain::device;
 use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, ModelArtifacts, NativeModel};
 use tinytrain::graph::plan::ExecPlan;
 use tinytrain::graph::{models, DnnConfig};
+use tinytrain::kernels::simd::{self, KernelSel};
 use tinytrain::kernels::{dwconv, fconv, gemm, qconv, qlinear, softmax, ConvGeom, OpCounter};
 use tinytrain::memplan::Scratch;
 use tinytrain::quant::{requantize, QParams, QTensor};
 use tinytrain::tensor::TensorF32;
 use tinytrain::train::fqt::FqtSgd;
 use tinytrain::train::Optimizer;
-use tinytrain::util::bench::{check_perf_rows, env_usize, fmt_duration, time_it, ResultSink, Table};
+use tinytrain::util::bench::{
+    check_perf_rows, env_usize, fmt_duration, safe_speedup, time_it, ResultSink, Table,
+};
 use tinytrain::util::json::Json;
 use tinytrain::util::prng::Pcg32;
 
@@ -758,6 +761,166 @@ fn main() {
         );
     }
 
+    // §Tentpole (PR 8): the runtime-dispatched SIMD micro-kernels vs the
+    // scalar oracle, forced through the explicit `_sel` twins so neither
+    // arm depends on the process-wide TT_KERNEL mode or the autotuned
+    // plan. Both arms are bit-exact on these u8/i32 paths, so the delta
+    // is pure vector throughput; `bench_gate` holds the geometric mean of
+    // `simd_speedup_vs_scalar` over these rows above a
+    // machine-independent floor (TT_BENCH_GATE_SIMD_FLOOR). The rows are
+    // emitted only when the host exposes a vector ISA — a plain scalar
+    // machine produces none and the gate self-skips.
+    let mut simd_rows: Vec<Json> = Vec::new();
+    if let Some(isa) = simd::isa() {
+        for &(label, mm, kdim, nsp) in &[
+            ("stem3x3 16x27x1024", 16usize, 27usize, 1024usize),
+            ("blk3x3 32x144x256", 32, 144, 256),
+            ("pw 96x16x256", 96, 16, 256),
+            ("pw 24x96x256", 24, 96, 256),
+            ("head1x1 128x64x64", 128, 64, 64),
+        ] {
+            let a: Vec<u8> = (0..mm * kdim).map(|_| rng.below(256) as u8).collect();
+            let bm: Vec<u8> = (0..kdim * nsp).map(|_| rng.below(256) as u8).collect();
+            let init = vec![0i32; mm];
+            let mut out = vec![0i32; mm * nsp];
+            let gmacs = (mm * kdim * nsp) as f64;
+            let (ts, _) = time_it(2, reps, || {
+                gemm::gemm_u8_i32_sel(
+                    KernelSel::Scalar,
+                    &a,
+                    3,
+                    &bm,
+                    5,
+                    &init,
+                    mm,
+                    kdim,
+                    nsp,
+                    &mut out,
+                );
+                std::hint::black_box(&out);
+            });
+            let (tv, _) = time_it(2, reps, || {
+                gemm::gemm_u8_i32_sel(
+                    KernelSel::Simd(isa),
+                    &a,
+                    3,
+                    &bm,
+                    5,
+                    &init,
+                    mm,
+                    kdim,
+                    nsp,
+                    &mut out,
+                );
+                std::hint::black_box(&out);
+            });
+            let Some(speedup) = safe_speedup(ts, tv) else {
+                println!("gemm {label}: degenerate simd timing, row dropped");
+                continue;
+            };
+            tab.row(&[
+                format!("gemm simd ({isa:?})"),
+                label.into(),
+                fmt_duration(tv),
+                format!("{:.2}", gmacs / tv / 1e9),
+            ]);
+            let row = Json::obj(vec![
+                ("kernel", Json::str("gemm_simd_vs_scalar")),
+                ("shape", Json::str(label)),
+                ("scalar_seconds", Json::Num(ts)),
+                ("simd_seconds", Json::Num(tv)),
+                ("simd_gmacs", Json::Num(gmacs / tv / 1e9)),
+                ("simd_speedup_vs_scalar", Json::Num(speedup)),
+            ]);
+            simd_rows.push(row.clone());
+            sink.push(row);
+            println!("gemm {label}: simd {speedup:.2}x vs scalar");
+        }
+
+        // depthwise: forward AXPY rows and the packed backward-input pass
+        // on the same 64x32x32 block shape as the scalar-vs-blocked table
+        let (tds, _) = time_it(2, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(dwconv::qdwconv2d_fwd_sel(
+                KernelSel::Scalar,
+                &xd,
+                &wd,
+                &biasd,
+                &gd,
+                oqp,
+                true,
+                &mut ops,
+            ));
+        });
+        let (tdv, _) = time_it(2, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(dwconv::qdwconv2d_fwd_sel(
+                KernelSel::Simd(isa),
+                &xd,
+                &wd,
+                &biasd,
+                &gd,
+                oqp,
+                true,
+                &mut ops,
+            ));
+        });
+        let (tis, _) = time_it(2, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(dwconv::qdwconv2d_bwd_input_sel(
+                KernelSel::Scalar,
+                &edq,
+                &wd,
+                &gd,
+                32,
+                32,
+                oqp,
+                None,
+                &mut scratch,
+                &mut ops,
+            ));
+        });
+        let (tiv, _) = time_it(2, reps, || {
+            let mut ops = OpCounter::new();
+            std::hint::black_box(dwconv::qdwconv2d_bwd_input_sel(
+                KernelSel::Simd(isa),
+                &edq,
+                &wd,
+                &gd,
+                32,
+                32,
+                oqp,
+                None,
+                &mut scratch,
+                &mut ops,
+            ));
+        });
+        for (arm, ts_a, tv_a) in [("fwd", tds, tdv), ("bwd_input", tis, tiv)] {
+            let Some(speedup) = safe_speedup(ts_a, tv_a) else {
+                println!("dwconv {arm}: degenerate simd timing, row dropped");
+                continue;
+            };
+            tab.row(&[
+                format!("qdwconv {arm} simd ({isa:?})"),
+                "64x32x32 dw, k3".into(),
+                fmt_duration(tv_a),
+                format!("{:.2}", macsd / tv_a / 1e9),
+            ]);
+            let row = Json::obj(vec![
+                ("kernel", Json::str("dwconv_simd_vs_scalar")),
+                ("shape", Json::str(&format!("64x32x32 dw k3 {arm}"))),
+                ("scalar_seconds", Json::Num(ts_a)),
+                ("simd_seconds", Json::Num(tv_a)),
+                ("simd_speedup_vs_scalar", Json::Num(speedup)),
+            ]);
+            simd_rows.push(row.clone());
+            sink.push(row);
+            println!("dwconv {arm}: simd {speedup:.2}x vs scalar");
+        }
+    } else {
+        println!("no vector ISA on this host — simd-vs-scalar rows skipped");
+    }
+
     // Pack-cache telemetry: a short uint8 training run (forward +
     // backward + FQT updates). After deployment warming, every dense
     // backward hits the plan-owned pack; each optimizer step invalidates
@@ -925,6 +1088,7 @@ fn main() {
         ("gemm_micro_vs_tiled", Json::Arr(micro_rows)),
         ("gemm_fused_epilogue", Json::Arr(fused_rows)),
         ("dwconv_scalar_vs_blocked", Json::Arr(dw_rows)),
+        ("simd_vs_scalar", Json::Arr(simd_rows)),
         ("fleet_sessions", Json::Arr(fleet_rows)),
         (
             "pack_cache",

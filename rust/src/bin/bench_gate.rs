@@ -29,6 +29,13 @@
 //!     session deltas + replay, so N independent deployments must cost a
 //!     healthy multiple of the shared-artifact fleet (byte accounting,
 //!     no wall clock).
+//!     Likewise **SIMD dispatch floor** — the geometric mean of
+//!     `simd_speedup_vs_scalar` over the `gemm_simd_vs_scalar` and
+//!     `dwconv_simd_vs_scalar` rows must be ≥ `TT_BENCH_GATE_SIMD_FLOOR`
+//!     (default 1.0): the vector path only exists to beat the scalar
+//!     oracle, so parity-on-average is the floor. The rows are emitted
+//!     only when the host exposes a vector ISA, so the check self-skips
+//!     elsewhere.
 //!  4. **baseline diff** — per matching row key, `*seconds*` fields may
 //!     grow at most `tol`× over the baseline and `*speedup*` fields may
 //!     shrink at most `tol`× under it. Rows present on only one side are
@@ -40,9 +47,10 @@
 //! Knobs: `TT_BENCH_GATE_TOL` (default 2.0 — generous; CI runners are
 //! noisy), `TT_BENCH_GATE_FUSED_FLOOR` (default 1.0) for the
 //! fused-epilogue geometric-mean floor, `TT_BENCH_GATE_FLEET_FLOOR`
-//! (default 1.5) for the fleet sharing floor, and `TT_BENCH_GATE_ABS=0` to skip
-//! the absolute `*seconds*` comparisons when diffing runs from
-//! incomparable hardware.
+//! (default 1.5) for the fleet sharing floor, `TT_BENCH_GATE_SIMD_FLOOR`
+//! (default 1.0) for the SIMD-vs-scalar geometric-mean floor, and
+//! `TT_BENCH_GATE_ABS=0` to skip the absolute `*seconds*` comparisons
+//! when diffing runs from incomparable hardware.
 //!
 //! Refreshing the baseline: run the bench in quick mode exactly as CI
 //! does (`cd rust && TT_PERF_REPS=3 TT_PERF_BATCH=4 TT_WORKERS=2 cargo
@@ -51,7 +59,7 @@
 
 use std::process::ExitCode;
 
-use tinytrain::util::bench::check_perf_rows;
+use tinytrain::util::bench::{check_perf_rows, geomean};
 use tinytrain::util::json::Json;
 
 fn tolerance() -> f64 {
@@ -84,6 +92,20 @@ fn fleet_floor() -> f64 {
         .ok()
         .and_then(|v| v.parse::<f64>().ok())
         .unwrap_or(1.5)
+        .max(0.0)
+}
+
+/// Floor on the geometric mean of `simd_speedup_vs_scalar` across the
+/// `gemm_simd_vs_scalar` / `dwconv_simd_vs_scalar` rows
+/// (machine-independent: both arms ran on the same machine in the same
+/// process). The vector path exists purely as a host-side accelerator, so
+/// parity-on-average with the scalar oracle is the floor: a dispatcher
+/// that picks SIMD where it loses to scalar is a plan-compiler bug.
+fn simd_floor() -> f64 {
+    std::env::var("TT_BENCH_GATE_SIMD_FLOOR")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1.0)
         .max(0.0)
 }
 
@@ -175,19 +197,45 @@ fn main() -> ExitCode {
         .filter(|row| row.get("kernel").as_str() == Some("gemm_fused_epilogue"))
         .filter_map(|row| row.get("fused_speedup_vs_unfused").as_f64())
         .collect();
-    if !fused_speedups.is_empty() {
+    if let Some(g) = geomean(&fused_speedups) {
         let floor = fused_floor();
-        let geomean =
-            (fused_speedups.iter().map(|s| s.ln()).sum::<f64>() / fused_speedups.len() as f64)
-                .exp();
         println!(
-            "bench_gate: fused-epilogue geomean speedup {geomean:.3} over {} rows (floor {floor})",
+            "bench_gate: fused-epilogue geomean speedup {g:.3} over {} rows (floor {floor})",
             fused_speedups.len()
         );
-        if geomean < floor {
+        if g < floor {
             failures.push(format!(
-                "fused-epilogue geomean speedup {geomean:.3} below the {floor} floor \
+                "fused-epilogue geomean speedup {g:.3} below the {floor} floor \
                  (TT_BENCH_GATE_FUSED_FLOOR)"
+            ));
+        }
+    }
+
+    // 3c. SIMD dispatch floor: wherever the autotuned plan elects the
+    // vector path, it must hold at least geomean parity with the scalar
+    // oracle on the same shapes. The rows exist only when the host
+    // exposes a vector ISA, so the block self-skips on plain scalar
+    // machines (and on any baseline predating the rows).
+    let simd_speedups: Vec<f64> = fresh
+        .iter()
+        .filter(|row| {
+            matches!(
+                row.get("kernel").as_str(),
+                Some("gemm_simd_vs_scalar") | Some("dwconv_simd_vs_scalar")
+            )
+        })
+        .filter_map(|row| row.get("simd_speedup_vs_scalar").as_f64())
+        .collect();
+    if let Some(g) = geomean(&simd_speedups) {
+        let floor = simd_floor();
+        println!(
+            "bench_gate: simd-vs-scalar geomean speedup {g:.3} over {} rows (floor {floor})",
+            simd_speedups.len()
+        );
+        if g < floor {
+            failures.push(format!(
+                "simd-vs-scalar geomean speedup {g:.3} below the {floor} floor \
+                 (TT_BENCH_GATE_SIMD_FLOOR)"
             ));
         }
     }

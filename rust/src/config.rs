@@ -8,6 +8,7 @@
 //! construction can never drift apart. `harness::Knobs` is a re-export of
 //! this type, so existing call sites keep compiling unchanged.
 
+use crate::kernels::simd::KernelMode;
 use crate::util::bench::env_usize;
 
 /// Scaling knobs for a training run (the harness) or a fleet run (the
@@ -29,11 +30,26 @@ pub struct RunConfig {
     /// results by the determinism contract — see `train_batched` and
     /// `coordinator::fleet`).
     pub workers: usize,
+    /// Micro-kernel dispatch mode (`TT_KERNEL=auto|scalar|simd`, default
+    /// auto): `auto` follows the plan's autotuned per-shape preference,
+    /// `scalar` forces the MCU-faithful scalar oracle everywhere, `simd`
+    /// forces the vector path wherever the host ISA allows. All three are
+    /// bit-identical on the quantized paths (see `kernels::simd`). The
+    /// CLI installs this into the process-wide mode at startup
+    /// (`kernels::simd::set_mode`).
+    pub kernel: KernelMode,
 }
 
 impl Default for RunConfig {
     fn default() -> RunConfig {
-        RunConfig { epochs: 5, runs: 2, train_pc: 3, test_pc: 2, workers: 1 }
+        RunConfig {
+            epochs: 5,
+            runs: 2,
+            train_pc: 3,
+            test_pc: 2,
+            workers: 1,
+            kernel: KernelMode::Auto,
+        }
     }
 }
 
@@ -51,6 +67,12 @@ impl RunConfig {
             .train_pc(env_usize("TT_TRAIN_PC", 3))
             .test_pc(env_usize("TT_TEST_PC", 2))
             .workers(env_usize("TT_WORKERS", 1))
+            .kernel(
+                std::env::var("TT_KERNEL")
+                    .ok()
+                    .and_then(|v| KernelMode::parse(&v))
+                    .unwrap_or_default(),
+            )
             .build()
     }
 }
@@ -91,6 +113,11 @@ impl RunConfigBuilder {
         self
     }
 
+    pub fn kernel(mut self, v: KernelMode) -> Self {
+        self.cfg.kernel = v;
+        self
+    }
+
     pub fn build(self) -> RunConfig {
         let mut cfg = self.cfg;
         cfg.workers = cfg.workers.max(1);
@@ -105,7 +132,17 @@ mod tests {
     #[test]
     fn builder_applies_defaults_and_overrides() {
         let d = RunConfig::default();
-        assert_eq!(d, RunConfig { epochs: 5, runs: 2, train_pc: 3, test_pc: 2, workers: 1 });
+        assert_eq!(
+            d,
+            RunConfig {
+                epochs: 5,
+                runs: 2,
+                train_pc: 3,
+                test_pc: 2,
+                workers: 1,
+                kernel: KernelMode::Auto
+            }
+        );
         let c = RunConfig::builder().epochs(9).workers(4).build();
         assert_eq!(c.epochs, 9);
         assert_eq!(c.workers, 4);

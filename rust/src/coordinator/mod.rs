@@ -227,19 +227,6 @@ impl<'a> Coordinator<'a> {
         }
     }
 
-    /// Thin shim over [`Coordinator::builder`] kept for older callers.
-    #[deprecated(note = "use Coordinator::builder(model, device, opt)…build()")]
-    pub fn new(
-        model: NativeModel,
-        device: DeviceModel,
-        opt: &'a mut dyn Optimizer,
-        sparsity: Sparsity,
-        cfg: CoordinatorConfig,
-        seed: u64,
-    ) -> Coordinator<'a> {
-        Coordinator::builder(model, device, opt).sparsity(sparsity).config(cfg).seed(seed).build()
-    }
-
     /// Drive the coordinator over a stream until it is exhausted.
     ///
     /// Per arrival: (1) classify the sample immediately (inference is never
@@ -411,24 +398,6 @@ mod tests {
         let t = coord.run(&mut stream);
         // at most one (overrunning) step per gap once warm
         assert!(t.train_steps <= t.arrivals, "steps={} arrivals={}", t.train_steps, t.arrivals);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_constructor_still_builds() {
-        let (m, dom) = deployed();
-        let mut opt = FqtSgd::new(&m, 0.01, 4);
-        let mut coord = Coordinator::new(
-            m,
-            device::imxrt1062(),
-            &mut opt,
-            Sparsity::Dense,
-            CoordinatorConfig::default(),
-            1,
-        );
-        let mut stream = SampleStream::new(&dom, 5, 0.05, 2);
-        let t = coord.run(&mut stream);
-        assert_eq!(t.arrivals, 5);
     }
 
     #[test]

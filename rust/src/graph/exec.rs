@@ -202,11 +202,16 @@ impl SessionState {
     /// base activation ranges, pristine observers, cold pack cache.
     pub fn fresh(shared: &ModelArtifacts) -> SessionState {
         let n = shared.def.layers.len();
+        let mut packs = PackCache::new(n);
+        // The plan's autotuned per-layer kernel preferences ride along in
+        // the pack cache: both are plan-derived per-layer dispatch state
+        // the ops consult on the hot path through the same `ctx.packs`.
+        packs.install_choices(shared.plan().kernel_choices());
         SessionState {
             params: shared.base_params.clone(),
             act_qp: shared.base_act_qp.clone(),
             err_obs: shared.def.layers.iter().map(|_| MinMaxObserver::online()).collect(),
-            packs: PackCache::new(n),
+            packs,
             param_versions: vec![1; n],
         }
     }

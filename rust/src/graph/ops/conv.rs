@@ -7,6 +7,7 @@
 use crate::graph::act::{observe_saturation, propagate_qp, Act, LayerParams};
 use crate::graph::exec::LayerGrads;
 use crate::graph::ops::{fwd_input, sparse_keep, ExecCtx, LayerOp, QpSlot};
+use crate::kernels::simd::{self, KernelSel};
 use crate::kernels::{dwconv, fconv, kept_count, qconv, ConvGeom};
 use crate::quant::{quantize_bias, QTensor};
 use crate::tensor::TensorF32;
@@ -60,14 +61,18 @@ impl LayerOp for QConvOp {
         };
         let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
         let out_qp = ctx.act_qp[l];
+        // Resolve the plan's autotuned preference against the runtime
+        // kernel mode and the detected ISA — once per op, not per tile.
+        let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.fwd));
         let y = if self.geom.depthwise {
             if self.fused {
-                let (y, sat) =
-                    dwconv::qdwconv2d_fwd_fused(xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops);
+                let (y, sat) = dwconv::qdwconv2d_fwd_fused_sel(
+                    sel, xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops,
+                );
                 ctx.sat[l] = Some((sat as usize, y.len().max(1)));
                 y
             } else {
-                dwconv::qdwconv2d_fwd(xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops)
+                dwconv::qdwconv2d_fwd_sel(sel, xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops)
             }
         } else if self.fused {
             // A folded dequantize boundary is emitted here: the epilogue
@@ -76,7 +81,8 @@ impl LayerOp for QConvOp {
             // boundary op never runs.
             let (oh, ow) = self.geom.out_hw(self.in_h, self.in_w);
             let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[self.geom.cout, oh, ow]));
-            let (y, sat) = qconv::qconv2d_fwd_gemm_fused(
+            let (y, sat) = qconv::qconv2d_fwd_gemm_fused_sel(
+                sel,
                 xq,
                 w,
                 &bq,
@@ -93,7 +99,8 @@ impl LayerOp for QConvOp {
             }
             y
         } else {
-            qconv::qconv2d_fwd_gemm(
+            qconv::qconv2d_fwd_gemm_sel(
+                sel,
                 xq,
                 w,
                 &bq,
@@ -164,10 +171,12 @@ impl LayerOp for QConvOp {
             ),
         };
         if trainable {
+            let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_weight));
             let (gw, gb) = if self.geom.depthwise {
-                dwconv::qdwconv2d_bwd_weight(eq, xq, &self.geom, keep.as_deref(), ctx.ops)
+                dwconv::qdwconv2d_bwd_weight_sel(sel, eq, xq, &self.geom, keep.as_deref(), ctx.ops)
             } else {
-                qconv::qconv2d_bwd_weight_gemm(
+                qconv::qconv2d_bwd_weight_gemm_sel(
+                    sel,
                     eq,
                     xq,
                     &self.geom,
@@ -195,10 +204,12 @@ impl LayerOp for QConvOp {
             } else {
                 None
             };
+            let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_input));
             let next = if self.geom.depthwise {
                 let dw_pack = ctx.packs.dw_u8(l, ctx.param_versions[l]);
                 Act::Q(match dw_pack {
-                    Some(pack) => dwconv::qdwconv2d_bwd_input_packed(
+                    Some(pack) => dwconv::qdwconv2d_bwd_input_packed_sel(
+                        sel,
                         eq,
                         w,
                         pack,
@@ -209,7 +220,8 @@ impl LayerOp for QConvOp {
                         keep.as_deref(),
                         ctx.ops,
                     ),
-                    None => dwconv::qdwconv2d_bwd_input(
+                    None => dwconv::qdwconv2d_bwd_input_sel(
+                        sel,
                         eq,
                         w,
                         &self.geom,
@@ -223,7 +235,8 @@ impl LayerOp for QConvOp {
                 })
             } else if let Some(pack) = cached {
                 Act::Q(if self.fused {
-                    qconv::qconv2d_bwd_input_gemm_packed_fused(
+                    qconv::qconv2d_bwd_input_gemm_packed_fused_sel(
+                        sel,
                         eq,
                         w,
                         pack,
@@ -235,7 +248,8 @@ impl LayerOp for QConvOp {
                         ctx.ops,
                     )
                 } else {
-                    qconv::qconv2d_bwd_input_gemm_packed(
+                    qconv::qconv2d_bwd_input_gemm_packed_sel(
+                        sel,
                         eq,
                         w,
                         pack,
@@ -249,7 +263,8 @@ impl LayerOp for QConvOp {
                 })
             } else {
                 Act::Q(if self.fused {
-                    qconv::qconv2d_bwd_input_gemm_fused(
+                    qconv::qconv2d_bwd_input_gemm_fused_sel(
+                        sel,
                         eq,
                         w,
                         &self.geom,
@@ -261,7 +276,8 @@ impl LayerOp for QConvOp {
                         ctx.ops,
                     )
                 } else {
-                    qconv::qconv2d_bwd_input_gemm(
+                    qconv::qconv2d_bwd_input_gemm_sel(
+                        sel,
                         eq,
                         w,
                         &self.geom,

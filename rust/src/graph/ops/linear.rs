@@ -11,6 +11,7 @@
 use crate::graph::act::{observe_saturation, propagate_qp, Act, LayerParams};
 use crate::graph::exec::LayerGrads;
 use crate::graph::ops::{fwd_input, sparse_keep, ExecCtx, LayerOp, QpSlot};
+use crate::kernels::simd::{self, KernelSel};
 use crate::kernels::{fconv, flinear, kept_count, qconv, qlinear};
 use crate::quant::{quantize_bias, QTensor};
 use crate::tensor::TensorF32;
@@ -58,12 +59,14 @@ impl LayerOp for QLinearOp {
             ),
         };
         let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+        let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.fwd));
         let y = if self.fused {
             // A folded dequantize boundary is emitted here, straight from
             // the register tile (see QConvOp::forward).
             let n_out = w.shape()[0];
             let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[n_out]));
-            let (y, sat) = qlinear::qlinear_fwd_fused(
+            let (y, sat) = qlinear::qlinear_fwd_fused_sel(
+                sel,
                 xq,
                 w,
                 &bq,
@@ -78,7 +81,7 @@ impl LayerOp for QLinearOp {
             }
             y
         } else {
-            qlinear::qlinear_fwd(xq, w, &bq, ctx.act_qp[l], self.relu, ctx.ops)
+            qlinear::qlinear_fwd_sel(sel, xq, w, &bq, ctx.act_qp[l], self.relu, ctx.ops)
         };
         ctx.acts.push(Act::Q(y));
     }
@@ -135,8 +138,15 @@ impl LayerOp for QLinearOp {
             ),
         };
         if trainable {
-            let (gw, gb) =
-                qlinear::qlinear_bwd_weight_gemm(eq, xq, keep.as_deref(), ctx.scratch, ctx.ops);
+            let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_weight));
+            let (gw, gb) = qlinear::qlinear_bwd_weight_gemm_sel(
+                sel,
+                eq,
+                xq,
+                keep.as_deref(),
+                ctx.scratch,
+                ctx.ops,
+            );
             let total = eq.len();
             let kept = kept_count(keep.as_deref(), total);
             ctx.grads[l] = Some(LayerGrads { gw, gb, kept: (kept, total) });
@@ -144,8 +154,10 @@ impl LayerOp for QLinearOp {
         if l > ctx.stop {
             let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
             let out_qp = propagate_qp(&mut obs[l - 1], eq, ctx.ops);
+            let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_input));
             let next = Act::Q(if self.fused {
-                qlinear::qlinear_bwd_input_gemm_fused(
+                qlinear::qlinear_bwd_input_gemm_fused_sel(
+                    sel,
                     eq,
                     w,
                     out_qp,
@@ -154,7 +166,8 @@ impl LayerOp for QLinearOp {
                     ctx.ops,
                 )
             } else {
-                qlinear::qlinear_bwd_input_gemm(
+                qlinear::qlinear_bwd_input_gemm_sel(
+                    sel,
                     eq,
                     w,
                     out_qp,

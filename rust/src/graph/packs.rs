@@ -38,6 +38,25 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::kernels::simd::TilePref;
+
+/// The plan compiler's autotuned micro-kernel choice for one layer: a
+/// [`TilePref`] per kernel direction (see `kernels::simd::tune`). The
+/// preference is a pure function of the layer *geometry* — deliberately
+/// **not** a concrete ISA — so a compiled plan stays valid across hosts
+/// and across `TT_KERNEL` overrides; the concrete micro-kernel is resolved
+/// at dispatch time from the preference, the runtime mode, and the
+/// detected ISA (`kernels::simd::resolve`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelChoice {
+    /// Forward kernel (GEMM or depthwise AXPY map).
+    pub fwd: TilePref,
+    /// Backward-input kernel (transposed GEMM or flipped depthwise map).
+    pub bwd_input: TilePref,
+    /// Backward-weight kernel (A·Bᵀ dot reductions).
+    pub bwd_weight: TilePref,
+}
+
 /// A cached dense backward pack, tagged by the precision it was built
 /// for. A layer is only ever one precision per deployment, but the tag
 /// makes serving a stale other-precision pack impossible even if a
@@ -87,6 +106,10 @@ pub struct PackStats {
 /// Per-layer packed-weight cache (see the module docs).
 pub struct PackCache {
     entries: Vec<PackEntry>,
+    /// Per-layer autotuned kernel choices, installed from the compiled
+    /// plan (`ExecPlan::kernel_choices`) when a session is built; `None`
+    /// for layers the tuner never visits (activations, losses, …).
+    choices: Vec<Option<KernelChoice>>,
     hits: AtomicU64,
     misses: AtomicU64,
     builds: AtomicU64,
@@ -97,10 +120,25 @@ impl PackCache {
     pub fn new(n_layers: usize) -> PackCache {
         PackCache {
             entries: (0..n_layers).map(|_| PackEntry::default()).collect(),
+            choices: vec![None; n_layers],
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             builds: AtomicU64::new(0),
         }
+    }
+
+    /// Install the compiled plan's per-layer kernel choices (length must
+    /// match the layer count this cache was sized for).
+    pub fn install_choices(&mut self, choices: &[Option<KernelChoice>]) {
+        assert_eq!(choices.len(), self.choices.len(), "kernel choice slot count");
+        self.choices.copy_from_slice(choices);
+    }
+
+    /// The autotuned kernel choice for layer `l`, if the plan recorded
+    /// one. Ops fall back to [`crate::kernels::simd::KernelSel::Auto`]
+    /// when absent.
+    pub fn choice(&self, l: usize) -> Option<KernelChoice> {
+        self.choices.get(l).copied().flatten()
     }
 
     /// The dense u8 pack for layer `l`, if the cached one was built at

@@ -38,7 +38,9 @@ use crate::graph::ops::{
     DequantizeOp, ExecCtx, FConvOp, FLinearOp, FlattenOp, GlobalAvgPoolOp, LayerOp, MaxPoolOp,
     QConvOp, QLinearOp, QpSlot, QuantizeOp,
 };
+use crate::graph::packs::KernelChoice;
 use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
+use crate::kernels::simd::tune;
 use crate::kernels::OpCounter;
 use crate::memplan::{allocate_arena, ArenaItem, ArenaPlan, Scratch, ScratchSpec};
 use crate::quant::observer::MinMaxObserver;
@@ -54,6 +56,11 @@ pub struct ExecPlan {
     pub planned_peak_bytes: usize,
     /// Union of every GEMM scratch request the ops can make.
     spec: ScratchSpec,
+    /// Per-layer autotuned micro-kernel preferences (`None` for layers
+    /// with no tuned kernel: pools, flatten, boundaries). Computed once at
+    /// compile from the layer geometry (`kernels::simd::tune`) and
+    /// installed into each session's [`crate::graph::packs::PackCache`].
+    choices: Vec<Option<KernelChoice>>,
     /// The configuration this plan was compiled for.
     pub cfg: DnnConfig,
     /// Whether this plan runs the fused-epilogue kernels and folds legal
@@ -147,6 +154,7 @@ impl ExecPlan {
         let stop = def.first_trainable().unwrap_or(def.layers.len());
         let mut ops: Vec<Box<dyn LayerOp>> = Vec::with_capacity(def.layers.len() + 2);
         let mut spec = ScratchSpec::default();
+        let mut choices: Vec<Option<KernelChoice>> = vec![None; def.layers.len()];
         for (i, l) in def.layers.iter().enumerate() {
             let in_shape = if i == 0 { def.input_shape.clone() } else { shapes[i - 1].clone() };
             let prev = if i == 0 { prec[0] } else { prec[i - 1] };
@@ -228,6 +236,29 @@ impl ExecPlan {
                             }
                         }
                     }
+                    // Autotune the layer's micro-kernel preferences from its
+                    // geometry (machine-independent — see `simd::tune`).
+                    choices[i] = Some(if geom.depthwise {
+                        KernelChoice {
+                            fwd: tune::prefer_axpy(shapes[i][2]),
+                            bwd_input: tune::prefer_axpy(in_shape[2]),
+                            bwd_weight: tune::prefer_dot(shapes[i][2]),
+                        }
+                    } else {
+                        KernelChoice {
+                            fwd: tune::prefer_gemm(
+                                geom.cout,
+                                geom.cin * geom.kh * geom.kw,
+                                shapes[i][1] * shapes[i][2],
+                            ),
+                            bwd_input: tune::prefer_gemm(
+                                geom.cin,
+                                geom.cout * geom.kh * geom.kw,
+                                in_shape[1] * in_shape[2],
+                            ),
+                            bwd_weight: tune::prefer_dot(shapes[i][1] * shapes[i][2]),
+                        }
+                    });
                     match prec[i] {
                         Precision::Uint8 => ops.push(Box::new(QConvOp {
                             layer: i,
@@ -273,6 +304,15 @@ impl ExecPlan {
                             }
                         }
                     }
+                    // Linear layers: forward is an `n_out × n_in × 1`
+                    // matvec, backward-input a `1 × n_out × n_in` GEMM row,
+                    // backward-weight a rank-1 outer product (kd = 1 dots —
+                    // always scalar).
+                    choices[i] = Some(KernelChoice {
+                        fwd: tune::prefer_gemm(*n_out, *n_in, 1),
+                        bwd_input: tune::prefer_gemm(1, *n_out, *n_in),
+                        bwd_weight: tune::prefer_dot(1),
+                    });
                     match prec[i] {
                         Precision::Uint8 => ops.push(Box::new(QLinearOp {
                             layer: i,
@@ -302,7 +342,15 @@ impl ExecPlan {
             }
         }
         let arena = planned_arena_with(def, cfg, true, fused);
-        ExecPlan { planned_peak_bytes: arena.total_bytes, arena, ops, spec, cfg, fused }
+        ExecPlan { planned_peak_bytes: arena.total_bytes, arena, ops, spec, choices, cfg, fused }
+    }
+
+    /// The per-layer autotuned micro-kernel preferences (`None` for layers
+    /// with no tuned kernel). Installed into each session's pack cache at
+    /// build ([`crate::graph::packs::PackCache::install_choices`]); ops
+    /// read them back per dispatch via `PackCache::choice`.
+    pub fn kernel_choices(&self) -> &[Option<KernelChoice>] {
+        &self.choices
     }
 
     /// Whether this plan was compiled in fused-epilogue mode (see

@@ -257,7 +257,8 @@ mod tests {
 
     #[test]
     fn tl_pipeline_end_to_end_smoke() {
-        let knobs = Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1, workers: 1 };
+        let knobs =
+            Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1, ..Knobs::default() };
         let spec = spec_by_name("cwru").unwrap();
         let shape = [1usize, 1, 128]; // shrunk further for the unit test
         let mut small = spec.clone();
@@ -276,7 +277,8 @@ mod tests {
 
     #[test]
     fn sparse_tl_cheaper_than_dense() {
-        let knobs = Knobs { epochs: 1, runs: 1, train_pc: 2, test_pc: 1, workers: 1 };
+        let knobs =
+            Knobs { epochs: 1, runs: 1, train_pc: 2, test_pc: 1, ..Knobs::default() };
         let mut spec = spec_by_name("cifar10").unwrap();
         spec.reduced_shape = [3, 16, 16];
         let src = Domain::new(&spec, spec.reduced_shape, 5);
@@ -293,7 +295,8 @@ mod tests {
     fn batched_full_training_smoke() {
         let mut spec = spec_by_name("fmnist").unwrap();
         spec.reduced_shape = [1, 12, 12];
-        let knobs = Knobs { epochs: 2, runs: 1, train_pc: 3, test_pc: 2, workers: 2 };
+        let knobs =
+            Knobs { epochs: 2, runs: 1, train_pc: 3, test_pc: 2, workers: 2, ..Knobs::default() };
         let (rep, _) = run_full_training_batched(&spec, DnnConfig::Uint8, &knobs, 5);
         assert_eq!(rep.epochs.len(), 2);
         assert!(rep.samples_seen > 0);

@@ -42,6 +42,7 @@
 //! bit-exactness over random shapes, strides, paddings and masks.
 
 use crate::kernels::gemm::NR;
+use crate::kernels::simd::{self, tune, KernelSel};
 use crate::kernels::{ConvGeom, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
@@ -91,7 +92,23 @@ pub fn qdwconv2d_fwd(
     relu: bool,
     ops: &mut OpCounter,
 ) -> QTensor {
-    qdwconv2d_fwd_impl(x, w, bias, geom, out_qp, relu, ops).0
+    qdwconv2d_fwd_impl(KernelSel::Auto, x, w, bias, geom, out_qp, relu, ops).0
+}
+
+/// [`qdwconv2d_fwd`] with an explicit micro-kernel selection (see
+/// [`crate::kernels::simd`]); the plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_fwd_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> QTensor {
+    qdwconv2d_fwd_impl(sel, x, w, bias, geom, out_qp, relu, ops).0
 }
 
 /// [`qdwconv2d_fwd`] that also returns the saturated-value count of the
@@ -111,10 +128,28 @@ pub fn qdwconv2d_fwd_fused(
     relu: bool,
     ops: &mut OpCounter,
 ) -> (QTensor, u64) {
-    qdwconv2d_fwd_impl(x, w, bias, geom, out_qp, relu, ops)
+    qdwconv2d_fwd_impl(KernelSel::Auto, x, w, bias, geom, out_qp, relu, ops)
 }
 
+/// [`qdwconv2d_fwd_fused`] with an explicit micro-kernel selection; the
+/// plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_fwd_fused_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
+    qdwconv2d_fwd_impl(sel, x, w, bias, geom, out_qp, relu, ops)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn qdwconv2d_fwd_impl(
+    sel: KernelSel,
     x: &QTensor,
     w: &QTensor,
     bias: &[i32],
@@ -141,6 +176,9 @@ fn qdwconv2d_fwd_impl(
     let od = out.values.data_mut();
     let count_lo = !relu;
     let mut sat = 0u64;
+    // One ISA resolution per call: the stride-1 AXPY spans are `ow`-bounded,
+    // so the per-layer tune verdict covers every tap of the map.
+    let isa = simd::resolve_isa(sel, tune::prefer_axpy(ow));
     for c in 0..geom.cout {
         let plane = &xd[c * h * wd..(c + 1) * h * wd];
         let wch = &wdat[c * khw..(c + 1) * khw];
@@ -170,9 +208,7 @@ fn qdwconv2d_fwd_impl(
                             if hi > lo {
                                 let src = ox0 + lo + kx - geom.pad_w;
                                 let xs = &xrow[src..src + (hi - lo)];
-                                for (a, &xv) in acc[lo..hi].iter_mut().zip(xs.iter()) {
-                                    *a += wv * (xv as i32 - zx);
-                                }
+                                simd::axpy_u8_i32(isa, &mut acc[lo..hi], xs, zx, wv);
                             }
                         } else {
                             for (jj, a) in acc[..nrr].iter_mut().enumerate() {
@@ -229,6 +265,9 @@ pub fn fdwconv2d_fwd(
 
     let mut out = TensorF32::zeros(&[geom.cout, oh, ow]);
     let od = out.data_mut();
+    // Element-wise AXPY spans are bit-identical under vectorization (no
+    // cross-lane reduction), so the float forward may always auto-resolve.
+    let isa = simd::resolve_isa(KernelSel::Auto, tune::prefer_axpy(ow));
     for c in 0..geom.cout {
         let plane = &xd[c * h * wd..(c + 1) * h * wd];
         let wch = &wdat[c * khw..(c + 1) * khw];
@@ -253,9 +292,7 @@ pub fn fdwconv2d_fwd(
                             if hi > lo {
                                 let src = ox0 + lo + kx - geom.pad_w;
                                 let xs = &xrow[src..src + (hi - lo)];
-                                for (a, &xv) in acc[lo..hi].iter_mut().zip(xs.iter()) {
-                                    *a += wv * xv;
-                                }
+                                simd::axpy_f32(isa, &mut acc[lo..hi], xs, wv);
                             }
                         } else {
                             for (jj, a) in acc[..nrr].iter_mut().enumerate() {
@@ -306,6 +343,35 @@ pub fn qdwconv2d_bwd_input_packed(
     keep: Option<&[bool]>,
     ops: &mut OpCounter,
 ) -> QTensor {
+    qdwconv2d_bwd_input_packed_sel(
+        KernelSel::Auto,
+        e,
+        w,
+        wt_pack,
+        geom,
+        in_h,
+        in_w,
+        out_qp,
+        keep,
+        ops,
+    )
+}
+
+/// [`qdwconv2d_bwd_input_packed`] with an explicit micro-kernel selection;
+/// the plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_bwd_input_packed_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    w: &QTensor,
+    wt_pack: &[u8],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> QTensor {
     assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
     let (oh, ow) = (e.shape()[1], e.shape()[2]);
     let khw = geom.kh * geom.kw;
@@ -324,6 +390,7 @@ pub fn qdwconv2d_bwd_input_packed(
     // What the scalar kernel writes for a skipped channel's plane: the
     // requantization of an untouched (all-zero) accumulator.
     let zero_out = requantize(0, mult, out_qp.zero_point, false);
+    let isa = simd::resolve_isa(sel, tune::prefer_axpy(in_w));
     let mut kept_channels = 0u64;
     for c in 0..geom.cout {
         let oplane = &mut od[c * in_h * in_w..(c + 1) * in_h * in_w];
@@ -359,9 +426,7 @@ pub fn qdwconv2d_bwd_input_packed(
                             if hi > lo {
                                 let src = ix0 + lo + geom.pad_w - kx;
                                 let es = &erow[src..src + (hi - lo)];
-                                for (a, &ev) in acc[lo..hi].iter_mut().zip(es.iter()) {
-                                    *a += wv * (ev as i32 - ze);
-                                }
+                                simd::axpy_u8_i32(isa, &mut acc[lo..hi], es, ze, wv);
                             }
                         } else {
                             for (jj, a) in acc[..nrr].iter_mut().enumerate() {
@@ -404,9 +469,38 @@ pub fn qdwconv2d_bwd_input(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> QTensor {
+    qdwconv2d_bwd_input_sel(
+        KernelSel::Auto,
+        e,
+        w,
+        geom,
+        in_h,
+        in_w,
+        out_qp,
+        keep,
+        scratch,
+        ops,
+    )
+}
+
+/// [`qdwconv2d_bwd_input`] with an explicit micro-kernel selection; the
+/// plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_bwd_input_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    w: &QTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
     let wt = scratch.dw_wt_u8(geom.cout * geom.kh * geom.kw);
     pack_dw_flip_u8(w.values.data(), geom, wt);
-    qdwconv2d_bwd_input_packed(e, w, wt, geom, in_h, in_w, out_qp, keep, ops)
+    qdwconv2d_bwd_input_packed_sel(sel, e, w, wt, geom, in_h, in_w, out_qp, keep, ops)
 }
 
 /// Blocked float depthwise error backprop against a pre-packed flipped
@@ -437,6 +531,7 @@ pub fn fdwconv2d_bwd_input_packed(
 
     let mut out = TensorF32::zeros(&[geom.cin, in_h, in_w]);
     let od = out.data_mut();
+    let isa = simd::resolve_isa(KernelSel::Auto, tune::prefer_axpy(in_w));
     let mut kept_channels = 0u64;
     for c in 0..geom.cout {
         if let Some(k) = keep {
@@ -469,9 +564,7 @@ pub fn fdwconv2d_bwd_input_packed(
                             if hi > lo {
                                 let src = ix0 + lo + geom.pad_w - kx;
                                 let es = &erow[src..src + (hi - lo)];
-                                for (a, &ev) in acc[lo..hi].iter_mut().zip(es.iter()) {
-                                    *a += wv * ev;
-                                }
+                                simd::axpy_f32(isa, &mut acc[lo..hi], es, wv);
                             }
                         } else {
                             for (jj, a) in acc[..nrr].iter_mut().enumerate() {
@@ -527,6 +620,19 @@ pub fn qdwconv2d_bwd_weight(
     keep: Option<&[bool]>,
     ops: &mut OpCounter,
 ) -> (TensorF32, TensorF32) {
+    qdwconv2d_bwd_weight_sel(KernelSel::Auto, e, x, geom, keep, ops)
+}
+
+/// [`qdwconv2d_bwd_weight`] with an explicit micro-kernel selection; the
+/// plain name forwards [`KernelSel::Auto`].
+pub fn qdwconv2d_bwd_weight_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    x: &QTensor,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
     assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
     let (h, wd) = (x.shape()[1], x.shape()[2]);
     let (oh, ow) = (e.shape()[1], e.shape()[2]);
@@ -544,6 +650,9 @@ pub fn qdwconv2d_bwd_weight(
     let mut gb = TensorF32::zeros(&[geom.cout]);
     let gwd = gw.data_mut();
     let gbd = gb.data_mut();
+    // Each ∇W element is a length-`ow`-bounded dot reduction; i32 sums are
+    // exact, so the lane kernel's reduction order cannot change the result.
+    let isa = simd::resolve_isa(sel, tune::prefer_dot(ow));
     let mut kept_channels = 0u64;
     for c in 0..geom.cout {
         if let Some(k) = keep {
@@ -575,9 +684,7 @@ pub fn qdwconv2d_bwd_weight(
                         if hi > lo {
                             let src = lo + kx - geom.pad_w;
                             let xs = &xrow[src..src + (hi - lo)];
-                            for (&evq, &xvq) in erow[lo..hi].iter().zip(xs.iter()) {
-                                acc += (evq as i32 - ze) * (xvq as i32 - zx);
-                            }
+                            acc = acc.wrapping_add(simd::dot_u8(isa, &erow[lo..hi], ze, xs, zx));
                         }
                     } else {
                         for (ox, &evq) in erow.iter().enumerate() {

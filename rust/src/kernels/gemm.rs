@@ -27,11 +27,20 @@
 //! kernels remain in `qconv`/`fconv` as the MCU-faithful reference — this
 //! module is the host-side fast path.
 //!
+//! Dispatch: every public GEMM has a `_sel` twin taking a
+//! [`KernelSel`] — `Auto` (resolve from the global `TT_KERNEL` mode and
+//! the [`tune`] shape table), `Scalar` (the `*_scalar` oracles below), or
+//! `Simd(isa)` (the `kernels::simd` lane drivers). The old names forward
+//! `Auto`, so existing call sites transparently pick up runtime dispatch;
+//! the layer ops pass the plan-compile autotuned choice instead. See
+//! DESIGN.md §10.
+//!
 //! Scratch buffers come from [`crate::memplan::Scratch`]: the sequential
 //! training loop allocates one arena per run, batch workers one per
 //! spawned worker (i.e. per minibatch × worker) — in both cases the
 //! buffers are reused across every layer and sample they serve.
 
+use super::simd::{self, tune, Isa, KernelSel};
 use crate::quant::{requantize, QParams};
 
 /// Columns per output tile of the retained cache-blocked reference path
@@ -344,6 +353,80 @@ pub fn gemm_abt_u8_i32(
     keep: Option<&[bool]>,
     out: &mut [i32],
 ) {
+    gemm_abt_u8_i32_sel(KernelSel::Auto, a, za, b, zb, m, n, kd, keep, out);
+}
+
+/// [`gemm_abt_u8_i32`] with an explicit kernel selection. `Auto` resolves
+/// from the global mode and the reduction-depth cost table
+/// ([`tune::prefer_dot`]); the SIMD driver reduces each kept output with
+/// the lane dot kernel — exact i32 sums, bit-identical to the scalar
+/// oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_abt_u8_i32_sel(
+    sel: KernelSel,
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    m: usize,
+    n: usize,
+    kd: usize,
+    keep: Option<&[bool]>,
+    out: &mut [i32],
+) {
+    match simd::resolve_isa(sel, tune::prefer_dot(kd)) {
+        Some(isa) => gemm_abt_u8_i32_simd(isa, a, za, b, zb, m, n, kd, keep, out),
+        None => gemm_abt_u8_i32_scalar(a, za, b, zb, m, n, kd, keep, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_abt_u8_i32_simd(
+    isa: Isa,
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    m: usize,
+    n: usize,
+    kd: usize,
+    keep: Option<&[bool]>,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * kd, "A shape mismatch");
+    assert_eq!(b.len(), n * kd, "B shape mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), m, "keep mask length mismatch");
+    }
+    out.fill(0);
+    for i in 0..m {
+        if let Some(k) = keep {
+            if !k[i] {
+                continue;
+            }
+        }
+        let arow = &a[i * kd..(i + 1) * kd];
+        for j in 0..n {
+            out[i * n + j] = simd::dot_u8(Some(isa), arow, za, &b[j * kd..(j + 1) * kd], zb);
+        }
+    }
+}
+
+/// The scalar A·Bᵀ micro-kernel — the register-blocked reference path and
+/// the bit-exactness oracle the SIMD driver is verified against.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_abt_u8_i32_scalar(
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    m: usize,
+    n: usize,
+    kd: usize,
+    keep: Option<&[bool]>,
+    out: &mut [i32],
+) {
     assert_eq!(a.len(), m * kd, "A shape mismatch");
     assert_eq!(b.len(), n * kd, "B shape mismatch");
     assert_eq!(out.len(), m * n, "C shape mismatch");
@@ -497,6 +580,115 @@ pub fn gemm_u8_i32(
     n: usize,
     out: &mut [i32],
 ) {
+    gemm_u8_i32_sel(KernelSel::Auto, a, za, b, zb, row_init, m, k, n, out);
+}
+
+/// [`gemm_u8_i32`] with an explicit kernel selection. `Auto` resolves from
+/// the global mode and the shape cost table ([`tune::prefer_gemm`]); the
+/// SIMD driver runs full-width tiles on the lane kernel, edge columns on
+/// the scalar loop, and `n == 1` matvecs on the lane dot kernel — exact
+/// i32 sums throughout, bit-identical to the scalar oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_u8_i32_sel(
+    sel: KernelSel,
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    match simd::resolve_isa(sel, tune::prefer_gemm(m, k, n)) {
+        Some(isa) => gemm_u8_i32_simd(isa, a, za, b, zb, row_init, m, k, n, out),
+        None => gemm_u8_i32_scalar(a, za, b, zb, row_init, m, k, n, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_u8_i32_simd(
+    isa: Isa,
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if n == 1 {
+        // matvec: B is one contiguous k-vector, each output one lane dot
+        for i in 0..m {
+            out[i] = row_init[i].wrapping_add(simd::dot_u8(
+                Some(isa),
+                &a[i * k..(i + 1) * k],
+                za,
+                b,
+                zb,
+            ));
+        }
+        return;
+    }
+    let mut mb = 0;
+    while mb < m {
+        let mrr = MR.min(m - mb);
+        let mut nb = 0;
+        while nb < n {
+            let nrr = NR.min(n - nb);
+            let mut acc = [[0i32; NR]; MR];
+            for (ii, row) in acc[..mrr].iter_mut().enumerate() {
+                row.fill(row_init[mb + ii]);
+            }
+            if nrr == NR {
+                simd::tile_u8(isa, &mut acc, mrr, a, mb * k, k, za, b, nb, n, zb, k);
+            } else {
+                // edge columns: the scalar micro-kernel's clamped loop
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + nrr];
+                    for ii in 0..mrr {
+                        let av = a[(mb + ii) * k + kk] as i32 - za;
+                        let ai = &mut acc[ii][..nrr];
+                        for (aj, &bv) in ai.iter_mut().zip(brow.iter()) {
+                            *aj += av * (bv as i32 - zb);
+                        }
+                    }
+                }
+            }
+            for ii in 0..mrr {
+                let orow = &mut out[(mb + ii) * n + nb..(mb + ii) * n + nb + nrr];
+                orow.copy_from_slice(&acc[ii][..nrr]);
+            }
+            nb += nrr;
+        }
+        mb += mrr;
+    }
+}
+
+/// The scalar MR×NR micro-kernel — the register-blocked reference path and
+/// the bit-exactness oracle the SIMD driver is verified against.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_u8_i32_scalar(
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert_eq!(row_init.len(), m, "row_init length mismatch");
@@ -594,6 +786,146 @@ pub struct QEpilogue {
 /// the epilogue is a pure per-element map.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_u8_i32_fused(
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &QEpilogue,
+    out: &mut [u8],
+    dequant: Option<&mut [f32]>,
+) -> u64 {
+    gemm_u8_i32_fused_sel(KernelSel::Auto, a, za, b, zb, row_init, m, k, n, epi, out, dequant)
+}
+
+/// [`gemm_u8_i32_fused`] with an explicit kernel selection. The SIMD
+/// driver computes each accumulator tile with the lane kernel and then
+/// runs the *identical* scalar epilogue over it — the epilogue is a pure
+/// per-element map over exact i32 sums, so output bytes, dequant emit,
+/// and saturation counts all stay bit-identical to the scalar oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_u8_i32_fused_sel(
+    sel: KernelSel,
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &QEpilogue,
+    out: &mut [u8],
+    dequant: Option<&mut [f32]>,
+) -> u64 {
+    match simd::resolve_isa(sel, tune::prefer_gemm(m, k, n)) {
+        Some(isa) => gemm_u8_i32_fused_simd(isa, a, za, b, zb, row_init, m, k, n, epi, out, dequant),
+        None => gemm_u8_i32_fused_scalar(a, za, b, zb, row_init, m, k, n, epi, out, dequant),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_u8_i32_fused_simd(
+    isa: Isa,
+    a: &[u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &QEpilogue,
+    out: &mut [u8],
+    mut dequant: Option<&mut [f32]>,
+) -> u64 {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if let Some(d) = dequant.as_deref() {
+        assert_eq!(d.len(), m * n, "dequant emit shape mismatch");
+    }
+    if m == 0 || n == 0 {
+        return 0;
+    }
+    let count_lo = !epi.relu;
+    let mut sat = 0u64;
+    if n == 1 {
+        // matvec: lane dot per row, then the per-element epilogue
+        for i in 0..m {
+            let av =
+                row_init[i].wrapping_add(simd::dot_u8(Some(isa), &a[i * k..(i + 1) * k], za, b, zb));
+            let q = requantize(av, epi.mult, epi.qp.zero_point, epi.relu);
+            out[i] = q;
+            if let Some(d) = dequant.as_deref_mut() {
+                d[i] = epi.qp.dequantize(q);
+            }
+            sat += (q == 255 || (count_lo && q == 0)) as u64;
+        }
+        return sat;
+    }
+    let mut mb = 0;
+    while mb < m {
+        let mrr = MR.min(m - mb);
+        let mut nb = 0;
+        while nb < n {
+            let nrr = NR.min(n - nb);
+            let mut acc = [[0i32; NR]; MR];
+            for (ii, row) in acc[..mrr].iter_mut().enumerate() {
+                row.fill(row_init[mb + ii]);
+            }
+            if nrr == NR {
+                simd::tile_u8(isa, &mut acc, mrr, a, mb * k, k, za, b, nb, n, zb, k);
+            } else {
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + nrr];
+                    for ii in 0..mrr {
+                        let av = a[(mb + ii) * k + kk] as i32 - za;
+                        let ai = &mut acc[ii][..nrr];
+                        for (aj, &bv) in ai.iter_mut().zip(brow.iter()) {
+                            *aj += av * (bv as i32 - zb);
+                        }
+                    }
+                }
+            }
+            // the scalar path's epilogue, verbatim, over the lane-computed
+            // tile — exact sums in, identical bytes out
+            for ii in 0..mrr {
+                let base = (mb + ii) * n + nb;
+                let arow = &acc[ii][..nrr];
+                match dequant.as_deref_mut() {
+                    Some(d) => {
+                        for (jj, &av) in arow.iter().enumerate() {
+                            let q = requantize(av, epi.mult, epi.qp.zero_point, epi.relu);
+                            out[base + jj] = q;
+                            d[base + jj] = epi.qp.dequantize(q);
+                            sat += (q == 255 || (count_lo && q == 0)) as u64;
+                        }
+                    }
+                    None => {
+                        for (jj, &av) in arow.iter().enumerate() {
+                            let q = requantize(av, epi.mult, epi.qp.zero_point, epi.relu);
+                            out[base + jj] = q;
+                            sat += (q == 255 || (count_lo && q == 0)) as u64;
+                        }
+                    }
+                }
+            }
+            nb += nrr;
+        }
+        mb += mrr;
+    }
+    sat
+}
+
+/// The scalar fused micro-kernel — the register-blocked reference path and
+/// the bit-exactness oracle the SIMD driver is verified against.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_u8_i32_fused_scalar(
     a: &[u8],
     za: i32,
     b: &[u8],
@@ -746,6 +1078,94 @@ pub fn gemm_u8_i32_tiled(
 /// reference kernel and to the retained [`gemm_f32_tiled`] path (padded
 /// entries add an exact `a·0.0`).
 pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    row_init: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    gemm_f32_sel(KernelSel::Auto, a, b, row_init, m, k, n, out);
+}
+
+/// [`gemm_f32`] with an explicit kernel selection. The SIMD tile keeps
+/// every output lane's ascending-`k` accumulation order with a separate
+/// multiply and add per step (no FMA), so the float path stays
+/// bit-identical to the scalar oracle; edge columns and `n == 1` shapes
+/// run the scalar loops outright (a lane reduction would reassociate).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_sel(
+    sel: KernelSel,
+    a: &[f32],
+    b: &[f32],
+    row_init: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    match simd::resolve_isa(sel, tune::prefer_gemm(m, k, n)) {
+        Some(isa) if n >= NR => gemm_f32_simd(isa, a, b, row_init, m, k, n, out),
+        _ => gemm_f32_scalar(a, b, row_init, m, k, n, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_simd(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    row_init: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(row_init.len(), m, "row_init length mismatch");
+    assert_eq!(out.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut mb = 0;
+    while mb < m {
+        let mrr = MR.min(m - mb);
+        let mut nb = 0;
+        while nb < n {
+            let nrr = NR.min(n - nb);
+            let mut acc = [[0f32; NR]; MR];
+            for (ii, row) in acc[..mrr].iter_mut().enumerate() {
+                row.fill(row_init[mb + ii]);
+            }
+            if nrr == NR {
+                simd::tile_f32(isa, &mut acc, mrr, a, mb * k, k, b, nb, n, k);
+            } else {
+                for kk in 0..k {
+                    let brow = &b[kk * n + nb..kk * n + nb + nrr];
+                    for ii in 0..mrr {
+                        let av = a[(mb + ii) * k + kk];
+                        let ai = &mut acc[ii][..nrr];
+                        for (aj, &bv) in ai.iter_mut().zip(brow.iter()) {
+                            *aj += av * bv;
+                        }
+                    }
+                }
+            }
+            for ii in 0..mrr {
+                let orow = &mut out[(mb + ii) * n + nb..(mb + ii) * n + nb + nrr];
+                orow.copy_from_slice(&acc[ii][..nrr]);
+            }
+            nb += nrr;
+        }
+        mb += mrr;
+    }
+}
+
+/// The scalar f32 micro-kernel — the register-blocked reference path and
+/// the bit-exactness oracle the SIMD driver is verified against.
+pub fn gemm_f32_scalar(
     a: &[f32],
     b: &[f32],
     row_init: &[f32],

@@ -23,6 +23,7 @@ pub mod gemm;
 pub mod pool;
 pub mod qconv;
 pub mod qlinear;
+pub mod simd;
 pub mod softmax;
 
 /// Arithmetic accounting for the device cost model. A "MAC" is one

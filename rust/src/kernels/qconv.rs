@@ -15,6 +15,7 @@
 //! not computed and they contribute nothing to the backpropagated error —
 //! which is exactly the computational-tree pruning the paper describes.
 
+use crate::kernels::simd::KernelSel;
 use crate::kernels::{gemm, kept_count, ConvGeom, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
@@ -139,6 +140,23 @@ pub fn qconv2d_fwd_gemm(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> QTensor {
+    qconv2d_fwd_gemm_sel(KernelSel::Auto, x, w, bias, geom, out_qp, relu, scratch, ops)
+}
+
+/// [`qconv2d_fwd_gemm`] with an explicit micro-kernel selection (see
+/// [`crate::kernels::simd`]); the plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_fwd_gemm_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
     assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
     let (h, wd) = (x.shape()[1], x.shape()[2]);
     let (oh, ow) = geom.out_hw(h, wd);
@@ -163,7 +181,7 @@ pub fn qconv2d_fwd_gemm(
             gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
             col_buf
         };
-        gemm::gemm_u8_i32(w.values.data(), zw, col, zx, bias, geom.cout, kdim, n, acc);
+        gemm::gemm_u8_i32_sel(sel, w.values.data(), zw, col, zx, bias, geom.cout, kdim, n, acc);
         for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
             *o = requantize(a, mult, out_qp.zero_point, relu);
         }
@@ -204,6 +222,35 @@ pub fn qconv2d_fwd_gemm_fused(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> (QTensor, u64) {
+    qconv2d_fwd_gemm_fused_sel(
+        KernelSel::Auto,
+        x,
+        w,
+        bias,
+        geom,
+        out_qp,
+        relu,
+        dequant,
+        scratch,
+        ops,
+    )
+}
+
+/// [`qconv2d_fwd_gemm_fused`] with an explicit micro-kernel selection; the
+/// plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_fwd_gemm_fused_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    dequant: Option<&mut [f32]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
     assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
     let (h, wd) = (x.shape()[1], x.shape()[2]);
     let (oh, ow) = geom.out_hw(h, wd);
@@ -231,7 +278,8 @@ pub fn qconv2d_fwd_gemm_fused(
             gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
             col_buf
         };
-        sat = gemm::gemm_u8_i32_fused(
+        sat = gemm::gemm_u8_i32_fused_sel(
+            sel,
             w.values.data(),
             zw,
             col,
@@ -387,6 +435,24 @@ pub fn qconv2d_bwd_input_gemm(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> QTensor {
+    qconv2d_bwd_input_gemm_sel(KernelSel::Auto, e, w, geom, in_h, in_w, out_qp, keep, scratch, ops)
+}
+
+/// [`qconv2d_bwd_input_gemm`] with an explicit micro-kernel selection; the
+/// plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    w: &QTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
     assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
     let (oh, ow) = (e.shape()[1], e.shape()[2]);
     let ze = e.qp.zero_point;
@@ -430,7 +496,7 @@ pub fn qconv2d_bwd_input_gemm(
             );
             col_buf
         };
-        gemm::gemm_u8_i32(wt_buf, zw, col, ze, init, geom.cin, krow, n, acc);
+        gemm::gemm_u8_i32_sel(sel, wt_buf, zw, col, ze, init, geom.cin, krow, n, acc);
         for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
             *o = requantize(a, mult, out_qp.zero_point, false);
         }
@@ -448,6 +514,35 @@ pub fn qconv2d_bwd_input_gemm(
 /// op accounting (same GEMM core, same per-element epilogue map).
 #[allow(clippy::too_many_arguments)]
 pub fn qconv2d_bwd_input_gemm_fused(
+    e: &QTensor,
+    w: &QTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    qconv2d_bwd_input_gemm_fused_sel(
+        KernelSel::Auto,
+        e,
+        w,
+        geom,
+        in_h,
+        in_w,
+        out_qp,
+        keep,
+        scratch,
+        ops,
+    )
+}
+
+/// [`qconv2d_bwd_input_gemm_fused`] with an explicit micro-kernel selection;
+/// the plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_fused_sel(
+    sel: KernelSel,
     e: &QTensor,
     w: &QTensor,
     geom: &ConvGeom,
@@ -498,7 +593,8 @@ pub fn qconv2d_bwd_input_gemm_fused(
             );
             col_buf
         };
-        gemm::gemm_u8_i32_fused(
+        gemm::gemm_u8_i32_fused_sel(
+            sel,
             wt_buf,
             zw,
             col,
@@ -529,6 +625,35 @@ pub fn qconv2d_bwd_input_gemm_fused(
 /// the unpacked dense call (the packing was never counted as MACs).
 #[allow(clippy::too_many_arguments)]
 pub fn qconv2d_bwd_input_gemm_packed(
+    e: &QTensor,
+    w: &QTensor,
+    wt_pack: &[u8],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    qconv2d_bwd_input_gemm_packed_sel(
+        KernelSel::Auto,
+        e,
+        w,
+        wt_pack,
+        geom,
+        in_h,
+        in_w,
+        out_qp,
+        scratch,
+        ops,
+    )
+}
+
+/// [`qconv2d_bwd_input_gemm_packed`] with an explicit micro-kernel
+/// selection; the plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_packed_sel(
+    sel: KernelSel,
     e: &QTensor,
     w: &QTensor,
     wt_pack: &[u8],
@@ -573,7 +698,7 @@ pub fn qconv2d_bwd_input_gemm_packed(
             );
             col_buf
         };
-        gemm::gemm_u8_i32(wt_pack, zw, col, ze, init, geom.cin, krow, n, acc);
+        gemm::gemm_u8_i32_sel(sel, wt_pack, zw, col, ze, init, geom.cin, krow, n, acc);
         for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
             *o = requantize(a, mult, out_qp.zero_point, false);
         }
@@ -590,6 +715,35 @@ pub fn qconv2d_bwd_input_gemm_packed(
 /// Bit-identical to the unfused packed kernel with identical op accounting.
 #[allow(clippy::too_many_arguments)]
 pub fn qconv2d_bwd_input_gemm_packed_fused(
+    e: &QTensor,
+    w: &QTensor,
+    wt_pack: &[u8],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    qconv2d_bwd_input_gemm_packed_fused_sel(
+        KernelSel::Auto,
+        e,
+        w,
+        wt_pack,
+        geom,
+        in_h,
+        in_w,
+        out_qp,
+        scratch,
+        ops,
+    )
+}
+
+/// [`qconv2d_bwd_input_gemm_packed_fused`] with an explicit micro-kernel
+/// selection; the plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_packed_fused_sel(
+    sel: KernelSel,
     e: &QTensor,
     w: &QTensor,
     wt_pack: &[u8],
@@ -638,7 +792,8 @@ pub fn qconv2d_bwd_input_gemm_packed_fused(
             );
             col_buf
         };
-        gemm::gemm_u8_i32_fused(
+        gemm::gemm_u8_i32_fused_sel(
+            sel,
             wt_pack,
             zw,
             col,
@@ -790,6 +945,21 @@ pub fn qconv2d_bwd_weight_gemm(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> (TensorF32, TensorF32) {
+    qconv2d_bwd_weight_gemm_sel(KernelSel::Auto, e, x, geom, keep, scratch, ops)
+}
+
+/// [`qconv2d_bwd_weight_gemm`] with an explicit micro-kernel selection; the
+/// plain name forwards [`KernelSel::Auto`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_weight_gemm_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    x: &QTensor,
+    geom: &ConvGeom,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
     assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
     let (h, wd) = (x.shape()[1], x.shape()[2]);
     let (oh, ow) = (e.shape()[1], e.shape()[2]);
@@ -811,7 +981,7 @@ pub fn qconv2d_bwd_weight_gemm(
             gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
             col_buf
         };
-        gemm::gemm_abt_u8_i32(e.values.data(), ze, col, zx, geom.cout, kdim, n, keep, acc);
+        gemm::gemm_abt_u8_i32_sel(sel, e.values.data(), ze, col, zx, geom.cout, kdim, n, keep, acc);
         for (g, &a) in gw.data_mut().iter_mut().zip(acc.iter()) {
             *g = a as f32 * s;
         }

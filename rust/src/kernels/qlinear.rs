@@ -9,6 +9,7 @@
 //! The sparse-update "structures" of a linear layer are its output rows
 //! (paper §III-B: rows/columns); `keep` masks whole rows.
 
+use crate::kernels::simd::KernelSel;
 use crate::kernels::{gemm, kept_count, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
@@ -16,6 +17,20 @@ use crate::tensor::TensorF32;
 
 /// Forward: `y = relu?(W·x + b)` fully quantized.
 pub fn qlinear_fwd(
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> QTensor {
+    qlinear_fwd_sel(KernelSel::Auto, x, w, bias, out_qp, relu, ops)
+}
+
+/// [`qlinear_fwd`] with an explicit kernel selection (the layer ops pass
+/// the plan-compile autotuned choice). Bit-exact for every selection.
+pub fn qlinear_fwd_sel(
+    sel: KernelSel,
     x: &QTensor,
     w: &QTensor,
     bias: &[i32],
@@ -39,7 +54,7 @@ pub fn qlinear_fwd(
     // A-matrix, the input vector a single column). Bit-exact with the
     // previous hand-rolled loop — i32 sums are order-independent.
     let mut acc = vec![0i32; n_out];
-    gemm::gemm_u8_i32(wd, zw, xd, zx, bias, n_out, n_in, 1, &mut acc);
+    gemm::gemm_u8_i32_sel(sel, wd, zw, xd, zx, bias, n_out, n_in, 1, &mut acc);
     let mut out = QTensor::zeros(&[n_out], out_qp);
     for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
         *o = requantize(a, mult, out_qp.zero_point, relu);
@@ -71,6 +86,22 @@ pub fn qlinear_fwd_fused(
     dequant: Option<&mut [f32]>,
     ops: &mut OpCounter,
 ) -> (QTensor, u64) {
+    qlinear_fwd_fused_sel(KernelSel::Auto, x, w, bias, out_qp, relu, dequant, ops)
+}
+
+/// [`qlinear_fwd_fused`] with an explicit kernel selection. Bit-exact for
+/// every selection (the fused GEMM's epilogue is selection-invariant).
+#[allow(clippy::too_many_arguments)]
+pub fn qlinear_fwd_fused_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    w: &QTensor,
+    bias: &[i32],
+    out_qp: QParams,
+    relu: bool,
+    dequant: Option<&mut [f32]>,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
     let n_in = x.len();
     let n_out = w.shape()[0];
     assert_eq!(w.shape()[1], n_in, "weight/input dims mismatch");
@@ -87,7 +118,8 @@ pub fn qlinear_fwd_fused(
     let wd = w.values.data();
 
     let mut out = QTensor::zeros(&[n_out], out_qp);
-    let sat = gemm::gemm_u8_i32_fused(
+    let sat = gemm::gemm_u8_i32_fused_sel(
+        sel,
         wd,
         zw,
         xd,
@@ -169,6 +201,19 @@ pub fn qlinear_bwd_input_gemm(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> QTensor {
+    qlinear_bwd_input_gemm_sel(KernelSel::Auto, e, w, out_qp, keep, scratch, ops)
+}
+
+/// [`qlinear_bwd_input_gemm`] with an explicit kernel selection.
+pub fn qlinear_bwd_input_gemm_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    w: &QTensor,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
     let n_out = e.len();
     let n_in = w.shape()[1];
     assert_eq!(w.shape()[0], n_out);
@@ -187,7 +232,7 @@ pub fn qlinear_bwd_input_gemm(
                 _ => src,
             };
         }
-        gemm::gemm_u8_i32(ecopy, ze, w.values.data(), zw, init, 1, n_out, n_in, acc);
+        gemm::gemm_u8_i32_sel(sel, ecopy, ze, w.values.data(), zw, init, 1, n_out, n_in, acc);
         for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
             *o = requantize(a, mult, out_qp.zero_point, false);
         }
@@ -204,6 +249,19 @@ pub fn qlinear_bwd_input_gemm(
 /// (only the masked `e` scratch copy remains). Bit-exact with both unfused
 /// backward kernels, with identical op accounting.
 pub fn qlinear_bwd_input_gemm_fused(
+    e: &QTensor,
+    w: &QTensor,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    qlinear_bwd_input_gemm_fused_sel(KernelSel::Auto, e, w, out_qp, keep, scratch, ops)
+}
+
+/// [`qlinear_bwd_input_gemm_fused`] with an explicit kernel selection.
+pub fn qlinear_bwd_input_gemm_fused_sel(
+    sel: KernelSel,
     e: &QTensor,
     w: &QTensor,
     out_qp: QParams,
@@ -233,7 +291,8 @@ pub fn qlinear_bwd_input_gemm_fused(
                 _ => src,
             };
         }
-        gemm::gemm_u8_i32_fused(
+        gemm::gemm_u8_i32_fused_sel(
+            sel,
             ecopy,
             ze,
             w.values.data(),
@@ -310,6 +369,18 @@ pub fn qlinear_bwd_weight_gemm(
     scratch: &mut Scratch,
     ops: &mut OpCounter,
 ) -> (TensorF32, TensorF32) {
+    qlinear_bwd_weight_gemm_sel(KernelSel::Auto, e, x, keep, scratch, ops)
+}
+
+/// [`qlinear_bwd_weight_gemm`] with an explicit kernel selection.
+pub fn qlinear_bwd_weight_gemm_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    x: &QTensor,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (TensorF32, TensorF32) {
     let n_out = e.len();
     let n_in = x.len();
     let ze = e.qp.zero_point;
@@ -320,7 +391,18 @@ pub fn qlinear_bwd_weight_gemm(
     let mut gb = TensorF32::zeros(&[n_out]);
     {
         let (_, _, acc, _) = scratch.qconv_bwd_bufs(0, 0, n_out * n_in, 0);
-        gemm::gemm_abt_u8_i32(e.values.data(), ze, x.values.data(), zx, n_out, n_in, 1, keep, acc);
+        gemm::gemm_abt_u8_i32_sel(
+            sel,
+            e.values.data(),
+            ze,
+            x.values.data(),
+            zx,
+            n_out,
+            n_in,
+            1,
+            keep,
+            acc,
+        );
         for (g, &a) in gw.data_mut().iter_mut().zip(acc.iter()) {
             *g = a as f32 * s;
         }

@@ -1,0 +1,512 @@
+//! Runtime-dispatched SIMD micro-kernel back ends for the GEMM and
+//! depthwise engines (`kernels::gemm`, `kernels::dwconv`).
+//!
+//! The scalar MR×NR micro-kernels (PRs 4–6) were shaped so their inner
+//! loops vectorize; this module adds the explicit `core::arch` lanes —
+//! AVX2 and SSE4.1 on x86_64, NEON on aarch64 — behind one-time runtime
+//! feature detection. The design contract, in order of precedence:
+//!
+//! 1. **The scalar micro-kernel stays the oracle.** Every SIMD path is
+//!    bit-identical on the u8/i32 kernels (i32 accumulation is
+//!    order-independent, including the fused [`QEpilogue`] writeout —
+//!    the epilogue is a pure per-element map over exact sums), and
+//!    bit-identical on the f32 GEMM/AXPY paths too, because each output
+//!    lane keeps the scalar kernel's ascending-`k` accumulation order
+//!    with a separate multiply and add per step (never FMA — fusing
+//!    would change the rounding). f32 *reductions* that a SIMD schedule
+//!    would have to reassociate (`gemm_abt_f32`, the float depthwise
+//!    weight-gradient dots) have **no** SIMD path at all.
+//! 2. **Detection is one-time.** [`isa`] probes the host once and caches
+//!    the result in a `OnceLock`; every kernel call is a table lookup,
+//!    never a CPUID.
+//! 3. **Dispatch is layered.** [`KernelMode`] (the `TT_KERNEL` override,
+//!    also settable through the typed `RunConfig`) is the *global*
+//!    policy; [`TilePref`] is the *per-shape* autotuned preference the
+//!    plan compiler caches next to a layer's weight packs
+//!    (`graph::packs::KernelChoice`); [`resolve`] combines the two into
+//!    the [`KernelSel`] a kernel call actually executes. `TilePref` is
+//!    deliberately mode-independent so a cached plan stays valid when
+//!    `TT_KERNEL` is flipped in-process (the parity tests do exactly
+//!    that).
+//!
+//! On ISAs with no SIMD path (or when detection fails) everything
+//! resolves to the scalar micro-kernels — the default build compiles
+//! unchanged everywhere and stays zero-dependency.
+//!
+//! [`QEpilogue`]: crate::kernels::gemm::QEpilogue
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::gemm::{MR, NR};
+
+pub mod tune;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+// The lane splits below hard-code the 4×16 register block (NR = 2×8 AVX2
+// lanes = 4×4 SSE/NEON lanes); a tile-size change must revisit them.
+const _: () = assert!(MR == 4 && NR == 16, "SIMD tiles are written for the 4x16 block");
+
+/// The instruction sets a host can dispatch to. All variants exist on
+/// every build target (so `KernelSel` has one shape everywhere); [`isa`]
+/// only ever returns the ones the current architecture can run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// x86_64 AVX2 (8×i32 / 8×f32 lanes).
+    Avx2,
+    /// x86_64 SSE4.1 (4×i32 / 4×f32 lanes).
+    Sse41,
+    /// aarch64 NEON (4×i32 / 4×f32 lanes).
+    Neon,
+}
+
+static ISA: OnceLock<Option<Isa>> = OnceLock::new();
+
+/// The best SIMD instruction set the host supports, probed once and
+/// cached (`None` on architectures without a SIMD path here).
+pub fn isa() -> Option<Isa> {
+    *ISA.get_or_init(detect)
+}
+
+fn detect() -> Option<Isa> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Some(Isa::Avx2);
+        }
+        if is_x86_feature_detected!("sse4.1") {
+            return Some(Isa::Sse41);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(Isa::Neon);
+        }
+    }
+    None
+}
+
+/// The global dispatch policy — the `TT_KERNEL=scalar|simd|auto` knob,
+/// exposed through the typed `RunConfig` as well.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Per-shape choice: a layer runs SIMD only where the plan-compile
+    /// autotuner ([`tune`]) tabulated a win (the default).
+    #[default]
+    Auto,
+    /// Force the scalar micro-kernels everywhere (the oracle path).
+    Scalar,
+    /// Force SIMD wherever a vector path exists, ignoring the autotuner
+    /// (falls back to scalar only where no SIMD kernel exists at all).
+    Simd,
+}
+
+impl KernelMode {
+    /// Parse a `TT_KERNEL` value. Unknown strings are `None` (callers
+    /// default to [`KernelMode::Auto`]).
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelMode::Auto),
+            "scalar" => Some(KernelMode::Scalar),
+            "simd" => Some(KernelMode::Simd),
+            _ => None,
+        }
+    }
+
+    fn from_env() -> KernelMode {
+        std::env::var("TT_KERNEL").ok().and_then(|v| KernelMode::parse(&v)).unwrap_or_default()
+    }
+}
+
+// 0 = unset (read TT_KERNEL on first use), then 1/2/3 = Auto/Scalar/Simd.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// The current global kernel mode. Initialized lazily from `TT_KERNEL`
+/// on first use; [`set_mode`] overrides it in-process (the typed
+/// `RunConfig` path, and the forced-dispatch parity tests).
+pub fn mode() -> KernelMode {
+    match MODE.load(Ordering::Relaxed) {
+        0 => {
+            let m = KernelMode::from_env();
+            set_mode(m);
+            m
+        }
+        2 => KernelMode::Scalar,
+        3 => KernelMode::Simd,
+        _ => KernelMode::Auto,
+    }
+}
+
+/// Set the global kernel mode, overriding `TT_KERNEL`.
+pub fn set_mode(m: KernelMode) {
+    let v = match m {
+        KernelMode::Auto => 1,
+        KernelMode::Scalar => 2,
+        KernelMode::Simd => 3,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// The per-shape kernel preference the plan-compile autotuner tabulates
+/// ([`tune`]) and the pack cache stores per layer. Mode-independent on
+/// purpose: under `TT_KERNEL=scalar|simd` the global mode wins, so a
+/// cached plan never needs recompiling when the mode flips.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TilePref {
+    /// Edge-dominated or tiny shape: the scalar micro-kernel wins.
+    #[default]
+    Scalar,
+    /// Vector-friendly shape: take the SIMD path when the host has one.
+    Simd,
+}
+
+/// What one kernel call actually executes — the parameter of the `_sel`
+/// kernel twins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelSel {
+    /// Resolve inside the kernel from the shape at hand (the old-name
+    /// wrappers; call sites without a plan-cached choice).
+    Auto,
+    /// The scalar micro-kernel (oracle path).
+    Scalar,
+    /// The SIMD path on the given instruction set.
+    Simd(Isa),
+}
+
+/// Combine the global [`mode`] with a per-shape [`TilePref`] into the
+/// selection a kernel call executes.
+pub fn resolve(pref: TilePref) -> KernelSel {
+    match mode() {
+        KernelMode::Scalar => KernelSel::Scalar,
+        KernelMode::Simd => match isa() {
+            Some(i) => KernelSel::Simd(i),
+            None => KernelSel::Scalar,
+        },
+        KernelMode::Auto => match (pref, isa()) {
+            (TilePref::Simd, Some(i)) => KernelSel::Simd(i),
+            _ => KernelSel::Scalar,
+        },
+    }
+}
+
+/// Resolve a `_sel` parameter to a concrete ISA (or scalar = `None`),
+/// using `pref` only when the caller passed [`KernelSel::Auto`].
+pub fn resolve_isa(sel: KernelSel, pref: TilePref) -> Option<Isa> {
+    let sel = match sel {
+        KernelSel::Auto => resolve(pref),
+        s => s,
+    };
+    match sel {
+        KernelSel::Simd(i) => Some(i),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch wrappers: safe entry points over the per-ISA unsafe kernels.
+// Each carries the bounds contract as debug asserts; the `_` arms (ISAs
+// the current architecture cannot return) fall back to the scalar loop so
+// the match stays exhaustive on every build target.
+// ---------------------------------------------------------------------------
+
+/// Full-width u8/i32 accumulator tile:
+/// `acc[ii][jj] += Σ_kk (a[arow0 + ii·astride + kk] − za) ·
+/// (b[bcol0 + kk·bstride + jj] − zb)` for `ii < mrr`, `jj < NR`.
+/// Exact i32 sums — bit-identical to the scalar tile for any lane
+/// schedule.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tile_u8(
+    isa: Isa,
+    acc: &mut [[i32; NR]; MR],
+    mrr: usize,
+    a: &[u8],
+    arow0: usize,
+    astride: usize,
+    za: i32,
+    b: &[u8],
+    bcol0: usize,
+    bstride: usize,
+    zb: i32,
+    k: usize,
+) {
+    debug_assert!(mrr >= 1 && mrr <= MR);
+    debug_assert!(k == 0 || arow0 + (mrr - 1) * astride + k <= a.len());
+    debug_assert!(k == 0 || bcol0 + (k - 1) * bstride + NR <= b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            x86::tile_u8_avx2(acc, mrr, a, arow0, astride, za, b, bcol0, bstride, zb, k)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe {
+            x86::tile_u8_sse41(acc, mrr, a, arow0, astride, za, b, bcol0, bstride, zb, k)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::tile_u8_neon(acc, mrr, a, arow0, astride, za, b, bcol0, bstride, zb, k)
+        },
+        _ => tile_u8_scalar(acc, mrr, a, arow0, astride, za, b, bcol0, bstride, zb, k),
+    }
+}
+
+/// Full-width f32 tile: `acc[ii][jj] += a[arow0 + ii·astride + kk] ·
+/// b[bcol0 + kk·bstride + jj]`, ascending `kk`, one separate multiply and
+/// add per step — every output lane keeps the scalar kernel's reduction
+/// order, so results are bit-identical (no FMA anywhere).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tile_f32(
+    isa: Isa,
+    acc: &mut [[f32; NR]; MR],
+    mrr: usize,
+    a: &[f32],
+    arow0: usize,
+    astride: usize,
+    b: &[f32],
+    bcol0: usize,
+    bstride: usize,
+    k: usize,
+) {
+    debug_assert!(mrr >= 1 && mrr <= MR);
+    debug_assert!(k == 0 || arow0 + (mrr - 1) * astride + k <= a.len());
+    debug_assert!(k == 0 || bcol0 + (k - 1) * bstride + NR <= b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            x86::tile_f32_avx2(acc, mrr, a, arow0, astride, b, bcol0, bstride, k)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse41 => unsafe {
+            x86::tile_f32_sse41(acc, mrr, a, arow0, astride, b, bcol0, bstride, k)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::tile_f32_neon(acc, mrr, a, arow0, astride, b, bcol0, bstride, k)
+        },
+        _ => tile_f32_scalar(acc, mrr, a, arow0, astride, b, bcol0, bstride, k),
+    }
+}
+
+/// Zero-pointed u8 dot product `Σ (a[i] − za)(b[i] − zb)` — the matvec
+/// row kernel (`n == 1` GEMMs) and the A·Bᵀ / depthwise-dW reduction.
+/// i32 partial-lane sums are exact under any reordering.
+pub(crate) fn dot_u8(isa: Option<Isa>, a: &[u8], za: i32, b: &[u8], zb: i32) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Some(Isa::Avx2) => unsafe { x86::dot_u8_avx2(a, za, b, zb) },
+        #[cfg(target_arch = "x86_64")]
+        Some(Isa::Sse41) => unsafe { x86::dot_u8_sse41(a, za, b, zb) },
+        #[cfg(target_arch = "aarch64")]
+        Some(Isa::Neon) => unsafe { neon::dot_u8_neon(a, za, b, zb) },
+        _ => dot_u8_scalar(a, za, b, zb),
+    }
+}
+
+/// Quantized AXPY span `acc[i] += wv · (xs[i] − zx)` — the depthwise
+/// engine's stride-1 inner loop. Element-wise (no cross-lane reduction),
+/// so exact for any lane width.
+pub(crate) fn axpy_u8_i32(isa: Option<Isa>, acc: &mut [i32], xs: &[u8], zx: i32, wv: i32) {
+    debug_assert_eq!(acc.len(), xs.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Some(Isa::Avx2) => unsafe { x86::axpy_u8_i32_avx2(acc, xs, zx, wv) },
+        #[cfg(target_arch = "x86_64")]
+        Some(Isa::Sse41) => unsafe { x86::axpy_u8_i32_sse41(acc, xs, zx, wv) },
+        #[cfg(target_arch = "aarch64")]
+        Some(Isa::Neon) => unsafe { neon::axpy_u8_i32_neon(acc, xs, zx, wv) },
+        _ => {
+            for (a, &xv) in acc.iter_mut().zip(xs.iter()) {
+                *a += wv * (xv as i32 - zx);
+            }
+        }
+    }
+}
+
+/// Float AXPY span `acc[i] += wv · xs[i]` — the float depthwise engine's
+/// stride-1 inner loop. Per element it is the same single multiply and
+/// add the scalar loop performs (element-wise, never reassociated), so
+/// results are bit-identical.
+pub(crate) fn axpy_f32(isa: Option<Isa>, acc: &mut [f32], xs: &[f32], wv: f32) {
+    debug_assert_eq!(acc.len(), xs.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Some(Isa::Avx2) => unsafe { x86::axpy_f32_avx2(acc, xs, wv) },
+        #[cfg(target_arch = "x86_64")]
+        Some(Isa::Sse41) => unsafe { x86::axpy_f32_sse41(acc, xs, wv) },
+        #[cfg(target_arch = "aarch64")]
+        Some(Isa::Neon) => unsafe { neon::axpy_f32_neon(acc, xs, wv) },
+        _ => {
+            for (a, &xv) in acc.iter_mut().zip(xs.iter()) {
+                *a += wv * xv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar fallbacks for the unreachable-ISA match arms (and non-SIMD
+// architectures). Same loops as the micro-kernels' full-tile branches.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn tile_u8_scalar(
+    acc: &mut [[i32; NR]; MR],
+    mrr: usize,
+    a: &[u8],
+    arow0: usize,
+    astride: usize,
+    za: i32,
+    b: &[u8],
+    bcol0: usize,
+    bstride: usize,
+    zb: i32,
+    k: usize,
+) {
+    for kk in 0..k {
+        let boff = bcol0 + kk * bstride;
+        let brow = &b[boff..boff + NR];
+        for ii in 0..mrr {
+            let av = a[arow0 + ii * astride + kk] as i32 - za;
+            let ai = &mut acc[ii];
+            for jj in 0..NR {
+                ai[jj] += av * (brow[jj] as i32 - zb);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tile_f32_scalar(
+    acc: &mut [[f32; NR]; MR],
+    mrr: usize,
+    a: &[f32],
+    arow0: usize,
+    astride: usize,
+    b: &[f32],
+    bcol0: usize,
+    bstride: usize,
+    k: usize,
+) {
+    for kk in 0..k {
+        let boff = bcol0 + kk * bstride;
+        let brow = &b[boff..boff + NR];
+        for ii in 0..mrr {
+            let av = a[arow0 + ii * astride + kk];
+            let ai = &mut acc[ii];
+            for jj in 0..NR {
+                ai[jj] += av * brow[jj];
+            }
+        }
+    }
+}
+
+fn dot_u8_scalar(a: &[u8], za: i32, b: &[u8], zb: i32) -> i32 {
+    let mut sum = 0i32;
+    for (&av, &bv) in a.iter().zip(b.iter()) {
+        sum = sum.wrapping_add((av as i32 - za).wrapping_mul(bv as i32 - zb));
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn mode_parse_round_trip() {
+        assert_eq!(KernelMode::parse("auto"), Some(KernelMode::Auto));
+        assert_eq!(KernelMode::parse("SCALAR"), Some(KernelMode::Scalar));
+        assert_eq!(KernelMode::parse(" simd "), Some(KernelMode::Simd));
+        assert_eq!(KernelMode::parse("avx512"), None);
+    }
+
+    #[test]
+    fn resolve_honors_forced_modes() {
+        let prev = mode();
+        set_mode(KernelMode::Scalar);
+        assert_eq!(resolve(TilePref::Simd), KernelSel::Scalar);
+        set_mode(KernelMode::Simd);
+        match isa() {
+            Some(i) => assert_eq!(resolve(TilePref::Scalar), KernelSel::Simd(i)),
+            None => assert_eq!(resolve(TilePref::Scalar), KernelSel::Scalar),
+        }
+        set_mode(KernelMode::Auto);
+        assert_eq!(resolve(TilePref::Scalar), KernelSel::Scalar);
+        set_mode(prev);
+    }
+
+    #[test]
+    fn detection_is_stable() {
+        assert_eq!(isa(), isa());
+    }
+
+    /// Every SIMD span/dot/tile helper must be bit-identical to its
+    /// scalar fallback on the host's detected ISA (vacuous on non-SIMD
+    /// hosts).
+    #[test]
+    fn span_helpers_match_scalar_on_host_isa() {
+        let Some(i) = isa() else { return };
+        let mut rng = Pcg32::seeded(9);
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 31, 64] {
+            let xs: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let ys: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(
+                dot_u8(Some(i), &xs, 3, &ys, 7),
+                dot_u8_scalar(&xs, 3, &ys, 7),
+                "dot_u8 len {len}"
+            );
+
+            let base: Vec<i32> = (0..len).map(|_| rng.below(1000) as i32 - 500).collect();
+            let mut simd_acc = base.clone();
+            let mut ref_acc = base.clone();
+            axpy_u8_i32(Some(i), &mut simd_acc, &xs, 3, -5);
+            axpy_u8_i32(None, &mut ref_acc, &xs, 3, -5);
+            assert_eq!(simd_acc, ref_acc, "axpy_u8_i32 len {len}");
+
+            let xf: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let basef: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let mut sf = basef.clone();
+            let mut rf = basef.clone();
+            axpy_f32(Some(i), &mut sf, &xf, 0.37);
+            axpy_f32(None, &mut rf, &xf, 0.37);
+            let sb: Vec<u32> = sf.iter().map(|v| v.to_bits()).collect();
+            let rb: Vec<u32> = rf.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sb, rb, "axpy_f32 len {len}");
+        }
+    }
+
+    #[test]
+    fn tiles_match_scalar_on_host_isa() {
+        let Some(i) = isa() else { return };
+        let mut rng = Pcg32::seeded(11);
+        for k in [1usize, 2, 5, 8, 31] {
+            for mrr in 1..=MR {
+                let a: Vec<u8> = (0..MR * k).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..k * NR).map(|_| rng.below(256) as u8).collect();
+                let mut t_simd = [[7i32; NR]; MR];
+                let mut t_ref = [[7i32; NR]; MR];
+                tile_u8(i, &mut t_simd, mrr, &a, 0, k, 3, &b, 0, NR, 5, k);
+                tile_u8_scalar(&mut t_ref, mrr, &a, 0, k, 3, &b, 0, NR, 5, k);
+                assert_eq!(t_simd, t_ref, "tile_u8 k={k} mrr={mrr}");
+
+                let af: Vec<f32> = (0..MR * k).map(|_| rng.normal()).collect();
+                let bf: Vec<f32> = (0..k * NR).map(|_| rng.normal()).collect();
+                let mut f_simd = [[0.25f32; NR]; MR];
+                let mut f_ref = [[0.25f32; NR]; MR];
+                tile_f32(i, &mut f_simd, mrr, &af, 0, k, &bf, 0, NR, k);
+                tile_f32_scalar(&mut f_ref, mrr, &af, 0, k, &bf, 0, NR, k);
+                let sb: Vec<u32> =
+                    f_simd.iter().flat_map(|r| r.iter().map(|v| v.to_bits())).collect();
+                let rb: Vec<u32> =
+                    f_ref.iter().flat_map(|r| r.iter().map(|v| v.to_bits())).collect();
+                assert_eq!(sb, rb, "tile_f32 k={k} mrr={mrr}");
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! NEON lane kernels (aarch64 only). Same safety and numerics contract
+//! as `simd::x86`: callers verify ISA support and bounds; u8/i32 paths
+//! are exact (integer `vmlaq` is a true i32 multiply-accumulate), f32
+//! paths use a separate `vmulq`/`vaddq` pair per `k` step so no FMA
+//! contraction can change the scalar rounding.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::aarch64::*;
+
+use crate::kernels::gemm::{MR, NR};
+
+/// Widen 16 bytes at `p` into four 4×i32 lanes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn load16_u8_s32(p: *const u8) -> [int32x4_t; 4] {
+    let bytes = vld1q_u8(p);
+    let lo = vmovl_u8(vget_low_u8(bytes));
+    let hi = vmovl_u8(vget_high_u8(bytes));
+    [
+        vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(lo))),
+        vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(lo))),
+        vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(hi))),
+        vreinterpretq_s32_u32(vmovl_u16(vget_high_u16(hi))),
+    ]
+}
+
+/// Widen 4 bytes at `p` into one 4×i32 lane.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn load4_u8_s32(p: *const u8) -> int32x4_t {
+    let bytes = vreinterpret_u8_u32(vdup_n_u32(core::ptr::read_unaligned(p as *const u32)));
+    vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(vmovl_u8(bytes))))
+}
+
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn tile_u8_neon(
+    acc: &mut [[i32; NR]; MR],
+    mrr: usize,
+    a: &[u8],
+    arow0: usize,
+    astride: usize,
+    za: i32,
+    b: &[u8],
+    bcol0: usize,
+    bstride: usize,
+    zb: i32,
+    k: usize,
+) {
+    let zbv = vdupq_n_s32(zb);
+    let mut accv = [[vdupq_n_s32(0); 4]; MR];
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter_mut().enumerate() {
+            *lane = vld1q_s32(acc[ii].as_ptr().add(h * 4));
+        }
+    }
+    for kk in 0..k {
+        let mut bv = load16_u8_s32(b.as_ptr().add(bcol0 + kk * bstride));
+        for lane in bv.iter_mut() {
+            *lane = vsubq_s32(*lane, zbv);
+        }
+        for (ii, lanes) in accv[..mrr].iter_mut().enumerate() {
+            let av = *a.get_unchecked(arow0 + ii * astride + kk) as i32 - za;
+            for (lane, bl) in lanes.iter_mut().zip(bv.iter()) {
+                // integer multiply-accumulate: exact i32 arithmetic
+                *lane = vmlaq_n_s32(*lane, *bl, av);
+            }
+        }
+    }
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter().enumerate() {
+            vst1q_s32(acc[ii].as_mut_ptr().add(h * 4), *lane);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn tile_f32_neon(
+    acc: &mut [[f32; NR]; MR],
+    mrr: usize,
+    a: &[f32],
+    arow0: usize,
+    astride: usize,
+    b: &[f32],
+    bcol0: usize,
+    bstride: usize,
+    k: usize,
+) {
+    let mut accv = [[vdupq_n_f32(0.0); 4]; MR];
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter_mut().enumerate() {
+            *lane = vld1q_f32(acc[ii].as_ptr().add(h * 4));
+        }
+    }
+    for kk in 0..k {
+        let bp = b.as_ptr().add(bcol0 + kk * bstride);
+        let mut bv = [vdupq_n_f32(0.0); 4];
+        for (h, lane) in bv.iter_mut().enumerate() {
+            *lane = vld1q_f32(bp.add(h * 4));
+        }
+        for (ii, lanes) in accv[..mrr].iter_mut().enumerate() {
+            let av = vdupq_n_f32(*a.get_unchecked(arow0 + ii * astride + kk));
+            for (lane, bl) in lanes.iter_mut().zip(bv.iter()) {
+                // separate mul + add (not vfmaq): keeps the scalar rounding
+                *lane = vaddq_f32(*lane, vmulq_f32(av, *bl));
+            }
+        }
+    }
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter().enumerate() {
+            vst1q_f32(acc[ii].as_mut_ptr().add(h * 4), *lane);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot_u8_neon(a: &[u8], za: i32, b: &[u8], zb: i32) -> i32 {
+    let k = a.len();
+    let zav = vdupq_n_s32(za);
+    let zbv = vdupq_n_s32(zb);
+    let mut accv = vdupq_n_s32(0);
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let av = vsubq_s32(load4_u8_s32(a.as_ptr().add(kk)), zav);
+        let bv = vsubq_s32(load4_u8_s32(b.as_ptr().add(kk)), zbv);
+        accv = vmlaq_s32(accv, av, bv);
+        kk += 4;
+    }
+    let mut sum = vaddvq_s32(accv);
+    while kk < k {
+        sum = sum
+            .wrapping_add((*a.get_unchecked(kk) as i32 - za) * (*b.get_unchecked(kk) as i32 - zb));
+        kk += 1;
+    }
+    sum
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn axpy_u8_i32_neon(acc: &mut [i32], xs: &[u8], zx: i32, wv: i32) {
+    let n = acc.len();
+    let zxv = vdupq_n_s32(zx);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = vsubq_s32(load4_u8_s32(xs.as_ptr().add(i)), zxv);
+        let av = vld1q_s32(acc.as_ptr().add(i));
+        vst1q_s32(acc.as_mut_ptr().add(i), vmlaq_n_s32(av, xv, wv));
+        i += 4;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += wv * (*xs.get_unchecked(i) as i32 - zx);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn axpy_f32_neon(acc: &mut [f32], xs: &[f32], wv: f32) {
+    let n = acc.len();
+    let wvv = vdupq_n_f32(wv);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = vld1q_f32(xs.as_ptr().add(i));
+        let av = vld1q_f32(acc.as_ptr().add(i));
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(av, vmulq_f32(wvv, xv)));
+        i += 4;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += wv * *xs.get_unchecked(i);
+        i += 1;
+    }
+}

@@ -1,0 +1,90 @@
+//! The plan-compile autotuner: a statically tabulated cost model that
+//! maps a layer geometry to a [`TilePref`] per kernel direction.
+//!
+//! Contract (DESIGN.md §10): the model is *conservative and
+//! machine-independent* — it only answers "is this shape wide enough
+//! that the vector path can amortize its lane setup", never "how fast is
+//! this host". Shapes it declares [`TilePref::Scalar`] are the
+//! edge-dominated ones where the SIMD driver would spend most of its
+//! time in the scalar edge-column branch anyway; that *is* the
+//! edge-tile strategy — resolve the whole layer to the scalar
+//! micro-kernel rather than pay dispatch for no vector work. The
+//! thresholds are lane-width facts (8 i32 lanes on AVX2, 4 on
+//! SSE4.1/NEON, NR = 16 columns per full tile), not measurements, so a
+//! plan compiled on one host stays valid on another; `TT_KERNEL` exists
+//! to override the table wholesale when a host disagrees.
+
+use super::TilePref;
+use crate::kernels::gemm::NR;
+
+/// Preference for an `m × k × n` GEMM (C = A·B + init, row-major).
+///
+/// * `n >= NR`: at least one full 4×16 register tile per row block — the
+///   vector tile kernel carries the inner loop.
+/// * `n == 1`: the matvec path reduces each row with the lane dot
+///   kernel; worthwhile once the reduction is at least two 8-lane
+///   chunks.
+/// * Everything else (`1 < n < NR`) runs entirely in the scalar edge
+///   branch — keep the scalar micro-kernel.
+pub fn prefer_gemm(m: usize, k: usize, n: usize) -> TilePref {
+    let _ = m; // blocking is over n/k; m only changes how often tiles run
+    if n == 1 {
+        if k >= 16 {
+            TilePref::Simd
+        } else {
+            TilePref::Scalar
+        }
+    } else if n >= NR {
+        TilePref::Simd
+    } else {
+        TilePref::Scalar
+    }
+}
+
+/// Preference for a length-`kd` zero-pointed dot reduction (A·Bᵀ weight
+/// gradients, depthwise dW): two 8-lane chunks or one full SSE/NEON
+/// stripe plus tail.
+pub fn prefer_dot(kd: usize) -> TilePref {
+    if kd >= 16 {
+        TilePref::Simd
+    } else {
+        TilePref::Scalar
+    }
+}
+
+/// Preference for stride-1 AXPY spans of width `span` (the depthwise
+/// engine's inner loop): one full 8-lane chunk.
+pub fn prefer_axpy(span: usize) -> TilePref {
+    if span >= 8 {
+        TilePref::Simd
+    } else {
+        TilePref::Scalar
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_table_matches_tile_geometry() {
+        // MCUNet-style hot shapes all take the vector path…
+        assert_eq!(prefer_gemm(16, 27, 1024), TilePref::Simd);
+        assert_eq!(prefer_gemm(32, 144, 256), TilePref::Simd);
+        assert_eq!(prefer_gemm(128, 64, 64), TilePref::Simd);
+        // …the classifier matvec uses the dot kernel…
+        assert_eq!(prefer_gemm(256, 512, 1), TilePref::Simd);
+        assert_eq!(prefer_gemm(10, 8, 1), TilePref::Scalar);
+        // …and edge-dominated shapes stay scalar.
+        assert_eq!(prefer_gemm(64, 64, NR - 1), TilePref::Scalar);
+        assert_eq!(prefer_gemm(64, 64, NR), TilePref::Simd);
+    }
+
+    #[test]
+    fn dot_and_axpy_thresholds() {
+        assert_eq!(prefer_dot(15), TilePref::Scalar);
+        assert_eq!(prefer_dot(16), TilePref::Simd);
+        assert_eq!(prefer_axpy(7), TilePref::Scalar);
+        assert_eq!(prefer_axpy(8), TilePref::Simd);
+    }
+}

@@ -1,0 +1,322 @@
+//! AVX2 and SSE4.1 lane kernels (x86_64 only). Safety contract for every
+//! function here: the caller (the dispatch wrappers in `simd::mod`) has
+//! verified the host supports the ISA and that all offsets stay in
+//! bounds; the `debug_assert!`s there are the single source of truth.
+//!
+//! Numerics: u8/i32 kernels are exact (i32 lane arithmetic wraps exactly
+//! like the scalar loop's two's-complement sums). f32 kernels use one
+//! separate multiply and one separate add per `k` step — never an FMA —
+//! so every output lane reproduces the scalar reduction bit-for-bit.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+use crate::kernels::gemm::{MR, NR};
+
+// -------------------------------- AVX2 ------------------------------------
+
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn tile_u8_avx2(
+    acc: &mut [[i32; NR]; MR],
+    mrr: usize,
+    a: &[u8],
+    arow0: usize,
+    astride: usize,
+    za: i32,
+    b: &[u8],
+    bcol0: usize,
+    bstride: usize,
+    zb: i32,
+    k: usize,
+) {
+    let zbv = _mm256_set1_epi32(zb);
+    let mut accv = [[_mm256_setzero_si256(); 2]; MR];
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter_mut().enumerate() {
+            *lane = _mm256_loadu_si256(acc[ii].as_ptr().add(h * 8) as *const __m256i);
+        }
+    }
+    for kk in 0..k {
+        let bp = b.as_ptr().add(bcol0 + kk * bstride);
+        let b0 = _mm256_sub_epi32(
+            _mm256_cvtepu8_epi32(_mm_loadl_epi64(bp as *const __m128i)),
+            zbv,
+        );
+        let b1 = _mm256_sub_epi32(
+            _mm256_cvtepu8_epi32(_mm_loadl_epi64(bp.add(8) as *const __m128i)),
+            zbv,
+        );
+        for (ii, lanes) in accv[..mrr].iter_mut().enumerate() {
+            let av = _mm256_set1_epi32(*a.get_unchecked(arow0 + ii * astride + kk) as i32 - za);
+            lanes[0] = _mm256_add_epi32(lanes[0], _mm256_mullo_epi32(av, b0));
+            lanes[1] = _mm256_add_epi32(lanes[1], _mm256_mullo_epi32(av, b1));
+        }
+    }
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter().enumerate() {
+            _mm256_storeu_si256(acc[ii].as_mut_ptr().add(h * 8) as *mut __m256i, *lane);
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn tile_f32_avx2(
+    acc: &mut [[f32; NR]; MR],
+    mrr: usize,
+    a: &[f32],
+    arow0: usize,
+    astride: usize,
+    b: &[f32],
+    bcol0: usize,
+    bstride: usize,
+    k: usize,
+) {
+    let mut accv = [[_mm256_setzero_ps(); 2]; MR];
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter_mut().enumerate() {
+            *lane = _mm256_loadu_ps(acc[ii].as_ptr().add(h * 8));
+        }
+    }
+    for kk in 0..k {
+        let bp = b.as_ptr().add(bcol0 + kk * bstride);
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        for (ii, lanes) in accv[..mrr].iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*a.get_unchecked(arow0 + ii * astride + kk));
+            // separate mul + add: keeps the scalar rounding (no FMA)
+            lanes[0] = _mm256_add_ps(lanes[0], _mm256_mul_ps(av, b0));
+            lanes[1] = _mm256_add_ps(lanes[1], _mm256_mul_ps(av, b1));
+        }
+    }
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter().enumerate() {
+            _mm256_storeu_ps(acc[ii].as_mut_ptr().add(h * 8), *lane);
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_u8_avx2(a: &[u8], za: i32, b: &[u8], zb: i32) -> i32 {
+    let k = a.len();
+    let zav = _mm256_set1_epi32(za);
+    let zbv = _mm256_set1_epi32(zb);
+    let mut accv = _mm256_setzero_si256();
+    let mut kk = 0;
+    while kk + 8 <= k {
+        let av = _mm256_sub_epi32(
+            _mm256_cvtepu8_epi32(_mm_loadl_epi64(a.as_ptr().add(kk) as *const __m128i)),
+            zav,
+        );
+        let bv = _mm256_sub_epi32(
+            _mm256_cvtepu8_epi32(_mm_loadl_epi64(b.as_ptr().add(kk) as *const __m128i)),
+            zbv,
+        );
+        accv = _mm256_add_epi32(accv, _mm256_mullo_epi32(av, bv));
+        kk += 8;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accv);
+    let mut sum = lanes.iter().fold(0i32, |s, &v| s.wrapping_add(v));
+    while kk < k {
+        sum = sum
+            .wrapping_add((*a.get_unchecked(kk) as i32 - za) * (*b.get_unchecked(kk) as i32 - zb));
+        kk += 1;
+    }
+    sum
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy_u8_i32_avx2(acc: &mut [i32], xs: &[u8], zx: i32, wv: i32) {
+    let n = acc.len();
+    let wvv = _mm256_set1_epi32(wv);
+    let zxv = _mm256_set1_epi32(zx);
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = _mm256_sub_epi32(
+            _mm256_cvtepu8_epi32(_mm_loadl_epi64(xs.as_ptr().add(i) as *const __m128i)),
+            zxv,
+        );
+        let av = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_add_epi32(av, _mm256_mullo_epi32(wvv, xv)),
+        );
+        i += 8;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += wv * (*xs.get_unchecked(i) as i32 - zx);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy_f32_avx2(acc: &mut [f32], xs: &[f32], wv: f32) {
+    let n = acc.len();
+    let wvv = _mm256_set1_ps(wv);
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(xs.as_ptr().add(i));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(wvv, xv)));
+        i += 8;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += wv * *xs.get_unchecked(i);
+        i += 1;
+    }
+}
+
+// ------------------------------- SSE4.1 ------------------------------------
+
+/// Widen 4 bytes at `p` to 4×i32 lanes (SSE4.1 `pmovzxbd`).
+#[inline]
+#[target_feature(enable = "sse4.1")]
+unsafe fn load4_u8_epi32(p: *const u8) -> __m128i {
+    _mm_cvtepu8_epi32(_mm_cvtsi32_si128(core::ptr::read_unaligned(p as *const i32)))
+}
+
+#[target_feature(enable = "sse4.1")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn tile_u8_sse41(
+    acc: &mut [[i32; NR]; MR],
+    mrr: usize,
+    a: &[u8],
+    arow0: usize,
+    astride: usize,
+    za: i32,
+    b: &[u8],
+    bcol0: usize,
+    bstride: usize,
+    zb: i32,
+    k: usize,
+) {
+    let zbv = _mm_set1_epi32(zb);
+    let mut accv = [[_mm_setzero_si128(); 4]; MR];
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter_mut().enumerate() {
+            *lane = _mm_loadu_si128(acc[ii].as_ptr().add(h * 4) as *const __m128i);
+        }
+    }
+    for kk in 0..k {
+        let bp = b.as_ptr().add(bcol0 + kk * bstride);
+        let mut bv = [_mm_setzero_si128(); 4];
+        for (h, lane) in bv.iter_mut().enumerate() {
+            *lane = _mm_sub_epi32(load4_u8_epi32(bp.add(h * 4)), zbv);
+        }
+        for (ii, lanes) in accv[..mrr].iter_mut().enumerate() {
+            let av = _mm_set1_epi32(*a.get_unchecked(arow0 + ii * astride + kk) as i32 - za);
+            for (lane, bl) in lanes.iter_mut().zip(bv.iter()) {
+                *lane = _mm_add_epi32(*lane, _mm_mullo_epi32(av, *bl));
+            }
+        }
+    }
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter().enumerate() {
+            _mm_storeu_si128(acc[ii].as_mut_ptr().add(h * 4) as *mut __m128i, *lane);
+        }
+    }
+}
+
+#[target_feature(enable = "sse4.1")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn tile_f32_sse41(
+    acc: &mut [[f32; NR]; MR],
+    mrr: usize,
+    a: &[f32],
+    arow0: usize,
+    astride: usize,
+    b: &[f32],
+    bcol0: usize,
+    bstride: usize,
+    k: usize,
+) {
+    let mut accv = [[_mm_setzero_ps(); 4]; MR];
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter_mut().enumerate() {
+            *lane = _mm_loadu_ps(acc[ii].as_ptr().add(h * 4));
+        }
+    }
+    for kk in 0..k {
+        let bp = b.as_ptr().add(bcol0 + kk * bstride);
+        let mut bv = [_mm_setzero_ps(); 4];
+        for (h, lane) in bv.iter_mut().enumerate() {
+            *lane = _mm_loadu_ps(bp.add(h * 4));
+        }
+        for (ii, lanes) in accv[..mrr].iter_mut().enumerate() {
+            let av = _mm_set1_ps(*a.get_unchecked(arow0 + ii * astride + kk));
+            for (lane, bl) in lanes.iter_mut().zip(bv.iter()) {
+                *lane = _mm_add_ps(*lane, _mm_mul_ps(av, *bl));
+            }
+        }
+    }
+    for ii in 0..mrr {
+        for (h, lane) in accv[ii].iter().enumerate() {
+            _mm_storeu_ps(acc[ii].as_mut_ptr().add(h * 4), *lane);
+        }
+    }
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn dot_u8_sse41(a: &[u8], za: i32, b: &[u8], zb: i32) -> i32 {
+    let k = a.len();
+    let zav = _mm_set1_epi32(za);
+    let zbv = _mm_set1_epi32(zb);
+    let mut accv = _mm_setzero_si128();
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let av = _mm_sub_epi32(load4_u8_epi32(a.as_ptr().add(kk)), zav);
+        let bv = _mm_sub_epi32(load4_u8_epi32(b.as_ptr().add(kk)), zbv);
+        accv = _mm_add_epi32(accv, _mm_mullo_epi32(av, bv));
+        kk += 4;
+    }
+    let mut lanes = [0i32; 4];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, accv);
+    let mut sum = lanes.iter().fold(0i32, |s, &v| s.wrapping_add(v));
+    while kk < k {
+        sum = sum
+            .wrapping_add((*a.get_unchecked(kk) as i32 - za) * (*b.get_unchecked(kk) as i32 - zb));
+        kk += 1;
+    }
+    sum
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn axpy_u8_i32_sse41(acc: &mut [i32], xs: &[u8], zx: i32, wv: i32) {
+    let n = acc.len();
+    let wvv = _mm_set1_epi32(wv);
+    let zxv = _mm_set1_epi32(zx);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm_sub_epi32(load4_u8_epi32(xs.as_ptr().add(i)), zxv);
+        let av = _mm_loadu_si128(acc.as_ptr().add(i) as *const __m128i);
+        _mm_storeu_si128(
+            acc.as_mut_ptr().add(i) as *mut __m128i,
+            _mm_add_epi32(av, _mm_mullo_epi32(wvv, xv)),
+        );
+        i += 4;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += wv * (*xs.get_unchecked(i) as i32 - zx);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn axpy_f32_sse41(acc: &mut [f32], xs: &[f32], wv: f32) {
+    let n = acc.len();
+    let wvv = _mm_set1_ps(wv);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm_loadu_ps(xs.as_ptr().add(i));
+        let av = _mm_loadu_ps(acc.as_ptr().add(i));
+        _mm_storeu_ps(acc.as_mut_ptr().add(i), _mm_add_ps(av, _mm_mul_ps(wvv, xv)));
+        i += 4;
+    }
+    while i < n {
+        *acc.get_unchecked_mut(i) += wv * *xs.get_unchecked(i);
+        i += 1;
+    }
+}

@@ -66,6 +66,7 @@ fn cmd_train(args: &Args) -> i32 {
     let seed = args.u64_or("seed", 1);
     let mut knobs = Knobs::from_env();
     knobs.epochs = args.usize_or("epochs", knobs.epochs);
+    tinytrain::kernels::simd::set_mode(knobs.kernel);
 
     if args.get_or("backend", "native") == "xla" {
         // AOT HLO path (mnist-family shapes only — see python/compile).
@@ -132,6 +133,7 @@ fn cmd_transfer(args: &Args) -> i32 {
     let seed = args.u64_or("seed", 1);
     let mut knobs = Knobs::from_env();
     knobs.epochs = args.usize_or("epochs", knobs.epochs);
+    tinytrain::kernels::simd::set_mode(knobs.kernel);
 
     let src = Domain::new(&spec, spec.reduced_shape, seed);
     let def = harness::mbednet_for(&spec, &spec.reduced_shape);

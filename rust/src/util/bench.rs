@@ -100,13 +100,36 @@ impl ResultSink {
     }
 }
 
+/// Speedup of `new` relative to `base` (`base / new`), guarded against
+/// degenerate timings: returns `None` unless both inputs are finite and
+/// strictly positive. A zero or sub-resolution denominator would emit an
+/// infinite (or NaN) ratio that poisons every downstream aggregate, so
+/// benches drop the row instead of writing it.
+pub fn safe_speedup(base: f64, new: f64) -> Option<f64> {
+    (base.is_finite() && new.is_finite() && base > 0.0 && new > 0.0).then(|| base / new)
+}
+
+/// Geometric mean of a set of ratios, guarded the same way as
+/// [`safe_speedup`]: `None` if the slice is empty or any element is
+/// non-finite or ≤ 0 (one bad element would silently drag the whole
+/// aggregate to NaN/0/∞ through the log-sum).
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|x| !x.is_finite() || *x <= 0.0) {
+        return None;
+    }
+    Some((xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp())
+}
+
 /// Schema check for `perf_kernels` JSON rows, shared by the bench itself
 /// (which asserts it before writing `BENCH_kernels.json`) and the CI
 /// perf-regression gate (`bench_gate`, which refuses malformed input):
 /// every row must be an object carrying a non-empty `"kernel"` string and
 /// at least one numeric metric, and every number anywhere in the row must
 /// be finite — a NaN or infinity would silently poison the gate's
-/// baseline comparisons.
+/// baseline comparisons. Two field families get range checks on top:
+/// `*seconds*` must be ≥ 0 and `*speedup*` must be > 0, since a negative
+/// time or non-positive ratio can only come from a broken measurement and
+/// would invert the gate's regression comparisons.
 pub fn check_perf_rows(rows: &[Json]) -> Result<(), String> {
     fn all_finite(v: &Json, path: &str) -> Result<(), String> {
         match v {
@@ -136,6 +159,15 @@ pub fn check_perf_rows(rows: &[Json]) -> Result<(), String> {
             return Err(format!("row {i} carries no numeric metric"));
         }
         all_finite(row, &format!("row {i}"))?;
+        for (name, v) in obj {
+            let Some(n) = v.as_f64() else { continue };
+            if name.contains("seconds") && n < 0.0 {
+                return Err(format!("row {i}: negative duration {name} = {n}"));
+            }
+            if name.contains("speedup") && n <= 0.0 {
+                return Err(format!("row {i}: non-positive ratio {name} = {n}"));
+            }
+        }
     }
     Ok(())
 }
@@ -227,6 +259,42 @@ mod tests {
         assert!(check_perf_rows(&nometric).unwrap_err().contains("numeric"));
         // not an object
         assert!(check_perf_rows(&[Json::Num(3.0)]).unwrap_err().contains("object"));
+        // negative duration
+        let negsec = vec![Json::obj(vec![
+            ("kernel", Json::str("x")),
+            ("fwd_seconds", Json::Num(-1.0e-3)),
+        ])];
+        assert!(check_perf_rows(&negsec).unwrap_err().contains("negative duration"));
+        // zero speedup (a degenerate timing slipped through a ratio)
+        let zspeed = vec![Json::obj(vec![
+            ("kernel", Json::str("x")),
+            ("simd_speedup_vs_scalar", Json::Num(0.0)),
+        ])];
+        assert!(check_perf_rows(&zspeed).unwrap_err().contains("non-positive ratio"));
+    }
+
+    #[test]
+    fn safe_speedup_guards_degenerate_timings() {
+        assert_eq!(safe_speedup(2.0, 1.0), Some(2.0));
+        assert_eq!(safe_speedup(1.0, 4.0), Some(0.25));
+        // a sub-resolution timer reading must not become an infinite ratio
+        assert_eq!(safe_speedup(1.0, 0.0), None);
+        assert_eq!(safe_speedup(0.0, 1.0), None);
+        assert_eq!(safe_speedup(-1.0, 1.0), None);
+        assert_eq!(safe_speedup(f64::NAN, 1.0), None);
+        assert_eq!(safe_speedup(1.0, f64::INFINITY), None);
+    }
+
+    #[test]
+    fn geomean_guards_degenerate_elements() {
+        let g = geomean(&[2.0, 8.0]).unwrap();
+        assert!((g - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[1.5]), Some(1.5));
+        assert_eq!(geomean(&[]), None);
+        assert_eq!(geomean(&[1.0, 0.0]), None);
+        assert_eq!(geomean(&[1.0, -2.0]), None);
+        assert_eq!(geomean(&[1.0, f64::NAN]), None);
+        assert_eq!(geomean(&[1.0, f64::INFINITY]), None);
     }
 
     #[test]

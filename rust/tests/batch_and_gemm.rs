@@ -163,7 +163,7 @@ fn batched_run_fingerprint(
 ) -> (Vec<u32>, (Vec<u8>, Vec<u32>)) {
     let mut spec = tinytrain::data::spec_by_name("kmnist").unwrap();
     spec.reduced_shape = [1, 12, 12];
-    let knobs = Knobs { epochs, runs: 1, train_pc: 2, test_pc: 1, workers };
+    let knobs = Knobs { epochs, runs: 1, train_pc: 2, test_pc: 1, workers, ..Knobs::default() };
     let (rep, m) = run_full_training_batched(&spec, DnnConfig::Uint8, &knobs, seed);
     let losses: Vec<u32> = rep.epochs.iter().map(|e| e.train_loss.to_bits()).collect();
     (losses, quantized_weight_snapshot(&m))
@@ -243,7 +243,8 @@ fn batched_training_matches_tt_workers_depthwise() {
 fn sequential_and_batched_paths_coexist() {
     let mut spec = tinytrain::data::spec_by_name("kmnist").unwrap();
     spec.reduced_shape = [1, 12, 12];
-    let knobs = Knobs { epochs: 1, runs: 1, train_pc: 2, test_pc: 1, workers: 2 };
+    let knobs =
+        Knobs { epochs: 1, runs: 1, train_pc: 2, test_pc: 1, workers: 2, ..Knobs::default() };
     let (rep_seq, _) = run_full_training(&spec, DnnConfig::Uint8, &knobs, 11);
     let (rep_bat, _) = run_full_training_batched(&spec, DnnConfig::Uint8, &knobs, 11);
     assert_eq!(rep_seq.samples_seen, rep_bat.samples_seen);

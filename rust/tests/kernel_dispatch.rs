@@ -1,0 +1,357 @@
+//! Forced-dispatch parity: `TT_KERNEL=scalar` and `TT_KERNEL=simd` must
+//! be bit-identical end to end — the SIMD micro-kernels exist purely as a
+//! host-side accelerator over the MCU-faithful scalar oracle, never as an
+//! approximation of it.
+//!
+//!  * the whole-model matrix (every model × every DNN configuration,
+//!    forward with range adaptation, dense and §III-B sparse backward)
+//!    runs once per forced mode and compares logits, activations,
+//!    saturation counts, gradients, adapted quantization parameters and
+//!    error-observer ranges bit for bit;
+//!  * kernel-level property tests sweep the GEMM tile edges (`MR`/`NR`
+//!    ± 1, ragged K) and the depthwise row widths around the vector lane
+//!    counts, comparing the explicit `KernelSel::Scalar` and
+//!    `KernelSel::Simd` twins directly — no global state involved.
+//!
+//! On a host without a vector ISA the SIMD arms skip cleanly (the scalar
+//! oracle is the only path, so there is nothing to compare).
+
+use tinytrain::graph::exec::{calibrate, Act, DenseUpdates, FloatParams, NativeModel};
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::kernels::simd::{self, KernelMode, KernelSel};
+use tinytrain::kernels::{dwconv, gemm, softmax, ConvGeom, OpCounter};
+use tinytrain::quant::{QParams, QTensor};
+use tinytrain::tensor::TensorF32;
+use tinytrain::train::sparse::DynamicSparse;
+use tinytrain::util::prng::Pcg32;
+
+const CASES: [(&str, [usize; 3], usize); 3] =
+    [("mnist_cnn", [1, 12, 12], 4), ("mbednet", [3, 16, 16], 5), ("mcunet5fps", [3, 32, 32], 4)];
+
+fn build(
+    name: &str,
+    shape: &[usize; 3],
+    classes: usize,
+    cfg: DnnConfig,
+    seed: u64,
+) -> (NativeModel, Vec<TensorF32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let def = models::by_name(name, shape, classes).expect("known model");
+    let fp = FloatParams::init(&def, &mut rng);
+    let xs: Vec<TensorF32> = (0..3)
+        .map(|_| {
+            let mut x = TensorF32::zeros(shape);
+            rng.fill_normal(x.data_mut(), 1.0);
+            x
+        })
+        .collect();
+    let calib = calibrate(&def, &fp, &xs[..2]);
+    (NativeModel::build(def, cfg, &fp, &calib), xs)
+}
+
+fn act_bits(a: &Act) -> (Vec<u8>, Vec<u32>) {
+    match a {
+        Act::Q(t) => {
+            (t.values.data().to_vec(), vec![t.qp.scale.to_bits(), t.qp.zero_point as u32])
+        }
+        Act::F(t) => (Vec::new(), t.data().iter().map(|v| v.to_bits()).collect()),
+    }
+}
+
+/// Everything one forced-mode run produces, reduced to exact bits.
+#[derive(PartialEq, Debug, Default)]
+struct Fingerprint {
+    logits: Vec<Vec<u32>>,
+    acts: Vec<Vec<(Vec<u8>, Vec<u32>)>>,
+    sat: Vec<Vec<Option<(usize, usize)>>>,
+    grads: Vec<Vec<Option<(Vec<u32>, Vec<u32>, (usize, usize))>>>,
+    sparse_kept: (u64, u64),
+    act_qp: Vec<(u32, i32)>,
+    obs_ranges: Vec<Option<(u32, u32)>>,
+}
+
+/// Run a fresh deployment of the same float masters under one forced
+/// dispatch mode: adaptive forwards and dense backwards over every
+/// sample, then one sparse-masked backward. A fresh model per mode is
+/// essential — range adaptation mutates the session, so sharing one
+/// model across modes would compare different observer states, not
+/// different kernels.
+fn fingerprint(
+    mode: KernelMode,
+    name: &str,
+    shape: &[usize; 3],
+    classes: usize,
+    cfg: DnnConfig,
+) -> Fingerprint {
+    simd::set_mode(mode);
+    let (mut m, xs) = build(name, shape, classes, cfg, 0x51D);
+    let mut fp = Fingerprint::default();
+    let mut scratch = m.make_scratch();
+    let mut ops = OpCounter::new();
+    for (k, x) in xs.iter().enumerate() {
+        let trace = m.forward_adapt_in(x, &mut scratch, &mut ops);
+        fp.logits.push(trace.logits.iter().map(|v| v.to_bits()).collect());
+        fp.acts.push(trace.acts.iter().map(act_bits).collect());
+        fp.sat.push(trace.sat.clone());
+        let (_, _, err) = softmax::softmax_ce(&trace.logits, k % classes, &mut ops);
+        let bwd = m.backward_in(&trace, err, &mut DenseUpdates, &mut scratch, &mut ops);
+        fp.grads.push(
+            bwd.grads
+                .iter()
+                .map(|g| {
+                    g.as_ref().map(|g| {
+                        (
+                            g.gw.data().iter().map(|v| v.to_bits()).collect(),
+                            g.gb.data().iter().map(|v| v.to_bits()).collect(),
+                            g.kept,
+                        )
+                    })
+                })
+                .collect(),
+        );
+    }
+    // one §III-B sparse-masked backward (the depthwise whole-channel
+    // skip and the masked GEMMs under the same contract)
+    let trace = m.forward_in(&xs[0], &mut scratch, &mut ops);
+    let (loss, _, err) = softmax::softmax_ce(&trace.logits, 0, &mut ops);
+    let mut ctl = DynamicSparse::new(0.4, 1.0);
+    ctl.seed_max_loss(loss * 4.0 + 1.0);
+    ctl.begin_sample(loss);
+    let mut obs = m.state.err_obs.clone();
+    let bwd = m.backward_with(&trace, err, &mut ctl, &mut obs, &mut scratch, &mut ops);
+    fp.sparse_kept = (ctl.kept, ctl.total);
+    fp.grads.push(
+        bwd.grads
+            .iter()
+            .map(|g| {
+                g.as_ref().map(|g| {
+                    (
+                        g.gw.data().iter().map(|v| v.to_bits()).collect(),
+                        g.gb.data().iter().map(|v| v.to_bits()).collect(),
+                        g.kept,
+                    )
+                })
+            })
+            .collect(),
+    );
+    fp.act_qp = m.state.act_qp.iter().map(|qp| (qp.scale.to_bits(), qp.zero_point)).collect();
+    fp.obs_ranges = m
+        .state
+        .err_obs
+        .iter()
+        .map(|o| o.range().map(|(lo, hi)| (lo.to_bits(), hi.to_bits())))
+        .collect();
+    fp
+}
+
+/// The whole-model dispatch matrix. One test function on purpose: the
+/// forced mode is process-wide (`simd::set_mode`), so splitting the
+/// matrix across `#[test]`s would race the modes across the test
+/// harness's worker threads. The kernel-level tests below use explicit
+/// `KernelSel` arguments and never read the global mode.
+#[test]
+fn forced_scalar_and_simd_runs_are_bit_identical() {
+    let prev = simd::mode();
+    if simd::isa().is_none() {
+        eprintln!("kernel_dispatch: no vector ISA on this host, parity trivially holds; skipped");
+        return;
+    }
+    for (name, shape, classes) in CASES {
+        for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+            let fs = fingerprint(KernelMode::Scalar, name, &shape, classes, cfg);
+            let fv = fingerprint(KernelMode::Simd, name, &shape, classes, cfg);
+            assert_eq!(fs, fv, "{name}/{cfg:?}: forced scalar vs forced simd diverged");
+        }
+    }
+    simd::set_mode(prev);
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-level tile-edge property tests (explicit KernelSel, no globals)
+// ---------------------------------------------------------------------------
+
+fn fill_u8(rng: &mut Pcg32, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+/// GEMM at the register-tile edges: every (m, n) within ±1 of the MR×NR
+/// tile (plus far-out ragged columns) over ragged K, forced-SIMD output
+/// equal to the scalar oracle bit for bit — including the partial-tile
+/// remainders the vector path must hand back to scalar code.
+#[test]
+fn gemm_u8_simd_matches_scalar_at_tile_edges() {
+    let Some(isa) = simd::isa() else {
+        eprintln!("kernel_dispatch: no vector ISA, gemm edge sweep skipped");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0xED6E);
+    let ms = [gemm::MR - 1, gemm::MR, gemm::MR + 1, 2 * gemm::MR + 1];
+    let ns = [1, gemm::NR - 1, gemm::NR, gemm::NR + 1, 2 * gemm::NR + 1];
+    for &m in &ms {
+        for &n in &ns {
+            for &k in &[1usize, 7, 16, 33] {
+                let a = fill_u8(&mut rng, m * k);
+                let b = fill_u8(&mut rng, k * n);
+                let init: Vec<i32> = (0..m).map(|_| rng.below(1000) as i32 - 500).collect();
+                let mut out_s = vec![0i32; m * n];
+                let mut out_v = vec![0i32; m * n];
+                gemm::gemm_u8_i32_sel(KernelSel::Scalar, &a, 3, &b, 5, &init, m, k, n, &mut out_s);
+                gemm::gemm_u8_i32_sel(
+                    KernelSel::Simd(isa),
+                    &a,
+                    3,
+                    &b,
+                    5,
+                    &init,
+                    m,
+                    k,
+                    n,
+                    &mut out_v,
+                );
+                assert_eq!(out_s, out_v, "gemm m={m} k={k} n={n} ({isa:?})");
+            }
+        }
+    }
+}
+
+/// The fused quantized epilogue under forced SIMD: u8 output bytes AND
+/// the saturation count must match the scalar oracle exactly at the same
+/// tile edges (the epilogue runs inside the register tile, so a lane
+/// ordering bug would show up here first).
+#[test]
+fn gemm_fused_epilogue_simd_matches_scalar_at_tile_edges() {
+    let Some(isa) = simd::isa() else {
+        eprintln!("kernel_dispatch: no vector ISA, fused edge sweep skipped");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0xFED);
+    let epi = gemm::QEpilogue { mult: 0.0134, qp: QParams::from_min_max(0.0, 4.0), relu: true };
+    for &m in &[gemm::MR - 1, gemm::MR, gemm::MR + 1] {
+        for &n in &[gemm::NR - 1, gemm::NR, gemm::NR + 1] {
+            for &k in &[1usize, 9, 27] {
+                let a = fill_u8(&mut rng, m * k);
+                let b = fill_u8(&mut rng, k * n);
+                let init = vec![7i32; m];
+                let mut out_s = vec![0u8; m * n];
+                let mut out_v = vec![0u8; m * n];
+                let mut dq_s = vec![0f32; m * n];
+                let mut dq_v = vec![0f32; m * n];
+                let sat_s = gemm::gemm_u8_i32_fused_sel(
+                    KernelSel::Scalar,
+                    &a,
+                    3,
+                    &b,
+                    5,
+                    &init,
+                    m,
+                    k,
+                    n,
+                    &epi,
+                    &mut out_s,
+                    Some(&mut dq_s),
+                );
+                let sat_v = gemm::gemm_u8_i32_fused_sel(
+                    KernelSel::Simd(isa),
+                    &a,
+                    3,
+                    &b,
+                    5,
+                    &init,
+                    m,
+                    k,
+                    n,
+                    &epi,
+                    &mut out_v,
+                    Some(&mut dq_v),
+                );
+                assert_eq!(out_s, out_v, "fused m={m} k={k} n={n} ({isa:?})");
+                assert_eq!(sat_s, sat_v, "fused sat m={m} k={k} n={n}");
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(bits(&dq_s), bits(&dq_v), "fused dequant m={m} k={k} n={n}");
+            }
+        }
+    }
+}
+
+fn rand_q(rng: &mut Pcg32, shape: &[usize]) -> QTensor {
+    let mut t = TensorF32::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    QTensor::quantize(&t)
+}
+
+/// Depthwise rows around the vector lane widths: forward (plain and
+/// fused) and backward-input at widths straddling the 4/8/16-lane
+/// boundaries must be bit-identical between the forced arms, qparams and
+/// saturation included.
+#[test]
+fn dwconv_simd_matches_scalar_at_lane_edges() {
+    let Some(isa) = simd::isa() else {
+        eprintln!("kernel_dispatch: no vector ISA, dwconv edge sweep skipped");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0xD0);
+    let oqp = QParams::from_min_max(0.0, 4.0);
+    for &w_in in &[3usize, 7, 8, 9, 15, 16, 17, 33] {
+        let geom = ConvGeom {
+            cin: 6,
+            cout: 6,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad_h: 1,
+            pad_w: 1,
+            depthwise: true,
+        };
+        let x = rand_q(&mut rng, &[6, 5, w_in]);
+        let w = rand_q(&mut rng, &[6, 1, 3, 3]);
+        let bias: Vec<i32> = (0..6).map(|_| rng.below(64) as i32 - 32).collect();
+        let fwd = |sel: KernelSel| {
+            let mut ops = OpCounter::new();
+            dwconv::qdwconv2d_fwd_sel(sel, &x, &w, &bias, &geom, oqp, true, &mut ops)
+        };
+        let ys = fwd(KernelSel::Scalar);
+        let yv = fwd(KernelSel::Simd(isa));
+        assert_eq!(ys.values.data(), yv.values.data(), "dw fwd w={w_in} ({isa:?})");
+        assert_eq!(ys.qp.scale.to_bits(), yv.qp.scale.to_bits(), "dw fwd qp w={w_in}");
+
+        let fused = |sel: KernelSel| {
+            let mut ops = OpCounter::new();
+            dwconv::qdwconv2d_fwd_fused_sel(sel, &x, &w, &bias, &geom, oqp, true, &mut ops)
+        };
+        let (fs, sat_s) = fused(KernelSel::Scalar);
+        let (fv, sat_v) = fused(KernelSel::Simd(isa));
+        assert_eq!(fs.values.data(), fv.values.data(), "dw fused fwd w={w_in}");
+        assert_eq!(sat_s, sat_v, "dw fused sat w={w_in}");
+
+        let e = rand_q(&mut rng, &[6, 5, w_in]);
+        let bwd = |sel: KernelSel| {
+            let mut ops = OpCounter::new();
+            let mut scratch = tinytrain::memplan::Scratch::new();
+            dwconv::qdwconv2d_bwd_input_sel(
+                sel,
+                &e,
+                &w,
+                &geom,
+                5,
+                w_in,
+                oqp,
+                None,
+                &mut scratch,
+                &mut ops,
+            )
+        };
+        let gs = bwd(KernelSel::Scalar);
+        let gv = bwd(KernelSel::Simd(isa));
+        assert_eq!(gs.values.data(), gv.values.data(), "dw bwd_input w={w_in} ({isa:?})");
+
+        let bwd_w = |sel: KernelSel| {
+            let mut ops = OpCounter::new();
+            dwconv::qdwconv2d_bwd_weight_sel(sel, &e, &x, &geom, None, &mut ops)
+        };
+        let (gws, gbs) = bwd_w(KernelSel::Scalar);
+        let (gwv, gbv) = bwd_w(KernelSel::Simd(isa));
+        let bits = |t: &TensorF32| t.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&gws), bits(&gwv), "dw bwd_weight w={w_in} ({isa:?})");
+        assert_eq!(bits(&gbs), bits(&gbv), "dw bwd_weight bias w={w_in}");
+    }
+}

@@ -16,7 +16,7 @@ use tinytrain::util::prng::Pcg32;
 use tinytrain::util::proptest::Prop;
 
 fn knobs() -> Knobs {
-    Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1, workers: 1 }
+    Knobs { epochs: 2, runs: 1, train_pc: 2, test_pc: 1, ..Knobs::default() }
 }
 
 /// In-place property: a training step must not change the *inference*
