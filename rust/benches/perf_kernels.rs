@@ -14,11 +14,12 @@ use tinytrain::coordinator::CoordinatorConfig;
 use tinytrain::data::{spec_by_name, Domain};
 use tinytrain::device;
 use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, ModelArtifacts, NativeModel};
-use tinytrain::graph::plan::ExecPlan;
+use tinytrain::graph::plan::{BitSpec, ExecPlan};
 use tinytrain::graph::{models, DnnConfig};
 use tinytrain::kernels::simd::{self, KernelSel};
 use tinytrain::kernels::{dwconv, fconv, gemm, qconv, qlinear, softmax, ConvGeom, OpCounter};
 use tinytrain::memplan::Scratch;
+use tinytrain::quant::subbyte::{pack_lanes, WBits};
 use tinytrain::quant::{requantize, QParams, QTensor};
 use tinytrain::tensor::TensorF32;
 use tinytrain::train::fqt::FqtSgd;
@@ -1045,6 +1046,134 @@ fn main() {
         );
     }
 
+    // §Tentpole (PR 9): sub-byte packed weights. Two measurements:
+    //
+    //  * `subbyte_unpack_overhead` — the packed-A GEMM (`_pa_sel` twin:
+    //    in-kernel unpack into lane scratch, then the identical u8 body)
+    //    against the plain u8 GEMM on pre-unpacked lanes, over the same
+    //    MCUNet-style shapes as the SIMD rows, so the delta is the pure
+    //    per-panel unpack cost. `packed_relative_speed` (u8 time over
+    //    packed time; 1.0 means the unpack is free) feeds the geomean
+    //    floor in `bench_gate` (TT_BENCH_GATE_SUBBYTE_FLOOR); the gate
+    //    self-skips when these rows are absent.
+    //  * `subbyte_model_bytes` — per-model quantized-weight bytes the
+    //    bit-selection pass reports at 8/4/2-bit storage. This is pure
+    //    packing arithmetic (machine-independent), so `bench_gate` pins
+    //    the 4-bit/2-bit ratios near 1/2 and 1/4.
+    let mut subbyte_rows: Vec<Json> = Vec::new();
+    let subbyte_sel = simd::isa().map(KernelSel::Simd).unwrap_or(KernelSel::Scalar);
+    for &(label, mm, kdim, nsp) in &[
+        ("stem3x3 16x27x1024", 16usize, 27usize, 1024usize),
+        ("blk3x3 32x144x256", 32, 144, 256),
+        ("pw 96x16x256", 96, 16, 256),
+        ("pw 24x96x256", 24, 96, 256),
+        ("head1x1 128x64x64", 128, 64, 64),
+    ] {
+        let bm: Vec<u8> = (0..kdim * nsp).map(|_| rng.below(256) as u8).collect();
+        let init = vec![0i32; mm];
+        let mut out = vec![0i32; mm * nsp];
+        let gmacs = (mm * kdim * nsp) as f64;
+        for bits in [WBits::W4, WBits::W2] {
+            // Lanes already live on the narrow grid: both arms multiply
+            // identical values, packed vs pre-unpacked storage.
+            let lanes: Vec<u8> =
+                (0..mm * kdim).map(|_| rng.below(1 << bits.bits()) as u8).collect();
+            let packed = pack_lanes(&lanes, bits);
+            let mut lane_buf = vec![0u8; mm * kdim];
+            let (tu, _) = time_it(2, reps, || {
+                gemm::gemm_u8_i32_sel(
+                    subbyte_sel,
+                    &lanes,
+                    3,
+                    &bm,
+                    5,
+                    &init,
+                    mm,
+                    kdim,
+                    nsp,
+                    &mut out,
+                );
+                std::hint::black_box(&out);
+            });
+            let (tp, _) = time_it(2, reps, || {
+                gemm::gemm_u8_i32_pa_sel(
+                    subbyte_sel,
+                    &packed,
+                    bits,
+                    &mut lane_buf,
+                    3,
+                    &bm,
+                    5,
+                    &init,
+                    mm,
+                    kdim,
+                    nsp,
+                    &mut out,
+                );
+                std::hint::black_box(&out);
+            });
+            let Some(rel) = safe_speedup(tu, tp) else {
+                println!("subbyte gemm {label} w{}: degenerate timing, row dropped", bits.bits());
+                continue;
+            };
+            tab.row(&[
+                format!("gemm packed w{}", bits.bits()),
+                label.into(),
+                fmt_duration(tp),
+                format!("{:.2}", gmacs / tp / 1e9),
+            ]);
+            let row = Json::obj(vec![
+                ("kernel", Json::str("subbyte_unpack_overhead")),
+                ("shape", Json::str(label)),
+                ("bits", Json::Num(bits.bits() as f64)),
+                ("u8_seconds", Json::Num(tu)),
+                ("packed_seconds", Json::Num(tp)),
+                ("packed_relative_speed", Json::Num(rel)),
+            ]);
+            subbyte_rows.push(row.clone());
+            sink.push(row);
+            println!("subbyte gemm {label} w{}: {rel:.2}x relative to u8", bits.bits());
+        }
+    }
+    let mut subbyte_model_rows: Vec<Json> = Vec::new();
+    for (mname, mdef) in [
+        ("mnist_cnn", models::mnist_cnn(&[1, 28, 28], 10)),
+        ("mbednet", models::mbednet(&[3, 32, 32], 10)),
+        ("mcunet5fps", models::mcunet5fps(&[3, 32, 32], 10)),
+    ] {
+        let prec = mdef.precisions(DnnConfig::Uint8);
+        let bytes_at = |spec: &BitSpec| {
+            ExecPlan::compile_with_bits(&mdef, DnnConfig::Uint8, true, spec)
+                .bit_plan()
+                .weight_bytes(&mdef, &prec)
+        };
+        let b8 = bytes_at(&BitSpec::default());
+        let b4 = bytes_at(&BitSpec { force: Some(WBits::W4), budget: None });
+        let b2 = bytes_at(&BitSpec { force: Some(WBits::W2), budget: None });
+        tab.row(&[
+            "subbyte weight bytes".into(),
+            format!("{mname} w8/w4/w2 {b8}/{b4}/{b2}B"),
+            String::new(),
+            String::new(),
+        ]);
+        let row = Json::obj(vec![
+            ("kernel", Json::str("subbyte_model_bytes")),
+            ("model", Json::str(mname)),
+            ("w8_bytes", Json::Num(b8 as f64)),
+            ("w4_bytes", Json::Num(b4 as f64)),
+            ("w2_bytes", Json::Num(b2 as f64)),
+            ("w4_ratio", Json::Num(b4 as f64 / b8 as f64)),
+            ("w2_ratio", Json::Num(b2 as f64 / b8 as f64)),
+        ]);
+        subbyte_model_rows.push(row.clone());
+        sink.push(row);
+        println!(
+            "subbyte bytes {mname}: w8 {b8}B, w4 {b4}B ({:.3}x), w2 {b2}B ({:.3}x)",
+            b4 as f64 / b8 as f64,
+            b2 as f64 / b8 as f64
+        );
+    }
+
     tab.print();
 
     // PJRT artifact step latency, if built with the pjrt feature and the
@@ -1090,6 +1219,8 @@ fn main() {
         ("dwconv_scalar_vs_blocked", Json::Arr(dw_rows)),
         ("simd_vs_scalar", Json::Arr(simd_rows)),
         ("fleet_sessions", Json::Arr(fleet_rows)),
+        ("subbyte_unpack_overhead", Json::Arr(subbyte_rows)),
+        ("subbyte_model_bytes", Json::Arr(subbyte_model_rows)),
         (
             "pack_cache",
             Json::obj(vec![

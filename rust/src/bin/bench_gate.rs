@@ -36,6 +36,15 @@
 //!     oracle, so parity-on-average is the floor. The rows are emitted
 //!     only when the host exposes a vector ISA, so the check self-skips
 //!     elsewhere.
+//!     Likewise **sub-byte floors** — the geometric mean of
+//!     `packed_relative_speed` over the `subbyte_unpack_overhead` rows
+//!     must be ≥ `TT_BENCH_GATE_SUBBYTE_FLOOR` (default 0.5): the
+//!     in-kernel unpack is a per-panel pass over the packed A image, so
+//!     the packed GEMM may trail the u8 kernel, but falling under half
+//!     its speed means the unpack stopped being amortized. And every
+//!     `subbyte_model_bytes` row must report `w4_ratio` ≤ 0.6 and
+//!     `w2_ratio` ≤ 0.35 — pure packing arithmetic, so a drift means the
+//!     byte accounting broke. Both self-skip when the rows are absent.
 //!  4. **baseline diff** — per matching row key, `*seconds*` fields may
 //!     grow at most `tol`× over the baseline and `*speedup*` fields may
 //!     shrink at most `tol`× under it. Rows present on only one side are
@@ -48,7 +57,9 @@
 //! noisy), `TT_BENCH_GATE_FUSED_FLOOR` (default 1.0) for the
 //! fused-epilogue geometric-mean floor, `TT_BENCH_GATE_FLEET_FLOOR`
 //! (default 1.5) for the fleet sharing floor, `TT_BENCH_GATE_SIMD_FLOOR`
-//! (default 1.0) for the SIMD-vs-scalar geometric-mean floor, and
+//! (default 1.0) for the SIMD-vs-scalar geometric-mean floor,
+//! `TT_BENCH_GATE_SUBBYTE_FLOOR` (default 0.5) for the packed-GEMM
+//! relative-speed geometric-mean floor, and
 //! `TT_BENCH_GATE_ABS=0` to skip the absolute `*seconds*` comparisons
 //! when diffing runs from incomparable hardware.
 //!
@@ -109,6 +120,20 @@ fn simd_floor() -> f64 {
         .max(0.0)
 }
 
+/// Floor on the geometric mean of `packed_relative_speed` across the
+/// `subbyte_unpack_overhead` rows (machine-independent: the packed and
+/// plain-u8 GEMM arms ran on the same machine in the same process). The
+/// in-kernel unpack is a per-panel pass over the packed A image ahead of
+/// the identical u8 body, so the packed path may trail plain u8 — but at
+/// less than half speed the unpack stopped being amortized by the GEMM.
+fn subbyte_floor() -> f64 {
+    std::env::var("TT_BENCH_GATE_SUBBYTE_FLOOR")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.5)
+        .max(0.0)
+}
+
 /// Extract the row array from either supported file shape.
 fn rows_of(doc: &Json) -> Option<&[Json]> {
     if let Some(a) = doc.as_arr() {
@@ -126,7 +151,7 @@ fn row_key(row: &Json) -> String {
             key.push_str(&format!(" {field}={s}"));
         }
     }
-    for field in ["kept_fraction", "batch", "workers", "layers"] {
+    for field in ["kept_fraction", "batch", "workers", "layers", "bits"] {
         if let Some(n) = row.get(field).as_f64() {
             key.push_str(&format!(" {field}={n}"));
         }
@@ -237,6 +262,52 @@ fn main() -> ExitCode {
                 "simd-vs-scalar geomean speedup {g:.3} below the {floor} floor \
                  (TT_BENCH_GATE_SIMD_FLOOR)"
             ));
+        }
+    }
+
+    // 3d. sub-byte floors. First the unpack-overhead geomean: the packed
+    // GEMM (in-kernel unpack + identical u8 body) must hold at least the
+    // configured fraction of the plain u8 kernel's speed. Then the model
+    // byte ratios: pure packing arithmetic, so the 4-bit and 2-bit
+    // storage of every model must land near 1/2 and 1/4 of the 8-bit
+    // bytes (slack covers per-tensor ceil rounding). Both self-skip when
+    // a run (or an old baseline) predates the rows.
+    let subbyte_speeds: Vec<f64> = fresh
+        .iter()
+        .filter(|row| row.get("kernel").as_str() == Some("subbyte_unpack_overhead"))
+        .filter_map(|row| row.get("packed_relative_speed").as_f64())
+        .collect();
+    if let Some(g) = geomean(&subbyte_speeds) {
+        let floor = subbyte_floor();
+        println!(
+            "bench_gate: sub-byte packed-gemm geomean relative speed {g:.3} over {} rows \
+             (floor {floor})",
+            subbyte_speeds.len()
+        );
+        if g < floor {
+            failures.push(format!(
+                "sub-byte packed-gemm geomean relative speed {g:.3} below the {floor} floor \
+                 (TT_BENCH_GATE_SUBBYTE_FLOOR)"
+            ));
+        }
+    }
+    for row in fresh
+        .iter()
+        .filter(|row| row.get("kernel").as_str() == Some("subbyte_model_bytes"))
+    {
+        let model = row.get("model").as_str().unwrap_or("?");
+        for (field, ceiling) in [("w4_ratio", 0.6), ("w2_ratio", 0.35)] {
+            if let Some(ratio) = row.get(field).as_f64() {
+                println!(
+                    "bench_gate: sub-byte bytes {model}: {field} {ratio:.3} (ceiling {ceiling})"
+                );
+                if ratio > ceiling {
+                    failures.push(format!(
+                        "subbyte_model_bytes model={model}: {field} {ratio:.3} above the \
+                         {ceiling} packing ceiling"
+                    ));
+                }
+            }
         }
     }
 

@@ -9,6 +9,7 @@
 //! this type, so existing call sites keep compiling unchanged.
 
 use crate::kernels::simd::KernelMode;
+use crate::quant::subbyte::WBits;
 use crate::util::bench::env_usize;
 
 /// Scaling knobs for a training run (the harness) or a fleet run (the
@@ -38,6 +39,18 @@ pub struct RunConfig {
     /// CLI installs this into the process-wide mode at startup
     /// (`kernels::simd::set_mode`).
     pub kernel: KernelMode,
+    /// Uniform weight storage width (`TT_WBITS=8|4|2`, default unset):
+    /// forces every quantized weighted layer to the packed sub-byte
+    /// representation at this width. Unset leaves the plan compiler's
+    /// memory-budget pass (or the plain u8 default) in charge. `8` still
+    /// selects the *packed* code path — useful as a bit-exactness oracle,
+    /// since a packed-8 deployment must match the u8 path exactly.
+    pub wbits: Option<WBits>,
+    /// Weight-memory byte budget (`TT_WEIGHT_BUDGET`, default unset): the
+    /// plan compiler demotes the largest quantized weight tensors to 4-
+    /// then 2-bit storage until total weight bytes fit. Ignored when
+    /// `wbits` forces a uniform width.
+    pub weight_budget: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -49,6 +62,8 @@ impl Default for RunConfig {
             test_pc: 2,
             workers: 1,
             kernel: KernelMode::Auto,
+            wbits: None,
+            weight_budget: None,
         }
     }
 }
@@ -72,6 +87,10 @@ impl RunConfig {
                     .ok()
                     .and_then(|v| KernelMode::parse(&v))
                     .unwrap_or_default(),
+            )
+            .wbits(std::env::var("TT_WBITS").ok().and_then(|v| WBits::parse(&v)))
+            .weight_budget(
+                std::env::var("TT_WEIGHT_BUDGET").ok().and_then(|v| v.trim().parse().ok()),
             )
             .build()
     }
@@ -118,6 +137,16 @@ impl RunConfigBuilder {
         self
     }
 
+    pub fn wbits(mut self, v: Option<WBits>) -> Self {
+        self.cfg.wbits = v;
+        self
+    }
+
+    pub fn weight_budget(mut self, v: Option<usize>) -> Self {
+        self.cfg.weight_budget = v;
+        self
+    }
+
     pub fn build(self) -> RunConfig {
         let mut cfg = self.cfg;
         cfg.workers = cfg.workers.max(1);
@@ -140,7 +169,9 @@ mod tests {
                 train_pc: 3,
                 test_pc: 2,
                 workers: 1,
-                kernel: KernelMode::Auto
+                kernel: KernelMode::Auto,
+                wbits: None,
+                weight_budget: None
             }
         );
         let c = RunConfig::builder().epochs(9).workers(4).build();
@@ -153,5 +184,20 @@ mod tests {
     fn build_clamps_workers_to_at_least_one() {
         let c = RunConfig::builder().workers(0).build();
         assert_eq!(c.workers, 1);
+    }
+
+    #[test]
+    fn builder_carries_subbyte_knobs() {
+        let d = RunConfig::default();
+        assert_eq!(d.wbits, None);
+        assert_eq!(d.weight_budget, None);
+        let c = RunConfig::builder().wbits(Some(WBits::W4)).weight_budget(Some(4096)).build();
+        assert_eq!(c.wbits, Some(WBits::W4));
+        assert_eq!(c.weight_budget, Some(4096));
+        // The env strings accepted by the parse site.
+        assert_eq!(WBits::parse("8"), Some(WBits::W8));
+        assert_eq!(WBits::parse("4"), Some(WBits::W4));
+        assert_eq!(WBits::parse("2"), Some(WBits::W2));
+        assert_eq!(WBits::parse("3"), None);
     }
 }

@@ -5,6 +5,7 @@
 use crate::graph::{LayerDef, LayerKind, ModelDef};
 use crate::kernels::{fconv, flinear, pool, OpCounter};
 use crate::quant::observer::MinMaxObserver;
+use crate::quant::subbyte::PackedQTensor;
 use crate::quant::{QParams, QTensor};
 use crate::tensor::TensorF32;
 use crate::util::prng::Pcg32;
@@ -60,6 +61,11 @@ impl Act {
 #[derive(Clone, Debug)]
 pub enum LayerParams {
     Q { w: QTensor, bias: Vec<f32> },
+    /// Packed sub-byte quantized weights (`quant::subbyte`): the layer the
+    /// compiled plan's `BitPlan` assigned a 4- or 2-bit storage width (or
+    /// forced to packed-8). Kernels unpack the lanes in-panel; the weight
+    /// tensor never exists unpacked at rest.
+    Qp { w: PackedQTensor, bias: Vec<f32> },
     F { w: TensorF32, bias: Vec<f32> },
     None,
 }
@@ -68,6 +74,7 @@ impl LayerParams {
     pub fn byte_size(&self) -> usize {
         match self {
             LayerParams::Q { w, bias } => w.len() + bias.len() * 4,
+            LayerParams::Qp { w, bias } => w.packed_bytes() + bias.len() * 4,
             LayerParams::F { w, bias } => (w.len() + bias.len()) * 4,
             LayerParams::None => 0,
         }
@@ -77,6 +84,7 @@ impl LayerParams {
     pub fn flavor(&self) -> &'static str {
         match self {
             LayerParams::Q { .. } => "quantized (uint8)",
+            LayerParams::Qp { .. } => "quantized (packed sub-byte)",
             LayerParams::F { .. } => "float32",
             LayerParams::None => "none",
         }

@@ -35,11 +35,12 @@ use std::sync::Arc;
 
 use crate::graph::act::init_layer;
 use crate::graph::packs::{PackCache, PackStats};
-use crate::graph::plan::ExecPlan;
+use crate::graph::plan::{BitSpec, ExecPlan};
 use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
 use crate::kernels::{dwconv, gemm, softmax, OpCounter};
 use crate::memplan::Scratch;
 use crate::quant::observer::MinMaxObserver;
+use crate::quant::subbyte::{self, PackedQTensor};
 use crate::quant::{QParams, QTensor};
 use crate::tensor::TensorF32;
 use crate::util::prng::Pcg32;
@@ -128,14 +129,42 @@ impl ModelArtifacts {
         calib: &Calibration,
         fused: bool,
     ) -> Self {
+        Self::deploy_with_bits(def, cfg, fp, calib, fused, &BitSpec::from_env())
+    }
+
+    /// [`ModelArtifacts::deploy_with_fusion`] with an explicit weight
+    /// storage-width request (see [`BitSpec`] /
+    /// [`ExecPlan::compile_with_bits`]); the other constructors follow the
+    /// `TT_WBITS` / `TT_WEIGHT_BUDGET` environment defaults.
+    ///
+    /// The plan is compiled *first*: its bit-selection pass decides which
+    /// layers deploy plain u8 ([`LayerParams::Q`] — the default, and the
+    /// retained bit-exactness oracle) and which deploy packed sub-byte
+    /// ([`LayerParams::Qp`], quantized straight from the float masters at
+    /// the assigned width).
+    pub fn deploy_with_bits(
+        def: ModelDef,
+        cfg: DnnConfig,
+        fp: &FloatParams,
+        calib: &Calibration,
+        fused: bool,
+        bits: &BitSpec,
+    ) -> Self {
         let prec = def.precisions(cfg);
+        let plan = ExecPlan::compile_with_bits(&def, cfg, fused, bits);
         let base_params = def
             .layers
             .iter()
             .enumerate()
             .map(|(i, l)| match (&fp.layers[i], prec[i]) {
                 (Some((w, b)), Precision::Uint8) if l.has_weights() => {
-                    LayerParams::Q { w: QTensor::quantize(w), bias: b.clone() }
+                    match plan.bit_plan().packed(i) {
+                        Some(wb) => LayerParams::Qp {
+                            w: PackedQTensor::quantize_bits(w, wb),
+                            bias: b.clone(),
+                        },
+                        None => LayerParams::Q { w: QTensor::quantize(w), bias: b.clone() },
+                    }
                 }
                 (Some((w, b)), _) if l.has_weights() => {
                     LayerParams::F { w: w.clone(), bias: b.clone() }
@@ -143,7 +172,6 @@ impl ModelArtifacts {
                 _ => LayerParams::None,
             })
             .collect();
-        let plan = ExecPlan::compile_with(&def, cfg, fused);
         ModelArtifacts {
             prec,
             input_qp: calib.input_qp,
@@ -265,6 +293,19 @@ impl SessionState {
                             dwconv::pack_dw_flip_u8(w.values.data(), &geom, dst);
                         });
                     }
+                    // Packed layers keep their cache entry packed too:
+                    // unpack the lanes, flip, re-pack. The flipped lane
+                    // *sequence* is what gets packed, so the consumer's
+                    // plain unpack restores the flipped layout directly.
+                    LayerParams::Qp { w, .. } => {
+                        self.packs.put_dw_u8_packed(i, v, w.bits, |dst| {
+                            let mut lanes = vec![0u8; w.len()];
+                            w.unpack_into(&mut lanes);
+                            let mut flip = vec![0u8; geom.cout * geom.kh * geom.kw];
+                            dwconv::pack_dw_flip_u8(&lanes, &geom, &mut flip);
+                            *dst = subbyte::pack_lanes(&flip, w.bits);
+                        });
+                    }
                     LayerParams::F { w, .. } => {
                         self.packs.put_dw_f32(i, v, |dst| {
                             dst.resize(geom.cout * geom.kh * geom.kw, 0.0);
@@ -280,6 +321,15 @@ impl SessionState {
                     self.packs.put_u8(i, v, |dst| {
                         dst.resize(geom.cin * geom.cout * geom.kh * geom.kw, 0);
                         gemm::pack_wt_flip_u8(w.values.data(), &geom, None, dst);
+                    });
+                }
+                LayerParams::Qp { w, .. } => {
+                    self.packs.put_u8_packed(i, v, w.bits, |dst| {
+                        let mut lanes = vec![0u8; w.len()];
+                        w.unpack_into(&mut lanes);
+                        let mut flip = vec![0u8; geom.cin * geom.cout * geom.kh * geom.kw];
+                        gemm::pack_wt_flip_u8(&lanes, &geom, None, &mut flip);
+                        *dst = subbyte::pack_lanes(&flip, w.bits);
                     });
                 }
                 LayerParams::F { w, .. } => {
@@ -305,6 +355,13 @@ impl SessionState {
             bytes += match (mine, base) {
                 (LayerParams::Q { w, bias }, LayerParams::Q { w: bw, .. }) => {
                     let wb = if w.values.shares_data(&bw.values) { 0 } else { w.values.len() };
+                    wb + std::mem::size_of::<QParams>() + bias.len() * 4
+                }
+                // Packed layers diverge at their *packed* byte count — the
+                // whole point of sub-byte storage is that a CoW-diverged
+                // 4-bit layer costs half its u8 twin.
+                (LayerParams::Qp { w, bias }, LayerParams::Qp { w: bw, .. }) => {
+                    let wb = if w.data.shares_data(&bw.data) { 0 } else { w.packed_bytes() };
                     wb + std::mem::size_of::<QParams>() + bias.len() * 4
                 }
                 (LayerParams::F { w, bias }, LayerParams::F { w: bw, .. }) => {
@@ -352,6 +409,24 @@ impl NativeModel {
         fused: bool,
     ) -> Self {
         let shared = Arc::new(ModelArtifacts::deploy_with_fusion(def, cfg, fp, calib, fused));
+        let mut model = Self::from_artifacts(shared);
+        model.warm_packs();
+        model
+    }
+
+    /// [`NativeModel::build_with_fusion`] with an explicit weight
+    /// storage-width request (see [`ModelArtifacts::deploy_with_bits`]).
+    /// The sub-byte parity suite deploys one model per width from the same
+    /// float masters and compares against the u8 oracle.
+    pub fn build_with_bits(
+        def: ModelDef,
+        cfg: DnnConfig,
+        fp: &FloatParams,
+        calib: &Calibration,
+        fused: bool,
+        bits: &BitSpec,
+    ) -> Self {
+        let shared = Arc::new(ModelArtifacts::deploy_with_bits(def, cfg, fp, calib, fused, bits));
         let mut model = Self::from_artifacts(shared);
         model.warm_packs();
         model
@@ -422,7 +497,12 @@ impl NativeModel {
             }
             if let Some((w, b)) = init_layer(&self.shared.def.layers[i], rng) {
                 self.state.params[i] = match self.shared.prec[i] {
-                    Precision::Uint8 => LayerParams::Q { w: QTensor::quantize(&w), bias: b },
+                    Precision::Uint8 => match self.shared.plan().bit_plan().packed(i) {
+                        Some(bits) => {
+                            LayerParams::Qp { w: PackedQTensor::quantize_bits(&w, bits), bias: b }
+                        }
+                        None => LayerParams::Q { w: QTensor::quantize(&w), bias: b },
+                    },
                     Precision::Float32 => LayerParams::F { w, bias: b },
                 };
                 self.touch_layer(i);
@@ -441,6 +521,7 @@ impl NativeModel {
             .map(|p| match p {
                 LayerParams::F { w, bias } => Some((w.clone(), bias.clone())),
                 LayerParams::Q { w, bias } => Some((w.dequantize(), bias.clone())),
+                LayerParams::Qp { w, bias } => Some((w.dequantize(), bias.clone())),
                 LayerParams::None => None,
             })
             .collect();

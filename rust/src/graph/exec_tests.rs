@@ -117,6 +117,10 @@ fn grad_shapes_match_weights() {
                     assert_eq!(g.gw.shape(), w.shape());
                     assert_eq!(g.gb.len(), bias.len());
                 }
+                LayerParams::Qp { w, bias } => {
+                    assert_eq!(g.gw.shape(), w.shape());
+                    assert_eq!(g.gb.len(), bias.len());
+                }
                 LayerParams::F { w, bias } => {
                     assert_eq!(g.gw.shape(), w.shape());
                     assert_eq!(g.gb.len(), bias.len());

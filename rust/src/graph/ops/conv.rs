@@ -51,65 +51,138 @@ impl LayerOp for QConvOp {
                 self.name
             ),
         };
-        let (w, bias) = match &ctx.params[l] {
-            LayerParams::Q { w, bias } => (w, bias),
-            other => panic!(
-                "layer {l} ({}): expected quantized (uint8) conv params, found {}",
-                self.name,
-                other.flavor()
-            ),
-        };
-        let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
         let out_qp = ctx.act_qp[l];
         // Resolve the plan's autotuned preference against the runtime
         // kernel mode and the detected ISA — once per op, not per tile.
         let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.fwd));
-        let y = if self.geom.depthwise {
-            if self.fused {
-                let (y, sat) = dwconv::qdwconv2d_fwd_fused_sel(
-                    sel, xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops,
-                );
-                ctx.sat[l] = Some((sat as usize, y.len().max(1)));
-                y
-            } else {
-                dwconv::qdwconv2d_fwd_sel(sel, xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops)
+        let y = match &ctx.params[l] {
+            LayerParams::Q { w, bias } => {
+                let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                if self.geom.depthwise {
+                    if self.fused {
+                        let (y, sat) = dwconv::qdwconv2d_fwd_fused_sel(
+                            sel, xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops,
+                        );
+                        ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+                        y
+                    } else {
+                        dwconv::qdwconv2d_fwd_sel(
+                            sel, xq, w, &bq, &self.geom, out_qp, self.relu, ctx.ops,
+                        )
+                    }
+                } else if self.fused {
+                    // A folded dequantize boundary is emitted here: the
+                    // epilogue fills the float staging tensor from the
+                    // register tile while requantizing, so the consumer
+                    // finds it pre-staged and the boundary op never runs.
+                    let (oh, ow) = self.geom.out_hw(self.in_h, self.in_w);
+                    let mut deq =
+                        self.fold_dequant.then(|| TensorF32::zeros(&[self.geom.cout, oh, ow]));
+                    let (y, sat) = qconv::qconv2d_fwd_gemm_fused_sel(
+                        sel,
+                        xq,
+                        w,
+                        &bq,
+                        &self.geom,
+                        out_qp,
+                        self.relu,
+                        deq.as_mut().map(|t| t.data_mut()),
+                        ctx.scratch,
+                        ctx.ops,
+                    );
+                    ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+                    if let Some(d) = deq {
+                        ctx.staged = Some(Act::F(d));
+                    }
+                    y
+                } else {
+                    qconv::qconv2d_fwd_gemm_sel(
+                        sel,
+                        xq,
+                        w,
+                        &bq,
+                        &self.geom,
+                        out_qp,
+                        self.relu,
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                }
             }
-        } else if self.fused {
-            // A folded dequantize boundary is emitted here: the epilogue
-            // fills the float staging tensor from the register tile while
-            // requantizing, so the consumer finds it pre-staged and the
-            // boundary op never runs.
-            let (oh, ow) = self.geom.out_hw(self.in_h, self.in_w);
-            let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[self.geom.cout, oh, ow]));
-            let (y, sat) = qconv::qconv2d_fwd_gemm_fused_sel(
-                sel,
-                xq,
-                w,
-                &bq,
-                &self.geom,
-                out_qp,
-                self.relu,
-                deq.as_mut().map(|t| t.data_mut()),
-                ctx.scratch,
-                ctx.ops,
-            );
-            ctx.sat[l] = Some((sat as usize, y.len().max(1)));
-            if let Some(d) = deq {
-                ctx.staged = Some(Act::F(d));
+            // Packed sub-byte weights: the same engine routing through the
+            // `_pa` twins, which unpack the weight lanes into scratch
+            // before the tile loop (bit-exact with the u8 path at every
+            // width — see `tests/plan_parity.rs`).
+            LayerParams::Qp { w, bias } => {
+                let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                if self.geom.depthwise {
+                    if self.fused {
+                        let (y, sat) = dwconv::qdwconv2d_fwd_fused_pa_sel(
+                            sel,
+                            xq,
+                            w,
+                            &bq,
+                            &self.geom,
+                            out_qp,
+                            self.relu,
+                            ctx.scratch,
+                            ctx.ops,
+                        );
+                        ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+                        y
+                    } else {
+                        dwconv::qdwconv2d_fwd_pa_sel(
+                            sel,
+                            xq,
+                            w,
+                            &bq,
+                            &self.geom,
+                            out_qp,
+                            self.relu,
+                            ctx.scratch,
+                            ctx.ops,
+                        )
+                    }
+                } else if self.fused {
+                    let (oh, ow) = self.geom.out_hw(self.in_h, self.in_w);
+                    let mut deq =
+                        self.fold_dequant.then(|| TensorF32::zeros(&[self.geom.cout, oh, ow]));
+                    let (y, sat) = qconv::qconv2d_fwd_gemm_fused_pa_sel(
+                        sel,
+                        xq,
+                        w,
+                        &bq,
+                        &self.geom,
+                        out_qp,
+                        self.relu,
+                        deq.as_mut().map(|t| t.data_mut()),
+                        ctx.scratch,
+                        ctx.ops,
+                    );
+                    ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+                    if let Some(d) = deq {
+                        ctx.staged = Some(Act::F(d));
+                    }
+                    y
+                } else {
+                    qconv::qconv2d_fwd_gemm_pa_sel(
+                        sel,
+                        xq,
+                        w,
+                        &bq,
+                        &self.geom,
+                        out_qp,
+                        self.relu,
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                }
             }
-            y
-        } else {
-            qconv::qconv2d_fwd_gemm_sel(
-                sel,
-                xq,
-                w,
-                &bq,
-                &self.geom,
-                out_qp,
-                self.relu,
-                ctx.scratch,
-                ctx.ops,
-            )
+            other => panic!(
+                "layer {l} ({}): expected quantized conv params, found {}",
+                self.name,
+                other.flavor()
+            ),
         };
         ctx.acts.push(Act::Q(y));
     }
@@ -162,14 +235,6 @@ impl LayerOp for QConvOp {
                 qconv::relu_bwd_mask_q(eq, y, ctx.ops);
             }
         }
-        let (w, _) = match &ctx.params[l] {
-            LayerParams::Q { w, bias } => (w, bias),
-            other => panic!(
-                "layer {l} ({}): backward expected quantized (uint8) conv params, found {}",
-                self.name,
-                other.flavor()
-            ),
-        };
         if trainable {
             let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_weight));
             let (gw, gb) = if self.geom.depthwise {
@@ -198,97 +263,200 @@ impl LayerOp for QConvOp {
             // packing into scratch — bit-identical either way. Depthwise
             // packs are per-channel, so the cached pack also serves masked
             // calls (a mask skips whole planes); only a stale entry takes
-            // the scratch-packing bypass.
-            let cached = if keep.is_none() && !self.geom.depthwise {
-                ctx.packs.wt_u8(l, ctx.param_versions[l])
-            } else {
-                None
-            };
+            // the scratch-packing bypass. Packed sub-byte layers follow the
+            // same routing on the `_pa` twins, with width-tagged cache
+            // slots (`wt_u8_packed` / `dw_u8_packed`).
             let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_input));
-            let next = if self.geom.depthwise {
-                let dw_pack = ctx.packs.dw_u8(l, ctx.param_versions[l]);
-                Act::Q(match dw_pack {
-                    Some(pack) => dwconv::qdwconv2d_bwd_input_packed_sel(
-                        sel,
-                        eq,
-                        w,
-                        pack,
-                        &self.geom,
-                        self.in_h,
-                        self.in_w,
-                        out_qp,
-                        keep.as_deref(),
-                        ctx.ops,
-                    ),
-                    None => dwconv::qdwconv2d_bwd_input_sel(
-                        sel,
-                        eq,
-                        w,
-                        &self.geom,
-                        self.in_h,
-                        self.in_w,
-                        out_qp,
-                        keep.as_deref(),
-                        ctx.scratch,
-                        ctx.ops,
-                    ),
-                })
-            } else if let Some(pack) = cached {
-                Act::Q(if self.fused {
-                    qconv::qconv2d_bwd_input_gemm_packed_fused_sel(
-                        sel,
-                        eq,
-                        w,
-                        pack,
-                        &self.geom,
-                        self.in_h,
-                        self.in_w,
-                        out_qp,
-                        ctx.scratch,
-                        ctx.ops,
-                    )
-                } else {
-                    qconv::qconv2d_bwd_input_gemm_packed_sel(
-                        sel,
-                        eq,
-                        w,
-                        pack,
-                        &self.geom,
-                        self.in_h,
-                        self.in_w,
-                        out_qp,
-                        ctx.scratch,
-                        ctx.ops,
-                    )
-                })
-            } else {
-                Act::Q(if self.fused {
-                    qconv::qconv2d_bwd_input_gemm_fused_sel(
-                        sel,
-                        eq,
-                        w,
-                        &self.geom,
-                        self.in_h,
-                        self.in_w,
-                        out_qp,
-                        keep.as_deref(),
-                        ctx.scratch,
-                        ctx.ops,
-                    )
-                } else {
-                    qconv::qconv2d_bwd_input_gemm_sel(
-                        sel,
-                        eq,
-                        w,
-                        &self.geom,
-                        self.in_h,
-                        self.in_w,
-                        out_qp,
-                        keep.as_deref(),
-                        ctx.scratch,
-                        ctx.ops,
-                    )
-                })
+            let next = match &ctx.params[l] {
+                LayerParams::Q { w, .. } => {
+                    if self.geom.depthwise {
+                        let dw_pack = ctx.packs.dw_u8(l, ctx.param_versions[l]);
+                        Act::Q(match dw_pack {
+                            Some(pack) => dwconv::qdwconv2d_bwd_input_packed_sel(
+                                sel,
+                                eq,
+                                w,
+                                pack,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.ops,
+                            ),
+                            None => dwconv::qdwconv2d_bwd_input_sel(
+                                sel,
+                                eq,
+                                w,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.scratch,
+                                ctx.ops,
+                            ),
+                        })
+                    } else if let Some(pack) = (keep.is_none())
+                        .then(|| ctx.packs.wt_u8(l, ctx.param_versions[l]))
+                        .flatten()
+                    {
+                        Act::Q(if self.fused {
+                            qconv::qconv2d_bwd_input_gemm_packed_fused_sel(
+                                sel,
+                                eq,
+                                w,
+                                pack,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        } else {
+                            qconv::qconv2d_bwd_input_gemm_packed_sel(
+                                sel,
+                                eq,
+                                w,
+                                pack,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        })
+                    } else {
+                        Act::Q(if self.fused {
+                            qconv::qconv2d_bwd_input_gemm_fused_sel(
+                                sel,
+                                eq,
+                                w,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        } else {
+                            qconv::qconv2d_bwd_input_gemm_sel(
+                                sel,
+                                eq,
+                                w,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        })
+                    }
+                }
+                LayerParams::Qp { w, .. } => {
+                    if self.geom.depthwise {
+                        let dw_pack = ctx.packs.dw_u8_packed(l, ctx.param_versions[l]);
+                        Act::Q(match dw_pack {
+                            Some((pack, bits)) => dwconv::qdwconv2d_bwd_input_packed_pa_sel(
+                                sel,
+                                eq,
+                                w,
+                                pack,
+                                bits,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.scratch,
+                                ctx.ops,
+                            ),
+                            None => dwconv::qdwconv2d_bwd_input_pa_sel(
+                                sel,
+                                eq,
+                                w,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.scratch,
+                                ctx.ops,
+                            ),
+                        })
+                    } else if let Some((pack, bits)) = (keep.is_none())
+                        .then(|| ctx.packs.wt_u8_packed(l, ctx.param_versions[l]))
+                        .flatten()
+                    {
+                        Act::Q(if self.fused {
+                            qconv::qconv2d_bwd_input_gemm_packed_fused_pa_sel(
+                                sel,
+                                eq,
+                                w,
+                                pack,
+                                bits,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        } else {
+                            qconv::qconv2d_bwd_input_gemm_packed_pa_sel(
+                                sel,
+                                eq,
+                                w,
+                                pack,
+                                bits,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        })
+                    } else {
+                        Act::Q(if self.fused {
+                            qconv::qconv2d_bwd_input_gemm_fused_pa_sel(
+                                sel,
+                                eq,
+                                w,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        } else {
+                            qconv::qconv2d_bwd_input_gemm_pa_sel(
+                                sel,
+                                eq,
+                                w,
+                                &self.geom,
+                                self.in_h,
+                                self.in_w,
+                                out_qp,
+                                keep.as_deref(),
+                                ctx.scratch,
+                                ctx.ops,
+                            )
+                        })
+                    }
+                }
+                other => panic!(
+                    "layer {l} ({}): backward expected quantized conv params, found {}",
+                    self.name,
+                    other.flavor()
+                ),
             };
             observe_saturation(&mut obs[l - 1], &next);
             ctx.err = Some(next);

@@ -50,38 +50,76 @@ impl LayerOp for QLinearOp {
                 self.name
             ),
         };
-        let (w, bias) = match &ctx.params[l] {
-            LayerParams::Q { w, bias } => (w, bias),
+        let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.fwd));
+        let y = match &ctx.params[l] {
+            LayerParams::Q { w, bias } => {
+                let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                if self.fused {
+                    // A folded dequantize boundary is emitted here, straight
+                    // from the register tile (see QConvOp::forward).
+                    let n_out = w.shape()[0];
+                    let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[n_out]));
+                    let (y, sat) = qlinear::qlinear_fwd_fused_sel(
+                        sel,
+                        xq,
+                        w,
+                        &bq,
+                        ctx.act_qp[l],
+                        self.relu,
+                        deq.as_mut().map(|t| t.data_mut()),
+                        ctx.ops,
+                    );
+                    ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+                    if let Some(d) = deq {
+                        ctx.staged = Some(Act::F(d));
+                    }
+                    y
+                } else {
+                    qlinear::qlinear_fwd_sel(sel, xq, w, &bq, ctx.act_qp[l], self.relu, ctx.ops)
+                }
+            }
+            // Packed sub-byte weights: the `_pa` twins unpack the weight
+            // lanes into scratch ahead of the matvec (bit-exact with the
+            // u8 path at every width).
+            LayerParams::Qp { w, bias } => {
+                let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
+                if self.fused {
+                    let n_out = w.shape()[0];
+                    let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[n_out]));
+                    let (y, sat) = qlinear::qlinear_fwd_fused_pa_sel(
+                        sel,
+                        xq,
+                        w,
+                        &bq,
+                        ctx.act_qp[l],
+                        self.relu,
+                        deq.as_mut().map(|t| t.data_mut()),
+                        ctx.scratch,
+                        ctx.ops,
+                    );
+                    ctx.sat[l] = Some((sat as usize, y.len().max(1)));
+                    if let Some(d) = deq {
+                        ctx.staged = Some(Act::F(d));
+                    }
+                    y
+                } else {
+                    qlinear::qlinear_fwd_pa_sel(
+                        sel,
+                        xq,
+                        w,
+                        &bq,
+                        ctx.act_qp[l],
+                        self.relu,
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                }
+            }
             other => panic!(
-                "layer {l} ({}): expected quantized (uint8) linear params, found {}",
+                "layer {l} ({}): expected quantized linear params, found {}",
                 self.name,
                 other.flavor()
             ),
-        };
-        let bq = quantize_bias(bias, xq.qp.scale, w.qp.scale);
-        let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.fwd));
-        let y = if self.fused {
-            // A folded dequantize boundary is emitted here, straight from
-            // the register tile (see QConvOp::forward).
-            let n_out = w.shape()[0];
-            let mut deq = self.fold_dequant.then(|| TensorF32::zeros(&[n_out]));
-            let (y, sat) = qlinear::qlinear_fwd_fused_sel(
-                sel,
-                xq,
-                w,
-                &bq,
-                ctx.act_qp[l],
-                self.relu,
-                deq.as_mut().map(|t| t.data_mut()),
-                ctx.ops,
-            );
-            ctx.sat[l] = Some((sat as usize, y.len().max(1)));
-            if let Some(d) = deq {
-                ctx.staged = Some(Act::F(d));
-            }
-            y
-        } else {
-            qlinear::qlinear_fwd_sel(sel, xq, w, &bq, ctx.act_qp[l], self.relu, ctx.ops)
         };
         ctx.acts.push(Act::Q(y));
     }
@@ -129,14 +167,6 @@ impl LayerOp for QLinearOp {
                 qconv::relu_bwd_mask_q(eq, y, ctx.ops);
             }
         }
-        let (w, _) = match &ctx.params[l] {
-            LayerParams::Q { w, bias } => (w, bias),
-            other => panic!(
-                "layer {l} ({}): backward expected quantized (uint8) linear params, found {}",
-                self.name,
-                other.flavor()
-            ),
-        };
         if trainable {
             let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_weight));
             let (gw, gb) = qlinear::qlinear_bwd_weight_gemm_sel(
@@ -155,27 +185,58 @@ impl LayerOp for QLinearOp {
             let obs = ctx.err_obs.as_mut().expect("backward error observers not set");
             let out_qp = propagate_qp(&mut obs[l - 1], eq, ctx.ops);
             let sel = ctx.packs.choice(l).map_or(KernelSel::Auto, |c| simd::resolve(c.bwd_input));
-            let next = Act::Q(if self.fused {
-                qlinear::qlinear_bwd_input_gemm_fused_sel(
-                    sel,
-                    eq,
-                    w,
-                    out_qp,
-                    keep.as_deref(),
-                    ctx.scratch,
-                    ctx.ops,
-                )
-            } else {
-                qlinear::qlinear_bwd_input_gemm_sel(
-                    sel,
-                    eq,
-                    w,
-                    out_qp,
-                    keep.as_deref(),
-                    ctx.scratch,
-                    ctx.ops,
-                )
-            });
+            let next = match &ctx.params[l] {
+                LayerParams::Q { w, .. } => Act::Q(if self.fused {
+                    qlinear::qlinear_bwd_input_gemm_fused_sel(
+                        sel,
+                        eq,
+                        w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                } else {
+                    qlinear::qlinear_bwd_input_gemm_sel(
+                        sel,
+                        eq,
+                        w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                }),
+                // The weight matrix is the GEMM's B operand here, so the
+                // `_pa` twins unpack the whole packed matrix into the
+                // `wq_u8` lane span before the row GEMM.
+                LayerParams::Qp { w, .. } => Act::Q(if self.fused {
+                    qlinear::qlinear_bwd_input_gemm_fused_pa_sel(
+                        sel,
+                        eq,
+                        w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                } else {
+                    qlinear::qlinear_bwd_input_gemm_pa_sel(
+                        sel,
+                        eq,
+                        w,
+                        out_qp,
+                        keep.as_deref(),
+                        ctx.scratch,
+                        ctx.ops,
+                    )
+                }),
+                other => panic!(
+                    "layer {l} ({}): backward expected quantized linear params, found {}",
+                    self.name,
+                    other.flavor()
+                ),
+            };
             observe_saturation(&mut obs[l - 1], &next);
             ctx.err = Some(next);
         }

@@ -39,6 +39,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::kernels::simd::TilePref;
+use crate::quant::subbyte::WBits;
 
 /// The plan compiler's autotuned micro-kernel choice for one layer: a
 /// [`TilePref`] per kernel direction (see `kernels::simd::tune`). The
@@ -77,6 +78,14 @@ enum PackBuf {
     DwU8(Vec<u8>),
     /// f32 twin of [`PackBuf::DwU8`] (float32 depthwise convs).
     DwF32(Vec<f32>),
+    /// [`PackBuf::U8`] stored packed at a sub-byte width (`quant::subbyte`,
+    /// layers deployed as `LayerParams::Qp`): the flipped-transposed lane
+    /// sequence packed *after* flipping, so a plain lane unpack restores
+    /// the flipped layout. The width tag travels with the bytes — a pack
+    /// built at one width can never be unpacked at another.
+    U8Packed(WBits, Vec<u8>),
+    /// Packed twin of [`PackBuf::DwU8`] (sub-byte depthwise convs).
+    DwU8Packed(WBits, Vec<u8>),
 }
 
 /// One layer's cached dense backward pack plus the parameter version it
@@ -287,6 +296,96 @@ impl PackCache {
         self.builds.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The sub-byte-packed flipped-transposed pack for layer `l`, with the
+    /// width it was packed at, if the cached one was built at exactly
+    /// `version` (sub-byte twin of [`PackCache::wt_u8`]).
+    pub fn wt_u8_packed(&self, l: usize, version: u64) -> Option<(&[u8], WBits)> {
+        let e = &self.entries[l];
+        match &e.buf {
+            PackBuf::U8Packed(bits, b) if e.version == version && !b.is_empty() => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((b, *bits))
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Sub-byte twin of [`PackCache::dw_u8`]: the packed flipped depthwise
+    /// pack with its width. Note the depthwise *consumer* always unpacks
+    /// the whole pack (per-channel kernel planes are not byte-aligned at
+    /// sub-byte widths), so masked calls still share this dense entry.
+    pub fn dw_u8_packed(&self, l: usize, version: u64) -> Option<(&[u8], WBits)> {
+        let e = &self.entries[l];
+        match &e.buf {
+            PackBuf::DwU8Packed(bits, b) if e.version == version && !b.is_empty() => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((b, *bits))
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Install/refresh the sub-byte-packed dense pack for layer `l` at
+    /// `version` (see [`PackCache::put_u8`] for the rebuild contract).
+    pub fn put_u8_packed(
+        &mut self,
+        l: usize,
+        version: u64,
+        bits: WBits,
+        build: impl FnOnce(&mut Vec<u8>),
+    ) {
+        let e = &mut self.entries[l];
+        if e.version == version
+            && matches!(&e.buf, PackBuf::U8Packed(bt, b) if *bt == bits && !b.is_empty())
+        {
+            return;
+        }
+        let mut buf = match std::mem::replace(&mut e.buf, PackBuf::Empty) {
+            PackBuf::U8Packed(_, mut b) => {
+                b.clear();
+                b
+            }
+            _ => Vec::new(),
+        };
+        build(&mut buf);
+        e.buf = PackBuf::U8Packed(bits, buf);
+        e.version = version;
+        self.builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sub-byte twin of [`PackCache::put_dw_u8`].
+    pub fn put_dw_u8_packed(
+        &mut self,
+        l: usize,
+        version: u64,
+        bits: WBits,
+        build: impl FnOnce(&mut Vec<u8>),
+    ) {
+        let e = &mut self.entries[l];
+        if e.version == version
+            && matches!(&e.buf, PackBuf::DwU8Packed(bt, b) if *bt == bits && !b.is_empty())
+        {
+            return;
+        }
+        let mut buf = match std::mem::replace(&mut e.buf, PackBuf::Empty) {
+            PackBuf::DwU8Packed(_, mut b) => {
+                b.clear();
+                b
+            }
+            _ => Vec::new(),
+        };
+        build(&mut buf);
+        e.buf = PackBuf::DwU8Packed(bits, buf);
+        e.version = version;
+        self.builds.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Current telemetry snapshot.
     pub fn stats(&self) -> PackStats {
         PackStats {
@@ -303,6 +402,9 @@ impl PackCache {
             .map(|e| match &e.buf {
                 PackBuf::Empty => 0,
                 PackBuf::U8(b) | PackBuf::DwU8(b) => b.len(),
+                // packed entries report their *packed* byte count — the
+                // whole point of the sub-byte store
+                PackBuf::U8Packed(_, b) | PackBuf::DwU8Packed(_, b) => b.len(),
                 PackBuf::F32(b) | PackBuf::DwF32(b) => b.len() * 4,
             })
             .sum()
@@ -369,6 +471,25 @@ mod tests {
         assert_eq!(c.dw_f32(0, 3), Some(&[1.0f32, 2.0][..]));
         assert!(c.wt_f32(0, 3).is_none());
         assert_eq!(c.reserved_bytes(), 8);
+    }
+
+    #[test]
+    fn packed_slots_are_width_tagged_and_report_packed_bytes() {
+        let mut c = PackCache::new(2);
+        c.put_u8_packed(0, 1, WBits::W4, |dst| dst.extend_from_slice(&[0xA3, 0x07]));
+        // a u8 lookup must never see a packed pack (it would misread lanes)
+        assert!(c.wt_u8(0, 1).is_none(), "u8 lookup served a packed pack");
+        assert_eq!(c.wt_u8_packed(0, 1), Some((&[0xA3u8, 0x07][..], WBits::W4)));
+        // a fresh same-width re-put is a no-op; a width change rebuilds
+        c.put_u8_packed(0, 1, WBits::W4, |_| panic!("fresh packed entry must not rebuild"));
+        c.put_u8_packed(0, 1, WBits::W2, |dst| dst.push(0b11_10_01_00));
+        assert_eq!(c.wt_u8_packed(0, 1), Some((&[0b11_10_01_00u8][..], WBits::W2)));
+        // depthwise packed slots are independent of dense packed slots
+        c.put_dw_u8_packed(1, 1, WBits::W4, |dst| dst.push(0x21));
+        assert!(c.wt_u8_packed(1, 1).is_none(), "dense lookup served a depthwise pack");
+        assert_eq!(c.dw_u8_packed(1, 1), Some((&[0x21u8][..], WBits::W4)));
+        // reserved bytes count the packed lengths
+        assert_eq!(c.reserved_bytes(), 1 + 1);
     }
 
     #[test]

@@ -44,6 +44,7 @@ use crate::kernels::simd::tune;
 use crate::kernels::OpCounter;
 use crate::memplan::{allocate_arena, ArenaItem, ArenaPlan, Scratch, ScratchSpec};
 use crate::quant::observer::MinMaxObserver;
+use crate::quant::subbyte::WBits;
 use crate::quant::QTensor;
 use crate::tensor::TensorF32;
 
@@ -61,6 +62,10 @@ pub struct ExecPlan {
     /// compile from the layer geometry (`kernels::simd::tune`) and
     /// installed into each session's [`crate::graph::packs::PackCache`].
     choices: Vec<Option<KernelChoice>>,
+    /// Per-layer weight storage widths chosen by the bit-selection pass
+    /// (see [`BitPlan`]). Deployment reads this to decide which layers get
+    /// packed sub-byte parameters ([`crate::graph::act::LayerParams::Qp`]).
+    bit_plan: BitPlan,
     /// The configuration this plan was compiled for.
     pub cfg: DnnConfig,
     /// Whether this plan runs the fused-epilogue kernels and folds legal
@@ -108,6 +113,127 @@ pub fn folds_dequant(def: &ModelDef, prec: &[Precision], l: usize) -> bool {
         }
 }
 
+/// Storage-width request for the plan compiler's weight bit-selection
+/// pass. The default (`force: None, budget: None`) keeps every layer on
+/// the plain u8 representation — byte-for-byte today's plans.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BitSpec {
+    /// Force every quantized weighted layer to this packed width
+    /// (`TT_WBITS`). `W8` selects the *packed* code path at 8 bits — the
+    /// bit-exactness oracle configuration, since packed-8 lanes round-trip
+    /// to the exact u8 weight bytes.
+    pub force: Option<WBits>,
+    /// Quantized-weight byte budget (`TT_WEIGHT_BUDGET`) the demotion
+    /// pass must fit. Ignored when `force` is set.
+    pub budget: Option<usize>,
+}
+
+impl BitSpec {
+    /// The environment-configured spec. Parsing happens at the single
+    /// `TT_*` parse site ([`crate::config::RunConfig::from_env`]).
+    pub fn from_env() -> BitSpec {
+        let rc = crate::config::RunConfig::from_env();
+        BitSpec { force: rc.wbits, budget: rc.weight_budget }
+    }
+}
+
+/// Per-layer weight storage widths chosen at compile: `None` keeps the
+/// plain u8 representation ([`crate::graph::act::LayerParams::Q`] — the
+/// retained bit-exactness oracle), `Some(b)` deploys the layer's weights
+/// packed at `b` bits per lane ([`crate::graph::act::LayerParams::Qp`]).
+///
+/// Width assignment (see [`BitPlan::assign`]): a forced width applies to
+/// every quantized weighted layer; otherwise a byte budget is met by
+/// repeatedly demoting the layer whose weight tensor currently occupies
+/// the most bytes one step down the `u8 → 4-bit → 2-bit` ladder (ties:
+/// earliest layer), stopping when the quantized weight total fits — or
+/// when everything is already 2-bit and the budget is simply unreachable.
+/// Only quantized (uint8-precision) conv/linear weights participate;
+/// float master weights of a `Mixed`/`Float32` head are not packable and
+/// stay outside the budget.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BitPlan {
+    pub wbits: Vec<Option<WBits>>,
+}
+
+impl BitPlan {
+    /// The packed width of layer `l`, or `None` for the u8 path.
+    pub fn packed(&self, l: usize) -> Option<WBits> {
+        self.wbits.get(l).copied().flatten()
+    }
+
+    /// Weight-tensor lane counts of the packable layers: quantized conv /
+    /// linear weights (0 for float, unweighted or out-of-range layers).
+    fn quant_lanes(def: &ModelDef, prec: &[Precision]) -> Vec<usize> {
+        def.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if prec[i] != Precision::Uint8 {
+                    return 0;
+                }
+                match &l.kind {
+                    LayerKind::Conv { geom, .. } => geom.weights(),
+                    LayerKind::Linear { n_in, n_out, .. } => n_in * n_out,
+                    _ => 0,
+                }
+            })
+            .collect()
+    }
+
+    /// Run the bit-selection pass for `def` at the given precisions.
+    pub fn assign(def: &ModelDef, prec: &[Precision], spec: &BitSpec) -> BitPlan {
+        let lanes = Self::quant_lanes(def, prec);
+        let mut wbits: Vec<Option<WBits>> = vec![None; def.layers.len()];
+        if let Some(b) = spec.force {
+            for (w, &nl) in wbits.iter_mut().zip(&lanes) {
+                if nl > 0 {
+                    *w = Some(b);
+                }
+            }
+            return BitPlan { wbits };
+        }
+        let Some(budget) = spec.budget else {
+            return BitPlan { wbits };
+        };
+        loop {
+            let bytes = |i: usize| wbits[i].map_or(lanes[i], |b| b.packed_len(lanes[i]));
+            let total: usize = (0..lanes.len()).map(bytes).sum();
+            if total <= budget {
+                break;
+            }
+            // Demote the largest remaining tensor one step (ties: earliest
+            // layer). u8 demotes straight to 4-bit — packing at 8 bits
+            // saves nothing, so W8 never appears in a budget-driven plan.
+            let cand = (0..lanes.len())
+                .filter(|&i| lanes[i] > 0 && wbits[i] != Some(WBits::W2))
+                .max_by(|&a, &b| bytes(a).cmp(&bytes(b)).then(b.cmp(&a)));
+            match cand {
+                Some(i) => {
+                    wbits[i] = Some(match wbits[i] {
+                        None | Some(WBits::W8) => WBits::W4,
+                        Some(WBits::W4) | Some(WBits::W2) => WBits::W2,
+                    });
+                }
+                None => break, // everything already 2-bit: budget unreachable
+            }
+        }
+        BitPlan { wbits }
+    }
+
+    /// Total bytes the quantized weight tensors occupy under this plan
+    /// (weight payloads only; biases are width-independent). This is the
+    /// quantity [`BitPlan::assign`] fits into a `TT_WEIGHT_BUDGET`.
+    pub fn weight_bytes(&self, def: &ModelDef, prec: &[Precision]) -> usize {
+        let lanes = Self::quant_lanes(def, prec);
+        lanes
+            .iter()
+            .enumerate()
+            .map(|(i, &nl)| self.packed(i).map_or(nl, |b| b.packed_len(nl)))
+            .sum()
+    }
+}
+
 impl ExecPlan {
     /// Compile the plan for `def` under `cfg` in the default fusion mode
     /// ([`fuse_default`]: fused unless `TT_NO_FUSE=1`). `O(layers)`: pure
@@ -143,8 +269,31 @@ impl ExecPlan {
     ///    backward absorbs the boundary's error-quantization step
     ///    (observing into the same per-layer error observer, in the same
     ///    order).
+    ///
+    /// Weight storage widths come from the environment
+    /// ([`BitSpec::from_env`]: `TT_WBITS` / `TT_WEIGHT_BUDGET`); use
+    /// [`ExecPlan::compile_with_bits`] for explicit control.
     pub fn compile_with(def: &ModelDef, cfg: DnnConfig, fused: bool) -> ExecPlan {
+        Self::compile_with_bits(def, cfg, fused, &BitSpec::from_env())
+    }
+
+    /// Compile the plan with an explicit fusion mode and an explicit
+    /// weight storage-width request (see [`BitSpec`] / [`BitPlan`]).
+    ///
+    /// Layers the bit-selection pass marks packed get their unpack lane
+    /// scratch pre-sized here: the GEMM paths unpack into the dedicated
+    /// `wq_u8` span, the depthwise engine into its existing `wt_u8`
+    /// flipped-weight span (which therefore must exist even for frozen
+    /// packed layers — the *forward* unpacks too). A default `BitSpec`
+    /// leaves the spec byte-for-byte identical to the pre-packing plans.
+    pub fn compile_with_bits(
+        def: &ModelDef,
+        cfg: DnnConfig,
+        fused: bool,
+        bits: &BitSpec,
+    ) -> ExecPlan {
         let prec = def.precisions(cfg);
+        let bit_plan = BitPlan::assign(def, &prec, bits);
         let shapes = def.shapes();
         // Backward scratch is sized only for the layers the backward pass
         // can actually visit: weight-gradient buffers for trainable
@@ -190,6 +339,13 @@ impl ExecPlan {
                                 Precision::Float32 => spec.wt_f32 = spec.wt_f32.max(dw),
                             }
                         }
+                        // Packed depthwise weights unpack into the same
+                        // `wt_u8` span on the *forward* path too
+                        // (`qdwconv2d_fwd_fused_pa_sel`), so it must exist
+                        // even for frozen packed layers.
+                        if bit_plan.packed(i).is_some() {
+                            spec.wt_u8 = spec.wt_u8.max(dw);
+                        }
                     }
                     if !geom.depthwise {
                         let n_hw = shapes[i][1] * shapes[i][2];
@@ -223,6 +379,18 @@ impl ExecPlan {
                                         spec.acc_i32 = spec.acc_i32.max(geom.cin * hw_in);
                                     }
                                     spec.zeros_i32 = spec.zeros_i32.max(geom.cin);
+                                }
+                                // Packed weights unpack into the dedicated
+                                // `wq_u8` lane span: the forward A-panel
+                                // (`cout·kdim`), and above the trainable
+                                // stop also the cached flipped pack the
+                                // backward-input GEMM consumes
+                                // (`cin·krow` — the same weight volume).
+                                if bit_plan.packed(i).is_some() {
+                                    spec.wq_u8 = spec.wq_u8.max(geom.cout * kdim);
+                                    if i > stop {
+                                        spec.wq_u8 = spec.wq_u8.max(geom.cin * krow);
+                                    }
                                 }
                             }
                             Precision::Float32 => {
@@ -296,6 +464,16 @@ impl ExecPlan {
                                 }
                                 spec.zeros_i32 = spec.zeros_i32.max(1);
                             }
+                            if bit_plan.packed(i).is_some() {
+                                spec.wq_u8 = spec.wq_u8.max(n_out * n_in);
+                                // The packed forward pulls its i32
+                                // accumulator from scratch (the u8 twin
+                                // allocates locally), so the unfused spec
+                                // must cover it.
+                                if !fused {
+                                    spec.acc_i32 = spec.acc_i32.max(*n_out);
+                                }
+                            }
                         }
                         Precision::Float32 => {
                             if i > stop {
@@ -342,7 +520,22 @@ impl ExecPlan {
             }
         }
         let arena = planned_arena_with(def, cfg, true, fused);
-        ExecPlan { planned_peak_bytes: arena.total_bytes, arena, ops, spec, choices, cfg, fused }
+        ExecPlan {
+            planned_peak_bytes: arena.total_bytes,
+            arena,
+            ops,
+            spec,
+            choices,
+            bit_plan,
+            cfg,
+            fused,
+        }
+    }
+
+    /// The per-layer weight storage widths this plan deploys with (see
+    /// [`BitPlan`]).
+    pub fn bit_plan(&self) -> &BitPlan {
+        &self.bit_plan
     }
 
     /// The per-layer autotuned micro-kernel preferences (`None` for layers
@@ -843,6 +1036,86 @@ mod tests {
         let inf = planned_arena(&def, DnnConfig::Uint8, false);
         let tr = planned_arena(&def, DnnConfig::Uint8, true);
         assert!(tr.total_bytes > inf.total_bytes, "{} vs {}", tr.total_bytes, inf.total_bytes);
+    }
+
+    #[test]
+    fn default_bit_plan_leaves_spec_unchanged() {
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let base = ExecPlan::compile_with_bits(&def, DnnConfig::Uint8, true, &BitSpec::default());
+        assert!(base.bit_plan().wbits.iter().all(|w| w.is_none()));
+        assert_eq!(base.scratch_spec().wq_u8, 0);
+        // Forcing packed-8 touches only the unpack lane span — everything
+        // else of the spec, and the activation arena, stay identical.
+        let p8 = ExecPlan::compile_with_bits(
+            &def,
+            DnnConfig::Uint8,
+            true,
+            &BitSpec { force: Some(WBits::W8), budget: None },
+        );
+        assert!(p8.scratch_spec().wq_u8 > 0);
+        let mut spec8 = p8.scratch_spec().clone();
+        spec8.wq_u8 = 0;
+        assert_eq!(&spec8, base.scratch_spec());
+        assert_eq!(p8.planned_peak_bytes, base.planned_peak_bytes);
+    }
+
+    #[test]
+    fn forced_width_marks_every_quantized_weighted_layer() {
+        let def = models::mbednet(&[3, 16, 16], 5);
+        let plan = ExecPlan::compile_with_bits(
+            &def,
+            DnnConfig::Uint8,
+            true,
+            &BitSpec { force: Some(WBits::W4), budget: None },
+        );
+        for (i, l) in def.layers.iter().enumerate() {
+            let expect = if l.has_weights() { Some(WBits::W4) } else { None };
+            assert_eq!(plan.bit_plan().packed(i), expect, "layer {i}");
+        }
+        // GEMM layers unpack into `wq_u8`; depthwise layers into `wt_u8`,
+        // pre-sized even when the layer is frozen (forward unpacks too).
+        assert!(plan.scratch_spec().wq_u8 > 0);
+        assert!(plan.scratch_spec().wt_u8 > 0);
+        // Float deployments have no packable weights.
+        let f = ExecPlan::compile_with_bits(
+            &def,
+            DnnConfig::Float32,
+            true,
+            &BitSpec { force: Some(WBits::W4), budget: None },
+        );
+        assert!(f.bit_plan().wbits.iter().all(|w| w.is_none()));
+    }
+
+    #[test]
+    fn budget_pass_demotes_largest_first_until_fit() {
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let prec = def.precisions(DnnConfig::Uint8);
+        let full = BitPlan::assign(&def, &prec, &BitSpec::default()).weight_bytes(&def, &prec);
+        assert!(full > 0);
+        let budget = full * 6 / 10;
+        let bp = BitPlan::assign(&def, &prec, &BitSpec { force: None, budget: Some(budget) });
+        assert!(bp.weight_bytes(&def, &prec) <= budget, "budget must be met");
+        assert!(bp.wbits.iter().any(|w| w.is_some()), "something must demote");
+        // Only quantized weighted layers ever pack, and demotion is
+        // largest-first: every still-u8 tensor is no larger than every
+        // demoted one.
+        let lanes = BitPlan::quant_lanes(&def, &prec);
+        let largest_kept =
+            (0..lanes.len()).filter(|&i| bp.packed(i).is_none()).map(|i| lanes[i]).max().unwrap();
+        for i in 0..lanes.len() {
+            if bp.packed(i).is_some() {
+                assert!(lanes[i] > 0, "only weighted quantized layers pack");
+                assert!(lanes[i] >= largest_kept, "demotion must be largest-first");
+            }
+        }
+        // An unreachable budget demotes everything to 2-bit and stops.
+        let bp2 = BitPlan::assign(&def, &prec, &BitSpec { force: None, budget: Some(1) });
+        for (i, &nl) in lanes.iter().enumerate() {
+            let expect = if nl > 0 { Some(WBits::W2) } else { None };
+            assert_eq!(bp2.packed(i), expect, "layer {i}");
+        }
+        // ~4× smaller than the u8 total (+1 byte rounding per tensor)
+        assert!(bp2.weight_bytes(&def, &prec) <= full / 4 + lanes.len());
     }
 
     #[test]

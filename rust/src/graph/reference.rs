@@ -66,8 +66,17 @@ pub fn forward_reference(
         };
         cur = match (&l.kind, &cur) {
             (LayerKind::Conv { geom, relu }, Act::Q(xq)) => {
+                // Packed sub-byte weights are fully unpacked here: the
+                // reference executor is the slow golden path, and running
+                // the identical u8 body keeps parity with the planned
+                // executor trivial at every width.
+                let unpacked;
                 let (w, bias) = match &m.state.params[i] {
                     LayerParams::Q { w, bias } => (w, bias),
+                    LayerParams::Qp { w, bias } => {
+                        unpacked = w.to_qtensor();
+                        (&unpacked, bias)
+                    }
                     other => panic!(
                         "layer {i} ({}): expected quantized (uint8) conv params, found {}",
                         l.name,
@@ -108,8 +117,13 @@ pub fn forward_reference(
                 Act::F(y)
             }
             (LayerKind::Linear { relu, .. }, Act::Q(xq)) => {
+                let unpacked;
                 let (w, bias) = match &m.state.params[i] {
                     LayerParams::Q { w, bias } => (w, bias),
+                    LayerParams::Qp { w, bias } => {
+                        unpacked = w.to_qtensor();
+                        (&unpacked, bias)
+                    }
                     other => panic!(
                         "layer {i} ({}): expected quantized (uint8) linear params, found {}",
                         l.name,

@@ -75,8 +75,16 @@ pub fn backward_reference(
                                 qconv::relu_bwd_mask_q(eq, y, ops);
                             }
                         }
+                        // Packed sub-byte weights: fully unpack and run the
+                        // identical u8 body (the reference path is the slow
+                        // golden oracle — see `forward_reference`).
+                        let unpacked;
                         let (w, _) = match &m.state.params[i] {
                             LayerParams::Q { w, bias } => (w, bias),
+                            LayerParams::Qp { w, bias } => {
+                                unpacked = w.to_qtensor();
+                                (&unpacked, bias)
+                            }
                             other => panic!(
                                 "layer {i} ({}): backward expected quantized (uint8) conv \
                                  params, found {}",
@@ -223,8 +231,13 @@ pub fn backward_reference(
                                 qconv::relu_bwd_mask_q(eq, y, ops);
                             }
                         }
+                        let unpacked;
                         let (w, _) = match &m.state.params[i] {
                             LayerParams::Q { w, bias } => (w, bias),
+                            LayerParams::Qp { w, bias } => {
+                                unpacked = w.to_qtensor();
+                                (&unpacked, bias)
+                            }
                             other => panic!(
                                 "layer {i} ({}): backward expected quantized (uint8) linear \
                                  params, found {}",

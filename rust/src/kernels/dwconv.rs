@@ -45,6 +45,7 @@ use crate::kernels::gemm::NR;
 use crate::kernels::simd::{self, tune, KernelSel};
 use crate::kernels::{ConvGeom, OpCounter};
 use crate::memplan::Scratch;
+use crate::quant::subbyte::{self, PackedQTensor, WBits};
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
 use crate::tensor::TensorF32;
 
@@ -77,6 +78,30 @@ pub fn pack_dw_flip_u8(wdat: &[u8], geom: &ConvGeom, dst: &mut [u8]) {
 /// f32 twin of [`pack_dw_flip_u8`].
 pub fn pack_dw_flip_f32(wdat: &[f32], geom: &ConvGeom, dst: &mut [f32]) {
     pack_dw_flip(wdat, geom, dst);
+}
+
+/// Packed-weight twin of [`pack_dw_flip_u8`]: reads the depthwise weights
+/// straight from their packed sub-byte representation and writes plain u8
+/// lanes in the flipped `[C, Kh·Kw]` layout. Lanes are addressed by global
+/// index (`c·Kh·Kw + ky·Kw + kx` through [`subbyte::extract_lane`]) because
+/// a channel plane's base offset is not byte-aligned when `Kh·Kw` is odd —
+/// e.g. a 3×3 kernel at 2 or 4 lanes per byte. Bit-identical to unpacking
+/// the whole tensor and running [`pack_dw_flip_u8`] (tested).
+pub fn pack_dw_flip_u8_pa(packed: &[u8], bits: WBits, geom: &ConvGeom, dst: &mut [u8]) {
+    assert!(geom.depthwise, "flipped depthwise packing requires depthwise geometry");
+    let khw = geom.kh * geom.kw;
+    assert_eq!(packed.len(), bits.packed_len(geom.cout * khw), "packed weight size");
+    assert_eq!(dst.len(), geom.cout * khw, "packed buffer size");
+    for c in 0..geom.cout {
+        for kyf in 0..geom.kh {
+            let ky = geom.kh - 1 - kyf;
+            for kxf in 0..geom.kw {
+                let kx = geom.kw - 1 - kxf;
+                dst[c * khw + kyf * geom.kw + kxf] =
+                    subbyte::extract_lane(packed, c * khw + ky * geom.kw + kx, bits);
+            }
+        }
+    }
 }
 
 /// Blocked quantized depthwise forward, **bit-exact** with
@@ -158,6 +183,69 @@ fn qdwconv2d_fwd_impl(
     relu: bool,
     ops: &mut OpCounter,
 ) -> (QTensor, u64) {
+    qdwconv2d_fwd_core(sel, x, w.qp, w.len(), w.values.data(), bias, geom, out_qp, relu, ops)
+}
+
+/// [`qdwconv2d_fwd_fused_sel`] over a packed sub-byte weight tensor: the
+/// weights are unpacked once into the scratch arena's depthwise lane span
+/// (a panel pass, dispatched under the same `sel` as the kernel), then the
+/// unchanged forward core runs on the lanes. Unpacked lanes are ordinary
+/// affine values, so a packed-8 call is bit-identical to
+/// [`qdwconv2d_fwd_fused_sel`] on the u8 twin; op accounting uses the
+/// *logical* lane count, keeping the device cost model independent of the
+/// storage width.
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_fwd_fused_pa_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    pw: &PackedQTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
+    let wdat = scratch.dw_wt_u8(pw.len());
+    simd::unpack_lanes_sel(sel, pw.data.data(), pw.len(), pw.bits, wdat);
+    qdwconv2d_fwd_core(sel, x, pw.qp, pw.len(), wdat, bias, geom, out_qp, relu, ops)
+}
+
+/// Unfused twin of [`qdwconv2d_fwd_fused_pa_sel`] (drops the saturation
+/// count), mirroring the [`qdwconv2d_fwd_sel`] / fused split.
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_fwd_pa_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    pw: &PackedQTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    qdwconv2d_fwd_fused_pa_sel(sel, x, pw, bias, geom, out_qp, relu, scratch, ops).0
+}
+
+/// The shared forward core: weights arrive as plain u8 lanes plus their
+/// quantization parameters, so the same body serves the [`QTensor`] path
+/// (borrowing the tensor's payload) and the packed sub-byte path
+/// (borrowing the scratch unpack span) — one compute loop, one numerics
+/// contract.
+#[allow(clippy::too_many_arguments)]
+fn qdwconv2d_fwd_core(
+    sel: KernelSel,
+    x: &QTensor,
+    wqp: QParams,
+    wlen: usize,
+    wdat: &[u8],
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
     assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
     assert_eq!(geom.cin, geom.cout, "depthwise conv has one filter per channel");
     let (h, wd) = (x.shape()[1], x.shape()[2]);
@@ -166,11 +254,11 @@ fn qdwconv2d_fwd_impl(
     assert_eq!(bias.len(), geom.cout, "bias length mismatch");
     let khw = geom.kh * geom.kw;
     let zx = x.qp.zero_point;
-    let zw = w.qp.zero_point;
-    let mult = requant_multiplier(x.qp.scale, w.qp.scale, out_qp.scale);
+    let zw = wqp.zero_point;
+    let mult = requant_multiplier(x.qp.scale, wqp.scale, out_qp.scale);
     let xd = x.values.data();
-    let wdat = w.values.data();
-    assert_eq!(wdat.len(), geom.cout * khw, "weight size");
+    assert_eq!(wlen, geom.cout * khw, "weight size");
+    let wdat = &wdat[..wlen];
 
     let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
     let od = out.values.data_mut();
@@ -235,7 +323,7 @@ fn qdwconv2d_fwd_impl(
 
     ops.int_macs += geom.fwd_macs(h, wd);
     ops.int_ops += (geom.cout * oh * ow) as u64;
-    ops.bytes += (x.len() + w.len() + geom.cout * oh * ow) as u64;
+    ops.bytes += (x.len() + wlen + geom.cout * oh * ow) as u64;
     (out, sat)
 }
 
@@ -372,16 +460,88 @@ pub fn qdwconv2d_bwd_input_packed_sel(
     keep: Option<&[bool]>,
     ops: &mut OpCounter,
 ) -> QTensor {
+    qdwconv2d_bwd_input_core(sel, e, w.qp, w.len(), wt_pack, geom, in_h, in_w, out_qp, keep, ops)
+}
+
+/// [`qdwconv2d_bwd_input_packed_sel`] over a packed sub-byte cache entry:
+/// `wt_pack` holds the 180°-flipped kernel packed at `bits` lanes per
+/// byte (flipped *before* packing, so a plain lane unpack restores the
+/// flipped layout). The entry is unpacked once into the scratch arena's
+/// depthwise lane span, then the unchanged backward core runs — bit-exact
+/// with the u8 cached path on the same lanes. `pw` supplies quantization
+/// parameters and the logical lane count for op accounting.
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_bwd_input_packed_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    wt_pack: &[u8],
+    bits: WBits,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let khw = geom.kh * geom.kw;
+    let wt = scratch.dw_wt_u8(geom.cout * khw);
+    simd::unpack_lanes_sel(sel, wt_pack, geom.cout * khw, bits, wt);
+    qdwconv2d_bwd_input_core(sel, e, pw.qp, pw.len(), wt, geom, in_h, in_w, out_qp, keep, ops)
+}
+
+/// [`qdwconv2d_bwd_input_packed_pa_sel`] without a plan-owned pack: flips
+/// the packed weights into the scratch arena lane-by-lane
+/// ([`pack_dw_flip_u8_pa`] — the stale-cache bypass path), then runs the
+/// shared backward core. Bit-exact with the cached route either way.
+#[allow(clippy::too_many_arguments)]
+pub fn qdwconv2d_bwd_input_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let wt = scratch.dw_wt_u8(geom.cout * geom.kh * geom.kw);
+    pack_dw_flip_u8_pa(pw.data.data(), pw.bits, geom, wt);
+    qdwconv2d_bwd_input_core(sel, e, pw.qp, pw.len(), wt, geom, in_h, in_w, out_qp, keep, ops)
+}
+
+/// The shared backward-input core (see [`qdwconv2d_fwd_core`] for the
+/// lane-parameterization rationale): the flipped pack arrives as plain u8
+/// lanes plus the weight tensor's quantization parameters and logical
+/// length, serving both the [`QTensor`] cache and the packed sub-byte
+/// cache through one compute loop.
+#[allow(clippy::too_many_arguments)]
+fn qdwconv2d_bwd_input_core(
+    sel: KernelSel,
+    e: &QTensor,
+    wqp: QParams,
+    wlen: usize,
+    wt_pack: &[u8],
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    ops: &mut OpCounter,
+) -> QTensor {
     assert!(geom.depthwise, "depthwise engine requires depthwise geometry");
     let (oh, ow) = (e.shape()[1], e.shape()[2]);
     let khw = geom.kh * geom.kw;
-    assert_eq!(wt_pack.len(), geom.cout * khw, "packed weight size");
+    let wt_pack = &wt_pack[..geom.cout * khw];
     if let Some(k) = keep {
         assert_eq!(k.len(), geom.cout, "keep mask length");
     }
     let ze = e.qp.zero_point;
-    let zw = w.qp.zero_point;
-    let mult = requant_multiplier(e.qp.scale, w.qp.scale, out_qp.scale);
+    let zw = wqp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, wqp.scale, out_qp.scale);
     let ed = e.values.data();
     let s = geom.stride as isize;
 
@@ -450,7 +610,7 @@ pub fn qdwconv2d_bwd_input_packed_sel(
 
     ops.int_macs += kept_channels * (oh * ow * khw) as u64;
     ops.int_ops += (geom.cin * in_h * in_w) as u64;
-    ops.bytes += (e.len() + w.len() + geom.cin * in_h * in_w) as u64;
+    ops.bytes += (e.len() + wlen + geom.cin * in_h * in_w) as u64;
     out
 }
 
@@ -839,6 +999,119 @@ mod tests {
         let mut dst = vec![0u8; 8];
         pack_dw_flip_u8(&w, &g, &mut dst);
         assert_eq!(dst, vec![11, 10, 1, 0, 111, 110, 101, 100]);
+    }
+
+    /// The packed-weight flip must match unpack-then-flip at every width,
+    /// on a 3×3 kernel whose 9-lane channel planes are *not* byte-aligned
+    /// at 2 or 4 lanes per byte.
+    #[test]
+    fn pack_dw_flip_pa_matches_unpacked_oracle() {
+        let mut rng = Pcg32::seeded(96);
+        let g = dw_geom(5, 3, 1, 1);
+        let khw = 9;
+        for bits in [WBits::W8, WBits::W4, WBits::W2] {
+            let span = bits.qmax() as u32 + 1;
+            let lanes: Vec<u8> = (0..5 * khw).map(|_| rng.below(span) as u8).collect();
+            let packed = subbyte::pack_lanes(&lanes, bits);
+            let mut want = vec![0u8; 5 * khw];
+            let mut got = vec![0u8; 5 * khw];
+            pack_dw_flip_u8(&lanes, &g, &mut want);
+            pack_dw_flip_u8_pa(&packed, bits, &g, &mut got);
+            assert_eq!(got, want, "{bits:?}");
+        }
+    }
+
+    /// The three packed-weight depthwise paths (forward, cached backward,
+    /// stale-bypass backward) must be bit-exact with the u8 engine running
+    /// on the unpacked twin, with identical op accounting — at every bit
+    /// width and under sparse masks.
+    #[test]
+    fn packed_dw_paths_bit_exact_with_u8_twin() {
+        let mut rng = Pcg32::seeded(97);
+        let g = dw_geom(4, 3, 1, 1);
+        let (h, w) = (9, 9);
+        let (x, wt, b) = rand_dw_setup(&mut rng, &g, h, w);
+        let xq = QTensor::quantize(&x);
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        let (oh, ow) = g.out_hw(h, w);
+        let mut e = TensorF32::zeros(&[4, oh, ow]);
+        rng.fill_normal(e.data_mut(), 1.0);
+        let eq = QTensor::quantize(&e);
+        let mask = [true, false, true, true];
+        for bits in [WBits::W8, WBits::W4, WBits::W2] {
+            let p = PackedQTensor::quantize_bits(&wt, bits);
+            let q = p.to_qtensor();
+            let bq = crate::quant::quantize_bias(&b, xq.qp.scale, q.qp.scale);
+
+            let mut ops_u = OpCounter::new();
+            let mut ops_p = OpCounter::new();
+            let mut scratch = Scratch::new();
+            let (yu, sat_u) = qdwconv2d_fwd_fused(&xq, &q, &bq, &g, oqp, true, &mut ops_u);
+            let (yp, sat_p) = qdwconv2d_fwd_fused_pa_sel(
+                KernelSel::Auto,
+                &xq,
+                &p,
+                &bq,
+                &g,
+                oqp,
+                true,
+                &mut scratch,
+                &mut ops_p,
+            );
+            assert_eq!(yu.values.data(), yp.values.data(), "fwd {bits:?}");
+            assert_eq!(sat_u, sat_p, "fwd sat {bits:?}");
+            assert_eq!(ops_u, ops_p, "fwd ops {bits:?}");
+
+            for keep in [None, Some(&mask[..])] {
+                let mut ops_su = OpCounter::new();
+                let mut ops_sp = OpCounter::new();
+                let mut sc_u = Scratch::new();
+                let mut sc_p = Scratch::new();
+                let eu =
+                    qdwconv2d_bwd_input(&eq, &q, &g, h, w, oqp, keep, &mut sc_u, &mut ops_su);
+                let ep = qdwconv2d_bwd_input_pa_sel(
+                    KernelSel::Auto,
+                    &eq,
+                    &p,
+                    &g,
+                    h,
+                    w,
+                    oqp,
+                    keep,
+                    &mut sc_p,
+                    &mut ops_sp,
+                );
+                assert_eq!(eu.values.data(), ep.values.data(), "bypass dx {bits:?}");
+                assert_eq!(ops_su, ops_sp, "bypass dx ops {bits:?}");
+
+                // cached route: the u8 cache holds flipped lanes, the packed
+                // cache the same lanes re-packed at `bits`
+                let mut flipped = vec![0u8; q.len()];
+                pack_dw_flip_u8(q.values.data(), &g, &mut flipped);
+                let packed_flip = subbyte::pack_lanes(&flipped, bits);
+                let mut ops_cu = OpCounter::new();
+                let mut ops_cp = OpCounter::new();
+                let ecu = qdwconv2d_bwd_input_packed(
+                    &eq, &q, &flipped, &g, h, w, oqp, keep, &mut ops_cu,
+                );
+                let ecp = qdwconv2d_bwd_input_packed_pa_sel(
+                    KernelSel::Auto,
+                    &eq,
+                    &p,
+                    &packed_flip,
+                    bits,
+                    &g,
+                    h,
+                    w,
+                    oqp,
+                    keep,
+                    &mut sc_p,
+                    &mut ops_cp,
+                );
+                assert_eq!(ecu.values.data(), ecp.values.data(), "cached dx {bits:?}");
+                assert_eq!(ops_cu, ops_cp, "cached dx ops {bits:?}");
+            }
+        }
     }
 
     /// Property: the blocked quantized forward is bit-exact with the

@@ -41,6 +41,7 @@
 //! buffers are reused across every layer and sample they serve.
 
 use super::simd::{self, tune, Isa, KernelSel};
+use crate::quant::subbyte::{self, WBits};
 use crate::quant::{requantize, QParams};
 
 /// Columns per output tile of the retained cache-blocked reference path
@@ -228,6 +229,53 @@ pub fn pack_wt_flip_f32(
     dst: &mut [f32],
 ) -> usize {
     pack_wt_flip(wdat, geom, keep, dst)
+}
+
+/// Packed-weight twin of [`pack_wt_flip_u8`]: reads the weight tensor
+/// straight from its packed sub-byte representation and writes plain u8
+/// lanes in the flipped-transposed layout. The source is addressed per
+/// logical lane (`((co·Cin + ci)·Kh + ky)·Kw + kx` through
+/// [`subbyte::extract_lane`]) because a kernel plane's base offset is not
+/// byte-aligned at 2 or 4 lanes per byte. Bit-identical to unpacking the
+/// whole tensor and running [`pack_wt_flip_u8`] (property-tested), and —
+/// like that twin — masked channels occupy no rows at all.
+pub fn pack_wt_flip_u8_pa(
+    packed: &[u8],
+    bits: WBits,
+    geom: &super::ConvGeom,
+    keep: Option<&[bool]>,
+    dst: &mut [u8],
+) -> usize {
+    assert!(!geom.depthwise, "flipped packing is defined for dense convs only");
+    let (cin, kh, kw) = (geom.cin, geom.kh, geom.kw);
+    assert_eq!(packed.len(), bits.packed_len(geom.cout * cin * kh * kw), "packed weight size");
+    if let Some(k) = keep {
+        assert_eq!(k.len(), geom.cout, "keep mask length");
+    }
+    let kc = super::kept_count(keep, geom.cout);
+    let krow = kc * kh * kw;
+    assert_eq!(dst.len(), cin * krow, "packed buffer size");
+    let mut j = 0usize;
+    for co in 0..geom.cout {
+        if let Some(k) = keep {
+            if !k[co] {
+                continue;
+            }
+        }
+        for ci in 0..cin {
+            for kyf in 0..kh {
+                let ky = kh - 1 - kyf;
+                for kxf in 0..kw {
+                    let kx = kw - 1 - kxf;
+                    let lane = ((co * cin + ci) * kh + ky) * kw + kx;
+                    dst[ci * krow + (j * kh + kyf) * kw + kxf] =
+                        subbyte::extract_lane(packed, lane, bits);
+                }
+            }
+        }
+        j += 1;
+    }
+    kc
 }
 
 /// Pack the error map `[Cout, Oh, Ow]` into the backward column matrix
@@ -825,6 +873,63 @@ pub fn gemm_u8_i32_fused_sel(
         Some(isa) => gemm_u8_i32_fused_simd(isa, a, za, b, zb, row_init, m, k, n, epi, out, dequant),
         None => gemm_u8_i32_fused_scalar(a, za, b, zb, row_init, m, k, n, epi, out, dequant),
     }
+}
+
+/// [`gemm_u8_i32_sel`] over a packed sub-byte A operand. The m×k panel is
+/// unpacked once into the caller-provided `a_lanes` scratch span (the
+/// dispatched word-parallel unpacker under the same `sel`), then the
+/// unchanged u8 micro-kernel runs on the lanes. Unpacked lanes are
+/// ordinary affine values in `[0, qmax] ⊂ [0, 255]`, so the GEMM itself
+/// needs no changes and a packed-8 call is bit-identical to
+/// [`gemm_u8_i32_sel`] on the original bytes by construction. The unpack
+/// is an O(m·k) panel pass against the O(m·k·n) GEMM, which is what keeps
+/// steady-state cost unchanged while the stored weights shrink 2–4×.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_u8_i32_pa_sel(
+    sel: KernelSel,
+    a_packed: &[u8],
+    bits: WBits,
+    a_lanes: &mut [u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a_packed.len(), bits.packed_len(m * k), "packed A shape mismatch");
+    assert!(a_lanes.len() >= m * k, "A lane scratch too small");
+    simd::unpack_lanes_sel(sel, a_packed, m * k, bits, a_lanes);
+    gemm_u8_i32_sel(sel, &a_lanes[..m * k], za, b, zb, row_init, m, k, n, out);
+}
+
+/// [`gemm_u8_i32_fused_sel`] over a packed sub-byte A operand — the fused
+/// twin of [`gemm_u8_i32_pa_sel`]: unpack the A panel into `a_lanes`, then
+/// run the unchanged fused kernel (epilogue, dequant emit, and saturation
+/// count all bit-identical to the u8 path on the same lanes).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_u8_i32_fused_pa_sel(
+    sel: KernelSel,
+    a_packed: &[u8],
+    bits: WBits,
+    a_lanes: &mut [u8],
+    za: i32,
+    b: &[u8],
+    zb: i32,
+    row_init: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &QEpilogue,
+    out: &mut [u8],
+    dequant: Option<&mut [f32]>,
+) -> u64 {
+    assert_eq!(a_packed.len(), bits.packed_len(m * k), "packed A shape mismatch");
+    assert!(a_lanes.len() >= m * k, "A lane scratch too small");
+    simd::unpack_lanes_sel(sel, a_packed, m * k, bits, a_lanes);
+    gemm_u8_i32_fused_sel(sel, &a_lanes[..m * k], za, b, zb, row_init, m, k, n, epi, out, dequant)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1549,6 +1654,149 @@ mod tests {
         let kc2 = pack_wt_flip_u8(&w, &g, Some(&[false, true]), &mut dst2);
         assert_eq!(kc2, 1);
         assert_eq!(dst2, vec![111, 110, 101, 100]);
+    }
+
+    /// The packed-weight flip must be bit-identical to unpacking the whole
+    /// tensor and running the u8 flip — across bit widths, odd kernel
+    /// geometries (3×3 planes are not byte-aligned at 2 or 4 lanes/byte),
+    /// and sparse keep masks.
+    #[test]
+    fn prop_packed_pack_wt_flip_matches_unpacked_oracle() {
+        Prop::new(48).check(
+            |r: &mut Pcg32| {
+                let cin = 1 + r.below(5) as usize;
+                let cout = 1 + r.below(5) as usize;
+                let k = 1 + r.below(3) as usize;
+                let bits = match r.below(3) {
+                    0 => WBits::W8,
+                    1 => WBits::W4,
+                    _ => WBits::W2,
+                };
+                (cin, cout, k, bits, r.next_u64())
+            },
+            |&(cin, cout, k, bits, s)| {
+                shrink_dim(cout, 1).into_iter().map(|c2| (cin, c2, k, bits, s)).collect()
+            },
+            |&(cin, cout, k, bits, seed)| {
+                let mut rng = Pcg32::seeded(seed);
+                let g = ConvGeom {
+                    cin,
+                    cout,
+                    kh: k,
+                    kw: k,
+                    stride: 1,
+                    pad_h: 0,
+                    pad_w: 0,
+                    depthwise: false,
+                };
+                let span = bits.qmax() as u32 + 1;
+                let lanes: Vec<u8> =
+                    (0..cout * cin * k * k).map(|_| rng.below(span) as u8).collect();
+                let packed = subbyte::pack_lanes(&lanes, bits);
+                let keep: Vec<bool> = (0..cout).map(|_| rng.below(2) == 1).collect();
+                for mask in [None, Some(keep.as_slice())] {
+                    let kc = super::super::kept_count(mask, cout);
+                    let mut want = vec![0u8; cin * kc * k * k];
+                    let mut got = vec![0u8; cin * kc * k * k];
+                    pack_wt_flip_u8(&lanes, &g, mask, &mut want);
+                    let kc2 = pack_wt_flip_u8_pa(&packed, bits, &g, mask, &mut got);
+                    if kc2 != kc {
+                        return Err(format!("kept count {kc2} != {kc}"));
+                    }
+                    if got != want {
+                        return Err(format!("packed flip differs ({bits:?}, mask={mask:?})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The packed-A GEMM twins must be bit-identical to the u8 kernels on
+    /// the same lanes, at every bit width, across the MR/NR tile edges —
+    /// plain and fused (output bytes, dequant emit, saturation count).
+    #[test]
+    fn packed_gemm_edge_tiles_bit_exact() {
+        let mut rng = Pcg32::seeded(79);
+        for &bits in &[WBits::W8, WBits::W4, WBits::W2] {
+            let span = bits.qmax() as u32 + 1;
+            for &m in &[1usize, MR - 1, MR + 1, 7] {
+                for &n in &[1usize, NR - 1, NR + 1, 13] {
+                    let k = 1 + rng.below(31) as usize;
+                    let a: Vec<u8> = (0..m * k).map(|_| rng.below(span) as u8).collect();
+                    let packed = subbyte::pack_lanes(&a, bits);
+                    let b: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+                    let init: Vec<i32> = (0..m).map(|_| rng.below(1000) as i32 - 500).collect();
+                    let za = rng.below(span) as i32;
+                    let zb = rng.below(256) as i32;
+                    let mut lanes = vec![0u8; m * k];
+
+                    let mut want = vec![0i32; m * n];
+                    gemm_u8_i32_sel(KernelSel::Scalar, &a, za, &b, zb, &init, m, k, n, &mut want);
+                    let mut got = vec![0i32; m * n];
+                    gemm_u8_i32_pa_sel(
+                        KernelSel::Scalar,
+                        &packed,
+                        bits,
+                        &mut lanes,
+                        za,
+                        &b,
+                        zb,
+                        &init,
+                        m,
+                        k,
+                        n,
+                        &mut got,
+                    );
+                    assert_eq!(got, want, "plain {bits:?} m={m} n={n} k={k}");
+
+                    let epi = QEpilogue {
+                        mult: 0.03,
+                        qp: QParams { scale: 0.1, zero_point: 90 },
+                        relu: m % 2 == 0,
+                    };
+                    let mut wq = vec![0u8; m * n];
+                    let mut wd = vec![0f32; m * n];
+                    let sat_w = gemm_u8_i32_fused_sel(
+                        KernelSel::Scalar,
+                        &a,
+                        za,
+                        &b,
+                        zb,
+                        &init,
+                        m,
+                        k,
+                        n,
+                        &epi,
+                        &mut wq,
+                        Some(&mut wd),
+                    );
+                    let mut gq = vec![0u8; m * n];
+                    let mut gd = vec![0f32; m * n];
+                    let sat_g = gemm_u8_i32_fused_pa_sel(
+                        KernelSel::Scalar,
+                        &packed,
+                        bits,
+                        &mut lanes,
+                        za,
+                        &b,
+                        zb,
+                        &init,
+                        m,
+                        k,
+                        n,
+                        &epi,
+                        &mut gq,
+                        Some(&mut gd),
+                    );
+                    assert_eq!(gq, wq, "fused bytes {bits:?} m={m} n={n} k={k}");
+                    assert_eq!(sat_g, sat_w, "fused sat {bits:?} m={m} n={n} k={k}");
+                    let wb: Vec<u32> = wd.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> = gd.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, wb, "fused dequant {bits:?} m={m} n={n} k={k}");
+                }
+            }
+        }
     }
 
     /// The full backward-input lowering (pack_wt_flip × im2col_bwd through

@@ -15,9 +15,10 @@
 //! not computed and they contribute nothing to the backpropagated error —
 //! which is exactly the computational-tree pruning the paper describes.
 
-use crate::kernels::simd::KernelSel;
+use crate::kernels::simd::{self, KernelSel};
 use crate::kernels::{gemm, kept_count, ConvGeom, OpCounter};
 use crate::memplan::Scratch;
+use crate::quant::subbyte::{PackedQTensor, WBits};
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
 use crate::tensor::{idx3, idx4, TensorF32};
 
@@ -814,6 +815,441 @@ pub fn qconv2d_bwd_input_gemm_packed_fused_sel(
     out
 }
 
+// ---- packed sub-byte weight twins (`quant::subbyte`) ----------------------
+//
+// Each `_pa_sel` kernel is the packed-weight twin of the `_sel` kernel above
+// it: the weight tensor arrives as a [`PackedQTensor`] (2 or 4 lanes per
+// byte; `WBits::W8` is 1:1), the lanes are unpacked into scratch in one
+// panel pass (`kernels::simd::unpack_lanes_sel` — SWAR word-parallel under
+// SIMD selections) and the existing GEMM core runs on them unchanged.
+// Because unpacked lanes are ordinary u8 values in `[0, qmax] ⊆ [0, 255]`
+// and the GEMM only ever subtracts the zero point, a packed-8 call is
+// bit-identical to its u8 twin; op accounting uses the *logical* lane count
+// (`pw.len()`), keeping the device cost model independent of the storage
+// width.
+
+/// Packed-weight twin of [`qconv2d_fwd_gemm_sel`]: the weight lanes are
+/// unpacked into the `wq_u8` scratch span and consumed as the GEMM A
+/// operand. Bit-exact with the u8 kernel on `pw.to_qtensor()`.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_fwd_gemm_pa_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    pw: &PackedQTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+
+    let n = oh * ow;
+    let kdim = geom.cin * geom.kh * geom.kw;
+    assert_eq!(pw.len(), geom.cout * kdim, "weight size");
+    let zx = x.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let mult = requant_multiplier(x.qp.scale, pw.qp.scale, out_qp.scale);
+    let pointwise = geom.is_pointwise();
+
+    let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
+    {
+        let (wq, col_buf, acc) = scratch.qconv_pa_bufs(
+            geom.cout * kdim,
+            if pointwise { 0 } else { kdim * n },
+            geom.cout * n,
+        );
+        let col: &[u8] = if pointwise {
+            x.values.data()
+        } else {
+            gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
+            col_buf
+        };
+        gemm::gemm_u8_i32_pa_sel(
+            sel,
+            pw.data.data(),
+            pw.bits,
+            wq,
+            zw,
+            col,
+            zx,
+            bias,
+            geom.cout,
+            kdim,
+            n,
+            acc,
+        );
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, relu);
+        }
+    }
+
+    ops.int_macs += geom.fwd_macs(h, wd);
+    ops.int_ops += (geom.cout * n) as u64; // requantization
+    ops.bytes += (x.len() + pw.len() + geom.cout * n) as u64;
+    out
+}
+
+/// Packed-weight twin of [`qconv2d_fwd_gemm_fused_sel`]. Bit-exact with the
+/// u8 fused kernel on `pw.to_qtensor()`, same saturation count and dequant
+/// emission.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_fwd_gemm_fused_pa_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    pw: &PackedQTensor,
+    bias: &[i32],
+    geom: &ConvGeom,
+    out_qp: QParams,
+    relu: bool,
+    dequant: Option<&mut [f32]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (h, wd) = (x.shape()[1], x.shape()[2]);
+    let (oh, ow) = geom.out_hw(h, wd);
+    assert_eq!(x.shape()[0], geom.cin, "input channels mismatch");
+    assert_eq!(bias.len(), geom.cout, "bias length mismatch");
+
+    let n = oh * ow;
+    let kdim = geom.cin * geom.kh * geom.kw;
+    assert_eq!(pw.len(), geom.cout * kdim, "weight size");
+    let zx = x.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(x.qp.scale, pw.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu,
+    };
+    let pointwise = geom.is_pointwise();
+
+    let mut out = QTensor::zeros(&[geom.cout, oh, ow], out_qp);
+    let sat;
+    {
+        let (wq, col_buf, _) =
+            scratch.qconv_pa_bufs(geom.cout * kdim, if pointwise { 0 } else { kdim * n }, 0);
+        let col: &[u8] = if pointwise {
+            x.values.data()
+        } else {
+            gemm::im2col_u8(x.values.data(), h, wd, geom, oh, ow, x.qp.qzero(), col_buf);
+            col_buf
+        };
+        sat = gemm::gemm_u8_i32_fused_pa_sel(
+            sel,
+            pw.data.data(),
+            pw.bits,
+            wq,
+            zw,
+            col,
+            zx,
+            bias,
+            geom.cout,
+            kdim,
+            n,
+            &epi,
+            out.values.data_mut(),
+            dequant,
+        );
+    }
+
+    ops.int_macs += geom.fwd_macs(h, wd);
+    ops.int_ops += (geom.cout * n) as u64; // requantization
+    ops.bytes += (x.len() + pw.len() + geom.cout * n) as u64;
+    (out, sat)
+}
+
+/// Packed-weight twin of [`qconv2d_bwd_input_gemm_sel`]: the flip-transpose
+/// pack extracts lanes straight from the packed weights
+/// ([`gemm::pack_wt_flip_u8_pa`]), so no separate unpack pass or extra
+/// scratch is needed. Bit-exact with the u8 kernel on `pw.to_qtensor()`.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, pw.qp.scale, out_qp.scale);
+    let kc = kept_count(keep, geom.cout);
+    let krow = kc * geom.kh * geom.kw;
+    let n = in_h * in_w;
+    let pointwise_dense = geom.is_pointwise() && keep.is_none();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (wt_full, col_buf, acc, init) = scratch.qconv_bwd_bufs(
+            geom.cin * geom.cout * geom.kh * geom.kw,
+            if pointwise_dense { 0 } else { krow * n },
+            geom.cin * n,
+            geom.cin,
+        );
+        let wt_buf = &mut wt_full[..geom.cin * krow];
+        gemm::pack_wt_flip_u8_pa(pw.data.data(), pw.bits, geom, keep, wt_buf);
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                keep,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32_sel(sel, wt_buf, zw, col, ze, init, geom.cin, krow, n, acc);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, false);
+        }
+    }
+
+    ops.int_macs += kc as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + pw.len() + geom.cin * n) as u64;
+    out
+}
+
+/// Packed-weight twin of [`qconv2d_bwd_input_gemm_fused_sel`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_fused_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(e.qp.scale, pw.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu: false,
+    };
+    let kc = kept_count(keep, geom.cout);
+    let krow = kc * geom.kh * geom.kw;
+    let n = in_h * in_w;
+    let pointwise_dense = geom.is_pointwise() && keep.is_none();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (wt_full, col_buf, _, init) = scratch.qconv_bwd_bufs(
+            geom.cin * geom.cout * geom.kh * geom.kw,
+            if pointwise_dense { 0 } else { krow * n },
+            0,
+            geom.cin,
+        );
+        let wt_buf = &mut wt_full[..geom.cin * krow];
+        gemm::pack_wt_flip_u8_pa(pw.data.data(), pw.bits, geom, keep, wt_buf);
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                keep,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32_fused_sel(
+            sel,
+            wt_buf,
+            zw,
+            col,
+            ze,
+            init,
+            geom.cin,
+            krow,
+            n,
+            &epi,
+            out.values.data_mut(),
+            None,
+        );
+    }
+
+    ops.int_macs += kc as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + pw.len() + geom.cin * n) as u64;
+    out
+}
+
+/// Packed-weight twin of [`qconv2d_bwd_input_gemm_packed_sel`]: the
+/// plan-owned flip-transpose pack is itself stored packed at `bits`
+/// (flipped *before* packing, so a plain lane unpack restores the flipped
+/// layout). The whole pack is unpacked into the `wq_u8` scratch span —
+/// distinct from the backward lane buffers — and the GEMM runs on it
+/// unchanged. `pw` supplies quantization parameters and byte accounting.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_packed_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    wt_pack: &[u8],
+    bits: WBits,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, pw.qp.scale, out_qp.scale);
+    let krow = geom.cout * geom.kh * geom.kw;
+    let wt_lanes = geom.cin * krow;
+    assert_eq!(wt_pack.len(), bits.packed_len(wt_lanes), "packed weight size");
+    let n = in_h * in_w;
+    let pointwise_dense = geom.is_pointwise();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (wq, col_buf, acc, init) = scratch.qconv_bwd_pa_bufs(
+            wt_lanes,
+            if pointwise_dense { 0 } else { krow * n },
+            geom.cin * n,
+            geom.cin,
+        );
+        simd::unpack_lanes_sel(sel, wt_pack, wt_lanes, bits, wq);
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                None,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32_sel(sel, wq, zw, col, ze, init, geom.cin, krow, n, acc);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, false);
+        }
+    }
+
+    ops.int_macs += geom.cout as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + pw.len() + geom.cin * n) as u64;
+    out
+}
+
+/// Packed-weight twin of [`qconv2d_bwd_input_gemm_packed_fused_sel`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_bwd_input_gemm_packed_fused_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    wt_pack: &[u8],
+    bits: WBits,
+    geom: &ConvGeom,
+    in_h: usize,
+    in_w: usize,
+    out_qp: QParams,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    assert!(!geom.depthwise, "GEMM path does not cover depthwise convolutions");
+    let (oh, ow) = (e.shape()[1], e.shape()[2]);
+    let ze = e.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(e.qp.scale, pw.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu: false,
+    };
+    let krow = geom.cout * geom.kh * geom.kw;
+    let wt_lanes = geom.cin * krow;
+    assert_eq!(wt_pack.len(), bits.packed_len(wt_lanes), "packed weight size");
+    let n = in_h * in_w;
+    let pointwise_dense = geom.is_pointwise();
+
+    let mut out = QTensor::zeros(&[geom.cin, in_h, in_w], out_qp);
+    {
+        let (wq, col_buf, _, init) = scratch.qconv_bwd_pa_bufs(
+            wt_lanes,
+            if pointwise_dense { 0 } else { krow * n },
+            0,
+            geom.cin,
+        );
+        simd::unpack_lanes_sel(sel, wt_pack, wt_lanes, bits, wq);
+        let col: &[u8] = if pointwise_dense {
+            e.values.data()
+        } else {
+            gemm::im2col_bwd_u8(
+                e.values.data(),
+                oh,
+                ow,
+                geom,
+                in_h,
+                in_w,
+                None,
+                e.qp.qzero(),
+                col_buf,
+            );
+            col_buf
+        };
+        gemm::gemm_u8_i32_fused_sel(
+            sel,
+            wq,
+            zw,
+            col,
+            ze,
+            init,
+            geom.cin,
+            krow,
+            n,
+            &epi,
+            out.values.data_mut(),
+            None,
+        );
+    }
+
+    ops.int_macs += geom.cout as u64 * (oh * ow * geom.cin * geom.kh * geom.kw) as u64;
+    ops.int_ops += (geom.cin * n) as u64;
+    ops.bytes += (e.len() + pw.len() + geom.cin * n) as u64;
+    out
+}
+
 /// Weight gradient (Eq. 2) in float: `∇W = (s_e · s_x) · Σ (e−z_e)(x−z_x)`.
 /// Per the paper, the gradient is *not* requantized — the SGD step (Eq. 5)
 /// consumes it in float space. Returns `(grad_w [Cout,Cf,Kh,Kw], grad_b
@@ -1599,6 +2035,190 @@ mod tests {
             );
             assert_eq!(pu.values.data(), pf.values.data(), "packed bwd_input values");
             assert_eq!(ops_pu, ops_pf, "packed bwd_input op accounting");
+        }
+    }
+
+    /// Every `_pa_sel` kernel must be bit-identical to its u8 twin running
+    /// on the allocating unpack (`PackedQTensor::to_qtensor`) of the same
+    /// packed weights — at every width, including the pointwise shortcut
+    /// and masked backward rows — with identical op accounting.
+    #[test]
+    fn packed_conv_paths_bit_exact_with_u8_twin() {
+        let mut rng = Pcg32::seeded(33);
+        let mut scratch = crate::memplan::Scratch::new();
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        for &(cin, cout, k, stride, h, relu) in
+            &[(3usize, 5usize, 3usize, 1usize, 7usize, true), (8, 6, 1, 1, 6, false)]
+        {
+            let g = ConvGeom {
+                cin,
+                cout,
+                kh: k,
+                kw: k,
+                stride,
+                pad_h: k / 2,
+                pad_w: k / 2,
+                depthwise: false,
+            };
+            let (x, wt, b) = rand_setup(&mut rng, &g, h, h);
+            let xq = QTensor::quantize(&x);
+            let (oh, ow) = g.out_hw(h, h);
+            let mut e = TensorF32::zeros(&[cout, oh, ow]);
+            rng.fill_normal(e.data_mut(), 1.0);
+            let eq = QTensor::quantize(&e);
+
+            for bits in [WBits::W8, WBits::W4, WBits::W2] {
+                let pw = PackedQTensor::quantize_bits(&wt, bits);
+                let wq = pw.to_qtensor();
+                let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+
+                // forward, unfused + fused (with dequant emission + sat)
+                let mut ops_a = OpCounter::new();
+                let mut ops_b = OpCounter::new();
+                let ya =
+                    qconv2d_fwd_gemm(&xq, &wq, &bq, &g, oqp, relu, &mut scratch, &mut ops_a);
+                let yb = qconv2d_fwd_gemm_pa_sel(
+                    KernelSel::Auto,
+                    &xq,
+                    &pw,
+                    &bq,
+                    &g,
+                    oqp,
+                    relu,
+                    &mut scratch,
+                    &mut ops_b,
+                );
+                assert_eq!(ya.values.data(), yb.values.data(), "fwd {bits:?}");
+                assert_eq!(ops_a, ops_b, "fwd ops {bits:?}");
+
+                let mut deq_a = vec![0f32; ya.len()];
+                let mut deq_b = vec![0f32; ya.len()];
+                let mut ops_fa = OpCounter::new();
+                let mut ops_fb = OpCounter::new();
+                let (yfa, sat_a) = qconv2d_fwd_gemm_fused(
+                    &xq,
+                    &wq,
+                    &bq,
+                    &g,
+                    oqp,
+                    relu,
+                    Some(&mut deq_a),
+                    &mut scratch,
+                    &mut ops_fa,
+                );
+                let (yfb, sat_b) = qconv2d_fwd_gemm_fused_pa_sel(
+                    KernelSel::Auto,
+                    &xq,
+                    &pw,
+                    &bq,
+                    &g,
+                    oqp,
+                    relu,
+                    Some(&mut deq_b),
+                    &mut scratch,
+                    &mut ops_fb,
+                );
+                assert_eq!(yfa.values.data(), yfb.values.data(), "fused fwd {bits:?}");
+                assert_eq!(sat_a, sat_b, "fused sat {bits:?}");
+                assert_eq!(ops_fa, ops_fb, "fused fwd ops {bits:?}");
+                for (a, bv) in deq_a.iter().zip(deq_b.iter()) {
+                    assert_eq!(a.to_bits(), bv.to_bits(), "dequant emit {bits:?}");
+                }
+
+                // backward input, dense + masked, unfused + fused
+                for keep in
+                    [None, Some((0..cout).map(|i| i % 2 == 0).collect::<Vec<bool>>())]
+                {
+                    let keep = keep.as_deref();
+                    let mut ops_ba = OpCounter::new();
+                    let mut ops_bb = OpCounter::new();
+                    let ea = qconv2d_bwd_input_gemm(
+                        &eq, &wq, &g, h, h, oqp, keep, &mut scratch, &mut ops_ba,
+                    );
+                    let eb = qconv2d_bwd_input_gemm_pa_sel(
+                        KernelSel::Auto,
+                        &eq,
+                        &pw,
+                        &g,
+                        h,
+                        h,
+                        oqp,
+                        keep,
+                        &mut scratch,
+                        &mut ops_bb,
+                    );
+                    assert_eq!(ea.values.data(), eb.values.data(), "bwd {bits:?}");
+                    assert_eq!(ops_ba, ops_bb, "bwd ops {bits:?}");
+
+                    let mut ops_fba = OpCounter::new();
+                    let mut ops_fbb = OpCounter::new();
+                    let efa = qconv2d_bwd_input_gemm_fused(
+                        &eq, &wq, &g, h, h, oqp, keep, &mut scratch, &mut ops_fba,
+                    );
+                    let efb = qconv2d_bwd_input_gemm_fused_pa_sel(
+                        KernelSel::Auto,
+                        &eq,
+                        &pw,
+                        &g,
+                        h,
+                        h,
+                        oqp,
+                        keep,
+                        &mut scratch,
+                        &mut ops_fbb,
+                    );
+                    assert_eq!(efa.values.data(), efb.values.data(), "fused bwd {bits:?}");
+                    assert_eq!(ops_fba, ops_fbb, "fused bwd ops {bits:?}");
+                }
+
+                // cached flipped pack: u8 cache vs sub-byte cache (flipped
+                // before packing, so lane order survives the storage width)
+                let krow = cout * k * k;
+                let mut flip = vec![0u8; cin * krow];
+                gemm::pack_wt_flip_u8(wq.values.data(), &g, None, &mut flip);
+                let packed_flip = crate::quant::subbyte::pack_lanes(&flip, bits);
+                let mut ops_pa = OpCounter::new();
+                let mut ops_pb = OpCounter::new();
+                let pa = qconv2d_bwd_input_gemm_packed(
+                    &eq, &wq, &flip, &g, h, h, oqp, &mut scratch, &mut ops_pa,
+                );
+                let pb = qconv2d_bwd_input_gemm_packed_pa_sel(
+                    KernelSel::Auto,
+                    &eq,
+                    &pw,
+                    &packed_flip,
+                    bits,
+                    &g,
+                    h,
+                    h,
+                    oqp,
+                    &mut scratch,
+                    &mut ops_pb,
+                );
+                assert_eq!(pa.values.data(), pb.values.data(), "cached bwd {bits:?}");
+                assert_eq!(ops_pa, ops_pb, "cached bwd ops {bits:?}");
+
+                let mut ops_qa = OpCounter::new();
+                let mut ops_qb = OpCounter::new();
+                let qa = qconv2d_bwd_input_gemm_packed_fused(
+                    &eq, &wq, &flip, &g, h, h, oqp, &mut scratch, &mut ops_qa,
+                );
+                let qb = qconv2d_bwd_input_gemm_packed_fused_pa_sel(
+                    KernelSel::Auto,
+                    &eq,
+                    &pw,
+                    &packed_flip,
+                    bits,
+                    &g,
+                    h,
+                    h,
+                    oqp,
+                    &mut scratch,
+                    &mut ops_qb,
+                );
+                assert_eq!(qa.values.data(), qb.values.data(), "cached fused bwd {bits:?}");
+                assert_eq!(ops_qa, ops_qb, "cached fused bwd ops {bits:?}");
+            }
         }
     }
 

@@ -9,9 +9,10 @@
 //! The sparse-update "structures" of a linear layer are its output rows
 //! (paper §III-B: rows/columns); `keep` masks whole rows.
 
-use crate::kernels::simd::KernelSel;
+use crate::kernels::simd::{self, KernelSel};
 use crate::kernels::{gemm, kept_count, OpCounter};
 use crate::memplan::Scratch;
+use crate::quant::subbyte::PackedQTensor;
 use crate::quant::{requant_multiplier, requantize, QParams, QTensor};
 use crate::tensor::TensorF32;
 
@@ -296,6 +297,220 @@ pub fn qlinear_bwd_input_gemm_fused_sel(
             ecopy,
             ze,
             w.values.data(),
+            zw,
+            init,
+            1,
+            n_out,
+            n_in,
+            &epi,
+            out.values.data_mut(),
+            None,
+        );
+    }
+
+    ops.int_macs += kept * n_in as u64;
+    ops.int_ops += n_in as u64;
+    ops.bytes += (n_out + n_out * n_in + n_in) as u64;
+    out
+}
+
+// ---- packed sub-byte weight twins (`quant::subbyte`) ----------------------
+//
+// Same contract as the conv twins (`kernels::qconv`): weights arrive as a
+// [`PackedQTensor`], lanes are unpacked into scratch in one panel pass and
+// the existing GEMM core runs unchanged — bit-identical to the u8 kernel on
+// `pw.to_qtensor()`, op accounting on the logical lane count. The forward
+// uses the A-side panel unpack of [`gemm::gemm_u8_i32_pa_sel`]; the
+// backward-input GEMM consumes `w` as its **B operand** (`e_in = eᵀ·W`), so
+// the whole weight matrix is unpacked into the `wq_u8` scratch span before
+// the call. Unlike the u8 forwards, the packed forwards take a `Scratch` —
+// the lane buffer has to live somewhere, and the plan-owned arena is where
+// every other transient of the engine lives.
+
+/// Packed-weight twin of [`qlinear_fwd_sel`].
+#[allow(clippy::too_many_arguments)]
+pub fn qlinear_fwd_pa_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    pw: &PackedQTensor,
+    bias: &[i32],
+    out_qp: QParams,
+    relu: bool,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let n_in = x.len();
+    let n_out = pw.shape()[0];
+    assert_eq!(pw.shape()[1], n_in, "weight/input dims mismatch");
+    assert_eq!(bias.len(), n_out);
+
+    let zx = x.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let mult = requant_multiplier(x.qp.scale, pw.qp.scale, out_qp.scale);
+
+    let mut out = QTensor::zeros(&[n_out], out_qp);
+    {
+        let (wq, _, acc) = scratch.qconv_pa_bufs(n_out * n_in, 0, n_out);
+        gemm::gemm_u8_i32_pa_sel(
+            sel,
+            pw.data.data(),
+            pw.bits,
+            wq,
+            zw,
+            x.values.data(),
+            zx,
+            bias,
+            n_out,
+            n_in,
+            1,
+            acc,
+        );
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, relu);
+        }
+    }
+
+    ops.int_macs += (n_out * n_in) as u64;
+    ops.int_ops += n_out as u64;
+    ops.bytes += (n_in + n_out * n_in + n_out) as u64;
+    out
+}
+
+/// Packed-weight twin of [`qlinear_fwd_fused_sel`].
+#[allow(clippy::too_many_arguments)]
+pub fn qlinear_fwd_fused_pa_sel(
+    sel: KernelSel,
+    x: &QTensor,
+    pw: &PackedQTensor,
+    bias: &[i32],
+    out_qp: QParams,
+    relu: bool,
+    dequant: Option<&mut [f32]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> (QTensor, u64) {
+    let n_in = x.len();
+    let n_out = pw.shape()[0];
+    assert_eq!(pw.shape()[1], n_in, "weight/input dims mismatch");
+    assert_eq!(bias.len(), n_out);
+
+    let zx = x.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(x.qp.scale, pw.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu,
+    };
+
+    let mut out = QTensor::zeros(&[n_out], out_qp);
+    let sat;
+    {
+        let (wq, _, _) = scratch.qconv_pa_bufs(n_out * n_in, 0, 0);
+        sat = gemm::gemm_u8_i32_fused_pa_sel(
+            sel,
+            pw.data.data(),
+            pw.bits,
+            wq,
+            zw,
+            x.values.data(),
+            zx,
+            bias,
+            n_out,
+            n_in,
+            1,
+            &epi,
+            out.values.data_mut(),
+            dequant,
+        );
+    }
+
+    ops.int_macs += (n_out * n_in) as u64;
+    ops.int_ops += n_out as u64;
+    ops.bytes += (n_in + n_out * n_in + n_out) as u64;
+    (out, sat)
+}
+
+/// Packed-weight twin of [`qlinear_bwd_input_gemm_sel`]: `w` is the GEMM's
+/// B operand here, so the whole matrix is unpacked into the `wq_u8` span
+/// (the masked `e` copy still lives in the backward column buffer).
+pub fn qlinear_bwd_input_gemm_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let n_out = e.len();
+    let n_in = pw.shape()[1];
+    assert_eq!(pw.shape()[0], n_out);
+    let ze = e.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let mult = requant_multiplier(e.qp.scale, pw.qp.scale, out_qp.scale);
+    let kept = kept_count(keep, n_out) as u64;
+
+    let mut out = QTensor::zeros(&[n_in], out_qp);
+    {
+        let (wq, ecopy, acc, init) = scratch.qconv_bwd_pa_bufs(n_out * n_in, n_out, n_in, 1);
+        simd::unpack_lanes_sel(sel, pw.data.data(), n_out * n_in, pw.bits, wq);
+        let zq = e.qp.qzero();
+        for (dst, (i, &src)) in ecopy.iter_mut().zip(e.values.data().iter().enumerate()) {
+            *dst = match keep {
+                Some(k) if !k[i] => zq,
+                _ => src,
+            };
+        }
+        gemm::gemm_u8_i32_sel(sel, ecopy, ze, wq, zw, init, 1, n_out, n_in, acc);
+        for (o, &a) in out.values.data_mut().iter_mut().zip(acc.iter()) {
+            *o = requantize(a, mult, out_qp.zero_point, false);
+        }
+    }
+
+    ops.int_macs += kept * n_in as u64;
+    ops.int_ops += n_in as u64;
+    ops.bytes += (n_out + n_out * n_in + n_in) as u64;
+    out
+}
+
+/// Packed-weight twin of [`qlinear_bwd_input_gemm_fused_sel`].
+pub fn qlinear_bwd_input_gemm_fused_pa_sel(
+    sel: KernelSel,
+    e: &QTensor,
+    pw: &PackedQTensor,
+    out_qp: QParams,
+    keep: Option<&[bool]>,
+    scratch: &mut Scratch,
+    ops: &mut OpCounter,
+) -> QTensor {
+    let n_out = e.len();
+    let n_in = pw.shape()[1];
+    assert_eq!(pw.shape()[0], n_out);
+    let ze = e.qp.zero_point;
+    let zw = pw.qp.zero_point;
+    let epi = gemm::QEpilogue {
+        mult: requant_multiplier(e.qp.scale, pw.qp.scale, out_qp.scale),
+        qp: out_qp,
+        relu: false,
+    };
+    let kept = kept_count(keep, n_out) as u64;
+
+    let mut out = QTensor::zeros(&[n_in], out_qp);
+    {
+        let (wq, ecopy, _, init) = scratch.qconv_bwd_pa_bufs(n_out * n_in, n_out, 0, 1);
+        simd::unpack_lanes_sel(sel, pw.data.data(), n_out * n_in, pw.bits, wq);
+        let zq = e.qp.qzero();
+        for (dst, (i, &src)) in ecopy.iter_mut().zip(e.values.data().iter().enumerate()) {
+            *dst = match keep {
+                Some(k) if !k[i] => zq,
+                _ => src,
+            };
+        }
+        gemm::gemm_u8_i32_fused_sel(
+            sel,
+            ecopy,
+            ze,
+            wq,
             zw,
             init,
             1,
@@ -629,6 +844,104 @@ mod tests {
                     qlinear_bwd_input_gemm_fused(&eq, &wq, oqp, keep, &mut scratch, &mut ops_f);
                 assert_eq!(eu.values.data(), ef.values.data());
                 assert_eq!(ops_u, ops_f);
+            }
+        }
+    }
+
+    /// Every `_pa_sel` kernel must be bit-identical to its u8 twin running
+    /// on `PackedQTensor::to_qtensor` of the same packed weights, at every
+    /// width and mask, with identical op accounting.
+    #[test]
+    fn packed_linear_paths_bit_exact_with_u8_twin() {
+        use crate::quant::subbyte::WBits;
+        let mut rng = Pcg32::seeded(91);
+        let mut scratch = crate::memplan::Scratch::new();
+        let oqp = QParams::from_min_max(-2.0, 2.0);
+        for &(n_in, n_out, relu) in &[(32usize, 10usize, true), (17, 23, false), (1, 1, true)] {
+            let (x, w, b) = rand_case(&mut rng, n_in, n_out);
+            let xq = QTensor::quantize(&x);
+            let mut e = TensorF32::zeros(&[n_out]);
+            rng.fill_normal(e.data_mut(), 1.0);
+            let eq = QTensor::quantize(&e);
+
+            for bits in [WBits::W8, WBits::W4, WBits::W2] {
+                let pw = PackedQTensor::quantize_bits(&w, bits);
+                let wq = pw.to_qtensor();
+                let bq = crate::quant::quantize_bias(&b, xq.qp.scale, wq.qp.scale);
+
+                let mut ops_a = OpCounter::new();
+                let mut ops_b = OpCounter::new();
+                let ya = qlinear_fwd(&xq, &wq, &bq, oqp, relu, &mut ops_a);
+                let yb = qlinear_fwd_pa_sel(
+                    KernelSel::Auto,
+                    &xq,
+                    &pw,
+                    &bq,
+                    oqp,
+                    relu,
+                    &mut scratch,
+                    &mut ops_b,
+                );
+                assert_eq!(ya.values.data(), yb.values.data(), "fwd {bits:?}");
+                assert_eq!(ops_a, ops_b, "fwd ops {bits:?}");
+
+                let mut deq_a = vec![0f32; n_out];
+                let mut deq_b = vec![0f32; n_out];
+                let mut ops_fa = OpCounter::new();
+                let mut ops_fb = OpCounter::new();
+                let (yfa, sat_a) =
+                    qlinear_fwd_fused(&xq, &wq, &bq, oqp, relu, Some(&mut deq_a), &mut ops_fa);
+                let (yfb, sat_b) = qlinear_fwd_fused_pa_sel(
+                    KernelSel::Auto,
+                    &xq,
+                    &pw,
+                    &bq,
+                    oqp,
+                    relu,
+                    Some(&mut deq_b),
+                    &mut scratch,
+                    &mut ops_fb,
+                );
+                assert_eq!(yfa.values.data(), yfb.values.data(), "fused fwd {bits:?}");
+                assert_eq!(sat_a, sat_b, "fused sat {bits:?}");
+                assert_eq!(ops_fa, ops_fb, "fused fwd ops {bits:?}");
+                assert_eq!(deq_a, deq_b, "dequant emit {bits:?}");
+
+                for keep in [None, Some((0..n_out).map(|i| i % 2 == 0).collect::<Vec<_>>())] {
+                    let keep = keep.as_deref();
+                    let mut ops_ba = OpCounter::new();
+                    let mut ops_bb = OpCounter::new();
+                    let ea =
+                        qlinear_bwd_input_gemm(&eq, &wq, oqp, keep, &mut scratch, &mut ops_ba);
+                    let eb = qlinear_bwd_input_gemm_pa_sel(
+                        KernelSel::Auto,
+                        &eq,
+                        &pw,
+                        oqp,
+                        keep,
+                        &mut scratch,
+                        &mut ops_bb,
+                    );
+                    assert_eq!(ea.values.data(), eb.values.data(), "bwd {bits:?}");
+                    assert_eq!(ops_ba, ops_bb, "bwd ops {bits:?}");
+
+                    let mut ops_ga = OpCounter::new();
+                    let mut ops_gb = OpCounter::new();
+                    let fa = qlinear_bwd_input_gemm_fused(
+                        &eq, &wq, oqp, keep, &mut scratch, &mut ops_ga,
+                    );
+                    let fb = qlinear_bwd_input_gemm_fused_pa_sel(
+                        KernelSel::Auto,
+                        &eq,
+                        &pw,
+                        oqp,
+                        keep,
+                        &mut scratch,
+                        &mut ops_gb,
+                    );
+                    assert_eq!(fa.values.data(), fb.values.data(), "fused bwd {bits:?}");
+                    assert_eq!(ops_ga, ops_gb, "fused bwd ops {bits:?}");
+                }
             }
         }
     }

@@ -39,6 +39,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
 use super::gemm::{MR, NR};
+use crate::quant::subbyte::{self, WBits};
 
 pub mod tune;
 
@@ -349,6 +350,78 @@ pub(crate) fn axpy_f32(isa: Option<Isa>, acc: &mut [f32], xs: &[f32], wv: f32) {
 }
 
 // ---------------------------------------------------------------------------
+// Sub-byte lane unpacking (packed INT4/INT2 weights -> plain u8 lanes).
+// The vector twin is SWAR — plain u64 word parallelism, no intrinsics —
+// so it compiles on every target; it still sits behind the KernelSel
+// dispatch so TT_KERNEL=scalar pins the per-lane oracle loop exactly
+// like every other kernel pair.
+// ---------------------------------------------------------------------------
+
+/// Spread 4 packed INT4 bytes (8 lanes, LSB-first) into 8 output bytes.
+#[inline(always)]
+fn spread_nibbles(x: u32) -> u64 {
+    let mut t = x as u64;
+    t = (t | (t << 16)) & 0x0000_FFFF_0000_FFFF;
+    t = (t | (t << 8)) & 0x00FF_00FF_00FF_00FF;
+    (t | (t << 4)) & 0x0F0F_0F0F_0F0F_0F0F
+}
+
+/// Spread 2 packed INT2 bytes (8 lanes, LSB-first) into 8 output bytes.
+#[inline(always)]
+fn spread_crumbs(x: u16) -> u64 {
+    let mut t = x as u64;
+    t = (t | (t << 24)) & 0x0000_00FF_0000_00FF;
+    t = (t | (t << 12)) & 0x000F_000F_000F_000F;
+    (t | (t << 6)) & 0x0303_0303_0303_0303
+}
+
+/// Word-parallel (SWAR) unpack of `len` packed sub-byte lanes into
+/// `dst[..len]` — the vector twin of
+/// [`subbyte::unpack_lanes`](crate::quant::subbyte::unpack_lanes),
+/// bit-identical to it by the property suite. Eight lanes are produced
+/// per u64 store; the sub-word tail falls back to per-lane extraction.
+pub fn unpack_lanes_swar(packed: &[u8], len: usize, bits: WBits, dst: &mut [u8]) {
+    assert!(dst.len() >= len, "unpack dst {} too small for {len} lanes", dst.len());
+    let full = len / 8;
+    match bits {
+        WBits::W8 => {
+            dst[..len].copy_from_slice(&packed[..len]);
+            return;
+        }
+        WBits::W4 => {
+            let srcs = packed[..full * 4].chunks_exact(4);
+            for (src, out) in srcs.zip(dst[..full * 8].chunks_exact_mut(8)) {
+                let x = u32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+                out.copy_from_slice(&spread_nibbles(x).to_le_bytes());
+            }
+        }
+        WBits::W2 => {
+            let srcs = packed[..full * 2].chunks_exact(2);
+            for (src, out) in srcs.zip(dst[..full * 8].chunks_exact_mut(8)) {
+                let x = u16::from_le_bytes([src[0], src[1]]);
+                out.copy_from_slice(&spread_crumbs(x).to_le_bytes());
+            }
+        }
+    }
+    for (i, d) in dst[..len].iter_mut().enumerate().skip(full * 8) {
+        *d = subbyte::extract_lane(packed, i, bits);
+    }
+}
+
+/// Dispatching unpack: the entry point the packed-weight (`_pa`) kernel
+/// twins use to materialize u8 lanes ahead of the A-pack. Same layering
+/// as every `_sel` kernel: [`KernelSel::Scalar`] pins the per-lane
+/// oracle, [`KernelSel::Simd`] (or an [`KernelSel::Auto`] resolution to
+/// it) takes the SWAR word path. Both are bit-identical; W8 is a straight
+/// copy on either path.
+pub fn unpack_lanes_sel(sel: KernelSel, packed: &[u8], len: usize, bits: WBits, dst: &mut [u8]) {
+    match resolve_isa(sel, TilePref::Simd) {
+        Some(_) => unpack_lanes_swar(packed, len, bits, dst),
+        None => subbyte::unpack_lanes(packed, len, bits, dst),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Scalar fallbacks for the unreachable-ISA match arms (and non-SIMD
 // architectures). Same loops as the micro-kernels' full-tile branches.
 // ---------------------------------------------------------------------------
@@ -479,6 +552,53 @@ mod tests {
             let rb: Vec<u32> = rf.iter().map(|v| v.to_bits()).collect();
             assert_eq!(sb, rb, "axpy_f32 len {len}");
         }
+    }
+
+    /// The SWAR word unpacker must be bit-identical to the scalar
+    /// per-lane oracle at every width, for lengths straddling every word
+    /// and byte boundary (including the MR/NR±1 edge-tile counts).
+    #[test]
+    fn swar_unpack_matches_scalar_oracle() {
+        let mut rng = Pcg32::seeded(17);
+        for bits in [WBits::W8, WBits::W4, WBits::W2] {
+            for len in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 63, 65, 100] {
+                let packed: Vec<u8> =
+                    (0..bits.packed_len(len)).map(|_| rng.below(256) as u8).collect();
+                let mut swar = vec![0xAAu8; len];
+                let mut scalar = vec![0x55u8; len];
+                unpack_lanes_swar(&packed, len, bits, &mut swar);
+                subbyte::unpack_lanes(&packed, len, bits, &mut scalar);
+                assert_eq!(swar, scalar, "{bits:?} len {len}");
+            }
+        }
+    }
+
+    /// `unpack_lanes_sel` produces identical lanes under every forced
+    /// mode (the dispatch seam itself cannot change values).
+    #[test]
+    fn unpack_sel_is_mode_invariant() {
+        let mut rng = Pcg32::seeded(23);
+        let prev = mode();
+        for bits in [WBits::W4, WBits::W2] {
+            let len = 37;
+            let packed: Vec<u8> = (0..bits.packed_len(len)).map(|_| rng.below(256) as u8).collect();
+            let mut want = vec![0u8; len];
+            subbyte::unpack_lanes(&packed, len, bits, &mut want);
+            for m in [KernelMode::Auto, KernelMode::Scalar, KernelMode::Simd] {
+                set_mode(m);
+                for sel in [KernelSel::Auto, KernelSel::Scalar] {
+                    let mut got = vec![0u8; len];
+                    unpack_lanes_sel(sel, &packed, len, bits, &mut got);
+                    assert_eq!(got, want, "{bits:?} mode {m:?} sel {sel:?}");
+                }
+                if let Some(i) = isa() {
+                    let mut got = vec![0u8; len];
+                    unpack_lanes_sel(KernelSel::Simd(i), &packed, len, bits, &mut got);
+                    assert_eq!(got, want, "{bits:?} mode {m:?} forced simd");
+                }
+            }
+        }
+        set_mode(prev);
     }
 
     #[test]

@@ -45,6 +45,11 @@ pub struct ScratchSpec {
     pub wt_f32: usize,
     pub zeros_i32: usize,
     pub zeros_f32: usize,
+    /// Forward weight-lane span for layers whose weights are stored packed
+    /// sub-byte (`quant::subbyte`): the unpacked u8 lanes the GEMM A-pack
+    /// consumes. Zero for all-u8 plans, so the default deployment's arena
+    /// is unchanged by the packed-weight feature.
+    pub wq_u8: usize,
 }
 
 /// Reusable scratch buffers for the im2col/GEMM conv path.
@@ -69,6 +74,10 @@ pub struct Scratch {
     /// permanently zeroed so borrowing them costs nothing per call).
     zeros_i32: Vec<i32>,
     zeros_f32: Vec<f32>,
+    /// Unpacked forward weight lanes for packed sub-byte layers. Separate
+    /// from `wt_u8` because a backward step can hold the flipped pack and
+    /// unpack forward lanes within the same borrow region.
+    wq_u8: Vec<u8>,
 }
 
 impl Scratch {
@@ -91,6 +100,7 @@ impl Scratch {
         s.wt_f32.resize(spec.wt_f32, 0.0);
         s.zeros_i32.resize(spec.zeros_i32, 0);
         s.zeros_f32.resize(spec.zeros_f32, 0.0);
+        s.wq_u8.resize(spec.wq_u8, 0);
         s
     }
 
@@ -116,6 +126,61 @@ impl Scratch {
             self.acc_i32.resize(acc_len, 0);
         }
         (&mut self.col_u8[..col_len], &mut self.acc_i32[..acc_len])
+    }
+
+    /// Borrow the weight-lane buffer, the u8 im2col buffer and the i32
+    /// accumulator tile for one quantized conv call on *packed sub-byte*
+    /// weights: the lane buffer receives the unpacked u8 weight lanes
+    /// before the GEMM consumes them as its A operand. Growing semantics
+    /// and contents match [`Scratch::qconv_bufs`].
+    pub fn qconv_pa_bufs(
+        &mut self,
+        wq_len: usize,
+        col_len: usize,
+        acc_len: usize,
+    ) -> (&mut [u8], &mut [u8], &mut [i32]) {
+        if self.wq_u8.len() < wq_len {
+            self.wq_u8.resize(wq_len, 0);
+        }
+        if self.col_u8.len() < col_len {
+            self.col_u8.resize(col_len, 0);
+        }
+        if self.acc_i32.len() < acc_len {
+            self.acc_i32.resize(acc_len, 0);
+        }
+        (&mut self.wq_u8[..wq_len], &mut self.col_u8[..col_len], &mut self.acc_i32[..acc_len])
+    }
+
+    /// Borrow the weight-lane buffer alongside the backward GEMM buffers
+    /// for one packed-weight backward-input call: lane buffer, backward
+    /// column matrix, i32 accumulator and zeroed `row_init`. The lane
+    /// buffer is distinct from the `wt_u8` flipped-pack store, so callers
+    /// that hold a plan-owned flipped pack can still unpack lanes here.
+    pub fn qconv_bwd_pa_bufs(
+        &mut self,
+        wq_len: usize,
+        col_len: usize,
+        acc_len: usize,
+        init_len: usize,
+    ) -> (&mut [u8], &mut [u8], &mut [i32], &[i32]) {
+        if self.wq_u8.len() < wq_len {
+            self.wq_u8.resize(wq_len, 0);
+        }
+        if self.col_u8.len() < col_len {
+            self.col_u8.resize(col_len, 0);
+        }
+        if self.acc_i32.len() < acc_len {
+            self.acc_i32.resize(acc_len, 0);
+        }
+        if self.zeros_i32.len() < init_len {
+            self.zeros_i32.resize(init_len, 0);
+        }
+        (
+            &mut self.wq_u8[..wq_len],
+            &mut self.col_u8[..col_len],
+            &mut self.acc_i32[..acc_len],
+            &self.zeros_i32[..init_len],
+        )
     }
 
     /// Borrow the f32 im2col buffer for one float conv call.
@@ -204,6 +269,7 @@ impl Scratch {
     pub fn reserved_bytes(&self) -> usize {
         self.col_u8.len()
             + self.wt_u8.len()
+            + self.wq_u8.len()
             + (self.col_f32.len() + self.wt_f32.len()) * 4
             + (self.acc_i32.len() + self.zeros_i32.len() + self.zeros_f32.len()) * 4
     }
@@ -572,15 +638,18 @@ mod tests {
             wt_f32: 2,
             zeros_i32: 5,
             zeros_f32: 1,
+            wq_u8: 7,
         };
         let s = Scratch::for_spec(&spec);
-        assert_eq!(s.reserved_bytes(), 10 + 3 + (4 + 2) * 4 + (6 + 5 + 1) * 4);
+        assert_eq!(s.reserved_bytes(), 10 + 3 + 7 + (4 + 2) * 4 + (6 + 5 + 1) * 4);
         // serving requests within the spec must not grow the arena
         let mut s2 = s.clone();
         let before = s2.reserved_bytes();
         let _ = s2.qconv_bufs(10, 6);
         let _ = s2.qconv_bwd_bufs(3, 10, 6, 5);
         let _ = s2.fconv_bwd_bufs(2, 4, 1);
+        let _ = s2.qconv_pa_bufs(7, 10, 6);
+        let _ = s2.qconv_bwd_pa_bufs(7, 10, 6, 5);
         assert_eq!(s2.reserved_bytes(), before);
     }
 

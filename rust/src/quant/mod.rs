@@ -13,6 +13,7 @@
 //! paths (verified by `rust/tests/xla_cross_validation.rs`).
 
 pub mod observer;
+pub mod subbyte;
 
 use crate::tensor::{TensorF32, TensorU8};
 

@@ -1,0 +1,413 @@
+//! Packed sub-byte weight tensors (INT4 / INT2 lanes in a byte).
+//!
+//! The memory-driven mixed-precision direction of Rusci et al. applied to
+//! this repo's FQT loop: weights may be held at 8, 4 or 2 bits per lane,
+//! packed little-endian within each byte, and unpacked to plain `u8`
+//! lanes immediately before the micro-kernel A-pack. An unpacked lane is
+//! an ordinary affine-quantized value in `[0, qmax]` ⊂ `[0, 255]`, so
+//! every existing u8 kernel consumes it unchanged (the kernels only ever
+//! subtract the zero point) — which is what makes the packed-8 path
+//! bit-identical to the retained [`QTensor`] oracle.
+//!
+//! Byte layout (LSB-first): lane `i` lives in byte `i / L` at bit offset
+//! `(i % L) * bits`, where `L = 8 / bits` is the lanes-per-byte count.
+//! For INT4, byte `b = lane1 << 4 | lane0`; for INT2,
+//! `b = lane3 << 6 | lane2 << 4 | lane1 << 2 | lane0`. The final byte of
+//! an odd-length tensor is zero-padded in its high lanes. The same layout
+//! is consumed lane-parallel by the SWAR word unpacker in
+//! [`kernels::simd`](crate::kernels::simd).
+//!
+//! Quantization at reduced width reuses the affine scheme verbatim with
+//! `qmax = 2^bits - 1` in place of 255 (see
+//! [`QParams::from_min_max_bits`]); at 8 bits the arithmetic is
+//! *identical* to [`QParams::from_min_max`], which the tests pin down.
+
+use crate::quant::{QParams, QTensor};
+use crate::tensor::{TensorF32, TensorU8};
+
+/// Per-tensor weight storage width. `W8` is the compatibility width: a
+/// packed-8 tensor holds exactly the bytes its [`QTensor`] twin would.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum WBits {
+    /// One lane per byte — bit-identical to the u8 oracle path.
+    W8,
+    /// Two lanes per byte (`qmax = 15`), halving weight memory.
+    W4,
+    /// Four lanes per byte (`qmax = 3`), quartering weight memory.
+    W2,
+}
+
+impl WBits {
+    /// Bits per lane (8 / 4 / 2).
+    #[inline(always)]
+    pub fn bits(self) -> u32 {
+        match self {
+            WBits::W8 => 8,
+            WBits::W4 => 4,
+            WBits::W2 => 2,
+        }
+    }
+
+    /// Lanes stored per byte (1 / 2 / 4).
+    #[inline(always)]
+    pub fn lanes_per_byte(self) -> usize {
+        (8 / self.bits()) as usize
+    }
+
+    /// Largest representable lane value (`2^bits - 1`).
+    #[inline(always)]
+    pub fn qmax(self) -> i32 {
+        (1i32 << self.bits()) - 1
+    }
+
+    /// Packed byte count for `len` logical lanes (final byte zero-padded).
+    #[inline(always)]
+    pub fn packed_len(self, len: usize) -> usize {
+        len.div_ceil(self.lanes_per_byte())
+    }
+
+    /// One demotion step on the 8 → 4 → 2 ladder (`None` below 2).
+    pub fn demote(self) -> Option<WBits> {
+        match self {
+            WBits::W8 => Some(WBits::W4),
+            WBits::W4 => Some(WBits::W2),
+            WBits::W2 => None,
+        }
+    }
+
+    /// Parse a `TT_WBITS`-style value ("8" / "4" / "2").
+    pub fn parse(s: &str) -> Option<WBits> {
+        match s.trim() {
+            "8" => Some(WBits::W8),
+            "4" => Some(WBits::W4),
+            "2" => Some(WBits::W2),
+            _ => None,
+        }
+    }
+}
+
+/// Extract logical lane `i` from a packed byte slice.
+#[inline(always)]
+pub fn extract_lane(packed: &[u8], i: usize, bits: WBits) -> u8 {
+    let lanes = bits.lanes_per_byte();
+    let shift = (i % lanes) as u32 * bits.bits();
+    let mask = bits.qmax() as u8;
+    (packed[i / lanes] >> shift) & mask
+}
+
+/// Pack `lanes` (each must already be ≤ `qmax`) into bytes, LSB-first.
+pub fn pack_lanes(lanes: &[u8], bits: WBits) -> Vec<u8> {
+    let per = bits.lanes_per_byte();
+    let mask = bits.qmax() as u8;
+    let mut out = vec![0u8; bits.packed_len(lanes.len())];
+    for (i, &v) in lanes.iter().enumerate() {
+        debug_assert!(v <= mask, "lane {i} value {v} exceeds {bits:?} qmax {mask}");
+        out[i / per] |= (v & mask) << ((i % per) as u32 * bits.bits());
+    }
+    out
+}
+
+/// Scalar unpack of `len` lanes into `dst` (the bit-exactness oracle for
+/// the SWAR word unpacker in `kernels::simd`).
+pub fn unpack_lanes(packed: &[u8], len: usize, bits: WBits, dst: &mut [u8]) {
+    assert!(dst.len() >= len, "unpack dst {} too small for {len} lanes", dst.len());
+    if bits == WBits::W8 {
+        dst[..len].copy_from_slice(&packed[..len]);
+        return;
+    }
+    let per = bits.lanes_per_byte();
+    let shift = bits.bits();
+    let mask = bits.qmax() as u8;
+    for (b, chunk) in dst[..len].chunks_mut(per).enumerate() {
+        let mut byte = packed[b];
+        for d in chunk.iter_mut() {
+            *d = byte & mask;
+            byte >>= shift;
+        }
+    }
+}
+
+impl QParams {
+    /// [`QParams::from_min_max`] generalized to a reduced lane width:
+    /// `qmax = 2^bits - 1` replaces 255 in both the scale and the
+    /// zero-point clamp. At [`WBits::W8`] the arithmetic is identical to
+    /// `from_min_max` (pinned by test), so packed-8 deployments derive
+    /// bit-identical parameters to the u8 oracle.
+    pub fn from_min_max_bits(fmin: f32, fmax: f32, bits: WBits) -> QParams {
+        let qmax = bits.qmax();
+        let fmin = fmin.min(0.0);
+        let fmax = fmax.max(0.0);
+        let span = (fmax - fmin).max(1e-8);
+        let scale = span / qmax as f32;
+        let zero_point = (-fmin / scale).round().clamp(0.0, qmax as f32) as i32;
+        QParams { scale, zero_point }
+    }
+
+    /// Quantize one value at a reduced lane width (clamp to `[0, qmax]`
+    /// instead of `[0, 255]`). At [`WBits::W8`] this equals
+    /// [`QParams::quantize`].
+    #[inline(always)]
+    pub fn quantize_bits(&self, f: f32, bits: WBits) -> u8 {
+        ((f / self.scale).round() as i32 + self.zero_point).clamp(0, bits.qmax()) as u8
+    }
+}
+
+/// A quantized tensor stored packed at a sub-byte lane width: the
+/// [`QTensor`] twin for demoted layers. `shape`/`len` describe the
+/// *logical* lane grid; `data` holds `bits.packed_len(len)` bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedQTensor {
+    shape: Vec<usize>,
+    len: usize,
+    pub bits: WBits,
+    /// Packed payload (Arc-backed copy-on-write, like every tensor).
+    pub data: TensorU8,
+    pub qp: QParams,
+}
+
+impl PackedQTensor {
+    /// Quantize a float tensor at `bits` using the provided parameters
+    /// (the optimizer's quantize-on-write entry point).
+    pub fn quantize_with_bits(t: &TensorF32, qp: QParams, bits: WBits) -> PackedQTensor {
+        let lanes: Vec<u8> = t.data().iter().map(|&f| qp.quantize_bits(f, bits)).collect();
+        PackedQTensor::from_lanes(t.shape(), &lanes, qp, bits)
+    }
+
+    /// Quantize a float tensor at `bits` with freshly observed parameters.
+    pub fn quantize_bits(t: &TensorF32, bits: WBits) -> PackedQTensor {
+        let (lo, hi) = crate::util::stats::min_max(t.data());
+        PackedQTensor::quantize_with_bits(t, QParams::from_min_max_bits(lo, hi, bits), bits)
+    }
+
+    /// Pack already-quantized lanes (each ≤ `qmax`).
+    pub fn from_lanes(shape: &[usize], lanes: &[u8], qp: QParams, bits: WBits) -> PackedQTensor {
+        assert_eq!(shape.iter().product::<usize>(), lanes.len());
+        let packed = pack_lanes(lanes, bits);
+        PackedQTensor {
+            shape: shape.to_vec(),
+            len: lanes.len(),
+            bits,
+            data: TensorU8::from_vec(&[packed.len()], packed),
+            qp,
+        }
+    }
+
+    /// Zero-filled (at the zero point) packed tensor.
+    pub fn zeros(shape: &[usize], qp: QParams, bits: WBits) -> PackedQTensor {
+        let n: usize = shape.iter().product();
+        let z = qp.zero_point.clamp(0, bits.qmax()) as u8;
+        PackedQTensor::from_lanes(shape, &vec![z; n], qp, bits)
+    }
+
+    /// Logical lane grid shape (what the kernels see after unpack).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Logical lane count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Stored byte count — the number that weight-memory accounting
+    /// reports (`len / lanes_per_byte`, rounded up).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Scalar-unpack all lanes into `dst[..len]`.
+    pub fn unpack_into(&self, dst: &mut [u8]) {
+        unpack_lanes(self.data.data(), self.len, self.bits, dst);
+    }
+
+    /// Allocating unpack to the u8 twin (the cold oracle path: the
+    /// reference executor unpacks once, then runs the unchanged u8
+    /// kernels).
+    pub fn to_qtensor(&self) -> QTensor {
+        let mut lanes = vec![0u8; self.len];
+        self.unpack_into(&mut lanes);
+        QTensor { values: TensorU8::from_vec(&self.shape, lanes), qp: self.qp }
+    }
+
+    /// Dequantize to float (via the lane values; the qp applies
+    /// unchanged because lanes are ordinary affine-quantized values).
+    pub fn dequantize(&self) -> TensorF32 {
+        let packed = self.data.data();
+        let out: Vec<f32> =
+            (0..self.len).map(|i| self.qp.dequantize(extract_lane(packed, i, self.bits))).collect();
+        TensorF32::from_vec(&self.shape, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::{shrink_dim, Prop};
+
+    const ALL: [WBits; 3] = [WBits::W8, WBits::W4, WBits::W2];
+
+    #[test]
+    fn widths_and_capacities() {
+        assert_eq!(WBits::W8.lanes_per_byte(), 1);
+        assert_eq!(WBits::W4.lanes_per_byte(), 2);
+        assert_eq!(WBits::W2.lanes_per_byte(), 4);
+        assert_eq!(WBits::W8.qmax(), 255);
+        assert_eq!(WBits::W4.qmax(), 15);
+        assert_eq!(WBits::W2.qmax(), 3);
+        assert_eq!(WBits::W4.packed_len(7), 4);
+        assert_eq!(WBits::W2.packed_len(7), 2);
+        assert_eq!(WBits::W8.packed_len(7), 7);
+        assert_eq!(WBits::W2.packed_len(0), 0);
+        assert_eq!(WBits::W8.demote(), Some(WBits::W4));
+        assert_eq!(WBits::W4.demote(), Some(WBits::W2));
+        assert_eq!(WBits::W2.demote(), None);
+    }
+
+    #[test]
+    fn parse_accepts_only_supported_widths() {
+        assert_eq!(WBits::parse("8"), Some(WBits::W8));
+        assert_eq!(WBits::parse(" 4 "), Some(WBits::W4));
+        assert_eq!(WBits::parse("2"), Some(WBits::W2));
+        for junk in ["1", "3", "16", "0", "", "four", "w4"] {
+            assert_eq!(WBits::parse(junk), None, "{junk:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn int4_byte_layout_is_lsb_first() {
+        // lanes [a, b] -> byte b<<4 | a
+        let p = pack_lanes(&[0x3, 0xA], WBits::W4);
+        assert_eq!(p, vec![0xA3]);
+        // INT2 lanes [a,b,c,d] -> d<<6 | c<<4 | b<<2 | a
+        let p2 = pack_lanes(&[1, 2, 3, 0], WBits::W2);
+        assert_eq!(p2, vec![0b00_11_10_01]);
+        // odd tail zero-padded in the high lanes
+        let p3 = pack_lanes(&[0xF, 0x1, 0x7], WBits::W4);
+        assert_eq!(p3, vec![0x1F, 0x07]);
+    }
+
+    /// Pack → unpack round-trips at every width, including odd lengths
+    /// and the MR/NR±1 edge-tile counts the micro-kernels produce.
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        Prop::new(128).check(
+            |r: &mut Pcg32| {
+                let bits = ALL[r.below(3) as usize];
+                // bias toward lane-boundary lengths: MR=4, NR=16 tiles ±1
+                let n = match r.below(4) {
+                    0 => [3usize, 5, 15, 17, 63, 65][r.below(6) as usize],
+                    _ => 1 + r.below(97) as usize,
+                };
+                let lanes: Vec<u8> =
+                    (0..n).map(|_| (r.below(bits.qmax() as u32 + 1)) as u8).collect();
+                (bits, lanes)
+            },
+            |&(bits, ref lanes)| {
+                shrink_dim(lanes.len(), 1)
+                    .into_iter()
+                    .map(|m| (bits, lanes[..m].to_vec()))
+                    .collect()
+            },
+            |&(bits, ref lanes)| {
+                let packed = pack_lanes(lanes, bits);
+                if packed.len() != bits.packed_len(lanes.len()) {
+                    return Err(format!("packed {} bytes", packed.len()));
+                }
+                let mut back = vec![0u8; lanes.len()];
+                unpack_lanes(&packed, lanes.len(), bits, &mut back);
+                if &back != lanes {
+                    return Err(format!("{bits:?} roundtrip diverged at n={}", lanes.len()));
+                }
+                for (i, &v) in lanes.iter().enumerate() {
+                    if extract_lane(&packed, i, bits) != v {
+                        return Err(format!("extract_lane({i}) diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// At 8 bits the generalized parameter derivation and quantizer are
+    /// arithmetic-identical to the proven u8 path — the foundation of the
+    /// packed-8 bit-exactness oracle contract.
+    #[test]
+    fn prop_w8_matches_u8_oracle() {
+        Prop::new(96).check(
+            |r: &mut Pcg32| {
+                let a = r.uniform(-8.0, 8.0);
+                let b = r.uniform(-8.0, 8.0);
+                let x = r.uniform(-10.0, 10.0);
+                (a.min(b), a.max(b), x)
+            },
+            |_| vec![],
+            |&(lo, hi, x)| {
+                let qp8 = QParams::from_min_max_bits(lo, hi, WBits::W8);
+                let qp = QParams::from_min_max(lo, hi);
+                if qp8.scale.to_bits() != qp.scale.to_bits() || qp8.zero_point != qp.zero_point {
+                    return Err(format!("params diverged: {qp8:?} vs {qp:?}"));
+                }
+                if qp8.quantize_bits(x, WBits::W8) != qp.quantize(x) {
+                    return Err(format!("quantizer diverged at {x}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn packed8_tensor_matches_qtensor_bytes() {
+        let mut rng = Pcg32::seeded(21);
+        let mut t = TensorF32::zeros(&[3, 5]);
+        rng.fill_normal(t.data_mut(), 1.0);
+        let qp = QParams::observe(t.data());
+        let q = QTensor::quantize_with(&t, qp);
+        let p = PackedQTensor::quantize_with_bits(&t, qp, WBits::W8);
+        assert_eq!(p.data.data(), q.values.data(), "packed-8 payload must equal the u8 oracle");
+        assert_eq!(p.to_qtensor(), q);
+        assert_eq!(p.packed_bytes(), q.len());
+    }
+
+    /// Sub-byte round-trip error is bounded by half a (coarser) step, and
+    /// the packed byte count shrinks by exactly the lane factor.
+    #[test]
+    fn subbyte_quantize_roundtrip_and_size() {
+        let mut rng = Pcg32::seeded(33);
+        let mut t = TensorF32::zeros(&[4, 9]);
+        rng.fill_normal(t.data_mut(), 1.0);
+        for bits in [WBits::W4, WBits::W2] {
+            let p = PackedQTensor::quantize_bits(&t, bits);
+            assert_eq!(p.packed_bytes(), bits.packed_len(t.len()));
+            assert_eq!(p.len(), t.len());
+            let back = p.dequantize();
+            for (a, b) in back.data().iter().zip(t.data()) {
+                assert!(
+                    (a - b).abs() <= 0.5 * p.qp.scale + 1e-6,
+                    "{bits:?}: roundtrip error {} above half-step {}",
+                    (a - b).abs(),
+                    0.5 * p.qp.scale
+                );
+            }
+            // dequantize must agree with the allocating unpack's dequantize
+            let via_q = p.to_qtensor().dequantize();
+            assert_eq!(via_q.data(), back.data());
+        }
+    }
+
+    #[test]
+    fn zeros_is_at_the_zero_point() {
+        for bits in ALL {
+            let qp = QParams::from_min_max_bits(-1.0, 1.0, bits);
+            let z = PackedQTensor::zeros(&[2, 3], qp, bits);
+            assert_eq!(z.len(), 6);
+            for v in z.dequantize().data() {
+                assert!(v.abs() < 1e-6, "{bits:?}: zeros must dequantize to ~0");
+            }
+        }
+    }
+}

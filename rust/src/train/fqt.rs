@@ -24,6 +24,7 @@
 use crate::graph::exec::{BwdResult, LayerParams, NativeModel};
 use crate::graph::Precision;
 use crate::kernels::OpCounter;
+use crate::quant::subbyte::PackedQTensor;
 use crate::quant::{QParams, QTensor};
 use crate::tensor::TensorF32;
 use crate::train::Optimizer;
@@ -136,6 +137,7 @@ impl FqtSgd {
                 }
                 match p {
                     LayerParams::Q { w, bias } => Some(GradBuf::new(w.shape(), bias.len())),
+                    LayerParams::Qp { w, bias } => Some(GradBuf::new(w.shape(), bias.len())),
                     LayerParams::F { w, bias } => Some(GradBuf::new(w.shape(), bias.len())),
                     LayerParams::None => None,
                 }
@@ -158,6 +160,18 @@ impl FqtSgd {
             match (&mut model.state.params[i], model.shared.prec[i]) {
                 (LayerParams::Q { w, bias }, _) => {
                     update_quantized(
+                        w,
+                        bias,
+                        buf,
+                        self.lr,
+                        scale,
+                        self.standardize,
+                        self.adapt_range,
+                        ops,
+                    );
+                }
+                (LayerParams::Qp { w, bias }, _) => {
+                    update_quantized_packed(
                         w,
                         bias,
                         buf,
@@ -229,6 +243,57 @@ fn update_quantized(
     ops.float_ops += (wf.len() * 3) as u64;
     ops.int_ops += wf.len() as u64; // requantization
     ops.bytes += (wf.len() * 5) as u64;
+}
+
+/// [`update_quantized`] twin for packed sub-byte layers: identical descent
+/// and range re-derivation, but the quantization grid spans `2^bits` levels
+/// ([`QParams::from_min_max_bits`]) and the requantized lanes are written
+/// back packed — the quantize-on-write contract that keeps demoted layers
+/// at their planned storage width across the whole training run. At 8-bit
+/// lanes the grid and the written bytes match the [`QTensor`] arm exactly.
+#[allow(clippy::too_many_arguments)]
+fn update_quantized_packed(
+    w: &mut PackedQTensor,
+    bias: &mut [f32],
+    buf: &GradBuf,
+    lr: f32,
+    inv_b: f32,
+    standardize: bool,
+    adapt_range: bool,
+    ops: &mut OpCounter,
+) {
+    let structures = buf.touched.len();
+    let old = w.qp;
+    let bits = w.bits;
+    let mut wf = w.dequantize();
+    let mut fmin = f32::INFINITY;
+    let mut fmax = f32::NEG_INFINITY;
+    for c in 0..structures {
+        let gsrc = buf.gw.outer(c);
+        let dst = wf.outer_mut(c);
+        if buf.touched[c] {
+            let (mu, sd) = if standardize {
+                (buf.mean[c] as f32, buf.std(c))
+            } else {
+                (0.0, 1.0)
+            };
+            for (v, &g) in dst.iter_mut().zip(gsrc.iter()) {
+                let ghat = ((g * inv_b - mu) / sd).clamp(-10.0, 10.0);
+                *v -= lr * ghat;
+            }
+            bias[c] -= lr * buf.gb.data()[c] * inv_b;
+        }
+        for &v in dst.iter() {
+            fmin = fmin.min(v);
+            fmax = fmax.max(v);
+        }
+    }
+    let qp = if adapt_range { QParams::from_min_max_bits(fmin, fmax, bits) } else { old };
+    *w = PackedQTensor::quantize_with_bits(&wf, qp, bits);
+    ops.float_ops += (wf.len() * 3) as u64;
+    ops.int_ops += wf.len() as u64; // requantization
+    // float read-modify-write plus the packed store (== len at 8-bit).
+    ops.bytes += (wf.len() * 4 + w.packed_bytes()) as u64;
 }
 
 /// Float SGD for float-precision layers (the paper's mixed / float32

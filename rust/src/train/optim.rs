@@ -19,6 +19,7 @@
 
 use crate::graph::exec::{BwdResult, LayerParams, NativeModel};
 use crate::kernels::OpCounter;
+use crate::quant::subbyte::PackedQTensor;
 use crate::quant::QTensor;
 use crate::tensor::TensorF32;
 use crate::train::Optimizer;
@@ -61,6 +62,9 @@ impl QOptimizer {
             }
             match p {
                 LayerParams::Q { w, bias } => {
+                    Some((TensorF32::zeros(w.shape()), TensorF32::zeros(&[bias.len()])))
+                }
+                LayerParams::Qp { w, bias } => {
                     Some((TensorF32::zeros(w.shape()), TensorF32::zeros(&[bias.len()])))
                 }
                 LayerParams::F { w, bias } => {
@@ -109,6 +113,31 @@ impl QOptimizer {
                         bias[c] -= self.lr * gbv.data_mut()[c];
                     }
                     *w = QTensor::quantize_with(&wf, qp);
+                    ops.float_ops += (wf.len() * 4) as u64;
+                    ops.int_ops += wf.len() as u64;
+                }
+                LayerParams::Qp { w, bias } => {
+                    // Same frozen-parameter rule, quantize-on-write back
+                    // into the packed representation at the layer's width
+                    // (bit-identical to the Q arm at 8-bit lanes).
+                    let qp = w.qp;
+                    let bits = w.bits;
+                    let gscale = match self.rule {
+                        Rule::QasSgdM => qp.scale * qp.scale,
+                        Rule::SgdM => 1.0,
+                    };
+                    let mut wf = w.dequantize();
+                    for j in 0..wf.len() {
+                        let g = ga.data()[j] * inv_b * gscale;
+                        gv.data_mut()[j] = self.momentum * gv.data()[j] + g;
+                        wf.data_mut()[j] -= self.lr * gv.data()[j];
+                    }
+                    for c in 0..bias.len() {
+                        let g = gba.data()[c] * inv_b;
+                        gbv.data_mut()[c] = self.momentum * gbv.data()[c] + g;
+                        bias[c] -= self.lr * gbv.data_mut()[c];
+                    }
+                    *w = PackedQTensor::quantize_with_bits(&wf, qp, bits);
                     ops.float_ops += (wf.len() * 4) as u64;
                     ops.int_ops += wf.len() as u64;
                 }

@@ -143,6 +143,10 @@ fn quantized_weight_snapshot(m: &tinytrain::graph::exec::NativeModel) -> (Vec<u8
                 wbits.extend_from_slice(w.values.data());
                 bbits.extend(bias.iter().map(|b| b.to_bits()));
             }
+            LayerParams::Qp { w, bias } => {
+                wbits.extend_from_slice(w.data.data());
+                bbits.extend(bias.iter().map(|b| b.to_bits()));
+            }
             LayerParams::F { w, bias } => {
                 bbits.extend(w.data().iter().map(|v| v.to_bits()));
                 bbits.extend(bias.iter().map(|b| b.to_bits()));

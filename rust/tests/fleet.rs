@@ -54,6 +54,10 @@ fn weight_snapshot(m: &NativeModel) -> (Vec<u8>, Vec<u32>) {
                 wbits.extend_from_slice(w.values.data());
                 bbits.extend(bias.iter().map(|b| b.to_bits()));
             }
+            LayerParams::Qp { w, bias } => {
+                wbits.extend_from_slice(w.data.data());
+                bbits.extend(bias.iter().map(|b| b.to_bits()));
+            }
             LayerParams::F { w, bias } => {
                 bbits.extend(w.data().iter().map(|v| v.to_bits()));
                 bbits.extend(bias.iter().map(|b| b.to_bits()));

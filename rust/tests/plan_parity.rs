@@ -456,6 +456,148 @@ fn fused_plan_shrinks_planned_peak() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Packed sub-byte deployments vs the retained u8 oracle
+// ---------------------------------------------------------------------------
+
+/// Deploy the same float masters twice — once packed at the given widths,
+/// once on the plain-u8 path — from one calibration. Both use explicit
+/// [`BitSpec`]s so the pair is independent of the `TT_WBITS` environment.
+fn build_bits_pair(
+    name: &str,
+    shape: &[usize; 3],
+    classes: usize,
+    seed: u64,
+    bits: &tinytrain::graph::plan::BitSpec,
+) -> (NativeModel, NativeModel, Vec<TensorF32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let def = models::by_name(name, shape, classes).expect("known model");
+    let fp = FloatParams::init(&def, &mut rng);
+    let xs: Vec<TensorF32> = (0..3)
+        .map(|_| {
+            let mut x = TensorF32::zeros(shape);
+            rng.fill_normal(x.data_mut(), 1.0);
+            x
+        })
+        .collect();
+    let calib = calibrate(&def, &fp, &xs[..2]);
+    let cfg = DnnConfig::Uint8;
+    // The plain twin deploys unfused so the pair helpers' no-sat oracle
+    // assertion holds; fused↔unfused bit-identity is already pinned by
+    // `fused_plan_matches_unfused_oracle`, so the cross costs nothing.
+    let packed = NativeModel::build_with_bits(def.clone(), cfg, &fp, &calib, true, bits);
+    let plain = NativeModel::build_with_bits(
+        def,
+        cfg,
+        &fp,
+        &calib,
+        false,
+        &tinytrain::graph::plan::BitSpec::default(),
+    );
+    (packed, plain, xs)
+}
+
+/// The packed-representation bit-exactness oracle: a deployment forced to
+/// 8-bit *packed* storage must be bit-identical to the plain-u8 path —
+/// logits, activations, gradients, observers and `OpCounter` totals, dense
+/// and sparse — and must also match the straight-line reference executor
+/// (which unpacks once and runs the unchanged u8 kernels). Any divergence
+/// here means the in-kernel unpack changed arithmetic, not just storage.
+#[test]
+fn packed8_plan_matches_u8_oracle() {
+    use tinytrain::quant::subbyte::WBits;
+    let spec = tinytrain::graph::plan::BitSpec { force: Some(WBits::W8), budget: None };
+    for (name, shape, classes) in CASES {
+        let (mp, mu, xs) = build_bits_pair(name, &shape, classes, 0x8B17, &spec);
+        let bp = mp.plan().bit_plan();
+        assert!(
+            mp.shared.def.layers.iter().enumerate().all(|(i, l)| {
+                bp.packed(i).is_some() == l.has_weights()
+            }),
+            "{name}: every quantized weighted layer must deploy packed"
+        );
+        for (k, x) in xs.iter().enumerate() {
+            let tag = format!("{name}/packed8/sample{k}");
+            assert_pair_forward(&mp, &mu, x, &tag);
+            assert_pair_backward(&mp, &mu, x, false, &tag);
+            assert_pair_backward(&mp, &mu, x, true, &tag);
+            assert_forward_parity(&mp, x, &tag);
+            assert_backward_parity(&mp, x, false, &tag);
+        }
+    }
+}
+
+/// Full-training-loop twin of the packed-8 oracle: the FQT optimizer's
+/// quantize-on-write into the packed representation must track the plain
+/// path bit-for-bit across optimizer steps (same weights, same op totals,
+/// same logits afterwards).
+#[test]
+fn packed8_training_matches_u8_oracle() {
+    use tinytrain::quant::subbyte::WBits;
+    use tinytrain::train::fqt::FqtSgd;
+    use tinytrain::train::Optimizer;
+    let spec = tinytrain::graph::plan::BitSpec { force: Some(WBits::W8), budget: None };
+    let (mut mp, mut mu, xs) = build_bits_pair("mnist_cnn", &[1, 12, 12], 4, 0x8B2E, &spec);
+    let mut op_p = FqtSgd::new(&mp, 0.05, 2);
+    let mut op_u = FqtSgd::new(&mu, 0.05, 2);
+    let mut cp = OpCounter::new();
+    let mut cu = OpCounter::new();
+    for round in 0..2 {
+        for (k, x) in xs.iter().enumerate() {
+            let y = (round + k) % 4;
+            let (_, _, bp) = mp.train_sample(x, y, &mut DenseUpdates, &mut cp);
+            op_p.accumulate(&mut mp, &bp, &mut cp);
+            let (_, _, bu) = mu.train_sample(x, y, &mut DenseUpdates, &mut cu);
+            op_u.accumulate(&mut mu, &bu, &mut cu);
+        }
+        op_p.finish(&mut mp, &mut cp);
+        op_u.finish(&mut mu, &mut cu);
+    }
+    assert_eq!(cp, cu, "packed8 training op totals diverged from the u8 oracle");
+    for (i, (pp, pu)) in mp.state.params.iter().zip(mu.state.params.iter()).enumerate() {
+        use tinytrain::graph::exec::LayerParams;
+        match (pp, pu) {
+            (LayerParams::Qp { w: wp, bias: bp }, LayerParams::Q { w: wu, bias: bu }) => {
+                let lanes = wp.to_qtensor();
+                assert_eq!(lanes.values.data(), wu.values.data(), "layer {i} weights diverged");
+                assert_eq!(wp.qp.scale.to_bits(), wu.qp.scale.to_bits(), "layer {i} scale");
+                assert_eq!(wp.qp.zero_point, wu.qp.zero_point, "layer {i} zero point");
+                let ba: Vec<u32> = bp.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = bu.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ba, bb, "layer {i} biases diverged");
+            }
+            (LayerParams::None, LayerParams::None) => {}
+            (a, b) => panic!("layer {i}: param flavors {}/{} unexpected", a.flavor(), b.flavor()),
+        }
+    }
+    for (k, x) in xs.iter().enumerate() {
+        let tag = format!("packed8/post-train/sample{k}");
+        assert_pair_forward(&mp, &mu, x, &tag);
+    }
+}
+
+/// Sub-byte deployments (INT4/INT2) run end to end: planned executor
+/// matches the straight-line reference bit-for-bit at every width (the
+/// reference unpacks fully, so this pins the in-kernel panel unpack), and
+/// the weight memory reported for the packed deployment shrinks by the
+/// packing factor.
+#[test]
+fn subbyte_plan_matches_reference_at_every_width() {
+    use tinytrain::quant::subbyte::WBits;
+    for wb in [WBits::W4, WBits::W2] {
+        let spec = tinytrain::graph::plan::BitSpec { force: Some(wb), budget: None };
+        for (name, shape, classes) in CASES {
+            let (mp, _, xs) = build_bits_pair(name, &shape, classes, 0x5B17, &spec);
+            for (k, x) in xs.iter().enumerate() {
+                let tag = format!("{name}/{wb:?}/sample{k}");
+                assert_forward_parity(&mp, x, &tag);
+                assert_backward_parity(&mp, x, false, &tag);
+                assert_backward_parity(&mp, x, true, &tag);
+            }
+        }
+    }
+}
+
 /// Telemetry parity (op-count regression): the training-path forward with
 /// activation-range adaptation consumes the fused kernels' saturation
 /// counts instead of re-sweeping activations, and must report the same

@@ -1,0 +1,192 @@
+//! Sub-byte packed-weight integration contracts:
+//!
+//!  * byte accounting — a 4-bit deployment reports ~half (and a 2-bit
+//!    deployment ~a quarter of) the 8-bit weight bytes through every
+//!    reporting path that feeds the fleet report: per-layer `byte_size`,
+//!    `ModelArtifacts::shared_bytes`, `SessionState::delta_bytes`;
+//!  * the `TT_WEIGHT_BUDGET` demotion pass produces a deployment that
+//!    actually fits the budget and still trains;
+//!  * the accuracy-vs-memory frontier: training runs end to end at
+//!    8/4/2-bit with finite accuracy and the expected 2×/4× weight-memory
+//!    reduction (the fig. 4/5-style sweep recorded in EXPERIMENTS.md).
+
+use tinytrain::graph::exec::{calibrate, DenseUpdates, FloatParams, LayerParams, NativeModel};
+use tinytrain::graph::plan::BitSpec;
+use tinytrain::graph::{models, DnnConfig};
+use tinytrain::kernels::OpCounter;
+use tinytrain::quant::subbyte::WBits;
+use tinytrain::tensor::TensorF32;
+use tinytrain::train::fqt::FqtSgd;
+use tinytrain::train::Optimizer;
+use tinytrain::util::prng::Pcg32;
+
+fn deploy(
+    bits: &BitSpec,
+    seed: u64,
+) -> (NativeModel, Vec<TensorF32>, Vec<usize>) {
+    let mut rng = Pcg32::seeded(seed);
+    let def = models::mnist_cnn(&[1, 12, 12], 2);
+    let fp = FloatParams::init(&def, &mut rng);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..16 {
+        let y = i % 2;
+        let mut x = TensorF32::zeros(&[1, 12, 12]);
+        rng.fill_normal(x.data_mut(), 0.4);
+        for v in x.data_mut().iter_mut() {
+            *v += y as f32;
+        }
+        xs.push(x);
+        ys.push(y);
+    }
+    let calib = calibrate(&def, &fp, &xs[..4]);
+    (NativeModel::build_with_bits(def, DnnConfig::Uint8, &fp, &calib, true, bits), xs, ys)
+}
+
+/// Per-layer quantized weight bytes as the accounting reports them.
+fn weight_bytes_per_layer(m: &NativeModel) -> Vec<usize> {
+    m.state
+        .params
+        .iter()
+        .map(|p| match p {
+            LayerParams::Q { w, .. } => w.len(),
+            LayerParams::Qp { w, .. } => w.packed_bytes(),
+            _ => 0,
+        })
+        .collect()
+}
+
+/// The byte-accounting regression: a 4-bit model reports ~half the 8-bit
+/// weight bytes layer for layer, and the reduction is visible in
+/// `shared_bytes` (which feeds `FleetReport::shared_bytes`) and in the
+/// post-update `delta_bytes` (which feeds `FleetReport::session_bytes`).
+#[test]
+fn four_bit_model_reports_half_the_weight_bytes() {
+    let w8 = BitSpec::default();
+    let w4 = BitSpec { force: Some(WBits::W4), budget: None };
+    let w2 = BitSpec { force: Some(WBits::W2), budget: None };
+    let (m8, xs, ys) = deploy(&w8, 31);
+    let (m4, ..) = deploy(&w4, 31);
+    let (m2, ..) = deploy(&w2, 31);
+
+    let b8 = weight_bytes_per_layer(&m8);
+    let b4 = weight_bytes_per_layer(&m4);
+    let b2 = weight_bytes_per_layer(&m2);
+    assert!(b8.iter().sum::<usize>() > 0);
+    for (i, ((&n8, &n4), &n2)) in b8.iter().zip(&b4).zip(&b2).enumerate() {
+        // Exact packing arithmetic: ceil(n/2) and ceil(n/4) lanes per byte.
+        assert_eq!(n4, n8.div_ceil(2), "layer {i}: 4-bit bytes");
+        assert_eq!(n2, n8.div_ceil(4), "layer {i}: 2-bit bytes");
+    }
+
+    // Shared (deployment) accounting shrinks by exactly the packing saving.
+    let saved4: usize = b8.iter().sum::<usize>() - b4.iter().sum::<usize>();
+    assert!(saved4 > 0);
+    assert!(
+        m8.shared.shared_bytes() >= m4.shared.shared_bytes() + saved4,
+        "shared_bytes must reflect packed weight storage ({} vs {})",
+        m8.shared.shared_bytes(),
+        m4.shared.shared_bytes()
+    );
+
+    // Per-tenant delta accounting after an optimizer step rewrites every
+    // trainable layer: the 4-bit session owns ~half the weight delta.
+    let step = |mut m: NativeModel| -> (usize, NativeModel) {
+        let mut opt = FqtSgd::new(&m, 0.05, 4);
+        let mut ops = OpCounter::new();
+        for (x, &y) in xs.iter().zip(&ys).take(4) {
+            let (_, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
+            opt.accumulate(&mut m, &bwd, &mut ops);
+        }
+        opt.finish(&mut m, &mut ops);
+        (m.state.delta_bytes(&m.shared), m)
+    };
+    let (d8, m8t) = step(m8);
+    let (d4, _) = step(m4);
+    let w8_total: usize = weight_bytes_per_layer(&m8t).iter().sum();
+    let saved = w8_total - w8_total.div_ceil(2);
+    assert!(
+        d8 >= d4 + saved.saturating_sub(b8.len()),
+        "delta_bytes must count packed widths: 8-bit {d8} vs 4-bit {d4}"
+    );
+}
+
+/// The `TT_WEIGHT_BUDGET` demotion pass through the full deployment path:
+/// the compiled plan fits the budget, the deployed params respect the
+/// per-layer plan, and the model still trains.
+#[test]
+fn weight_budget_deployment_fits_and_trains() {
+    let (m8, ..) = deploy(&BitSpec::default(), 32);
+    let full: usize = weight_bytes_per_layer(&m8).iter().sum();
+    let budget = full * 6 / 10;
+    let spec = BitSpec { force: None, budget: Some(budget) };
+    let (mut m, xs, ys) = deploy(&spec, 32);
+
+    let spent: usize = weight_bytes_per_layer(&m).iter().sum();
+    assert!(spent <= budget, "deployment spends {spent} bytes over budget {budget}");
+    let bp = m.plan().bit_plan();
+    assert!(
+        (0..m.state.params.len()).any(|i| bp.packed(i).is_some()),
+        "a budget below the full size must demote at least one layer"
+    );
+    // Deployed representations follow the plan layer for layer.
+    for (i, p) in m.state.params.iter().enumerate() {
+        match (p, bp.packed(i)) {
+            (LayerParams::Qp { w, .. }, Some(b)) => assert_eq!(w.bits, b, "layer {i}"),
+            (LayerParams::Q { .. }, None) | (LayerParams::None, None) => {}
+            (p, b) => panic!("layer {i}: params {} vs plan {b:?}", p.flavor()),
+        }
+    }
+
+    let acc0 = m.evaluate(&xs, &ys);
+    let mut opt = FqtSgd::new(&m, 0.02, 4);
+    let mut ops = OpCounter::new();
+    for _ in 0..15 {
+        for (x, &y) in xs.iter().zip(&ys) {
+            let (_, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
+            opt.accumulate(&mut m, &bwd, &mut ops);
+        }
+        opt.finish(&mut m, &mut ops);
+    }
+    let acc1 = m.evaluate(&xs, &ys);
+    assert!(acc1.is_finite() && (0.0..=1.0).contains(&acc1));
+    assert!(acc1 >= acc0.max(0.6), "budgeted model must still learn: {acc0} -> {acc1}");
+}
+
+/// The accuracy-vs-memory frontier smoke (fig. 4/5-style): FQT training
+/// runs end to end at every storage width; 4-bit weights cost ~half and
+/// 2-bit ~a quarter of the 8-bit bytes, and accuracy stays a valid
+/// fraction at every point of the frontier.
+#[test]
+fn training_frontier_runs_at_every_width() {
+    let mut frontier = Vec::new();
+    let mut weighted_layers = 0;
+    for (wb, divisor) in [(None, 1), (Some(WBits::W4), 2), (Some(WBits::W2), 4)] {
+        let spec = BitSpec { force: wb, budget: None };
+        let (mut m, xs, ys) = deploy(&spec, 33);
+        let per_layer = weight_bytes_per_layer(&m);
+        weighted_layers = per_layer.iter().filter(|&&b| b > 0).count();
+        let bytes: usize = per_layer.iter().sum();
+        let mut opt = FqtSgd::new(&m, 0.02, 4);
+        let mut ops = OpCounter::new();
+        for _ in 0..10 {
+            for (x, &y) in xs.iter().zip(&ys) {
+                let (_, _, bwd) = m.train_sample(x, y, &mut DenseUpdates, &mut ops);
+                opt.accumulate(&mut m, &bwd, &mut ops);
+            }
+            opt.finish(&mut m, &mut ops);
+        }
+        let acc = m.evaluate(&xs, &ys);
+        assert!(acc.is_finite() && (0.0..=1.0).contains(&acc), "{wb:?}: acc {acc}");
+        frontier.push((divisor, bytes, acc));
+    }
+    let (_, full, _) = frontier[0];
+    // ≤ one byte of packing rounding per weight tensor
+    let ceil_slack = weighted_layers;
+    for &(divisor, bytes, _) in &frontier[1..] {
+        assert!(
+            bytes <= full / divisor + ceil_slack && bytes >= full / (divisor + 1),
+            "width /{divisor}: {bytes} bytes vs full {full}"
+        );
+    }
+}
