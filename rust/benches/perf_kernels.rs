@@ -1,6 +1,7 @@
 //! §Perf microbenchmarks — wall-clock throughput of the native kernels
 //! (the simulated-MCU hot path), the im2col/GEMM execution engine, and the
-//! PJRT-executed artifact (with `--features pjrt`). Used by the
+//! PJRT-executed artifact (with `--features pjrt`), plus GPU-vs-native
+//! forward rows (with `--features gpu` and a usable adapter). Used by the
 //! performance pass; before/after numbers live in EXPERIMENTS.md §Perf.
 //!
 //! Knobs: TT_PERF_REPS (default 10), TT_PERF_BATCH (default 8),
@@ -1195,6 +1196,65 @@ fn main() {
                 ("kernel", Json::str("pjrt_train_step")),
                 ("seconds", Json::Num(ta)),
             ]));
+        }
+    }
+    // GPU forward latency vs the native engine, if built with the gpu
+    // feature and an adapter (hardware or Mesa lavapipe) initializes;
+    // clean-skips with a printed notice otherwise. The ratio field is
+    // deliberately NOT named `*speedup*`: a software rasterizer is
+    // expected to trail the native engine, and bench_gate's internal
+    // ratio floor must not read that as a regression.
+    #[cfg(feature = "gpu")]
+    {
+        use tinytrain::backend::gpu::{GpuContext, GpuPlan};
+
+        match GpuContext::try_new() {
+            None => println!("\ngpu bench: SKIP — no usable GPU adapter (hardware or lavapipe)"),
+            Some(ctx) => {
+                println!("\ngpu bench adapter: {}", ctx.adapter_info);
+                let gpu_batch = 4usize;
+                for def in tinytrain::harness::parity_models() {
+                    let name = def.name.clone();
+                    let fp = FloatParams::init(&def, &mut rng);
+                    let mut xs = Vec::with_capacity(gpu_batch);
+                    for _ in 0..gpu_batch {
+                        let mut x = TensorF32::zeros(&def.input_shape);
+                        rng.fill_normal(x.data_mut(), 0.5);
+                        xs.push(x);
+                    }
+                    let calib = calibrate(&def, &fp, &xs[..2]);
+                    let model =
+                        NativeModel::build_with_fusion(def, DnnConfig::Uint8, &fp, &calib, false);
+                    let plan = GpuPlan::new(&ctx, &model, gpu_batch);
+                    let mut ops = OpCounter::new();
+                    let (tn, _) = time_it(1, reps, || {
+                        for x in &xs {
+                            std::hint::black_box(model.forward(x, &mut ops));
+                        }
+                    });
+                    let (tg, _) = time_it(1, reps, || {
+                        std::hint::black_box(plan.forward_batch(&ctx, &xs));
+                    });
+                    let Some(rel) = safe_speedup(tn, tg) else {
+                        println!("gpu forward {name}: degenerate timing, row dropped");
+                        continue;
+                    };
+                    println!(
+                        "gpu forward {name} (batch {gpu_batch}): native {} vs gpu {} \
+                         ({rel:.2}x relative)",
+                        fmt_duration(tn),
+                        fmt_duration(tg)
+                    );
+                    sink.push(Json::obj(vec![
+                        ("kernel", Json::str("gpu_forward_vs_native")),
+                        ("model", Json::str(&name)),
+                        ("batch", Json::Num(gpu_batch as f64)),
+                        ("native_seconds", Json::Num(tn)),
+                        ("gpu_seconds", Json::Num(tg)),
+                        ("gpu_relative_speed", Json::Num(rel)),
+                    ]));
+                }
+            }
         }
     }
     // Machine-readable bench baseline at the repo root: the perf

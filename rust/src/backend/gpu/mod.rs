@@ -1,0 +1,132 @@
+//! wgpu device plumbing for the WGSL backend (feature `gpu`).
+//!
+//! [`GpuContext::try_new`] acquires an adapter + device, preferring a
+//! hardware adapter and falling back to a software one (Mesa lavapipe on
+//! the CI runners); it returns `None` — never panics — when no adapter
+//! initializes, which is what lets `tests/gpu_cross_validation.rs`
+//! clean-skip on machines without any Vulkan/GL stack.
+//!
+//! The crate is dependency-minimal by policy, so the async plumbing wgpu
+//! exposes is driven by a hand-rolled no-op-waker [`block_on`] (the
+//! futures here complete via `device.poll`, not a reactor) instead of
+//! pulling in an executor crate.
+
+pub mod plan;
+
+pub use plan::{GpuAct, GpuPlan};
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::mpsc;
+use std::task::{Context, Poll, RawWaker, RawWakerVTable, Waker};
+
+fn noop_raw_waker() -> RawWaker {
+    fn clone(_: *const ()) -> RawWaker {
+        noop_raw_waker()
+    }
+    fn noop(_: *const ()) {}
+    static VTABLE: RawWakerVTable = RawWakerVTable::new(clone, noop, noop, noop);
+    RawWaker::new(std::ptr::null(), &VTABLE)
+}
+
+/// Drive a wgpu future to completion on the current thread. The adapter /
+/// device / map futures used here make progress from wgpu's own internals
+/// (or `device.poll`), so a spin-with-yield loop with a no-op waker is
+/// sufficient and keeps the build free of executor dependencies.
+pub fn block_on<F: Future>(mut fut: F) -> F::Output {
+    let waker = unsafe { Waker::from_raw(noop_raw_waker()) };
+    let mut cx = Context::from_waker(&waker);
+    // SAFETY: `fut` lives on this stack frame for the whole loop and is
+    // never moved after being pinned.
+    let mut fut = unsafe { Pin::new_unchecked(&mut fut) };
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(v) => return v,
+            Poll::Pending => std::thread::yield_now(),
+        }
+    }
+}
+
+/// An acquired wgpu device + queue, shared by every [`GpuPlan`].
+pub struct GpuContext {
+    pub device: wgpu::Device,
+    pub queue: wgpu::Queue,
+    /// Human-readable adapter description for logs and perf rows.
+    pub adapter_info: String,
+}
+
+impl GpuContext {
+    /// Acquire an adapter and device, or `None` if no usable adapter
+    /// exists (headless runner without a software driver installed).
+    pub fn try_new() -> Option<GpuContext> {
+        let instance = wgpu::Instance::new(wgpu::InstanceDescriptor {
+            backends: wgpu::Backends::all(),
+            ..Default::default()
+        });
+        let adapter = block_on(instance.request_adapter(&wgpu::RequestAdapterOptions {
+            power_preference: wgpu::PowerPreference::HighPerformance,
+            force_fallback_adapter: false,
+            compatible_surface: None,
+        }))
+        .or_else(|| {
+            // Explicitly ask for the software fallback (lavapipe).
+            block_on(instance.request_adapter(&wgpu::RequestAdapterOptions {
+                power_preference: wgpu::PowerPreference::LowPower,
+                force_fallback_adapter: true,
+                compatible_surface: None,
+            }))
+        })?;
+        let info = adapter.get_info();
+        let (device, queue) = block_on(adapter.request_device(
+            &wgpu::DeviceDescriptor {
+                label: Some("tinytrain-gpu"),
+                required_features: wgpu::Features::empty(),
+                required_limits: wgpu::Limits::downlevel_defaults(),
+                memory_hints: wgpu::MemoryHints::default(),
+            },
+            None,
+        ))
+        .ok()?;
+        let adapter_info = format!("{} ({:?})", info.name, info.backend);
+        Some(GpuContext { device, queue, adapter_info })
+    }
+
+    /// Copy `words` u32 words out of `src` (which must carry `COPY_SRC`)
+    /// through a fresh staging buffer and map them back to the host.
+    pub fn read_words(&self, src: &wgpu::Buffer, words: usize) -> Vec<u32> {
+        let bytes = (words.max(1) * 4) as u64;
+        let staging = self.device.create_buffer(&wgpu::BufferDescriptor {
+            label: Some("tt-readback"),
+            size: bytes,
+            usage: wgpu::BufferUsages::COPY_DST | wgpu::BufferUsages::MAP_READ,
+            mapped_at_creation: false,
+        });
+        let mut enc = self
+            .device
+            .create_command_encoder(&wgpu::CommandEncoderDescriptor { label: Some("tt-read") });
+        enc.copy_buffer_to_buffer(src, 0, &staging, 0, bytes);
+        self.queue.submit([enc.finish()]);
+        self.map_and_read(&staging, words)
+    }
+
+    /// Map an already-populated `MAP_READ` buffer and decode `words` u32
+    /// words (little-endian, the WebGPU buffer byte order).
+    pub fn map_and_read(&self, staging: &wgpu::Buffer, words: usize) -> Vec<u32> {
+        let slice = staging.slice(..);
+        let (tx, rx) = mpsc::channel();
+        slice.map_async(wgpu::MapMode::Read, move |r| {
+            let _ = tx.send(r);
+        });
+        let _ = self.device.poll(wgpu::Maintain::Wait);
+        rx.recv().expect("map_async dropped its callback").expect("buffer map failed");
+        let out = {
+            let data = slice.get_mapped_range();
+            data.chunks_exact(4)
+                .take(words)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        staging.unmap();
+        out
+    }
+}

@@ -1,0 +1,760 @@
+//! `GpuPlan`: lower a compiled [`ExecPlan`] onto WGSL compute pipelines.
+//!
+//! The lowering walks the plan's backend-neutral step descriptions
+//! ([`StepDesc`], recorded by the same compile loop that boxes the CPU
+//! ops) and emits one dispatch per step — `Flatten` lowers to nothing,
+//! exactly like the CPU's zero-copy view. Scope is batched **forward
+//! inference of the unfused schedule**: the unfused op sequence is the
+//! repository-wide bit-parity oracle (`TT_NO_FUSE=1` CI leg), and by the
+//! plan-parity contract its activations are bit-identical to the fused
+//! executor's, so validating against it validates against both.
+//!
+//! **Device memory mirrors the plan's liveness accounting.** The same
+//! [`crate::memplan::allocate_arena`] pass that gives the CPU plan its
+//! `planned_peak_bytes` places the inference-mode arena items (word-
+//! aligned via [`crate::memplan::align_up`], which keeps every placed
+//! offset word-aligned) into one reused arena buffer region per sample:
+//! the whole batch lives in a single `array<u32>` storage binding of
+//! `batch × arena_bytes_per_sample` bytes, and per-step offsets ride in
+//! each dispatch's uniform block. No buffer aliasing, no re-binding, and
+//! the buffer-pool footprint is the liveness answer, not the sum of
+//! activation sizes.
+//!
+//! **Numerics contract** (pinned by `tests/gpu_cross_validation.rs`):
+//! uint8/i32 steps are bit-exact against the scalar oracle — integer
+//! accumulation is exact in both places and the requantization epilogue
+//! is provably identical to [`crate::quant::requantize`] (see
+//! [`crate::backend::wgsl`]); float steps are tolerance-tiered like the
+//! XLA suite because WGSL may contract multiply-adds to fma. Quantized
+//! biases, requantization multipliers, and the input quantization are
+//! computed host-side by the *same* `quant` functions the CPU kernels
+//! call, so every scale/zero-point constant reaching the shaders is
+//! bit-identical to what the CPU path uses.
+
+use std::collections::HashMap;
+
+use crate::backend::gpu::GpuContext;
+use crate::backend::wgsl::{self, slot, ShaderKind};
+use crate::graph::act::LayerParams;
+use crate::graph::exec::NativeModel;
+use crate::graph::ops::QpSlot;
+use crate::graph::plan::{arena_items_with, ExecPlan, StepDesc};
+use crate::graph::Precision;
+use crate::memplan::{align_up, allocate_arena};
+use crate::quant::{quantize_bias, requant_multiplier, QParams, QTensor};
+use crate::tensor::TensorF32;
+
+/// One lowered plan step: which pipeline to run, its pre-composed uniform
+/// block, and how many x-invocations it needs per sample.
+struct Dispatch {
+    kind: ShaderKind,
+    params: [u32; wgsl::PARAM_WORDS],
+    /// Invocations along x per sample: output *words* for uint8-writing
+    /// shaders (four lanes per invocation), output elements for float.
+    x_threads: u32,
+    /// Layers whose activations live in the arena right after this
+    /// dispatch (the producing layer, plus any `Flatten` aliasing it) —
+    /// the capture points of [`GpuPlan::forward_batch_captured`].
+    capture_layers: Vec<usize>,
+}
+
+/// Where one layer's output activation lives within a sample's region.
+#[derive(Clone, Copy)]
+struct LayerSlot {
+    word_off: usize,
+    elems: usize,
+    prec: Precision,
+    qp: QParams,
+}
+
+/// One activation read back from the device.
+#[derive(Clone, Debug)]
+pub enum GpuAct {
+    /// Quantized bytes plus their quantization parameters.
+    Q(Vec<u8>, QParams),
+    /// Float values.
+    F(Vec<f32>),
+}
+
+impl GpuAct {
+    /// Dequantized copy, mirroring `Act::to_float` (same
+    /// [`QParams::dequantize`] per value — bit-identical).
+    pub fn to_float(&self) -> Vec<f32> {
+        match self {
+            GpuAct::Q(v, qp) => v.iter().map(|&q| qp.dequantize(q)).collect(),
+            GpuAct::F(v) => v.clone(),
+        }
+    }
+}
+
+/// A compiled model lowered onto GPU compute pipelines (see the module
+/// docs for scope and contracts).
+pub struct GpuPlan {
+    pipelines: HashMap<ShaderKind, wgpu::ComputePipeline>,
+    dispatches: Vec<Dispatch>,
+    bind_groups: Vec<wgpu::BindGroup>,
+    arena: wgpu::Buffer,
+    layer_slots: Vec<LayerSlot>,
+    /// Copy-point index per layer for captured forwards.
+    layer_copy: Vec<usize>,
+    n_copies: usize,
+    input: LayerSlot,
+    stride_words: usize,
+    max_batch: usize,
+    slot_bytes_total: usize,
+}
+
+fn push_u8(consts: &mut Vec<u32>, bytes: &[u8]) -> u32 {
+    let off = consts.len() as u32;
+    for c in bytes.chunks(4) {
+        let mut w = [0u8; 4];
+        w[..c.len()].copy_from_slice(c);
+        consts.push(u32::from_le_bytes(w));
+    }
+    off
+}
+
+fn push_f32(consts: &mut Vec<u32>, vals: &[f32]) -> u32 {
+    let off = consts.len() as u32;
+    consts.extend(vals.iter().map(|v| v.to_bits()));
+    off
+}
+
+fn push_i32(consts: &mut Vec<u32>, vals: &[i32]) -> u32 {
+    let off = consts.len() as u32;
+    consts.extend(vals.iter().map(|v| *v as u32));
+    off
+}
+
+/// Quantized weights + float bias of a layer, unpacking sub-byte storage
+/// host-side (bit-identical lanes, see `quant::subbyte`).
+fn q_params_of(lp: &LayerParams) -> (QTensor, Vec<f32>) {
+    match lp {
+        LayerParams::Q { w, bias } => (w.clone(), bias.clone()),
+        LayerParams::Qp { w, bias } => (w.to_qtensor(), bias.clone()),
+        other => panic!("quantized step over non-quantized params {other:?}"),
+    }
+}
+
+fn f_params_of(lp: &LayerParams) -> (&TensorF32, &[f32]) {
+    match lp {
+        LayerParams::F { w, bias } => (w, bias),
+        other => panic!("float step over non-float params {other:?}"),
+    }
+}
+
+fn upload_words(
+    device: &wgpu::Device,
+    label: &str,
+    words: &[u32],
+    usage: wgpu::BufferUsages,
+) -> wgpu::Buffer {
+    let buf = device.create_buffer(&wgpu::BufferDescriptor {
+        label: Some(label),
+        size: (words.len().max(1) * 4) as u64,
+        usage,
+        mapped_at_creation: true,
+    });
+    {
+        let mut view = buf.slice(..).get_mapped_range_mut();
+        for (i, w) in words.iter().enumerate() {
+            view[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+        }
+    }
+    buf.unmap();
+    buf
+}
+
+fn read_slot(region: &[u32], sample: usize, stride_words: usize, s: &LayerSlot) -> GpuAct {
+    let base = sample * stride_words + s.word_off;
+    match s.prec {
+        Precision::Uint8 => {
+            let mut v = Vec::with_capacity(s.elems);
+            for i in 0..s.elems {
+                v.push(((region[base + i / 4] >> (8 * (i % 4))) & 0xFF) as u8);
+            }
+            GpuAct::Q(v, s.qp)
+        }
+        Precision::Float32 => {
+            GpuAct::F(region[base..base + s.elems].iter().map(|w| f32::from_bits(*w)).collect())
+        }
+    }
+}
+
+impl GpuPlan {
+    /// Lower `model`'s compiled plan for batches of up to `max_batch`
+    /// samples. The model must be built **unfused** (see the module docs);
+    /// weights and quantization parameters are snapshotted at build.
+    pub fn new(ctx: &GpuContext, model: &NativeModel, max_batch: usize) -> GpuPlan {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        let plan: &ExecPlan = model.plan();
+        assert!(
+            !plan.fused(),
+            "GpuPlan lowers the unfused oracle schedule; build with fusion off"
+        );
+        let def = &model.shared.def;
+        let prec = &model.shared.prec;
+        let act_qp = &model.state.act_qp;
+        let shapes = def.shapes();
+        let n = def.layers.len();
+
+        // Liveness-planned per-sample arena: same placement pass as the
+        // CPU plan, over the inference-mode items, word-aligned so every
+        // offset stays word-aligned. `fused: true` drops the i32 strips
+        // the unfused *CPU* path stages through registers here.
+        let mut items = arena_items_with(def, model.shared.cfg, false, true);
+        for it in &mut items {
+            it.bytes = align_up(it.bytes, 4);
+        }
+        let slot_bytes_total: usize = items.iter().map(|it| it.bytes).sum();
+        let placement = allocate_arena(items);
+        let stride_words = placement.total_bytes / 4;
+        let word_off: HashMap<String, usize> =
+            placement.items.iter().map(|(it, off)| (it.name.clone(), off / 4)).collect();
+        let off = |name: &str| -> usize {
+            *word_off.get(name).unwrap_or_else(|| panic!("missing arena slot {name}"))
+        };
+
+        let resolve = |s: QpSlot| -> QParams {
+            match s {
+                QpSlot::Input => model.shared.input_qp,
+                QpSlot::Layer(j) => act_qp[j],
+            }
+        };
+        let base = |in_off: usize, out_off: usize| -> [u32; wgsl::PARAM_WORDS] {
+            let mut p = [0u32; wgsl::PARAM_WORDS];
+            p[slot::IN_OFF] = in_off as u32;
+            p[slot::OUT_OFF] = out_off as u32;
+            p[slot::STRIDE_WORDS] = stride_words as u32;
+            p[slot::BATCH] = max_batch as u32;
+            p
+        };
+
+        let input_elems: usize = def.input_shape.iter().product();
+        let input = LayerSlot {
+            word_off: off("input"),
+            elems: input_elems,
+            prec: prec[0],
+            qp: model.shared.input_qp,
+        };
+        let mut cur = input;
+
+        let mut consts: Vec<u32> = Vec::new();
+        let mut dispatches: Vec<Dispatch> = Vec::new();
+        let mut layer_slots: Vec<Option<LayerSlot>> = vec![None; n];
+
+        for step in plan.steps() {
+            match step {
+                StepDesc::Quantize { layer, qp } => {
+                    let q = resolve(*qp);
+                    let out_off = off(&format!("stage{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::ZX] = q.zero_point as u32;
+                    p[slot::MULT] = q.scale.to_bits();
+                    p[slot::OUT_ELEMS] = cur.elems as u32;
+                    dispatches.push(Dispatch {
+                        kind: ShaderKind::Quantize,
+                        params: p,
+                        x_threads: cur.elems.div_ceil(4) as u32,
+                        capture_layers: Vec::new(),
+                    });
+                    cur = LayerSlot {
+                        word_off: out_off,
+                        elems: cur.elems,
+                        prec: Precision::Uint8,
+                        qp: q,
+                    };
+                }
+                StepDesc::Dequantize { layer } => {
+                    let out_off = off(&format!("stage{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::ZX] = cur.qp.zero_point as u32;
+                    p[slot::MULT] = cur.qp.scale.to_bits();
+                    p[slot::OUT_ELEMS] = cur.elems as u32;
+                    dispatches.push(Dispatch {
+                        kind: ShaderKind::Dequantize,
+                        params: p,
+                        x_threads: cur.elems as u32,
+                        capture_layers: Vec::new(),
+                    });
+                    cur = LayerSlot {
+                        word_off: out_off,
+                        elems: cur.elems,
+                        prec: Precision::Float32,
+                        qp: cur.qp,
+                    };
+                }
+                StepDesc::QConv { layer, geom, relu, in_qp, in_h, in_w, .. } => {
+                    let in_q = resolve(*in_qp);
+                    let out_q = act_qp[*layer];
+                    let (wq, bias) = q_params_of(&model.state.params[*layer]);
+                    let w_off = push_u8(&mut consts, wq.values.data());
+                    let b_off =
+                        push_i32(&mut consts, &quantize_bias(&bias, in_q.scale, wq.qp.scale));
+                    let cin_pf = if geom.depthwise { 1 } else { geom.cin };
+                    let (oh, ow) = (shapes[*layer][1], shapes[*layer][2]);
+                    let out_elems: usize = shapes[*layer].iter().product();
+                    let out_off = off(&format!("act{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::W_OFF] = w_off;
+                    p[slot::B_OFF] = b_off;
+                    p[slot::CIN_PF] = cin_pf as u32;
+                    p[slot::KH] = geom.kh as u32;
+                    p[slot::KW] = geom.kw as u32;
+                    p[slot::CONV_STRIDE] = geom.stride as u32;
+                    p[slot::PAD_H] = geom.pad_h as u32;
+                    p[slot::PAD_W] = geom.pad_w as u32;
+                    p[slot::DEPTHWISE] = geom.depthwise as u32;
+                    p[slot::IH] = *in_h as u32;
+                    p[slot::IW] = *in_w as u32;
+                    p[slot::OH] = oh as u32;
+                    p[slot::OW] = ow as u32;
+                    p[slot::ZX] = in_q.zero_point as u32;
+                    p[slot::ZW] = wq.qp.zero_point as u32;
+                    p[slot::Z_OUT] = out_q.zero_point as u32;
+                    p[slot::RELU] = *relu as u32;
+                    p[slot::MULT] =
+                        requant_multiplier(in_q.scale, wq.qp.scale, out_q.scale).to_bits();
+                    p[slot::OUT_ELEMS] = out_elems as u32;
+                    dispatches.push(Dispatch {
+                        kind: ShaderKind::QConv,
+                        params: p,
+                        x_threads: out_elems.div_ceil(4) as u32,
+                        capture_layers: vec![*layer],
+                    });
+                    cur = LayerSlot {
+                        word_off: out_off,
+                        elems: out_elems,
+                        prec: Precision::Uint8,
+                        qp: out_q,
+                    };
+                    layer_slots[*layer] = Some(cur);
+                }
+                StepDesc::FConv { layer, geom, relu, in_h, in_w } => {
+                    let (w, bias) = f_params_of(&model.state.params[*layer]);
+                    let w_off = push_f32(&mut consts, w.data());
+                    let b_off = push_f32(&mut consts, bias);
+                    let cin_pf = if geom.depthwise { 1 } else { geom.cin };
+                    let (oh, ow) = (shapes[*layer][1], shapes[*layer][2]);
+                    let out_elems: usize = shapes[*layer].iter().product();
+                    let out_off = off(&format!("act{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::W_OFF] = w_off;
+                    p[slot::B_OFF] = b_off;
+                    p[slot::CIN_PF] = cin_pf as u32;
+                    p[slot::KH] = geom.kh as u32;
+                    p[slot::KW] = geom.kw as u32;
+                    p[slot::CONV_STRIDE] = geom.stride as u32;
+                    p[slot::PAD_H] = geom.pad_h as u32;
+                    p[slot::PAD_W] = geom.pad_w as u32;
+                    p[slot::DEPTHWISE] = geom.depthwise as u32;
+                    p[slot::IH] = *in_h as u32;
+                    p[slot::IW] = *in_w as u32;
+                    p[slot::OH] = oh as u32;
+                    p[slot::OW] = ow as u32;
+                    p[slot::RELU] = *relu as u32;
+                    p[slot::OUT_ELEMS] = out_elems as u32;
+                    dispatches.push(Dispatch {
+                        kind: ShaderKind::FConv,
+                        params: p,
+                        x_threads: out_elems as u32,
+                        capture_layers: vec![*layer],
+                    });
+                    cur = LayerSlot {
+                        word_off: out_off,
+                        elems: out_elems,
+                        prec: Precision::Float32,
+                        qp: cur.qp,
+                    };
+                    layer_slots[*layer] = Some(cur);
+                }
+                StepDesc::QLinear { layer, n_in, n_out, relu, in_qp, .. } => {
+                    let in_q = resolve(*in_qp);
+                    let out_q = act_qp[*layer];
+                    let (wq, bias) = q_params_of(&model.state.params[*layer]);
+                    let w_off = push_u8(&mut consts, wq.values.data());
+                    let b_off =
+                        push_i32(&mut consts, &quantize_bias(&bias, in_q.scale, wq.qp.scale));
+                    let out_off = off(&format!("act{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::W_OFF] = w_off;
+                    p[slot::B_OFF] = b_off;
+                    p[slot::N_IN] = *n_in as u32;
+                    p[slot::ZX] = in_q.zero_point as u32;
+                    p[slot::ZW] = wq.qp.zero_point as u32;
+                    p[slot::Z_OUT] = out_q.zero_point as u32;
+                    p[slot::RELU] = *relu as u32;
+                    p[slot::MULT] =
+                        requant_multiplier(in_q.scale, wq.qp.scale, out_q.scale).to_bits();
+                    p[slot::OUT_ELEMS] = *n_out as u32;
+                    dispatches.push(Dispatch {
+                        kind: ShaderKind::QLinear,
+                        params: p,
+                        x_threads: n_out.div_ceil(4) as u32,
+                        capture_layers: vec![*layer],
+                    });
+                    cur = LayerSlot {
+                        word_off: out_off,
+                        elems: *n_out,
+                        prec: Precision::Uint8,
+                        qp: out_q,
+                    };
+                    layer_slots[*layer] = Some(cur);
+                }
+                StepDesc::FLinear { layer, n_in, n_out, relu } => {
+                    let (w, bias) = f_params_of(&model.state.params[*layer]);
+                    let w_off = push_f32(&mut consts, w.data());
+                    let b_off = push_f32(&mut consts, bias);
+                    let out_off = off(&format!("act{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::W_OFF] = w_off;
+                    p[slot::B_OFF] = b_off;
+                    p[slot::N_IN] = *n_in as u32;
+                    p[slot::RELU] = *relu as u32;
+                    p[slot::OUT_ELEMS] = *n_out as u32;
+                    dispatches.push(Dispatch {
+                        kind: ShaderKind::FLinear,
+                        params: p,
+                        x_threads: *n_out as u32,
+                        capture_layers: vec![*layer],
+                    });
+                    cur = LayerSlot {
+                        word_off: out_off,
+                        elems: *n_out,
+                        prec: Precision::Float32,
+                        qp: cur.qp,
+                    };
+                    layer_slots[*layer] = Some(cur);
+                }
+                StepDesc::MaxPool { layer, k, in_shape } => {
+                    let (c, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+                    let (kh, kw) = ((*k).min(h), (*k).min(w));
+                    let (oh, ow) = (h / kh, w / kw);
+                    let out_elems = c * oh * ow;
+                    let out_off = off(&format!("act{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::KH] = kh as u32;
+                    p[slot::KW] = kw as u32;
+                    p[slot::IH] = h as u32;
+                    p[slot::IW] = w as u32;
+                    p[slot::OH] = oh as u32;
+                    p[slot::OW] = ow as u32;
+                    p[slot::OUT_ELEMS] = out_elems as u32;
+                    let quantized = cur.prec == Precision::Uint8;
+                    dispatches.push(Dispatch {
+                        kind: if quantized { ShaderKind::QMaxPool } else { ShaderKind::FMaxPool },
+                        params: p,
+                        x_threads: if quantized {
+                            out_elems.div_ceil(4) as u32
+                        } else {
+                            out_elems as u32
+                        },
+                        capture_layers: vec![*layer],
+                    });
+                    // Pooling preserves precision and quantization params.
+                    cur = LayerSlot { word_off: out_off, elems: out_elems, ..cur };
+                    layer_slots[*layer] = Some(cur);
+                }
+                StepDesc::GlobalAvgPool { layer, in_shape } => {
+                    let (c, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+                    let out_off = off(&format!("act{layer}"));
+                    let mut p = base(cur.word_off, out_off);
+                    p[slot::IH] = h as u32;
+                    p[slot::IW] = w as u32;
+                    p[slot::OUT_ELEMS] = c as u32;
+                    if cur.prec == Precision::Uint8 {
+                        let out_q = act_qp[*layer];
+                        // Exactly the multiplier expression of kernels::
+                        // pool::qgap2d_fwd — host f32 ops, bit-identical.
+                        let nf = (h * w) as f32;
+                        let mult = cur.qp.scale / (nf * out_q.scale);
+                        p[slot::ZX] = cur.qp.zero_point as u32;
+                        p[slot::Z_OUT] = out_q.zero_point as u32;
+                        p[slot::MULT] = mult.to_bits();
+                        dispatches.push(Dispatch {
+                            kind: ShaderKind::QGap,
+                            params: p,
+                            x_threads: c.div_ceil(4) as u32,
+                            capture_layers: vec![*layer],
+                        });
+                        cur = LayerSlot {
+                            word_off: out_off,
+                            elems: c,
+                            prec: Precision::Uint8,
+                            qp: out_q,
+                        };
+                    } else {
+                        dispatches.push(Dispatch {
+                            kind: ShaderKind::FGap,
+                            params: p,
+                            x_threads: c as u32,
+                            capture_layers: vec![*layer],
+                        });
+                        cur = LayerSlot { word_off: out_off, elems: c, ..cur };
+                    }
+                    layer_slots[*layer] = Some(cur);
+                }
+                StepDesc::Flatten { layer, out_len } => {
+                    // Zero-copy on the GPU too: the layer's activation is
+                    // the producer's buffer; capture it after the last
+                    // dispatch (its content is already live).
+                    assert_eq!(*out_len, cur.elems, "flatten must preserve element count");
+                    layer_slots[*layer] = Some(cur);
+                    dispatches
+                        .last_mut()
+                        .expect("flatten cannot be the first plan step")
+                        .capture_layers
+                        .push(*layer);
+                }
+            }
+        }
+
+        let layer_slots: Vec<LayerSlot> = layer_slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.unwrap_or_else(|| panic!("layer {i} produced no slot")))
+            .collect();
+        let mut layer_copy = vec![0usize; n];
+        let mut n_copies = 0usize;
+        for d in &dispatches {
+            if !d.capture_layers.is_empty() {
+                for &l in &d.capture_layers {
+                    layer_copy[l] = n_copies;
+                }
+                n_copies += 1;
+            }
+        }
+
+        // Device resources: one pipeline per shader kind in use, one
+        // uniform + bind group per dispatch, the shared constants buffer,
+        // and the single liveness-planned arena buffer.
+        let device = &ctx.device;
+        let bgl = device.create_bind_group_layout(&wgpu::BindGroupLayoutDescriptor {
+            label: Some("tt-gpu-bgl"),
+            entries: &[
+                wgpu::BindGroupLayoutEntry {
+                    binding: 0,
+                    visibility: wgpu::ShaderStages::COMPUTE,
+                    ty: wgpu::BindingType::Buffer {
+                        ty: wgpu::BufferBindingType::Storage { read_only: false },
+                        has_dynamic_offset: false,
+                        min_binding_size: None,
+                    },
+                    count: None,
+                },
+                wgpu::BindGroupLayoutEntry {
+                    binding: 1,
+                    visibility: wgpu::ShaderStages::COMPUTE,
+                    ty: wgpu::BindingType::Buffer {
+                        ty: wgpu::BufferBindingType::Storage { read_only: true },
+                        has_dynamic_offset: false,
+                        min_binding_size: None,
+                    },
+                    count: None,
+                },
+                wgpu::BindGroupLayoutEntry {
+                    binding: 2,
+                    visibility: wgpu::ShaderStages::COMPUTE,
+                    ty: wgpu::BindingType::Buffer {
+                        ty: wgpu::BufferBindingType::Uniform,
+                        has_dynamic_offset: false,
+                        min_binding_size: None,
+                    },
+                    count: None,
+                },
+            ],
+        });
+        let pl = device.create_pipeline_layout(&wgpu::PipelineLayoutDescriptor {
+            label: Some("tt-gpu-pl"),
+            bind_group_layouts: &[&bgl],
+            push_constant_ranges: &[],
+        });
+        let mut pipelines = HashMap::new();
+        for d in &dispatches {
+            if pipelines.contains_key(&d.kind) {
+                continue;
+            }
+            let module = device.create_shader_module(wgpu::ShaderModuleDescriptor {
+                label: Some(d.kind.name()),
+                source: wgpu::ShaderSource::Wgsl(wgsl::source(d.kind).into()),
+            });
+            let pipe = device.create_compute_pipeline(&wgpu::ComputePipelineDescriptor {
+                label: Some(d.kind.name()),
+                layout: Some(&pl),
+                module: &module,
+                entry_point: "main",
+                compilation_options: wgpu::PipelineCompilationOptions::default(),
+                cache: None,
+            });
+            pipelines.insert(d.kind, pipe);
+        }
+        let consts_buf = upload_words(device, "tt-consts", &consts, wgpu::BufferUsages::STORAGE);
+        let arena = device.create_buffer(&wgpu::BufferDescriptor {
+            label: Some("tt-arena"),
+            size: (max_batch * stride_words.max(1) * 4) as u64,
+            usage: wgpu::BufferUsages::STORAGE
+                | wgpu::BufferUsages::COPY_SRC
+                | wgpu::BufferUsages::COPY_DST,
+            mapped_at_creation: false,
+        });
+        let bind_groups = dispatches
+            .iter()
+            .map(|d| {
+                let uniform =
+                    upload_words(device, "tt-uniform", &d.params, wgpu::BufferUsages::UNIFORM);
+                device.create_bind_group(&wgpu::BindGroupDescriptor {
+                    label: Some(d.kind.name()),
+                    layout: &bgl,
+                    entries: &[
+                        wgpu::BindGroupEntry { binding: 0, resource: arena.as_entire_binding() },
+                        wgpu::BindGroupEntry {
+                            binding: 1,
+                            resource: consts_buf.as_entire_binding(),
+                        },
+                        wgpu::BindGroupEntry { binding: 2, resource: uniform.as_entire_binding() },
+                    ],
+                })
+            })
+            .collect();
+
+        GpuPlan {
+            pipelines,
+            dispatches,
+            bind_groups,
+            arena,
+            layer_slots,
+            layer_copy,
+            n_copies,
+            input,
+            stride_words,
+            max_batch,
+            slot_bytes_total,
+        }
+    }
+
+    /// Per-sample device arena footprint in bytes — the liveness-planned
+    /// total, mirroring the CPU plan's `planned_peak_bytes` accounting.
+    pub fn arena_bytes_per_sample(&self) -> usize {
+        self.stride_words * 4
+    }
+
+    /// Sum of all (word-aligned) activation slot sizes — what the arena
+    /// would cost *without* liveness reuse.
+    pub fn slot_bytes_total(&self) -> usize {
+        self.slot_bytes_total
+    }
+
+    /// Number of compute dispatches per sample batch (`Flatten` is free).
+    pub fn num_dispatches(&self) -> usize {
+        self.dispatches.len()
+    }
+
+    /// The batch capacity the arena buffer was sized for.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn upload_inputs(&self, ctx: &GpuContext, xs: &[TensorF32]) {
+        assert!(!xs.is_empty() && xs.len() <= self.max_batch, "batch must fit the arena");
+        for (s, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.input.elems, "input shape mismatch");
+            let bytes: Vec<u8> = match self.input.prec {
+                Precision::Uint8 => {
+                    // Host-side input coercion, bit-identical to
+                    // run_forward's `QTensor::quantize_with`.
+                    let q = QTensor::quantize_with(x, self.input.qp);
+                    let mut b = q.values.data().to_vec();
+                    while b.len() % 4 != 0 {
+                        b.push(0);
+                    }
+                    b
+                }
+                Precision::Float32 => x.data().iter().flat_map(|f| f.to_le_bytes()).collect(),
+            };
+            let off = ((s * self.stride_words + self.input.word_off) * 4) as u64;
+            ctx.queue.write_buffer(&self.arena, off, &bytes);
+        }
+    }
+
+    fn encode_dispatch(&self, pass: &mut wgpu::ComputePass<'_>, i: usize, batch: u32) {
+        let d = &self.dispatches[i];
+        pass.set_pipeline(&self.pipelines[&d.kind]);
+        pass.set_bind_group(0, &self.bind_groups[i], &[]);
+        pass.dispatch_workgroups(d.x_threads.div_ceil(wgsl::WORKGROUP_SIZE), batch, 1);
+    }
+
+    /// Batched forward pass returning per-sample logits (the last layer's
+    /// activation, dequantized exactly like `Act::to_float`).
+    pub fn forward_batch(&self, ctx: &GpuContext, xs: &[TensorF32]) -> Vec<Vec<f32>> {
+        self.upload_inputs(ctx, xs);
+        let mut enc = ctx
+            .device
+            .create_command_encoder(&wgpu::CommandEncoderDescriptor { label: Some("tt-fwd") });
+        {
+            let mut pass = enc.begin_compute_pass(&wgpu::ComputePassDescriptor {
+                label: Some("tt-fwd"),
+                timestamp_writes: None,
+            });
+            for i in 0..self.dispatches.len() {
+                self.encode_dispatch(&mut pass, i, xs.len() as u32);
+            }
+        }
+        ctx.queue.submit([enc.finish()]);
+        let words = ctx.read_words(&self.arena, self.max_batch * self.stride_words);
+        let last = self.layer_slots.last().expect("model has at least one layer");
+        (0..xs.len()).map(|s| read_slot(&words, s, self.stride_words, last).to_float()).collect()
+    }
+
+    /// Batched forward pass that snapshots the arena after every layer's
+    /// producing dispatch (before liveness reuse can overwrite it) and
+    /// returns each sample's per-layer activations — the cross-validation
+    /// hook mirroring the CPU `FwdTrace::acts`.
+    pub fn forward_batch_captured(&self, ctx: &GpuContext, xs: &[TensorF32]) -> Vec<Vec<GpuAct>> {
+        self.upload_inputs(ctx, xs);
+        let total_words = self.max_batch * self.stride_words;
+        let capture = ctx.device.create_buffer(&wgpu::BufferDescriptor {
+            label: Some("tt-capture"),
+            size: (self.n_copies.max(1) * total_words * 4) as u64,
+            usage: wgpu::BufferUsages::COPY_DST | wgpu::BufferUsages::MAP_READ,
+            mapped_at_creation: false,
+        });
+        let mut enc = ctx
+            .device
+            .create_command_encoder(&wgpu::CommandEncoderDescriptor { label: Some("tt-fwd-cap") });
+        let mut copy_idx = 0usize;
+        for i in 0..self.dispatches.len() {
+            {
+                let mut pass = enc.begin_compute_pass(&wgpu::ComputePassDescriptor {
+                    label: None,
+                    timestamp_writes: None,
+                });
+                self.encode_dispatch(&mut pass, i, xs.len() as u32);
+            }
+            if !self.dispatches[i].capture_layers.is_empty() {
+                enc.copy_buffer_to_buffer(
+                    &self.arena,
+                    0,
+                    &capture,
+                    (copy_idx * total_words * 4) as u64,
+                    (total_words * 4) as u64,
+                );
+                copy_idx += 1;
+            }
+        }
+        ctx.queue.submit([enc.finish()]);
+        let words = ctx.map_and_read(&capture, self.n_copies * total_words);
+        (0..xs.len())
+            .map(|s| {
+                self.layer_slots
+                    .iter()
+                    .enumerate()
+                    .map(|(l, slot)| {
+                        let c = self.layer_copy[l];
+                        let region = &words[c * total_words..(c + 1) * total_words];
+                        read_slot(region, s, self.stride_words, slot)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,24 @@
+//! Alternate execution backends for compiled plans.
+//!
+//! The native engine executes an [`crate::graph::plan::ExecPlan`] on the
+//! CPU; this module hosts lowerings of the *same* compiled schedule onto
+//! other compute substrates — the server-side half of the paper's
+//! deployment story (pre-training and fleet scoring happen off-device,
+//! only adaptation runs on the MCU):
+//!
+//!  * [`wgsl`] — the WGSL compute-shader sources for every plan step,
+//!    plus Rust scalar mirrors of their quantized arithmetic. Always
+//!    compiled (plain string templates, no GPU dependency), so the
+//!    shader-side numerics are unit-tested against
+//!    [`crate::quant`]'s formulas in the default dependency-free build.
+//!  * `gpu` (feature `gpu`) — the wgpu device plumbing: `GpuContext`
+//!    adapter/device acquisition and `GpuPlan`, which lowers an
+//!    `ExecPlan`'s step descriptions ([`crate::graph::plan::StepDesc`])
+//!    onto compute pipelines with a liveness-reused arena buffer
+//!    mirroring the plan's `planned_peak_bytes` accounting. See
+//!    DESIGN.md §12.
+
+pub mod wgsl;
+
+#[cfg(feature = "gpu")]
+pub mod gpu;

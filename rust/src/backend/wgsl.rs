@@ -1,0 +1,695 @@
+//! WGSL compute-shader sources for the GPU lowering of a compiled plan,
+//! plus Rust scalar mirrors of their quantized arithmetic.
+//!
+//! Every plan step lowers to one entry point built from a shared prelude:
+//!
+//!  * **bindings** — `@binding(0)` is the whole per-run activation arena
+//!    as one `array<u32>` (uint8 activations ride four lanes per word,
+//!    float activations one bitcast word per value); `@binding(1)` holds
+//!    the immutable constants (weights, quantized biases) uploaded once
+//!    per plan; `@binding(2)` is a 32-word uniform with the per-step
+//!    offsets and scalars (see [`slot`]). Binding the arena once with
+//!    per-step offsets in the uniform sidesteps buffer-aliasing
+//!    validation entirely — steps never bind overlapping sub-ranges.
+//!  * **batching** — each sample occupies one arena region of
+//!    [`slot::STRIDE_WORDS`] words; `global_invocation_id.y` selects the
+//!    sample, `.x` the output word (uint8 shaders write one whole output
+//!    word — four lanes — per invocation, so no read-modify-write races).
+//!  * **numerics** — integer accumulation is exact; requantization uses
+//!    [`round_half_away`], a `trunc`-based round-half-away-from-zero
+//!    that is bit-identical to Rust `f32::round` for every finite input
+//!    (`x - trunc(x)` is exact, so the 0.5 comparison never suffers the
+//!    binade-boundary rounding of the `floor(x + 0.5)` trick). WGSL
+//!    float→int conversion saturates, matching Rust `as` casts. The one
+//!    caveat is the float→uint8 [`ShaderKind::Quantize`] boundary: WGSL
+//!    division is only 2.5 ULP, so `x / scale` may differ from the
+//!    host's correctly-rounded division — no shipping configuration
+//!    produces that crossing (see `graph::plan::folds_dequant` docs),
+//!    and the cross-validation grid never schedules it. Float layers are
+//!    tolerance-tiered (WGSL may contract `a * b + c` to fma).
+//!
+//! The sources are plain strings: they compile — and their arithmetic is
+//! unit-tested against [`crate::quant`]'s scalar formulas via the mirror
+//! functions below — in the default dependency-free build. Only the
+//! device plumbing (`backend::gpu`) needs the `wgpu` crate.
+
+/// Number of `u32` words in the per-step uniform parameter block.
+pub const PARAM_WORDS: usize = 32;
+
+/// Invocations per workgroup along `x` (output words / elements).
+pub const WORKGROUP_SIZE: u32 = 64;
+
+/// Uniform-word indices of the per-step parameter block. One layout is
+/// shared by every shader; unused slots stay zero. Integer-valued slots
+/// are stored as the bit pattern of the `i32`/`u32`; float-valued slots
+/// (`MULT`) as `f32::to_bits`.
+pub mod slot {
+    /// Input slot offset within a sample's arena region, in words.
+    pub const IN_OFF: usize = 0;
+    /// Output slot offset within a sample's arena region, in words.
+    pub const OUT_OFF: usize = 1;
+    /// Per-sample arena region stride, in words.
+    pub const STRIDE_WORDS: usize = 2;
+    /// Batch capacity the arena was sized for.
+    pub const BATCH: usize = 3;
+    /// Weight base offset into the constants buffer, in words.
+    pub const W_OFF: usize = 4;
+    /// Bias base offset into the constants buffer, in words.
+    pub const B_OFF: usize = 5;
+    /// Conv: input channels per filter (1 if depthwise). Linear: `n_in`.
+    pub const CIN_PF: usize = 6;
+    /// Linear alias of [`CIN_PF`].
+    pub const N_IN: usize = 6;
+    /// Conv kernel height; pool window height.
+    pub const KH: usize = 8;
+    /// Conv kernel width; pool window width.
+    pub const KW: usize = 9;
+    /// Conv stride.
+    pub const CONV_STRIDE: usize = 10;
+    /// Conv vertical padding (as `i32`).
+    pub const PAD_H: usize = 11;
+    /// Conv horizontal padding (as `i32`).
+    pub const PAD_W: usize = 12;
+    /// Conv: 1 if depthwise, 0 otherwise.
+    pub const DEPTHWISE: usize = 13;
+    /// Input spatial height.
+    pub const IH: usize = 14;
+    /// Input spatial width.
+    pub const IW: usize = 15;
+    /// Output spatial height.
+    pub const OH: usize = 16;
+    /// Output spatial width.
+    pub const OW: usize = 17;
+    /// Input zero point (`i32`); quantize/dequantize boundary zero point.
+    pub const ZX: usize = 18;
+    /// Weight zero point (`i32`).
+    pub const ZW: usize = 19;
+    /// Output zero point (`i32`).
+    pub const Z_OUT: usize = 20;
+    /// 1 to fold ReLU into the epilogue, 0 otherwise.
+    pub const RELU: usize = 21;
+    /// Requantization multiplier (`f32` bits); boundary scale for
+    /// quantize/dequantize.
+    pub const MULT: usize = 22;
+    /// Number of output elements per sample.
+    pub const OUT_ELEMS: usize = 23;
+}
+
+/// One compute shader per plan-step kind (see
+/// [`crate::graph::plan::StepDesc`]; `Flatten` lowers to no dispatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShaderKind {
+    /// Quantized convolution (dense or depthwise), requantizing epilogue.
+    QConv,
+    /// Float convolution.
+    FConv,
+    /// Quantized fully-connected layer, requantizing epilogue.
+    QLinear,
+    /// Float fully-connected layer.
+    FLinear,
+    /// Non-overlapping uint8 max pool.
+    QMaxPool,
+    /// Non-overlapping float max pool.
+    FMaxPool,
+    /// Uint8 global average pool (requantizing, Eq. 4 multiplier).
+    QGap,
+    /// Float global average pool.
+    FGap,
+    /// Float → uint8 precision boundary (see the division caveat above).
+    Quantize,
+    /// Uint8 → float precision boundary (exact).
+    Dequantize,
+}
+
+/// Every shader kind, for exhaustive tests and pipeline warm-up.
+pub const ALL_KINDS: [ShaderKind; 10] = [
+    ShaderKind::QConv,
+    ShaderKind::FConv,
+    ShaderKind::QLinear,
+    ShaderKind::FLinear,
+    ShaderKind::QMaxPool,
+    ShaderKind::FMaxPool,
+    ShaderKind::QGap,
+    ShaderKind::FGap,
+    ShaderKind::Quantize,
+    ShaderKind::Dequantize,
+];
+
+impl ShaderKind {
+    /// Stable label used for pipeline/debug names and perf rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShaderKind::QConv => "qconv",
+            ShaderKind::FConv => "fconv",
+            ShaderKind::QLinear => "qlinear",
+            ShaderKind::FLinear => "flinear",
+            ShaderKind::QMaxPool => "qmaxpool",
+            ShaderKind::FMaxPool => "fmaxpool",
+            ShaderKind::QGap => "qgap",
+            ShaderKind::FGap => "fgap",
+            ShaderKind::Quantize => "quantize",
+            ShaderKind::Dequantize => "dequantize",
+        }
+    }
+}
+
+/// Shared prelude: bindings, uniform accessors, lane helpers, and the
+/// requantization arithmetic every quantized epilogue funnels through.
+const PRELUDE: &str = r#"
+struct Params {
+    v: array<vec4<u32>, 8>,
+}
+
+@group(0) @binding(0) var<storage, read_write> arena: array<u32>;
+@group(0) @binding(1) var<storage, read> consts: array<u32>;
+@group(0) @binding(2) var<uniform> p: Params;
+
+fn pu(i: u32) -> u32 {
+    return p.v[i / 4u][i % 4u];
+}
+
+fn pi(i: u32) -> i32 {
+    return bitcast<i32>(pu(i));
+}
+
+fn pf(i: u32) -> f32 {
+    return bitcast<f32>(pu(i));
+}
+
+fn arena_u8(base_w: u32, idx: u32) -> u32 {
+    return (arena[base_w + idx / 4u] >> (8u * (idx % 4u))) & 0xFFu;
+}
+
+fn arena_f32(base_w: u32, idx: u32) -> f32 {
+    return bitcast<f32>(arena[base_w + idx]);
+}
+
+fn const_u8(base_w: u32, idx: u32) -> u32 {
+    return (consts[base_w + idx / 4u] >> (8u * (idx % 4u))) & 0xFFu;
+}
+
+fn const_i32(base_w: u32, idx: u32) -> i32 {
+    return bitcast<i32>(consts[base_w + idx]);
+}
+
+fn const_f32(base_w: u32, idx: u32) -> f32 {
+    return bitcast<f32>(consts[base_w + idx]);
+}
+
+// Round half away from zero, bit-identical to Rust f32::round for every
+// finite x: x - trunc(x) is exact (Sterbenz), so the 0.5 comparison is
+// decided on the true fraction. sign(x) is never taken at x == 0 inside
+// the branch (|frac| >= 0.5 implies x != 0).
+fn round_half_away(x: f32) -> f32 {
+    let t = trunc(x);
+    let fr = x - t;
+    if abs(fr) >= 0.5 {
+        return t + sign(x);
+    }
+    return t;
+}
+
+// Mirror of quant::requantize: f32->i32 conversion saturates in WGSL,
+// matching Rust `as` casts.
+fn requantize_q(acc: i32, mult: f32, z_out: i32, relu: u32) -> u32 {
+    let v = i32(round_half_away(f32(acc) * mult)) + z_out;
+    var lo = 0;
+    if relu != 0u {
+        lo = clamp(z_out, 0, 255);
+    }
+    return u32(clamp(v, lo, 255));
+}
+"#;
+
+const QCONV: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    let out_words = (out_elems + 3u) / 4u;
+    if gid.x >= out_words || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let w_off = pu(4u);
+    let b_off = pu(5u);
+    let cin_pf = pu(6u);
+    let kh = pu(8u);
+    let kw = pu(9u);
+    let sv = pu(10u);
+    let pad_h = pi(11u);
+    let pad_w = pi(12u);
+    let dw = pu(13u);
+    let ih = pu(14u);
+    let iw = pu(15u);
+    let oh = pu(16u);
+    let ow = pu(17u);
+    let zx = pi(18u);
+    let zw = pi(19u);
+    var out_word = 0u;
+    for (var lane = 0u; lane < 4u; lane = lane + 1u) {
+        let idx = gid.x * 4u + lane;
+        if idx >= out_elems {
+            break;
+        }
+        let co = idx / (oh * ow);
+        let oy = (idx / ow) % oh;
+        let ox = idx % ow;
+        var acc = const_i32(b_off, co);
+        for (var cf = 0u; cf < cin_pf; cf = cf + 1u) {
+            var ci = cf;
+            if dw != 0u {
+                ci = co;
+            }
+            for (var ky = 0u; ky < kh; ky = ky + 1u) {
+                let iy = i32(oy * sv + ky) - pad_h;
+                if iy < 0 || iy >= i32(ih) {
+                    continue;
+                }
+                for (var kx = 0u; kx < kw; kx = kx + 1u) {
+                    let ix = i32(ox * sv + kx) - pad_w;
+                    if ix < 0 || ix >= i32(iw) {
+                        continue;
+                    }
+                    let x_idx = (ci * ih + u32(iy)) * iw + u32(ix);
+                    let w_idx = ((co * cin_pf + cf) * kh + ky) * kw + kx;
+                    let xv = i32(arena_u8(in_base, x_idx)) - zx;
+                    let wv = i32(const_u8(w_off, w_idx)) - zw;
+                    acc = acc + xv * wv;
+                }
+            }
+        }
+        out_word = out_word | (requantize_q(acc, pf(22u), pi(20u), pu(21u)) << (8u * lane));
+    }
+    arena[out_base + gid.x] = out_word;
+}
+"#;
+
+const FCONV: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    if gid.x >= out_elems || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let w_off = pu(4u);
+    let b_off = pu(5u);
+    let cin_pf = pu(6u);
+    let kh = pu(8u);
+    let kw = pu(9u);
+    let sv = pu(10u);
+    let pad_h = pi(11u);
+    let pad_w = pi(12u);
+    let dw = pu(13u);
+    let ih = pu(14u);
+    let iw = pu(15u);
+    let oh = pu(16u);
+    let ow = pu(17u);
+    let idx = gid.x;
+    let co = idx / (oh * ow);
+    let oy = (idx / ow) % oh;
+    let ox = idx % ow;
+    var acc = const_f32(b_off, co);
+    for (var cf = 0u; cf < cin_pf; cf = cf + 1u) {
+        var ci = cf;
+        if dw != 0u {
+            ci = co;
+        }
+        for (var ky = 0u; ky < kh; ky = ky + 1u) {
+            let iy = i32(oy * sv + ky) - pad_h;
+            if iy < 0 || iy >= i32(ih) {
+                continue;
+            }
+            for (var kx = 0u; kx < kw; kx = kx + 1u) {
+                let ix = i32(ox * sv + kx) - pad_w;
+                if ix < 0 || ix >= i32(iw) {
+                    continue;
+                }
+                let x_idx = (ci * ih + u32(iy)) * iw + u32(ix);
+                let w_idx = ((co * cin_pf + cf) * kh + ky) * kw + kx;
+                acc = acc + arena_f32(in_base, x_idx) * const_f32(w_off, w_idx);
+            }
+        }
+    }
+    if pu(21u) != 0u {
+        acc = max(acc, 0.0);
+    }
+    arena[out_base + idx] = bitcast<u32>(acc);
+}
+"#;
+
+const QLINEAR: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    let out_words = (out_elems + 3u) / 4u;
+    if gid.x >= out_words || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let w_off = pu(4u);
+    let b_off = pu(5u);
+    let n_in = pu(6u);
+    let zx = pi(18u);
+    let zw = pi(19u);
+    var out_word = 0u;
+    for (var lane = 0u; lane < 4u; lane = lane + 1u) {
+        let o = gid.x * 4u + lane;
+        if o >= out_elems {
+            break;
+        }
+        var acc = const_i32(b_off, o);
+        for (var j = 0u; j < n_in; j = j + 1u) {
+            let xv = i32(arena_u8(in_base, j)) - zx;
+            let wv = i32(const_u8(w_off, o * n_in + j)) - zw;
+            acc = acc + xv * wv;
+        }
+        out_word = out_word | (requantize_q(acc, pf(22u), pi(20u), pu(21u)) << (8u * lane));
+    }
+    arena[out_base + gid.x] = out_word;
+}
+"#;
+
+const FLINEAR: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    if gid.x >= out_elems || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let w_off = pu(4u);
+    let b_off = pu(5u);
+    let n_in = pu(6u);
+    let o = gid.x;
+    var acc = const_f32(b_off, o);
+    for (var j = 0u; j < n_in; j = j + 1u) {
+        acc = acc + arena_f32(in_base, j) * const_f32(w_off, o * n_in + j);
+    }
+    if pu(21u) != 0u {
+        acc = max(acc, 0.0);
+    }
+    arena[out_base + o] = bitcast<u32>(acc);
+}
+"#;
+
+const QMAXPOOL: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    let out_words = (out_elems + 3u) / 4u;
+    if gid.x >= out_words || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let kh = pu(8u);
+    let kw = pu(9u);
+    let ih = pu(14u);
+    let iw = pu(15u);
+    let oh = pu(16u);
+    let ow = pu(17u);
+    var out_word = 0u;
+    for (var lane = 0u; lane < 4u; lane = lane + 1u) {
+        let idx = gid.x * 4u + lane;
+        if idx >= out_elems {
+            break;
+        }
+        let c = idx / (oh * ow);
+        let oy = (idx / ow) % oh;
+        let ox = idx % ow;
+        var m = 0u;
+        for (var ky = 0u; ky < kh; ky = ky + 1u) {
+            for (var kx = 0u; kx < kw; kx = kx + 1u) {
+                let x_idx = (c * ih + (oy * kh + ky)) * iw + (ox * kw + kx);
+                m = max(m, arena_u8(in_base, x_idx));
+            }
+        }
+        out_word = out_word | (m << (8u * lane));
+    }
+    arena[out_base + gid.x] = out_word;
+}
+"#;
+
+const FMAXPOOL: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    if gid.x >= out_elems || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let kh = pu(8u);
+    let kw = pu(9u);
+    let ih = pu(14u);
+    let iw = pu(15u);
+    let oh = pu(16u);
+    let ow = pu(17u);
+    let idx = gid.x;
+    let c = idx / (oh * ow);
+    let oy = (idx / ow) % oh;
+    let ox = idx % ow;
+    var m = arena_f32(in_base, (c * ih + oy * kh) * iw + ox * kw);
+    for (var ky = 0u; ky < kh; ky = ky + 1u) {
+        for (var kx = 0u; kx < kw; kx = kx + 1u) {
+            let x_idx = (c * ih + (oy * kh + ky)) * iw + (ox * kw + kx);
+            m = max(m, arena_f32(in_base, x_idx));
+        }
+    }
+    arena[out_base + idx] = bitcast<u32>(m);
+}
+"#;
+
+const QGAP: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    let out_words = (out_elems + 3u) / 4u;
+    if gid.x >= out_words || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let hw = pu(14u) * pu(15u);
+    let zx = pi(18u);
+    var out_word = 0u;
+    for (var lane = 0u; lane < 4u; lane = lane + 1u) {
+        let c = gid.x * 4u + lane;
+        if c >= out_elems {
+            break;
+        }
+        var acc = 0;
+        for (var j = 0u; j < hw; j = j + 1u) {
+            acc = acc + i32(arena_u8(in_base, c * hw + j)) - zx;
+        }
+        out_word = out_word | (requantize_q(acc, pf(22u), pi(20u), 0u) << (8u * lane));
+    }
+    arena[out_base + gid.x] = out_word;
+}
+"#;
+
+const FGAP: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    if gid.x >= out_elems || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let hw = pu(14u) * pu(15u);
+    let c = gid.x;
+    var acc = 0.0;
+    for (var j = 0u; j < hw; j = j + 1u) {
+        acc = acc + arena_f32(in_base, c * hw + j);
+    }
+    arena[out_base + c] = bitcast<u32>(acc / f32(hw));
+}
+"#;
+
+const QUANTIZE: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    let out_words = (out_elems + 3u) / 4u;
+    if gid.x >= out_words || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let zp = pi(18u);
+    let scale = pf(22u);
+    var out_word = 0u;
+    for (var lane = 0u; lane < 4u; lane = lane + 1u) {
+        let idx = gid.x * 4u + lane;
+        if idx >= out_elems {
+            break;
+        }
+        let q = clamp(i32(round_half_away(arena_f32(in_base, idx) / scale)) + zp, 0, 255);
+        out_word = out_word | (u32(q) << (8u * lane));
+    }
+    arena[out_base + gid.x] = out_word;
+}
+"#;
+
+const DEQUANTIZE: &str = r#"
+@compute @workgroup_size(64)
+fn main(@builtin(global_invocation_id) gid: vec3<u32>) {
+    let out_elems = pu(23u);
+    if gid.x >= out_elems || gid.y >= pu(3u) {
+        return;
+    }
+    let in_base = pu(0u) + gid.y * pu(2u);
+    let out_base = pu(1u) + gid.y * pu(2u);
+    let zp = pi(18u);
+    let scale = pf(22u);
+    let q = i32(arena_u8(in_base, gid.x));
+    arena[out_base + gid.x] = bitcast<u32>(f32(q - zp) * scale);
+}
+"#;
+
+/// The full WGSL source (prelude + entry point) for one shader kind.
+pub fn source(kind: ShaderKind) -> String {
+    let body = match kind {
+        ShaderKind::QConv => QCONV,
+        ShaderKind::FConv => FCONV,
+        ShaderKind::QLinear => QLINEAR,
+        ShaderKind::FLinear => FLINEAR,
+        ShaderKind::QMaxPool => QMAXPOOL,
+        ShaderKind::FMaxPool => FMAXPOOL,
+        ShaderKind::QGap => QGAP,
+        ShaderKind::FGap => FGAP,
+        ShaderKind::Quantize => QUANTIZE,
+        ShaderKind::Dequantize => DEQUANTIZE,
+    };
+    format!("{PRELUDE}{body}")
+}
+
+/// Rust mirror of the WGSL `round_half_away`: round half away from zero
+/// via the exact fraction `x - trunc(x)`. Bit-identical to `f32::round`
+/// for every finite input (and agreeing on ±inf/NaN propagation), unlike
+/// the `floor(|x| + 0.5)` formulation, which misrounds just below
+/// odd-multiple-of-0.5 binade boundaries where `|x| + 0.5` ties to even.
+pub fn round_half_away(x: f32) -> f32 {
+    let t = x.trunc();
+    let fr = x - t;
+    if fr.abs() >= 0.5 {
+        // x != 0 here, so signum is ±1 exactly like WGSL sign().
+        t + x.signum()
+    } else {
+        t
+    }
+}
+
+/// Rust mirror of the WGSL `requantize_q` epilogue. Must stay value-equal
+/// to [`crate::quant::requantize`] — the unit tests below pin it.
+pub fn requantize_mirror(acc: i32, mult: f32, z_out: i32, relu: bool) -> u8 {
+    let v = round_half_away(acc as f32 * mult) as i32 + z_out;
+    let lo = if relu { z_out.clamp(0, 255) } else { 0 };
+    v.clamp(lo, 255) as u8
+}
+
+/// Rust mirror of the WGSL `Quantize` boundary body (host-side division;
+/// the WGSL division itself is 2.5 ULP — see the module caveat).
+pub fn quantize_mirror(v: f32, scale: f32, zero_point: i32) -> u8 {
+    (round_half_away(v / scale) as i32 + zero_point).clamp(0, 255) as u8
+}
+
+/// Rust mirror of the WGSL `Dequantize` boundary body (exact).
+pub fn dequantize_mirror(q: u8, scale: f32, zero_point: i32) -> f32 {
+    (q as i32 - zero_point) as f32 * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{requantize, QParams};
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn round_half_away_matches_f32_round() {
+        // Adversarial set: exact halves, values one ULP below a half at a
+        // binade boundary (where floor(|x| + 0.5) misrounds), huge values
+        // past integer precision, signed zeros.
+        let mut cases = vec![
+            0.0f32, -0.0, 0.25, -0.25, 0.5, -0.5, 0.75, 1.5, -1.5, 2.5, -2.5, 126.5, 127.5,
+            -127.5, 8388607.5_f32, 1e10, -1e10, 3.4e38,
+        ];
+        for base in [0.5f32, 1.5, 127.5, 255.5, 8191.5] {
+            cases.push(f32::from_bits(base.to_bits() - 1));
+            cases.push(-f32::from_bits(base.to_bits() - 1));
+            cases.push(f32::from_bits(base.to_bits() + 1));
+        }
+        let mut rng = Pcg32::seeded(0xF00D);
+        for _ in 0..200_000 {
+            cases.push(rng.uniform(-1e6, 1e6));
+            cases.push(rng.uniform(-2.0, 2.0));
+        }
+        for x in cases {
+            assert_eq!(
+                round_half_away(x).to_bits(),
+                x.round().to_bits(),
+                "x = {x} ({:#010x})",
+                x.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn wgsl_requantize_matches_scalar_formula() {
+        // The shader epilogue must agree with quant::requantize (Eq. 4)
+        // over accumulator sweeps, both relu modes, and multiplier signs
+        // that exercise rounding, clamping, and the relu floor.
+        let mults = [0.0173f32, 0.5, 1.0, 0.001, 3.7, 1.0 / 3.0];
+        let zs = [0i32, 13, 128, 255];
+        for &mult in &mults {
+            for &z in &zs {
+                for relu in [false, true] {
+                    for acc in -70_000..70_000 {
+                        assert_eq!(
+                            requantize_mirror(acc, mult, z, relu),
+                            requantize(acc, mult, z, relu),
+                            "acc={acc} mult={mult} z={z} relu={relu}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wgsl_quantize_dequantize_match_qparams() {
+        let qp = QParams { scale: 0.0173, zero_point: 77 };
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..100_000 {
+            let v = rng.uniform(-4.0, 4.0);
+            assert_eq!(quantize_mirror(v, qp.scale, qp.zero_point), qp.quantize(v), "v = {v}");
+        }
+        for q in 0..=255u8 {
+            assert_eq!(
+                dequantize_mirror(q, qp.scale, qp.zero_point).to_bits(),
+                qp.dequantize(q).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn shader_sources_are_well_formed() {
+        for kind in ALL_KINDS {
+            let src = source(kind);
+            assert!(src.contains("@compute @workgroup_size(64)"), "{kind:?}");
+            assert!(src.contains("fn main(@builtin(global_invocation_id)"), "{kind:?}");
+            assert!(src.contains("var<storage, read_write> arena"), "{kind:?}");
+            assert!(src.contains("var<uniform> p: Params"), "{kind:?}");
+            let open = src.matches('{').count();
+            let close = src.matches('}').count();
+            assert_eq!(open, close, "unbalanced braces in {kind:?}");
+            assert!(!kind.name().is_empty());
+        }
+    }
+}

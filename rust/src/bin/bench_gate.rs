@@ -45,6 +45,10 @@
 //!     `subbyte_model_bytes` row must report `w4_ratio` ≤ 0.6 and
 //!     `w2_ratio` ≤ 0.35 — pure packing arithmetic, so a drift means the
 //!     byte accounting broke. Both self-skip when the rows are absent.
+//!     Every self-skipping floor (SIMD, sub-byte, fleet, fused) announces
+//!     its skip with a `bench_gate: SKIP …` line naming the missing row
+//!     table, so a gate that silently stopped checking is visible in the
+//!     CI log instead of reading as a pass.
 //!  4. **baseline diff** — per matching row key, `*seconds*` fields may
 //!     grow at most `tol`× over the baseline and `*speedup*` fields may
 //!     shrink at most `tol`× under it. Rows present on only one side are
@@ -234,6 +238,8 @@ fn main() -> ExitCode {
                  (TT_BENCH_GATE_FUSED_FLOOR)"
             ));
         }
+    } else {
+        println!("bench_gate: SKIP fused-epilogue floor — no gemm_fused_epilogue rows");
     }
 
     // 3c. SIMD dispatch floor: wherever the autotuned plan elects the
@@ -263,6 +269,11 @@ fn main() -> ExitCode {
                  (TT_BENCH_GATE_SIMD_FLOOR)"
             ));
         }
+    } else {
+        println!(
+            "bench_gate: SKIP simd-vs-scalar floor — no gemm_simd_vs_scalar / \
+             dwconv_simd_vs_scalar rows"
+        );
     }
 
     // 3d. sub-byte floors. First the unpack-overhead geomean: the packed
@@ -290,11 +301,17 @@ fn main() -> ExitCode {
                  (TT_BENCH_GATE_SUBBYTE_FLOOR)"
             ));
         }
+    } else {
+        println!("bench_gate: SKIP sub-byte unpack floor — no subbyte_unpack_overhead rows");
     }
-    for row in fresh
+    let byte_rows: Vec<&Json> = fresh
         .iter()
         .filter(|row| row.get("kernel").as_str() == Some("subbyte_model_bytes"))
-    {
+        .collect();
+    if byte_rows.is_empty() {
+        println!("bench_gate: SKIP sub-byte packing ceilings — no subbyte_model_bytes rows");
+    }
+    for row in byte_rows {
         let model = row.get("model").as_str().unwrap_or("?");
         for (field, ceiling) in [("w4_ratio", 0.6), ("w2_ratio", 0.35)] {
             if let Some(ratio) = row.get(field).as_f64() {
@@ -324,7 +341,11 @@ fn main() -> ExitCode {
             (tenants >= 100.0).then_some((tenants, ratio))
         })
         .collect();
-    if !fleet_ratios.is_empty() {
+    if fleet_ratios.is_empty() {
+        println!(
+            "bench_gate: SKIP fleet sharing floor — no fleet_session rows with >= 100 tenants"
+        );
+    } else {
         let floor = fleet_floor();
         for &(tenants, ratio) in &fleet_ratios {
             println!(

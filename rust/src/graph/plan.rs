@@ -41,7 +41,7 @@ use crate::graph::ops::{
 use crate::graph::packs::KernelChoice;
 use crate::graph::{DnnConfig, LayerKind, ModelDef, Precision};
 use crate::kernels::simd::tune;
-use crate::kernels::OpCounter;
+use crate::kernels::{ConvGeom, OpCounter};
 use crate::memplan::{allocate_arena, ArenaItem, ArenaPlan, Scratch, ScratchSpec};
 use crate::quant::observer::MinMaxObserver;
 use crate::quant::subbyte::WBits;
@@ -51,6 +51,11 @@ use crate::tensor::TensorF32;
 /// A compiled execution schedule for one deployed model configuration.
 pub struct ExecPlan {
     ops: Vec<Box<dyn LayerOp>>,
+    /// Backend-neutral description of each schedule step, recorded in the
+    /// same compile loop that boxes `ops`: `steps[k]` describes `ops[k]`
+    /// one-for-one. Alternate executors (the wgpu/WGSL lowering in
+    /// `backend::gpu`) read this instead of downcasting trait objects.
+    steps: Vec<StepDesc>,
     /// Liveness-planned activation arena for a full training step.
     arena: ArenaPlan,
     /// Peak feature-arena bytes of the planned training step.
@@ -72,6 +77,56 @@ pub struct ExecPlan {
     /// precision boundaries into their producers (see
     /// [`ExecPlan::compile_with`]).
     fused: bool,
+}
+
+/// Pure-data description of one plan step — the geometry and
+/// quantization-parameter slots behind the matching [`LayerOp`] in
+/// [`ExecPlan::ops`], without the executor behavior attached.
+///
+/// Recorded by the compile loop at every op push, so any alternate backend
+/// can lower the *identical* schedule (same boundary-op placement, same
+/// fold decisions) from plain data. The wgpu/WGSL backend (`backend::gpu`)
+/// is the first consumer; it lowers the unfused schedule, where
+/// `fold_dequant` is always `false` and every precision crossing appears
+/// as an explicit [`StepDesc::Quantize`] / [`StepDesc::Dequantize`] step.
+#[derive(Clone, Debug)]
+pub enum StepDesc {
+    /// Float → uint8 boundary into layer `layer`'s staging slot, using the
+    /// quantization parameters resolved from `qp` at run time.
+    Quantize { layer: usize, qp: QpSlot },
+    /// Uint8 → float boundary into layer `layer`'s staging slot.
+    Dequantize { layer: usize },
+    /// Quantized convolution (dense or depthwise, per `geom.depthwise`).
+    /// `fold_dequant` marks the fused-plan variant that also emits the
+    /// dequantized float copy from its epilogue.
+    QConv {
+        layer: usize,
+        geom: ConvGeom,
+        relu: bool,
+        in_qp: QpSlot,
+        in_h: usize,
+        in_w: usize,
+        fold_dequant: bool,
+    },
+    /// Float convolution.
+    FConv { layer: usize, geom: ConvGeom, relu: bool, in_h: usize, in_w: usize },
+    /// Quantized fully-connected layer (see `QConv` for `fold_dequant`).
+    QLinear {
+        layer: usize,
+        n_in: usize,
+        n_out: usize,
+        relu: bool,
+        in_qp: QpSlot,
+        fold_dequant: bool,
+    },
+    /// Float fully-connected layer.
+    FLinear { layer: usize, n_in: usize, n_out: usize, relu: bool },
+    /// Non-overlapping max pool with window `k` (precision-preserving).
+    MaxPool { layer: usize, k: usize, in_shape: Vec<usize> },
+    /// Global average pool (requantizing in uint8, plain mean in float).
+    GlobalAvgPool { layer: usize, in_shape: Vec<usize> },
+    /// Zero-copy reshape: aliases the producer's buffer, no compute.
+    Flatten { layer: usize, out_len: usize },
 }
 
 /// Whether plans compile in fused-epilogue mode by default: `true` unless
@@ -302,6 +357,7 @@ impl ExecPlan {
         // only (transfer-learning tails keep arenas small).
         let stop = def.first_trainable().unwrap_or(def.layers.len());
         let mut ops: Vec<Box<dyn LayerOp>> = Vec::with_capacity(def.layers.len() + 2);
+        let mut steps: Vec<StepDesc> = Vec::with_capacity(def.layers.len() + 2);
         let mut spec = ScratchSpec::default();
         let mut choices: Vec<Option<KernelChoice>> = vec![None; def.layers.len()];
         for (i, l) in def.layers.iter().enumerate() {
@@ -310,7 +366,8 @@ impl ExecPlan {
             if prec[i] != prev {
                 match prec[i] {
                     Precision::Uint8 => {
-                        ops.push(Box::new(QuantizeOp { layer: i, qp: in_qp_slot(def, i) }))
+                        ops.push(Box::new(QuantizeOp { layer: i, qp: in_qp_slot(def, i) }));
+                        steps.push(StepDesc::Quantize { layer: i, qp: in_qp_slot(def, i) });
                     }
                     // A foldable dequantize boundary is deleted from the
                     // fused schedule: its producer emits the float staging
@@ -318,7 +375,8 @@ impl ExecPlan {
                     // quantization (backward).
                     Precision::Float32 => {
                         if !(fused && i > 0 && folds_dequant(def, &prec, i - 1)) {
-                            ops.push(Box::new(DequantizeOp { layer: i }))
+                            ops.push(Box::new(DequantizeOp { layer: i }));
+                            steps.push(StepDesc::Dequantize { layer: i });
                         }
                     }
                 }
@@ -428,25 +486,46 @@ impl ExecPlan {
                         }
                     });
                     match prec[i] {
-                        Precision::Uint8 => ops.push(Box::new(QConvOp {
-                            layer: i,
-                            name: l.name.clone(),
-                            geom: *geom,
-                            relu: *relu,
-                            in_qp: in_qp_slot(def, i),
-                            in_h: in_shape[1],
-                            in_w: in_shape[2],
-                            fused,
-                            fold_dequant: fused && folds_dequant(def, &prec, i),
-                        })),
-                        Precision::Float32 => ops.push(Box::new(FConvOp {
-                            layer: i,
-                            name: l.name.clone(),
-                            geom: *geom,
-                            relu: *relu,
-                            in_h: in_shape[1],
-                            in_w: in_shape[2],
-                        })),
+                        Precision::Uint8 => {
+                            let fold_dequant = fused && folds_dequant(def, &prec, i);
+                            ops.push(Box::new(QConvOp {
+                                layer: i,
+                                name: l.name.clone(),
+                                geom: *geom,
+                                relu: *relu,
+                                in_qp: in_qp_slot(def, i),
+                                in_h: in_shape[1],
+                                in_w: in_shape[2],
+                                fused,
+                                fold_dequant,
+                            }));
+                            steps.push(StepDesc::QConv {
+                                layer: i,
+                                geom: *geom,
+                                relu: *relu,
+                                in_qp: in_qp_slot(def, i),
+                                in_h: in_shape[1],
+                                in_w: in_shape[2],
+                                fold_dequant,
+                            });
+                        }
+                        Precision::Float32 => {
+                            ops.push(Box::new(FConvOp {
+                                layer: i,
+                                name: l.name.clone(),
+                                geom: *geom,
+                                relu: *relu,
+                                in_h: in_shape[1],
+                                in_w: in_shape[2],
+                            }));
+                            steps.push(StepDesc::FConv {
+                                layer: i,
+                                geom: *geom,
+                                relu: *relu,
+                                in_h: in_shape[1],
+                                in_w: in_shape[2],
+                            });
+                        }
                     }
                 }
                 LayerKind::Linear { n_in, n_out, relu } => {
@@ -492,29 +571,51 @@ impl ExecPlan {
                         bwd_weight: tune::prefer_dot(1),
                     });
                     match prec[i] {
-                        Precision::Uint8 => ops.push(Box::new(QLinearOp {
-                            layer: i,
-                            name: l.name.clone(),
-                            relu: *relu,
-                            in_qp: in_qp_slot(def, i),
-                            fused,
-                            fold_dequant: fused && folds_dequant(def, &prec, i),
-                        })),
-                        Precision::Float32 => ops.push(Box::new(FLinearOp {
-                            layer: i,
-                            name: l.name.clone(),
-                            relu: *relu,
-                        })),
+                        Precision::Uint8 => {
+                            let fold_dequant = fused && folds_dequant(def, &prec, i);
+                            ops.push(Box::new(QLinearOp {
+                                layer: i,
+                                name: l.name.clone(),
+                                relu: *relu,
+                                in_qp: in_qp_slot(def, i),
+                                fused,
+                                fold_dequant,
+                            }));
+                            steps.push(StepDesc::QLinear {
+                                layer: i,
+                                n_in: *n_in,
+                                n_out: *n_out,
+                                relu: *relu,
+                                in_qp: in_qp_slot(def, i),
+                                fold_dequant,
+                            });
+                        }
+                        Precision::Float32 => {
+                            ops.push(Box::new(FLinearOp {
+                                layer: i,
+                                name: l.name.clone(),
+                                relu: *relu,
+                            }));
+                            steps.push(StepDesc::FLinear {
+                                layer: i,
+                                n_in: *n_in,
+                                n_out: *n_out,
+                                relu: *relu,
+                            });
+                        }
                     }
                 }
                 LayerKind::MaxPool { k } => {
+                    steps.push(StepDesc::MaxPool { layer: i, k: *k, in_shape: in_shape.clone() });
                     ops.push(Box::new(MaxPoolOp { layer: i, k: *k, in_shape }))
                 }
                 LayerKind::GlobalAvgPool => {
+                    steps.push(StepDesc::GlobalAvgPool { layer: i, in_shape: in_shape.clone() });
                     ops.push(Box::new(GlobalAvgPoolOp { layer: i, in_shape }))
                 }
                 LayerKind::Flatten => {
                     let out_len: usize = in_shape.iter().product();
+                    steps.push(StepDesc::Flatten { layer: i, out_len });
                     ops.push(Box::new(FlattenOp { layer: i, out_len, in_shape }))
                 }
             }
@@ -524,12 +625,19 @@ impl ExecPlan {
             planned_peak_bytes: arena.total_bytes,
             arena,
             ops,
+            steps,
             spec,
             choices,
             bit_plan,
             cfg,
             fused,
         }
+    }
+
+    /// Backend-neutral step descriptions: `steps()[k]` is the pure-data
+    /// twin of `ops()[k]`, same length, same order (see [`StepDesc`]).
+    pub fn steps(&self) -> &[StepDesc] {
+        &self.steps
     }
 
     /// The per-layer weight storage widths this plan deploys with (see
@@ -1133,5 +1241,58 @@ mod tests {
                 assert!(plan.num_ops() >= n && plan.num_ops() <= 2 * n, "{} {cfg:?}", def.name);
             }
         }
+    }
+
+    #[test]
+    fn steps_mirror_ops_one_for_one() {
+        // `steps()[k]` must describe `ops()[k]`: same length in every
+        // model × config × fusion combination, and per-kind counts match
+        // the layer list (each compute layer lowers to exactly one step).
+        for def in [
+            models::mnist_cnn(&[1, 12, 12], 4),
+            models::mbednet(&[3, 16, 16], 5),
+            models::mcunet5fps(&[3, 32, 32], 4),
+        ] {
+            for cfg in [DnnConfig::Uint8, DnnConfig::Mixed, DnnConfig::Float32] {
+                for fused in [false, true] {
+                    let plan = ExecPlan::compile_with(&def, cfg, fused);
+                    assert_eq!(plan.steps().len(), plan.num_ops(), "{} {cfg:?}", def.name);
+                    let convs = plan
+                        .steps()
+                        .iter()
+                        .filter(|s| matches!(s, StepDesc::QConv { .. } | StepDesc::FConv { .. }))
+                        .count();
+                    let want = def
+                        .layers
+                        .iter()
+                        .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+                        .count();
+                    assert_eq!(convs, want, "{} {cfg:?}", def.name);
+                    // Unfused schedules never fold; every crossing appears
+                    // as an explicit boundary step.
+                    if !fused {
+                        for s in plan.steps() {
+                            match s {
+                                StepDesc::QConv { fold_dequant, .. }
+                                | StepDesc::QLinear { fold_dequant, .. } => {
+                                    assert!(!fold_dequant)
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // The fused Mixed schedule folds legal dequantize boundaries into
+        // their producers: it never has more boundary steps than unfused.
+        let def = models::mnist_cnn(&[1, 12, 12], 4);
+        let n_deq = |p: &ExecPlan| {
+            p.steps().iter().filter(|s| matches!(s, StepDesc::Dequantize { .. })).count()
+        };
+        let unfused = ExecPlan::compile_with(&def, DnnConfig::Mixed, false);
+        let fused = ExecPlan::compile_with(&def, DnnConfig::Mixed, true);
+        assert!(n_deq(&unfused) >= 1, "Mixed must cross uint8 → float");
+        assert!(n_deq(&fused) <= n_deq(&unfused));
     }
 }

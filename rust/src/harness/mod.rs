@@ -52,6 +52,18 @@ pub fn mbednet_for(spec: &DatasetSpec, shape: &[usize; 3]) -> ModelDef {
     models::mbednet(shape, spec.classes)
 }
 
+/// The reduced-size model grid shared by cross-backend parity suites
+/// (`tests/gpu_cross_validation.rs` and friends): one plain-conv network,
+/// one depthwise-separable MbedNet and one MCUNet-style backbone, all
+/// shrunk so a full parity grid stays fast on a software rasterizer.
+pub fn parity_models() -> Vec<ModelDef> {
+    vec![
+        models::mnist_cnn(&[1, 12, 12], 4),
+        models::mbednet(&[3, 16, 16], 5),
+        models::mcunet5fps(&[3, 32, 32], 4),
+    ]
+}
+
 /// Pretrain a float model on the source domain. Returns the trained float
 /// parameters (the "GPU baseline" stage of §IV-A, run in-harness).
 pub fn pretrain(

@@ -58,7 +58,16 @@
 //!    cross-validation suite. Requires the `xla` crate (uncomment it in
 //!    `Cargo.toml`); the default build is fully offline and
 //!    dependency-free.
+//!  * `gpu` (off by default) — compiles the wgpu/WGSL compute backend
+//!    (`backend::gpu`): a `GpuPlan` that lowers the compiled
+//!    [`graph::plan::ExecPlan`] schedule onto WGSL compute shaders for
+//!    batched forward inference, cross-validated bit-for-bit (u8/i32)
+//!    and tolerance-tiered (f32) against the native engine. Requires the
+//!    `wgpu` crate (uncomment it in `Cargo.toml`). The WGSL shader
+//!    sources and their scalar-mirror unit tests ([`backend::wgsl`])
+//!    compile in the default build — only the device plumbing is gated.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;

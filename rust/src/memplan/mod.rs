@@ -324,6 +324,18 @@ pub fn allocate_arena(mut items: Vec<ArenaItem>) -> ArenaPlan {
     ArenaPlan { items: placed, total_bytes: total }
 }
 
+/// Round `n` up to the next multiple of `a` (`a > 0`).
+///
+/// Used by backends whose storage is word-granular (the GPU arena binds one
+/// `array<u32>` buffer): padding every [`ArenaItem::bytes`] to a multiple of
+/// the word size before [`allocate_arena`] keeps every placed offset
+/// word-aligned — the greedy placement only ever produces offsets that are
+/// sums of already-placed item ends, so aligned sizes imply aligned offsets.
+pub fn align_up(n: usize, a: usize) -> usize {
+    assert!(a > 0, "alignment must be positive");
+    n.div_ceil(a) * a
+}
+
 /// The three-segment memory report (Figs. 4c/4d).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MemoryReport {
@@ -683,5 +695,38 @@ mod tests {
         let rb = plan(&mb, DnnConfig::Uint8, true);
         let rc = plan(&mc, DnnConfig::Uint8, true);
         assert!(rc.total_ram() > rb.total_ram(), "{} vs {}", rc.total_ram(), rb.total_ram());
+    }
+
+    #[test]
+    fn align_up_rounds_and_preserves_multiples() {
+        assert_eq!(align_up(0, 4), 0);
+        assert_eq!(align_up(1, 4), 4);
+        assert_eq!(align_up(4, 4), 4);
+        assert_eq!(align_up(5, 4), 8);
+        assert_eq!(align_up(17, 1), 17);
+    }
+
+    #[test]
+    fn word_aligned_items_place_at_word_aligned_offsets() {
+        // The property the GPU backend relies on: padding every item's size
+        // to a word multiple makes every greedy placement offset a word
+        // multiple too (offsets are sums of already-placed item ends).
+        let mut rng = Pcg32::new(0xA11C, 0);
+        let items: Vec<ArenaItem> = (0..24)
+            .map(|i| {
+                let birth = (rng.next_u32() % 10) as usize;
+                ArenaItem {
+                    name: format!("it{i}"),
+                    bytes: align_up(1 + (rng.next_u32() % 900) as usize, 4),
+                    birth,
+                    death: birth + (rng.next_u32() % 5) as usize,
+                }
+            })
+            .collect();
+        let plan = allocate_arena(items);
+        for (it, off) in &plan.items {
+            assert_eq!(off % 4, 0, "{} placed at unaligned offset {off}", it.name);
+        }
+        assert_eq!(plan.total_bytes % 4, 0);
     }
 }
